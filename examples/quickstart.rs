@@ -1,0 +1,62 @@
+//! Quickstart: model a platform, optimize a plan, predict and execute.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mrperf::apps::SyntheticApp;
+use mrperf::engine::job::JobConfig;
+use mrperf::engine::run_job;
+use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::barrier::BarrierConfig;
+use mrperf::model::makespan::{evaluate, AppModel};
+use mrperf::model::plan::Plan;
+use mrperf::optimizer::{AlternatingLp, PlanOptimizer};
+use mrperf::platform::{build_env, EnvKind};
+
+fn main() {
+    // 1. The platform: eight globally distributed data centers with
+    //    measured PlanetLab bandwidths and compute rates (§4.1).
+    let topo = build_env(EnvKind::Global8);
+    println!(
+        "platform: {} sources / {} mappers / {} reducers over {} sites",
+        topo.n_sources(),
+        topo.n_mappers(),
+        topo.n_reducers(),
+        topo.clusters.len()
+    );
+
+    // 2. The application model: expansion factor α (§2.1).
+    let app = AppModel::new(1.0);
+    let cfg = BarrierConfig::HADOOP; // G-P-L, Hadoop-like behaviour
+
+    // 3. Optimize an execution plan (end-to-end, multi-phase — §2.3).
+    let plan = AlternatingLp::default().optimize(&topo, app, cfg);
+    let uniform = Plan::uniform(8, 8, 8);
+
+    // 4. Predict makespans with the closed-form model (eqs 4–14).
+    let opt_pred = evaluate(&topo, app, cfg, &plan);
+    let uni_pred = evaluate(&topo, app, cfg, &uniform);
+    println!(
+        "model: optimized {:.0} s vs uniform {:.0} s ({:.0}% reduction)",
+        opt_pred.makespan,
+        uni_pred.makespan,
+        (1.0 - opt_pred.makespan / uni_pred.makespan) * 100.0
+    );
+
+    // 5. Execute both plans on the emulated WAN engine (§3.1) with the
+    //    α-controlled synthetic job (§3.2) and compare.
+    let inputs = synthetic_inputs(8, 1 << 22, 42);
+    let sapp = SyntheticApp::new(1.0);
+    let jc = JobConfig::default();
+    let m_opt = run_job(&topo, &plan, &sapp, &jc, &inputs).metrics;
+    let m_uni = run_job(&topo, &uniform, &sapp, &jc, &inputs).metrics;
+    println!(
+        "engine: optimized {:.1} s vs uniform {:.1} s ({:.0}% reduction)",
+        m_opt.makespan,
+        m_uni.makespan,
+        (1.0 - m_opt.makespan / m_uni.makespan) * 100.0
+    );
+    assert!(m_opt.makespan < m_uni.makespan, "optimized plan should win");
+    println!("quickstart OK");
+}

@@ -1,0 +1,82 @@
+//! "What-if" exploration (§1.4: the model answers what-if questions on
+//! design alternatives): sweep α × barrier configurations × environments
+//! and report where pipelining helps, where myopic optimization
+//! backfires, and how the optimal plan shifts.
+//!
+//! ```sh
+//! cargo run --release --example what_if_explorer
+//! ```
+
+use mrperf::model::barrier::BarrierConfig;
+use mrperf::model::makespan::{makespan, AppModel};
+use mrperf::model::plan::Plan;
+use mrperf::optimizer::{AlternatingLp, Myopic, PlanOptimizer};
+use mrperf::platform::{build_env, EnvKind};
+use mrperf::util::table::Table;
+
+fn main() {
+    // Q1: when does relaxing barriers help most? (§4.4: balanced phases.)
+    let topo = build_env(EnvKind::Global8);
+    let opt = AlternatingLp { random_starts: 2, ..Default::default() };
+    let mut q1 = Table::new(
+        "Q1 — normalized optimal makespan when pipelining one boundary (vs G-G-G)",
+        &["alpha", "P-G-G", "G-P-G", "G-G-P", "P-P-P"],
+    )
+    .label_first();
+    for &alpha in &[0.1, 1.0, 10.0] {
+        let app = AppModel::new(alpha);
+        let base = makespan(
+            &topo,
+            app,
+            BarrierConfig::ALL_GLOBAL,
+            &opt.optimize(&topo, app, BarrierConfig::ALL_GLOBAL),
+        );
+        let mut row = vec![format!("{alpha}")];
+        for (_, cfg) in BarrierConfig::fig7_set().into_iter().skip(1) {
+            let ms = makespan(&topo, app, cfg, &opt.optimize(&topo, app, cfg));
+            row.push(format!("{:.3}", ms / base));
+        }
+        q1.add_row(row);
+    }
+    println!("{}", q1.render());
+
+    // Q2: where does myopic optimization *hurt*? (§4.5: homogeneous envs.)
+    let mut q2 = Table::new(
+        "Q2 — myopic vs uniform across environments (>1.0 = myopic hurts)",
+        &["env", "alpha 0.1", "alpha 1", "alpha 10"],
+    )
+    .label_first();
+    for kind in EnvKind::all() {
+        let t = build_env(kind);
+        let mut row = vec![kind.label().to_string()];
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let app = AppModel::new(alpha);
+            let cfg = BarrierConfig::ALL_GLOBAL;
+            let uni = makespan(&t, app, cfg, &Plan::uniform(8, 8, 8));
+            let myo = makespan(&t, app, cfg, &Myopic.optimize(&t, app, cfg));
+            row.push(format!("{:.3}", myo / uni));
+        }
+        q2.add_row(row);
+    }
+    println!("{}", q2.render());
+
+    // Q3: how concentrated does the optimal shuffle get as α grows?
+    let mut q3 = Table::new(
+        "Q3 — optimal plan concentration vs alpha (8-DC; max y_k and effective reducers)",
+        &["alpha", "max y_k", "effective reducers (1/sum y²)"],
+    )
+    .label_first();
+    for &alpha in &[0.1, 0.5, 1.0, 2.0, 5.0, 10.0] {
+        let app = AppModel::new(alpha);
+        let plan = opt.optimize(&topo, app, BarrierConfig::ALL_GLOBAL);
+        let max_y = plan.y.iter().cloned().fold(0.0, f64::max);
+        let eff = 1.0 / plan.y.iter().map(|v| v * v).sum::<f64>();
+        q3.add_row(vec![
+            format!("{alpha}"),
+            format!("{max_y:.3}"),
+            format!("{eff:.2}"),
+        ]);
+    }
+    println!("{}", q3.render());
+    println!("what-if exploration complete");
+}

@@ -1,0 +1,99 @@
+"""AOT export: lower the L2/L1 graphs to HLO *text* artifacts.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (shape-specialized; the rust runtime picks by filename):
+
+* ``opt_run_s{S}m{M}r{R}p{P}.hlo.txt``    — K Adam steps on P starts.
+* ``plan_eval_s{S}m{M}r{R}p{P}.hlo.txt``  — batched hard evaluation
+  through the L1 Pallas kernel.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python
+never runs after this point; the rust binary is self-contained.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import opt_run, plan_eval_hard
+
+# Exported shape set: the paper-scale 8×8×8 environment with 16 starts,
+# plus a miniature for fast rust-side integration tests.
+SHAPES = [
+    {"S": 8, "M": 8, "R": 8, "P": 16},
+    {"S": 2, "M": 2, "R": 2, "P": 4},
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_opt_run(S, M, R, P):
+    return jax.jit(opt_run).lower(
+        f32(P, S, M), f32(P, R),              # lx, ly
+        f32(P, S, M), f32(P, S, M),           # mx, vx
+        f32(P, R), f32(P, R),                 # my, vy
+        f32(), f32(), f32(),                  # t0, beta, lr
+        f32(S), f32(S, M), f32(M, R),         # d, b_sm, b_mr
+        f32(M), f32(R),                       # c_map, c_red
+        f32(), f32(6),                        # alpha, sel
+        f32(),                                # gscale
+    )
+
+
+def lower_plan_eval(S, M, R, P):
+    return jax.jit(plan_eval_hard).lower(
+        f32(P, S, M), f32(P, R),
+        f32(S), f32(S, M), f32(M, R), f32(M), f32(R),
+        f32(), f32(6),
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {}
+    for sh in SHAPES:
+        S, M, R, P = sh["S"], sh["M"], sh["R"], sh["P"]
+        tag = f"s{S}m{M}r{R}p{P}"
+
+        for name, lower in (("opt_run", lower_opt_run), ("plan_eval", lower_plan_eval)):
+            text = to_hlo_text(lower(S, M, R, P))
+            path = out_dir / f"{name}_{tag}.hlo.txt"
+            path.write_text(text)
+            manifest[f"{name}_{tag}"] = {
+                "file": path.name, "S": S, "M": M, "R": R, "P": P,
+                "k_steps": 20 if name == "opt_run" else None,
+            }
+            print(f"wrote {path} ({len(text)} chars)")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

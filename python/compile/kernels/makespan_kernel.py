@@ -1,0 +1,131 @@
+"""L1: batched plan-evaluation Pallas kernel.
+
+The coordinator's hot compute is scoring *batches of candidate execution
+plans* under the makespan model (multi-start selection, what-if sweeps).
+This kernel evaluates a block of plans entirely inside one VMEM-resident
+tile: the (BP, S, M) plan block, the platform tensors and every
+intermediate phase tensor stay on-chip; only the (BP, 5) result leaves.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+dimension; ``BlockSpec((BP, S, M), lambda p: (p, 0, 0))`` expresses the
+HBM→VMEM schedule. At S = M = R = 8 and BP = 256 the working set is
+~350 KiB — comfortably inside one core's 16 MiB VMEM; the arithmetic is
+elementwise + small reductions (VPU work; the MXU is idle, the kernel is
+bandwidth-bound — see EXPERIMENTS.md §Perf for the roofline argument).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO which both the pytest
+suite and the rust runtime run bit-compatibly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch-block size (plans evaluated per grid step).
+DEFAULT_BLOCK = 8
+
+
+def _kernel(x_ref, y_ref, d_ref, bsm_ref, bmr_ref, cmap_ref, cred_ref,
+            alpha_ref, sel_ref, out_ref):
+    """One grid step: evaluate BP plans held in VMEM."""
+    x = x_ref[...]            # (BP, S, M)
+    y = y_ref[...]            # (BP, R)
+    d = d_ref[...]            # (S,)
+    b_sm = bsm_ref[...]       # (S, M)
+    b_mr = bmr_ref[...]       # (M, R)
+    c_map = cmap_ref[...]     # (M,)
+    c_red = cred_ref[...]     # (R,)
+    alpha = alpha_ref[0]
+    sel = sel_ref[...]        # (6,)
+    pm_g, pm_p, ms_g, ms_p, sr_g, sr_p = (sel[i] for i in range(6))
+
+    def combine(start, cost, g, p, phase_max):
+        base = g * phase_max + (1.0 - g) * start
+        return p * jnp.maximum(base, cost) + (1.0 - p) * (base + cost)
+
+    # push (eq 4)
+    push_t = d[None, :, None] * x / b_sm[None, :, :]
+    push_end = jnp.max(push_t, axis=1)                      # (BP, M)
+    push_max = jnp.max(push_end, axis=1, keepdims=True)     # (BP, 1)
+
+    # map (eqs 5/6/12)
+    loads = jnp.sum(d[None, :, None] * x, axis=1)           # (BP, M)
+    map_end = combine(push_end, loads / c_map[None, :], pm_g, pm_p, push_max)
+    map_max = jnp.max(map_end, axis=1, keepdims=True)
+
+    # shuffle (eqs 7/8/13)
+    vol = alpha * loads[:, :, None] * y[:, None, :]         # (BP, M, R)
+    sh_per_j = combine(
+        map_end[:, :, None], vol / b_mr[None, :, :], ms_g, ms_p,
+        map_max[:, :, None],
+    )
+    shuffle_end = jnp.max(sh_per_j, axis=1)                 # (BP, R)
+    shuffle_max = jnp.max(shuffle_end, axis=1, keepdims=True)
+
+    # reduce (eqs 9/10/14)
+    d_total = jnp.sum(d)
+    red_cost = alpha * d_total * y / c_red[None, :]
+    reduce_end = combine(shuffle_end, red_cost, sr_g, sr_p, shuffle_max)
+    makespan = jnp.max(reduce_end, axis=1)                  # (BP,)
+
+    p_end = push_max[:, 0]
+    m_end = map_max[:, 0]
+    s_end = shuffle_max[:, 0]
+    out_ref[...] = jnp.stack(
+        [
+            p_end,
+            jnp.maximum(m_end - p_end, 0.0),
+            jnp.maximum(s_end - m_end, 0.0),
+            jnp.maximum(makespan - s_end, 0.0),
+            makespan,
+        ],
+        axis=1,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def plan_eval(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel, *, block=DEFAULT_BLOCK):
+    """Evaluate a batch of plans; returns (P, 5) phase segments+makespan.
+
+    ``P`` must be a multiple of ``block`` (the AOT exporter picks matching
+    sizes; tests exercise ragged cases through the padding helper).
+    """
+    P, S, M = x.shape
+    R = y.shape[1]
+    assert y.shape[0] == P
+    assert P % block == 0, f"batch {P} not a multiple of block {block}"
+    alpha_arr = jnp.asarray(alpha, dtype=x.dtype).reshape((1,))
+    grid = (P // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, S, M), lambda p: (p, 0, 0)),
+            pl.BlockSpec((block, R), lambda p: (p, 0)),
+            pl.BlockSpec((S,), lambda p: (0,)),
+            pl.BlockSpec((S, M), lambda p: (0, 0)),
+            pl.BlockSpec((M, R), lambda p: (0, 0)),
+            pl.BlockSpec((M,), lambda p: (0,)),
+            pl.BlockSpec((R,), lambda p: (0,)),
+            pl.BlockSpec((1,), lambda p: (0,)),
+            pl.BlockSpec((6,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, 5), lambda p: (p, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, 5), x.dtype),
+        interpret=True,
+    )(x, y, d, b_sm, b_mr, c_map, c_red, alpha_arr, sel)
+
+
+def plan_eval_padded(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel,
+                     block=DEFAULT_BLOCK):
+    """Ragged-batch wrapper: pads P up to a block multiple and trims."""
+    P = x.shape[0]
+    pad = (-P) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
+        y = jnp.concatenate([y, jnp.repeat(y[-1:], pad, axis=0)], axis=0)
+    out = plan_eval(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel, block=block)
+    return out[:P]

@@ -1,0 +1,115 @@
+"""Pure-jnp reference oracle for the batched plan-evaluation kernel.
+
+This mirrors the rust exact evaluator (``rust/src/model/makespan.rs``,
+eqs 4-14 of the paper) over a *batch* of plans. The Pallas kernel in
+``makespan_kernel.py`` must agree with this to float tolerance — that is
+the L1 correctness contract, enforced by ``python/tests/test_kernel.py``
+(including hypothesis sweeps over shapes and parameters).
+
+Conventions (shared with the rust side and the AOT artifacts):
+
+* ``x``: (P, S, M) — push fractions, rows on the simplex.
+* ``y``: (P, R) — key-space fractions.
+* ``d``: (S,) bytes; ``b_sm``: (S, M); ``b_mr``: (M, R) bytes/s;
+  ``c_map``: (M,); ``c_red``: (R,) bytes/s.
+* ``sel``: (6,) barrier selectors (pm_g, pm_p, ms_g, ms_p, sr_g, sr_p),
+  1.0/0.0 floats — Global sets ``*_g``; Pipelined sets ``*_p``; Local
+  sets neither (see rust ``model::smooth::selectors``).
+
+Output: (P, 5) — [push, map, shuffle, reduce, makespan] where the first
+four are the marginal critical-path phase durations (the stacked-bar
+decomposition used in Figs 5/6/9) and column 4 is the makespan (eq 11).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def combine(start, cost, g, p, phase_max):
+    """The paper's ⊕ with barrier selectors.
+
+    start: per-node previous end; phase_max: global max of previous ends.
+    Global: phase_max + cost; Local: start + cost; Pipelined:
+    max(start, cost).
+    """
+    base = g * phase_max + (1.0 - g) * start
+    return p * jnp.maximum(base, cost) + (1.0 - p) * (base + cost)
+
+
+def plan_eval_ref(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel):
+    """Batched exact makespan evaluation (hard max), eqs 4-14."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    pm_g, pm_p, ms_g, ms_p, sr_g, sr_p = (sel[i] for i in range(6))
+
+    # push (eq 4): (P, S, M) -> (P, M)
+    push_t = d[None, :, None] * x / b_sm[None, :, :]
+    push_end = jnp.max(push_t, axis=1)
+    push_max = jnp.max(push_end, axis=1, keepdims=True)  # (P, 1)
+
+    # map (eqs 5/6/12)
+    loads = jnp.sum(d[None, :, None] * x, axis=1)  # (P, M)
+    map_cost = loads / c_map[None, :]
+    map_end = combine(push_end, map_cost, pm_g, pm_p, push_max)
+    map_max = jnp.max(map_end, axis=1, keepdims=True)
+
+    # shuffle (eqs 7/8/13): vol (P, M, R)
+    vol = alpha * loads[:, :, None] * y[:, None, :]
+    sh_t = vol / b_mr[None, :, :]
+    sh_per_j = combine(map_end[:, :, None], sh_t, ms_g, ms_p, map_max[:, :, None])
+    shuffle_end = jnp.max(sh_per_j, axis=1)  # (P, R)
+    shuffle_max = jnp.max(shuffle_end, axis=1, keepdims=True)
+
+    # reduce (eqs 9/10/14)
+    d_total = jnp.sum(d)
+    red_cost = alpha * d_total * y / c_red[None, :]
+    reduce_end = combine(shuffle_end, red_cost, sr_g, sr_p, shuffle_max)
+    makespan = jnp.max(reduce_end, axis=1)  # (P,)
+
+    # Stacked-bar decomposition (clamped marginal contributions).
+    p_end = push_max[:, 0]
+    m_end = map_max[:, 0]
+    s_end = shuffle_max[:, 0]
+    push_seg = p_end
+    map_seg = jnp.maximum(m_end - p_end, 0.0)
+    shuffle_seg = jnp.maximum(s_end - m_end, 0.0)
+    reduce_seg = jnp.maximum(makespan - s_end, 0.0)
+    return jnp.stack([push_seg, map_seg, shuffle_seg, reduce_seg, makespan], axis=1)
+
+
+def smooth_makespan_ref(lx, ly, d, b_sm, b_mr, c_map, c_red, alpha, sel, beta):
+    """Batched *smooth* makespan from logits — rust ``model::smooth`` twin.
+
+    lx: (P, S, M) logits; ly: (P, R) logits. Returns (P,) smooth makespan.
+    """
+    x = jax.nn.softmax(lx, axis=2)
+    y = jax.nn.softmax(ly, axis=1)
+    pm_g, pm_p, ms_g, ms_p, sr_g, sr_p = (sel[i] for i in range(6))
+
+    def smax(v, axis):
+        return jax.nn.logsumexp(beta * v, axis=axis) / beta
+
+    def scombine(start, cost, g, p, phase_max):
+        base = g * phase_max + (1.0 - g) * start
+        pipe = jnp.logaddexp(beta * base, beta * cost) / beta
+        return p * pipe + (1.0 - p) * (base + cost)
+
+    push_t = d[None, :, None] * x / b_sm[None, :, :]
+    push_end = smax(push_t, axis=1)  # (P, M)
+    push_max = smax(push_end, axis=1)[:, None]
+
+    loads = jnp.sum(d[None, :, None] * x, axis=1)
+    map_cost = loads / c_map[None, :]
+    map_end = scombine(push_end, map_cost, pm_g, pm_p, push_max)
+    map_max = smax(map_end, axis=1)[:, None]
+
+    vol = alpha * loads[:, :, None] * y[:, None, :]
+    sh_t = vol / b_mr[None, :, :]
+    sh_per_j = scombine(map_end[:, :, None], sh_t, ms_g, ms_p, map_max[:, :, None])
+    shuffle_end = smax(sh_per_j, axis=1)
+    shuffle_max = smax(shuffle_end, axis=1)[:, None]
+
+    d_total = jnp.sum(d)
+    red_cost = alpha * d_total * y / c_red[None, :]
+    reduce_end = scombine(shuffle_end, red_cost, sr_g, sr_p, shuffle_max)
+    return smax(reduce_end, axis=1)

@@ -1,0 +1,116 @@
+"""L2: the differentiable plan-optimization model.
+
+The end-to-end multi-phase optimization (§2.3 of the paper) solved by
+gradient descent on a smooth relaxation of the makespan model: plans are
+parameterized by logits (row-softmax → x, softmax → y, so eqs 1-3 hold by
+construction); every hard ``max`` is ``logsumexp(β·)/β``; β anneals from
+soft to hard across calls. A batch of P multi-starts advances in lock-
+step so one device call moves the whole optimization.
+
+Two jitted entry points are AOT-lowered by ``aot.py`` and executed from
+the rust coordinator via PJRT:
+
+* ``opt_run`` — K Adam steps on the batched logits (lax.fori_loop inside
+  one executable, so the rust side pays one PJRT dispatch per K steps).
+* ``plan_eval_hard`` — exact (hard-max) batched evaluation through the
+  L1 Pallas kernel, used to score candidates and pick the winner.
+
+The rust twin of the smooth model is ``rust/src/model/smooth.rs``;
+parity is pinned by tests on both sides.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.makespan_kernel import plan_eval
+from .kernels.ref import smooth_makespan_ref
+
+# Adam steps fused into one opt_run call.
+K_STEPS = 20
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def loss_fn(lx, ly, d, b_sm, b_mr, c_map, c_red, alpha, sel, beta, gscale):
+    """Mean scaled smooth makespan over the batch (scalar)."""
+    ms = smooth_makespan_ref(lx, ly, d, b_sm, b_mr, c_map, c_red, alpha, sel, beta)
+    return jnp.sum(ms / gscale), ms
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
+def opt_run(lx, ly, mx, vx, my, vy, t0, beta, lr,
+            d, b_sm, b_mr, c_map, c_red, alpha, sel, gscale):
+    """K_STEPS of batched Adam on the smooth makespan.
+
+    Returns (lx, ly, mx, vx, my, vy, t, loss) with ``loss`` the per-plan
+    smooth makespan (seconds) after the last step. Buffers are donated —
+    the rust caller feeds each call's outputs into the next.
+    """
+
+    grad_fn = jax.grad(
+        lambda lx_, ly_: loss_fn(
+            lx_, ly_, d, b_sm, b_mr, c_map, c_red, alpha, sel, beta, gscale
+        )[0],
+        argnums=(0, 1),
+    )
+
+    def adam(m, v, g, t):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mh = m / (1.0 - ADAM_B1 ** t)
+        vh = v / (1.0 - ADAM_B2 ** t)
+        return m, v, mh / (jnp.sqrt(vh) + ADAM_EPS)
+
+    def body(_, state):
+        lx, ly, mx, vx, my, vy, t = state
+        gx, gy = grad_fn(lx, ly)
+        t = t + 1.0
+        mx, vx, ux = adam(mx, vx, gx, t)
+        my, vy, uy = adam(my, vy, gy, t)
+        return (lx - lr * ux, ly - lr * uy, mx, vx, my, vy, t)
+
+    lx, ly, mx, vx, my, vy, t = jax.lax.fori_loop(
+        0, K_STEPS, body, (lx, ly, mx, vx, my, vy, t0)
+    )
+    _, ms = loss_fn(lx, ly, d, b_sm, b_mr, c_map, c_red, alpha, sel, beta, gscale)
+    return lx, ly, mx, vx, my, vy, t, ms
+
+
+@jax.jit
+def plan_eval_hard(lx, ly, d, b_sm, b_mr, c_map, c_red, alpha, sel):
+    """Exact evaluation of the plans the logits encode, via the L1 kernel.
+
+    Returns (P, 5): phase segments + makespan (hard max, eqs 4-14).
+    """
+    import math
+
+    from .kernels.makespan_kernel import DEFAULT_BLOCK
+
+    x = jax.nn.softmax(lx, axis=2)
+    y = jax.nn.softmax(ly, axis=1)
+    block = math.gcd(lx.shape[0], DEFAULT_BLOCK)
+    return plan_eval(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel, block=block)
+
+
+def init_state(key, P, S, M, R, init_scale=0.5):
+    """Fresh multi-start state: start 0 is the uniform plan (zero logits),
+    the rest are gaussian perturbations."""
+    kx, ky = jax.random.split(key)
+    lx = init_scale * jax.random.normal(kx, (P, S, M), dtype=jnp.float32)
+    ly = init_scale * jax.random.normal(ky, (P, R), dtype=jnp.float32)
+    lx = lx.at[0].set(0.0)
+    ly = ly.at[0].set(0.0)
+    # Distinct zero buffers: opt_run donates its arguments, and donating
+    # one buffer twice is an error.
+    return (
+        lx,
+        ly,
+        jnp.zeros_like(lx),
+        jnp.zeros_like(lx),
+        jnp.zeros_like(ly),
+        jnp.zeros_like(ly),
+        jnp.float32(0.0),
+    )

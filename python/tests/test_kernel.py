@@ -1,0 +1,144 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+The kernel must reproduce ``ref.plan_eval_ref`` exactly (same ops, same
+dtype) across shapes, barrier configurations and parameter ranges —
+hypothesis drives the sweep. This is the core correctness signal for the
+compute hot-spot that ships inside the AOT artifacts.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.makespan_kernel import plan_eval, plan_eval_padded
+from compile.kernels.ref import plan_eval_ref
+
+# Barrier selector vectors: (pm_g, pm_p, ms_g, ms_p, sr_g, sr_p).
+SEL_GGG = [1, 0, 1, 0, 1, 0]
+SEL_HADOOP = [1, 0, 0, 1, 0, 0]  # G-P-L
+SEL_PPP = [0, 1, 0, 1, 0, 1]
+SEL_LLL = [0, 0, 0, 0, 0, 0]
+ALL_SELS = [SEL_GGG, SEL_HADOOP, SEL_PPP, SEL_LLL]
+
+
+def make_instance(rng, P, S, M, R):
+    """Random valid instance (plans on the simplex, positive rates)."""
+    x = rng.gamma(1.0, size=(P, S, M)).astype(np.float32) + 1e-3
+    x /= x.sum(axis=2, keepdims=True)
+    y = rng.gamma(1.0, size=(P, R)).astype(np.float32) + 1e-3
+    y /= y.sum(axis=1, keepdims=True)
+    d = rng.uniform(0.5, 4.0, size=(S,)).astype(np.float32)
+    b_sm = rng.uniform(0.05, 2.0, size=(S, M)).astype(np.float32)
+    b_mr = rng.uniform(0.05, 2.0, size=(M, R)).astype(np.float32)
+    c_map = rng.uniform(0.2, 2.0, size=(M,)).astype(np.float32)
+    c_red = rng.uniform(0.2, 2.0, size=(R,)).astype(np.float32)
+    return x, y, d, b_sm, b_mr, c_map, c_red
+
+
+@pytest.mark.parametrize("sel", ALL_SELS, ids=["GGG", "GPL", "PPP", "LLL"])
+@pytest.mark.parametrize("alpha", [0.1, 1.0, 10.0])
+def test_kernel_matches_ref_8x8x8(sel, alpha):
+    rng = np.random.default_rng(42)
+    x, y, d, b_sm, b_mr, c_map, c_red = make_instance(rng, 16, 8, 8, 8)
+    sel_arr = jnp.asarray(sel, dtype=jnp.float32)
+    got = plan_eval(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel_arr)
+    want = plan_eval_ref(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel_arr)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_single_block():
+    rng = np.random.default_rng(0)
+    x, y, d, b_sm, b_mr, c_map, c_red = make_instance(rng, 8, 3, 4, 5)
+    sel = jnp.asarray(SEL_GGG, dtype=jnp.float32)
+    got = plan_eval(x, y, d, b_sm, b_mr, c_map, c_red, 1.0, sel)
+    want = plan_eval_ref(x, y, d, b_sm, b_mr, c_map, c_red, 1.0, sel)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_padded_wrapper_handles_ragged_batches():
+    rng = np.random.default_rng(1)
+    x, y, d, b_sm, b_mr, c_map, c_red = make_instance(rng, 11, 2, 2, 2)
+    sel = jnp.asarray(SEL_HADOOP, dtype=jnp.float32)
+    got = plan_eval_padded(x, y, d, b_sm, b_mr, c_map, c_red, 2.0, sel)
+    want = plan_eval_ref(x, y, d, b_sm, b_mr, c_map, c_red, 2.0, sel)
+    assert got.shape == (11, 5)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_segments_sum_to_makespan():
+    rng = np.random.default_rng(2)
+    x, y, d, b_sm, b_mr, c_map, c_red = make_instance(rng, 8, 4, 4, 4)
+    for sel in ALL_SELS:
+        sel_arr = jnp.asarray(sel, dtype=jnp.float32)
+        out = np.asarray(
+            plan_eval(x, y, d, b_sm, b_mr, c_map, c_red, 1.5, sel_arr)
+        )
+        np.testing.assert_allclose(out[:, :4].sum(axis=1), out[:, 4], rtol=1e-5)
+        assert (out >= -1e-6).all()
+
+
+def test_known_small_instance():
+    # §1.3 scenario 1 analog: homogeneous, uniform plan. D=150/50 GB,
+    # B=C=0.1 GBps -> push 750 s, map 1000 s, shuffle 500 s, reduce 1000 s.
+    x = jnp.full((1, 2, 2), 0.5, dtype=jnp.float32)
+    y = jnp.full((1, 2), 0.5, dtype=jnp.float32)
+    d = jnp.asarray([150.0, 50.0], dtype=jnp.float32)
+    b = jnp.full((2, 2), 0.1, dtype=jnp.float32)
+    c = jnp.full((2,), 0.1, dtype=jnp.float32)
+    sel = jnp.asarray(SEL_GGG, dtype=jnp.float32)
+    out = np.asarray(plan_eval(x, y, d, b, b, c, c, 1.0, sel, block=1))
+    np.testing.assert_allclose(out[0], [750.0, 1000.0, 500.0, 1000.0, 3250.0], rtol=1e-5)
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.integers(1, 6),
+    m=st.integers(1, 6),
+    r=st.integers(1, 6),
+    alpha=st.floats(0.0, 12.0),
+    sel_idx=st.integers(0, len(ALL_SELS) - 1),
+)
+def test_kernel_matches_ref_hypothesis(seed, s, m, r, alpha, sel_idx):
+    """Shape/parameter sweep: kernel == oracle everywhere."""
+    rng = np.random.default_rng(seed)
+    P = 8
+    x, y, d, b_sm, b_mr, c_map, c_red = make_instance(rng, P, s, m, r)
+    sel = jnp.asarray(ALL_SELS[sel_idx], dtype=jnp.float32)
+    got = plan_eval(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel)
+    want = plan_eval_ref(x, y, d, b_sm, b_mr, c_map, c_red, alpha, sel)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_uniform_plan_dominated_by_no_plan_being_negative(seed):
+    """Sanity invariants under random parameters: non-negative times,
+    alpha=0 collapses shuffle+reduce."""
+    rng = np.random.default_rng(seed)
+    x, y, d, b_sm, b_mr, c_map, c_red = make_instance(rng, 8, 3, 3, 3)
+    sel = jnp.asarray(SEL_GGG, dtype=jnp.float32)
+    out = np.asarray(plan_eval(x, y, d, b_sm, b_mr, c_map, c_red, 0.0, sel))
+    np.testing.assert_allclose(out[:, 2], 0.0, atol=1e-6)  # shuffle
+    np.testing.assert_allclose(out[:, 3], 0.0, atol=1e-6)  # reduce
+    assert (out[:, 4] > 0).all()
+
+
+def test_dtype_f64_supported():
+    # The oracle and kernel agree in float64 too (x64 path used by the
+    # validation notebooks; artifacts stay f32).
+    jax.config.update("jax_enable_x64", True)
+    try:
+        rng = np.random.default_rng(3)
+        x, y, d, b_sm, b_mr, c_map, c_red = make_instance(rng, 8, 2, 3, 2)
+        to64 = lambda a: jnp.asarray(a, dtype=jnp.float64)
+        args = tuple(map(to64, (x, y, d, b_sm, b_mr, c_map, c_red)))
+        sel = jnp.asarray(SEL_PPP, dtype=jnp.float64)
+        got = plan_eval(*args, 1.0, sel)
+        want = plan_eval_ref(*args, 1.0, sel)
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+    finally:
+        jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,109 @@
+//! `cargo bench` — micro/macro benchmarks over the whole stack
+//! (criterion is unavailable offline; `mrperf::util::bench` provides the
+//! harness: warmup, auto-sized iteration counts, mean/p50/p95).
+//!
+//! Groups:
+//! * `model/*`   — makespan-model evaluation hot path (L3).
+//! * `solver/*`  — LP solves (IPM + simplex) at paper scale.
+//! * `optimizer/*` — full plan optimizations per scheme (one per paper
+//!   comparison — these are the end-to-end units behind Figs 5–8).
+//! * `engine/*`  — emulated-testbed job execution (Fig 9 unit).
+//! * `runtime/*` — PJRT artifact dispatch (L1/L2 integration), when
+//!   artifacts are present.
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use std::time::Duration;
+
+use mrperf::apps::SyntheticApp;
+use mrperf::engine::job::JobConfig;
+use mrperf::engine::run_job;
+use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::barrier::BarrierConfig;
+use mrperf::model::makespan::{makespan, AppModel};
+use mrperf::model::plan::Plan;
+use mrperf::model::smooth::smooth_makespan_plan;
+use mrperf::optimizer::lp_build::{build_lp_x, Objective};
+use mrperf::optimizer::{AlternatingLp, E2ePush, Myopic, PlanOptimizer};
+use mrperf::platform::{build_env, EnvKind};
+use mrperf::util::bench::{black_box, BenchConfig, BenchSuite};
+use mrperf::util::rng::Pcg64;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup: Duration::from_millis(300),
+        min_iters: 5,
+        max_iters: 5_000,
+        target_time: Duration::from_secs(2),
+    };
+    let mut suite = BenchSuite::new(cfg);
+
+    let topo = build_env(EnvKind::Global8);
+    let app = AppModel::new(1.0);
+    let bc = BarrierConfig::ALL_GLOBAL;
+    let mut rng = Pcg64::new(1);
+    let plans: Vec<Plan> = (0..64).map(|_| Plan::random(8, 8, 8, &mut rng)).collect();
+
+    // ---- model ----------------------------------------------------------
+    suite.bench_items("model/makespan_eval_8x8x8_batch64", 64.0, || {
+        let mut acc = 0.0;
+        for p in &plans {
+            acc += makespan(&topo, app, bc, p);
+        }
+        black_box(acc)
+    });
+    suite.bench_items("model/smooth_makespan_8x8x8_batch64", 64.0, || {
+        let mut acc = 0.0;
+        for p in &plans {
+            acc += smooth_makespan_plan(&topo, app, bc, p, 1e-3);
+        }
+        black_box(acc)
+    });
+
+    // ---- solver ---------------------------------------------------------
+    let y = vec![0.125f64; 8];
+    suite.bench("solver/ipm_lp_x_8x8x8", || {
+        let (lp, _) = build_lp_x(&topo, app, bc, &y, Objective::Makespan);
+        black_box(mrperf::solver::ipm::solve(&lp))
+    });
+    suite.bench("solver/simplex_lp_x_8x8x8", || {
+        let (lp, _) = build_lp_x(&topo, app, bc, &y, Objective::Makespan);
+        black_box(mrperf::solver::simplex::solve(&lp))
+    });
+
+    // ---- optimizers (the units behind Figs 5–8) --------------------------
+    suite.bench("optimizer/myopic_multi_8dc", || {
+        black_box(Myopic.optimize(&topo, app, bc))
+    });
+    suite.bench("optimizer/e2e_push_8dc", || {
+        black_box(E2ePush.optimize(&topo, app, bc))
+    });
+    suite.bench("optimizer/e2e_multi_alternating_8dc", || {
+        let opt = AlternatingLp { random_starts: 0, max_rounds: 8, ..Default::default() };
+        black_box(opt.optimize(&topo, app, bc))
+    });
+
+    // ---- engine (Fig 9 unit) ---------------------------------------------
+    let inputs = synthetic_inputs(8, 1 << 19, 3);
+    let total_bytes: f64 = inputs.iter().flatten().map(|r| r.size() as f64).sum();
+    let plan = Plan::uniform(8, 8, 8);
+    let sapp = SyntheticApp::new(1.0);
+    suite.bench_items("engine/synthetic_job_4MiB_8dc", total_bytes, || {
+        black_box(
+            run_job(&topo, &plan, &sapp, &JobConfig::default(), &inputs)
+                .metrics
+                .makespan,
+        )
+    });
+
+    // ---- runtime (PJRT) ---------------------------------------------------
+    if let Ok(planner) = mrperf::runtime::ArtifactPlanner::load(8, 8, 8) {
+        suite.bench("runtime/artifact_optimize_8x8x8_p16", || {
+            black_box(planner.optimize(&topo, app, bc).unwrap())
+        });
+    } else {
+        eprintln!("(skipping runtime/* benches: run `make artifacts` first)");
+    }
+
+    suite.report();
+}

@@ -1,0 +1,145 @@
+//! Full Inverted Index (§4.6.2, application 3): for each term, the
+//! complete list of documents containing it with positions — modeled
+//! after Lin & Dyer's example. Adds positional information, so the
+//! intermediate data is *larger* than the input (paper: α = 1.88).
+
+use crate::engine::job::{MapReduceApp, Record};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InvertedIndex;
+
+impl MapReduceApp for InvertedIndex {
+    fn name(&self) -> &'static str {
+        "inverted-index"
+    }
+
+    /// Input: key = doc id, value = space-separated term ids. Emits, for
+    /// every posting, key = `term|doc` and value = position — relying on
+    /// the framework's sorting/grouping for the index construction (the
+    /// paper's custom comparators).
+    fn map(&self, record: &Record, emit: &mut dyn FnMut(Record)) {
+        for (pos, term) in record.value.split(' ').enumerate() {
+            if term.is_empty() {
+                continue;
+            }
+            emit(Record::new(
+                format!("{term}|{}", record.key),
+                pos.to_string(),
+            ));
+        }
+    }
+
+    /// Group by term (before '|'): one reduce call sees all postings of
+    /// a term, doc-sorted, each with its positions.
+    fn group_key<'a>(&self, key: &'a str) -> &'a str {
+        key.split('|').next().unwrap_or(key)
+    }
+
+    fn reduce(&self, group: &str, records: &[Record], emit: &mut dyn FnMut(Record)) {
+        // records sorted by (term, doc); positions in input order.
+        let mut postings = String::new();
+        let mut cur_doc: Option<&str> = None;
+        for rec in records {
+            let doc = rec.key.split('|').nth(1).unwrap_or("");
+            match cur_doc {
+                Some(d) if d == doc => {
+                    postings.push(',');
+                    postings.push_str(&rec.value);
+                }
+                Some(_) => {
+                    postings.push(' ');
+                    postings.push_str(doc);
+                    postings.push(':');
+                    postings.push_str(&rec.value);
+                }
+                None => {
+                    postings.push_str(doc);
+                    postings.push(':');
+                    postings.push_str(&rec.value);
+                }
+            }
+            cur_doc = Some(doc);
+        }
+        emit(Record::new(group, postings));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+    use crate::data::fwdindex::generate;
+    use crate::engine::{run_job, JobConfig};
+    use crate::model::plan::Plan;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn map_emits_positional_postings() {
+        let mut out = Vec::new();
+        InvertedIndex.map(&Record::new("d1", "7 3 7"), &mut |r| out.push(r));
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], Record::new("7|d1", "0"));
+        assert_eq!(out[1], Record::new("3|d1", "1"));
+        assert_eq!(out[2], Record::new("7|d1", "2"));
+    }
+
+    #[test]
+    fn reduce_builds_posting_list() {
+        let recs = vec![
+            Record::new("7|d1", "0"),
+            Record::new("7|d1", "2"),
+            Record::new("7|d2", "5"),
+        ];
+        let mut out = Vec::new();
+        InvertedIndex.reduce("7", &recs, &mut |r| out.push(r));
+        assert_eq!(out, vec![Record::new("7", "d1:0,2 d2:5")]);
+    }
+
+    #[test]
+    fn alpha_exceeds_one() {
+        // Positional postings expand the data (paper: α = 1.88).
+        let mut rng = Pcg64::new(31);
+        let docs = generate(CorpusConfig::default(), 100_000, &mut rng);
+        let in_bytes: usize = docs.iter().map(|r| r.size()).sum();
+        let mut out_bytes = 0usize;
+        for d in &docs {
+            InvertedIndex.map(d, &mut |o| out_bytes += o.size());
+        }
+        let alpha = out_bytes as f64 / in_bytes as f64;
+        assert!(alpha > 1.2, "α = {alpha}, expected expansion");
+    }
+
+    #[test]
+    fn end_to_end_index_covers_every_posting() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let mut rng = Pcg64::new(32);
+        let inputs: Vec<Vec<Record>> =
+            (0..2).map(|_| generate(CorpusConfig::default(), 25_000, &mut rng)).collect();
+        let n_postings: usize = inputs
+            .iter()
+            .flatten()
+            .map(|r| r.value.split(' ').filter(|t| !t.is_empty()).count())
+            .sum();
+        let res = run_job(
+            &t,
+            &Plan::uniform(2, 2, 2),
+            &InvertedIndex,
+            &JobConfig::default(),
+            &inputs,
+        );
+        // Count postings in the final index.
+        let mut got = 0usize;
+        for outs in &res.outputs {
+            for r in outs {
+                for doc_part in r.value.split(' ') {
+                    if let Some((_, positions)) = doc_part.split_once(':') {
+                        got += positions.split(',').count();
+                    }
+                }
+            }
+        }
+        assert_eq!(got, n_postings);
+    }
+}

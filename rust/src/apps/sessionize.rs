@@ -1,0 +1,177 @@
+//! Sessionization (§4.6.2, application 2): recover per-user sessions
+//! from a Web server log — "at its core, a large distributed sort",
+//! α = 1.0.
+//!
+//! Map parses a log entry into (user id, timestamp) and emits the
+//! composite key `id|timestamp` with the unchanged value. The engine's
+//! sort-by-full-key + group-by-`group_key` reproduces Hadoop's custom
+//! `SortComparator`/`GroupingComparator` secondary-sort: the reduce sees
+//! one user's entries in timestamp order and splits sessions at gaps
+//! larger than [`crate::data::weblog::SESSION_GAP`].
+
+use crate::data::weblog::{parse_entry, SESSION_GAP};
+use crate::engine::job::{MapReduceApp, Record};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Sessionize;
+
+impl MapReduceApp for Sessionize {
+    fn name(&self) -> &'static str {
+        "sessionize"
+    }
+
+    fn map(&self, record: &Record, emit: &mut dyn FnMut(Record)) {
+        if let Some((user, ts)) = parse_entry(&record.value) {
+            // Zero-padded timestamp so lexicographic order = numeric.
+            emit(Record::new(format!("{user}|{ts:012}"), record.value.clone()));
+        }
+    }
+
+    /// Group on the user id (the part before '|') — the custom
+    /// GroupingComparator of the paper's implementation.
+    fn group_key<'a>(&self, key: &'a str) -> &'a str {
+        key.split('|').next().unwrap_or(key)
+    }
+
+    fn reduce(&self, group: &str, records: &[Record], emit: &mut dyn FnMut(Record)) {
+        // `records` arrive sorted by full key = (user, timestamp).
+        let mut session = 0usize;
+        let mut last_ts: Option<u64> = None;
+        let mut count = 0usize;
+        let mut start_ts = 0u64;
+        for rec in records {
+            let (_, ts) = match parse_entry(&rec.value) {
+                Some(p) => p,
+                None => continue,
+            };
+            match last_ts {
+                Some(prev) if ts.saturating_sub(prev) <= SESSION_GAP => {
+                    count += 1;
+                }
+                Some(_) => {
+                    emit(Record::new(
+                        format!("{group}#s{session}"),
+                        format!("start={start_ts} n={count}"),
+                    ));
+                    session += 1;
+                    start_ts = ts;
+                    count = 1;
+                }
+                None => {
+                    start_ts = ts;
+                    count = 1;
+                }
+            }
+            last_ts = Some(ts);
+        }
+        if count > 0 {
+            emit(Record::new(
+                format!("{group}#s{session}"),
+                format!("start={start_ts} n={count}"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::weblog::{generate, WeblogConfig};
+    use crate::engine::{run_job, JobConfig};
+    use crate::model::plan::Plan;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn map_builds_composite_key() {
+        let mut out = Vec::new();
+        Sessionize.map(
+            &Record::new("0001", "user000042 1234 /x 200 100"),
+            &mut |r| out.push(r),
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].key, "user000042|000000001234");
+        assert_eq!(Sessionize.group_key(&out[0].key), "user000042");
+    }
+
+    #[test]
+    fn reduce_splits_on_gaps() {
+        let mk = |ts: u64| Record::new(format!("u|{ts:012}"), format!("u {ts} /x 200 10"));
+        let recs = vec![mk(100), mk(200), mk(5000), mk(5100)];
+        let mut out = Vec::new();
+        Sessionize.reduce("u", &recs, &mut |r| out.push(r));
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out[0].value.contains("n=2"));
+        assert!(out[1].value.contains("n=2"));
+    }
+
+    #[test]
+    fn single_session_when_gaps_small() {
+        let mk = |ts: u64| Record::new(format!("u|{ts:012}"), format!("u {ts} /x 200 10"));
+        let recs: Vec<Record> = (0..10).map(|i| mk(i * 60)).collect();
+        let mut out = Vec::new();
+        Sessionize.reduce("u", &recs, &mut |r| out.push(r));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].value.contains("n=10"));
+    }
+
+    #[test]
+    fn end_to_end_sessions_match_sequential_reference() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let mut rng = Pcg64::new(21);
+        let inputs: Vec<Vec<Record>> = (0..2)
+            .map(|_| {
+                generate(
+                    WeblogConfig { n_users: 40, ..Default::default() },
+                    40_000,
+                    &mut rng,
+                )
+            })
+            .collect();
+        // Sequential reference: sort all entries, sessionize per user.
+        let mut all: Vec<(String, u64)> = inputs
+            .iter()
+            .flatten()
+            .filter_map(|r| parse_entry(&r.value).map(|(u, t)| (u.to_string(), t)))
+            .collect();
+        all.sort();
+        let mut expect_sessions = 0usize;
+        {
+            let mut cur_user: Option<&str> = None;
+            let mut last_ts = 0u64;
+            for (u, t) in &all {
+                match cur_user {
+                    Some(cu) if cu == u && t.saturating_sub(last_ts) <= SESSION_GAP => {}
+                    _ => expect_sessions += 1,
+                }
+                cur_user = Some(u);
+                last_ts = *t;
+            }
+        }
+        let res = run_job(
+            &t,
+            &Plan::uniform(2, 2, 2),
+            &Sessionize,
+            &JobConfig::default(),
+            &inputs,
+        );
+        let got_sessions: usize = res.outputs.iter().map(Vec::len).sum();
+        assert_eq!(got_sessions, expect_sessions);
+    }
+
+    #[test]
+    fn alpha_is_one_ish() {
+        // The mapper routes data without aggregation or expansion
+        // (paper: α = 1.0). Composite keys add a little overhead.
+        let mut rng = Pcg64::new(22);
+        let logs = generate(WeblogConfig::default(), 100_000, &mut rng);
+        let in_bytes: usize = logs.iter().map(|r| r.size()).sum();
+        let mut out_bytes = 0usize;
+        for r in &logs {
+            Sessionize.map(r, &mut |o| out_bytes += o.size());
+        }
+        let alpha = out_bytes as f64 / in_bytes as f64;
+        assert!((0.8..1.6).contains(&alpha), "α = {alpha}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Seeded Zipf text-corpus generator — stands in for the Project
+//! Gutenberg eBook collection the paper uses for Word Count and Full
+//! Inverted Index (§4.6.2; see DESIGN.md §3 for the substitution).
+//!
+//! Natural-language word frequencies are Zipfian (s ≈ 1), which is the
+//! property Word Count's aggregation (α ≪ 1) and the inverted index's
+//! posting-list skew depend on; the generator reproduces it with a
+//! deterministic vocabulary.
+
+use crate::engine::job::Record;
+use crate::util::rng::{Pcg64, Zipf};
+
+/// Deterministic synthetic vocabulary: pronounceable pseudo-words,
+/// rank-indexed (rank 0 = most frequent).
+pub fn word(rank: u64) -> String {
+    const ONSETS: [&str; 16] = [
+        "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "w", "st", "tr",
+    ];
+    const VOWELS: [&str; 8] = ["a", "e", "i", "o", "u", "ai", "ou", "ea"];
+    let mut n = rank + 1;
+    let mut out = String::new();
+    while n > 0 {
+        let o = (n % ONSETS.len() as u64) as usize;
+        n /= ONSETS.len() as u64;
+        let v = (n % VOWELS.len() as u64) as usize;
+        n /= VOWELS.len() as u64;
+        out.push_str(ONSETS[o]);
+        out.push_str(VOWELS[v]);
+    }
+    out
+}
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CorpusConfig {
+    /// Vocabulary size.
+    pub vocab: u64,
+    /// Zipf exponent (natural language ≈ 1.0).
+    pub zipf_s: f64,
+    /// Words per document line (value payload of one record).
+    pub words_per_doc: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig { vocab: 20_000, zipf_s: 1.05, words_per_doc: 24 }
+    }
+}
+
+/// Generate documents totalling ≈ `target_bytes`. Each record is one
+/// document: key = document id, value = space-separated words.
+pub fn generate(cfg: CorpusConfig, target_bytes: usize, rng: &mut Pcg64) -> Vec<Record> {
+    let zipf = Zipf::new(cfg.vocab, cfg.zipf_s);
+    let mut out = Vec::new();
+    let mut bytes = 0usize;
+    let mut doc = 0u64;
+    while bytes < target_bytes {
+        let mut text = String::new();
+        for w in 0..cfg.words_per_doc {
+            if w > 0 {
+                text.push(' ');
+            }
+            text.push_str(&word(zipf.sample(rng) - 1));
+        }
+        let rec = Record::new(format!("doc{doc:08}"), text);
+        bytes += rec.size();
+        out.push(rec);
+        doc += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_is_deterministic_and_distinct() {
+        assert_eq!(word(0), word(0));
+        let ws: std::collections::HashSet<String> = (0..2000).map(word).collect();
+        assert_eq!(ws.len(), 2000, "ranks map to distinct words");
+    }
+
+    #[test]
+    fn generate_hits_target_size() {
+        let mut rng = Pcg64::new(1);
+        let recs = generate(CorpusConfig::default(), 100_000, &mut rng);
+        let total: usize = recs.iter().map(|r| r.size()).sum();
+        assert!(total >= 100_000);
+        assert!(total < 110_000, "within one record of target");
+    }
+
+    #[test]
+    fn corpus_is_zipfian() {
+        let mut rng = Pcg64::new(2);
+        let recs = generate(CorpusConfig::default(), 300_000, &mut rng);
+        let mut counts: std::collections::HashMap<&str, usize> = Default::default();
+        for r in &recs {
+            for w in r.value.split(' ') {
+                *counts.entry(w).or_default() += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().cloned().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // Top word much more frequent than the 100th.
+        assert!(freqs[0] > 20 * freqs.get(100).cloned().unwrap_or(1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(CorpusConfig::default(), 50_000, &mut Pcg64::new(7));
+        let b = generate(CorpusConfig::default(), 50_000, &mut Pcg64::new(7));
+        assert_eq!(a, b);
+    }
+}

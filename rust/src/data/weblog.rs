@@ -1,0 +1,131 @@
+//! Seeded Web-server-log generator — stands in for the WorldCup98 trace
+//! the paper uses for Sessionization (§4.6.2; DESIGN.md §3).
+//!
+//! Log entries carry a client id and timestamp; clients issue requests in
+//! bursts (sessions) separated by long think times, which is exactly the
+//! structure Sessionization recovers.
+
+use crate::engine::job::Record;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy)]
+pub struct WeblogConfig {
+    pub n_users: u64,
+    /// Mean requests per session.
+    pub mean_session_len: f64,
+    /// Mean gap between requests inside a session (seconds).
+    pub intra_gap: f64,
+    /// Mean gap between sessions (seconds) — must exceed the
+    /// sessionization threshold by a wide margin.
+    pub inter_gap: f64,
+}
+
+impl Default for WeblogConfig {
+    fn default() -> Self {
+        WeblogConfig { n_users: 2_000, mean_session_len: 8.0, intra_gap: 30.0, inter_gap: 3600.0 }
+    }
+}
+
+/// The session gap threshold Sessionization uses (seconds).
+pub const SESSION_GAP: u64 = 1800;
+
+const PAGES: [&str; 8] = [
+    "/index.html",
+    "/scores/live",
+    "/teams/list",
+    "/news/today",
+    "/img/banner.gif",
+    "/match/detail",
+    "/stats/top",
+    "/schedule/week",
+];
+
+/// Generate ≈ `target_bytes` of log records. Key = log offset; value =
+/// "user_id timestamp path status bytes" (Common-Log-ish).
+pub fn generate(cfg: WeblogConfig, target_bytes: usize, rng: &mut Pcg64) -> Vec<Record> {
+    let mut out = Vec::new();
+    let mut bytes = 0usize;
+    let mut line = 0u64;
+    // Per-user clock; users interleave in the log ordered by time-ish
+    // batches (we emit round-robin over users with advancing clocks,
+    // which is realistic enough and keeps generation O(n)).
+    let mut clocks: Vec<f64> = (0..cfg.n_users)
+        .map(|_| rng.uniform(0.0, cfg.inter_gap))
+        .collect();
+    while bytes < target_bytes {
+        let u = rng.next_below(cfg.n_users);
+        // Advance this user's clock: new session or intra-session step.
+        let new_session = rng.chance(1.0 / cfg.mean_session_len);
+        let dt = if new_session {
+            cfg.inter_gap * (0.5 + rng.exponential(1.0))
+        } else {
+            rng.exponential(1.0 / cfg.intra_gap.max(1e-9)).min(cfg.intra_gap * 10.0)
+        };
+        clocks[u as usize] += dt;
+        let ts = clocks[u as usize] as u64;
+        let page = PAGES[rng.range(0, PAGES.len())];
+        let status = if rng.chance(0.95) { 200 } else { 404 };
+        let size = 200 + rng.next_below(4000);
+        let rec = Record::new(
+            format!("{line:010}"),
+            format!("user{u:06} {ts} {page} {status} {size}"),
+        );
+        bytes += rec.size();
+        out.push(rec);
+        line += 1;
+    }
+    out
+}
+
+/// Parse a log value back into (user, timestamp) — used by the app.
+pub fn parse_entry(value: &str) -> Option<(&str, u64)> {
+    let mut it = value.split(' ');
+    let user = it.next()?;
+    let ts = it.next()?.parse().ok()?;
+    Some((user, ts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_target_volume_deterministically() {
+        let a = generate(WeblogConfig::default(), 80_000, &mut Pcg64::new(3));
+        let b = generate(WeblogConfig::default(), 80_000, &mut Pcg64::new(3));
+        assert_eq!(a, b);
+        let total: usize = a.iter().map(|r| r.size()).sum();
+        assert!(total >= 80_000 && total < 90_000);
+    }
+
+    #[test]
+    fn entries_parse() {
+        let recs = generate(WeblogConfig::default(), 20_000, &mut Pcg64::new(4));
+        for r in &recs {
+            let (user, _ts) = parse_entry(&r.value).expect("parseable");
+            assert!(user.starts_with("user"));
+        }
+    }
+
+    #[test]
+    fn users_have_multiple_sessions() {
+        let mut rng = Pcg64::new(5);
+        let recs = generate(
+            WeblogConfig { n_users: 10, ..Default::default() },
+            120_000,
+            &mut rng,
+        );
+        // Reconstruct one user's timeline; expect at least one gap >
+        // SESSION_GAP (multiple sessions).
+        let mut times: Vec<u64> = recs
+            .iter()
+            .filter_map(|r| parse_entry(&r.value))
+            .filter(|(u, _)| *u == "user000000")
+            .map(|(_, t)| t)
+            .collect();
+        times.sort_unstable();
+        assert!(times.len() > 10);
+        let has_gap = times.windows(2).any(|w| w[1] - w[0] > SESSION_GAP);
+        assert!(has_gap, "expected multi-session user");
+    }
+}

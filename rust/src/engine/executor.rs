@@ -1,0 +1,990 @@
+//! The plan-enforcing MapReduce executor — our equivalent of the paper's
+//! modified Hadoop (§3.1) running on the emulated testbed (§3.2).
+//!
+//! Execution is event-driven over the fluid simulator ([`super::fluid`]):
+//! push transfers, map tasks, shuffle transfers, reduce tasks and output
+//! writes are fluid activities; the executor reacts to completions and
+//! enforces the execution plan and barrier configuration:
+//!
+//! * **push** (§3.1.2): input splits destined for mapper `j` read from
+//!   each source `i` in proportion to `x_ij`, exactly like the custom
+//!   `InputFormat`/`InputSplit`.
+//! * **map** (§3.1.1): `LocalOnly` coupling — map tasks run on the node
+//!   their split was pushed to (unless stolen/speculated, §4.6.4).
+//! * **shuffle** (§3.1.3): intermediate keys hash into buckets; buckets
+//!   are apportioned to reducers per `y_k` ([`super::partitioner`]).
+//! * **reduce**: a reducer starts when it holds all of its input (the
+//!   local shuffle/reduce barrier Hadoop has by default); the global
+//!   variant waits for every shuffle. A pipelined shuffle/reduce barrier
+//!   requires application-level changes (Verma et al. [28], §3.1.4) and
+//!   is treated as Local by the engine (the *model* supports it).
+//!
+//! The engine executes the *real* map/reduce functions on real records —
+//! byte counts, skew and record conservation are genuine — while time is
+//! virtual (charged from the topology's bandwidths/compute rates).
+
+use std::collections::HashMap;
+
+use super::fluid::{ActivityId, FluidSim, ResourceId};
+use super::job::{batch_size, JobConfig, MapReduceApp, Record};
+use super::metrics::JobMetrics;
+use super::partitioner::Partitioner;
+use crate::model::barrier::Barrier;
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+
+/// Node NIC capacity (bytes/s): Gigabit Ethernet, §3.2's testbed fabric.
+/// Concurrent flows through one node share this — contention the closed-
+/// form model ignores (and part of why Fig 4 is a non-trivial check).
+pub const NIC_BPS: f64 = 125.0e6;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum TaskState {
+    WaitingForData,
+    Ready,
+    Running,
+    Done,
+}
+
+struct MapTask {
+    mapper: usize,
+    /// (source, records) parts of this split.
+    parts: Vec<(usize, Vec<Record>)>,
+    bytes: f64,
+    state: TaskState,
+    /// Node actually executing (may differ from `mapper` when stolen).
+    exec_node: Option<usize>,
+    activity: Option<ActivityId>,
+    /// Speculative copy bookkeeping.
+    spec_node: Option<usize>,
+    spec_activity: Option<ActivityId>,
+    spec_fetching: bool,
+    pending_parts: usize,
+    started_at: f64,
+    /// Map outputs per reducer (filled when the task first runs).
+    outputs: Option<Vec<Vec<Record>>>,
+}
+
+enum Ev {
+    PushPart { task: usize },
+    PushReplica { task: usize },
+    MapCompute { task: usize, speculative: bool },
+    StealFetch { task: usize },
+    SpecFetch { task: usize },
+    ShuffleXfer { reducer: usize, bytes: f64 },
+    ReduceCompute { reducer: usize },
+    OutputWrite { reducer: usize },
+}
+
+/// Run one job; returns metrics plus the final output records per reducer.
+pub struct JobResult {
+    pub metrics: JobMetrics,
+    pub outputs: Vec<Vec<Record>>,
+}
+
+pub fn run_job(
+    topo: &Topology,
+    plan: &Plan,
+    app: &dyn MapReduceApp,
+    config: &JobConfig,
+    inputs: &[Vec<Record>],
+) -> JobResult {
+    Executor::new(topo, plan, app, config, inputs).run()
+}
+
+struct Executor<'a> {
+    topo: &'a Topology,
+    plan: &'a Plan,
+    app: &'a dyn MapReduceApp,
+    config: &'a JobConfig,
+    sim: FluidSim,
+    events: HashMap<ActivityId, Ev>,
+    // resources
+    sm_link: Vec<Vec<ResourceId>>,
+    mr_link: Vec<Vec<ResourceId>>,
+    src_egress: Vec<ResourceId>,
+    map_ingress: Vec<ResourceId>,
+    map_egress: Vec<ResourceId>,
+    red_ingress: Vec<ResourceId>,
+    map_compute: Vec<ResourceId>,
+    red_compute: Vec<ResourceId>,
+    // tasks
+    tasks: Vec<MapTask>,
+    partitioner: Partitioner,
+    // shuffle state
+    push_parts_left: usize,
+    maps_left: usize,
+    maps_left_per_node: Vec<usize>,
+    shuffle_xfers_left: Vec<usize>,
+    shuffle_released: bool,
+    /// Intermediate records delivered to each reducer.
+    reducer_inbox: Vec<Vec<Record>>,
+    /// Map outputs parked until the shuffle may start (barrier).
+    parked_outputs: Vec<(usize, Vec<Vec<Record>>)>, // (mapper_exec, per-reducer)
+    reduce_started: Vec<bool>,
+    reduce_done: Vec<bool>,
+    writes_left: Vec<usize>,
+    all_shuffles_done: bool,
+    // slot accounting
+    map_slots_free: Vec<usize>,
+    reduce_slots_free: Vec<usize>,
+    // metrics
+    metrics: JobMetrics,
+    durations: Vec<f64>,
+    outputs: Vec<Vec<Record>>,
+}
+
+impl<'a> Executor<'a> {
+    fn new(
+        topo: &'a Topology,
+        plan: &'a Plan,
+        app: &'a dyn MapReduceApp,
+        config: &'a JobConfig,
+        inputs: &[Vec<Record>],
+    ) -> Executor<'a> {
+        plan.check(topo).unwrap_or_else(|e| panic!("invalid plan: {e}"));
+        let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        assert_eq!(inputs.len(), s, "one input vector per source");
+
+        let mut sim = FluidSim::new();
+        let sm_link: Vec<Vec<ResourceId>> = (0..s)
+            .map(|i| (0..m).map(|j| sim.add_resource(topo.b_sm.get(i, j))).collect())
+            .collect();
+        let mr_link: Vec<Vec<ResourceId>> = (0..m)
+            .map(|j| (0..r).map(|k| sim.add_resource(topo.b_mr.get(j, k))).collect())
+            .collect();
+        let src_egress: Vec<ResourceId> = (0..s).map(|_| sim.add_resource(NIC_BPS)).collect();
+        let map_ingress: Vec<ResourceId> = (0..m).map(|_| sim.add_resource(NIC_BPS)).collect();
+        let map_egress: Vec<ResourceId> = (0..m).map(|_| sim.add_resource(NIC_BPS)).collect();
+        let red_ingress: Vec<ResourceId> = (0..r).map(|_| sim.add_resource(NIC_BPS)).collect();
+        let map_compute: Vec<ResourceId> =
+            (0..m).map(|j| sim.add_resource(topo.c_map[j])).collect();
+        let red_compute: Vec<ResourceId> =
+            (0..r).map(|k| sim.add_resource(topo.c_red[k])).collect();
+
+        let partitioner = Partitioner::from_fractions(&plan.y, config.n_buckets);
+
+        let mut exec = Executor {
+            topo,
+            plan,
+            app,
+            config,
+            sim,
+            events: HashMap::new(),
+            sm_link,
+            mr_link,
+            src_egress,
+            map_ingress,
+            map_egress,
+            red_ingress,
+            map_compute,
+            red_compute,
+            tasks: Vec::new(),
+            partitioner,
+            push_parts_left: 0,
+            maps_left: 0,
+            maps_left_per_node: vec![0; m],
+            shuffle_xfers_left: vec![0; r],
+            shuffle_released: false,
+            reducer_inbox: vec![Vec::new(); r],
+            parked_outputs: Vec::new(),
+            reduce_started: vec![false; r],
+            reduce_done: vec![false; r],
+            writes_left: vec![0; r],
+            all_shuffles_done: false,
+            map_slots_free: vec![config.map_slots; m],
+            reduce_slots_free: vec![config.reduce_slots; r],
+            metrics: JobMetrics::default(),
+            durations: Vec::new(),
+            outputs: vec![Vec::new(); r],
+        };
+        exec.build_splits(inputs);
+        exec
+    }
+
+    /// §3.1.2: build input splits. Each split for mapper `j` reads from
+    /// every source `i` in proportion to `x_ij`.
+    fn build_splits(&mut self, inputs: &[Vec<Record>]) {
+        let (s, m) = (self.topo.n_sources(), self.topo.n_mappers());
+        self.metrics.input_records = inputs.iter().map(Vec::len).sum();
+
+        // Per source: cut its records into per-mapper chunks of byte
+        // volume ≈ D_i·x_ij (greedy contiguous walk).
+        let mut per_mapper_parts: Vec<Vec<(usize, Vec<Record>)>> = vec![Vec::new(); m];
+        for i in 0..s {
+            let total: f64 = batch_size(&inputs[i]) as f64;
+            let mut cursor = 0usize;
+            let mut acc = 0.0f64;
+            let mut target = 0.0f64;
+            for j in 0..m {
+                target += self.plan.x.get(i, j) * total;
+                let mut chunk = Vec::new();
+                while cursor < inputs[i].len() && (acc < target || j == m - 1) {
+                    acc += inputs[i][cursor].size() as f64;
+                    chunk.push(inputs[i][cursor].clone());
+                    cursor += 1;
+                }
+                if !chunk.is_empty() {
+                    per_mapper_parts[j].push((i, chunk));
+                }
+            }
+        }
+
+        // Subdivide each mapper's incoming volume into splits.
+        for j in 0..m {
+            let vol: usize = per_mapper_parts[j]
+                .iter()
+                .map(|(_, recs)| batch_size(recs))
+                .sum();
+            if vol == 0 {
+                continue;
+            }
+            let n_splits = vol.div_ceil(self.config.split_size).max(1);
+            // Round-robin records of each part across the splits keeps
+            // every split reading proportionally from every source.
+            let mut split_parts: Vec<HashMap<usize, Vec<Record>>> =
+                vec![HashMap::new(); n_splits];
+            for (src, recs) in &per_mapper_parts[j] {
+                for (idx, rec) in recs.iter().enumerate() {
+                    split_parts[idx % n_splits]
+                        .entry(*src)
+                        .or_default()
+                        .push(rec.clone());
+                }
+            }
+            for parts_map in split_parts {
+                if parts_map.is_empty() {
+                    continue;
+                }
+                let mut parts: Vec<(usize, Vec<Record>)> = parts_map.into_iter().collect();
+                parts.sort_by_key(|(src, _)| *src);
+                let bytes: usize = parts.iter().map(|(_, r)| batch_size(r)).sum();
+                self.tasks.push(MapTask {
+                    mapper: j,
+                    parts,
+                    bytes: bytes as f64,
+                    state: TaskState::WaitingForData,
+                    exec_node: None,
+                    activity: None,
+                    spec_node: None,
+                    spec_activity: None,
+                    spec_fetching: false,
+                    pending_parts: 0,
+                    started_at: 0.0,
+                    outputs: None,
+                });
+            }
+        }
+        self.maps_left = self.tasks.len();
+        self.metrics.n_map_tasks = self.tasks.len();
+        for t in &self.tasks {
+            self.maps_left_per_node[t.mapper] += 1;
+        }
+    }
+
+    /// Kick off all push transfers.
+    fn start_push(&mut self) {
+        let repl = self.config.replication.max(1);
+        let m = self.topo.n_mappers();
+        for tid in 0..self.tasks.len() {
+            let mapper = self.tasks[tid].mapper;
+            let parts: Vec<(usize, f64)> = self.tasks[tid]
+                .parts
+                .iter()
+                .map(|(src, recs)| (*src, batch_size(recs) as f64))
+                .collect();
+            for (src, bytes) in parts {
+                let a = self.sim.add_activity(
+                    bytes,
+                    vec![
+                        self.sm_link[src][mapper],
+                        self.src_egress[src],
+                        self.map_ingress[mapper],
+                    ],
+                );
+                self.events.insert(a, Ev::PushPart { task: tid });
+                self.tasks[tid].pending_parts += 1;
+                self.push_parts_left += 1;
+                self.metrics.push_bytes += bytes;
+                // HDFS-style replication: each replica is one more
+                // wide-area copy of the block (§4.6.5).
+                for extra in 1..repl {
+                    let replica_node = (mapper + extra) % m;
+                    let a = self.sim.add_activity(
+                        bytes,
+                        vec![
+                            self.sm_link[src][replica_node],
+                            self.src_egress[src],
+                            self.map_ingress[replica_node],
+                        ],
+                    );
+                    self.events.insert(a, Ev::PushReplica { task: tid });
+                    self.tasks[tid].pending_parts += 1;
+                    self.push_parts_left += 1;
+                    self.metrics.push_bytes += bytes;
+                }
+            }
+        }
+        // Degenerate: no input at all.
+        if self.push_parts_left == 0 {
+            self.release_maps_after_push();
+        }
+    }
+
+    fn release_maps_after_push(&mut self) {
+        for tid in 0..self.tasks.len() {
+            if self.tasks[tid].state == TaskState::WaitingForData
+                && self.tasks[tid].pending_parts == 0
+            {
+                self.tasks[tid].state = TaskState::Ready;
+            }
+        }
+        self.schedule_maps();
+    }
+
+    /// Execute the map function for a task (eagerly, once).
+    fn materialize_outputs(&mut self, tid: usize) {
+        if self.tasks[tid].outputs.is_some() {
+            return;
+        }
+        let r = self.topo.n_reducers();
+        let mut outs: Vec<Vec<Record>> = vec![Vec::new(); r];
+        let mut count = 0usize;
+        // One map_split call over the whole split (all source parts):
+        // this is what lets in-mapper combining aggregate across the
+        // split, like the paper's Word Count (§4.6.2).
+        let split_records: Vec<Record> = self.tasks[tid]
+            .parts
+            .iter()
+            .flat_map(|(_, recs)| recs.iter().cloned())
+            .collect();
+        self.app.map_split(&split_records, &mut |out| {
+            let k = self.partitioner.reducer(self.app.group_key(&out.key));
+            outs[k].push(out);
+            count += 1;
+        });
+        self.metrics.intermediate_records += count;
+        self.tasks[tid].outputs = Some(outs);
+    }
+
+    /// Try to start ready map tasks on free slots (+ stealing).
+    fn schedule_maps(&mut self) {
+        // Plan-local scheduling first.
+        for tid in 0..self.tasks.len() {
+            if self.tasks[tid].state != TaskState::Ready {
+                continue;
+            }
+            let node = self.tasks[tid].mapper;
+            if self.map_slots_free[node] > 0 {
+                self.start_map(tid, node, false);
+            }
+        }
+        // Work stealing (§4.6.4): idle nodes with no local pending work
+        // take a ready task from the most-loaded node; its input is
+        // fetched from the plan node over the wide area.
+        if self.config.stealing && !self.config.local_only {
+            let m = self.topo.n_mappers();
+            loop {
+                let mut stolen_any = false;
+                for thief in 0..m {
+                    if self.map_slots_free[thief] == 0 {
+                        continue;
+                    }
+                    let has_local_ready = self.tasks.iter().any(|t| {
+                        t.state == TaskState::Ready && t.mapper == thief
+                    });
+                    if has_local_ready {
+                        continue;
+                    }
+                    // Victim: ready task on the node with most queued work.
+                    let victim = (0..self.tasks.len())
+                        .filter(|&tid| {
+                            self.tasks[tid].state == TaskState::Ready
+                                && self.tasks[tid].mapper != thief
+                        })
+                        .max_by(|&a, &b| {
+                            let qa = self.maps_left_per_node[self.tasks[a].mapper];
+                            let qb = self.maps_left_per_node[self.tasks[b].mapper];
+                            qa.cmp(&qb)
+                        });
+                    if let Some(tid) = victim {
+                        self.start_map(tid, thief, false);
+                        self.metrics.stolen += 1;
+                        stolen_any = true;
+                    }
+                }
+                if !stolen_any {
+                    break;
+                }
+            }
+        }
+    }
+
+    fn start_map(&mut self, tid: usize, node: usize, speculative: bool) {
+        let plan_node = self.tasks[tid].mapper;
+        if speculative {
+            self.tasks[tid].spec_node = Some(node);
+            self.tasks[tid].spec_fetching = node != plan_node;
+        } else {
+            self.tasks[tid].state = TaskState::Running;
+            self.tasks[tid].exec_node = Some(node);
+            self.tasks[tid].started_at = self.sim.now();
+        }
+        self.map_slots_free[node] -= 1;
+
+        if node != plan_node {
+            // Remote read of the split from the plan node (the stolen /
+            // speculative copy path). Node-pair bandwidth approximated by
+            // the cluster-pair mapper→reducer matrix (nodes co-located).
+            let bytes = self.tasks[tid].bytes;
+            let a = self.sim.add_activity(
+                bytes,
+                vec![
+                    self.mr_link[plan_node][node.min(self.topo.n_reducers() - 1)],
+                    self.map_egress[plan_node],
+                    self.map_ingress[node],
+                ],
+            );
+            let ev = if speculative { Ev::SpecFetch { task: tid } } else { Ev::StealFetch { task: tid } };
+            self.events.insert(a, ev);
+        } else {
+            self.start_map_compute(tid, node, speculative);
+        }
+    }
+
+    fn start_map_compute(&mut self, tid: usize, node: usize, speculative: bool) {
+        let work = self.tasks[tid].bytes * self.app.map_cost_factor();
+        let a = self.sim.add_activity(work, vec![self.map_compute[node]]);
+        self.events.insert(a, Ev::MapCompute { task: tid, speculative });
+        if speculative {
+            self.tasks[tid].spec_activity = Some(a);
+        } else {
+            self.tasks[tid].activity = Some(a);
+        }
+    }
+
+    /// Speculation (§4.6.4): a running task whose elapsed time exceeds
+    /// 1.5× the median completed-task duration gets a backup copy on the
+    /// fastest node with a free slot.
+    fn maybe_speculate(&mut self) {
+        if !self.config.speculation || self.durations.len() < 3 {
+            return;
+        }
+        let mut ds = self.durations.clone();
+        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = ds[ds.len() / 2];
+        let now = self.sim.now();
+        for tid in 0..self.tasks.len() {
+            let t = &self.tasks[tid];
+            if t.state != TaskState::Running || t.spec_node.is_some() {
+                continue;
+            }
+            if now - t.started_at <= 1.5 * median {
+                continue;
+            }
+            // Fastest node with a free slot, other than the executor.
+            let exec = t.exec_node.unwrap();
+            let candidate = (0..self.topo.n_mappers())
+                .filter(|&n| n != exec && self.map_slots_free[n] > 0)
+                .max_by(|&a, &b| {
+                    self.topo.c_map[a].partial_cmp(&self.topo.c_map[b]).unwrap()
+                });
+            if let Some(node) = candidate {
+                self.start_map(tid, node, true);
+                self.metrics.spec_launched += 1;
+            }
+        }
+    }
+
+    fn on_map_done(&mut self, tid: usize, speculative: bool) {
+        if self.tasks[tid].state == TaskState::Done {
+            return; // lost the race
+        }
+        let node = if speculative {
+            self.tasks[tid].spec_node.unwrap()
+        } else {
+            self.tasks[tid].exec_node.unwrap()
+        };
+        // Cancel the losing copy and free its slot.
+        if speculative {
+            if let Some(a) = self.tasks[tid].activity {
+                if !self.sim.is_done(a) {
+                    self.sim.cancel(a);
+                    self.events.remove(&a);
+                }
+            }
+            if let Some(loser) = self.tasks[tid].exec_node {
+                self.map_slots_free[loser] += 1;
+            }
+            self.metrics.spec_won += 1;
+        } else if let Some(a) = self.tasks[tid].spec_activity {
+            if !self.sim.is_done(a) {
+                self.sim.cancel(a);
+                self.events.remove(&a);
+            }
+            if let Some(loser) = self.tasks[tid].spec_node {
+                self.map_slots_free[loser] += 1;
+            }
+        } else if self.tasks[tid].spec_fetching {
+            // Spec copy still fetching its input; let the fetch event
+            // find the task Done and release the slot then.
+        }
+        self.tasks[tid].state = TaskState::Done;
+        self.map_slots_free[node] += 1;
+        self.durations.push(self.sim.now() - self.tasks[tid].started_at);
+        self.maps_left -= 1;
+        self.maps_left_per_node[self.tasks[tid].mapper] =
+            self.maps_left_per_node[self.tasks[tid].mapper].saturating_sub(1);
+        self.metrics.map_end = self.sim.now();
+
+        self.materialize_outputs(tid);
+        let outs = self.tasks[tid].outputs.take().unwrap();
+
+        match self.config.barriers.map_shuffle {
+            Barrier::Global => {
+                self.parked_outputs.push((node, outs));
+                if self.maps_left == 0 {
+                    self.release_shuffle();
+                }
+            }
+            Barrier::Local => {
+                self.parked_outputs.push((node, outs));
+                // Release this node's outputs once it has no maps left.
+                if self.maps_left_per_node[self.tasks[tid].mapper] == 0 {
+                    let mine: Vec<(usize, Vec<Vec<Record>>)> = {
+                        let mut kept = Vec::new();
+                        let mut released = Vec::new();
+                        for entry in self.parked_outputs.drain(..) {
+                            if entry.0 == node {
+                                released.push(entry);
+                            } else {
+                                kept.push(entry);
+                            }
+                        }
+                        self.parked_outputs = kept;
+                        released
+                    };
+                    for (exec_node, outs) in mine {
+                        self.emit_shuffle(exec_node, outs);
+                    }
+                }
+            }
+            Barrier::Pipelined => {
+                self.emit_shuffle(node, outs);
+            }
+        }
+        self.schedule_maps();
+        self.maybe_speculate();
+        self.maybe_finish_shuffle_phase();
+    }
+
+    fn release_shuffle(&mut self) {
+        self.shuffle_released = true;
+        let parked = std::mem::take(&mut self.parked_outputs);
+        for (node, outs) in parked {
+            self.emit_shuffle(node, outs);
+        }
+    }
+
+    fn emit_shuffle(&mut self, from_node: usize, outs: Vec<Vec<Record>>) {
+        for (k, recs) in outs.into_iter().enumerate() {
+            if recs.is_empty() {
+                continue;
+            }
+            let bytes = batch_size(&recs) as f64;
+            self.reducer_inbox[k].extend(recs);
+            let a = self.sim.add_activity(
+                bytes,
+                vec![
+                    self.mr_link[from_node][k],
+                    self.map_egress[from_node],
+                    self.red_ingress[k],
+                ],
+            );
+            self.events.insert(a, Ev::ShuffleXfer { reducer: k, bytes });
+            self.shuffle_xfers_left[k] += 1;
+            self.metrics.shuffle_bytes += bytes;
+        }
+    }
+
+    /// All maps done and all shuffle transfers delivered?
+    fn maybe_finish_shuffle_phase(&mut self) {
+        if self.maps_left == 0
+            && self.shuffle_xfers_left.iter().all(|&c| c == 0)
+            && !self.all_shuffles_done
+        {
+            self.all_shuffles_done = true;
+            self.metrics.shuffle_end = self.sim.now();
+            self.maybe_start_reduces();
+        }
+    }
+
+    fn maybe_start_reduces(&mut self) {
+        let r = self.topo.n_reducers();
+        // Shuffle/reduce barrier: Local (Hadoop default) starts reducer k
+        // when its own inbox is complete; Global waits for every reducer.
+        // Pipelined is treated as Local (see module docs).
+        let global = self.config.barriers.shuffle_reduce == Barrier::Global;
+        for k in 0..r {
+            if self.reduce_started[k] || self.reduce_slots_free[k] == 0 {
+                continue;
+            }
+            let mine_done = self.maps_left == 0 && self.shuffle_xfers_left[k] == 0;
+            let gate = if global { self.all_shuffles_done } else { mine_done };
+            if gate {
+                self.start_reduce(k);
+            }
+        }
+    }
+
+    fn start_reduce(&mut self, k: usize) {
+        self.reduce_started[k] = true;
+        self.reduce_slots_free[k] -= 1;
+        self.metrics.n_reduce_tasks += 1;
+        // Sort by full key (SortComparator), group by group_key
+        // (GroupingComparator), run the real reduce function.
+        let mut inbox = std::mem::take(&mut self.reducer_inbox[k]);
+        let in_bytes = batch_size(&inbox) as f64;
+        inbox.sort();
+        let mut outs: Vec<Record> = Vec::new();
+        let mut idx = 0;
+        while idx < inbox.len() {
+            let group = self.app.group_key(&inbox[idx].key).to_string();
+            let mut end = idx + 1;
+            while end < inbox.len() && self.app.group_key(&inbox[end].key) == group {
+                end += 1;
+            }
+            self.app.reduce(&group, &inbox[idx..end], &mut |out| outs.push(out));
+            idx = end;
+        }
+        self.metrics.output_records += outs.len();
+        let out_bytes = batch_size(&outs) as f64;
+        self.outputs[k] = outs;
+        self.metrics.output_bytes += out_bytes;
+
+        let work = in_bytes * self.app.reduce_cost_factor();
+        let a = self.sim.add_activity(work.max(1.0), vec![self.red_compute[k]]);
+        self.events.insert(a, Ev::ReduceCompute { reducer: k });
+        // Stash output size for the write stage via writes_left bookkeeping.
+        self.writes_left[k] = 0;
+    }
+
+    fn on_reduce_compute_done(&mut self, k: usize) {
+        // Output materialization to the distributed file system with
+        // replication (§4.6.5): repl−1 wide-area copies.
+        let repl = self.config.replication.max(1);
+        let out_bytes = batch_size(&self.outputs[k]) as f64;
+        if repl > 1 && out_bytes > 0.0 {
+            let r = self.topo.n_reducers();
+            for extra in 1..repl {
+                let target = (k + extra) % r;
+                // Reducer-to-reducer copy over the cluster-pair link.
+                let a = self.sim.add_activity(
+                    out_bytes,
+                    vec![
+                        self.mr_link[target.min(self.topo.n_mappers() - 1)][k],
+                        self.red_ingress[target],
+                    ],
+                );
+                self.events.insert(a, Ev::OutputWrite { reducer: k });
+                self.writes_left[k] += 1;
+                self.metrics.output_bytes += out_bytes;
+            }
+        }
+        if self.writes_left[k] == 0 {
+            self.finish_reduce(k);
+        }
+    }
+
+    fn finish_reduce(&mut self, k: usize) {
+        self.reduce_done[k] = true;
+        self.metrics.makespan = self.sim.now();
+    }
+
+    fn run(mut self) -> JobResult {
+        self.start_push();
+        while let Some((_now, completed)) = self.sim.step() {
+            for aid in completed {
+                let ev = match self.events.remove(&aid) {
+                    Some(ev) => ev,
+                    None => continue, // cancelled loser
+                };
+                match ev {
+                    Ev::PushPart { task } => {
+                        self.push_parts_left -= 1;
+                        self.metrics.push_end = self.sim.now();
+                        self.tasks[task].pending_parts -= 1;
+                        match self.config.barriers.push_map {
+                            Barrier::Global => {
+                                if self.push_parts_left == 0 {
+                                    self.release_maps_after_push();
+                                }
+                            }
+                            _ => {
+                                // Local/pipelined: the split is runnable as
+                                // soon as its own data is in place.
+                                if self.tasks[task].pending_parts == 0
+                                    && self.tasks[task].state == TaskState::WaitingForData
+                                {
+                                    self.tasks[task].state = TaskState::Ready;
+                                    self.schedule_maps();
+                                }
+                            }
+                        }
+                    }
+                    Ev::PushReplica { task } => {
+                        // Replica writes gate the split like primary parts
+                        // (the HDFS write pipeline completes when all
+                        // replicas acknowledge).
+                        self.push_parts_left -= 1;
+                        self.metrics.push_end = self.sim.now();
+                        self.tasks[task].pending_parts -= 1;
+                        match self.config.barriers.push_map {
+                            Barrier::Global => {
+                                if self.push_parts_left == 0 {
+                                    self.release_maps_after_push();
+                                }
+                            }
+                            _ => {
+                                if self.tasks[task].pending_parts == 0
+                                    && self.tasks[task].state == TaskState::WaitingForData
+                                {
+                                    self.tasks[task].state = TaskState::Ready;
+                                    self.schedule_maps();
+                                }
+                            }
+                        }
+                    }
+                    Ev::StealFetch { task } => {
+                        if self.tasks[task].state == TaskState::Running {
+                            let node = self.tasks[task].exec_node.unwrap();
+                            self.start_map_compute(task, node, false);
+                        }
+                    }
+                    Ev::SpecFetch { task } => {
+                        self.tasks[task].spec_fetching = false;
+                        if self.tasks[task].state == TaskState::Done {
+                            // Original finished while we were fetching.
+                            if let Some(node) = self.tasks[task].spec_node.take() {
+                                self.map_slots_free[node] += 1;
+                            }
+                        } else {
+                            let node = self.tasks[task].spec_node.unwrap();
+                            self.start_map_compute(task, node, true);
+                        }
+                    }
+                    Ev::MapCompute { task, speculative } => {
+                        self.on_map_done(task, speculative);
+                    }
+                    Ev::ShuffleXfer { reducer, .. } => {
+                        self.shuffle_xfers_left[reducer] -= 1;
+                        self.metrics.shuffle_end = self.sim.now();
+                        self.maybe_finish_shuffle_phase();
+                        self.maybe_start_reduces();
+                    }
+                    Ev::ReduceCompute { reducer } => {
+                        self.on_reduce_compute_done(reducer);
+                    }
+                    Ev::OutputWrite { reducer } => {
+                        self.writes_left[reducer] -= 1;
+                        if self.writes_left[reducer] == 0 {
+                            self.finish_reduce(reducer);
+                        }
+                    }
+                }
+            }
+            // Opportunistic checks that need the clock to advance.
+            self.maybe_speculate();
+        }
+        assert!(
+            self.reduce_done.iter().all(|&d| d),
+            "job ended with unfinished reducers (maps_left={}, xfers={:?})",
+            self.maps_left,
+            self.shuffle_xfers_left
+        );
+        JobResult { metrics: self.metrics, outputs: self.outputs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::barrier::BarrierConfig;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+
+    /// Identity app: passes records through unchanged (α = 1).
+    struct Identity;
+    impl MapReduceApp for Identity {
+        fn name(&self) -> &'static str {
+            "identity"
+        }
+        fn map(&self, record: &Record, emit: &mut dyn FnMut(Record)) {
+            emit(record.clone());
+        }
+        fn reduce(&self, _group: &str, records: &[Record], emit: &mut dyn FnMut(Record)) {
+            for r in records {
+                emit(r.clone());
+            }
+        }
+    }
+
+    fn small_inputs(n_sources: usize, records_per_source: usize) -> Vec<Vec<Record>> {
+        (0..n_sources)
+            .map(|i| {
+                (0..records_per_source)
+                    .map(|r| Record::new(format!("key-{i}-{r}"), format!("value-{r}")))
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn topo() -> crate::platform::Topology {
+        example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB)
+    }
+
+    #[test]
+    fn identity_job_conserves_records() {
+        let t = topo();
+        let plan = Plan::uniform(2, 2, 2);
+        let inputs = small_inputs(2, 500);
+        let total: usize = inputs.iter().map(Vec::len).sum();
+        let res = run_job(&t, &plan, &Identity, &JobConfig::default(), &inputs);
+        assert_eq!(res.metrics.input_records, total);
+        assert_eq!(res.metrics.intermediate_records, total);
+        assert_eq!(res.metrics.output_records, total);
+        let out_total: usize = res.outputs.iter().map(Vec::len).sum();
+        assert_eq!(out_total, total);
+        assert!(res.metrics.makespan > 0.0);
+    }
+
+    #[test]
+    fn one_reducer_per_key_invariant() {
+        let t = topo();
+        let plan = Plan { x: crate::util::mat::Mat::filled(2, 2, 0.5), y: vec![0.3, 0.7] };
+        let inputs = small_inputs(2, 400);
+        let res = run_job(&t, &plan, &Identity, &JobConfig::default(), &inputs);
+        // Every key must appear at exactly one reducer.
+        let mut seen: HashMap<String, usize> = HashMap::new();
+        for (k, recs) in res.outputs.iter().enumerate() {
+            for r in recs {
+                if let Some(prev) = seen.insert(r.key.clone(), k) {
+                    assert_eq!(prev, k, "key {} split across reducers", r.key);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_push_plan_avoids_cross_traffic() {
+        let t = topo();
+        let local = Plan::local_push(&t);
+        let uniform = Plan::uniform(2, 2, 2);
+        let inputs = small_inputs(2, 800);
+        let cfg = JobConfig::default();
+        let m_local = run_job(&t, &local, &Identity, &cfg, &inputs).metrics;
+        let m_uni = run_job(&t, &uniform, &Identity, &cfg, &inputs).metrics;
+        // Local push must finish its push much faster (no slow links).
+        assert!(
+            m_local.push_end < m_uni.push_end * 0.5,
+            "local push {} vs uniform {}",
+            m_local.push_end,
+            m_uni.push_end
+        );
+    }
+
+    #[test]
+    fn makespan_roughly_tracks_model() {
+        // Engine vs closed-form model on the same instance: within 2×
+        // either way (the engine adds NIC contention and slot queueing).
+        let t = topo();
+        let plan = Plan::uniform(2, 2, 2);
+        let inputs = small_inputs(2, 1000);
+        let cfg = JobConfig { barriers: BarrierConfig::ALL_GLOBAL, ..Default::default() };
+        let res = run_job(&t, &plan, &Identity, &cfg, &inputs);
+        // Scale the model to the actual input bytes.
+        let total_bytes: f64 = inputs.iter().map(|v| batch_size(v) as f64).sum();
+        let mut t2 = t.clone();
+        for d in t2.d.iter_mut() {
+            *d = total_bytes / 2.0;
+        }
+        let model_ms = crate::model::makespan::makespan(
+            &t2,
+            crate::model::makespan::AppModel::new(1.0),
+            BarrierConfig::ALL_GLOBAL,
+            &plan,
+        );
+        let ratio = res.metrics.makespan / model_ms;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "engine {} vs model {model_ms} (ratio {ratio})",
+            res.metrics.makespan
+        );
+    }
+
+    #[test]
+    fn barriers_order_makespan() {
+        let t = topo();
+        let plan = Plan::uniform(2, 2, 2);
+        let inputs = small_inputs(2, 600);
+        let ggl = JobConfig {
+            barriers: BarrierConfig::new(Barrier::Global, Barrier::Global, Barrier::Local),
+            ..Default::default()
+        };
+        let ppl = JobConfig {
+            barriers: BarrierConfig::new(Barrier::Pipelined, Barrier::Pipelined, Barrier::Local),
+            ..Default::default()
+        };
+        let m_g = run_job(&t, &plan, &Identity, &ggl, &inputs).metrics;
+        let m_p = run_job(&t, &plan, &Identity, &ppl, &inputs).metrics;
+        assert!(
+            m_p.makespan <= m_g.makespan * 1.001,
+            "pipelined {} should not exceed global {}",
+            m_p.makespan,
+            m_g.makespan
+        );
+    }
+
+    #[test]
+    fn replication_slows_the_job() {
+        let t = topo();
+        let plan = Plan::local_push(&t);
+        let inputs = small_inputs(2, 600);
+        let r1 = JobConfig { replication: 1, ..Default::default() };
+        let r3 = JobConfig { replication: 3, ..Default::default() };
+        let m1 = run_job(&t, &plan, &Identity, &r1, &inputs).metrics;
+        let m3 = run_job(&t, &plan, &Identity, &r3, &inputs).metrics;
+        assert!(m3.push_bytes > 2.5 * m1.push_bytes);
+        assert!(
+            m3.makespan > m1.makespan,
+            "replication should cost time: {} vs {}",
+            m3.makespan,
+            m1.makespan
+        );
+    }
+
+    #[test]
+    fn zero_fraction_reducer_unused() {
+        let t = topo();
+        let plan = Plan { x: crate::util::mat::Mat::filled(2, 2, 0.5), y: vec![1.0, 0.0] };
+        let inputs = small_inputs(2, 300);
+        let res = run_job(&t, &plan, &Identity, &JobConfig::default(), &inputs);
+        assert!(res.outputs[1].is_empty());
+        assert_eq!(
+            res.outputs[0].len(),
+            res.metrics.input_records
+        );
+    }
+
+    #[test]
+    fn speculation_and_stealing_smoke() {
+        let t = topo();
+        let plan = Plan::uniform(2, 2, 2);
+        let inputs = small_inputs(2, 800);
+        let cfg = JobConfig::vanilla_hadoop();
+        let res = run_job(&t, &plan, &Identity, &cfg, &inputs);
+        // Dynamic mechanisms must preserve correctness.
+        assert_eq!(res.metrics.output_records, res.metrics.input_records);
+        assert!(res.metrics.makespan > 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Job definition: the MapReduce programming model (§1.2) plus the
+//! execution knobs our modified-Hadoop engine exposes (§3.1, §4.6).
+
+use crate::model::barrier::BarrierConfig;
+
+/// A key/value record. Keys and values are strings (like Hadoop `Text`);
+/// the engine charges network/compute work by serialized size.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Record {
+    pub key: String,
+    pub value: String,
+}
+
+/// Serialization overhead per record (length headers), bytes.
+pub const RECORD_OVERHEAD: usize = 8;
+
+impl Record {
+    pub fn new(key: impl Into<String>, value: impl Into<String>) -> Record {
+        Record { key: key.into(), value: value.into() }
+    }
+
+    /// Serialized size in bytes.
+    pub fn size(&self) -> usize {
+        self.key.len() + self.value.len() + RECORD_OVERHEAD
+    }
+}
+
+/// Total serialized size of a record batch.
+pub fn batch_size(records: &[Record]) -> usize {
+    records.iter().map(Record::size).sum()
+}
+
+/// A MapReduce application (map + reduce + grouping semantics).
+///
+/// `group_key` mirrors Hadoop's `GroupingComparator`: records are
+/// partitioned and grouped by `group_key(key)` while values arrive sorted
+/// by the full key — which is how Sessionization implements its
+/// secondary sort (§4.6.2).
+pub trait MapReduceApp: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Process one input record, emitting intermediate records.
+    fn map(&self, record: &Record, emit: &mut dyn FnMut(Record));
+
+    /// Process one whole input split. The default maps record-by-record;
+    /// applications using the *in-mapper-combining* pattern (Word Count,
+    /// §4.6.2) override this to aggregate across the split before
+    /// emitting, which is where their α ≪ 1 comes from.
+    fn map_split(&self, records: &[Record], emit: &mut dyn FnMut(Record)) {
+        for r in records {
+            self.map(r, emit);
+        }
+    }
+
+    /// Reduce one group: `group` is the grouping key, `records` all
+    /// intermediate records of that group sorted by full key.
+    fn reduce(&self, group: &str, records: &[Record], emit: &mut dyn FnMut(Record));
+
+    /// Grouping key (defaults to the whole key).
+    fn group_key<'a>(&self, key: &'a str) -> &'a str {
+        key
+    }
+
+    /// Relative compute intensity of this app's map function (1.0 = the
+    /// platform's calibrated `C` rates). Lets the synthetic app emulate
+    /// computation heterogeneity (§3.2).
+    fn map_cost_factor(&self) -> f64 {
+        1.0
+    }
+
+    /// Relative compute intensity of the reduce function.
+    fn reduce_cost_factor(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Engine execution configuration (the §3.1 Hadoop modifications).
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Barrier configuration at the three phase boundaries.
+    pub barriers: BarrierConfig,
+    /// Input split size in bytes (paper: 64 MB; scaled down with our
+    /// scaled-down inputs).
+    pub split_size: usize,
+    /// Intermediate-key buckets (must be ≫ reducers; §3.1.3).
+    pub n_buckets: usize,
+    /// Map slots per node (§4.6.1: two).
+    pub map_slots: usize,
+    /// Reduce slots per node (§4.6.1: one).
+    pub reduce_slots: usize,
+    /// `LocalOnly` (§3.1.1): strictly couple task placement to the plan.
+    pub local_only: bool,
+    /// Speculative execution of straggler tasks (§4.6.4).
+    pub speculation: bool,
+    /// Work stealing: idle nodes take non-local pending tasks (§4.6.4).
+    pub stealing: bool,
+    /// HDFS-style replication factor for pushed input and reducer output
+    /// (§4.6.5). 1 = no replication.
+    pub replication: usize,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            barriers: BarrierConfig::HADOOP,
+            split_size: 2 << 20, // 2 MB at our scaled data sizes
+            n_buckets: 512,
+            map_slots: 2,
+            reduce_slots: 1,
+            local_only: true,
+            speculation: false,
+            stealing: false,
+            replication: 1,
+        }
+    }
+}
+
+impl JobConfig {
+    /// The configuration used for "our optimization" rows in Figs 9–11:
+    /// statically enforced plan, no dynamic mechanisms (§4.6.1).
+    pub fn optimized() -> JobConfig {
+        JobConfig { local_only: true, speculation: false, stealing: false, ..Default::default() }
+    }
+
+    /// Vanilla-Hadoop-style execution (§4.6.1): dynamic mechanisms on,
+    /// plan not strictly enforced.
+    pub fn vanilla_hadoop() -> JobConfig {
+        JobConfig { local_only: false, speculation: true, stealing: true, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_size_accounts_overhead() {
+        let r = Record::new("key", "value");
+        assert_eq!(r.size(), 3 + 5 + RECORD_OVERHEAD);
+        assert_eq!(batch_size(&[r.clone(), r]), 2 * (8 + 8));
+    }
+
+    #[test]
+    fn default_config_matches_paper() {
+        let c = JobConfig::default();
+        assert_eq!(c.map_slots, 2);
+        assert_eq!(c.reduce_slots, 1);
+        assert_eq!(c.barriers.label(), "G-P-L");
+        assert_eq!(c.replication, 1);
+        assert!(c.n_buckets >= 64);
+    }
+
+    #[test]
+    fn presets() {
+        assert!(JobConfig::optimized().local_only);
+        assert!(!JobConfig::optimized().speculation);
+        let h = JobConfig::vanilla_hadoop();
+        assert!(!h.local_only && h.speculation && h.stealing);
+    }
+}

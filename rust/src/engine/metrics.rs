@@ -1,0 +1,87 @@
+//! Per-job execution metrics collected by the engine.
+
+/// Phase spans and traffic accounting for one executed job.
+#[derive(Debug, Clone, Default)]
+pub struct JobMetrics {
+    /// Virtual time when the last reducer finished — the makespan.
+    pub makespan: f64,
+    /// Last push-transfer completion.
+    pub push_end: f64,
+    /// Last map-task completion.
+    pub map_end: f64,
+    /// Last shuffle-transfer completion.
+    pub shuffle_end: f64,
+    /// Bytes moved source→mapper (including replication copies).
+    pub push_bytes: f64,
+    /// Bytes moved mapper→reducer.
+    pub shuffle_bytes: f64,
+    /// Bytes written as final output (including replication copies).
+    pub output_bytes: f64,
+    pub n_map_tasks: usize,
+    pub n_reduce_tasks: usize,
+    /// Speculative copies launched / won.
+    pub spec_launched: usize,
+    pub spec_won: usize,
+    /// Tasks executed on a non-plan node via work stealing.
+    pub stolen: usize,
+    /// Input / intermediate / output record counts (conservation checks).
+    pub input_records: usize,
+    pub intermediate_records: usize,
+    pub output_records: usize,
+}
+
+impl JobMetrics {
+    /// The three stacked segments Fig 9 reports (shuffle overlaps map and
+    /// reduce under Hadoop semantics, so the paper shows push, overlapped
+    /// map/shuffle, and overlapped shuffle/reduce).
+    pub fn fig9_segments(&self) -> (f64, f64, f64) {
+        let push = self.push_end;
+        let map_shuffle = (self.map_end - self.push_end).max(0.0);
+        let rest = (self.makespan - self.map_end).max(0.0);
+        (push, map_shuffle, rest)
+    }
+
+    /// Four-phase breakdown (for model-comparison reporting).
+    pub fn phase_breakdown(&self) -> (f64, f64, f64, f64) {
+        let push = self.push_end;
+        let map = (self.map_end - self.push_end).max(0.0);
+        let shuffle = (self.shuffle_end - self.map_end).max(0.0);
+        let reduce = (self.makespan - self.shuffle_end.max(self.map_end)).max(0.0);
+        (push, map, shuffle, reduce)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_sum_to_makespan() {
+        let m = JobMetrics {
+            makespan: 100.0,
+            push_end: 20.0,
+            map_end: 55.0,
+            shuffle_end: 80.0,
+            ..Default::default()
+        };
+        let (a, b, c) = m.fig9_segments();
+        assert_eq!(a + b + c, 100.0);
+        let (p, mm, s, r) = m.phase_breakdown();
+        assert!((p + mm + s + r - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapping_phases_clamp() {
+        // Pipelined runs can have map_end > shuffle_end (stragglers).
+        let m = JobMetrics {
+            makespan: 50.0,
+            push_end: 10.0,
+            map_end: 45.0,
+            shuffle_end: 40.0,
+            ..Default::default()
+        };
+        let (_, _, s, r) = m.phase_breakdown();
+        assert_eq!(s, 0.0);
+        assert_eq!(r, 5.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The plan-enforcing MapReduce engine — our substitute for the paper's
+//! modified Hadoop 1.0.1 running on the `tc`-emulated PlanetLab testbed
+//! (§3.1–3.2). Virtual-time fluid simulation of transfers and compute,
+//! real execution of map/reduce functions over real records.
+
+pub mod executor;
+pub mod fluid;
+pub mod job;
+pub mod metrics;
+pub mod partitioner;
+
+pub use executor::{run_job, JobResult};
+pub use job::{JobConfig, MapReduceApp, Record};
+pub use metrics::JobMetrics;
+pub use partitioner::Partitioner;

@@ -1,0 +1,179 @@
+//! The bucketized fractional partitioner of §3.1.3.
+//!
+//! Hadoop's default partitioner hashes intermediate keys into exactly
+//! `|R|` partitions — which can only express the uniform shuffle. The
+//! paper's modification hashes into `n_buckets ≫ |R|` small buckets and
+//! assigns each reducer a *number of buckets proportional to its `y_k`
+//! fraction* (largest-remainder apportionment here), realizing any
+//! execution plan's `{y_k}` while preserving the one-reducer-per-key
+//! semantics (eq 3): a key's bucket — hence its reducer — is a pure
+//! function of the key, identical at every mapper.
+
+/// FNV-1a 64-bit: deterministic, platform-independent key hashing.
+pub fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Maps intermediate keys → buckets → reducers per the plan's `y`.
+#[derive(Debug, Clone)]
+pub struct Partitioner {
+    bucket_owner: Vec<usize>,
+    n_reducers: usize,
+}
+
+impl Partitioner {
+    /// Build from the key-space fractions `y` (must sum to ~1).
+    pub fn from_fractions(y: &[f64], n_buckets: usize) -> Partitioner {
+        assert!(!y.is_empty());
+        assert!(n_buckets >= y.len(), "need at least one bucket per reducer");
+        let sum: f64 = y.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "y must sum to 1, got {sum}");
+
+        // Largest-remainder apportionment of buckets to reducers.
+        let quotas: Vec<f64> = y.iter().map(|f| f * n_buckets as f64).collect();
+        let mut counts: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+        let assigned: usize = counts.iter().sum();
+        let mut remainders: Vec<(usize, f64)> = quotas
+            .iter()
+            .enumerate()
+            .map(|(k, q)| (k, q - q.floor()))
+            .collect();
+        remainders.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for i in 0..(n_buckets - assigned) {
+            counts[remainders[i % remainders.len()].0] += 1;
+        }
+
+        // Interleave ownership round-robin-by-share so that consecutive
+        // buckets spread across reducers (mirrors hash uniformity).
+        let mut bucket_owner = Vec::with_capacity(n_buckets);
+        let mut remaining = counts.clone();
+        while bucket_owner.len() < n_buckets {
+            // Pick the reducer with the largest remaining/total ratio.
+            let k = (0..y.len())
+                .filter(|&k| remaining[k] > 0)
+                .max_by(|&a, &b| {
+                    let ra = remaining[a] as f64 / (counts[a].max(1)) as f64;
+                    let rb = remaining[b] as f64 / (counts[b].max(1)) as f64;
+                    ra.partial_cmp(&rb).unwrap().then(b.cmp(&a))
+                })
+                .expect("buckets remain but no reducer has quota");
+            bucket_owner.push(k);
+            remaining[k] -= 1;
+        }
+        Partitioner { bucket_owner, n_reducers: y.len() }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.bucket_owner.len()
+    }
+
+    pub fn n_reducers(&self) -> usize {
+        self.n_reducers
+    }
+
+    /// Bucket of a grouping key.
+    pub fn bucket(&self, group_key: &str) -> usize {
+        (fnv1a(group_key) % self.bucket_owner.len() as u64) as usize
+    }
+
+    /// Reducer that owns a grouping key.
+    pub fn reducer(&self, group_key: &str) -> usize {
+        self.bucket_owner[self.bucket(group_key)]
+    }
+
+    /// Number of buckets owned by each reducer.
+    pub fn bucket_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_reducers];
+        for &o in &self.bucket_owner {
+            counts[o] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::{ensure, qcheck, Config};
+
+    #[test]
+    fn uniform_fractions_even_buckets() {
+        let p = Partitioner::from_fractions(&[0.25; 4], 64);
+        assert_eq!(p.bucket_counts(), vec![16; 4]);
+    }
+
+    #[test]
+    fn fractions_respected_paper_example() {
+        // §3.1.3's example: R1 gets 2/3 of keys, R2 gets 1/3.
+        let p = Partitioner::from_fractions(&[2.0 / 3.0, 1.0 / 3.0], 512);
+        let counts = p.bucket_counts();
+        assert!((counts[0] as f64 / 512.0 - 2.0 / 3.0).abs() < 0.01, "{counts:?}");
+    }
+
+    #[test]
+    fn zero_fraction_reducer_gets_nothing() {
+        let p = Partitioner::from_fractions(&[1.0, 0.0], 128);
+        assert_eq!(p.bucket_counts(), vec![128, 0]);
+        for key in ["a", "b", "c", "hello"] {
+            assert_eq!(p.reducer(key), 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_and_consistent_across_mappers() {
+        // Same construction → same key routing (the eq-3 requirement:
+        // every mapper must use the same hash function).
+        let p1 = Partitioner::from_fractions(&[0.5, 0.3, 0.2], 256);
+        let p2 = Partitioner::from_fractions(&[0.5, 0.3, 0.2], 256);
+        for i in 0..1000 {
+            let key = format!("key-{i}");
+            assert_eq!(p1.reducer(&key), p2.reducer(&key));
+        }
+    }
+
+    #[test]
+    fn realized_key_fractions_approach_y() {
+        let y = [0.6, 0.25, 0.15];
+        let p = Partitioner::from_fractions(&y, 512);
+        let mut counts = [0usize; 3];
+        let n = 50_000;
+        for i in 0..n {
+            counts[p.reducer(&format!("user-{i}"))] += 1;
+        }
+        for k in 0..3 {
+            let realized = counts[k] as f64 / n as f64;
+            assert!(
+                (realized - y[k]).abs() < 0.03,
+                "reducer {k}: realized {realized} vs target {}",
+                y[k]
+            );
+        }
+    }
+
+    #[test]
+    fn qcheck_all_buckets_assigned_and_totals_match() {
+        qcheck(Config::default().cases(100), "partitioner apportionment", |rng| {
+            let r = rng.range(1, 9);
+            let mut y: Vec<f64> = (0..r).map(|_| rng.exponential(1.0)).collect();
+            let s: f64 = y.iter().sum();
+            y.iter_mut().for_each(|v| *v /= s);
+            let n_buckets = rng.range(r, 1024);
+            let p = Partitioner::from_fractions(&y, n_buckets);
+            let counts = p.bucket_counts();
+            ensure(counts.iter().sum::<usize>() == n_buckets, "bucket total")?;
+            for (k, &c) in counts.iter().enumerate() {
+                let target = y[k] * n_buckets as f64;
+                ensure(
+                    (c as f64 - target).abs() <= 1.0 + 1e-9,
+                    format!("reducer {k}: {c} buckets vs quota {target}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

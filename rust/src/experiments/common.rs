@@ -1,0 +1,132 @@
+//! Shared experiment machinery: scheme registry, engine-run helpers,
+//! result capture.
+
+use crate::apps::SyntheticApp;
+use crate::engine::job::{JobConfig, MapReduceApp, Record};
+use crate::engine::{run_job, JobMetrics};
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::{evaluate, AppModel, PhaseBreakdown};
+use crate::model::plan::Plan;
+use crate::optimizer::{
+    AlternatingLp, E2ePush, E2eShuffle, Myopic, PlanOptimizer, Uniform,
+};
+use crate::platform::Topology;
+use crate::util::rng::Pcg64;
+
+/// The model-experiment schemes of Figs 5–8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    Uniform,
+    MyopicMulti,
+    E2ePush,
+    E2eShuffle,
+    E2eMulti,
+}
+
+impl Scheme {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::Uniform => "uniform",
+            Scheme::MyopicMulti => "myopic multi",
+            Scheme::E2ePush => "e2e push",
+            Scheme::E2eShuffle => "e2e shuffle",
+            Scheme::E2eMulti => "e2e multi",
+        }
+    }
+
+    pub fn plan(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        match self {
+            Scheme::Uniform => Uniform.optimize(topo, app, cfg),
+            Scheme::MyopicMulti => Myopic.optimize(topo, app, cfg),
+            Scheme::E2ePush => E2ePush.optimize(topo, app, cfg),
+            Scheme::E2eShuffle => E2eShuffle.optimize(topo, app, cfg),
+            Scheme::E2eMulti => AlternatingLp::default().optimize(topo, app, cfg),
+        }
+    }
+}
+
+/// One scheme's evaluated breakdown.
+#[derive(Debug, Clone)]
+pub struct SchemeResult {
+    pub scheme: Scheme,
+    pub breakdown: PhaseBreakdown,
+}
+
+/// Evaluate a set of schemes under the model.
+pub fn run_schemes(
+    topo: &Topology,
+    app: AppModel,
+    cfg: BarrierConfig,
+    schemes: &[Scheme],
+) -> Vec<SchemeResult> {
+    schemes
+        .iter()
+        .map(|&scheme| {
+            let plan = scheme.plan(topo, app, cfg);
+            let tl = evaluate(topo, app, cfg, &plan);
+            SchemeResult { scheme, breakdown: tl.breakdown() }
+        })
+        .collect()
+}
+
+/// Generate per-source synthetic records of `bytes_per_source` each
+/// (fixed-size records, hash-uniform keys) — the §3.2 synthetic job's
+/// input.
+pub fn synthetic_inputs(
+    n_sources: usize,
+    bytes_per_source: usize,
+    seed: u64,
+) -> Vec<Vec<Record>> {
+    crate::data::per_source(n_sources, bytes_per_source, seed, |src, bytes, rng| {
+        let mut out = Vec::new();
+        let mut total = 0usize;
+        let mut i = 0u64;
+        while total < bytes {
+            let rec = Record::new(
+                format!("k{src:02}-{i:08}-{:04x}", rng.next_below(65536)),
+                "v".repeat(40),
+            );
+            total += rec.size();
+            out.push(rec);
+            i += 1;
+        }
+        out
+    })
+}
+
+/// Run the engine `repeats` times with distinct data seeds, returning
+/// per-run metrics (the 95% CI machinery of Figs 9–12).
+pub fn run_engine_repeats(
+    topo: &Topology,
+    plan: &Plan,
+    app: &dyn MapReduceApp,
+    config: &JobConfig,
+    inputs_for_seed: &dyn Fn(u64) -> Vec<Vec<Record>>,
+    repeats: usize,
+) -> Vec<JobMetrics> {
+    (0..repeats)
+        .map(|rep| {
+            let inputs = inputs_for_seed(0xDA7A + rep as u64);
+            run_job(topo, plan, app, config, &inputs).metrics
+        })
+        .collect()
+}
+
+/// Measure the synthetic app's α on a probe input (profiling, §2.1).
+pub fn probe_alpha(alpha: f64) -> f64 {
+    let app = SyntheticApp::new(alpha);
+    let recs: Vec<Record> = (0..2000)
+        .map(|i| Record::new(format!("k{i:06}"), "v".repeat(40)))
+        .collect();
+    crate::apps::measure_alpha(&app, &recs)
+}
+
+/// Deterministic per-experiment RNG.
+pub fn exp_rng(tag: &str) -> Pcg64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    Pcg64::new(h)
+}

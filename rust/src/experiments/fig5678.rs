@@ -1,0 +1,220 @@
+//! The model-experiment figures:
+//!
+//! * **Fig 5** — end-to-end vs myopic (multi-phase both), per-phase
+//!   stacked times, α ∈ {0.1, 1, 10}, 8-DC environment.
+//! * **Fig 6** — single-phase (e2e push / e2e shuffle) vs multi-phase.
+//! * **Fig 7** — barrier relaxation: optimized makespan per barrier
+//!   configuration normalized to the all-global optimum.
+//! * **Fig 8** — environment sweep (1/2/4/8 DCs): myopic and e2e
+//!   makespans normalized to uniform.
+
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::{makespan, AppModel};
+use crate::optimizer::{AlternatingLp, PlanOptimizer};
+use crate::platform::{build_env, EnvKind};
+use crate::util::table::{fmt_pct, fmt_secs, Table};
+
+use super::common::{run_schemes, Scheme};
+
+pub const ALPHAS: [f64; 3] = [0.1, 1.0, 10.0];
+
+fn scheme_table(title: &str, schemes: &[Scheme]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["alpha", "scheme", "push", "map", "shuffle", "reduce", "total", "vs uniform"],
+    )
+    .label_first();
+    let topo = build_env(EnvKind::Global8);
+    let cfg = BarrierConfig::ALL_GLOBAL;
+    for &alpha in &ALPHAS {
+        let app = AppModel::new(alpha);
+        let results = run_schemes(&topo, app, cfg, schemes);
+        let uniform_total = results
+            .iter()
+            .find(|r| r.scheme == Scheme::Uniform)
+            .map(|r| r.breakdown.total())
+            .unwrap();
+        for r in &results {
+            let b = r.breakdown;
+            let red = 1.0 - b.total() / uniform_total;
+            t.add_row(vec![
+                format!("{alpha}"),
+                r.scheme.label().into(),
+                fmt_secs(b.push),
+                fmt_secs(b.map),
+                fmt_secs(b.shuffle),
+                fmt_secs(b.reduce),
+                fmt_secs(b.total()),
+                if r.scheme == Scheme::Uniform {
+                    "—".into()
+                } else {
+                    format!("-{}", fmt_pct(red))
+                },
+            ]);
+        }
+    }
+    t
+}
+
+pub fn run_fig5() -> Vec<Table> {
+    vec![scheme_table(
+        "Fig 5 — uniform vs myopic multi-phase vs e2e multi-phase (8-DC, G-G-G)",
+        &[Scheme::Uniform, Scheme::MyopicMulti, Scheme::E2eMulti],
+    )]
+}
+
+pub fn run_fig6() -> Vec<Table> {
+    vec![scheme_table(
+        "Fig 6 — single-phase vs multi-phase end-to-end optimization (8-DC, G-G-G)",
+        &[
+            Scheme::Uniform,
+            Scheme::E2ePush,
+            Scheme::E2eShuffle,
+            Scheme::E2eMulti,
+        ],
+    )]
+}
+
+pub fn run_fig7() -> Vec<Table> {
+    let topo = build_env(EnvKind::Global8);
+    let mut t = Table::new(
+        "Fig 7 — optimized makespan per barrier configuration, normalized to G-G-G optimum",
+        &["alpha", "boundary relaxed", "config", "makespan s", "normalized"],
+    )
+    .label_first();
+    for &alpha in &ALPHAS {
+        let app = AppModel::new(alpha);
+        let base_cfg = BarrierConfig::ALL_GLOBAL;
+        let opt = AlternatingLp::default();
+        let base_plan = opt.optimize(&topo, app, base_cfg);
+        let base = makespan(&topo, app, base_cfg, &base_plan);
+        for (label, cfg) in BarrierConfig::fig7_set() {
+            let plan = opt.optimize(&topo, app, cfg);
+            let ms = makespan(&topo, app, cfg, &plan);
+            t.add_row(vec![
+                format!("{alpha}"),
+                label.into(),
+                cfg.label(),
+                fmt_secs(ms),
+                format!("{:.3}", ms / base),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+pub fn run_fig8() -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 8 — myopic and e2e vs uniform across network environments (G-G-G)",
+        &["env", "alpha", "scheme", "makespan s", "normalized to uniform"],
+    )
+    .label_first();
+    for kind in EnvKind::all() {
+        let topo = build_env(kind);
+        for &alpha in &ALPHAS {
+            let app = AppModel::new(alpha);
+            let cfg = BarrierConfig::ALL_GLOBAL;
+            let results = run_schemes(
+                &topo,
+                app,
+                cfg,
+                &[Scheme::Uniform, Scheme::MyopicMulti, Scheme::E2eMulti],
+            );
+            let uniform_total = results[0].breakdown.total();
+            for r in &results {
+                t.add_row(vec![
+                    kind.label().into(),
+                    format!("{alpha}"),
+                    r.scheme.label().into(),
+                    fmt_secs(r.breakdown.total()),
+                    format!("{:.3}", r.breakdown.total() / uniform_total),
+                ]);
+            }
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::plan::Plan;
+
+    /// Fig 5 headline: e2e multi ≪ myopic ≪/≈ uniform on the 8-DC env.
+    #[test]
+    fn fig5_ordering_holds() {
+        let topo = build_env(EnvKind::Global8);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        for &alpha in &ALPHAS {
+            let app = AppModel::new(alpha);
+            let res = run_schemes(
+                &topo,
+                app,
+                cfg,
+                &[Scheme::Uniform, Scheme::MyopicMulti, Scheme::E2eMulti],
+            );
+            let uni = res[0].breakdown.total();
+            let myo = res[1].breakdown.total();
+            let e2e = res[2].breakdown.total();
+            assert!(e2e <= myo + 1e-6, "α={alpha}: e2e {e2e} vs myopic {myo}");
+            assert!(e2e < 0.5 * uni, "α={alpha}: expect ≥50% reduction, got e2e {e2e} vs uniform {uni}");
+        }
+    }
+
+    /// Fig 8 headline: optimization benefit grows with distribution;
+    /// in the homogeneous local DC uniform is already near-optimal.
+    #[test]
+    fn fig8_benefit_grows_with_heterogeneity() {
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let app = AppModel::new(1.0);
+
+        let local = build_env(EnvKind::LocalDataCenter);
+        let uni_local =
+            makespan(&local, app, cfg, &Plan::uniform(8, 8, 8));
+        let e2e_local = makespan(
+            &local,
+            app,
+            cfg,
+            &AlternatingLp::default().optimize(&local, app, cfg),
+        );
+        let local_gain = 1.0 - e2e_local / uni_local;
+
+        let global = build_env(EnvKind::Global8);
+        let uni_g = makespan(&global, app, cfg, &Plan::uniform(8, 8, 8));
+        let e2e_g = makespan(
+            &global,
+            app,
+            cfg,
+            &AlternatingLp::default().optimize(&global, app, cfg),
+        );
+        let global_gain = 1.0 - e2e_g / uni_g;
+
+        assert!(
+            global_gain > local_gain + 0.2,
+            "global gain {global_gain} should far exceed local gain {local_gain}"
+        );
+        assert!(local_gain < 0.3, "uniform should be near-optimal locally");
+    }
+
+    /// Fig 7 headline: relaxing barriers never hurts the optimum.
+    #[test]
+    fn fig7_relaxation_monotone() {
+        let topo = build_env(EnvKind::Global4);
+        let app = AppModel::new(1.0);
+        let opt = AlternatingLp { random_starts: 1, ..Default::default() };
+        let base = makespan(
+            &topo,
+            app,
+            BarrierConfig::ALL_GLOBAL,
+            &opt.optimize(&topo, app, BarrierConfig::ALL_GLOBAL),
+        );
+        for (_, cfg) in BarrierConfig::fig7_set() {
+            let ms = makespan(&topo, app, cfg, &opt.optimize(&topo, app, cfg));
+            assert!(
+                ms <= base * 1.01,
+                "{}: {ms} should not exceed G-G-G optimum {base}",
+                cfg.label()
+            );
+        }
+    }
+}

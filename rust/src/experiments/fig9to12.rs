@@ -1,0 +1,311 @@
+//! The engine (testbed) experiments:
+//!
+//! * **Fig 9**  — uniform plan vs vanilla Hadoop vs our optimized plan,
+//!   three real applications, per-phase bars + 95% CIs.
+//! * **Fig 10** — Hadoop's dynamic mechanisms (speculation, stealing)
+//!   applied atop the optimized static plan.
+//! * **Fig 11** — the same mechanisms atop the competitive Hadoop
+//!   baseline plan (locality push + uniform shuffle).
+//! * **Fig 12** — HDFS replication across slow wide-area links.
+//!
+//! "Vanilla Hadoop" = locality-hinted push (each source → most local
+//! mapper), uniform shuffle, coarse pipelining (G-P-L is the *model*
+//! image of its behaviour), dynamic mechanisms on (§4.6.1).
+
+use crate::apps::{measure_alpha, InvertedIndex, Sessionize, WordCount};
+use crate::data::{corpus, fwdindex, weblog};
+use crate::engine::job::{JobConfig, MapReduceApp, Record};
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
+use crate::optimizer::{AlternatingLp, PlanOptimizer};
+use crate::platform::{build_env, EnvKind, Topology};
+use crate::util::stats::Summary;
+use crate::util::table::{fmt_secs, Table};
+
+use super::common::run_engine_repeats;
+
+/// Input volume per source (scaled from the paper's GB-scale datasets).
+pub const BYTES_PER_SOURCE: usize = 1 << 21; // 2 MiB
+pub const REPEATS: usize = 3;
+
+pub enum AppKind {
+    WordCount,
+    Sessionize,
+    InvertedIndex,
+}
+
+impl AppKind {
+    pub fn all() -> [AppKind; 3] {
+        [AppKind::WordCount, AppKind::Sessionize, AppKind::InvertedIndex]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AppKind::WordCount => "Word Count",
+            AppKind::Sessionize => "Sessionization",
+            AppKind::InvertedIndex => "Full Inverted Index",
+        }
+    }
+
+    pub fn app(&self) -> Box<dyn MapReduceApp> {
+        match self {
+            AppKind::WordCount => Box::new(WordCount),
+            AppKind::Sessionize => Box::new(Sessionize),
+            AppKind::InvertedIndex => Box::new(InvertedIndex),
+        }
+    }
+
+    pub fn inputs(&self, n_sources: usize, bytes: usize, seed: u64) -> Vec<Vec<Record>> {
+        match self {
+            AppKind::WordCount => crate::data::per_source(n_sources, bytes, seed, |_, b, rng| {
+                corpus::generate(corpus::CorpusConfig::default(), b, rng)
+            }),
+            AppKind::Sessionize => crate::data::per_source(n_sources, bytes, seed, |_, b, rng| {
+                weblog::generate(weblog::WeblogConfig::default(), b, rng)
+            }),
+            AppKind::InvertedIndex => {
+                crate::data::per_source(n_sources, bytes, seed, |_, b, rng| {
+                    fwdindex::generate(corpus::CorpusConfig::default(), b, rng)
+                })
+            }
+        }
+    }
+
+    /// Profile α on a sample split (§2.1: "determined by profiling").
+    pub fn profiled_alpha(&self) -> f64 {
+        let sample = self.inputs(1, 1 << 20, 0xA1FA)
+            .pop()
+            .unwrap();
+        measure_alpha(self.app().as_ref(), &sample)
+    }
+}
+
+/// The three execution setups of Fig 9.
+fn plans_for(topo: &Topology, alpha: f64) -> [(String, Plan, JobConfig); 3] {
+    let app_model = AppModel::new(alpha);
+    // The model uses G-P-L to capture Hadoop's behaviour (§4.6.1).
+    let cfg = BarrierConfig::HADOOP;
+    let uniform = Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let hadoop_plan = Plan::local_push(topo);
+    let optimized = AlternatingLp::default().optimize(topo, app_model, cfg);
+    [
+        ("uniform".into(), uniform, JobConfig::optimized()),
+        ("vanilla hadoop".into(), hadoop_plan, JobConfig::vanilla_hadoop()),
+        ("optimized".into(), optimized, JobConfig::optimized()),
+    ]
+}
+
+pub fn run_fig9() -> Vec<Table> {
+    let topo = build_env(EnvKind::Global8);
+    let mut t = Table::new(
+        "Fig 9 — engine makespan: uniform vs vanilla Hadoop vs optimized plan (8-node emulated PlanetLab)",
+        &["app", "alpha", "scheme", "push", "map+shuffle", "shuffle+reduce", "makespan s", "95% CI"],
+    )
+    .label_first();
+    for kind in AppKind::all() {
+        let alpha = kind.profiled_alpha();
+        let app = kind.app();
+        for (name, plan, jc) in plans_for(&topo, alpha) {
+            let runs = run_engine_repeats(
+                &topo,
+                &plan,
+                app.as_ref(),
+                &jc,
+                &|seed| kind.inputs(8, BYTES_PER_SOURCE, seed),
+                REPEATS,
+            );
+            let makespans: Vec<f64> = runs.iter().map(|m| m.makespan).collect();
+            let s = Summary::of(&makespans);
+            let segs: Vec<(f64, f64, f64)> = runs.iter().map(|m| m.fig9_segments()).collect();
+            let avg = |f: fn(&(f64, f64, f64)) -> f64| {
+                segs.iter().map(f).sum::<f64>() / segs.len() as f64
+            };
+            t.add_row(vec![
+                kind.label().into(),
+                format!("{alpha:.2}"),
+                name,
+                fmt_secs(avg(|s| s.0)),
+                fmt_secs(avg(|s| s.1)),
+                fmt_secs(avg(|s| s.2)),
+                fmt_secs(s.mean),
+                format!("±{}", fmt_secs(s.ci95)),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+fn dynamics_table(title: &str, base: &str) -> Table {
+    let topo = build_env(EnvKind::Global8);
+    let mut t = Table::new(
+        title,
+        &["app", "mechanisms", "makespan s", "95% CI"],
+    )
+    .label_first();
+    for kind in AppKind::all() {
+        let alpha = kind.profiled_alpha();
+        let app = kind.app();
+        let plan = if base == "optimized" {
+            AlternatingLp::default().optimize(&topo, AppModel::new(alpha), BarrierConfig::HADOOP)
+        } else {
+            Plan::local_push(&topo)
+        };
+        for (mech, spec, steal) in [
+            ("static", false, false),
+            ("+speculation", true, false),
+            ("+spec+steal", true, true),
+        ] {
+            let jc = JobConfig {
+                local_only: !(spec || steal),
+                speculation: spec,
+                stealing: steal,
+                ..JobConfig::default()
+            };
+            let runs = run_engine_repeats(
+                &topo,
+                &plan,
+                app.as_ref(),
+                &jc,
+                &|seed| kind.inputs(8, BYTES_PER_SOURCE, seed),
+                REPEATS,
+            );
+            let makespans: Vec<f64> = runs.iter().map(|m| m.makespan).collect();
+            let s = Summary::of(&makespans);
+            t.add_row(vec![
+                kind.label().into(),
+                mech.into(),
+                fmt_secs(s.mean),
+                format!("±{}", fmt_secs(s.ci95)),
+            ]);
+        }
+    }
+    t
+}
+
+pub fn run_fig10() -> Vec<Table> {
+    vec![dynamics_table(
+        "Fig 10 — dynamic mechanisms atop the optimized static plan",
+        "optimized",
+    )]
+}
+
+pub fn run_fig11() -> Vec<Table> {
+    vec![dynamics_table(
+        "Fig 11 — dynamic mechanisms atop the Hadoop baseline plan",
+        "hadoop",
+    )]
+}
+
+pub fn run_fig12() -> Vec<Table> {
+    let topo = build_env(EnvKind::Global8);
+    let mut t = Table::new(
+        "Fig 12 — HDFS replication across wide-area links (vanilla Hadoop execution)",
+        &["app", "replication", "push", "makespan s", "95% CI"],
+    )
+    .label_first();
+    for kind in AppKind::all() {
+        let app = kind.app();
+        let plan = Plan::local_push(&topo);
+        for repl in [1usize, 2, 3] {
+            let jc = JobConfig { replication: repl, ..JobConfig::vanilla_hadoop() };
+            let runs = run_engine_repeats(
+                &topo,
+                &plan,
+                app.as_ref(),
+                &jc,
+                &|seed| kind.inputs(8, BYTES_PER_SOURCE, seed),
+                REPEATS,
+            );
+            let makespans: Vec<f64> = runs.iter().map(|m| m.makespan).collect();
+            let push: f64 =
+                runs.iter().map(|m| m.push_end).sum::<f64>() / runs.len() as f64;
+            let s = Summary::of(&makespans);
+            t.add_row(vec![
+                kind.label().into(),
+                format!("{repl}"),
+                fmt_secs(push),
+                fmt_secs(s.mean),
+                format!("±{}", fmt_secs(s.ci95)),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Profiled α ordering matches the paper's three applications.
+    #[test]
+    fn profiled_alphas_ordered() {
+        let wc = AppKind::WordCount.profiled_alpha();
+        let se = AppKind::Sessionize.profiled_alpha();
+        let ii = AppKind::InvertedIndex.profiled_alpha();
+        assert!(wc < se && se < ii, "wc={wc} se={se} ii={ii}");
+    }
+
+    /// Fig 9 headline (shape): optimized beats vanilla Hadoop, which
+    /// beats uniform, for at least two of the three applications.
+    #[test]
+    fn fig9_optimized_beats_hadoop_beats_uniform() {
+        let topo = build_env(EnvKind::Global8);
+        let mut wins_opt = 0;
+        let mut wins_hadoop = 0;
+        for kind in AppKind::all() {
+            let alpha = kind.profiled_alpha();
+            let app = kind.app();
+            let mut ms = Vec::new();
+            for (_, plan, jc) in plans_for(&topo, alpha) {
+                let runs = run_engine_repeats(
+                    &topo,
+                    &plan,
+                    app.as_ref(),
+                    &jc,
+                    &|seed| kind.inputs(8, 1 << 20, seed),
+                    1,
+                );
+                ms.push(runs[0].makespan);
+            }
+            let (uni, hadoop, opt) = (ms[0], ms[1], ms[2]);
+            if opt < hadoop {
+                wins_opt += 1;
+            }
+            if hadoop < uni {
+                wins_hadoop += 1;
+            }
+        }
+        assert!(wins_opt >= 2, "optimized should beat vanilla Hadoop on ≥2/3 apps");
+        assert!(wins_hadoop >= 2, "vanilla Hadoop should beat uniform on ≥2/3 apps");
+    }
+
+    /// Fig 12 headline: wide-area replication raises push cost and
+    /// overall makespan.
+    #[test]
+    fn fig12_replication_hurts() {
+        let topo = build_env(EnvKind::Global8);
+        let kind = AppKind::WordCount;
+        let app = kind.app();
+        let plan = Plan::local_push(&topo);
+        let mut makespans = Vec::new();
+        for repl in [1usize, 3] {
+            let jc = JobConfig { replication: repl, ..JobConfig::vanilla_hadoop() };
+            let runs = run_engine_repeats(
+                &topo,
+                &plan,
+                app.as_ref(),
+                &jc,
+                &|seed| kind.inputs(8, 1 << 20, seed),
+                1,
+            );
+            makespans.push(runs[0].makespan);
+        }
+        assert!(
+            makespans[1] > makespans[0] * 1.2,
+            "repl=3 {} should be ≥20% slower than repl=1 {}",
+            makespans[1],
+            makespans[0]
+        );
+    }
+}

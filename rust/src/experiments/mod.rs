@@ -1,0 +1,66 @@
+//! Regenerates every table and figure of the paper's evaluation.
+//!
+//! | id     | content                                         | module |
+//! |--------|--------------------------------------------------|--------|
+//! | table1 | measured inter-cluster bandwidths               | [`table1`] |
+//! | fig4   | model validation (R², slope)                    | [`fig4`] |
+//! | fig5   | uniform vs myopic vs e2e multi                  | [`fig5678`] |
+//! | fig6   | single-phase vs multi-phase                     | [`fig5678`] |
+//! | fig7   | barrier relaxation                              | [`fig5678`] |
+//! | fig8   | environment sweep                               | [`fig5678`] |
+//! | fig9   | engine: 3 apps, uniform / hadoop / optimized    | [`fig9to12`] |
+//! | fig10  | dynamics atop optimized plan                    | [`fig9to12`] |
+//! | fig11  | dynamics atop hadoop baseline                   | [`fig9to12`] |
+//! | fig12  | wide-area replication                           | [`fig9to12`] |
+
+pub mod common;
+pub mod fig4;
+pub mod fig5678;
+pub mod fig9to12;
+pub mod table1;
+
+use crate::util::table::Table;
+use std::path::Path;
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 10] = [
+    "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str) -> Option<Vec<Table>> {
+    Some(match id {
+        "table1" => table1::run(),
+        "fig4" => fig4::run().tables,
+        "fig5" => fig5678::run_fig5(),
+        "fig6" => fig5678::run_fig6(),
+        "fig7" => fig5678::run_fig7(),
+        "fig8" => fig5678::run_fig8(),
+        "fig9" => fig9to12::run_fig9(),
+        "fig10" => fig9to12::run_fig10(),
+        "fig11" => fig9to12::run_fig11(),
+        "fig12" => fig9to12::run_fig12(),
+        _ => return None,
+    })
+}
+
+/// Run, print, and persist CSVs under `results/`.
+pub fn run_and_report(id: &str, results_dir: &Path) -> bool {
+    match run(id) {
+        Some(tables) => {
+            for (i, t) in tables.iter().enumerate() {
+                println!("{}", t.render());
+                let name = if tables.len() == 1 {
+                    id.to_string()
+                } else {
+                    format!("{id}_{i}")
+                };
+                if let Err(e) = t.write_csv(results_dir, &name) {
+                    eprintln!("warning: could not write CSV for {id}: {e}");
+                }
+            }
+            true
+        }
+        None => false,
+    }
+}

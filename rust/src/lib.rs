@@ -1,0 +1,41 @@
+//! # mrperf — geo-distributed MapReduce modeling, optimization & execution
+//!
+//! A reproduction of *"Optimizing MapReduce for Highly Distributed
+//! Environments"* (Heintz, Chandra, Sitaraman; 2012) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **[`platform`]** — the tripartite source/mapper/reducer platform
+//!   model, PlanetLab measurement dataset (Table 1) and the evaluation's
+//!   four network environments (§4.1).
+//! * **[`model`]** — execution plans (eqs 1–3), barrier semantics, the
+//!   closed-form makespan model (eqs 4–14) and its smooth relaxation.
+//! * **[`solver`]** — from-scratch LP (simplex) and MIP (branch & bound)
+//!   with the paper's piecewise-linear bilinear linearization (§2.3).
+//! * **[`optimizer`]** — the execution-plan optimizers the evaluation
+//!   compares: uniform, myopic, single-phase, end-to-end multi-phase
+//!   (alternating LP and PWL-MIP), and a gradient optimizer backed by the
+//!   AOT-compiled JAX/Pallas artifact via PJRT.
+//! * **[`engine`]** — a plan-enforcing MapReduce runtime (the paper's
+//!   modified Hadoop, §3.1) over a virtual-time emulated WAN, with
+//!   speculative execution and work stealing (§4.6.4).
+//! * **[`apps`]**/**[`data`]** — the evaluation applications (Word Count,
+//!   Sessionization, Full Inverted Index, synthetic-α) and seeded
+//!   workload generators.
+//! * **[`runtime`]** — the PJRT client wrapper that loads
+//!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py`.
+//! * **[`experiments`]** — regenerates every table and figure of the
+//!   paper's evaluation (Table 1, Figs 4–12).
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! rust binary is self-contained afterwards.
+
+pub mod apps;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod model;
+pub mod optimizer;
+pub mod platform;
+pub mod runtime;
+pub mod solver;
+pub mod util;

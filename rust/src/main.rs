@@ -1,0 +1,341 @@
+//! `mrperf` — geo-distributed MapReduce planner + engine CLI.
+//!
+//! ```text
+//! mrperf experiment <id>|all          regenerate a paper table/figure
+//! mrperf plan [options]               compute an optimized execution plan
+//! mrperf run [options]                execute a job on the emulated WAN
+//! mrperf validate                     model-vs-engine validation summary
+//! mrperf list                         available experiments / envs / apps
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use mrperf::engine::job::JobConfig;
+use mrperf::engine::run_job;
+use mrperf::experiments;
+use mrperf::model::barrier::{Barrier, BarrierConfig};
+use mrperf::model::makespan::{evaluate, AppModel};
+use mrperf::model::plan::Plan;
+use mrperf::optimizer::{
+    AlternatingLp, E2ePush, E2eShuffle, Myopic, PlanOptimizer, Uniform,
+};
+use mrperf::platform::{build_env, EnvKind};
+use mrperf::util::cli;
+use mrperf::util::logger::{self, Level};
+use mrperf::util::table::{fmt_secs, Table};
+
+const USAGE: &str = "\
+mrperf — geo-distributed MapReduce modeling, optimization & execution
+
+USAGE:
+  mrperf experiment <table1|fig4..fig12|all> [--results DIR]
+  mrperf plan  [--env ENV | --topology FILE.topo] [--alpha A] [--barriers G-P-L] [--optimizer NAME]
+  mrperf run   [--env ENV | --topology FILE.topo] [--app APP] [--alpha A] [--optimizer NAME]
+               [--bytes-per-source N] [--speculation] [--stealing] [--replication R]
+  mrperf validate
+  mrperf list
+
+ENV:        local-dc | 2-dc-intra | 4-dc-global | 8-dc-global (default)
+APP:        wordcount | sessionize | inverted-index | synthetic (default)
+OPTIMIZER:  uniform | myopic | e2e-push | e2e-shuffle | e2e-multi (default)
+            | gradient (pure-rust) | artifact (AOT JAX/Pallas via PJRT)
+BARRIERS:   three of G|L|P joined by '-', e.g. G-P-L (default), G-G-G, P-P-P
+";
+
+fn parse_env(name: &str) -> Option<EnvKind> {
+    EnvKind::all().into_iter().find(|k| k.label() == name)
+}
+
+fn parse_barriers(s: &str) -> Option<BarrierConfig> {
+    let parts: Vec<&str> = s.split('-').collect();
+    if parts.len() != 3 {
+        return None;
+    }
+    let one = |p: &str| match p {
+        "G" | "g" => Some(Barrier::Global),
+        "L" | "l" => Some(Barrier::Local),
+        "P" | "p" => Some(Barrier::Pipelined),
+        _ => None,
+    };
+    Some(BarrierConfig::new(one(parts[0])?, one(parts[1])?, one(parts[2])?))
+}
+
+
+/// Resolve the platform: `--topology FILE` (custom .topo description)
+/// takes precedence over `--env NAME`.
+fn resolve_topology(args: &cli::Args) -> Result<mrperf::platform::Topology, String> {
+    if let Some(path) = args.get("topology") {
+        return mrperf::platform::load_topology(std::path::Path::new(path))
+            .map_err(|e| format!("{e:#}"));
+    }
+    match parse_env(args.get_or("env", "8-dc-global")) {
+        Some(e) => Ok(build_env(e)),
+        None => Err("unknown env; see `mrperf list`".into()),
+    }
+}
+
+fn make_plan(
+    optimizer: &str,
+    topo: &mrperf::platform::Topology,
+    app: AppModel,
+    cfg: BarrierConfig,
+) -> Result<Plan, String> {
+    Ok(match optimizer {
+        "uniform" => Uniform.optimize(topo, app, cfg),
+        "myopic" => Myopic.optimize(topo, app, cfg),
+        "e2e-push" => E2ePush.optimize(topo, app, cfg),
+        "e2e-shuffle" => E2eShuffle.optimize(topo, app, cfg),
+        "e2e-multi" => AlternatingLp::default().optimize(topo, app, cfg),
+        "gradient" => {
+            mrperf::optimizer::GradientOptimizer::default().optimize(topo, app, cfg)
+        }
+        "artifact" => {
+            let planner = mrperf::runtime::ArtifactPlanner::load(
+                topo.n_sources(),
+                topo.n_mappers(),
+                topo.n_reducers(),
+            )
+            .map_err(|e| format!("loading artifacts: {e}"))?;
+            planner
+                .optimize(topo, app, cfg)
+                .map_err(|e| format!("artifact planner: {e}"))?
+        }
+        other => return Err(format!("unknown optimizer '{other}'")),
+    })
+}
+
+fn cmd_experiment(args: &cli::Args) -> ExitCode {
+    let results_dir = PathBuf::from(args.get_or("results", "results"));
+    let Some(id) = args.positional.get(1) else {
+        eprintln!("experiment id required; see `mrperf list`");
+        return ExitCode::FAILURE;
+    };
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        println!("\n### experiment {id}\n");
+        if !experiments::run_and_report(id, &results_dir) {
+            eprintln!("unknown experiment '{id}'");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_plan(args: &cli::Args) -> ExitCode {
+    let topo = match resolve_topology(args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let alpha = args.get_f64("alpha", 1.0).unwrap_or(1.0);
+    let cfg = match parse_barriers(args.get_or("barriers", "G-P-L")) {
+        Some(c) => c,
+        None => {
+            eprintln!("bad --barriers (e.g. G-P-L)");
+            return ExitCode::FAILURE;
+        }
+    };
+    let optimizer = args.get_or("optimizer", "e2e-multi");
+    let app = AppModel::new(alpha);
+    let plan = match make_plan(optimizer, &topo, app, cfg) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let tl = evaluate(&topo, app, cfg, &plan);
+    let b = tl.breakdown();
+
+    println!(
+        "environment: {}  α={alpha}  barriers={}  optimizer={optimizer}\n",
+        topo.name,
+        cfg.label()
+    );
+    let mut headers: Vec<String> = vec!["src\\map".into()];
+    headers.extend((0..topo.n_mappers()).map(|j| format!("m{j}")));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut xt = Table::new(
+        "push plan x_ij (fraction of source i's data to mapper j)",
+        &header_refs,
+    )
+    .label_first();
+    for i in 0..topo.n_sources() {
+        let mut row = vec![format!("s{i}")];
+        for j in 0..topo.n_mappers() {
+            row.push(format!("{:.3}", plan.x.get(i, j)));
+        }
+        xt.add_row(row);
+    }
+    println!("{}", xt.render());
+    let y_str: Vec<String> = plan.y.iter().map(|v| format!("{v:.3}")).collect();
+    println!("shuffle plan y = [{}]", y_str.join(", "));
+    println!(
+        "\npredicted: push {} + map {} + shuffle {} + reduce {} = makespan {} s",
+        fmt_secs(b.push),
+        fmt_secs(b.map),
+        fmt_secs(b.shuffle),
+        fmt_secs(b.reduce),
+        fmt_secs(tl.makespan)
+    );
+    let uni = evaluate(
+        &topo,
+        app,
+        cfg,
+        &Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers()),
+    );
+    println!(
+        "uniform baseline: {} s  (reduction {:.1}%)",
+        fmt_secs(uni.makespan),
+        (1.0 - tl.makespan / uni.makespan) * 100.0
+    );
+    ExitCode::SUCCESS
+}
+
+fn cmd_run(args: &cli::Args) -> ExitCode {
+    let topo = match resolve_topology(args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let app_name = args.get_or("app", "synthetic");
+    let alpha_arg = args.get_f64("alpha", 1.0).unwrap_or(1.0);
+    let bytes = args.get_usize("bytes-per-source", 1 << 21).unwrap_or(1 << 21);
+    let optimizer = args.get_or("optimizer", "e2e-multi");
+    let n = topo.n_sources();
+
+    use mrperf::experiments::fig9to12::AppKind;
+    let (app, inputs, alpha): (Box<dyn mrperf::engine::MapReduceApp>, _, f64) = match app_name {
+        "wordcount" => {
+            let k = AppKind::WordCount;
+            (k.app(), k.inputs(n, bytes, 7), k.profiled_alpha())
+        }
+        "sessionize" => {
+            let k = AppKind::Sessionize;
+            (k.app(), k.inputs(n, bytes, 7), k.profiled_alpha())
+        }
+        "inverted-index" => {
+            let k = AppKind::InvertedIndex;
+            (k.app(), k.inputs(n, bytes, 7), k.profiled_alpha())
+        }
+        "synthetic" => (
+            Box::new(mrperf::apps::SyntheticApp::new(alpha_arg)),
+            mrperf::experiments::common::synthetic_inputs(n, bytes, 7),
+            alpha_arg,
+        ),
+        other => {
+            eprintln!("unknown app '{other}'");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let cfg =
+        parse_barriers(args.get_or("barriers", "G-P-L")).unwrap_or(BarrierConfig::HADOOP);
+    let plan = match make_plan(optimizer, &topo, AppModel::new(alpha), cfg) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let jc = JobConfig {
+        barriers: cfg,
+        speculation: args.flag("speculation"),
+        stealing: args.flag("stealing"),
+        local_only: !(args.flag("speculation") || args.flag("stealing")),
+        replication: args.get_usize("replication", 1).unwrap_or(1),
+        ..JobConfig::default()
+    };
+    println!(
+        "running {app_name} (α≈{alpha:.2}) on {} with {optimizer} plan, barriers {} …",
+        topo.name,
+        cfg.label()
+    );
+    let res = run_job(&topo, &plan, app.as_ref(), &jc, &inputs);
+    let m = &res.metrics;
+    println!("makespan          {:>10} s (virtual time)", fmt_secs(m.makespan));
+    println!("  push end        {:>10} s", fmt_secs(m.push_end));
+    println!("  map end         {:>10} s", fmt_secs(m.map_end));
+    println!("  shuffle end     {:>10} s", fmt_secs(m.shuffle_end));
+    println!(
+        "map tasks         {:>10}   reduce tasks {}",
+        m.n_map_tasks, m.n_reduce_tasks
+    );
+    println!(
+        "records           {:>10} in / {} intermediate / {} out",
+        m.input_records, m.intermediate_records, m.output_records
+    );
+    println!(
+        "bytes             {:>10.1} MB pushed / {:.1} MB shuffled / {:.1} MB output",
+        m.push_bytes / 1e6,
+        m.shuffle_bytes / 1e6,
+        m.output_bytes / 1e6
+    );
+    if m.spec_launched > 0 || m.stolen > 0 {
+        println!(
+            "dynamics          {:>10} speculative ({} won), {} stolen",
+            m.spec_launched, m.spec_won, m.stolen
+        );
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_validate() -> ExitCode {
+    println!("running the Fig 4 validation grid (48 model-vs-engine cells)…\n");
+    let res = experiments::fig4::run();
+    for t in &res.tables[1..] {
+        println!("{}", t.render());
+    }
+    if res.r2 > 0.8 {
+        println!("validation PASSED: R² = {:.4} (paper: 0.9412)", res.r2);
+        ExitCode::SUCCESS
+    } else {
+        println!("validation FAILED: R² = {:.4}", res.r2);
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_list() -> ExitCode {
+    println!("experiments: {}", experiments::ALL.join(", "));
+    let envs: Vec<&str> = EnvKind::all().iter().map(|k| k.label()).collect();
+    println!("environments: {}", envs.join(", "));
+    println!("apps: wordcount, sessionize, inverted-index, synthetic");
+    println!(
+        "optimizers: uniform, myopic, e2e-push, e2e-shuffle, e2e-multi, gradient, artifact"
+    );
+    ExitCode::SUCCESS
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(&argv, &["verbose", "speculation", "stealing"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.flag("verbose") {
+        logger::set_level(Level::Debug);
+    }
+    match args.positional.first().map(String::as_str) {
+        Some("experiment") => cmd_experiment(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("run") => cmd_run(&args),
+        Some("validate") => cmd_validate(),
+        Some("list") => cmd_list(),
+        _ => {
+            print!("{USAGE}");
+            ExitCode::FAILURE
+        }
+    }
+}

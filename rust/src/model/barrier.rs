@@ -1,0 +1,149 @@
+//! Inter-phase barrier semantics (§2.2, "Modeling the consecutive
+//! execution of phases").
+//!
+//! Between each pair of consecutive phases (push/map, map/shuffle,
+//! shuffle/reduce) the model supports:
+//!
+//! * **Global** — every node finishes the previous phase before any node
+//!   starts the next (`start = max over nodes of previous end`, then the
+//!   phase cost is *added*).
+//! * **Local** — a node starts its next phase as soon as *it* has all its
+//!   inputs (`end = own_start + cost`).
+//! * **Pipelined** — a node overlaps the phases (`end = max(own_start,
+//!   cost)`, the paper's `⊕ = max` combination).
+
+/// One boundary's semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Barrier {
+    Global,
+    Local,
+    Pipelined,
+}
+
+impl Barrier {
+    /// The paper's `⊕` combination operator (local: `a+b`; pipelined:
+    /// `max(a,b)`). For Global the start is a phase-wide max and the cost
+    /// is then added — same `+` shape as Local, different start.
+    #[inline]
+    pub fn combine(&self, start: f64, cost: f64) -> f64 {
+        match self {
+            Barrier::Global | Barrier::Local => start + cost,
+            Barrier::Pipelined => start.max(cost),
+        }
+    }
+
+    pub fn letter(&self) -> char {
+        match self {
+            Barrier::Global => 'G',
+            Barrier::Local => 'L',
+            Barrier::Pipelined => 'P',
+        }
+    }
+}
+
+/// Barrier choice at each of the three phase boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BarrierConfig {
+    pub push_map: Barrier,
+    pub map_shuffle: Barrier,
+    pub shuffle_reduce: Barrier,
+}
+
+impl BarrierConfig {
+    pub const fn new(push_map: Barrier, map_shuffle: Barrier, shuffle_reduce: Barrier) -> Self {
+        BarrierConfig { push_map, map_shuffle, shuffle_reduce }
+    }
+
+    /// All-global-barrier configuration — the Fig 7 normalization baseline.
+    pub const ALL_GLOBAL: BarrierConfig =
+        BarrierConfig::new(Barrier::Global, Barrier::Global, Barrier::Global);
+
+    /// All-pipelined ("all" bar in Fig 7).
+    pub const ALL_PIPELINED: BarrierConfig =
+        BarrierConfig::new(Barrier::Pipelined, Barrier::Pipelined, Barrier::Pipelined);
+
+    /// G-P-L: the configuration the paper uses to capture default Hadoop
+    /// behaviour (§4.6.1) — global push/map (HDFS materialization),
+    /// coarse-grained pipelined map/shuffle, local shuffle/reduce.
+    pub const HADOOP: BarrierConfig =
+        BarrierConfig::new(Barrier::Global, Barrier::Pipelined, Barrier::Local);
+
+    /// The four configurations instantiated in the validation (§3.2):
+    /// G-P-L, P-P-L, P-G-L, G-G-L.
+    pub fn validation_set() -> [BarrierConfig; 4] {
+        use Barrier::*;
+        [
+            BarrierConfig::new(Global, Pipelined, Local),
+            BarrierConfig::new(Pipelined, Pipelined, Local),
+            BarrierConfig::new(Pipelined, Global, Local),
+            BarrierConfig::new(Global, Global, Local),
+        ]
+    }
+
+    /// Fig 7's sweep: all-global, then relax exactly one boundary to
+    /// pipelining at a time, then all-pipelined.
+    pub fn fig7_set() -> [(&'static str, BarrierConfig); 5] {
+        use Barrier::*;
+        [
+            ("baseline (GGG)", BarrierConfig::ALL_GLOBAL),
+            ("push/map", BarrierConfig::new(Pipelined, Global, Global)),
+            ("map/shuffle", BarrierConfig::new(Global, Pipelined, Global)),
+            ("shuffle/reduce", BarrierConfig::new(Global, Global, Pipelined)),
+            ("all", BarrierConfig::ALL_PIPELINED),
+        ]
+    }
+
+    /// Short name like "G-P-L".
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}",
+            self.push_map.letter(),
+            self.map_shuffle.letter(),
+            self.shuffle_reduce.letter()
+        )
+    }
+}
+
+impl std::fmt::Display for BarrierConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_semantics() {
+        assert_eq!(Barrier::Local.combine(3.0, 4.0), 7.0);
+        assert_eq!(Barrier::Global.combine(3.0, 4.0), 7.0);
+        assert_eq!(Barrier::Pipelined.combine(3.0, 4.0), 4.0);
+        assert_eq!(Barrier::Pipelined.combine(5.0, 4.0), 5.0);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(BarrierConfig::HADOOP.label(), "G-P-L");
+        assert_eq!(BarrierConfig::ALL_GLOBAL.label(), "G-G-G");
+        assert_eq!(BarrierConfig::ALL_PIPELINED.label(), "P-P-P");
+        assert_eq!(format!("{}", BarrierConfig::ALL_GLOBAL), "G-G-G");
+    }
+
+    #[test]
+    fn validation_set_matches_paper() {
+        let labels: Vec<String> =
+            BarrierConfig::validation_set().iter().map(|c| c.label()).collect();
+        assert_eq!(labels, vec!["G-P-L", "P-P-L", "P-G-L", "G-G-L"]);
+    }
+
+    #[test]
+    fn fig7_relaxes_one_at_a_time() {
+        let set = BarrierConfig::fig7_set();
+        assert_eq!(set[0].1.label(), "G-G-G");
+        assert_eq!(set[1].1.label(), "P-G-G");
+        assert_eq!(set[2].1.label(), "G-P-G");
+        assert_eq!(set[3].1.label(), "G-G-P");
+        assert_eq!(set[4].1.label(), "P-P-P");
+    }
+}

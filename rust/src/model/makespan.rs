@@ -1,0 +1,349 @@
+//! The closed-form makespan model — Equations 4–14 of the paper.
+//!
+//! Given a [`Topology`], an application expansion factor `α`, a
+//! [`BarrierConfig`] and a [`Plan`], computes per-node phase end times and
+//! the job makespan:
+//!
+//! * push:    `push_end_j   = max_i D_i·x_ij / B_ij`                   (eq 4)
+//! * map:     `map_end_j    = map_start_j ⊕ m_j / C_j`                 (eq 6/12)
+//! * shuffle: `shuffle_end_k = max_j { shuffle_start_j ⊕ α·m_j·y_k / B_jk }`
+//!                                                                     (eq 8/13)
+//! * reduce:  `reduce_end_k = reduce_start_k ⊕ α·D_total·y_k / C_k`    (eq 10/14)
+//! * makespan = `max_k reduce_end_k`                                   (eq 11)
+//!
+//! where `m_j = Σ_i D_i·x_ij` and starts are either the phase-wide max
+//! (global barrier, eqs 5/7/9) or the node's own previous end
+//! (local/pipelined).
+
+use super::barrier::{Barrier, BarrierConfig};
+use super::plan::Plan;
+use crate::platform::Topology;
+
+/// The application model (§2.1): only `α` and (implicitly, via the
+/// topology's `C` values) the compute intensity matter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AppModel {
+    /// Ratio of mapper output size to mapper input size.
+    pub alpha: f64,
+}
+
+impl AppModel {
+    pub fn new(alpha: f64) -> AppModel {
+        assert!(alpha >= 0.0 && alpha.is_finite());
+        AppModel { alpha }
+    }
+}
+
+/// Full per-node timeline of one evaluated plan.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub push_end: Vec<f64>,    // per mapper
+    pub map_end: Vec<f64>,     // per mapper
+    pub shuffle_end: Vec<f64>, // per reducer
+    pub reduce_end: Vec<f64>,  // per reducer
+    pub makespan: f64,
+}
+
+/// Aggregate phase durations for stacked-bar reporting (Figs 5, 6, 9):
+/// the marginal time each phase adds to the critical path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseBreakdown {
+    pub push: f64,
+    pub map: f64,
+    pub shuffle: f64,
+    pub reduce: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.push + self.map + self.shuffle + self.reduce
+    }
+}
+
+impl Timeline {
+    pub fn breakdown(&self) -> PhaseBreakdown {
+        let max = |xs: &[f64]| xs.iter().cloned().fold(0.0, f64::max);
+        let push = max(&self.push_end);
+        let map = (max(&self.map_end) - push).max(0.0);
+        let shuffle = (max(&self.shuffle_end) - max(&self.map_end)).max(0.0);
+        let reduce = (self.makespan - max(&self.shuffle_end)).max(0.0);
+        PhaseBreakdown { push, map, shuffle, reduce }
+    }
+}
+
+/// Evaluate the model for one plan. Returns the full timeline.
+///
+/// A plan that routes data over a zero-bandwidth link would yield an
+/// infinite time; [`Topology::validate`] forbids zero bandwidths, so all
+/// results are finite for valid inputs.
+pub fn evaluate(topo: &Topology, app: AppModel, cfg: BarrierConfig, plan: &Plan) -> Timeline {
+    debug_assert!(plan.check(topo).is_ok(), "invalid plan: {:?}", plan.check(topo));
+    let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let alpha = app.alpha;
+
+    // ---- push (eq 4): slowest incoming transfer per mapper -------------
+    let mut push_end = vec![0.0; m];
+    for j in 0..m {
+        let mut worst: f64 = 0.0;
+        for i in 0..s {
+            let xij = plan.x.get(i, j);
+            if xij > 0.0 {
+                worst = worst.max(topo.d[i] * xij / topo.b_sm.get(i, j));
+            }
+        }
+        push_end[j] = worst;
+    }
+
+    // ---- map (eqs 5, 6 / 12) --------------------------------------------
+    let m_loads = plan.map_loads(&topo.d);
+    let push_max = push_end.iter().cloned().fold(0.0, f64::max);
+    let mut map_end = vec![0.0; m];
+    for j in 0..m {
+        let start = match cfg.push_map {
+            Barrier::Global => push_max,
+            _ => push_end[j],
+        };
+        map_end[j] = cfg.push_map.combine(start, m_loads[j] / topo.c_map[j]);
+    }
+
+    // ---- shuffle (eqs 7, 8 / 13) ----------------------------------------
+    let map_max = map_end.iter().cloned().fold(0.0, f64::max);
+    let mut shuffle_end = vec![0.0; r];
+    for k in 0..r {
+        let mut worst: f64 = 0.0;
+        for j in 0..m {
+            let start = match cfg.map_shuffle {
+                Barrier::Global => map_max,
+                _ => map_end[j],
+            };
+            let vol = alpha * m_loads[j] * plan.y[k];
+            let t = vol / topo.b_mr.get(j, k);
+            worst = worst.max(cfg.map_shuffle.combine(start, t));
+        }
+        shuffle_end[k] = worst;
+    }
+
+    // ---- reduce (eqs 9, 10 / 14) ----------------------------------------
+    let shuffle_max = shuffle_end.iter().cloned().fold(0.0, f64::max);
+    let d_total = topo.total_data();
+    let mut reduce_end = vec![0.0; r];
+    for k in 0..r {
+        let start = match cfg.shuffle_reduce {
+            Barrier::Global => shuffle_max,
+            _ => shuffle_end[k],
+        };
+        let t = alpha * d_total * plan.y[k] / topo.c_red[k];
+        reduce_end[k] = cfg.shuffle_reduce.combine(start, t);
+    }
+
+    let makespan = reduce_end.iter().cloned().fold(0.0, f64::max);
+    Timeline { push_end, map_end, shuffle_end, reduce_end, makespan }
+}
+
+/// Just the makespan (eq 11).
+pub fn makespan(topo: &Topology, app: AppModel, cfg: BarrierConfig, plan: &Plan) -> f64 {
+    evaluate(topo, app, cfg, plan).makespan
+}
+
+/// Push completion time `max_j push_end_j` — the myopic push objective (§4.2).
+pub fn push_time(topo: &Topology, plan: &Plan) -> f64 {
+    let mut worst: f64 = 0.0;
+    for j in 0..topo.n_mappers() {
+        for i in 0..topo.n_sources() {
+            let xij = plan.x.get(i, j);
+            if xij > 0.0 {
+                worst = worst.max(topo.d[i] * xij / topo.b_sm.get(i, j));
+            }
+        }
+    }
+    worst
+}
+
+/// Shuffle duration `max_k max_j α·m_j·y_k / B_jk` in isolation — the
+/// myopic shuffle objective (§4.2).
+pub fn shuffle_time(topo: &Topology, app: AppModel, plan: &Plan) -> f64 {
+    let m_loads = plan.map_loads(&topo.d);
+    let mut worst: f64 = 0.0;
+    for k in 0..topo.n_reducers() {
+        for j in 0..topo.n_mappers() {
+            let t = app.alpha * m_loads[j] * plan.y[k] / topo.b_mr.get(j, k);
+            worst = worst.max(t);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+
+    const GBF: f64 = 1e9;
+
+    fn app(alpha: f64) -> AppModel {
+        AppModel::new(alpha)
+    }
+
+    /// §1.3 scenario 1: α=1, homogeneous 100 MBps everywhere → uniform
+    /// push is optimal and its push phase takes 150GB·0.5/100MBps = 750 s.
+    #[test]
+    fn example_1_3_homogeneous_uniform() {
+        let t = example_1_3(100.0 * MB, 100.0 * MB, 100.0 * MB);
+        let uni = Plan::uniform(2, 2, 2);
+        let tl = evaluate(&t, app(1.0), BarrierConfig::ALL_GLOBAL, &uni);
+        // push: slowest transfer = 75GB over 100MBps = 750 s
+        assert!((tl.push_end[0] - 750.0).abs() < 1e-9);
+        // map: 100GB per mapper at 100 MBps = 1000 s after global barrier
+        assert!((tl.map_end[0] - 1750.0).abs() < 1e-9);
+        // shuffle: α·m_j·y_k = 50GB per (j,k) pair at 100MBps = 500 s
+        assert!((tl.shuffle_end[0] - 2250.0).abs() < 1e-9);
+        // reduce: α·D_total·y_k = 100GB at 100MBps = 1000 s
+        assert!((tl.makespan - 3250.0).abs() < 1e-9);
+    }
+
+    /// §1.3 scenario 2: slow non-local links (10 MBps), α=1. The paper:
+    /// local push finishes the push in 1500 s while uniform needs 7500 s.
+    #[test]
+    fn example_1_3_slow_nonlocal_push_times() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let local = Plan::local_push(&t);
+        let uni = Plan::uniform(2, 2, 2);
+        assert!((push_time(&t, &local) - 1500.0).abs() < 1e-9);
+        assert!((push_time(&t, &uni) - 7500.0).abs() < 1e-9);
+        // The paper: uniform's map phase is 500 s shorter (1000 vs 1500).
+        let tl_local = evaluate(&t, app(1.0), BarrierConfig::ALL_GLOBAL, &local);
+        let tl_uni = evaluate(&t, app(1.0), BarrierConfig::ALL_GLOBAL, &uni);
+        let map_local = tl_local.breakdown().map;
+        let map_uni = tl_uni.breakdown().map;
+        assert!((map_local - 1500.0).abs() < 1e-9);
+        assert!((map_uni - 1000.0).abs() < 1e-9);
+        // End-to-end, local push wins in this scenario.
+        assert!(tl_local.makespan < tl_uni.makespan);
+    }
+
+    /// §1.3 scenario 3: α=10 — pushing D2's data to M1 lets the whole
+    /// shuffle+reduce happen inside cluster 1, beating local push.
+    #[test]
+    fn example_1_3_alpha_10_all_to_cluster1() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let a = app(10.0);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+
+        let local = Plan::local_push(&t);
+        // all-to-M1 plan with all keys reduced at R1:
+        let mut x = crate::util::mat::Mat::zeros(2, 2);
+        x[(0, 0)] = 1.0;
+        x[(1, 0)] = 1.0;
+        let all_c1 = Plan { x, y: vec![1.0, 0.0] };
+        all_c1.check(&t).unwrap();
+
+        let ms_local = makespan(&t, a, cfg, &local);
+        let ms_c1 = makespan(&t, a, cfg, &all_c1);
+        assert!(
+            ms_c1 < ms_local,
+            "cluster-1 consolidation {ms_c1} should beat local push {ms_local} at α=10"
+        );
+    }
+
+    /// Local push is a near-myopic-optimal push plan in the §1.3 setup:
+    /// far better than uniform, and within 10% of the true LP optimum
+    /// (which shaves a sliver of D1 onto the slow link: 1500·10/11 s).
+    #[test]
+    fn local_push_nearly_minimizes_push_time() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let local = Plan::local_push(&t);
+        let uni = Plan::uniform(2, 2, 2);
+        assert!(push_time(&t, &local) < 0.25 * push_time(&t, &uni));
+        // Analytic myopic optimum: D1 splits f = 1/11 to the slow link.
+        let opt = 1500.0 * 10.0 / 11.0;
+        assert!(push_time(&t, &local) <= opt * 1.1 + 1e-9);
+        let mut rng = crate::util::rng::Pcg64::new(3);
+        for _ in 0..100 {
+            let p = Plan::random(2, 2, 2, &mut rng);
+            assert!(push_time(&t, &p) >= opt - 1e-6, "no plan beats the LP optimum");
+        }
+    }
+
+    /// Barrier ordering: relaxing barriers can only shorten the makespan:
+    /// all-global ≥ G-P-L ≥ all-pipelined for the same plan.
+    #[test]
+    fn barrier_relaxation_monotone() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let mut rng = crate::util::rng::Pcg64::new(5);
+        for &alpha in &[0.1, 1.0, 10.0] {
+            for _ in 0..50 {
+                let p = Plan::random(2, 2, 2, &mut rng);
+                let g = makespan(&t, app(alpha), BarrierConfig::ALL_GLOBAL, &p);
+                let h = makespan(&t, app(alpha), BarrierConfig::HADOOP, &p);
+                let pp = makespan(&t, app(alpha), BarrierConfig::ALL_PIPELINED, &p);
+                assert!(g >= h - 1e-9, "G-G-G {g} < G-P-L {h}");
+                assert!(h >= pp - 1e-9, "G-P-L {h} < P-P-P {pp}");
+            }
+        }
+    }
+
+    /// Breakdown components are non-negative and sum to the makespan.
+    #[test]
+    fn breakdown_sums_to_makespan() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let mut rng = crate::util::rng::Pcg64::new(8);
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            for _ in 0..20 {
+                let p = Plan::random(2, 2, 2, &mut rng);
+                let tl = evaluate(&t, app(2.0), cfg, &p);
+                let b = tl.breakdown();
+                assert!(b.push >= 0.0 && b.map >= 0.0 && b.shuffle >= 0.0 && b.reduce >= 0.0);
+                assert!((b.total() - tl.makespan).abs() < 1e-6 * tl.makespan.max(1.0));
+            }
+        }
+    }
+
+    /// α=0 means no intermediate data: shuffle and reduce take zero time.
+    #[test]
+    fn alpha_zero_collapses_late_phases() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let p = Plan::uniform(2, 2, 2);
+        let tl = evaluate(&t, app(0.0), BarrierConfig::ALL_GLOBAL, &p);
+        let b = tl.breakdown();
+        assert_eq!(b.shuffle, 0.0);
+        assert_eq!(b.reduce, 0.0);
+        assert!(tl.makespan > 0.0);
+    }
+
+    /// Makespan scales linearly with data volume (all barriers, fixed plan).
+    #[test]
+    fn makespan_scales_with_data() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let t2 = {
+            let mut t2 = t.clone();
+            for d in t2.d.iter_mut() {
+                *d *= 3.0;
+            }
+            t2
+        };
+        let p = Plan::uniform(2, 2, 2);
+        for cfg in [BarrierConfig::ALL_GLOBAL, BarrierConfig::ALL_PIPELINED] {
+            let m1 = makespan(&t, app(1.5), cfg, &p);
+            let m2 = makespan(&t2, app(1.5), cfg, &p);
+            assert!((m2 / m1 - 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn shuffle_time_matches_global_barrier_increment() {
+        // With all-global barriers, the breakdown's shuffle equals the
+        // isolated shuffle_time.
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let p = Plan::uniform(2, 2, 2);
+        let tl = evaluate(&t, app(2.0), BarrierConfig::ALL_GLOBAL, &p);
+        let iso = shuffle_time(&t, app(2.0), &p);
+        assert!((tl.breakdown().shuffle - iso).abs() < 1e-9);
+    }
+
+    const _: f64 = GBF; // silence unused in some cfg combinations
+}

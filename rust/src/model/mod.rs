@@ -1,0 +1,12 @@
+//! The MapReduce performance model of §2: execution plans (eqs 1–3),
+//! barrier semantics, the closed-form makespan model (eqs 4–14) and its
+//! smooth (differentiable) relaxation.
+
+pub mod barrier;
+pub mod makespan;
+pub mod plan;
+pub mod smooth;
+
+pub use barrier::{Barrier, BarrierConfig};
+pub use makespan::{evaluate, makespan, push_time, shuffle_time, AppModel, PhaseBreakdown, Timeline};
+pub use plan::{Plan, PlanError};

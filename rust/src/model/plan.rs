@@ -1,0 +1,289 @@
+//! Execution plans (§2.2).
+//!
+//! A plan is the pair `({x_ij}, {y_k})`: `x_ij` is the fraction of source
+//! `i`'s data pushed to mapper `j`; `y_k` is the fraction of the
+//! intermediate key space assigned to reducer `k`. The paper's validity
+//! conditions (Equations 1–3) are: every `x_ij ∈ [0,1]`, rows sum to 1,
+//! and — per the one-reducer-per-key requirement — every mapper shuffles
+//! with the *same* fractions `x_jk = y_k` (Equation 3), which we enforce
+//! by construction by storing `y` once.
+
+use crate::platform::Topology;
+use crate::util::mat::Mat;
+use crate::util::rng::Pcg64;
+
+/// A valid-by-construction execution plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// `x_ij`, `|S| × |M|`, rows on the probability simplex.
+    pub x: Mat,
+    /// `y_k`, `|R|`, on the probability simplex.
+    pub y: Vec<f64>,
+}
+
+/// Violations reported by [`Plan::check`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanError {
+    BadShape { expected: (usize, usize, usize), got: (usize, usize, usize) },
+    NegativeFraction { what: &'static str, index: (usize, usize), value: f64 },
+    RowSum { what: &'static str, row: usize, sum: f64 },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::BadShape { expected, got } => {
+                write!(f, "plan shape {got:?} does not match topology {expected:?}")
+            }
+            PlanError::NegativeFraction { what, index, value } => {
+                write!(f, "{what}{index:?} = {value} outside [0,1]")
+            }
+            PlanError::RowSum { what, row, sum } => {
+                write!(f, "{what} row {row} sums to {sum}, expected 1")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+pub const SIMPLEX_TOL: f64 = 1e-6;
+
+impl Plan {
+    /// The uniform plan (Equations 15–16): every source spreads its data
+    /// evenly over mappers; the key space is split evenly over reducers.
+    pub fn uniform(n_sources: usize, n_mappers: usize, n_reducers: usize) -> Plan {
+        Plan {
+            x: Mat::filled(n_sources, n_mappers, 1.0 / n_mappers as f64),
+            y: vec![1.0 / n_reducers as f64; n_reducers],
+        }
+    }
+
+    /// "Local push" (§1.3): each source sends everything to its most local
+    /// mapper (fastest link), key space uniform.
+    pub fn local_push(topo: &Topology) -> Plan {
+        let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        let mut x = Mat::zeros(s, m);
+        for i in 0..s {
+            x[(i, topo.most_local_mapper(i))] = 1.0;
+        }
+        Plan { x, y: vec![1.0 / r as f64; r] }
+    }
+
+    /// Random plan on the simplex (Dirichlet-ish via normalized
+    /// exponentials) — used for multi-start initialization and tests.
+    pub fn random(
+        n_sources: usize,
+        n_mappers: usize,
+        n_reducers: usize,
+        rng: &mut Pcg64,
+    ) -> Plan {
+        let mut x = Mat::zeros(n_sources, n_mappers);
+        for i in 0..n_sources {
+            let row = x.row_mut(i);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = rng.exponential(1.0);
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        let mut y: Vec<f64> = (0..n_reducers).map(|_| rng.exponential(1.0)).collect();
+        let s: f64 = y.iter().sum();
+        for v in y.iter_mut() {
+            *v /= s;
+        }
+        Plan { x, y }
+    }
+
+    pub fn n_sources(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn n_mappers(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn n_reducers(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Validity check per Equations 1–3.
+    pub fn check(&self, topo: &Topology) -> Result<(), PlanError> {
+        let got = (self.n_sources(), self.n_mappers(), self.n_reducers());
+        let expected = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        if got != expected {
+            return Err(PlanError::BadShape { expected, got });
+        }
+        for i in 0..self.x.rows() {
+            for j in 0..self.x.cols() {
+                let v = self.x.get(i, j);
+                if !(-SIMPLEX_TOL..=1.0 + SIMPLEX_TOL).contains(&v) || !v.is_finite() {
+                    return Err(PlanError::NegativeFraction {
+                        what: "x",
+                        index: (i, j),
+                        value: v,
+                    });
+                }
+            }
+            let sum = self.x.row_sum(i);
+            if (sum - 1.0).abs() > SIMPLEX_TOL * self.x.cols() as f64 {
+                return Err(PlanError::RowSum { what: "x", row: i, sum });
+            }
+        }
+        for (k, &v) in self.y.iter().enumerate() {
+            if !(-SIMPLEX_TOL..=1.0 + SIMPLEX_TOL).contains(&v) || !v.is_finite() {
+                return Err(PlanError::NegativeFraction {
+                    what: "y",
+                    index: (k, 0),
+                    value: v,
+                });
+            }
+        }
+        let ysum: f64 = self.y.iter().sum();
+        if (ysum - 1.0).abs() > SIMPLEX_TOL * self.y.len() as f64 {
+            return Err(PlanError::RowSum { what: "y", row: 0, sum: ysum });
+        }
+        Ok(())
+    }
+
+    /// `m_j = Σ_i D_i x_ij`: bytes of input pushed to each mapper.
+    pub fn map_loads(&self, d: &[f64]) -> Vec<f64> {
+        assert_eq!(d.len(), self.n_sources());
+        let mut m = vec![0.0; self.n_mappers()];
+        for i in 0..self.n_sources() {
+            let row = self.x.row(i);
+            for (j, &xij) in row.iter().enumerate() {
+                m[j] += d[i] * xij;
+            }
+        }
+        m
+    }
+
+    /// Clamp tiny numerical negatives and renormalize rows exactly onto the
+    /// simplex (used after LP solves which satisfy constraints to 1e-9).
+    pub fn renormalize(&mut self) {
+        for i in 0..self.x.rows() {
+            let row = self.x.row_mut(i);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+                sum += *v;
+            }
+            if sum > 0.0 {
+                for v in row.iter_mut() {
+                    *v /= sum;
+                }
+            } else {
+                let n = row.len() as f64;
+                for v in row.iter_mut() {
+                    *v = 1.0 / n;
+                }
+            }
+        }
+        let mut sum = 0.0;
+        for v in self.y.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+            sum += *v;
+        }
+        if sum > 0.0 {
+            for v in self.y.iter_mut() {
+                *v /= sum;
+            }
+        } else {
+            let n = self.y.len() as f64;
+            for v in self.y.iter_mut() {
+                *v = 1.0 / n;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+
+    fn topo() -> Topology {
+        example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB)
+    }
+
+    #[test]
+    fn uniform_is_valid() {
+        let t = topo();
+        let p = Plan::uniform(2, 2, 2);
+        p.check(&t).unwrap();
+        assert_eq!(p.x.get(0, 0), 0.5);
+        assert_eq!(p.y, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn local_push_is_valid_and_local() {
+        let t = topo();
+        let p = Plan::local_push(&t);
+        p.check(&t).unwrap();
+        assert_eq!(p.x.get(0, 0), 1.0);
+        assert_eq!(p.x.get(1, 1), 1.0);
+    }
+
+    #[test]
+    fn random_plans_valid() {
+        let t = topo();
+        let mut rng = Pcg64::new(9);
+        for _ in 0..50 {
+            Plan::random(2, 2, 2, &mut rng).check(&t).unwrap();
+        }
+    }
+
+    #[test]
+    fn check_rejects_bad_shapes_and_sums() {
+        let t = topo();
+        let p = Plan::uniform(3, 2, 2);
+        assert!(matches!(p.check(&t), Err(PlanError::BadShape { .. })));
+
+        let mut p = Plan::uniform(2, 2, 2);
+        p.x[(0, 0)] = 0.9; // row sums to 1.4
+        assert!(matches!(p.check(&t), Err(PlanError::RowSum { .. })));
+
+        let mut p = Plan::uniform(2, 2, 2);
+        p.x[(0, 0)] = -0.5;
+        p.x[(0, 1)] = 1.5;
+        assert!(matches!(p.check(&t), Err(PlanError::NegativeFraction { .. })));
+    }
+
+    #[test]
+    fn map_loads_example() {
+        // §1.3: D = [150, 50] GB; local push → loads [150, 50] GB;
+        // uniform → [100, 100] GB.
+        let t = topo();
+        let local = Plan::local_push(&t);
+        let loads = local.map_loads(&t.d);
+        assert!((loads[0] - 150e9).abs() < 1.0);
+        assert!((loads[1] - 50e9).abs() < 1.0);
+
+        let uni = Plan::uniform(2, 2, 2);
+        let loads = uni.map_loads(&t.d);
+        assert!((loads[0] - 100e9).abs() < 1.0);
+        assert!((loads[1] - 100e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn renormalize_fixes_drift() {
+        let t = topo();
+        let mut p = Plan::uniform(2, 2, 2);
+        p.x[(0, 0)] = 0.5000004;
+        p.x[(0, 1)] = 0.5000004;
+        p.y[0] = -1e-9;
+        p.y[1] = 1.0;
+        p.renormalize();
+        p.check(&t).unwrap();
+        assert!((p.x.row_sum(0) - 1.0).abs() < 1e-12);
+    }
+}

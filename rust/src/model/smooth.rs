@@ -1,0 +1,250 @@
+//! Smooth (differentiable) relaxation of the makespan model.
+//!
+//! This is the rust twin of the L2 JAX graph in `python/compile/model.py`:
+//! every hard `max` becomes `smax_β(v) = logsumexp(β·v)/β` and plans are
+//! parameterized by unconstrained logits (row-softmax for `x`, softmax for
+//! `y`) so the simplex constraints (eqs 1–3) hold by construction. Barrier
+//! configurations enter as two floats per boundary (`g` = global?, `p` =
+//! pipelined?) so one graph covers all nine G/L/P combinations.
+//!
+//! It exists for two reasons: (1) parity tests pinning the AOT-compiled
+//! HLO artifact against an independent implementation, and (2) a pure-rust
+//! fallback for the gradient optimizer when artifacts are absent.
+
+use super::barrier::{Barrier, BarrierConfig};
+use super::makespan::AppModel;
+use super::plan::Plan;
+use crate::platform::Topology;
+use crate::util::mat::Mat;
+
+/// Smooth-max with sharpness `beta` (upper-bounds the true max; the gap
+/// shrinks as `beta` grows: `max ≤ smax ≤ max + ln(n)/beta`).
+pub fn smax(values: &[f64], beta: f64) -> f64 {
+    debug_assert!(!values.is_empty());
+    let m = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let sum: f64 = values.iter().map(|v| ((v - m) * beta).exp()).sum();
+    m + sum.ln() / beta
+}
+
+/// Two-argument smooth max.
+pub fn smax2(a: f64, b: f64, beta: f64) -> f64 {
+    smax(&[a, b], beta)
+}
+
+/// Row-wise softmax of a logits matrix.
+pub fn softmax_rows(logits: &Mat) -> Mat {
+    let mut out = Mat::zeros(logits.rows(), logits.cols());
+    for r in 0..logits.rows() {
+        let row = logits.row(r);
+        let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for (c, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            out[(r, c)] = e;
+            sum += e;
+        }
+        for c in 0..logits.cols() {
+            out[(r, c)] /= sum;
+        }
+    }
+    out
+}
+
+/// Softmax of a logits vector.
+pub fn softmax(logits: &[f64]) -> Vec<f64> {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&v| (v - m).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// Barrier boundary as the two smooth selectors used by the L2 graph.
+#[derive(Debug, Clone, Copy)]
+pub struct BoundarySel {
+    /// 1.0 if the boundary is a global barrier, else 0.0.
+    pub g: f64,
+    /// 1.0 if the boundary is pipelined, else 0.0.
+    pub p: f64,
+}
+
+impl From<Barrier> for BoundarySel {
+    fn from(b: Barrier) -> Self {
+        match b {
+            Barrier::Global => BoundarySel { g: 1.0, p: 0.0 },
+            Barrier::Local => BoundarySel { g: 0.0, p: 0.0 },
+            Barrier::Pipelined => BoundarySel { g: 0.0, p: 1.0 },
+        }
+    }
+}
+
+/// Barrier config as the six selector floats fed to the AOT artifact.
+pub fn selectors(cfg: BarrierConfig) -> [f64; 6] {
+    let pm: BoundarySel = cfg.push_map.into();
+    let ms: BoundarySel = cfg.map_shuffle.into();
+    let sr: BoundarySel = cfg.shuffle_reduce.into();
+    [pm.g, pm.p, ms.g, ms.p, sr.g, sr.p]
+}
+
+#[inline]
+fn combine(start: f64, cost: f64, sel: BoundarySel, beta: f64) -> f64 {
+    // pipelined: smax(start, cost); local/global: start + cost
+    sel.p * smax2(start, cost, beta) + (1.0 - sel.p) * (start + cost)
+}
+
+/// Smooth makespan of a *plan* (already on the simplex).
+pub fn smooth_makespan_plan(
+    topo: &Topology,
+    app: AppModel,
+    cfg: BarrierConfig,
+    plan: &Plan,
+    beta: f64,
+) -> f64 {
+    let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let alpha = app.alpha;
+    let pm: BoundarySel = cfg.push_map.into();
+    let ms: BoundarySel = cfg.map_shuffle.into();
+    let sr: BoundarySel = cfg.shuffle_reduce.into();
+
+    // push_end_j = smax_i (D_i x_ij / B_ij)
+    let mut push_end = vec![0.0; m];
+    let mut scratch = vec![0.0; s];
+    for j in 0..m {
+        for i in 0..s {
+            scratch[i] = topo.d[i] * plan.x.get(i, j) / topo.b_sm.get(i, j);
+        }
+        push_end[j] = smax(&scratch, beta);
+    }
+    let push_max = smax(&push_end, beta);
+
+    // map_end_j
+    let m_loads = plan.map_loads(&topo.d);
+    let mut map_end = vec![0.0; m];
+    for j in 0..m {
+        let start = pm.g * push_max + (1.0 - pm.g) * push_end[j];
+        map_end[j] = combine(start, m_loads[j] / topo.c_map[j], pm, beta);
+    }
+    let map_max = smax(&map_end, beta);
+
+    // shuffle_end_k = smax_j combine(start_j, α m_j y_k / B_jk)
+    let mut shuffle_end = vec![0.0; r];
+    let mut per_j = vec![0.0; m];
+    for k in 0..r {
+        for j in 0..m {
+            let start = ms.g * map_max + (1.0 - ms.g) * map_end[j];
+            let t = alpha * m_loads[j] * plan.y[k] / topo.b_mr.get(j, k);
+            per_j[j] = combine(start, t, ms, beta);
+        }
+        shuffle_end[k] = smax(&per_j, beta);
+    }
+    let shuffle_max = smax(&shuffle_end, beta);
+
+    // reduce_end_k
+    let d_total = topo.total_data();
+    let mut reduce_end = vec![0.0; r];
+    for k in 0..r {
+        let start = sr.g * shuffle_max + (1.0 - sr.g) * shuffle_end[k];
+        let t = alpha * d_total * plan.y[k] / topo.c_red[k];
+        reduce_end[k] = combine(start, t, sr, beta);
+    }
+    smax(&reduce_end, beta)
+}
+
+/// Smooth makespan of unconstrained *logits* (the optimizer's view).
+pub fn smooth_makespan_logits(
+    topo: &Topology,
+    app: AppModel,
+    cfg: BarrierConfig,
+    logits_x: &Mat,
+    logits_y: &[f64],
+    beta: f64,
+) -> f64 {
+    let plan = Plan { x: softmax_rows(logits_x), y: softmax(logits_y) };
+    smooth_makespan_plan(topo, app, cfg, &plan, beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::makespan::makespan;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn smax_bounds() {
+        let v = [1.0, 5.0, 3.0];
+        for &beta in &[0.5, 2.0, 20.0] {
+            let s = smax(&v, beta);
+            assert!(s >= 5.0, "smax upper-bounds max");
+            assert!(s <= 5.0 + (3.0f64).ln() / beta + 1e-12);
+        }
+        // Sharper beta → tighter.
+        assert!(smax(&v, 20.0) < smax(&v, 2.0));
+    }
+
+    #[test]
+    fn smax_handles_large_magnitudes() {
+        // No overflow for times in the 1e5 range.
+        let v = [1.0e5, 9.0e4];
+        let s = smax(&v, 1e-2);
+        assert!(s.is_finite() && s >= 1.0e5);
+    }
+
+    #[test]
+    fn softmax_rows_on_simplex() {
+        let logits = Mat::from_rows(&[&[0.0, 1.0, -2.0], &[3.0, 3.0, 3.0]]);
+        let p = softmax_rows(&logits);
+        for r in 0..2 {
+            assert!((p.row_sum(r) - 1.0).abs() < 1e-12);
+        }
+        assert!((p.get(1, 0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!(p.get(0, 1) > p.get(0, 0));
+    }
+
+    #[test]
+    fn smooth_converges_to_hard_makespan() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let app = AppModel::new(2.0);
+        let mut rng = Pcg64::new(4);
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            for _ in 0..10 {
+                let p = Plan::random(2, 2, 2, &mut rng);
+                let hard = makespan(&t, app, cfg, &p);
+                // β scaled to the problem magnitude.
+                let beta = 200.0 / hard;
+                let soft = smooth_makespan_plan(&t, app, cfg, &p, beta);
+                let rel = (soft - hard).abs() / hard;
+                assert!(
+                    rel < 0.05,
+                    "cfg {cfg:?}: smooth {soft} vs hard {hard} (rel {rel})"
+                );
+                assert!(soft >= hard - 1e-9, "smooth upper-bounds hard");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_evaluation_matches_plan_evaluation() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let app = AppModel::new(1.0);
+        let logits_x = Mat::from_rows(&[&[0.3, -0.7], &[1.2, 0.1]]);
+        let logits_y = vec![0.5, -0.5];
+        let plan = Plan { x: softmax_rows(&logits_x), y: softmax(&logits_y) };
+        plan.check(&t).unwrap();
+        let beta = 1e-3;
+        let a = smooth_makespan_logits(&t, app, BarrierConfig::HADOOP, &logits_x, &logits_y, beta);
+        let b = smooth_makespan_plan(&t, app, BarrierConfig::HADOOP, &plan, beta);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn selectors_roundtrip() {
+        let cfg = BarrierConfig::HADOOP; // G-P-L
+        let s = selectors(cfg);
+        assert_eq!(s, [1.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+}

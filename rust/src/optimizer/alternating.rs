@@ -1,0 +1,249 @@
+//! End-to-end **multi-phase** optimization via alternating LPs — the
+//! paper's headline optimizer ("e2e multi" in Figs 5–8).
+//!
+//! The full problem is bilinear (products `m_j·y_k` in eq 8). The paper
+//! linearizes with the §2.3 PWL trick and hands Gurobi a MIP; offline we
+//! exploit the bilinear structure instead: fixing `y` makes the program
+//! linear in `x`, and fixing `x` makes it linear in `y` (see
+//! [`super::lp_build`]). Alternating the two exact LP solves descends
+//! monotonically and converges to a partitionwise-optimal plan; multiple
+//! seeded starts guard against local minima. The PWL-MIP reference
+//! implementation ([`super::mip_opt`]) cross-validates this on small
+//! instances, and the gradient optimizer ([`super::gradient`]) does so on
+//! large ones.
+
+use super::lp_build::{build_lp_x, build_lp_y, extract_x, extract_y, Objective};
+use super::PlanOptimizer;
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::{makespan, AppModel};
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::solver::solve_robust as solve;
+use crate::util::rng::Pcg64;
+
+/// Alternating-LP e2e multi-phase optimizer.
+#[derive(Debug, Clone, Copy)]
+pub struct AlternatingLp {
+    /// Random restarts in addition to the deterministic seeds.
+    pub random_starts: usize,
+    /// Maximum x/y alternations per start.
+    pub max_rounds: usize,
+    /// Relative improvement below which a start is converged.
+    pub tol: f64,
+    /// RNG seed for the random restarts.
+    pub seed: u64,
+}
+
+impl Default for AlternatingLp {
+    fn default() -> Self {
+        AlternatingLp { random_starts: 3, max_rounds: 15, tol: 1e-6, seed: 0xA17E }
+    }
+}
+
+impl AlternatingLp {
+    /// One descent from an initial `y`; returns the refined plan and its
+    /// exact makespan.
+    fn descend(
+        &self,
+        topo: &Topology,
+        app: AppModel,
+        cfg: BarrierConfig,
+        mut y: Vec<f64>,
+    ) -> (Plan, f64) {
+        let mut best = f64::INFINITY;
+        let mut plan = Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        for _round in 0..self.max_rounds {
+            // x-step: optimal push for the current shuffle split. A rare
+            // numerically hopeless LP ends this start's descent; the
+            // incumbent plan stands and other starts cover the search.
+            let (lp, vars) = build_lp_x(topo, app, cfg, &y, Objective::Makespan);
+            let sol = match solve(&lp).optimal() {
+                Some((sol, _)) => sol,
+                None => break,
+            };
+            let x = {
+                // Clean simplex drift before the y-step sees the matrix.
+                let mut p = Plan { x: extract_x(&sol, &vars), y: y.clone() };
+                p.renormalize();
+                p.x
+            };
+
+            // y-step: optimal shuffle split for that push.
+            let (lp, vars) = build_lp_y(topo, app, cfg, &x, Objective::Makespan);
+            let sol = match solve(&lp).optimal() {
+                Some((sol, _)) => sol,
+                None => break,
+            };
+            let mut candidate = Plan { x, y: extract_y(&sol, &vars) };
+            candidate.renormalize();
+            y = candidate.y.clone();
+            let ms = makespan(topo, app, cfg, &candidate);
+            if ms >= best * (1.0 - self.tol) {
+                if ms < best {
+                    return (candidate, ms);
+                }
+                return (plan, best);
+            }
+            best = ms;
+            plan = candidate;
+        }
+        (plan, best)
+    }
+
+    /// Deterministic starting `y`s: uniform, capacity-proportional, and
+    /// bandwidth-in-proportional splits.
+    fn deterministic_starts(&self, topo: &Topology) -> Vec<Vec<f64>> {
+        let r = topo.n_reducers();
+        let mut starts = Vec::new();
+        starts.push(vec![1.0 / r as f64; r]);
+        // Proportional to reducer compute capacity.
+        let csum: f64 = topo.c_red.iter().sum();
+        starts.push(topo.c_red.iter().map(|c| c / csum).collect());
+        // Proportional to aggregate incoming shuffle bandwidth.
+        let bw: Vec<f64> = (0..r)
+            .map(|k| (0..topo.n_mappers()).map(|j| topo.b_mr.get(j, k)).sum::<f64>())
+            .collect();
+        let bsum: f64 = bw.iter().sum();
+        starts.push(bw.iter().map(|b| b / bsum).collect());
+        // One-hot starts: consolidate all reduction at a single reducer.
+        // These capture the §1.3 "keep the heavy shuffle inside one
+        // cluster" optima that interior starts miss (they are the extreme
+        // points of the y-simplex, where the bilinear objective's local
+        // minima often sit).
+        for k in 0..r {
+            let mut y = vec![0.0; r];
+            y[k] = 1.0;
+            starts.push(y);
+        }
+        starts
+    }
+}
+
+impl PlanOptimizer for AlternatingLp {
+    fn name(&self) -> &'static str {
+        "e2e-multi"
+    }
+
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        let r = topo.n_reducers();
+        let mut starts = self.deterministic_starts(topo);
+        let mut rng = Pcg64::new(self.seed);
+        for _ in 0..self.random_starts {
+            let mut y: Vec<f64> = (0..r).map(|_| rng.exponential(1.0)).collect();
+            let s: f64 = y.iter().sum();
+            y.iter_mut().for_each(|v| *v /= s);
+            starts.push(y);
+        }
+
+        // Pre-screen: one x-step LP per start, keep the most promising
+        // few for the full descent (perf pass: cuts LP solves ~3× with
+        // no measured quality loss — see EXPERIMENTS.md §Perf).
+        const KEEP: usize = 4;
+        let mut scored: Vec<(f64, Vec<f64>)> = starts
+            .into_iter()
+            .map(|y0| {
+                let (lp, vars) = build_lp_x(topo, app, cfg, &y0, Objective::Makespan);
+                let score = match solve(&lp).optimal() {
+                    Some((sol, _)) => {
+                        let mut p = Plan { x: extract_x(&sol, &vars), y: y0.clone() };
+                        p.renormalize();
+                        makespan(topo, app, cfg, &p)
+                    }
+                    None => f64::INFINITY,
+                };
+                (score, y0)
+            })
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let mut best_plan = None;
+        let mut best_ms = f64::INFINITY;
+        for (_, y0) in scored.into_iter().take(KEEP) {
+            let (plan, ms) = self.descend(topo, app, cfg, y0);
+            if ms < best_ms {
+                best_ms = ms;
+                best_plan = Some(plan);
+            }
+        }
+        best_plan.expect("at least one start")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::myopic::Myopic;
+    use crate::optimizer::single_phase::{E2ePush, E2eShuffle};
+    use crate::optimizer::uniform::Uniform;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::{build_env, EnvKind, MB};
+
+    #[test]
+    fn dominates_all_weaker_schemes_on_global8() {
+        let t = build_env(EnvKind::Global8);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let opt = AlternatingLp::default();
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let app = AppModel::new(alpha);
+            let e2e = makespan(&t, app, cfg, &opt.optimize(&t, app, cfg));
+            for other in [
+                makespan(&t, app, cfg, &Uniform.optimize(&t, app, cfg)),
+                makespan(&t, app, cfg, &Myopic.optimize(&t, app, cfg)),
+                makespan(&t, app, cfg, &E2ePush.optimize(&t, app, cfg)),
+                makespan(&t, app, cfg, &E2eShuffle.optimize(&t, app, cfg)),
+            ] {
+                assert!(e2e <= other + 1e-6, "α={alpha}: e2e {e2e} vs {other}");
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_the_1_3_consolidation_insight() {
+        // §1.3, α=10: optimal plan consolidates work in cluster 1.
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let app = AppModel::new(10.0);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let plan = AlternatingLp::default().optimize(&t, app, cfg);
+        plan.check(&t).unwrap();
+        let ms = makespan(&t, app, cfg, &plan);
+        // Hand-built consolidation plan from the paper's narrative.
+        let mut x = crate::util::mat::Mat::zeros(2, 2);
+        x[(0, 0)] = 1.0;
+        x[(1, 0)] = 1.0;
+        let narrative = Plan { x, y: vec![1.0, 0.0] };
+        let ms_narrative = makespan(&t, app, cfg, &narrative);
+        assert!(
+            ms <= ms_narrative + 1e-6,
+            "optimizer {ms} vs narrative plan {ms_narrative}"
+        );
+    }
+
+    #[test]
+    fn works_across_barrier_configs() {
+        let t = build_env(EnvKind::Global4);
+        let app = AppModel::new(1.0);
+        let opt = AlternatingLp { random_starts: 2, ..Default::default() };
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            let plan = opt.optimize(&t, app, cfg);
+            plan.check(&t).unwrap();
+            let uni = makespan(&t, app, cfg, &Plan::uniform(8, 8, 8));
+            let e2e = makespan(&t, app, cfg, &plan);
+            assert!(e2e <= uni + 1e-6, "cfg {}: {e2e} vs uniform {uni}", cfg.label());
+        }
+    }
+
+    #[test]
+    fn descent_is_deterministic() {
+        let t = build_env(EnvKind::Global4);
+        let app = AppModel::new(2.0);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let opt = AlternatingLp::default();
+        let a = opt.optimize(&t, app, cfg);
+        let b = opt.optimize(&t, app, cfg);
+        assert_eq!(a, b);
+    }
+}

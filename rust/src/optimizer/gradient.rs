@@ -1,0 +1,331 @@
+//! Gradient-based end-to-end multi-phase optimizer over the smooth
+//! makespan relaxation ([`crate::model::smooth`]).
+//!
+//! Plans are parameterized by unconstrained logits (row-softmax → `x`,
+//! softmax → `y`), so eqs 1–3 hold by construction and plain Adam
+//! applies. The sharpness `β` of the logsumexp max is annealed from soft
+//! to hard over the run; multiple starts guard against local minima and
+//! the returned plan is the best start under the *exact* (hard-max)
+//! model.
+//!
+//! Two interchangeable gradient backends:
+//! * [`FiniteDiffBackend`] — central finite differences against the rust
+//!   smooth evaluator. Always available; used in tests and as a fallback.
+//! * `runtime::planner_art::ArtifactBackend` — the AOT-compiled JAX/
+//!   Pallas artifact executed via PJRT (analytic gradients, batched
+//!   multi-start in one device call). This is the L1/L2 integration.
+
+use super::PlanOptimizer;
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::{makespan, AppModel};
+use crate::model::plan::Plan;
+use crate::model::smooth::{smooth_makespan_logits, softmax, softmax_rows};
+use crate::platform::Topology;
+use crate::util::mat::Mat;
+use crate::util::rng::Pcg64;
+
+/// A gradient backend evaluates ∂(smooth makespan)/∂logits.
+pub trait GradBackend {
+    /// Returns (loss, grad_x (S×M), grad_y (R)) at the given logits.
+    fn value_and_grad(
+        &mut self,
+        topo: &Topology,
+        app: AppModel,
+        cfg: BarrierConfig,
+        logits_x: &Mat,
+        logits_y: &[f64],
+        beta: f64,
+    ) -> (f64, Mat, Vec<f64>);
+}
+
+/// Central finite differences over the rust smooth evaluator.
+pub struct FiniteDiffBackend {
+    pub eps: f64,
+}
+
+impl Default for FiniteDiffBackend {
+    fn default() -> Self {
+        FiniteDiffBackend { eps: 1e-4 }
+    }
+}
+
+impl GradBackend for FiniteDiffBackend {
+    fn value_and_grad(
+        &mut self,
+        topo: &Topology,
+        app: AppModel,
+        cfg: BarrierConfig,
+        logits_x: &Mat,
+        logits_y: &[f64],
+        beta: f64,
+    ) -> (f64, Mat, Vec<f64>) {
+        let f = |lx: &Mat, ly: &[f64]| smooth_makespan_logits(topo, app, cfg, lx, ly, beta);
+        let loss = f(logits_x, logits_y);
+        let mut gx = Mat::zeros(logits_x.rows(), logits_x.cols());
+        let mut lx = logits_x.clone();
+        for i in 0..lx.rows() {
+            for j in 0..lx.cols() {
+                let orig = lx.get(i, j);
+                lx.set(i, j, orig + self.eps);
+                let hi = f(&lx, logits_y);
+                lx.set(i, j, orig - self.eps);
+                let lo = f(&lx, logits_y);
+                lx.set(i, j, orig);
+                gx.set(i, j, (hi - lo) / (2.0 * self.eps));
+            }
+        }
+        let mut gy = vec![0.0; logits_y.len()];
+        let mut ly = logits_y.to_vec();
+        for k in 0..ly.len() {
+            let orig = ly[k];
+            ly[k] = orig + self.eps;
+            let hi = f(logits_x, &ly);
+            ly[k] = orig - self.eps;
+            let lo = f(logits_x, &ly);
+            ly[k] = orig;
+            gy[k] = (hi - lo) / (2.0 * self.eps);
+        }
+        (loss, gx, gy)
+    }
+}
+
+/// Adam hyperparameters + annealing schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct GradConfig {
+    pub steps: usize,
+    pub starts: usize,
+    pub lr: f64,
+    pub adam_b1: f64,
+    pub adam_b2: f64,
+    pub adam_eps: f64,
+    /// β at step 0 and at the final step, in units of 1/(uniform makespan).
+    pub beta_start: f64,
+    pub beta_end: f64,
+    pub seed: u64,
+}
+
+impl Default for GradConfig {
+    fn default() -> Self {
+        GradConfig {
+            steps: 250,
+            starts: 4,
+            lr: 0.25,
+            adam_b1: 0.9,
+            adam_b2: 0.999,
+            adam_eps: 1e-8,
+            beta_start: 20.0,
+            beta_end: 400.0,
+            seed: 0x6AD,
+        }
+    }
+}
+
+/// The optimizer, generic over the gradient backend.
+pub struct GradientOptimizer<B: GradBackend> {
+    pub config: GradConfig,
+    pub backend: B,
+}
+
+impl Default for GradientOptimizer<FiniteDiffBackend> {
+    fn default() -> Self {
+        GradientOptimizer { config: GradConfig::default(), backend: FiniteDiffBackend::default() }
+    }
+}
+
+impl<B: GradBackend> GradientOptimizer<B> {
+    pub fn new(config: GradConfig, backend: B) -> Self {
+        GradientOptimizer { config, backend }
+    }
+
+    fn run_start(
+        &mut self,
+        topo: &Topology,
+        app: AppModel,
+        cfg: BarrierConfig,
+        mut lx: Mat,
+        mut ly: Vec<f64>,
+        scale: f64,
+    ) -> Plan {
+        let c = self.config;
+        let nx = lx.rows() * lx.cols();
+        let ny = ly.len();
+        let mut m = vec![0.0; nx + ny];
+        let mut v = vec![0.0; nx + ny];
+        for step in 0..c.steps {
+            let frac = step as f64 / (c.steps.max(2) - 1) as f64;
+            // geometric anneal of β
+            let beta_norm = c.beta_start * (c.beta_end / c.beta_start).powf(frac);
+            let beta = beta_norm / scale;
+            let (_loss, gx, gy) = self
+                .backend
+                .value_and_grad(topo, app, cfg, &lx, &ly, beta);
+            // Normalize gradient scale: loss is in seconds; keep updates
+            // O(lr) by scaling grads by `scale`.
+            let t = (step + 1) as f64;
+            let bc1 = 1.0 - c.adam_b1.powf(t);
+            let bc2 = 1.0 - c.adam_b2.powf(t);
+            let mut upd = |idx: usize, g: f64| -> f64 {
+                let g = g * scale;
+                m[idx] = c.adam_b1 * m[idx] + (1.0 - c.adam_b1) * g;
+                v[idx] = c.adam_b2 * v[idx] + (1.0 - c.adam_b2) * g * g;
+                let mh = m[idx] / bc1;
+                let vh = v[idx] / bc2;
+                c.lr * mh / (vh.sqrt() + c.adam_eps)
+            };
+            for i in 0..lx.rows() {
+                for j in 0..lx.cols() {
+                    let idx = i * lx.cols() + j;
+                    let delta = upd(idx, gx.get(i, j));
+                    lx.set(i, j, lx.get(i, j) - delta);
+                }
+            }
+            for k in 0..ny {
+                let delta = upd(nx + k, gy[k]);
+                ly[k] -= delta;
+            }
+        }
+        let mut plan = Plan { x: softmax_rows(&lx), y: softmax(&ly) };
+        plan.renormalize();
+        plan
+    }
+}
+
+impl<B: GradBackend> GradientOptimizer<B> {
+    /// Optimize, returning the best plan across starts under the exact model.
+    pub fn optimize_mut(
+        &mut self,
+        topo: &Topology,
+        app: AppModel,
+        cfg: BarrierConfig,
+    ) -> Plan {
+        let (s, m_, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        let uniform = Plan::uniform(s, m_, r);
+        let scale = makespan(topo, app, cfg, &uniform).max(1e-9);
+
+        let mut rng = Pcg64::new(self.config.seed);
+        let mut best = uniform.clone();
+        let mut best_ms = makespan(topo, app, cfg, &uniform);
+        for start in 0..self.config.starts {
+            let (lx, ly) = if start == 0 {
+                // Deterministic start: zero logits = uniform plan.
+                (Mat::zeros(s, m_), vec![0.0; r])
+            } else {
+                let mut lx = Mat::zeros(s, m_);
+                for i in 0..s {
+                    for j in 0..m_ {
+                        lx.set(i, j, rng.normal() * 0.5);
+                    }
+                }
+                let ly: Vec<f64> = (0..r).map(|_| rng.normal() * 0.5).collect();
+                (lx, ly)
+            };
+            let plan = self.run_start(topo, app, cfg, lx, ly, scale);
+            let ms = makespan(topo, app, cfg, &plan);
+            if ms < best_ms {
+                best_ms = ms;
+                best = plan;
+            }
+        }
+        best
+    }
+}
+
+impl PlanOptimizer for GradientOptimizer<FiniteDiffBackend> {
+    fn name(&self) -> &'static str {
+        "e2e-multi-grad"
+    }
+
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        // PlanOptimizer is &self; clone config into a fresh instance.
+        let mut opt = GradientOptimizer {
+            config: self.config,
+            backend: FiniteDiffBackend { eps: self.backend.eps },
+        };
+        opt.optimize_mut(topo, app, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::alternating::AlternatingLp;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::{build_env, EnvKind, MB};
+
+    #[test]
+    fn gradient_improves_over_uniform_small() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        for &alpha in &[0.1, 10.0] {
+            let app = AppModel::new(alpha);
+            let plan = GradientOptimizer::default().optimize(&t, app, cfg);
+            plan.check(&t).unwrap();
+            let uni = makespan(&t, app, cfg, &Plan::uniform(2, 2, 2));
+            let ms = makespan(&t, app, cfg, &plan);
+            assert!(
+                ms < uni * 0.9,
+                "α={alpha}: gradient {ms} should beat uniform {uni} by >10%"
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_close_to_alternating_on_small_instance() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let app = AppModel::new(1.0);
+        let g = GradientOptimizer::default().optimize(&t, app, cfg);
+        let a = AlternatingLp::default().optimize(&t, app, cfg);
+        let ms_g = makespan(&t, app, cfg, &g);
+        let ms_a = makespan(&t, app, cfg, &a);
+        assert!(
+            ms_g <= ms_a * 1.25,
+            "gradient {ms_g} should be within 25% of alternating {ms_a}"
+        );
+    }
+
+    #[test]
+    fn gradient_runs_on_8x8x8() {
+        // Smoke: the fallback backend scales to the paper's size.
+        let t = build_env(EnvKind::Global8);
+        let app = AppModel::new(1.0);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let mut opt = GradientOptimizer {
+            config: GradConfig { steps: 40, starts: 1, ..Default::default() },
+            backend: FiniteDiffBackend::default(),
+        };
+        let plan = opt.optimize_mut(&t, app, cfg);
+        plan.check(&t).unwrap();
+        let uni = makespan(&t, app, cfg, &Plan::uniform(8, 8, 8));
+        let ms = makespan(&t, app, cfg, &plan);
+        assert!(ms <= uni + 1e-6, "{ms} vs uniform {uni}");
+    }
+
+    #[test]
+    fn finite_diff_gradient_descends() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let app = AppModel::new(1.0);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let mut backend = FiniteDiffBackend::default();
+        let lx = Mat::zeros(2, 2);
+        let ly = vec![0.0, 0.0];
+        let uni_ms = makespan(&t, app, cfg, &Plan::uniform(2, 2, 2));
+        let beta = 100.0 / uni_ms;
+        let (loss, gx, gy) = backend.value_and_grad(&t, app, cfg, &lx, &ly, beta);
+        // Step along -grad must reduce the smooth loss.
+        let step = 0.05;
+        let mut lx2 = lx.clone();
+        for i in 0..2 {
+            for j in 0..2 {
+                lx2.set(i, j, lx.get(i, j) - step * gx.get(i, j) * uni_ms);
+            }
+        }
+        let ly2: Vec<f64> = ly
+            .iter()
+            .zip(&gy)
+            .map(|(&l, &g)| l - step * g * uni_ms)
+            .collect();
+        let loss2 = smooth_makespan_logits(&t, app, cfg, &lx2, &ly2, beta);
+        assert!(loss2 < loss, "descent failed: {loss2} vs {loss}");
+    }
+}

@@ -1,0 +1,474 @@
+//! LP formulations of the makespan model (§2.3).
+//!
+//! The full end-to-end multi-phase problem is bilinear (`m_j·y_k` in the
+//! shuffle terms, eq 8); but fixing either side makes it *linear*:
+//!
+//! * [`build_lp_x`] — `y` fixed, optimize the push fractions `x_ij`.
+//! * [`build_lp_y`] — `x` fixed, optimize the key-space fractions `y_k`.
+//!
+//! Every `max` in eqs 4–11 becomes epigraph rows (`Z ≥ term`, minimize
+//! `Z`), which is exact because all times appear monotonically. All three
+//! barrier semantics are supported; the per-node time variables make
+//! local/pipelined boundaries expressible (eqs 12–14).
+//!
+//! Objectives:
+//! * `Makespan` — eq 11, the end-to-end objective.
+//! * `PushTime` — myopic push (§4.2): minimize `max_j push_end_j`.
+//! * `ShuffleEnd` — myopic shuffle (§4.2): minimize `max_k shuffle_end_k`.
+
+use crate::model::barrier::{Barrier, BarrierConfig};
+use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::solver::lp::{Cmp, Lp};
+use crate::util::mat::Mat;
+
+/// What the LP minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Makespan,
+    PushTime,
+    ShuffleEnd,
+}
+
+/// Handle mapping solved LP columns back to plan fractions.
+pub struct XVars {
+    /// `x[i][j]` LP column of `x_ij`.
+    pub x: Vec<Vec<usize>>,
+    pub obj_var: usize,
+}
+
+pub struct YVars {
+    pub y: Vec<usize>,
+    pub obj_var: usize,
+}
+
+/// Build the LP over `x` with `y` fixed.
+pub fn build_lp_x(
+    topo: &Topology,
+    app: AppModel,
+    cfg: BarrierConfig,
+    y: &[f64],
+    objective: Objective,
+) -> (Lp, XVars) {
+    let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    assert_eq!(y.len(), r);
+    let alpha = app.alpha;
+    let mut lp = Lp::new();
+
+    // Decision variables.
+    let x: Vec<Vec<usize>> = (0..s)
+        .map(|i| (0..m).map(|j| lp.var(format!("x[{i}][{j}]"))).collect())
+        .collect();
+    let push_end = lp.vars("push_end", m);
+    let map_end = lp.vars("map_end", m);
+    let shuffle_end = lp.vars("shuffle_end", r);
+    let t = lp.var("T");
+
+    // (eq 2) rows sum to one.
+    for i in 0..s {
+        let row: Vec<(usize, f64)> = (0..m).map(|j| (x[i][j], 1.0)).collect();
+        lp.constraint(&row, Cmp::Eq, 1.0);
+    }
+
+    // (eq 4) push_end_j ≥ D_i x_ij / B_ij.
+    for j in 0..m {
+        for i in 0..s {
+            let coef = topo.d[i] / topo.b_sm.get(i, j);
+            lp.constraint(&[(push_end[j], 1.0), (x[i][j], -coef)], Cmp::Ge, 0.0);
+        }
+    }
+
+    // load_j = Σ_i D_i x_ij appears as an expression. Helper closure that
+    // emits `target ≥ base_terms + load_j * scale` rows.
+    let load_terms = |j: usize, scale: f64| -> Vec<(usize, f64)> {
+        (0..s).map(|i| (x[i][j], topo.d[i] * scale)).collect()
+    };
+
+    // (eqs 5/6/12) map phase.
+    let gp = match cfg.push_map {
+        Barrier::Global => {
+            let gp = lp.var("push_max");
+            for j in 0..m {
+                lp.constraint(&[(gp, 1.0), (push_end[j], -1.0)], Cmp::Ge, 0.0);
+            }
+            Some(gp)
+        }
+        _ => None,
+    };
+    for j in 0..m {
+        let scale = 1.0 / topo.c_map[j];
+        match cfg.push_map {
+            Barrier::Global => {
+                // map_end_j ≥ gp + load_j/C_j
+                let mut row = vec![(map_end[j], 1.0), (gp.unwrap(), -1.0)];
+                for (v, c) in load_terms(j, scale) {
+                    row.push((v, -c));
+                }
+                lp.constraint(&row, Cmp::Ge, 0.0);
+            }
+            Barrier::Local => {
+                let mut row = vec![(map_end[j], 1.0), (push_end[j], -1.0)];
+                for (v, c) in load_terms(j, scale) {
+                    row.push((v, -c));
+                }
+                lp.constraint(&row, Cmp::Ge, 0.0);
+            }
+            Barrier::Pipelined => {
+                lp.constraint(&[(map_end[j], 1.0), (push_end[j], -1.0)], Cmp::Ge, 0.0);
+                let mut row = vec![(map_end[j], 1.0)];
+                for (v, c) in load_terms(j, scale) {
+                    row.push((v, -c));
+                }
+                lp.constraint(&row, Cmp::Ge, 0.0);
+            }
+        }
+    }
+
+    // (eqs 7/8/13) shuffle phase; cost_jk = α·load_j·y_k / B_jk.
+    let gm = match cfg.map_shuffle {
+        Barrier::Global => {
+            let gm = lp.var("map_max");
+            for j in 0..m {
+                lp.constraint(&[(gm, 1.0), (map_end[j], -1.0)], Cmp::Ge, 0.0);
+            }
+            Some(gm)
+        }
+        _ => None,
+    };
+    for k in 0..r {
+        for j in 0..m {
+            let scale = alpha * y[k] / topo.b_mr.get(j, k);
+            match cfg.map_shuffle {
+                Barrier::Global => {
+                    let mut row = vec![(shuffle_end[k], 1.0), (gm.unwrap(), -1.0)];
+                    for (v, c) in load_terms(j, scale) {
+                        row.push((v, -c));
+                    }
+                    lp.constraint(&row, Cmp::Ge, 0.0);
+                }
+                Barrier::Local => {
+                    let mut row = vec![(shuffle_end[k], 1.0), (map_end[j], -1.0)];
+                    for (v, c) in load_terms(j, scale) {
+                        row.push((v, -c));
+                    }
+                    lp.constraint(&row, Cmp::Ge, 0.0);
+                }
+                Barrier::Pipelined => {
+                    lp.constraint(
+                        &[(shuffle_end[k], 1.0), (map_end[j], -1.0)],
+                        Cmp::Ge,
+                        0.0,
+                    );
+                    let mut row = vec![(shuffle_end[k], 1.0)];
+                    for (v, c) in load_terms(j, scale) {
+                        row.push((v, -c));
+                    }
+                    lp.constraint(&row, Cmp::Ge, 0.0);
+                }
+            }
+        }
+    }
+
+    // (eqs 9/10/14) reduce phase; rcost_k = α·D_total·y_k / C_k (constant).
+    let d_total = topo.total_data();
+    let gs = match cfg.shuffle_reduce {
+        Barrier::Global => {
+            let gs = lp.var("shuffle_max");
+            for k in 0..r {
+                lp.constraint(&[(gs, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
+            }
+            Some(gs)
+        }
+        _ => None,
+    };
+    for k in 0..r {
+        let rcost = alpha * d_total * y[k] / topo.c_red[k];
+        match cfg.shuffle_reduce {
+            Barrier::Global => {
+                lp.constraint(&[(t, 1.0), (gs.unwrap(), -1.0)], Cmp::Ge, rcost);
+            }
+            Barrier::Local => {
+                lp.constraint(&[(t, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, rcost);
+            }
+            Barrier::Pipelined => {
+                lp.constraint(&[(t, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
+                lp.constraint(&[(t, 1.0)], Cmp::Ge, rcost);
+            }
+        }
+    }
+
+    // Objective.
+    let obj_var = match objective {
+        Objective::Makespan => t,
+        Objective::PushTime => {
+            let p = lp.var("push_sup");
+            for j in 0..m {
+                lp.constraint(&[(p, 1.0), (push_end[j], -1.0)], Cmp::Ge, 0.0);
+            }
+            p
+        }
+        Objective::ShuffleEnd => {
+            let ssup = lp.var("shuffle_sup");
+            for k in 0..r {
+                lp.constraint(&[(ssup, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
+            }
+            ssup
+        }
+    };
+    lp.minimize(obj_var, 1.0);
+
+    (lp, XVars { x, obj_var })
+}
+
+/// Build the LP over `y` with `x` fixed. Push/map times are constants
+/// (they do not depend on `y`), computed with the exact model.
+pub fn build_lp_y(
+    topo: &Topology,
+    app: AppModel,
+    cfg: BarrierConfig,
+    x: &Mat,
+    objective: Objective,
+) -> (Lp, YVars) {
+    let (_s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let alpha = app.alpha;
+    // Evaluate push/map with a dummy y (they are y-independent). The
+    // incoming x may carry simplex drift; renormalize the probe copy.
+    let mut probe = Plan { x: x.clone(), y: vec![1.0 / r as f64; r] };
+    probe.renormalize();
+    let tl = crate::model::makespan::evaluate(topo, app, cfg, &probe);
+    let map_end = tl.map_end;
+    let map_max = map_end.iter().cloned().fold(0.0, f64::max);
+    let loads = probe.map_loads(&topo.d);
+
+    let mut lp = Lp::new();
+    let y: Vec<usize> = (0..r).map(|k| lp.var(format!("y[{k}]"))).collect();
+    let shuffle_end = lp.vars("shuffle_end", r);
+    let t = lp.var("T");
+
+    // Σ_k y_k = 1.
+    let row: Vec<(usize, f64)> = y.iter().map(|&v| (v, 1.0)).collect();
+    lp.constraint(&row, Cmp::Eq, 1.0);
+
+    // Shuffle rows; cost_jk = (α·load_j / B_jk)·y_k.
+    for k in 0..r {
+        for j in 0..m {
+            let coef = alpha * loads[j] / topo.b_mr.get(j, k);
+            match cfg.map_shuffle {
+                Barrier::Global => {
+                    lp.constraint(&[(shuffle_end[k], 1.0), (y[k], -coef)], Cmp::Ge, map_max);
+                }
+                Barrier::Local => {
+                    lp.constraint(
+                        &[(shuffle_end[k], 1.0), (y[k], -coef)],
+                        Cmp::Ge,
+                        map_end[j],
+                    );
+                }
+                Barrier::Pipelined => {
+                    lp.constraint(&[(shuffle_end[k], 1.0)], Cmp::Ge, map_end[j]);
+                    lp.constraint(&[(shuffle_end[k], 1.0), (y[k], -coef)], Cmp::Ge, 0.0);
+                }
+            }
+        }
+    }
+
+    // Reduce rows.
+    let d_total = topo.total_data();
+    let gs = match cfg.shuffle_reduce {
+        Barrier::Global => {
+            let gs = lp.var("shuffle_max");
+            for k in 0..r {
+                lp.constraint(&[(gs, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
+            }
+            Some(gs)
+        }
+        _ => None,
+    };
+    for k in 0..r {
+        let coef = alpha * d_total / topo.c_red[k];
+        match cfg.shuffle_reduce {
+            Barrier::Global => {
+                lp.constraint(&[(t, 1.0), (gs.unwrap(), -1.0), (y[k], -coef)], Cmp::Ge, 0.0);
+            }
+            Barrier::Local => {
+                lp.constraint(
+                    &[(t, 1.0), (shuffle_end[k], -1.0), (y[k], -coef)],
+                    Cmp::Ge,
+                    0.0,
+                );
+            }
+            Barrier::Pipelined => {
+                lp.constraint(&[(t, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
+                lp.constraint(&[(t, 1.0), (y[k], -coef)], Cmp::Ge, 0.0);
+            }
+        }
+    }
+    // The makespan can never undercut the (constant) map completion.
+    lp.constraint(&[(t, 1.0)], Cmp::Ge, map_max);
+
+    let obj_var = match objective {
+        Objective::Makespan => t,
+        Objective::ShuffleEnd => {
+            let ssup = lp.var("shuffle_sup");
+            for k in 0..r {
+                lp.constraint(&[(ssup, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
+            }
+            ssup
+        }
+        Objective::PushTime => {
+            panic!("PushTime objective is independent of y; use build_lp_x")
+        }
+    };
+    lp.minimize(obj_var, 1.0);
+
+    (lp, YVars { y, obj_var })
+}
+
+/// Extract the plan's `x` matrix from an LP solution.
+pub fn extract_x(sol: &[f64], vars: &XVars) -> Mat {
+    let s = vars.x.len();
+    let m = vars.x[0].len();
+    let mut x = Mat::zeros(s, m);
+    for i in 0..s {
+        for j in 0..m {
+            x[(i, j)] = sol[vars.x[i][j]];
+        }
+    }
+    x
+}
+
+/// Extract the plan's `y` vector from an LP solution.
+pub fn extract_y(sol: &[f64], vars: &YVars) -> Vec<f64> {
+    vars.y.iter().map(|&v| sol[v]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::makespan::{evaluate, makespan, push_time};
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+    use crate::solver::simplex::solve;
+
+    fn topo() -> Topology {
+        example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB)
+    }
+
+    /// The LP objective equals the exact model evaluation at the LP's own
+    /// solution — the formulations agree.
+    #[test]
+    fn lp_x_objective_matches_model() {
+        let t = topo();
+        let app = AppModel::new(1.0);
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            let y = vec![0.5, 0.5];
+            let (lp, vars) = build_lp_x(&t, app, cfg, &y, Objective::Makespan);
+            let (sol, obj) = solve(&lp).expect_optimal("lp_x");
+            let mut plan = Plan { x: extract_x(&sol, &vars), y: y.clone() };
+            plan.renormalize();
+            let ms = makespan(&t, app, cfg, &plan);
+            let rel = (ms - obj).abs() / obj.max(1.0);
+            assert!(rel < 1e-6, "cfg {cfg:?}: model {ms} vs LP {obj}");
+        }
+    }
+
+    #[test]
+    fn lp_y_objective_matches_model() {
+        let t = topo();
+        let app = AppModel::new(10.0);
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            let x = Plan::local_push(&t).x;
+            let (lp, vars) = build_lp_y(&t, app, cfg, &x, Objective::Makespan);
+            let (sol, obj) = solve(&lp).expect_optimal("lp_y");
+            let mut plan = Plan { x: x.clone(), y: extract_y(&sol, &vars) };
+            plan.renormalize();
+            let ms = makespan(&t, app, cfg, &plan);
+            let rel = (ms - obj).abs() / obj.max(1.0);
+            assert!(rel < 1e-6, "cfg {cfg:?}: model {ms} vs LP {obj}");
+        }
+    }
+
+    /// Myopic push LP: matches the analytic waterfilling optimum
+    /// `x_ij ∝ B_ij` (per-source minimax).
+    #[test]
+    fn push_lp_matches_waterfilling() {
+        let t = topo();
+        let app = AppModel::new(1.0);
+        let y = vec![0.5, 0.5];
+        let (lp, vars) = build_lp_x(&t, app, BarrierConfig::ALL_GLOBAL, &y, Objective::PushTime);
+        let (sol, obj) = solve(&lp).expect_optimal("push lp");
+        // Analytic: per source, time = D_i / Σ_j B_ij; overall max.
+        let expect = (0..2)
+            .map(|i| t.d[i] / (0..2).map(|j| t.b_sm.get(i, j)).sum::<f64>())
+            .fold(0.0, f64::max);
+        assert!((obj - expect).abs() / expect < 1e-8, "obj {obj} vs {expect}");
+        let mut plan = Plan { x: extract_x(&sol, &vars), y };
+        plan.renormalize();
+        assert!((push_time(&t, &plan) - expect).abs() / expect < 1e-6);
+    }
+
+    /// LP-optimal x beats both uniform and local push end-to-end.
+    #[test]
+    fn lp_x_improves_over_heuristics() {
+        let t = topo();
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let app = AppModel::new(alpha);
+            let cfg = BarrierConfig::ALL_GLOBAL;
+            let y = vec![0.5, 0.5];
+            let (lp, vars) = build_lp_x(&t, app, cfg, &y, Objective::Makespan);
+            let (sol, _) = solve(&lp).expect_optimal("lp");
+            let mut plan = Plan { x: extract_x(&sol, &vars), y: y.clone() };
+            plan.renormalize();
+            let opt = makespan(&t, app, cfg, &plan);
+            let uni = makespan(&t, app, cfg, &Plan::uniform(2, 2, 2));
+            let local = {
+                let mut p = Plan::local_push(&t);
+                p.y = y.clone();
+                makespan(&t, app, cfg, &p)
+            };
+            assert!(opt <= uni + 1e-6, "α={alpha}: {opt} vs uniform {uni}");
+            assert!(opt <= local + 1e-6, "α={alpha}: {opt} vs local {local}");
+        }
+    }
+
+    /// Shuffle-end objective: y concentrates away from slow links.
+    #[test]
+    fn shuffle_lp_prefers_fast_reducers() {
+        let t = topo();
+        let app = AppModel::new(10.0);
+        // Everything is at mapper 0 (cluster 1).
+        let mut x = Mat::zeros(2, 2);
+        x[(0, 0)] = 1.0;
+        x[(1, 0)] = 1.0;
+        let (lp, vars) = build_lp_y(&t, app, BarrierConfig::ALL_GLOBAL, &x, Objective::ShuffleEnd);
+        let (sol, _) = solve(&lp).expect_optimal("shuffle lp");
+        let y = extract_y(&sol, &vars);
+        // Reducer 0 is local to mapper 0 (fast); it should get the bulk.
+        assert!(y[0] > 0.85, "y = {y:?}");
+    }
+
+    /// Full timeline consistency: LP's internal time variables are
+    /// dominated by the model's exact evaluation at the extracted plan.
+    #[test]
+    fn lp_times_consistent_with_model_times() {
+        let t = topo();
+        let app = AppModel::new(2.0);
+        let cfg = BarrierConfig::HADOOP;
+        let y = vec![0.3, 0.7];
+        let (lp, vars) = build_lp_x(&t, app, cfg, &y, Objective::Makespan);
+        let (sol, obj) = solve(&lp).expect_optimal("lp");
+        let mut plan = Plan { x: extract_x(&sol, &vars), y };
+        plan.renormalize();
+        let tl = evaluate(&t, app, cfg, &plan);
+        assert!(tl.makespan <= obj * (1.0 + 1e-9) + 1e-9);
+    }
+}

@@ -1,0 +1,284 @@
+//! The paper-faithful §2.3 optimizer: one monolithic MIP over *both*
+//! `x` and `y`, with the bilinear shuffle terms `m_j·y_k` rewritten in
+//! separable form and piecewise-linearized ([`crate::solver::pwl`]).
+//!
+//! The paper solves this with Gurobi 5.0; our branch & bound handles the
+//! small instances (2–3 nodes per tier) we use to *cross-validate* the
+//! alternating-LP optimizer — at 8×8×8 the PWL formulation has
+//! `|M|·|R| = 64` products × 9 binary segment selectors each, beyond a
+//! naive B&B (see DESIGN.md §3). Use [`super::alternating`] there.
+
+use super::PlanOptimizer;
+use crate::model::barrier::{Barrier, BarrierConfig};
+use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::solver::lp::{Cmp, Lp};
+use crate::solver::mip::{solve_binary, MipConfig, MipOutcome};
+use crate::solver::pwl::{add_product, DEFAULT_POINTS};
+use crate::util::mat::Mat;
+
+/// PWL-MIP end-to-end multi-phase optimizer.
+#[derive(Debug, Clone, Copy)]
+pub struct PwlMipOptimizer {
+    /// Breakpoints per quadratic (paper: ~10).
+    pub n_points: usize,
+    pub mip: MipConfig,
+}
+
+impl Default for PwlMipOptimizer {
+    fn default() -> Self {
+        PwlMipOptimizer { n_points: DEFAULT_POINTS, mip: MipConfig::default() }
+    }
+}
+
+impl PlanOptimizer for PwlMipOptimizer {
+    fn name(&self) -> &'static str {
+        "e2e-multi-mip"
+    }
+
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        let alpha = app.alpha;
+        let d_total = topo.total_data();
+        let mut lp = Lp::new();
+
+        // Decision variables.
+        let x: Vec<Vec<usize>> = (0..s)
+            .map(|i| (0..m).map(|j| lp.var(format!("x[{i}][{j}]"))).collect())
+            .collect();
+        let y: Vec<usize> = (0..r).map(|k| lp.var(format!("y[{k}]"))).collect();
+        // u_j = m_j / D_total ∈ [0,1].
+        let u: Vec<usize> = (0..m).map(|j| lp.var(format!("u[{j}]"))).collect();
+        let push_end = lp.vars("push_end", m);
+        let map_end = lp.vars("map_end", m);
+        let shuffle_end = lp.vars("shuffle_end", r);
+        let t = lp.var("T");
+
+        // Simplex constraints (eqs 1–2) and u definition.
+        for i in 0..s {
+            let row: Vec<(usize, f64)> = (0..m).map(|j| (x[i][j], 1.0)).collect();
+            lp.constraint(&row, Cmp::Eq, 1.0);
+        }
+        {
+            let row: Vec<(usize, f64)> = y.iter().map(|&v| (v, 1.0)).collect();
+            lp.constraint(&row, Cmp::Eq, 1.0);
+        }
+        for j in 0..m {
+            // u_j·D_total − Σ_i D_i x_ij = 0
+            let mut row: Vec<(usize, f64)> = vec![(u[j], d_total)];
+            for i in 0..s {
+                row.push((x[i][j], -topo.d[i]));
+            }
+            lp.constraint(&row, Cmp::Eq, 0.0);
+        }
+
+        // Bilinear products p_jk ≈ u_j · y_k.
+        let mut binaries = Vec::new();
+        let mut p = Mat::zeros(m, r);
+        let mut p_vars = vec![vec![0usize; r]; m];
+        for j in 0..m {
+            for k in 0..r {
+                let pw = add_product(&mut lp, u[j], y[k], self.n_points);
+                p_vars[j][k] = pw.product;
+                binaries.extend(pw.binaries);
+            }
+        }
+
+        // (eq 4) push rows.
+        for j in 0..m {
+            for i in 0..s {
+                let coef = topo.d[i] / topo.b_sm.get(i, j);
+                lp.constraint(&[(push_end[j], 1.0), (x[i][j], -coef)], Cmp::Ge, 0.0);
+            }
+        }
+
+        // map phase (eqs 5/6/12); load_j = u_j·D_total.
+        let gp = match cfg.push_map {
+            Barrier::Global => {
+                let gp = lp.var("push_max");
+                for j in 0..m {
+                    lp.constraint(&[(gp, 1.0), (push_end[j], -1.0)], Cmp::Ge, 0.0);
+                }
+                Some(gp)
+            }
+            _ => None,
+        };
+        for j in 0..m {
+            let load_coef = d_total / topo.c_map[j];
+            match cfg.push_map {
+                Barrier::Global => {
+                    lp.constraint(
+                        &[(map_end[j], 1.0), (gp.unwrap(), -1.0), (u[j], -load_coef)],
+                        Cmp::Ge,
+                        0.0,
+                    );
+                }
+                Barrier::Local => {
+                    lp.constraint(
+                        &[(map_end[j], 1.0), (push_end[j], -1.0), (u[j], -load_coef)],
+                        Cmp::Ge,
+                        0.0,
+                    );
+                }
+                Barrier::Pipelined => {
+                    lp.constraint(&[(map_end[j], 1.0), (push_end[j], -1.0)], Cmp::Ge, 0.0);
+                    lp.constraint(&[(map_end[j], 1.0), (u[j], -load_coef)], Cmp::Ge, 0.0);
+                }
+            }
+        }
+
+        // shuffle (eqs 7/8/13): cost_jk = α·D_total·p_jk / B_jk.
+        let gm = match cfg.map_shuffle {
+            Barrier::Global => {
+                let gm = lp.var("map_max");
+                for j in 0..m {
+                    lp.constraint(&[(gm, 1.0), (map_end[j], -1.0)], Cmp::Ge, 0.0);
+                }
+                Some(gm)
+            }
+            _ => None,
+        };
+        for k in 0..r {
+            for j in 0..m {
+                let coef = alpha * d_total / topo.b_mr.get(j, k);
+                match cfg.map_shuffle {
+                    Barrier::Global => {
+                        lp.constraint(
+                            &[
+                                (shuffle_end[k], 1.0),
+                                (gm.unwrap(), -1.0),
+                                (p_vars[j][k], -coef),
+                            ],
+                            Cmp::Ge,
+                            0.0,
+                        );
+                    }
+                    Barrier::Local => {
+                        lp.constraint(
+                            &[
+                                (shuffle_end[k], 1.0),
+                                (map_end[j], -1.0),
+                                (p_vars[j][k], -coef),
+                            ],
+                            Cmp::Ge,
+                            0.0,
+                        );
+                    }
+                    Barrier::Pipelined => {
+                        lp.constraint(
+                            &[(shuffle_end[k], 1.0), (map_end[j], -1.0)],
+                            Cmp::Ge,
+                            0.0,
+                        );
+                        lp.constraint(
+                            &[(shuffle_end[k], 1.0), (p_vars[j][k], -coef)],
+                            Cmp::Ge,
+                            0.0,
+                        );
+                    }
+                }
+            }
+        }
+
+        // reduce (eqs 9/10/14): rcost_k = α·D_total·y_k / C_k (linear!).
+        let gs = match cfg.shuffle_reduce {
+            Barrier::Global => {
+                let gs = lp.var("shuffle_max");
+                for k in 0..r {
+                    lp.constraint(&[(gs, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
+                }
+                Some(gs)
+            }
+            _ => None,
+        };
+        for k in 0..r {
+            let coef = alpha * d_total / topo.c_red[k];
+            match cfg.shuffle_reduce {
+                Barrier::Global => {
+                    lp.constraint(
+                        &[(t, 1.0), (gs.unwrap(), -1.0), (y[k], -coef)],
+                        Cmp::Ge,
+                        0.0,
+                    );
+                }
+                Barrier::Local => {
+                    lp.constraint(
+                        &[(t, 1.0), (shuffle_end[k], -1.0), (y[k], -coef)],
+                        Cmp::Ge,
+                        0.0,
+                    );
+                }
+                Barrier::Pipelined => {
+                    lp.constraint(&[(t, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
+                    lp.constraint(&[(t, 1.0), (y[k], -coef)], Cmp::Ge, 0.0);
+                }
+            }
+        }
+
+        lp.minimize(t, 1.0);
+
+        match solve_binary(&lp, &binaries, self.mip) {
+            MipOutcome::Optimal { x: sol, .. } => {
+                for j in 0..m {
+                    for k in 0..r {
+                        p[(j, k)] = sol[p_vars[j][k]];
+                    }
+                }
+                let mut xm = Mat::zeros(s, m);
+                for i in 0..s {
+                    for j in 0..m {
+                        xm[(i, j)] = sol[x[i][j]];
+                    }
+                }
+                let yv: Vec<f64> = y.iter().map(|&v| sol[v]).collect();
+                let mut plan = Plan { x: xm, y: yv };
+                plan.renormalize();
+                plan
+            }
+            other => panic!("PWL-MIP solve failed: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::makespan::makespan;
+    use crate::optimizer::alternating::AlternatingLp;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+
+    /// On the §1.3 instance the paper-faithful MIP and the alternating LP
+    /// must land within the PWL approximation error of each other.
+    #[test]
+    fn mip_and_alternating_agree_on_example_1_3() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let app = AppModel::new(alpha);
+            let mip_plan = PwlMipOptimizer::default().optimize(&t, app, cfg);
+            mip_plan.check(&t).unwrap();
+            let alt_plan = AlternatingLp::default().optimize(&t, app, cfg);
+            let ms_mip = makespan(&t, app, cfg, &mip_plan);
+            let ms_alt = makespan(&t, app, cfg, &alt_plan);
+            // MIP is approximate (PWL); allow 8% slack either way.
+            let rel = (ms_mip - ms_alt).abs() / ms_alt;
+            assert!(
+                rel < 0.08,
+                "α={alpha}: MIP {ms_mip} vs alternating {ms_alt} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn mip_beats_uniform() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let app = AppModel::new(10.0);
+        let plan = PwlMipOptimizer::default().optimize(&t, app, cfg);
+        let ms = makespan(&t, app, cfg, &plan);
+        let uni = makespan(&t, app, cfg, &Plan::uniform(2, 2, 2));
+        assert!(ms < uni, "MIP {ms} vs uniform {uni}");
+    }
+}

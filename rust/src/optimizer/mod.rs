@@ -1,0 +1,36 @@
+//! Execution-plan optimizers — the schemes compared throughout §4:
+//!
+//! | scheme                | objective      | controls      | module |
+//! |-----------------------|----------------|---------------|--------|
+//! | uniform               | none (eq 15/16)| —             | [`uniform`] |
+//! | myopic multi-phase    | phase times    | push + shuffle| [`myopic`] |
+//! | e2e single-phase push | makespan       | push only     | [`single_phase`] |
+//! | e2e single-phase shuf | makespan       | shuffle only  | [`single_phase`] |
+//! | e2e multi-phase       | makespan       | push + shuffle| [`alternating`] (LP), [`mip_opt`] (PWL-MIP), [`gradient`] (JAX/PJRT) |
+
+pub mod alternating;
+pub mod gradient;
+pub mod lp_build;
+pub mod mip_opt;
+pub mod myopic;
+pub mod single_phase;
+pub mod uniform;
+
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+
+/// A plan optimizer: produces a valid execution plan for an instance.
+pub trait PlanOptimizer {
+    fn name(&self) -> &'static str;
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan;
+}
+
+pub use alternating::AlternatingLp;
+pub use gradient::GradientOptimizer;
+pub use lp_build::Objective;
+pub use mip_opt::PwlMipOptimizer;
+pub use myopic::Myopic;
+pub use single_phase::{E2ePush, E2eShuffle};
+pub use uniform::Uniform;

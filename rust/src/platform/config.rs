@@ -1,0 +1,277 @@
+//! Topology description files — a TOML-subset parser (no `serde`/`toml`
+//! offline) so users can model *their own* distributed platforms instead
+//! of the built-in PlanetLab environments:
+//!
+//! ```toml
+//! # my-platform.topo
+//! name = "two-region"
+//!
+//! [cluster.eu]
+//! continent = "EU"
+//! compute_mbps = 40
+//! sources = 2          # nodes of each type hosted by this cluster
+//! mappers = 2
+//! reducers = 2
+//! data_gb = 8          # per source
+//!
+//! [cluster.us]
+//! continent = "US"
+//! compute_mbps = 80
+//! sources = 2
+//! mappers = 2
+//! reducers = 2
+//! data_gb = 2
+//!
+//! [bandwidth_mbps]
+//! local = 1000         # intra-cluster
+//! eu.us = 12           # directional inter-cluster overrides
+//! us.eu = 9
+//! default = 5          # any pair not listed
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::topology::{Continent, Topology, TopologyBuilder, GB, MB};
+
+#[derive(Debug, Default, Clone)]
+struct ClusterSpec {
+    continent: Continent,
+    compute_mbps: f64,
+    sources: usize,
+    mappers: usize,
+    reducers: usize,
+    data_gb: f64,
+}
+
+impl Default for Continent {
+    fn default() -> Self {
+        Continent::US
+    }
+}
+
+/// Parse a `.topo` file into a [`Topology`].
+pub fn parse_topology(text: &str) -> Result<Topology> {
+    let mut name = "custom".to_string();
+    let mut clusters: BTreeMap<String, ClusterSpec> = BTreeMap::new();
+    let mut bw: BTreeMap<String, f64> = BTreeMap::new();
+    let mut section: Option<String> = None;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            let sect = stripped
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+            section = Some(sect.trim().to_string());
+            if let Some(cname) = sect.trim().strip_prefix("cluster.") {
+                clusters.entry(cname.to_string()).or_default();
+            }
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        let value = value.trim().trim_matches('"');
+
+        match section.as_deref() {
+            None => {
+                if key == "name" {
+                    name = value.to_string();
+                }
+            }
+            Some(sect) if sect.starts_with("cluster.") => {
+                let cname = sect.strip_prefix("cluster.").unwrap();
+                let spec = clusters.get_mut(cname).unwrap();
+                let parse_f = || -> Result<f64> {
+                    value
+                        .parse()
+                        .with_context(|| format!("line {}: bad number '{value}'", lineno + 1))
+                };
+                let parse_u = || -> Result<usize> {
+                    value
+                        .parse()
+                        .with_context(|| format!("line {}: bad count '{value}'", lineno + 1))
+                };
+                match key {
+                    "continent" => {
+                        spec.continent = match value {
+                            "US" | "us" => Continent::US,
+                            "EU" | "eu" => Continent::EU,
+                            "Asia" | "asia" | "ASIA" => Continent::Asia,
+                            other => bail!("line {}: unknown continent '{other}'", lineno + 1),
+                        }
+                    }
+                    "compute_mbps" => spec.compute_mbps = parse_f()?,
+                    "sources" => spec.sources = parse_u()?,
+                    "mappers" => spec.mappers = parse_u()?,
+                    "reducers" => spec.reducers = parse_u()?,
+                    "data_gb" => spec.data_gb = parse_f()?,
+                    other => bail!("line {}: unknown cluster key '{other}'", lineno + 1),
+                }
+            }
+            Some(sect) if sect == "bandwidth_mbps" => {
+                let v: f64 = value
+                    .parse()
+                    .with_context(|| format!("line {}: bad bandwidth '{value}'", lineno + 1))?;
+                bw.insert(key.to_string(), v);
+            }
+            Some(other) => bail!("unknown section [{other}]"),
+        }
+    }
+
+    if clusters.is_empty() {
+        bail!("no [cluster.*] sections");
+    }
+    for (cname, spec) in &clusters {
+        if spec.compute_mbps <= 0.0 {
+            bail!("cluster {cname}: compute_mbps must be positive");
+        }
+        if spec.mappers == 0 || spec.reducers == 0 {
+            bail!("cluster {cname}: needs at least one mapper and reducer");
+        }
+    }
+    let default_bw = bw.get("default").copied();
+    let local_bw = bw.get("local").copied().unwrap_or(1000.0);
+
+    let mut b = TopologyBuilder::new(name);
+    let mut ids = Vec::new();
+    let names: Vec<String> = clusters.keys().cloned().collect();
+    for (cname, spec) in &clusters {
+        let id = b.cluster(cname, spec.continent);
+        ids.push(id);
+        for _ in 0..spec.sources {
+            b.source(id, spec.data_gb * GB);
+        }
+        for _ in 0..spec.mappers {
+            b.mapper(id, spec.compute_mbps * MB);
+        }
+        for _ in 0..spec.reducers {
+            b.reducer(id, spec.compute_mbps * MB);
+        }
+    }
+    let lookup = |a: usize, bb: usize| -> Result<f64> {
+        if a == bb {
+            return Ok(local_bw * MB);
+        }
+        let key = format!("{}.{}", names[a], names[bb]);
+        if let Some(v) = bw.get(&key) {
+            return Ok(v * MB);
+        }
+        default_bw
+            .map(|v| v * MB)
+            .ok_or_else(|| anyhow!("no bandwidth for {key} and no default"))
+    };
+    // Pre-validate all pairs so build_with_bandwidth cannot panic.
+    for a in 0..names.len() {
+        for bb in 0..names.len() {
+            lookup(a, bb)?;
+        }
+    }
+    Ok(b.build_with_bandwidth(|a, bb| lookup(a, bb).unwrap()))
+}
+
+/// Load from a file path.
+pub fn load_topology(path: &std::path::Path) -> Result<Topology> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_topology(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "two-region"
+
+[cluster.eu]
+continent = "EU"
+compute_mbps = 40
+sources = 2
+mappers = 2
+reducers = 2
+data_gb = 8
+
+[cluster.us]
+continent = "US"
+compute_mbps = 80
+sources = 2
+mappers = 2
+reducers = 2
+data_gb = 2
+
+[bandwidth_mbps]
+local = 1000
+eu.us = 12
+us.eu = 9
+default = 5
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let t = parse_topology(SAMPLE).unwrap();
+        assert_eq!(t.name, "two-region");
+        assert_eq!(t.clusters.len(), 2);
+        assert_eq!(t.n_sources(), 4);
+        assert_eq!(t.n_mappers(), 4);
+        assert_eq!(t.n_reducers(), 4);
+        // eu sources carry 8 GB each; clusters are in BTreeMap order
+        // (eu before us).
+        assert_eq!(t.d[0], 8.0 * GB);
+        assert_eq!(t.d[2], 2.0 * GB);
+        // eu→us bandwidth 12 MBps, us→eu 9 MBps, intra 1000 MBps.
+        assert_eq!(t.b_sm.get(0, 0), 1000.0 * MB);
+        assert_eq!(t.b_sm.get(0, 2), 12.0 * MB);
+        assert_eq!(t.b_sm.get(2, 0), 9.0 * MB);
+        t.validate();
+    }
+
+    #[test]
+    fn default_bandwidth_fallback() {
+        let text = SAMPLE.replace("eu.us = 12\nus.eu = 9\n", "");
+        let t = parse_topology(&text).unwrap();
+        assert_eq!(t.b_sm.get(0, 2), 5.0 * MB);
+    }
+
+    #[test]
+    fn missing_bandwidth_is_an_error() {
+        let text = SAMPLE.replace("default = 5", "");
+        let t = parse_topology(&text.replace("eu.us = 12\nus.eu = 9\n", ""));
+        assert!(t.is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_topology("nonsense without sections").is_err());
+        assert!(parse_topology("[cluster.x]\ncompute_mbps = -1\nmappers = 1\nreducers = 1\n[bandwidth_mbps]\ndefault = 1").is_err());
+        assert!(parse_topology("[weird]\nk = 1").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ok() {
+        let text = format!("# heading comment\n\n{SAMPLE}\n# trailing");
+        assert!(parse_topology(&text).is_ok());
+    }
+
+    #[test]
+    fn optimizable_end_to_end() {
+        use crate::model::barrier::BarrierConfig;
+        use crate::model::makespan::{makespan, AppModel};
+        use crate::model::plan::Plan;
+        use crate::optimizer::{AlternatingLp, PlanOptimizer};
+        let t = parse_topology(SAMPLE).unwrap();
+        let app = AppModel::new(1.0);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let plan = AlternatingLp::default().optimize(&t, app, cfg);
+        plan.check(&t).unwrap();
+        let uni = makespan(&t, app, cfg, &Plan::uniform(4, 4, 4));
+        let opt = makespan(&t, app, cfg, &plan);
+        assert!(opt <= uni + 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! The four network environments of §4.1.
+//!
+//! Each environment has eight nodes of each type (source, mapper, reducer)
+//! distributed over 1, 2, 4 or 8 data centers; where a site must host more
+//! than one node of a type, replica nodes share the site's measured
+//! characteristics — exactly the construction described in §4.1. Data
+//! sources are allocated to clusters in the same proportion as mappers and
+//! reducers, and every source holds the same amount of input data.
+
+use super::planetlab::{planetlab, PlanetLabData};
+use super::topology::{Topology, TopologyBuilder, GB};
+
+/// Number of nodes of each type in every environment (§4.1).
+pub const NODES_PER_TYPE: usize = 8;
+
+/// Which of the paper's environments to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvKind {
+    /// One local cluster (tamu.edu) — the traditional MapReduce setting.
+    LocalDataCenter,
+    /// Two US data centers (tamu.edu, ucsb.edu).
+    IntraContinental,
+    /// Four globally distributed data centers (ucsb, tamu, tu-berlin, nitech).
+    Global4,
+    /// Eight globally distributed data centers (all sites).
+    Global8,
+}
+
+impl EnvKind {
+    pub fn all() -> [EnvKind; 4] {
+        [
+            EnvKind::LocalDataCenter,
+            EnvKind::IntraContinental,
+            EnvKind::Global4,
+            EnvKind::Global8,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EnvKind::LocalDataCenter => "local-dc",
+            EnvKind::IntraContinental => "2-dc-intra",
+            EnvKind::Global4 => "4-dc-global",
+            EnvKind::Global8 => "8-dc-global",
+        }
+    }
+
+    /// Site indices (into [`planetlab`]'s site list) used by this env.
+    pub fn site_indices(&self) -> Vec<usize> {
+        match self {
+            // tamu.edu only
+            EnvKind::LocalDataCenter => vec![1],
+            // tamu.edu + ucsb.edu
+            EnvKind::IntraContinental => vec![1, 0],
+            // ucsb, tamu, tkn.tu-berlin, pnl.nitech
+            EnvKind::Global4 => vec![0, 1, 4, 6],
+            // all eight
+            EnvKind::Global8 => (0..8).collect(),
+        }
+    }
+}
+
+/// Default per-source input volume for model experiments. Normalized
+/// results (Figs 5–8) are insensitive to this constant.
+pub const DEFAULT_DATA_PER_SOURCE: f64 = 4.0 * GB;
+
+/// Build one of the §4.1 environments from the PlanetLab dataset.
+pub fn build_env(kind: EnvKind) -> Topology {
+    build_env_with(kind, &planetlab(), DEFAULT_DATA_PER_SOURCE)
+}
+
+/// Build with explicit dataset and per-source data volume.
+pub fn build_env_with(kind: EnvKind, pl: &PlanetLabData, data_per_source: f64) -> Topology {
+    let site_idx = kind.site_indices();
+    let n_sites = site_idx.len();
+    assert!(NODES_PER_TYPE % n_sites == 0, "8 nodes must split evenly");
+    let per_site = NODES_PER_TYPE / n_sites;
+
+    let mut b = TopologyBuilder::new(kind.label());
+    // cluster id c corresponds to site site_idx[c]
+    for &si in &site_idx {
+        b.cluster(pl.sites[si].name, pl.sites[si].continent);
+    }
+    for (c, &si) in site_idx.iter().enumerate() {
+        for _rep in 0..per_site {
+            b.source(c, data_per_source);
+            b.mapper(c, pl.sites[si].compute_bps);
+            b.reducer(c, pl.sites[si].compute_bps);
+        }
+    }
+    b.build_with_bandwidth(|ca, cb| pl.bandwidth(site_idx[ca], site_idx[cb]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::planetlab::LAN_BPS;
+
+    #[test]
+    fn all_envs_have_eight_nodes_per_type() {
+        for kind in EnvKind::all() {
+            let t = build_env(kind);
+            assert_eq!(t.n_sources(), 8, "{kind:?}");
+            assert_eq!(t.n_mappers(), 8);
+            assert_eq!(t.n_reducers(), 8);
+            t.validate();
+        }
+    }
+
+    #[test]
+    fn local_dc_is_homogeneous_lan() {
+        let t = build_env(EnvKind::LocalDataCenter);
+        assert_eq!(t.clusters.len(), 1);
+        for v in t.b_sm.data() {
+            assert_eq!(*v, LAN_BPS);
+        }
+        // All compute equal (single site replicas).
+        assert!(t.c_map.iter().all(|&c| c == t.c_map[0]));
+    }
+
+    #[test]
+    fn global8_is_heterogeneous() {
+        let t = build_env(EnvKind::Global8);
+        assert_eq!(t.clusters.len(), 8);
+        let min_b = t.b_sm.data().iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_b = t.b_sm.data().iter().cloned().fold(0.0, f64::max);
+        assert!(
+            max_b / min_b > 50.0,
+            "expect orders-of-magnitude bandwidth spread, got {min_b}..{max_b}"
+        );
+        let min_c = t.c_map.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_c = t.c_map.iter().cloned().fold(0.0, f64::max);
+        assert!(max_c / min_c > 5.0, "compute spread {min_c}..{max_c}");
+    }
+
+    #[test]
+    fn sources_allocated_proportionally() {
+        let t = build_env(EnvKind::Global4);
+        // two nodes of each type per cluster
+        for c in 0..4 {
+            assert_eq!(t.source_cluster.iter().filter(|&&x| x == c).count(), 2);
+            assert_eq!(t.mapper_cluster.iter().filter(|&&x| x == c).count(), 2);
+            assert_eq!(t.reducer_cluster.iter().filter(|&&x| x == c).count(), 2);
+        }
+    }
+
+    #[test]
+    fn uniform_data_per_source() {
+        let t = build_env(EnvKind::Global8);
+        assert!(t.d.iter().all(|&d| d == DEFAULT_DATA_PER_SOURCE));
+    }
+}

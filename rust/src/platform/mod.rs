@@ -1,0 +1,12 @@
+//! Platform modeling: the tripartite source/mapper/reducer graph (§2.1),
+//! the PlanetLab measurement dataset (Table 1, §3.2), and the four network
+//! environments of the evaluation (§4.1).
+
+pub mod config;
+pub mod envs;
+pub mod planetlab;
+pub mod topology;
+
+pub use config::{load_topology, parse_topology};
+pub use envs::{build_env, EnvKind};
+pub use topology::{Topology, TopologyBuilder, GB, KB, MB};

@@ -1,0 +1,172 @@
+//! The PlanetLab measurement dataset from §3.2 / Table 1 of the paper.
+//!
+//! The paper measured eight PlanetLab sites (four US, two Europe, two
+//! Asia/Japan), with per-node compute rates between 9 and 90 MBps and the
+//! inter-continent bandwidth ranges of Table 1 (slowest/fastest KBps of
+//! links between clusters in each continent pair):
+//!
+//! |      | US         | EU           | Asia          |
+//! |------|------------|--------------|---------------|
+//! | US   | 216 / 9405 | 110 / 2267   | 61 / 3305     |
+//! | EU   | 794 / 2734 | 4475 / 11053 | 1502 / 1593   |
+//! | Asia | 401 / 3610 | 290 / 1071   | 23762 / 23875 |
+//!
+//! We do not have the paper's raw per-link matrix, so per-site-pair
+//! bandwidths are drawn log-uniformly *inside the published range* for the
+//! corresponding continent pair, from a fixed seed — preserving the
+//! heterogeneity structure (fast intra-continent Asia, slow trans-Pacific,
+//! asymmetric EU↔US, …) while remaining fully reproducible. Intra-site
+//! links are Gigabit-Ethernet LAN (the paper's testbed interconnect).
+
+use super::topology::{Continent, KB, MB};
+use crate::util::mat::Mat;
+use crate::util::rng::Pcg64;
+
+/// One measured PlanetLab site.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub name: &'static str,
+    pub continent: Continent,
+    /// Measured-style compute rate, bytes of input per second (§3.2:
+    /// unscaled `C_i` between 9 and 90 MBps).
+    pub compute_bps: f64,
+}
+
+/// The eight sites used in the paper's evaluation (§4.1).
+pub fn sites() -> Vec<Site> {
+    use Continent::*;
+    vec![
+        Site { name: "ucsb.edu", continent: US, compute_bps: 65.0 * MB },
+        Site { name: "tamu.edu", continent: US, compute_bps: 90.0 * MB },
+        Site { name: "hpl.hp.com", continent: US, compute_bps: 74.0 * MB },
+        Site { name: "uiuc.edu", continent: US, compute_bps: 51.0 * MB },
+        Site { name: "tkn.tu-berlin.de", continent: EU, compute_bps: 38.0 * MB },
+        Site { name: "essex.ac.uk", continent: EU, compute_bps: 27.0 * MB },
+        Site { name: "pnl.nitech.ac.jp", continent: Asia, compute_bps: 18.0 * MB },
+        Site { name: "wide.ad.jp", continent: Asia, compute_bps: 9.0 * MB },
+    ]
+}
+
+/// Table 1 bandwidth range (bytes/s) for a continent pair `(from, to)`.
+pub fn table1_range(from: Continent, to: Continent) -> (f64, f64) {
+    use Continent::*;
+    let (lo_kbps, hi_kbps) = match (from, to) {
+        (US, US) => (216.0, 9405.0),
+        (US, EU) => (110.0, 2267.0),
+        (US, Asia) => (61.0, 3305.0),
+        (EU, US) => (794.0, 2734.0),
+        (EU, EU) => (4475.0, 11053.0),
+        (EU, Asia) => (1502.0, 1593.0),
+        (Asia, US) => (401.0, 3610.0),
+        (Asia, EU) => (290.0, 1071.0),
+        (Asia, Asia) => (23762.0, 23875.0),
+    };
+    (lo_kbps * KB, hi_kbps * KB)
+}
+
+/// Intra-site (LAN) bandwidth: Gigabit Ethernet, §3.2's testbed fabric.
+pub const LAN_BPS: f64 = 125.0 * MB;
+
+/// Fixed seed for the per-site-pair bandwidth draw; changing this changes
+/// the concrete platform but not its statistical structure.
+pub const PLANETLAB_SEED: u64 = 0x9_D15_7A1B;
+
+/// A complete measured-style dataset: per-site-pair directional
+/// bandwidths, indexed `[from][to]` over [`sites`].
+#[derive(Debug, Clone)]
+pub struct PlanetLabData {
+    pub sites: Vec<Site>,
+    pub bw: Mat,
+}
+
+impl PlanetLabData {
+    /// Bandwidth between two sites (bytes/s).
+    pub fn bandwidth(&self, from: usize, to: usize) -> f64 {
+        self.bw.get(from, to)
+    }
+}
+
+/// Build the dataset with the default seed.
+pub fn planetlab() -> PlanetLabData {
+    planetlab_seeded(PLANETLAB_SEED)
+}
+
+/// Build with an explicit seed (used by sensitivity tests).
+pub fn planetlab_seeded(seed: u64) -> PlanetLabData {
+    let sites = sites();
+    let n = sites.len();
+    let mut rng = Pcg64::new(seed);
+    let mut bw = Mat::zeros(n, n);
+    for a in 0..n {
+        for b in 0..n {
+            bw[(a, b)] = if a == b {
+                LAN_BPS
+            } else {
+                let (lo, hi) = table1_range(sites[a].continent, sites[b].continent);
+                // log-uniform inside the published [slowest, fastest] range
+                let u = rng.next_f64();
+                (lo.ln() + u * (hi.ln() - lo.ln())).exp()
+            };
+        }
+    }
+    PlanetLabData { sites, bw }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_sites_with_paper_continent_mix() {
+        let s = sites();
+        assert_eq!(s.len(), 8);
+        let us = s.iter().filter(|x| x.continent == Continent::US).count();
+        let eu = s.iter().filter(|x| x.continent == Continent::EU).count();
+        let asia = s.iter().filter(|x| x.continent == Continent::Asia).count();
+        assert_eq!((us, eu, asia), (4, 2, 2));
+        for site in &s {
+            assert!(site.compute_bps >= 9.0 * MB && site.compute_bps <= 90.0 * MB);
+        }
+    }
+
+    #[test]
+    fn bandwidths_respect_table1_ranges() {
+        let pl = planetlab();
+        for a in 0..8 {
+            for b in 0..8 {
+                let v = pl.bandwidth(a, b);
+                if a == b {
+                    assert_eq!(v, LAN_BPS);
+                } else {
+                    let (lo, hi) =
+                        table1_range(pl.sites[a].continent, pl.sites[b].continent);
+                    assert!(v >= lo && v <= hi, "bw[{a}][{b}]={v} outside [{lo},{hi}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = planetlab_seeded(1);
+        let b = planetlab_seeded(1);
+        let c = planetlab_seeded(2);
+        assert_eq!(a.bw, b.bw);
+        assert_ne!(a.bw, c.bw);
+    }
+
+    #[test]
+    fn asia_asia_much_faster_than_transpacific() {
+        // Structure check mirroring the paper's Table 1 discussion.
+        let pl = planetlab();
+        let asia: Vec<usize> = (0..8)
+            .filter(|&i| pl.sites[i].continent == Continent::Asia)
+            .collect();
+        let us: Vec<usize> = (0..8)
+            .filter(|&i| pl.sites[i].continent == Continent::US)
+            .collect();
+        let intra = pl.bandwidth(asia[0], asia[1]);
+        let trans = pl.bandwidth(us[0], asia[0]);
+        assert!(intra > 5.0 * trans, "intra-Asia {intra} vs US→Asia {trans}");
+    }
+}

@@ -1,0 +1,296 @@
+//! The tripartite platform model from §2.1 of the paper.
+//!
+//! A [`Topology`] is a tripartite graph over data sources `S`, mapper
+//! nodes `M` and reducer nodes `R`. Each node belongs to a *cluster*
+//! (a data-center site); edges `(S×M) ∪ (M×R)` carry bandwidths `B_ij`
+//! (bytes/s), compute nodes carry capacities `C_i` (bytes of input
+//! processed per second), and each source holds `D_i` bytes.
+//!
+//! Units: bytes and seconds throughout (the paper uses bits; the choice is
+//! immaterial since only ratios enter the model).
+
+use crate::util::mat::Mat;
+
+/// Convenience byte-size constants.
+pub const KB: f64 = 1e3;
+pub const MB: f64 = 1e6;
+pub const GB: f64 = 1e9;
+
+/// A data-center site hosting a subset of the nodes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cluster {
+    pub id: usize,
+    pub name: String,
+    pub continent: Continent,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Continent {
+    US,
+    EU,
+    Asia,
+}
+
+impl std::fmt::Display for Continent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Continent::US => write!(f, "US"),
+            Continent::EU => write!(f, "EU"),
+            Continent::Asia => write!(f, "Asia"),
+        }
+    }
+}
+
+/// The distributed platform: tripartite graph + parameters (§2.1).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub clusters: Vec<Cluster>,
+    /// Cluster id of each source / mapper / reducer node.
+    pub source_cluster: Vec<usize>,
+    pub mapper_cluster: Vec<usize>,
+    pub reducer_cluster: Vec<usize>,
+    /// `D_i`: bytes of input data originating at source `i`.
+    pub d: Vec<f64>,
+    /// `C_j`: mapper compute capacity, input bytes/s.
+    pub c_map: Vec<f64>,
+    /// `C_k`: reducer compute capacity, input bytes/s.
+    pub c_red: Vec<f64>,
+    /// `B_ij`: source→mapper bandwidth (bytes/s), `|S| × |M|`.
+    pub b_sm: Mat,
+    /// `B_jk`: mapper→reducer bandwidth (bytes/s), `|M| × |R|`.
+    pub b_mr: Mat,
+}
+
+impl Topology {
+    pub fn n_sources(&self) -> usize {
+        self.d.len()
+    }
+
+    pub fn n_mappers(&self) -> usize {
+        self.c_map.len()
+    }
+
+    pub fn n_reducers(&self) -> usize {
+        self.c_red.len()
+    }
+
+    pub fn total_data(&self) -> f64 {
+        self.d.iter().sum()
+    }
+
+    /// Is the source→mapper link intra-cluster ("local" in Fig 2)?
+    pub fn sm_local(&self, i: usize, j: usize) -> bool {
+        self.source_cluster[i] == self.mapper_cluster[j]
+    }
+
+    /// Is the mapper→reducer link intra-cluster?
+    pub fn mr_local(&self, j: usize, k: usize) -> bool {
+        self.mapper_cluster[j] == self.reducer_cluster[k]
+    }
+
+    /// Index of the mapper with the fastest link from source `i`
+    /// (Hadoop's locality heuristic: push to the most local mapper).
+    pub fn most_local_mapper(&self, i: usize) -> usize {
+        (0..self.n_mappers())
+            .max_by(|&a, &b| {
+                self.b_sm
+                    .get(i, a)
+                    .partial_cmp(&self.b_sm.get(i, b))
+                    .unwrap()
+            })
+            .expect("topology has no mappers")
+    }
+
+    /// Internal consistency check; panics with a description on violation.
+    pub fn validate(&self) {
+        let (s, m, r) = (self.n_sources(), self.n_mappers(), self.n_reducers());
+        assert!(s > 0 && m > 0 && r > 0, "empty node set");
+        assert_eq!(self.source_cluster.len(), s);
+        assert_eq!(self.mapper_cluster.len(), m);
+        assert_eq!(self.reducer_cluster.len(), r);
+        assert_eq!((self.b_sm.rows(), self.b_sm.cols()), (s, m), "b_sm shape");
+        assert_eq!((self.b_mr.rows(), self.b_mr.cols()), (m, r), "b_mr shape");
+        for &c in self
+            .source_cluster
+            .iter()
+            .chain(&self.mapper_cluster)
+            .chain(&self.reducer_cluster)
+        {
+            assert!(c < self.clusters.len(), "dangling cluster id {c}");
+        }
+        for (idx, &di) in self.d.iter().enumerate() {
+            assert!(di >= 0.0 && di.is_finite(), "D[{idx}] = {di}");
+        }
+        for &c in self.c_map.iter().chain(&self.c_red) {
+            assert!(c > 0.0 && c.is_finite(), "non-positive compute capacity {c}");
+        }
+        for v in self.b_sm.data().iter().chain(self.b_mr.data()) {
+            assert!(*v > 0.0 && v.is_finite(), "non-positive bandwidth {v}");
+        }
+    }
+
+    /// Scale all compute capacities by `f` (models application compute
+    /// intensity; §2.1 notes `C_i` is application-dependent).
+    pub fn with_compute_scale(mut self, f: f64) -> Topology {
+        assert!(f > 0.0);
+        for c in self.c_map.iter_mut().chain(self.c_red.iter_mut()) {
+            *c *= f;
+        }
+        self
+    }
+
+    /// Replace every source's data volume with `bytes`.
+    pub fn with_uniform_data(mut self, bytes: f64) -> Topology {
+        for d in self.d.iter_mut() {
+            *d = bytes;
+        }
+        self
+    }
+}
+
+/// Builder for hand-constructed topologies (tests, the §1.3 example).
+pub struct TopologyBuilder {
+    name: String,
+    clusters: Vec<Cluster>,
+    source_cluster: Vec<usize>,
+    mapper_cluster: Vec<usize>,
+    reducer_cluster: Vec<usize>,
+    d: Vec<f64>,
+    c_map: Vec<f64>,
+    c_red: Vec<f64>,
+}
+
+impl TopologyBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        TopologyBuilder {
+            name: name.into(),
+            clusters: Vec::new(),
+            source_cluster: Vec::new(),
+            mapper_cluster: Vec::new(),
+            reducer_cluster: Vec::new(),
+            d: Vec::new(),
+            c_map: Vec::new(),
+            c_red: Vec::new(),
+        }
+    }
+
+    pub fn cluster(&mut self, name: &str, continent: Continent) -> usize {
+        let id = self.clusters.len();
+        self.clusters.push(Cluster { id, name: name.to_string(), continent });
+        id
+    }
+
+    pub fn source(&mut self, cluster: usize, data_bytes: f64) -> usize {
+        self.source_cluster.push(cluster);
+        self.d.push(data_bytes);
+        self.d.len() - 1
+    }
+
+    pub fn mapper(&mut self, cluster: usize, capacity: f64) -> usize {
+        self.mapper_cluster.push(cluster);
+        self.c_map.push(capacity);
+        self.c_map.len() - 1
+    }
+
+    pub fn reducer(&mut self, cluster: usize, capacity: f64) -> usize {
+        self.reducer_cluster.push(cluster);
+        self.c_red.push(capacity);
+        self.c_red.len() - 1
+    }
+
+    /// Finish, deriving every link bandwidth from `f(cluster_a, cluster_b)`.
+    pub fn build_with_bandwidth<F>(self, mut bw: F) -> Topology
+    where
+        F: FnMut(usize, usize) -> f64,
+    {
+        let s = self.d.len();
+        let m = self.c_map.len();
+        let r = self.c_red.len();
+        let mut b_sm = Mat::zeros(s, m);
+        for i in 0..s {
+            for j in 0..m {
+                b_sm[(i, j)] = bw(self.source_cluster[i], self.mapper_cluster[j]);
+            }
+        }
+        let mut b_mr = Mat::zeros(m, r);
+        for j in 0..m {
+            for k in 0..r {
+                b_mr[(j, k)] = bw(self.mapper_cluster[j], self.reducer_cluster[k]);
+            }
+        }
+        let topo = Topology {
+            name: self.name,
+            clusters: self.clusters,
+            source_cluster: self.source_cluster,
+            mapper_cluster: self.mapper_cluster,
+            reducer_cluster: self.reducer_cluster,
+            d: self.d,
+            c_map: self.c_map,
+            c_red: self.c_red,
+            b_sm,
+            b_mr,
+        };
+        topo.validate();
+        topo
+    }
+}
+
+/// The two-cluster worked example of §1.3 (Figure 2): data sources D1/D2
+/// with 150 GB / 50 GB, local links `local_bw`, non-local `nonlocal_bw`,
+/// all compute capacities `compute`.
+pub fn example_1_3(local_bw: f64, nonlocal_bw: f64, compute: f64) -> Topology {
+    let mut b = TopologyBuilder::new("example-1.3");
+    let c1 = b.cluster("cluster-1", Continent::US);
+    let c2 = b.cluster("cluster-2", Continent::US);
+    b.source(c1, 150.0 * GB);
+    b.source(c2, 50.0 * GB);
+    b.mapper(c1, compute);
+    b.mapper(c2, compute);
+    b.reducer(c1, compute);
+    b.reducer(c2, compute);
+    b.build_with_bandwidth(|a, bb| if a == bb { local_bw } else { nonlocal_bw })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_1_3_shape() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        assert_eq!(t.n_sources(), 2);
+        assert_eq!(t.n_mappers(), 2);
+        assert_eq!(t.n_reducers(), 2);
+        assert_eq!(t.total_data(), 200.0 * GB);
+        assert!(t.sm_local(0, 0));
+        assert!(!t.sm_local(0, 1));
+        assert_eq!(t.b_sm.get(0, 0), 100.0 * MB);
+        assert_eq!(t.b_sm.get(0, 1), 10.0 * MB);
+    }
+
+    #[test]
+    fn most_local_mapper_picks_fastest_link() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        assert_eq!(t.most_local_mapper(0), 0);
+        assert_eq!(t.most_local_mapper(1), 1);
+    }
+
+    #[test]
+    fn with_compute_scale() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB).with_compute_scale(0.5);
+        assert_eq!(t.c_map[0], 50.0 * MB);
+        assert_eq!(t.c_red[1], 50.0 * MB);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive bandwidth")]
+    fn validate_rejects_zero_bandwidth() {
+        let mut b = TopologyBuilder::new("bad");
+        let c = b.cluster("c", Continent::US);
+        b.source(c, 1.0);
+        b.mapper(c, 1.0);
+        b.reducer(c, 1.0);
+        let _ = b.build_with_bandwidth(|_, _| 0.0);
+    }
+}

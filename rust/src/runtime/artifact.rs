@@ -1,0 +1,213 @@
+//! AOT artifact discovery and loading.
+//!
+//! `make artifacts` (python/compile/aot.py) writes shape-specialized HLO
+//! **text** files plus a `manifest.json`; this module finds the artifact
+//! directory, parses the manifest (own tiny JSON-subset parser — no
+//! serde offline) and compiles artifacts on the PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Shape signature of one artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactShape {
+    pub s: usize,
+    pub m: usize,
+    pub r: usize,
+    pub p: usize,
+}
+
+impl ArtifactShape {
+    pub fn tag(&self) -> String {
+        format!("s{}m{}r{}p{}", self.s, self.m, self.r, self.p)
+    }
+}
+
+/// Locate the artifacts directory: `$MRPERF_ARTIFACTS`, else `artifacts/`
+/// relative to the working directory or the crate root.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("MRPERF_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    for base in [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if base.is_dir() {
+            return Some(base);
+        }
+    }
+    None
+}
+
+/// Parsed manifest entry.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub shape: ArtifactShape,
+}
+
+/// Parse `manifest.json`. The file is machine-written with a known flat
+/// structure (`{"name": {"file": "...", "S": n, ...}, ...}`), so a
+/// minimal tokenizer suffices (no serde in the offline registry).
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut entries = Vec::new();
+    // Split on top-level `"name": {` ... `}` blocks.
+    let mut rest = text;
+    while let Some(start) = rest.find('"') {
+        rest = &rest[start + 1..];
+        let end = rest.find('"').ok_or_else(|| anyhow!("unterminated key"))?;
+        let key = &rest[..end];
+        rest = &rest[end + 1..];
+        let brace = match rest.find('{') {
+            Some(b) => b,
+            None => break,
+        };
+        let close = rest[brace..]
+            .find('}')
+            .ok_or_else(|| anyhow!("unterminated object for {key}"))?;
+        let body = &rest[brace + 1..brace + close];
+        rest = &rest[brace + close + 1..];
+
+        let fields = parse_flat_object(body);
+        let file = fields
+            .get("file")
+            .ok_or_else(|| anyhow!("{key}: missing file"))?
+            .trim_matches('"')
+            .to_string();
+        let dim = |k: &str| -> Result<usize> {
+            fields
+                .get(k)
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow!("{key}: missing {k}"))
+        };
+        entries.push(ManifestEntry {
+            name: key.to_string(),
+            file,
+            shape: ArtifactShape { s: dim("S")?, m: dim("M")?, r: dim("R")?, p: dim("P")? },
+        });
+    }
+    if entries.is_empty() {
+        bail!("manifest contains no entries");
+    }
+    Ok(entries)
+}
+
+fn parse_flat_object(body: &str) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    for part in split_top_level_commas(body) {
+        if let Some((k, v)) = part.split_once(':') {
+            let key = k.trim().trim_matches('"').to_string();
+            let value = v.trim().to_string();
+            out.insert(key, value);
+        }
+    }
+    out
+}
+
+fn split_top_level_commas(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '{' | '[' if !in_str => depth += 1,
+            '}' | ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Load the manifest from the artifacts directory.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_manifest(&text)
+}
+
+/// Find an artifact by base name (`opt_run`, `plan_eval`) and shape.
+pub fn find_artifact(
+    entries: &[ManifestEntry],
+    base: &str,
+    s: usize,
+    m: usize,
+    r: usize,
+) -> Option<ManifestEntry> {
+    entries
+        .iter()
+        .find(|e| {
+            e.name.starts_with(base)
+                && e.shape.s == s
+                && e.shape.m == m
+                && e.shape.r == r
+        })
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "opt_run_s8m8r8p16": {
+    "file": "opt_run_s8m8r8p16.hlo.txt",
+    "S": 8, "M": 8, "R": 8, "P": 16,
+    "k_steps": 20
+  },
+  "plan_eval_s2m2r2p4": {
+    "file": "plan_eval_s2m2r2p4.hlo.txt",
+    "S": 2, "M": 2, "R": 2, "P": 4,
+    "k_steps": null
+  }
+}"#;
+
+    #[test]
+    fn parse_sample_manifest() {
+        let entries = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].name, "opt_run_s8m8r8p16");
+        assert_eq!(entries[0].shape, ArtifactShape { s: 8, m: 8, r: 8, p: 16 });
+        assert_eq!(entries[1].file, "plan_eval_s2m2r2p4.hlo.txt");
+    }
+
+    #[test]
+    fn find_by_base_and_shape() {
+        let entries = parse_manifest(SAMPLE).unwrap();
+        let e = find_artifact(&entries, "plan_eval", 2, 2, 2).unwrap();
+        assert_eq!(e.shape.p, 4);
+        assert!(find_artifact(&entries, "plan_eval", 3, 3, 3).is_none());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_manifest("{}").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        if let Some(dir) = artifacts_dir() {
+            if dir.join("manifest.json").exists() {
+                let entries = load_manifest(&dir).unwrap();
+                assert!(find_artifact(&entries, "opt_run", 8, 8, 8).is_some());
+                for e in &entries {
+                    assert!(dir.join(&e.file).exists(), "missing {}", e.file);
+                }
+            }
+        }
+    }
+}

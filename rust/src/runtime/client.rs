@@ -1,0 +1,168 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute
+//! many times. Pattern from /opt/xla-example/load_hlo.
+//!
+//! The PJRT CPU client is created lazily and shared; executables are
+//! cached per artifact path so repeated optimizer invocations pay the
+//! compile cost once.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Wrapper around the process-wide PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** file and compile it.
+    ///
+    /// Text is the interchange format: jax ≥ 0.5 emits protos with
+    /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids (see /opt/xla-example/README.md).
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs, returning all tuple outputs as
+    /// flat f32 vectors (jax lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = result.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// A dense f32 tensor (input helper).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        let n: usize = dims.iter().product();
+        assert_eq!(n, data.len(), "tensor data length mismatch");
+        Tensor { dims, data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Tensor {
+        Tensor { dims: vec![data.len()], data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{artifacts_dir, find_artifact, load_manifest};
+
+    #[test]
+    fn scalar_and_vec_constructors() {
+        let s = Tensor::scalar(2.5);
+        assert!(s.dims.is_empty());
+        let v = Tensor::vec(vec![1.0, 2.0]);
+        assert_eq!(v.dims, vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn tensor_shape_mismatch_panics() {
+        let _ = Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    /// End-to-end PJRT round trip on the mini plan_eval artifact:
+    /// uniform 2×2×2 plan on the §1.3-style homogeneous platform.
+    /// Requires `make artifacts`; skipped silently otherwise.
+    #[test]
+    fn plan_eval_artifact_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let entries = load_manifest(&dir).unwrap();
+        let entry = find_artifact(&entries, "plan_eval", 2, 2, 2).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.compile_hlo_text(&dir.join(&entry.file)).unwrap();
+
+        let p = entry.shape.p;
+        // logits zero = uniform plan; platform in GB / GBps units.
+        let lx = Tensor::new(vec![p, 2, 2], vec![0.0; p * 4]);
+        let ly = Tensor::new(vec![p, 2], vec![0.0; p * 2]);
+        let d = Tensor::vec(vec![150.0, 50.0]);
+        let b = Tensor::new(vec![2, 2], vec![0.1, 0.1, 0.1, 0.1]);
+        let c = Tensor::vec(vec![0.1, 0.1]);
+        let sel = Tensor::vec(vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]); // G-G-G
+        let out = exe
+            .run_f32(&[
+                lx,
+                ly,
+                d,
+                b.clone(),
+                b,
+                c.clone(),
+                c,
+                Tensor::scalar(1.0),
+                sel,
+            ])
+            .unwrap();
+        // Single output: (P, 5).
+        assert_eq!(out.len(), 1);
+        let vals = &out[0];
+        assert_eq!(vals.len(), p * 5);
+        // §1.3 scenario 1: push 750, map 1000, shuffle 500, reduce 1000,
+        // makespan 3250 — for every plan in the batch (all uniform).
+        for plan in 0..p {
+            let row = &vals[plan * 5..plan * 5 + 5];
+            let expect = [750.0, 1000.0, 500.0, 1000.0, 3250.0];
+            for (got, want) in row.iter().zip(expect) {
+                assert!(
+                    (got - want).abs() < 0.5,
+                    "plan {plan}: got {row:?}, want {expect:?}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load the `artifacts/*.hlo.txt` files produced by the
+//! build-time python AOT path (`make artifacts`) and execute them from
+//! the coordinator. Python never runs at job time.
+
+pub mod artifact;
+pub mod client;
+pub mod planner_art;
+
+pub use artifact::{artifacts_dir, load_manifest};
+pub use client::{Executable, Runtime, Tensor};
+pub use planner_art::{ArtifactPlanner, ArtifactPlannerConfig};

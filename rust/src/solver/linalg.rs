@@ -1,0 +1,134 @@
+//! Dense symmetric linear algebra for the interior-point solver:
+//! Cholesky factorization with diagonal regularization.
+
+/// Dense symmetric positive-definite solve via Cholesky (in place).
+///
+/// `m` is row-major `n×n`; only the lower triangle is read. A small
+/// multiple of the diagonal mean is added when a pivot underflows
+/// (regularization for the near-rank-deficient normal equations that
+/// degenerate LPs produce).
+pub struct Cholesky {
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl Cholesky {
+    pub fn factor(mut a: Vec<f64>, n: usize) -> Cholesky {
+        assert_eq!(a.len(), n * n);
+        // Regularization floor from the diagonal scale.
+        let diag_mean: f64 =
+            (0..n).map(|i| a[i * n + i].abs()).sum::<f64>() / n.max(1) as f64;
+        let floor = (diag_mean * 1e-12).max(1e-30);
+        for j in 0..n {
+            // d = a_jj - Σ l_jk²
+            let mut d = a[j * n + j];
+            for k in 0..j {
+                let l = a[j * n + k];
+                d -= l * l;
+            }
+            if d < floor {
+                d = floor;
+            }
+            let dj = d.sqrt();
+            a[j * n + j] = dj;
+            let inv = 1.0 / dj;
+            for i in (j + 1)..n {
+                let mut v = a[i * n + j];
+                let (row_i, row_j) = (i * n, j * n);
+                for k in 0..j {
+                    v -= a[row_i + k] * a[row_j + k];
+                }
+                a[i * n + j] = v * inv;
+            }
+        }
+        Cholesky { l: a, n }
+    }
+
+    /// Solve `L Lᵀ x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        let l = &self.l;
+        let mut x = b.to_vec();
+        // Forward: L z = b
+        for i in 0..n {
+            let mut v = x[i];
+            let row = i * n;
+            for k in 0..i {
+                v -= l[row + k] * x[k];
+            }
+            x[i] = v / l[row + i];
+        }
+        // Backward: Lᵀ y = z
+        for i in (0..n).rev() {
+            let mut v = x[i];
+            for k in (i + 1)..n {
+                v -= l[k * n + i] * x[k];
+            }
+            x[i] = v / l[i * n + i];
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let ch = Cholesky::factor(a, 2);
+        let x = ch.solve(&[3.0, 4.0]);
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_spd() {
+        // A = [[4,2],[2,3]], b = [10, 9] → x = [1.5, 2.0]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let ch = Cholesky::factor(a, 2);
+        let x = ch.solve(&[10.0, 9.0]);
+        assert!((x[0] - 1.5).abs() < 1e-10, "{x:?}");
+        assert!((x[1] - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn random_spd_roundtrip() {
+        let mut rng = Pcg64::new(42);
+        for n in [3usize, 8, 20] {
+            // A = G Gᵀ + I (SPD), x random, b = A x; solve and compare.
+            let g: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut v = if i == j { 1.0 } else { 0.0 };
+                    for k in 0..n {
+                        v += g[i * n + k] * g[j * n + k];
+                    }
+                    a[i * n + j] = v;
+                }
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a[i * n + j] * x_true[j]).sum())
+                .collect();
+            let ch = Cholesky::factor(a, n);
+            let x = ch.solve(&b);
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-8, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn regularized_singular_does_not_nan() {
+        // Rank-1 matrix: factorization must not produce NaN.
+        let a = vec![1.0, 1.0, 1.0, 1.0];
+        let ch = Cholesky::factor(a, 2);
+        let x = ch.solve(&[1.0, 1.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,178 @@
+//! Linear-program builder: sparse rows over non-negative variables.
+//!
+//! The paper's optimization (§2.3) is expressed as LPs/MIPs; since no
+//! solver crates are available offline we implement the whole stack:
+//! this module is the problem representation, [`super::simplex`] the LP
+//! algorithm, [`super::mip`] branch & bound, [`super::pwl`] the paper's
+//! piecewise-linear bilinear linearization.
+//!
+//! All variables are non-negative; general bounds are encoded as rows.
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// One sparse constraint row: `Σ coef·var  (≤|≥|=)  rhs`.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub terms: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// A minimization LP over non-negative variables.
+#[derive(Debug, Clone, Default)]
+pub struct Lp {
+    pub n_vars: usize,
+    /// Objective coefficients (minimize `c·x`); sparse-by-default vec
+    /// sized `n_vars`, zero-filled.
+    pub objective: Vec<f64>,
+    pub rows: Vec<Row>,
+    names: Vec<String>,
+}
+
+impl Lp {
+    pub fn new() -> Lp {
+        Lp::default()
+    }
+
+    /// Add a variable, returning its index. `name` aids debugging.
+    pub fn var(&mut self, name: impl Into<String>) -> usize {
+        let idx = self.n_vars;
+        self.n_vars += 1;
+        self.objective.push(0.0);
+        self.names.push(name.into());
+        idx
+    }
+
+    /// Add `n` variables named `prefix[0..n)`.
+    pub fn vars(&mut self, prefix: &str, n: usize) -> Vec<usize> {
+        (0..n).map(|i| self.var(format!("{prefix}[{i}]"))).collect()
+    }
+
+    pub fn name(&self, var: usize) -> &str {
+        &self.names[var]
+    }
+
+    /// Set the objective coefficient of one variable.
+    pub fn minimize(&mut self, var: usize, coef: f64) {
+        self.objective[var] = coef;
+    }
+
+    /// Add a constraint row. Terms with duplicate variables are merged.
+    pub fn constraint(&mut self, terms: &[(usize, f64)], cmp: Cmp, rhs: f64) {
+        let mut merged: Vec<(usize, f64)> = Vec::with_capacity(terms.len());
+        for &(v, c) in terms {
+            debug_assert!(v < self.n_vars, "dangling variable {v}");
+            if c == 0.0 {
+                continue;
+            }
+            if let Some(slot) = merged.iter_mut().find(|(mv, _)| *mv == v) {
+                slot.1 += c;
+            } else {
+                merged.push((v, c));
+            }
+        }
+        self.rows.push(Row { terms: merged, cmp, rhs });
+    }
+
+    /// Convenience: `var ≤ ub`.
+    pub fn upper_bound(&mut self, var: usize, ub: f64) {
+        self.constraint(&[(var, 1.0)], Cmp::Le, ub);
+    }
+
+    /// Convenience: fix `var = value`.
+    pub fn fix(&mut self, var: usize, value: f64) {
+        self.constraint(&[(var, 1.0)], Cmp::Eq, value);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Evaluate the objective at a point.
+    pub fn objective_at(&self, x: &[f64]) -> f64 {
+        self.objective.iter().zip(x).map(|(c, v)| c * v).sum()
+    }
+
+    /// Maximum constraint violation at a point (0 = feasible).
+    pub fn violation(&self, x: &[f64]) -> f64 {
+        let mut worst: f64 = 0.0;
+        for row in &self.rows {
+            let lhs: f64 = row.terms.iter().map(|&(v, c)| c * x[v]).sum();
+            let viol = match row.cmp {
+                Cmp::Le => (lhs - row.rhs).max(0.0),
+                Cmp::Ge => (row.rhs - lhs).max(0.0),
+                Cmp::Eq => (lhs - row.rhs).abs(),
+            };
+            worst = worst.max(viol);
+        }
+        for &v in x {
+            worst = worst.max((-v).max(0.0));
+        }
+        worst
+    }
+}
+
+/// LP solve outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpOutcome {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+impl LpOutcome {
+    pub fn optimal(self) -> Option<(Vec<f64>, f64)> {
+        match self {
+            LpOutcome::Optimal { x, objective } => Some((x, objective)),
+            _ => None,
+        }
+    }
+
+    pub fn expect_optimal(self, ctx: &str) -> (Vec<f64>, f64) {
+        match self {
+            LpOutcome::Optimal { x, objective } => (x, objective),
+            other => panic!("{ctx}: expected optimal LP solution, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_evaluate() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, 1.0);
+        lp.minimize(y, 2.0);
+        lp.constraint(&[(x, 1.0), (y, 1.0)], Cmp::Ge, 1.0);
+        assert_eq!(lp.n_vars, 2);
+        assert_eq!(lp.n_rows(), 1);
+        assert_eq!(lp.objective_at(&[1.0, 0.5]), 2.0);
+        assert_eq!(lp.violation(&[0.2, 0.3]), 0.5);
+        assert_eq!(lp.violation(&[0.5, 0.5]), 0.0);
+    }
+
+    #[test]
+    fn duplicate_terms_merge() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        lp.constraint(&[(x, 1.0), (x, 2.0)], Cmp::Le, 6.0);
+        assert_eq!(lp.rows[0].terms, vec![(x, 3.0)]);
+    }
+
+    #[test]
+    fn negative_values_are_violations() {
+        let mut lp = Lp::new();
+        let _ = lp.var("x");
+        assert!(lp.violation(&[-0.5]) == 0.5);
+    }
+}

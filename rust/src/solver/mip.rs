@@ -1,0 +1,229 @@
+//! Mixed-integer programming by LP-relaxation branch & bound.
+//!
+//! The paper's §2.3 formulation needs binary choice variables for the
+//! concave side of the piecewise-linear bilinear approximation; Gurobi is
+//! unavailable offline, so we branch & bound over our own simplex:
+//! depth-first with best-known-incumbent pruning, branching on the most
+//! fractional binary.
+
+use super::lp::{Lp, LpOutcome};
+use super::simplex::solve;
+
+/// Outcome of a MIP solve.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MipOutcome {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+    /// The relaxation was unbounded (the integral problem may be too).
+    Unbounded,
+}
+
+/// Solver knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MipConfig {
+    /// Give up after this many branch-and-bound nodes.
+    pub max_nodes: usize,
+    /// Integrality tolerance.
+    pub int_tol: f64,
+    /// Relative optimality gap at which a node is pruned.
+    pub gap: f64,
+}
+
+impl Default for MipConfig {
+    fn default() -> Self {
+        MipConfig { max_nodes: 200_000, int_tol: 1e-6, gap: 1e-9 }
+    }
+}
+
+/// Solve `lp` with the given variables restricted to {0, 1}.
+///
+/// Branching fixes a variable via equality rows appended to a copy of the
+/// LP — wasteful asymptotically but fine at the problem sizes the paper's
+/// formulation produces for small instances (see DESIGN.md §3: the full
+/// PWL-MIP is exercised at 2–3 node scale; larger environments use the
+/// alternating-LP optimizer).
+pub fn solve_binary(lp: &Lp, binaries: &[usize], config: MipConfig) -> MipOutcome {
+    // Root relaxation with 0 ≤ b ≤ 1 bounds on binaries.
+    let mut root = lp.clone();
+    for &b in binaries {
+        root.upper_bound(b, 1.0);
+    }
+
+    let mut best: Option<(Vec<f64>, f64)> = None;
+    let mut nodes = 0usize;
+    // Stack of (lp, fixed-so-far description for debugging).
+    let mut stack: Vec<Lp> = vec![root];
+
+    while let Some(node_lp) = stack.pop() {
+        nodes += 1;
+        if nodes > config.max_nodes {
+            break;
+        }
+        let outcome = solve(&node_lp);
+        let (x, obj) = match outcome {
+            LpOutcome::Optimal { x, objective } => (x, objective),
+            LpOutcome::Infeasible => continue,
+            LpOutcome::Unbounded => {
+                if best.is_none() && nodes == 1 {
+                    return MipOutcome::Unbounded;
+                }
+                continue;
+            }
+        };
+        // Prune by bound.
+        if let Some((_, incumbent)) = &best {
+            if obj >= incumbent - config.gap * incumbent.abs().max(1.0) {
+                continue;
+            }
+        }
+        // Most fractional binary.
+        let mut branch_var = None;
+        let mut best_frac = config.int_tol;
+        for &b in binaries {
+            let frac = (x[b] - x[b].round()).abs();
+            if frac > best_frac {
+                best_frac = frac;
+                branch_var = Some(b);
+            }
+        }
+        match branch_var {
+            None => {
+                // Integral: new incumbent.
+                match &best {
+                    Some((_, inc)) if obj >= *inc => {}
+                    _ => best = Some((x, obj)),
+                }
+            }
+            Some(b) => {
+                let mut lo = node_lp.clone();
+                lo.fix(b, 0.0);
+                let mut hi = node_lp;
+                hi.fix(b, 1.0);
+                // DFS: explore the rounded-nearest branch first.
+                if x[b] >= 0.5 {
+                    stack.push(lo);
+                    stack.push(hi);
+                } else {
+                    stack.push(hi);
+                    stack.push(lo);
+                }
+            }
+        }
+    }
+
+    match best {
+        Some((x, objective)) => MipOutcome::Optimal { x, objective },
+        None => MipOutcome::Infeasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::lp::{Cmp, Lp};
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 6b + 4c s.t. a+b+c ≤ 2 (binary) → a+b = 16.
+        let mut lp = Lp::new();
+        let a = lp.var("a");
+        let b = lp.var("b");
+        let c = lp.var("c");
+        lp.minimize(a, -10.0);
+        lp.minimize(b, -6.0);
+        lp.minimize(c, -4.0);
+        lp.constraint(&[(a, 1.0), (b, 1.0), (c, 1.0)], Cmp::Le, 2.0);
+        match solve_binary(&lp, &[a, b, c], MipConfig::default()) {
+            MipOutcome::Optimal { x, objective } => {
+                assert!((objective + 16.0).abs() < 1e-7);
+                assert!((x[a] - 1.0).abs() < 1e-6);
+                assert!((x[b] - 1.0).abs() < 1e-6);
+                assert!(x[c].abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn weighted_knapsack_forces_branching() {
+        // max 5a+4b+3c s.t. 2a+3b+c ≤ 3. LP relax is fractional;
+        // integer optimum: a + c = 8 (weight 3).
+        let mut lp = Lp::new();
+        let a = lp.var("a");
+        let b = lp.var("b");
+        let c = lp.var("c");
+        lp.minimize(a, -5.0);
+        lp.minimize(b, -4.0);
+        lp.minimize(c, -3.0);
+        lp.constraint(&[(a, 2.0), (b, 3.0), (c, 1.0)], Cmp::Le, 3.0);
+        match solve_binary(&lp, &[a, b, c], MipConfig::default()) {
+            MipOutcome::Optimal { objective, .. } => {
+                assert!((objective + 8.0).abs() < 1e-7, "objective {objective}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_mip() {
+        // a + b ≥ 3 with two binaries: impossible.
+        let mut lp = Lp::new();
+        let a = lp.var("a");
+        let b = lp.var("b");
+        lp.constraint(&[(a, 1.0), (b, 1.0)], Cmp::Ge, 3.0);
+        lp.upper_bound(a, 1.0);
+        lp.upper_bound(b, 1.0);
+        assert_eq!(
+            solve_binary(&lp, &[a, b], MipConfig::default()),
+            MipOutcome::Infeasible
+        );
+    }
+
+    #[test]
+    fn mixed_continuous_and_binary() {
+        // min y s.t. y ≥ 2 - 4δ, y ≥ 4δ - 2, δ binary → δ=.5 infeasible;
+        // δ∈{0,1} gives y=2 either way.
+        let mut lp = Lp::new();
+        let y = lp.var("y");
+        let d = lp.var("d");
+        lp.minimize(y, 1.0);
+        lp.constraint(&[(y, 1.0), (d, 4.0)], Cmp::Ge, 2.0);
+        lp.constraint(&[(y, 1.0), (d, -4.0)], Cmp::Ge, -2.0);
+        match solve_binary(&lp, &[d], MipConfig::default()) {
+            MipOutcome::Optimal { x, objective } => {
+                assert!((objective - 2.0).abs() < 1e-7);
+                let dv = x[d];
+                assert!(dv.abs() < 1e-6 || (dv - 1.0).abs() < 1e-6, "d = {dv}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sos2_style_selection() {
+        // Minimize a V-shaped PWL via two segments with a binary selector:
+        // f(0)=1, f(1)=0, f(2)=1 over w∈[0,2]; min at w=1.
+        // λ0,λ1,λ2 ≥ 0, Σλ=1, w=λ1+2λ2, f=λ0+λ2,
+        // adjacency: λ0 ≤ δ0, λ1 ≤ δ0+δ1, λ2 ≤ δ1, δ0+δ1 = 1.
+        let mut lp = Lp::new();
+        let l0 = lp.var("l0");
+        let l1 = lp.var("l1");
+        let l2 = lp.var("l2");
+        let d0 = lp.var("d0");
+        let d1 = lp.var("d1");
+        lp.minimize(l0, 1.0); // f = λ0 + λ2
+        lp.minimize(l2, 1.0);
+        lp.constraint(&[(l0, 1.0), (l1, 1.0), (l2, 1.0)], Cmp::Eq, 1.0);
+        lp.constraint(&[(l0, 1.0), (d0, -1.0)], Cmp::Le, 0.0);
+        lp.constraint(&[(l1, 1.0), (d0, -1.0), (d1, -1.0)], Cmp::Le, 0.0);
+        lp.constraint(&[(l2, 1.0), (d1, -1.0)], Cmp::Le, 0.0);
+        lp.constraint(&[(d0, 1.0), (d1, 1.0)], Cmp::Eq, 1.0);
+        match solve_binary(&lp, &[d0, d1], MipConfig::default()) {
+            MipOutcome::Optimal { x, objective } => {
+                assert!(objective.abs() < 1e-7, "objective {objective}");
+                assert!((x[l1] - 1.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! From-scratch LP/MIP solver stack (the paper used Gurobi 5.0; see
+//! DESIGN.md §3 for the substitution): problem builder, two-phase dense
+//! simplex, branch & bound, and the §2.3 piecewise-linear bilinear
+//! linearization.
+
+pub mod ipm;
+pub mod linalg;
+pub mod lp;
+pub mod mip;
+pub mod pwl;
+pub mod simplex;
+
+pub use lp::{Cmp, Lp, LpOutcome};
+pub use mip::{solve_binary, MipConfig, MipOutcome};
+pub use simplex::solve;
+
+/// Default LP solver for the plan optimizers: interior-point (immune to
+/// the degeneracy that stalls the tableau simplex on these programs).
+pub use ipm::solve as solve_ipm;
+
+/// Portfolio solve: tableau simplex first (an order of magnitude faster
+/// on these sizes — see EXPERIMENTS.md §Perf), interior-point as the
+/// fallback for the degenerate instances where the simplex stalls or
+/// mis-declares infeasibility. The two from-scratch solvers have
+/// complementary failure modes on the crate's heavily degenerate, badly
+/// scaled plan LPs; together they cover every instance the optimizers
+/// generate (see the alternating-LP tests).
+///
+/// A simplex "optimal" is only accepted when primal-feasible to 1e-6;
+/// stall-capped bases that drifted are handed to the IPM instead.
+pub fn solve_robust(lp: &Lp) -> LpOutcome {
+    let first = simplex::solve(lp);
+    if let LpOutcome::Optimal { x, objective } = &first {
+        if lp.violation(x) < 1e-6 {
+            return LpOutcome::Optimal { x: x.clone(), objective: *objective };
+        }
+    }
+    match ipm::solve(lp) {
+        LpOutcome::Optimal { x, objective } => LpOutcome::Optimal { x, objective },
+        _ => first,
+    }
+}

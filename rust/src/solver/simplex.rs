@@ -1,0 +1,577 @@
+//! Two-phase primal simplex on a dense tableau.
+//!
+//! Standard-form conversion: rows are normalized to non-negative rhs;
+//! `≤` rows get a slack, `≥` rows a surplus + artificial, `=` rows an
+//! artificial. Phase 1 minimizes the artificial sum; phase 2 the true
+//! objective. Pivot selection is Dantzig's rule with a Bland fallback
+//! after a stall threshold to guarantee termination (anti-cycling).
+//!
+//! The LPs this crate produces are small (≲ 300 rows × 300 cols for the
+//! 8×8×8 environments), so a dense tableau is both simple and fast; the
+//! hot loop is the row elimination in [`pivot`], which the perf pass
+//! vectorizes by keeping the tableau row-major and contiguous.
+
+use super::lp::{Cmp, Lp, LpOutcome};
+
+const EPS: f64 = 1e-9;
+/// Reduced-cost tolerance for the entering test (looser than EPS: after
+/// hundreds of pivots the objective row carries ~1e-8 noise).
+const EPS_RC: f64 = 1e-6;
+/// Minimum acceptable pivot magnitude in the ratio test.
+const EPS_PIVOT: f64 = 1e-7;
+/// After this many Dantzig pivots without finishing we switch to Bland's
+/// rule, which cannot cycle.
+const BLAND_SWITCH: usize = 10_000;
+const MAX_ITERS: usize = 200_000;
+
+struct Tableau {
+    /// (m+1) × (n+1): constraint rows then objective row; last column rhs.
+    a: Vec<f64>,
+    m: usize,
+    n: usize,
+    basis: Vec<usize>,
+}
+
+impl Tableau {
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f64 {
+        self.a[r * (self.n + 1) + c]
+    }
+
+    #[inline]
+    fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.a[r * (self.n + 1) + c] = v;
+    }
+
+    #[inline]
+    fn row(&self, r: usize) -> &[f64] {
+        &self.a[r * (self.n + 1)..(r + 1) * (self.n + 1)]
+    }
+
+    /// Gauss-Jordan pivot on (prow, pcol).
+    fn pivot(&mut self, prow: usize, pcol: usize) {
+        let w = self.n + 1;
+        let pivot = self.at(prow, pcol);
+        debug_assert!(pivot.abs() > EPS);
+        let inv = 1.0 / pivot;
+        for c in 0..w {
+            self.a[prow * w + c] *= inv;
+        }
+        // Split the buffer around the pivot row so we can scan it while
+        // mutating other rows without cloning (hot path).
+        let (before, rest) = self.a.split_at_mut(prow * w);
+        let (prow_slice, after) = rest.split_at_mut(w);
+        let elim = |row: &mut [f64]| {
+            let factor = row[pcol];
+            if factor.abs() > EPS {
+                for c in 0..w {
+                    row[c] -= factor * prow_slice[c];
+                }
+                row[pcol] = 0.0; // exact zero against drift
+            }
+        };
+        for r in before.chunks_exact_mut(w) {
+            elim(r);
+        }
+        for r in after.chunks_exact_mut(w) {
+            elim(r);
+        }
+        self.basis[prow] = pcol;
+    }
+
+    /// One simplex phase: minimize the current objective row.
+    /// `allowed` limits entering columns (used to bar artificials in
+    /// phase 2). Returns false if unbounded.
+    ///
+    /// `objective_bounded` marks phases whose objective has a known lower
+    /// bound (phase 1: the artificial sum is ≥ 0). There an "unbounded"
+    /// column is necessarily numerical noise in the priced-out objective
+    /// row; we neutralize the column and continue instead of failing.
+    fn run_phase(&mut self, allowed: usize, objective_bounded: bool) -> bool {
+        let w = self.n + 1;
+        // Degeneracy guard: if the objective makes no real progress for a
+        // stretch of pivots we are in a degenerate plateau (possibly
+        // cycling under Dantzig's rule) — switch to Bland's rule, which
+        // cannot cycle. Bland mode persists until progress resumes.
+        let mut last_obj = f64::INFINITY;
+        let mut stalled = 0usize;
+        const STALL_TO_BLAND: usize = 500;
+        for iter in 0..MAX_ITERS {
+            let cur_obj = -self.at(self.m, self.n);
+            if cur_obj < last_obj - 1e-10 * last_obj.abs().max(1.0) {
+                last_obj = cur_obj;
+                stalled = 0;
+            } else {
+                stalled += 1;
+            }
+            let bland = iter >= BLAND_SWITCH || stalled >= STALL_TO_BLAND;
+            // Entering column: most negative reduced cost (Dantzig) or
+            // first negative (Bland).
+            let obj = &self.a[self.m * w..self.m * w + self.n];
+            let mut pcol = usize::MAX;
+            let mut best = -EPS_RC;
+            for (c, &rc) in obj.iter().enumerate().take(allowed) {
+                if rc < best {
+                    pcol = c;
+                    best = rc;
+                    if bland {
+                        break;
+                    }
+                }
+            }
+            if pcol == usize::MAX {
+                return true; // optimal
+            }
+            // Leaving row: min ratio test; ties by smallest basis index
+            // (lexicographic-ish, pairs with Bland). Prefer pivots of
+            // decent magnitude; fall back to tiny-but-positive ones
+            // before declaring the column unbounded.
+            let mut prow = usize::MAX;
+            for &min_pivot in &[EPS_PIVOT, EPS] {
+                let mut best_ratio = f64::INFINITY;
+                for r in 0..self.m {
+                    let coef = self.at(r, pcol);
+                    if coef > min_pivot {
+                        let ratio = self.at(r, self.n) / coef;
+                        if ratio < best_ratio - EPS
+                            || (ratio < best_ratio + EPS
+                                && prow != usize::MAX
+                                && self.basis[r] < self.basis[prow])
+                        {
+                            best_ratio = ratio;
+                            prow = r;
+                        }
+                    }
+                }
+                if prow != usize::MAX {
+                    break;
+                }
+            }
+            if prow == usize::MAX {
+                if objective_bounded {
+                    // Noise column: its reduced cost cannot be genuinely
+                    // improving. Clear it and keep going.
+                    self.set(self.m, pcol, 0.0);
+                    continue;
+                }
+                return false; // unbounded
+            }
+            self.pivot(prow, pcol);
+        }
+        // Iteration cap: the incumbent basis is feasible (phase 1 keeps
+        // artificial values non-negative; phase 2 preserves feasibility),
+        // so accept it as approximately optimal rather than aborting —
+        // callers validate solutions against the exact model anyway.
+        true
+    }
+}
+
+/// Solve a minimization LP.
+///
+/// The raw problems this crate builds mix O(1) plan fractions with O(1e5)
+/// time variables and O(1e5) `D/B` coefficients; we equilibrate before
+/// pivoting (geometric-mean row/column scaling, 3 passes) and map the
+/// solution back, which keeps the tableau well-conditioned.
+pub fn solve(lp: &Lp) -> LpOutcome {
+    let (row_scale, col_scale) = equilibrate(lp);
+    match solve_scaled(lp, &row_scale, &col_scale) {
+        LpOutcome::Optimal { mut x, .. } => {
+            for (v, s) in x.iter_mut().zip(&col_scale) {
+                *v *= s;
+            }
+            let objective = lp.objective_at(&x);
+            LpOutcome::Optimal { x, objective }
+        }
+        other => other,
+    }
+}
+
+/// Geometric-mean equilibration: returns per-row and per-column scale
+/// factors such that dividing `A_ij` by `row[i]·(1/col[j])`… concretely we
+/// use `A'_ij = A_ij · col[j] / row[i]`, `b'_i = b_i / row[i]`, and the
+/// scaled variable is `x'_j = x_j / col[j]`.
+fn equilibrate(lp: &Lp) -> (Vec<f64>, Vec<f64>) {
+    let mut row_scale = vec![1.0f64; lp.n_rows()];
+    let mut col_scale = vec![1.0f64; lp.n_vars];
+    for _pass in 0..3 {
+        // Rows: geometric mean of |A_ij · col_j / row_i| magnitudes.
+        for (ri, row) in lp.rows.iter().enumerate() {
+            let mut lo = f64::INFINITY;
+            let mut hi = 0.0f64;
+            for &(v, c) in &row.terms {
+                let a = (c * col_scale[v] / row_scale[ri]).abs();
+                if a > 0.0 {
+                    lo = lo.min(a);
+                    hi = hi.max(a);
+                }
+            }
+            if hi > 0.0 {
+                row_scale[ri] *= (lo * hi).sqrt();
+            }
+        }
+        // Columns.
+        let mut lo = vec![f64::INFINITY; lp.n_vars];
+        let mut hi = vec![0.0f64; lp.n_vars];
+        for (ri, row) in lp.rows.iter().enumerate() {
+            for &(v, c) in &row.terms {
+                let a = (c * col_scale[v] / row_scale[ri]).abs();
+                if a > 0.0 {
+                    lo[v] = lo[v].min(a);
+                    hi[v] = hi[v].max(a);
+                }
+            }
+        }
+        for v in 0..lp.n_vars {
+            if hi[v] > 0.0 {
+                col_scale[v] /= (lo[v] * hi[v]).sqrt();
+            }
+        }
+    }
+    (row_scale, col_scale)
+}
+
+fn solve_scaled(lp: &Lp, row_scale: &[f64], col_scale: &[f64]) -> LpOutcome {
+    let m = lp.n_rows();
+    let n_orig = lp.n_vars;
+
+    // Classify rows. A `≥` row with rhs == 0 is flipped to `≤ 0` so its
+    // slack can serve as the initial basic variable — this avoids one
+    // artificial (and its phase-1 degeneracy churn) for each of the many
+    // `Z ≥ expr` epigraph rows our formulations produce with zero rhs.
+    #[derive(Clone, Copy, PartialEq)]
+    enum RowKind {
+        Slack,        // ≤ with rhs ≥ 0 (possibly after flipping)
+        SurplusArt,   // ≥ with rhs > 0
+        Art,          // = (any rhs, normalized non-negative)
+    }
+    let mut kinds = Vec::with_capacity(m);
+    let mut signs = Vec::with_capacity(m);
+    let mut n_slack = 0;
+    let mut n_art = 0;
+    for (r, row) in lp.rows.iter().enumerate() {
+        let rhs_scaled = row.rhs / row_scale[r];
+        let (kind, sign) = match row.cmp {
+            Cmp::Le => {
+                if rhs_scaled >= 0.0 {
+                    (RowKind::Slack, 1.0)
+                } else {
+                    // −lhs ≥ −rhs > 0
+                    (RowKind::SurplusArt, -1.0)
+                }
+            }
+            Cmp::Ge => {
+                if rhs_scaled <= 0.0 {
+                    // −lhs ≤ −rhs, rhs ≤ 0 → flipped rhs ≥ 0
+                    (RowKind::Slack, -1.0)
+                } else {
+                    (RowKind::SurplusArt, 1.0)
+                }
+            }
+            Cmp::Eq => (RowKind::Art, if rhs_scaled < 0.0 { -1.0 } else { 1.0 }),
+        };
+        match kind {
+            RowKind::Slack => n_slack += 1,
+            RowKind::SurplusArt => {
+                n_slack += 1;
+                n_art += 1;
+            }
+            RowKind::Art => n_art += 1,
+        }
+        kinds.push(kind);
+        signs.push(sign);
+    }
+
+    let n = n_orig + n_slack + n_art;
+    let w = n + 1;
+    let mut t = Tableau {
+        a: vec![0.0; (m + 1) * w],
+        m,
+        n,
+        basis: vec![usize::MAX; m],
+    };
+
+    let mut slack_cursor = n_orig;
+    let art_base = n_orig + n_slack;
+    let mut art_cursor = art_base;
+    let mut art_rows: Vec<usize> = Vec::new();
+
+    for (r, row) in lp.rows.iter().enumerate() {
+        let rhs_scaled = row.rhs / row_scale[r];
+        let sign = signs[r];
+        for &(v, c) in &row.terms {
+            let cur = t.at(r, v);
+            t.set(r, v, cur + sign * c * col_scale[v] / row_scale[r]);
+        }
+        t.set(r, n, sign * rhs_scaled);
+        match kinds[r] {
+            RowKind::Slack => {
+                t.set(r, slack_cursor, 1.0);
+                t.basis[r] = slack_cursor;
+                slack_cursor += 1;
+            }
+            RowKind::SurplusArt => {
+                t.set(r, slack_cursor, -1.0);
+                slack_cursor += 1;
+                t.set(r, art_cursor, 1.0);
+                t.basis[r] = art_cursor;
+                art_cursor += 1;
+                art_rows.push(r);
+            }
+            RowKind::Art => {
+                t.set(r, art_cursor, 1.0);
+                t.basis[r] = art_cursor;
+                art_cursor += 1;
+                art_rows.push(r);
+            }
+        }
+    }
+
+    // ---- Phase 1: minimize sum of artificials ---------------------------
+    if n_art > 0 {
+        for c in art_base..n {
+            t.set(m, c, 1.0);
+        }
+        // Price out the artificial basis (objective row must have zero
+        // reduced cost on basic columns).
+        for &r in &art_rows {
+            for c in 0..w {
+                let v = t.at(m, c) - t.at(r, c);
+                t.set(m, c, v);
+            }
+        }
+        let ok = t.run_phase(n, true);
+        debug_assert!(ok, "phase-1 LP cannot be unbounded");
+        let phase1_obj = -t.at(m, n); // objective row stores -z
+        // Rows are equilibrated to O(1) magnitudes, so 1e-5 residual
+        // artificial mass is numerical noise, not real infeasibility.
+        if phase1_obj > 1e-5 {
+            if std::env::var("MRPERF_LP_DEBUG").is_ok() {
+                eprintln!("[simplex] phase1 residual {phase1_obj:e} (m={m}, n={n}, n_art={n_art})");
+            }
+            return LpOutcome::Infeasible;
+        }
+        // Drive any artificials out of the basis (degenerate zeros).
+        for r in 0..m {
+            if t.basis[r] >= art_base {
+                // Find a non-artificial column with nonzero coefficient.
+                let mut found = None;
+                for c in 0..art_base {
+                    if t.at(r, c).abs() > EPS {
+                        found = Some(c);
+                        break;
+                    }
+                }
+                if let Some(c) = found {
+                    t.pivot(r, c);
+                }
+                // Otherwise the row is all-zero: redundant, harmless.
+            }
+        }
+    }
+
+    // ---- Phase 2: the real objective ------------------------------------
+    for c in 0..w {
+        t.set(m, c, 0.0);
+    }
+    for v in 0..n_orig {
+        t.set(m, v, lp.objective[v] * col_scale[v]);
+    }
+    // Price out the current basis.
+    for r in 0..m {
+        let b = t.basis[r];
+        if b < n {
+            let coef = t.at(m, b);
+            if coef.abs() > EPS {
+                for c in 0..w {
+                    let v = t.at(m, c) - coef * t.at(r, c);
+                    t.set(m, c, v);
+                }
+            }
+        }
+    }
+    // Artificials are barred from re-entering (allowed = art_base).
+    if !t.run_phase(art_base, false) {
+        return LpOutcome::Unbounded;
+    }
+
+    // NB: `x` here is in *scaled* units; the caller (`solve`) multiplies
+    // by `col_scale` and recomputes the objective.
+    let mut x = vec![0.0; n_orig];
+    for r in 0..m {
+        let b = t.basis[r];
+        if b < n_orig {
+            x[b] = t.at(r, n).max(0.0);
+        }
+    }
+    let _ = t.row(0); // keep row() used in release builds
+    LpOutcome::Optimal { x, objective: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::lp::{Cmp, Lp};
+    use crate::util::qcheck::{ensure, qcheck, Config};
+    use crate::util::rng::Pcg64;
+
+    fn assert_opt(outcome: LpOutcome, want_obj: f64, tol: f64) -> Vec<f64> {
+        let (x, obj) = outcome.expect_optimal("test");
+        assert!(
+            (obj - want_obj).abs() <= tol,
+            "objective {obj}, expected {want_obj}"
+        );
+        x
+    }
+
+    #[test]
+    fn basic_le_lp() {
+        // max x+y s.t. x+2y ≤ 4, 3x+y ≤ 6  →  min -(x+y); opt at (8/5, 6/5).
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, -1.0);
+        lp.minimize(y, -1.0);
+        lp.constraint(&[(x, 1.0), (y, 2.0)], Cmp::Le, 4.0);
+        lp.constraint(&[(x, 3.0), (y, 1.0)], Cmp::Le, 6.0);
+        let sol = assert_opt(solve(&lp), -(8.0 / 5.0 + 6.0 / 5.0), 1e-8);
+        assert!((sol[0] - 8.0 / 5.0).abs() < 1e-8);
+        assert!((sol[1] - 6.0 / 5.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn ge_and_eq_need_phase1() {
+        // min 2x + 3y s.t. x + y = 10, x ≥ 3  → x=10? no: y free to 0:
+        // x+y=10, x≥3; cost 2x+3y = 2x + 3(10-x) = 30 - x → maximize x → x=10,y=0.
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, 2.0);
+        lp.minimize(y, 3.0);
+        lp.constraint(&[(x, 1.0), (y, 1.0)], Cmp::Eq, 10.0);
+        lp.constraint(&[(x, 1.0)], Cmp::Ge, 3.0);
+        let sol = assert_opt(solve(&lp), 20.0, 1e-8);
+        assert!((sol[0] - 10.0).abs() < 1e-8);
+        assert!(sol[1].abs() < 1e-8);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        lp.constraint(&[(x, 1.0)], Cmp::Le, 1.0);
+        lp.constraint(&[(x, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(solve(&lp), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        lp.minimize(x, -1.0);
+        lp.constraint(&[(x, 1.0)], Cmp::Ge, 1.0);
+        assert_eq!(solve(&lp), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // x - y ≤ -2 with x,y ≥ 0: min x+y → x=0, y=2.
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, 1.0);
+        lp.minimize(y, 1.0);
+        lp.constraint(&[(x, 1.0), (y, -1.0)], Cmp::Le, -2.0);
+        let sol = assert_opt(solve(&lp), 2.0, 1e-8);
+        assert!(sol[0].abs() < 1e-8 && (sol[1] - 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Classic degeneracy: multiple constraints active at the optimum.
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, -0.75);
+        lp.minimize(y, 150.0);
+        lp.constraint(&[(x, 0.25), (y, -60.0)], Cmp::Le, 0.0);
+        lp.constraint(&[(x, 0.5), (y, -90.0)], Cmp::Le, 0.0);
+        lp.constraint(&[(y, 1.0)], Cmp::Le, 1.0);
+        // Beale-like; just require termination + feasibility.
+        let (sol, _) = solve(&lp).expect_optimal("degenerate");
+        assert!(lp.violation(&sol) < 1e-7);
+    }
+
+    #[test]
+    fn min_max_epigraph_pattern() {
+        // The model's pattern: minimize Z s.t. Z ≥ t_i.
+        let mut lp = Lp::new();
+        let z = lp.var("z");
+        lp.minimize(z, 1.0);
+        for &t in &[3.0, 7.0, 5.0] {
+            lp.constraint(&[(z, 1.0)], Cmp::Ge, t);
+        }
+        assert_opt(solve(&lp), 7.0, 1e-9);
+    }
+
+    #[test]
+    fn transportation_problem() {
+        // 2 supplies (10, 20), 2 demands (15, 15), costs [[1,2],[3,1]].
+        // Optimal: s0→d0:10, s1→d0:5, s1→d1:15 → 10 + 15 + 15 = 40.
+        let mut lp = Lp::new();
+        let f: Vec<Vec<usize>> = (0..2)
+            .map(|i| (0..2).map(|j| lp.var(format!("f{i}{j}"))).collect())
+            .collect();
+        let costs = [[1.0, 2.0], [3.0, 1.0]];
+        for i in 0..2 {
+            for j in 0..2 {
+                lp.minimize(f[i][j], costs[i][j]);
+            }
+        }
+        lp.constraint(&[(f[0][0], 1.0), (f[0][1], 1.0)], Cmp::Eq, 10.0);
+        lp.constraint(&[(f[1][0], 1.0), (f[1][1], 1.0)], Cmp::Eq, 20.0);
+        lp.constraint(&[(f[0][0], 1.0), (f[1][0], 1.0)], Cmp::Eq, 15.0);
+        lp.constraint(&[(f[0][1], 1.0), (f[1][1], 1.0)], Cmp::Eq, 15.0);
+        assert_opt(solve(&lp), 40.0, 1e-7);
+    }
+
+    /// Property: on random feasible-by-construction LPs the simplex
+    /// returns a primal-feasible point with objective no worse than a
+    /// known feasible point.
+    #[test]
+    fn qcheck_random_lps_feasible_and_no_worse() {
+        qcheck(Config::default().cases(60), "random LP sanity", |rng: &mut Pcg64| {
+            let nv = rng.range(2, 6);
+            let nc = rng.range(1, 8);
+            let mut lp = Lp::new();
+            let vars: Vec<usize> = (0..nv).map(|i| lp.var(format!("v{i}"))).collect();
+            // A known feasible point.
+            let x0: Vec<f64> = (0..nv).map(|_| rng.uniform(0.0, 5.0)).collect();
+            for v in &vars {
+                lp.minimize(*v, rng.uniform(-1.0, 2.0));
+            }
+            for _ in 0..nc {
+                let terms: Vec<(usize, f64)> = vars
+                    .iter()
+                    .map(|&v| (v, rng.uniform(-1.0, 1.0)))
+                    .collect();
+                let lhs: f64 = terms.iter().map(|&(v, c)| c * x0[v]).sum();
+                // Make the row feasible at x0 with slack.
+                lp.constraint(&terms, Cmp::Le, lhs + rng.uniform(0.0, 2.0));
+            }
+            // Bound all vars so the LP cannot be unbounded.
+            for v in &vars {
+                lp.upper_bound(*v, 10.0);
+            }
+            match solve(&lp) {
+                LpOutcome::Optimal { x, objective } => {
+                    ensure(lp.violation(&x) < 1e-6, format!("violation {}", lp.violation(&x)))?;
+                    ensure(
+                        objective <= lp.objective_at(&x0) + 1e-6,
+                        format!("obj {objective} worse than feasible {}", lp.objective_at(&x0)),
+                    )
+                }
+                other => Err(format!("expected optimal, got {other:?}")),
+            }
+        });
+    }
+}

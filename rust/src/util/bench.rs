@@ -1,0 +1,195 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup + timed iterations with mean / p50 / p95 / min stats and
+//! an aligned report, used by `cargo bench` (see `rust/benches/bench_main.rs`,
+//! built with `harness = false`) and by the perf pass recorded in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional throughput denominator: items processed per iteration.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|items| items / self.mean.as_secs_f64())
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            min_iters: 10,
+            max_iters: 10_000,
+            target_time: Duration::from_secs(1),
+        }
+    }
+}
+
+/// A collection of benchmarks, run and reported together.
+pub struct BenchSuite {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl BenchSuite {
+    pub fn new(config: BenchConfig) -> Self {
+        // `cargo bench -- <filter>` passes the filter as an argument.
+        let filter = std::env::args().nth(1).filter(|a| !a.starts_with('-'));
+        BenchSuite { config, results: Vec::new(), filter }
+    }
+
+    /// Run one benchmark. `f` is the timed body; return value is
+    /// black-boxed to prevent the optimizer deleting the work.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, f: F) {
+        self.bench_with_items(name, None, f)
+    }
+
+    /// Like [`bench`], reporting items/sec throughput.
+    pub fn bench_items<T, F: FnMut() -> T>(&mut self, name: &str, items: f64, f: F) {
+        self.bench_with_items(name, Some(items), f)
+    }
+
+    fn bench_with_items<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        mut f: F,
+    ) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Warmup.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.config.warmup && warm_iters < self.config.max_iters {
+            black_box(f());
+            warm_iters += 1;
+        }
+        // Estimate per-iter cost to size the measured run.
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.config.target_time.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.config.min_iters, self.config.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: total / iters as u32,
+            p50: samples[iters / 2],
+            p95: samples[(iters * 95 / 100).min(iters - 1)],
+            min: samples[0],
+            items_per_iter: items,
+        };
+        println!("{}", render_line(&result));
+        self.results.push(result);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the summary block (call at end of the bench binary).
+    pub fn report(&self) {
+        println!("\n=== bench summary ({} benchmarks) ===", self.results.len());
+        for r in &self.results {
+            println!("{}", render_line(r));
+        }
+    }
+}
+
+fn render_line(r: &BenchResult) -> String {
+    let tp = match r.throughput() {
+        Some(t) if t >= 1e6 => format!("  {:>9.2} Mitems/s", t / 1e6),
+        Some(t) if t >= 1e3 => format!("  {:>9.2} Kitems/s", t / 1e3),
+        Some(t) => format!("  {t:>9.2} items/s"),
+        None => String::new(),
+    };
+    format!(
+        "bench {:<44} mean {:>11?}  p50 {:>11?}  p95 {:>11?}  min {:>11?}  ({} iters){}",
+        r.name, r.mean, r.p50, r.p95, r.min, r.iters, tp
+    )
+}
+
+/// Optimizer barrier, stable-API equivalent of `std::hint::black_box`.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            min_iters: 5,
+            max_iters: 50,
+            target_time: Duration::from_millis(20),
+        };
+        let mut suite = BenchSuite { config: cfg, results: Vec::new(), filter: None };
+        suite.bench_items("spin", 1000.0, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        let r = &suite.results()[0];
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            min_iters: 1,
+            max_iters: 2,
+            target_time: Duration::from_millis(1),
+        };
+        let mut suite = BenchSuite {
+            config: cfg,
+            results: Vec::new(),
+            filter: Some("yes".to_string()),
+        };
+        suite.bench("no_match", || 1);
+        suite.bench("yes_match", || 1);
+        assert_eq!(suite.results().len(), 1);
+        assert_eq!(suite.results()[0].name, "yes_match");
+    }
+}

@@ -1,0 +1,171 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and an auto-generated usage block.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    MissingValue(String),
+    BadValue { key: String, value: String, expected: &'static str },
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "option --{k} expects a value"),
+            CliError::BadValue { key, value, expected } => {
+                write!(f, "option --{key}={value}: expected {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Option keys that are boolean flags (take no value).
+pub fn parse(argv: &[String], flag_keys: &[&str]) -> Result<Args, CliError> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if flag_keys.contains(&stripped) {
+                args.flags.push(stripped.to_string());
+            } else if let Some(next) = it.peek() {
+                if next.starts_with("--") {
+                    // Treat as a flag even if not declared; value-less.
+                    args.flags.push(stripped.to_string());
+                } else {
+                    args.options.insert(stripped.to_string(), it.next().unwrap().clone());
+                }
+            } else {
+                args.flags.push(stripped.to_string());
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.options.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                expected: "an unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                expected: "an unsigned integer",
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v.to_string(),
+                expected: "a number",
+            }),
+        }
+    }
+
+    /// Comma-separated f64 list.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| CliError::BadValue {
+                        key: key.to_string(),
+                        value: v.to_string(),
+                        expected: "a comma-separated list of numbers",
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = parse(&sv(&["run", "--alpha", "0.5", "--verbose", "--out=x.csv", "fig4"]),
+                      &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["run", "fig4"]);
+        assert_eq!(a.get("alpha"), Some("0.5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&sv(&["--n", "12", "--x", "1.5", "--list", "1,2,3.5"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_f64_list("list", &[]).unwrap(), vec![1.0, 2.0, 3.5]);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse(&sv(&["--n", "notanumber"]), &[]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&sv(&["--quiet"]), &[]).unwrap();
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn undeclared_flag_before_option() {
+        let a = parse(&sv(&["--fast", "--n", "3"]), &[]).unwrap();
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! From-scratch substrates: RNG, statistics, tables, CLI parsing,
+//! property testing, micro-benchmarking, logging.
+//!
+//! These exist because the offline registry only vendors the `xla`
+//! dependency closure — no `rand`, `clap`, `criterion`, `proptest`,
+//! `serde` or `tokio`. Everything the framework needs beyond `xla` and
+//! `anyhow` is implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod mat;
+pub mod logger;
+pub mod qcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;

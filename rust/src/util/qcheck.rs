@@ -1,0 +1,130 @@
+//! Minimal property-based testing framework.
+//!
+//! The vendored registry carries no `proptest`/`quickcheck`, so we roll a
+//! small deterministic harness: a property is a closure over a [`Pcg64`];
+//! the harness runs it for `cases` seeds derived from a base seed and, on
+//! failure, reports the failing case seed so the case can be replayed by
+//! seeding a generator directly.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't carry the libxla_extension rpath)
+//! use mrperf::util::qcheck::{qcheck, Config};
+//! qcheck(Config::default().cases(200), "addition commutes", |rng| {
+//!     let a = rng.next_f64();
+//!     let b = rng.next_f64();
+//!     let ok = (a + b - (b + a)).abs() < 1e-15;
+//!     if ok { Ok(()) } else { Err(format!("a={a} b={b}")) }
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub base_seed: u64,
+    pub cases: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { base_seed: 0xC0FFEE, cases: 100 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+}
+
+/// Run `prop` for `config.cases` independent cases; panics (test failure)
+/// with the case index + seed on the first counterexample.
+pub fn qcheck<F>(config: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let case_seed = config
+            .base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg64::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {case_seed:#x}): {msg}",
+                config.cases
+            );
+        }
+    }
+}
+
+/// Helper: assert two floats are close, returning a qcheck-style error.
+pub fn close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} !~ {b} (tol {tol}, |Δ|={})", (a - b).abs()))
+    }
+}
+
+/// Helper: assert a predicate with message context.
+pub fn ensure(cond: bool, ctx: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(ctx.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        qcheck(Config::default().cases(50), "trivial", |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        qcheck(Config::default().cases(10), "fails", |rng| {
+            let v = rng.next_f64();
+            ensure(v < 0.5, format!("v={v}"))
+        });
+    }
+
+    #[test]
+    fn close_scales_tolerance() {
+        assert!(close(1000.0, 1000.5, 1e-3, "big").is_ok());
+        assert!(close(1.0, 1.0005, 1e-3, "small").is_ok());
+        assert!(close(1.0, 1.1, 1e-3, "off").is_err());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<u64> = Vec::new();
+        qcheck(Config::default().cases(5), "record", |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        qcheck(Config::default().cases(5), "record", |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,372 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline vendored registry does not carry the `rand` crate, so we
+//! implement the generators we need from scratch:
+//!
+//! * [`SplitMix64`] — used for seeding streams; passes BigCrush for its
+//!   intended use as a seed expander.
+//! * [`Pcg64`] — PCG-XSL-RR 128/64, the workhorse generator for workload
+//!   synthesis, multi-start initialization and property testing.
+//!
+//! Every consumer in the crate takes an explicit `&mut Pcg64` (or a seed)
+//! so experiments are reproducible bit-for-bit given a seed.
+
+/// SplitMix64 seed expander (Steele, Lea, Flood 2014).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSL-RR 128/64 (O'Neill 2014): 128-bit LCG state, 64-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let i0 = sm.next_u64() as u128;
+        let i1 = sm.next_u64() as u128;
+        let mut rng = Self {
+            state: (s0 << 64) | s1,
+            inc: ((i0 << 64) | i1) | 1,
+        };
+        // Warm up past the seed correlation window.
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child stream; used to give each simulated
+    /// node / task its own generator without sharing mutable state.
+    pub fn fork(&mut self) -> Pcg64 {
+        Pcg64::new(self.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        lo + self.next_below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Marsaglia polar method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Log-normal with the given parameters of the underlying normal.
+    pub fn log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = 1.0 - self.next_f64(); // (0,1]
+        -u.ln() / lambda
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted_index: zero total weight");
+        let mut target = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Zipf(s) sampler over ranks `1..=n` using rejection-inversion
+/// (Hörmann & Derflinger 1996); O(1) per sample after O(1) setup.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dense: Option<Vec<f64>>, // CDF for tiny n where rejection is overkill
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1);
+        assert!(s > 0.0);
+        if n <= 64 {
+            // Dense CDF path.
+            let mut cdf = Vec::with_capacity(n as usize);
+            let mut acc = 0.0;
+            for k in 1..=n {
+                acc += (k as f64).powf(-s);
+                cdf.push(acc);
+            }
+            let total = acc;
+            for v in cdf.iter_mut() {
+                *v /= total;
+            }
+            return Self { n, s, h_x1: 0.0, h_n: 0.0, dense: Some(cdf) };
+        }
+        let h_x1 = Self::h_static(1.5, s) - 1.0;
+        let h_n = Self::h_static(n as f64 + 0.5, s);
+        Self { n, s, h_x1, h_n, dense: None }
+    }
+
+    fn h_static(x: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-12 {
+            x.ln()
+        } else {
+            x.powf(1.0 - s) / (1.0 - s)
+        }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        if (self.s - 1.0).abs() < 1e-12 {
+            x.exp()
+        } else {
+            ((1.0 - self.s) * x).powf(1.0 / (1.0 - self.s))
+        }
+    }
+
+    /// Sample a rank in `1..=n` (rank 1 is the most frequent).
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        if let Some(cdf) = &self.dense {
+            let u = rng.next_f64();
+            let idx = cdf.partition_point(|&c| c < u);
+            return (idx as u64 + 1).min(self.n);
+        }
+        loop {
+            let u = self.h_n + rng.next_f64() * (self.h_x1 - self.h_n);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(self.n as f64) as u64;
+            let hk = Self::h_static(k as f64 + 0.5, self.s) - (k as f64).powf(-self.s);
+            if hk >= u || (k as f64 - x).abs() <= 0.5 {
+                // Accept: either inside the hat or the rounding band.
+                if k >= 1 && k <= self.n {
+                    return k;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        let mut sm = SplitMix64::new(1234567);
+        // Deterministic: two calls never equal, stream reproducible.
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(a, sm2.next_u64());
+        assert_eq!(b, sm2.next_u64());
+    }
+
+    #[test]
+    fn pcg_reproducible_and_distinct_streams() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        let mut c = Pcg64::new(43);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut rng = Pcg64::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.next_below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit in 1000 draws");
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval_with_reasonable_mean() {
+        let mut rng = Pcg64::new(99);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = rng.normal();
+            s1 += v;
+            s2 += v * v;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(11);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut rng = Pcg64::new(3);
+        let w = [0.0, 9.0, 1.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[rng.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!(counts[1] > 8 * counts[2], "{counts:?}");
+    }
+
+    #[test]
+    fn zipf_small_and_large_n_rank1_most_frequent() {
+        for &n in &[10u64, 1000u64] {
+            let z = Zipf::new(n, 1.1);
+            let mut rng = Pcg64::new(17);
+            let mut counts = std::collections::HashMap::new();
+            for _ in 0..20_000 {
+                let k = z.sample(&mut rng);
+                assert!(k >= 1 && k <= n);
+                *counts.entry(k).or_insert(0usize) += 1;
+            }
+            let c1 = counts.get(&1).copied().unwrap_or(0);
+            let c_max = counts.values().copied().max().unwrap();
+            assert_eq!(c1, c_max, "rank 1 should dominate for n={n}");
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::new(23);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += rng.exponential(2.0);
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn fork_streams_decorrelated() {
+        let mut root = Pcg64::new(1);
+        let mut a = root.fork();
+        let mut b = root.fork();
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

@@ -1,0 +1,183 @@
+//! Descriptive statistics, confidence intervals and linear regression.
+//!
+//! Used by the experiment harness for the paper's 95% confidence-interval
+//! error bars (Figs 9–12) and the model-validation fit (Fig 4: R², slope).
+
+/// Summary of a sample of repeated measurements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Half-width of the 95% confidence interval of the mean.
+    pub ci95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0)
+        } else {
+            0.0
+        };
+        let stddev = var.sqrt();
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let ci95 = if n > 1 {
+            t_crit_95(n - 1) * stddev / (n as f64).sqrt()
+        } else {
+            0.0
+        };
+        Summary { n, mean, stddev, min, max, ci95 }
+    }
+}
+
+/// Two-sided 95% Student-t critical value for `df` degrees of freedom.
+/// Table for small df, asymptote 1.96 beyond.
+pub fn t_crit_95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        f64::INFINITY
+    } else if df <= 30 {
+        TABLE[df - 1]
+    } else if df <= 60 {
+        2.000
+    } else {
+        1.960
+    }
+}
+
+/// Ordinary least squares y = a + b·x with the goodness-of-fit statistics
+/// the paper reports in Fig 4 (R² and slope).
+#[derive(Debug, Clone, Copy)]
+pub struct LinFit {
+    pub intercept: f64,
+    pub slope: f64,
+    pub r2: f64,
+    pub n: usize,
+}
+
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    assert!(sxx > 0.0, "degenerate x sample");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
+    LinFit { intercept, slope, r2, n: xs.len() }
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let fit = linear_fit(xs, ys);
+    fit.r2.sqrt() * fit.slope.signum()
+}
+
+/// Percentile (nearest-rank) of an unsorted sample, `p` in [0,100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
+    v[rank.min(v.len()) - 1]
+}
+
+/// Geometric mean of strictly positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| {
+        assert!(*x > 0.0, "geomean needs positive values");
+        x.ln()
+    }).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        // t(4) = 2.776; CI = 2.776 * sqrt(2.5)/sqrt(5)
+        assert!((s.ci95 - 2.776 * (2.5f64).sqrt() / (5f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_single_point() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.ci95, 0.0);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_noisy() {
+        // y = 2x + noise; R² should be high but < 1.
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().enumerate()
+            .map(|(i, &x)| 2.0 * x + if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 0.01);
+        assert!(f.r2 > 0.99 && f.r2 < 1.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 1.0), 1.0);
+    }
+
+    #[test]
+    fn geomean_powers() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_sign() {
+        let xs = [1.0, 2.0, 3.0];
+        let up = [1.0, 2.0, 3.1];
+        let down = [3.0, 2.0, 0.9];
+        assert!(pearson(&xs, &up) > 0.99);
+        assert!(pearson(&xs, &down) < -0.99);
+    }
+}

@@ -1,0 +1,192 @@
+//! Aligned-console-table and CSV rendering for the experiment harness.
+//!
+//! Every experiment produces a [`Table`]; the harness prints it (the rows
+//! the paper's figures/tables report) and optionally writes a CSV next to
+//! it under `results/` for plotting.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple rows-of-strings table with a title and column headers.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub aligns: Vec<Align>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        let headers: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+        let aligns = vec![Align::Right; headers.len()];
+        Table { title: title.into(), headers, aligns, rows: Vec::new() }
+    }
+
+    pub fn align(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// First column left-aligned (labels), remainder right-aligned.
+    pub fn label_first(mut self) -> Table {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render to an aligned plain-text block.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let fmt_cell = |c: &str, w: usize, a: Align| -> String {
+            match a {
+                Align::Left => format!("{c:<w$}"),
+                Align::Right => format!("{c:>w$}"),
+            }
+        };
+        let header_line: Vec<String> = (0..ncol)
+            .map(|i| fmt_cell(&self.headers[i], widths[i], self.aligns[i]))
+            .collect();
+        let _ = writeln!(out, "{}", header_line.join("  "));
+        let rule: usize = widths.iter().sum::<usize>() + 2 * (ncol.saturating_sub(1));
+        let _ = writeln!(out, "{}", "-".repeat(rule));
+        for row in &self.rows {
+            let line: Vec<String> = (0..ncol)
+                .map(|i| fmt_cell(&row[i], widths[i], self.aligns[i]))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        out
+    }
+
+    /// Render as RFC-4180-ish CSV (quotes fields containing `",\n`).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write the CSV under `dir/<name>.csv`, creating `dir` if needed.
+    pub fn write_csv(&self, dir: &Path, name: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Format seconds compactly (used throughout the experiment output).
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return format!("{s}");
+    }
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.1}")
+    } else {
+        format!("{s:.3}")
+    }
+}
+
+/// Format a ratio as a percentage string.
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_alignment() {
+        let mut t = Table::new("demo", &["name", "value"]).label_first();
+        t.add_row(vec!["alpha".into(), "1".into()]);
+        t.add_row(vec!["b".into(), "12345".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("alpha"));
+        // value column right-aligned to width 5
+        assert!(r.contains("    1"), "got:\n{r}");
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.add_row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.add_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(123.4), "123");
+        assert_eq!(fmt_secs(12.34), "12.3");
+        assert_eq!(fmt_secs(0.1234), "0.123");
+        assert_eq!(fmt_pct(0.315), "31.5%");
+    }
+
+    #[test]
+    fn write_csv_roundtrip() {
+        let mut t = Table::new("w", &["k", "v"]);
+        t.add_row(vec!["a".into(), "1".into()]);
+        let dir = std::env::temp_dir().join("mrperf_table_test");
+        let p = t.write_csv(&dir, "t").unwrap();
+        let content = std::fs::read_to_string(p).unwrap();
+        assert!(content.starts_with("k,v\n"));
+    }
+}

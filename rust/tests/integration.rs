@@ -1,0 +1,216 @@
+//! Cross-module integration tests: optimizer → model → engine → runtime.
+
+use mrperf::apps::SyntheticApp;
+use mrperf::engine::job::JobConfig;
+use mrperf::engine::run_job;
+use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::barrier::BarrierConfig;
+use mrperf::model::makespan::{evaluate, makespan, AppModel};
+use mrperf::model::plan::Plan;
+use mrperf::model::smooth::{selectors, smooth_makespan_plan};
+use mrperf::optimizer::{AlternatingLp, Myopic, PlanOptimizer, Uniform};
+use mrperf::platform::{build_env, EnvKind};
+use mrperf::util::qcheck::{ensure, qcheck, Config};
+use mrperf::util::rng::Pcg64;
+
+/// Optimized plans must help (or at least not hurt) in the *engine*,
+/// not just under the model — the end-to-end claim of the paper.
+#[test]
+fn optimized_plan_beats_uniform_in_engine() {
+    let topo = build_env(EnvKind::Global8);
+    for &alpha in &[0.1, 2.0] {
+        let app_model = AppModel::new(alpha);
+        let cfg = BarrierConfig::HADOOP;
+        let plan = AlternatingLp::default().optimize(&topo, app_model, cfg);
+        let uniform = Plan::uniform(8, 8, 8);
+        let app = SyntheticApp::new(alpha);
+        let inputs = synthetic_inputs(8, 1 << 20, 0x1A7E);
+        let jc = JobConfig::default();
+        let m_opt = run_job(&topo, &plan, &app, &jc, &inputs).metrics;
+        let m_uni = run_job(&topo, &uniform, &app, &jc, &inputs).metrics;
+        assert!(
+            m_opt.makespan < m_uni.makespan,
+            "α={alpha}: optimized {} should beat uniform {} in the engine",
+            m_opt.makespan,
+            m_uni.makespan
+        );
+    }
+}
+
+/// The model must *rank* plans the same way the engine does — ranking
+/// fidelity is what makes model-driven optimization legitimate.
+#[test]
+fn model_ranks_plans_like_engine() {
+    let topo = build_env(EnvKind::Global8);
+    let alpha = 1.0;
+    let app_model = AppModel::new(alpha);
+    let cfg = BarrierConfig::HADOOP;
+    let candidates = vec![
+        ("uniform", Uniform.optimize(&topo, app_model, cfg)),
+        ("myopic", Myopic.optimize(&topo, app_model, cfg)),
+        ("e2e", AlternatingLp::default().optimize(&topo, app_model, cfg)),
+        ("local-push", Plan::local_push(&topo)),
+    ];
+    let app = SyntheticApp::new(alpha);
+    let inputs = synthetic_inputs(8, 1 << 20, 0xBEEF);
+    let jc = JobConfig::default();
+    let mut rows = Vec::new();
+    for (name, plan) in &candidates {
+        let pred = makespan(&topo, app_model, cfg, plan);
+        let meas = run_job(&topo, plan, &app, &jc, &inputs).metrics.makespan;
+        rows.push((*name, pred, meas));
+    }
+    // Kendall-τ-like check: no *strong* inversions. Pairs are skipped
+    // when either side is within 15% — at the engine's scaled-down data
+    // volume two near-optimal plans (e.g. myopic vs e2e) can measure as
+    // a tie even when the model separates them (split granularity and
+    // slot effects dominate below a handful of splits per node).
+    for i in 0..rows.len() {
+        for j in (i + 1)..rows.len() {
+            let (na, pa, ma) = rows[i];
+            let (nb, pb, mb) = rows[j];
+            if (pa - pb).abs() / pa.max(pb) < 0.15 || (ma - mb).abs() / ma.max(mb) < 0.15 {
+                continue;
+            }
+            assert_eq!(
+                pa < pb,
+                ma < mb,
+                "rank inversion between {na} (pred {pa}, meas {ma}) and {nb} (pred {pb}, meas {mb})"
+            );
+        }
+    }
+}
+
+/// Property: makespan is monotone — more bandwidth or compute anywhere
+/// never makes a fixed plan slower.
+#[test]
+fn makespan_monotone_in_resources() {
+    qcheck(Config::default().cases(40), "resource monotonicity", |rng: &mut Pcg64| {
+        let topo = build_env(EnvKind::Global4);
+        let plan = Plan::random(8, 8, 8, rng);
+        let app = AppModel::new(rng.uniform(0.1, 5.0));
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let base = makespan(&topo, app, cfg, &plan);
+
+        let mut faster = topo.clone();
+        // Scale up one random resource class.
+        match rng.range(0, 3) {
+            0 => {
+                let i = rng.range(0, faster.b_sm.data().len());
+                faster.b_sm.data_mut()[i] *= rng.uniform(1.0, 10.0);
+            }
+            1 => {
+                let i = rng.range(0, faster.b_mr.data().len());
+                faster.b_mr.data_mut()[i] *= rng.uniform(1.0, 10.0);
+            }
+            _ => {
+                let i = rng.range(0, faster.c_map.len());
+                faster.c_map[i] *= rng.uniform(1.0, 10.0);
+                let k = rng.range(0, faster.c_red.len());
+                faster.c_red[k] *= rng.uniform(1.0, 10.0);
+            }
+        }
+        let improved = makespan(&faster, app, cfg, &plan);
+        ensure(
+            improved <= base + 1e-9,
+            format!("faster resources made it slower: {base} -> {improved}"),
+        )
+    });
+}
+
+/// Property: every optimizer returns valid plans on random environments.
+#[test]
+fn optimizers_always_return_valid_plans() {
+    qcheck(Config::default().cases(15), "optimizer validity", |rng: &mut Pcg64| {
+        let kind = *rng.choose(&EnvKind::all());
+        let topo = build_env(kind);
+        let app = AppModel::new(rng.uniform(0.05, 8.0));
+        let cfg = *rng.choose(&[
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ]);
+        for plan in [
+            Uniform.optimize(&topo, app, cfg),
+            Myopic.optimize(&topo, app, cfg),
+            AlternatingLp { random_starts: 1, ..Default::default() }.optimize(&topo, app, cfg),
+        ] {
+            if let Err(e) = plan.check(&topo) {
+                return Err(format!("{kind:?} α={} cfg={}: {e}", app.alpha, cfg.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Rust smooth model ↔ AOT artifact parity (the L2 contract), checked
+/// through the plan_eval artifact when available.
+#[test]
+fn rust_smooth_model_matches_artifact_numerics() {
+    let Ok(planner) = mrperf::runtime::ArtifactPlanner::load(2, 2, 2) else {
+        return; // artifacts not built; covered by Makefile flow
+    };
+    let _ = planner; // loading itself exercises HLO parse + compile
+    // Full numeric parity is asserted by runtime::client tests (the
+    // §1.3 closed-form vector) and python tests (kernel vs ref).
+
+    // Here: rust smooth upper-bounds rust exact on random plans, with
+    // selector encoding consistent with the artifact convention.
+    let topo = mrperf::platform::topology::example_1_3(100.0e6, 10.0e6, 100.0e6);
+    let app = AppModel::new(1.0);
+    let mut rng = Pcg64::new(5);
+    for cfg in [BarrierConfig::ALL_GLOBAL, BarrierConfig::HADOOP] {
+        let sels = selectors(cfg);
+        assert_eq!(sels.len(), 6);
+        for _ in 0..20 {
+            let plan = Plan::random(2, 2, 2, &mut rng);
+            let hard = makespan(&topo, app, cfg, &plan);
+            let soft = smooth_makespan_plan(&topo, app, cfg, &plan, 400.0 / hard);
+            assert!(soft >= hard - 1e-9);
+            assert!((soft - hard) / hard < 0.05);
+        }
+    }
+}
+
+/// Barrier semantics: engine makespans respect the same ordering the
+/// model predicts (pipelined ≤ global) across apps.
+#[test]
+fn engine_barrier_ordering_matches_model() {
+    use mrperf::model::barrier::Barrier;
+    let topo = build_env(EnvKind::Global4);
+    let app = SyntheticApp::new(1.0);
+    let inputs = synthetic_inputs(8, 1 << 19, 0xBA44);
+    let plan = Plan::uniform(8, 8, 8);
+    let mk = |pm, ms| JobConfig {
+        barriers: BarrierConfig::new(pm, ms, Barrier::Local),
+        ..Default::default()
+    };
+    let g = run_job(&topo, &plan, &app, &mk(Barrier::Global, Barrier::Global), &inputs)
+        .metrics
+        .makespan;
+    let p = run_job(&topo, &plan, &app, &mk(Barrier::Pipelined, Barrier::Pipelined), &inputs)
+        .metrics
+        .makespan;
+    assert!(p <= g * 1.001, "pipelined {p} should not exceed global {g}");
+}
+
+/// Timeline internals are consistent on every environment/barrier combo.
+#[test]
+fn timeline_internal_consistency() {
+    let mut rng = Pcg64::new(77);
+    for kind in EnvKind::all() {
+        let topo = build_env(kind);
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            let plan = Plan::random(8, 8, 8, &mut rng);
+            let tl = evaluate(&topo, AppModel::new(1.5), cfg, &plan);
+            let max = |v: &[f64]| v.iter().cloned().fold(0.0, f64::max);
+            assert!(max(&tl.map_end) >= max(&tl.push_end) - 1e-9 || cfg.push_map == mrperf::model::barrier::Barrier::Pipelined);
+            assert!(tl.makespan >= max(&tl.shuffle_end) - 1e-9 || cfg.shuffle_reduce == mrperf::model::barrier::Barrier::Pipelined);
+            assert!(tl.makespan > 0.0);
+        }
+    }
+}
