@@ -7,7 +7,9 @@
 //! * `solver/*`  — LP solves (IPM + simplex) at paper scale.
 //! * `optimizer/*` — full plan optimizations per scheme (one per paper
 //!   comparison — these are the end-to-end units behind Figs 5–8).
-//! * `engine/*`  — emulated-testbed job execution (Fig 9 unit).
+//! * `engine/*`  — emulated-testbed job execution (Fig 9 unit), plus the
+//!   `engine/scale_*` sweep on generated 64/128/256-node topologies
+//!   (ISSUE 1 acceptance: the 256-node job must complete in < 1 s).
 //! * `runtime/*` — PJRT artifact dispatch (L1/L2 integration), when
 //!   artifacts are present.
 //!
@@ -25,6 +27,7 @@ use mrperf::model::plan::Plan;
 use mrperf::model::smooth::smooth_makespan_plan;
 use mrperf::optimizer::lp_build::{build_lp_x, Objective};
 use mrperf::optimizer::{AlternatingLp, E2ePush, Myopic, PlanOptimizer};
+use mrperf::platform::scale::{generate_kind, ScaleKind};
 use mrperf::platform::{build_env, EnvKind};
 use mrperf::util::bench::{black_box, BenchConfig, BenchSuite};
 use mrperf::util::rng::Pcg64;
@@ -96,6 +99,22 @@ fn main() {
         )
     });
 
+    // ---- engine scale sweep (generated topologies) ------------------------
+    // ISSUE 1 acceptance: a 256-node synthetic job must simulate in < 1 s.
+    for &nodes in &[64usize, 128, 256] {
+        let stopo = generate_kind(ScaleKind::HierarchicalWan, nodes, 7);
+        let splan = Plan::local_push(&stopo);
+        let sinputs = synthetic_inputs(stopo.n_sources(), 2_000, 11);
+        let scale_app = SyntheticApp::new(1.0);
+        suite.bench(&format!("engine/scale_{nodes}node_hier_wan_job"), || {
+            black_box(
+                run_job(&stopo, &splan, &scale_app, &JobConfig::default(), &sinputs)
+                    .metrics
+                    .makespan,
+            )
+        });
+    }
+
     // ---- runtime (PJRT) ---------------------------------------------------
     if let Ok(planner) = mrperf::runtime::ArtifactPlanner::load(8, 8, 8) {
         suite.bench("runtime/artifact_optimize_8x8x8_p16", || {
@@ -106,4 +125,18 @@ fn main() {
     }
 
     suite.report();
+
+    // Surface the ISSUE 1 scale target explicitly.
+    if let Some(r) = suite
+        .results()
+        .iter()
+        .find(|r| r.name.contains("scale_256node"))
+    {
+        let ok = r.mean < Duration::from_secs(1);
+        println!(
+            "\nscale target: 256-node run_job mean {:?} — {}",
+            r.mean,
+            if ok { "PASS (< 1 s)" } else { "FAIL (>= 1 s)" }
+        );
+    }
 }

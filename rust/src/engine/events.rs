@@ -1,0 +1,189 @@
+//! Virtual-clock event machinery for the engine core.
+//!
+//! [`EventQueue`] is a deterministic min-heap of timestamped events: pops
+//! are globally ordered by `(virtual time, insertion sequence)`, so the
+//! executor dispatches phase transitions in exactly the order the fluid
+//! simulation completes them, and same-time events are delivered FIFO.
+//! Two invariants are property-tested (tests/engine_props.rs):
+//!
+//! * pops occur in non-decreasing virtual time (pushes dated in the past
+//!   are clamped to the clock — an event can never fire before "now");
+//! * every pushed event is eventually delivered exactly once.
+//!
+//! [`EngineEvent`] is the executor's event vocabulary: each variant is
+//! one phase transition of the MapReduce pipeline (§3.1), produced when
+//! the fluid activity that models the transfer/compute completes.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Index of a map task in the executor's task table.
+pub type TaskId = usize;
+
+/// A phase-transition event on the engine's virtual timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineEvent {
+    /// One part (or replica copy) of a map task's input split arrived at
+    /// its mapper (§3.1.2 push).
+    PushArrived { task: TaskId },
+    /// A remote fetch of a task's split finished — the stolen
+    /// (`speculative: false`) or backup-copy (`true`) path of §4.6.4.
+    FetchArrived { task: TaskId, speculative: bool },
+    /// A map task's compute finished (primary or speculative copy).
+    MapFinished { task: TaskId, speculative: bool },
+    /// One shuffle transfer was fully delivered to `reducer` (§3.1.3).
+    ShuffleArrived { reducer: usize },
+    /// Reducer `reducer` finished its compute.
+    ReduceFinished { reducer: usize },
+    /// One replicated output write of reducer `reducer` completed
+    /// (§4.6.5).
+    OutputWritten { reducer: usize },
+}
+
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed so BinaryHeap (a max-heap) pops the earliest time,
+        // breaking ties by insertion order (FIFO). Times are asserted
+        // finite on push, so partial_cmp cannot fail.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic timestamped event heap.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    /// Virtual time of the last pop (the queue's clock).
+    last: f64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, last: 0.0 }
+    }
+
+    /// Schedule `event` at virtual time `time`. Times earlier than the
+    /// clock (the last pop) are clamped to it: events cannot fire in the
+    /// past.
+    pub fn push(&mut self, time: f64, event: E) {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let time = time.max(self.last);
+        self.heap.push(Entry { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Deliver the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| {
+            self.last = e.time;
+            (e.time, e.event)
+        })
+    }
+
+    /// Virtual time of the next event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// The queue's clock: time of the most recent pop.
+    pub fn now(&self) -> f64 {
+        self.last
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_time_is_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(5.0, i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop(), Some((5.0, i)));
+        }
+    }
+
+    #[test]
+    fn past_pushes_clamp_to_clock() {
+        let mut q = EventQueue::new();
+        q.push(10.0, "late");
+        assert_eq!(q.pop(), Some((10.0, "late")));
+        q.push(2.0, "stale");
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(e, "stale");
+        assert_eq!(t, 10.0, "past event clamped to the clock");
+        assert_eq!(q.now(), 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_times() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+}

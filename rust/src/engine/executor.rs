@@ -1,10 +1,18 @@
 //! The plan-enforcing MapReduce executor — our equivalent of the paper's
 //! modified Hadoop (§3.1) running on the emulated testbed (§3.2).
 //!
-//! Execution is event-driven over the fluid simulator ([`super::fluid`]):
-//! push transfers, map tasks, shuffle transfers, reduce tasks and output
-//! writes are fluid activities; the executor reacts to completions and
-//! enforces the execution plan and barrier configuration:
+//! The executor is a thin orchestrator over three separable pieces:
+//!
+//! * **[`super::fluid`]** — the fluid (processor-sharing) simulation that
+//!   prices every transfer and compute against link/NIC/CPU capacities;
+//! * **[`super::events`]** — the virtual-clock event heap: every fluid
+//!   completion becomes a timestamped [`EngineEvent`] dispatched in
+//!   non-decreasing virtual time (same-time events FIFO);
+//! * **[`super::scheduler`]** — pluggable placement policies; the
+//!   executor builds a [`SchedView`] snapshot and applies whatever
+//!   [`Assignment`]s the policy returns, enforcing slot capacity.
+//!
+//! The phase state machine it drives (§3.1):
 //!
 //! * **push** (§3.1.2): input splits destined for mapper `j` read from
 //!   each source `i` in proportion to `x_ij`, exactly like the custom
@@ -25,10 +33,12 @@
 
 use std::collections::HashMap;
 
+use super::events::{EngineEvent, EventQueue, TaskId};
 use super::fluid::{ActivityId, FluidSim, ResourceId};
 use super::job::{batch_size, JobConfig, MapReduceApp, Record};
 use super::metrics::JobMetrics;
 use super::partitioner::Partitioner;
+use super::scheduler::{self, NodeId, RunningTask, SchedView, Scheduler};
 use crate::model::barrier::Barrier;
 use crate::model::plan::Plan;
 use crate::platform::Topology;
@@ -47,33 +57,22 @@ enum TaskState {
 }
 
 struct MapTask {
-    mapper: usize,
+    mapper: NodeId,
     /// (source, records) parts of this split.
     parts: Vec<(usize, Vec<Record>)>,
     bytes: f64,
     state: TaskState,
     /// Node actually executing (may differ from `mapper` when stolen).
-    exec_node: Option<usize>,
+    exec_node: Option<NodeId>,
     activity: Option<ActivityId>,
     /// Speculative copy bookkeeping.
-    spec_node: Option<usize>,
+    spec_node: Option<NodeId>,
     spec_activity: Option<ActivityId>,
     spec_fetching: bool,
     pending_parts: usize,
     started_at: f64,
     /// Map outputs per reducer (filled when the task first runs).
     outputs: Option<Vec<Vec<Record>>>,
-}
-
-enum Ev {
-    PushPart { task: usize },
-    PushReplica { task: usize },
-    MapCompute { task: usize, speculative: bool },
-    StealFetch { task: usize },
-    SpecFetch { task: usize },
-    ShuffleXfer { reducer: usize, bytes: f64 },
-    ReduceCompute { reducer: usize },
-    OutputWrite { reducer: usize },
 }
 
 /// Run one job; returns metrics plus the final output records per reducer.
@@ -98,7 +97,10 @@ struct Executor<'a> {
     app: &'a dyn MapReduceApp,
     config: &'a JobConfig,
     sim: FluidSim,
-    events: HashMap<ActivityId, Ev>,
+    /// Fluid completion → engine event, drained through `queue`.
+    pending: HashMap<ActivityId, EngineEvent>,
+    queue: EventQueue<EngineEvent>,
+    scheduler: Box<dyn Scheduler>,
     // resources
     sm_link: Vec<Vec<ResourceId>>,
     mr_link: Vec<Vec<ResourceId>>,
@@ -110,17 +112,22 @@ struct Executor<'a> {
     red_compute: Vec<ResourceId>,
     // tasks
     tasks: Vec<MapTask>,
+    /// Plan node of every task (immutable after `build_splits`; cached so
+    /// per-event scheduling snapshots don't rebuild it).
+    task_home: Vec<NodeId>,
     partitioner: Partitioner,
     // shuffle state
     push_parts_left: usize,
     maps_left: usize,
     maps_left_per_node: Vec<usize>,
     shuffle_xfers_left: Vec<usize>,
-    shuffle_released: bool,
     /// Intermediate records delivered to each reducer.
     reducer_inbox: Vec<Vec<Record>>,
     /// Map outputs parked until the shuffle may start (barrier).
-    parked_outputs: Vec<(usize, Vec<Vec<Record>>)>, // (mapper_exec, per-reducer)
+    /// Keyed by (home node, exec node): the Local barrier gates on the
+    /// home node's queue, while the shuffle transfer originates at the
+    /// exec node (they differ for stolen / speculative winners).
+    parked_outputs: Vec<(NodeId, NodeId, Vec<Vec<Record>>)>,
     reduce_started: Vec<bool>,
     reduce_done: Vec<bool>,
     writes_left: Vec<usize>,
@@ -170,7 +177,9 @@ impl<'a> Executor<'a> {
             app,
             config,
             sim,
-            events: HashMap::new(),
+            pending: HashMap::new(),
+            queue: EventQueue::new(),
+            scheduler: scheduler::for_config(config),
             sm_link,
             mr_link,
             src_egress,
@@ -180,12 +189,12 @@ impl<'a> Executor<'a> {
             map_compute,
             red_compute,
             tasks: Vec::new(),
+            task_home: Vec::new(),
             partitioner,
             push_parts_left: 0,
             maps_left: 0,
             maps_left_per_node: vec![0; m],
             shuffle_xfers_left: vec![0; r],
-            shuffle_released: false,
             reducer_inbox: vec![Vec::new(); r],
             parked_outputs: Vec::new(),
             reduce_started: vec![false; r],
@@ -239,7 +248,7 @@ impl<'a> Executor<'a> {
             if vol == 0 {
                 continue;
             }
-            let n_splits = vol.div_ceil(self.config.split_size).max(1);
+            let n_splits = ((vol + self.config.split_size - 1) / self.config.split_size).max(1);
             // Round-robin records of each part across the splits keeps
             // every split reading proportionally from every source.
             let mut split_parts: Vec<HashMap<usize, Vec<Record>>> =
@@ -277,6 +286,7 @@ impl<'a> Executor<'a> {
         }
         self.maps_left = self.tasks.len();
         self.metrics.n_map_tasks = self.tasks.len();
+        self.task_home = self.tasks.iter().map(|t| t.mapper).collect();
         for t in &self.tasks {
             self.maps_left_per_node[t.mapper] += 1;
         }
@@ -302,12 +312,14 @@ impl<'a> Executor<'a> {
                         self.map_ingress[mapper],
                     ],
                 );
-                self.events.insert(a, Ev::PushPart { task: tid });
+                self.pending.insert(a, EngineEvent::PushArrived { task: tid });
                 self.tasks[tid].pending_parts += 1;
                 self.push_parts_left += 1;
                 self.metrics.push_bytes += bytes;
                 // HDFS-style replication: each replica is one more
-                // wide-area copy of the block (§4.6.5).
+                // wide-area copy of the block (§4.6.5). Replica writes
+                // gate the split like primary parts (the HDFS write
+                // pipeline completes when all replicas acknowledge).
                 for extra in 1..repl {
                     let replica_node = (mapper + extra) % m;
                     let a = self.sim.add_activity(
@@ -318,7 +330,7 @@ impl<'a> Executor<'a> {
                             self.map_ingress[replica_node],
                         ],
                     );
-                    self.events.insert(a, Ev::PushReplica { task: tid });
+                    self.pending.insert(a, EngineEvent::PushArrived { task: tid });
                     self.tasks[tid].pending_parts += 1;
                     self.push_parts_left += 1;
                     self.metrics.push_bytes += bytes;
@@ -343,7 +355,7 @@ impl<'a> Executor<'a> {
     }
 
     /// Execute the map function for a task (eagerly, once).
-    fn materialize_outputs(&mut self, tid: usize) {
+    fn materialize_outputs(&mut self, tid: TaskId) {
         if self.tasks[tid].outputs.is_some() {
             return;
         }
@@ -367,60 +379,44 @@ impl<'a> Executor<'a> {
         self.tasks[tid].outputs = Some(outs);
     }
 
-    /// Try to start ready map tasks on free slots (+ stealing).
+    /// Snapshot the cluster, ask the scheduler for placements, apply them.
     fn schedule_maps(&mut self) {
-        // Plan-local scheduling first.
-        for tid in 0..self.tasks.len() {
-            if self.tasks[tid].state != TaskState::Ready {
+        let ready: Vec<TaskId> = (0..self.tasks.len())
+            .filter(|&t| self.tasks[t].state == TaskState::Ready)
+            .collect();
+        if ready.is_empty() {
+            return;
+        }
+        let assignments = {
+            let view = SchedView {
+                now: self.sim.now(),
+                home: &self.task_home,
+                ready: &ready,
+                running: &[],
+                free_slots: &self.map_slots_free,
+                queued: &self.maps_left_per_node,
+                capacity: &self.topo.c_map,
+                durations: &self.durations,
+            };
+            self.scheduler.assign(&view)
+        };
+        for a in assignments {
+            // Enforce the scheduler contract rather than trust it: never
+            // oversubscribe a node or re-place a task.
+            if self.map_slots_free[a.node] == 0
+                || self.tasks[a.task].state != TaskState::Ready
+                || a.speculative
+            {
                 continue;
             }
-            let node = self.tasks[tid].mapper;
-            if self.map_slots_free[node] > 0 {
-                self.start_map(tid, node, false);
+            if a.node != self.tasks[a.task].mapper {
+                self.metrics.stolen += 1;
             }
-        }
-        // Work stealing (§4.6.4): idle nodes with no local pending work
-        // take a ready task from the most-loaded node; its input is
-        // fetched from the plan node over the wide area.
-        if self.config.stealing && !self.config.local_only {
-            let m = self.topo.n_mappers();
-            loop {
-                let mut stolen_any = false;
-                for thief in 0..m {
-                    if self.map_slots_free[thief] == 0 {
-                        continue;
-                    }
-                    let has_local_ready = self.tasks.iter().any(|t| {
-                        t.state == TaskState::Ready && t.mapper == thief
-                    });
-                    if has_local_ready {
-                        continue;
-                    }
-                    // Victim: ready task on the node with most queued work.
-                    let victim = (0..self.tasks.len())
-                        .filter(|&tid| {
-                            self.tasks[tid].state == TaskState::Ready
-                                && self.tasks[tid].mapper != thief
-                        })
-                        .max_by(|&a, &b| {
-                            let qa = self.maps_left_per_node[self.tasks[a].mapper];
-                            let qb = self.maps_left_per_node[self.tasks[b].mapper];
-                            qa.cmp(&qb)
-                        });
-                    if let Some(tid) = victim {
-                        self.start_map(tid, thief, false);
-                        self.metrics.stolen += 1;
-                        stolen_any = true;
-                    }
-                }
-                if !stolen_any {
-                    break;
-                }
-            }
+            self.start_map(a.task, a.node, false);
         }
     }
 
-    fn start_map(&mut self, tid: usize, node: usize, speculative: bool) {
+    fn start_map(&mut self, tid: TaskId, node: NodeId, speculative: bool) {
         let plan_node = self.tasks[tid].mapper;
         if speculative {
             self.tasks[tid].spec_node = Some(node);
@@ -445,17 +441,18 @@ impl<'a> Executor<'a> {
                     self.map_ingress[node],
                 ],
             );
-            let ev = if speculative { Ev::SpecFetch { task: tid } } else { Ev::StealFetch { task: tid } };
-            self.events.insert(a, ev);
+            self.pending
+                .insert(a, EngineEvent::FetchArrived { task: tid, speculative });
         } else {
             self.start_map_compute(tid, node, speculative);
         }
     }
 
-    fn start_map_compute(&mut self, tid: usize, node: usize, speculative: bool) {
+    fn start_map_compute(&mut self, tid: TaskId, node: NodeId, speculative: bool) {
         let work = self.tasks[tid].bytes * self.app.map_cost_factor();
         let a = self.sim.add_activity(work, vec![self.map_compute[node]]);
-        self.events.insert(a, Ev::MapCompute { task: tid, speculative });
+        self.pending
+            .insert(a, EngineEvent::MapFinished { task: tid, speculative });
         if speculative {
             self.tasks[tid].spec_activity = Some(a);
         } else {
@@ -463,40 +460,53 @@ impl<'a> Executor<'a> {
         }
     }
 
-    /// Speculation (§4.6.4): a running task whose elapsed time exceeds
-    /// 1.5× the median completed-task duration gets a backup copy on the
-    /// fastest node with a free slot.
+    /// Straggler check (§4.6.4): snapshot the running set and let the
+    /// scheduler pick backup copies.
     fn maybe_speculate(&mut self) {
-        if !self.config.speculation || self.durations.len() < 3 {
+        if !self.config.speculation || !self.scheduler.may_speculate(self.durations.len()) {
             return;
         }
-        let mut ds = self.durations.clone();
-        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = ds[ds.len() / 2];
-        let now = self.sim.now();
-        for tid in 0..self.tasks.len() {
-            let t = &self.tasks[tid];
-            if t.state != TaskState::Running || t.spec_node.is_some() {
+        let running: Vec<RunningTask> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.state == TaskState::Running && t.spec_node.is_none())
+            .map(|(tid, t)| RunningTask {
+                task: tid,
+                node: t.exec_node.expect("running task has an exec node"),
+                started_at: t.started_at,
+            })
+            .collect();
+        if running.is_empty() {
+            return;
+        }
+        let backups = {
+            let view = SchedView {
+                now: self.sim.now(),
+                home: &self.task_home,
+                ready: &[],
+                running: &running,
+                free_slots: &self.map_slots_free,
+                queued: &self.maps_left_per_node,
+                capacity: &self.topo.c_map,
+                durations: &self.durations,
+            };
+            self.scheduler.speculate(&view)
+        };
+        for a in backups {
+            if !a.speculative
+                || self.map_slots_free[a.node] == 0
+                || self.tasks[a.task].state != TaskState::Running
+                || self.tasks[a.task].spec_node.is_some()
+            {
                 continue;
             }
-            if now - t.started_at <= 1.5 * median {
-                continue;
-            }
-            // Fastest node with a free slot, other than the executor.
-            let exec = t.exec_node.unwrap();
-            let candidate = (0..self.topo.n_mappers())
-                .filter(|&n| n != exec && self.map_slots_free[n] > 0)
-                .max_by(|&a, &b| {
-                    self.topo.c_map[a].partial_cmp(&self.topo.c_map[b]).unwrap()
-                });
-            if let Some(node) = candidate {
-                self.start_map(tid, node, true);
-                self.metrics.spec_launched += 1;
-            }
+            self.start_map(a.task, a.node, true);
+            self.metrics.spec_launched += 1;
         }
     }
 
-    fn on_map_done(&mut self, tid: usize, speculative: bool) {
+    fn on_map_done(&mut self, tid: TaskId, speculative: bool) {
         if self.tasks[tid].state == TaskState::Done {
             return; // lost the race
         }
@@ -510,7 +520,7 @@ impl<'a> Executor<'a> {
             if let Some(a) = self.tasks[tid].activity {
                 if !self.sim.is_done(a) {
                     self.sim.cancel(a);
-                    self.events.remove(&a);
+                    self.pending.remove(&a);
                 }
             }
             if let Some(loser) = self.tasks[tid].exec_node {
@@ -520,7 +530,7 @@ impl<'a> Executor<'a> {
         } else if let Some(a) = self.tasks[tid].spec_activity {
             if !self.sim.is_done(a) {
                 self.sim.cancel(a);
-                self.events.remove(&a);
+                self.pending.remove(&a);
             }
             if let Some(loser) = self.tasks[tid].spec_node {
                 self.map_slots_free[loser] += 1;
@@ -540,22 +550,27 @@ impl<'a> Executor<'a> {
         self.materialize_outputs(tid);
         let outs = self.tasks[tid].outputs.take().unwrap();
 
+        let home = self.tasks[tid].mapper;
         match self.config.barriers.map_shuffle {
             Barrier::Global => {
-                self.parked_outputs.push((node, outs));
+                self.parked_outputs.push((home, node, outs));
                 if self.maps_left == 0 {
                     self.release_shuffle();
                 }
             }
             Barrier::Local => {
-                self.parked_outputs.push((node, outs));
-                // Release this node's outputs once it has no maps left.
-                if self.maps_left_per_node[self.tasks[tid].mapper] == 0 {
-                    let mine: Vec<(usize, Vec<Vec<Record>>)> = {
+                self.parked_outputs.push((home, node, outs));
+                // Release a home cohort's outputs once that node has no
+                // maps left. Filtering by HOME (not exec) node matches
+                // the gate, so outputs of tasks that ran remotely
+                // (stolen or speculative winner) are released with
+                // their cohort instead of stranding unshuffled.
+                if self.maps_left_per_node[home] == 0 {
+                    let mine: Vec<(NodeId, NodeId, Vec<Vec<Record>>)> = {
                         let mut kept = Vec::new();
                         let mut released = Vec::new();
                         for entry in self.parked_outputs.drain(..) {
-                            if entry.0 == node {
+                            if entry.0 == home {
                                 released.push(entry);
                             } else {
                                 kept.push(entry);
@@ -564,7 +579,7 @@ impl<'a> Executor<'a> {
                         self.parked_outputs = kept;
                         released
                     };
-                    for (exec_node, outs) in mine {
+                    for (_home, exec_node, outs) in mine {
                         self.emit_shuffle(exec_node, outs);
                     }
                 }
@@ -579,14 +594,13 @@ impl<'a> Executor<'a> {
     }
 
     fn release_shuffle(&mut self) {
-        self.shuffle_released = true;
         let parked = std::mem::take(&mut self.parked_outputs);
-        for (node, outs) in parked {
-            self.emit_shuffle(node, outs);
+        for (_home, exec_node, outs) in parked {
+            self.emit_shuffle(exec_node, outs);
         }
     }
 
-    fn emit_shuffle(&mut self, from_node: usize, outs: Vec<Vec<Record>>) {
+    fn emit_shuffle(&mut self, from_node: NodeId, outs: Vec<Vec<Record>>) {
         for (k, recs) in outs.into_iter().enumerate() {
             if recs.is_empty() {
                 continue;
@@ -601,7 +615,7 @@ impl<'a> Executor<'a> {
                     self.red_ingress[k],
                 ],
             );
-            self.events.insert(a, Ev::ShuffleXfer { reducer: k, bytes });
+            self.pending.insert(a, EngineEvent::ShuffleArrived { reducer: k });
             self.shuffle_xfers_left[k] += 1;
             self.metrics.shuffle_bytes += bytes;
         }
@@ -664,8 +678,7 @@ impl<'a> Executor<'a> {
 
         let work = in_bytes * self.app.reduce_cost_factor();
         let a = self.sim.add_activity(work.max(1.0), vec![self.red_compute[k]]);
-        self.events.insert(a, Ev::ReduceCompute { reducer: k });
-        // Stash output size for the write stage via writes_left bookkeeping.
+        self.pending.insert(a, EngineEvent::ReduceFinished { reducer: k });
         self.writes_left[k] = 0;
     }
 
@@ -686,7 +699,7 @@ impl<'a> Executor<'a> {
                         self.red_ingress[target],
                     ],
                 );
-                self.events.insert(a, Ev::OutputWrite { reducer: k });
+                self.pending.insert(a, EngineEvent::OutputWritten { reducer: k });
                 self.writes_left[k] += 1;
                 self.metrics.output_bytes += out_bytes;
             }
@@ -701,99 +714,89 @@ impl<'a> Executor<'a> {
         self.metrics.makespan = self.sim.now();
     }
 
-    fn run(mut self) -> JobResult {
-        self.start_push();
-        while let Some((_now, completed)) = self.sim.step() {
-            for aid in completed {
-                let ev = match self.events.remove(&aid) {
-                    Some(ev) => ev,
-                    None => continue, // cancelled loser
-                };
-                match ev {
-                    Ev::PushPart { task } => {
-                        self.push_parts_left -= 1;
-                        self.metrics.push_end = self.sim.now();
-                        self.tasks[task].pending_parts -= 1;
-                        match self.config.barriers.push_map {
-                            Barrier::Global => {
-                                if self.push_parts_left == 0 {
-                                    self.release_maps_after_push();
-                                }
-                            }
-                            _ => {
-                                // Local/pipelined: the split is runnable as
-                                // soon as its own data is in place.
-                                if self.tasks[task].pending_parts == 0
-                                    && self.tasks[task].state == TaskState::WaitingForData
-                                {
-                                    self.tasks[task].state = TaskState::Ready;
-                                    self.schedule_maps();
-                                }
-                            }
+    /// Dispatch one engine event (popped from the heap in virtual-time
+    /// order).
+    fn dispatch(&mut self, ev: EngineEvent) {
+        match ev {
+            EngineEvent::PushArrived { task } => {
+                self.push_parts_left -= 1;
+                self.metrics.push_end = self.sim.now();
+                self.tasks[task].pending_parts -= 1;
+                match self.config.barriers.push_map {
+                    Barrier::Global => {
+                        if self.push_parts_left == 0 {
+                            self.release_maps_after_push();
                         }
                     }
-                    Ev::PushReplica { task } => {
-                        // Replica writes gate the split like primary parts
-                        // (the HDFS write pipeline completes when all
-                        // replicas acknowledge).
-                        self.push_parts_left -= 1;
-                        self.metrics.push_end = self.sim.now();
-                        self.tasks[task].pending_parts -= 1;
-                        match self.config.barriers.push_map {
-                            Barrier::Global => {
-                                if self.push_parts_left == 0 {
-                                    self.release_maps_after_push();
-                                }
-                            }
-                            _ => {
-                                if self.tasks[task].pending_parts == 0
-                                    && self.tasks[task].state == TaskState::WaitingForData
-                                {
-                                    self.tasks[task].state = TaskState::Ready;
-                                    self.schedule_maps();
-                                }
-                            }
-                        }
-                    }
-                    Ev::StealFetch { task } => {
-                        if self.tasks[task].state == TaskState::Running {
-                            let node = self.tasks[task].exec_node.unwrap();
-                            self.start_map_compute(task, node, false);
-                        }
-                    }
-                    Ev::SpecFetch { task } => {
-                        self.tasks[task].spec_fetching = false;
-                        if self.tasks[task].state == TaskState::Done {
-                            // Original finished while we were fetching.
-                            if let Some(node) = self.tasks[task].spec_node.take() {
-                                self.map_slots_free[node] += 1;
-                            }
-                        } else {
-                            let node = self.tasks[task].spec_node.unwrap();
-                            self.start_map_compute(task, node, true);
-                        }
-                    }
-                    Ev::MapCompute { task, speculative } => {
-                        self.on_map_done(task, speculative);
-                    }
-                    Ev::ShuffleXfer { reducer, .. } => {
-                        self.shuffle_xfers_left[reducer] -= 1;
-                        self.metrics.shuffle_end = self.sim.now();
-                        self.maybe_finish_shuffle_phase();
-                        self.maybe_start_reduces();
-                    }
-                    Ev::ReduceCompute { reducer } => {
-                        self.on_reduce_compute_done(reducer);
-                    }
-                    Ev::OutputWrite { reducer } => {
-                        self.writes_left[reducer] -= 1;
-                        if self.writes_left[reducer] == 0 {
-                            self.finish_reduce(reducer);
+                    _ => {
+                        // Local/pipelined: the split is runnable as soon
+                        // as its own data is in place.
+                        if self.tasks[task].pending_parts == 0
+                            && self.tasks[task].state == TaskState::WaitingForData
+                        {
+                            self.tasks[task].state = TaskState::Ready;
+                            self.schedule_maps();
                         }
                     }
                 }
             }
-            // Opportunistic checks that need the clock to advance.
+            EngineEvent::FetchArrived { task, speculative: false } => {
+                // Stolen task: its input arrived at the thief.
+                if self.tasks[task].state == TaskState::Running {
+                    let node = self.tasks[task].exec_node.unwrap();
+                    self.start_map_compute(task, node, false);
+                }
+            }
+            EngineEvent::FetchArrived { task, speculative: true } => {
+                self.tasks[task].spec_fetching = false;
+                if self.tasks[task].state == TaskState::Done {
+                    // Original finished while we were fetching.
+                    if let Some(node) = self.tasks[task].spec_node.take() {
+                        self.map_slots_free[node] += 1;
+                    }
+                } else {
+                    let node = self.tasks[task].spec_node.unwrap();
+                    self.start_map_compute(task, node, true);
+                }
+            }
+            EngineEvent::MapFinished { task, speculative } => {
+                self.on_map_done(task, speculative);
+            }
+            EngineEvent::ShuffleArrived { reducer } => {
+                self.shuffle_xfers_left[reducer] -= 1;
+                self.metrics.shuffle_end = self.sim.now();
+                self.maybe_finish_shuffle_phase();
+                self.maybe_start_reduces();
+            }
+            EngineEvent::ReduceFinished { reducer } => {
+                self.on_reduce_compute_done(reducer);
+            }
+            EngineEvent::OutputWritten { reducer } => {
+                self.writes_left[reducer] -= 1;
+                if self.writes_left[reducer] == 0 {
+                    self.finish_reduce(reducer);
+                }
+            }
+        }
+    }
+
+    fn run(mut self) -> JobResult {
+        self.start_push();
+        // Main loop: advance the fluid clock to the next completion
+        // batch, convert completions to engine events on the heap, and
+        // dispatch them in (time, FIFO) order.
+        while let Some((now, completed)) = self.sim.step() {
+            for aid in completed {
+                if let Some(ev) = self.pending.remove(&aid) {
+                    self.queue.push(now, ev);
+                }
+                // else: a cancelled losing copy — nothing to dispatch.
+            }
+            while let Some((_t, ev)) = self.queue.pop() {
+                self.dispatch(ev);
+            }
+            // Straggler check once per batch (needs the clock to have
+            // advanced).
             self.maybe_speculate();
         }
         assert!(
@@ -976,6 +979,31 @@ mod tests {
         );
     }
 
+    /// Regression: under a Local map/shuffle barrier, outputs of tasks
+    /// that executed away from their home node (stolen) must be released
+    /// with their home cohort — not stranded unshuffled (which silently
+    /// dropped records).
+    #[test]
+    fn local_map_shuffle_barrier_with_stealing_conserves_records() {
+        let t = topo();
+        // All data homed on mapper 0 → mapper 1 idles and must steal.
+        let plan = Plan {
+            x: crate::util::mat::Mat::from_rows(&[&[1.0, 0.0], &[1.0, 0.0]]),
+            y: vec![0.5, 0.5],
+        };
+        let inputs = small_inputs(2, 600);
+        let cfg = JobConfig {
+            barriers: BarrierConfig::new(Barrier::Global, Barrier::Local, Barrier::Local),
+            stealing: true,
+            local_only: false,
+            split_size: 4 << 10, // small splits → several tasks to steal
+            ..Default::default()
+        };
+        let res = run_job(&t, &plan, &Identity, &cfg, &inputs);
+        assert!(res.metrics.stolen > 0, "scenario must actually steal");
+        assert_eq!(res.metrics.output_records, res.metrics.input_records);
+    }
+
     #[test]
     fn speculation_and_stealing_smoke() {
         let t = topo();
@@ -984,6 +1012,28 @@ mod tests {
         let cfg = JobConfig::vanilla_hadoop();
         let res = run_job(&t, &plan, &Identity, &cfg, &inputs);
         // Dynamic mechanisms must preserve correctness.
+        assert_eq!(res.metrics.output_records, res.metrics.input_records);
+        assert!(res.metrics.makespan > 0.0);
+    }
+
+    /// The event-driven core must run unchanged on a topology far bigger
+    /// than the paper's environments (the ISSUE 1 scale substrate).
+    #[test]
+    fn runs_on_generated_64_node_topology() {
+        let t = crate::platform::scale::generate_kind(
+            crate::platform::scale::ScaleKind::HierarchicalWan,
+            64,
+            11,
+        );
+        let plan = Plan::local_push(&t);
+        let inputs: Vec<Vec<Record>> = (0..t.n_sources())
+            .map(|i| {
+                (0..20)
+                    .map(|r| Record::new(format!("k-{i}-{r}"), "v".repeat(24)))
+                    .collect()
+            })
+            .collect();
+        let res = run_job(&t, &plan, &Identity, &JobConfig::default(), &inputs);
         assert_eq!(res.metrics.output_records, res.metrics.input_records);
         assert!(res.metrics.makespan > 0.0);
     }

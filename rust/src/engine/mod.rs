@@ -2,14 +2,28 @@
 //! modified Hadoop 1.0.1 running on the `tc`-emulated PlanetLab testbed
 //! (§3.1–3.2). Virtual-time fluid simulation of transfers and compute,
 //! real execution of map/reduce functions over real records.
+//!
+//! The engine core is discrete-event and policy-pluggable:
+//!
+//! * [`fluid`] — max-min-fair fluid simulation of links/NICs/CPUs;
+//! * [`events`] — the virtual-clock event heap ([`EventQueue`]) and the
+//!   phase-transition vocabulary ([`EngineEvent`]);
+//! * [`scheduler`] — the [`Scheduler`] trait with plan-local and
+//!   dynamic (stealing + speculation, §4.6.4) policies;
+//! * [`executor`] — the thin orchestrator driving push/map/shuffle/
+//!   reduce as events over the pieces above.
 
+pub mod events;
 pub mod executor;
 pub mod fluid;
 pub mod job;
 pub mod metrics;
 pub mod partitioner;
+pub mod scheduler;
 
+pub use events::{EngineEvent, EventQueue};
 pub use executor::{run_job, JobResult};
 pub use job::{JobConfig, MapReduceApp, Record};
 pub use metrics::JobMetrics;
 pub use partitioner::Partitioner;
+pub use scheduler::{DynamicScheduler, PlanLocalScheduler, Scheduler};

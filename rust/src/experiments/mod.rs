@@ -12,19 +12,22 @@
 //! | fig10  | dynamics atop optimized plan                    | [`fig9to12`] |
 //! | fig11  | dynamics atop hadoop baseline                   | [`fig9to12`] |
 //! | fig12  | wide-area replication                           | [`fig9to12`] |
+//! | scale  | engine sweep on generated 16–256-node platforms | [`scale`] |
 
 pub mod common;
 pub mod fig4;
 pub mod fig5678;
 pub mod fig9to12;
+pub mod scale;
 pub mod table1;
 
 use crate::util::table::Table;
 use std::path::Path;
 
-/// All experiment ids, in paper order.
-pub const ALL: [&str; 10] = [
+/// All experiment ids, in paper order (plus the post-paper scale sweep).
+pub const ALL: [&str; 11] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "scale",
 ];
 
 /// Run one experiment by id.
@@ -40,6 +43,7 @@ pub fn run(id: &str) -> Option<Vec<Table>> {
         "fig10" => fig9to12::run_fig10(),
         "fig11" => fig9to12::run_fig11(),
         "fig12" => fig9to12::run_fig12(),
+        "scale" => scale::run(),
         _ => return None,
     })
 }

@@ -1,0 +1,105 @@
+//! Scale sweep: engine wall-clock and virtual makespan on generated
+//! topologies far beyond the paper's 8-node environments.
+//!
+//! This is the substrate check for every later optimizer/scenario PR:
+//! the event-driven engine core must stay fast as the platform grows.
+//! The sweep runs one synthetic job per (kind, size) cell and reports
+//! the virtual-time makespan next to the real wall-clock cost of
+//! simulating it (target: a 256-node job in well under a second —
+//! asserted by the `engine/scale_*` benches in benches/bench_main.rs).
+
+use std::time::Instant;
+
+use crate::apps::SyntheticApp;
+use crate::engine::job::JobConfig;
+use crate::engine::run_job;
+use crate::experiments::common::synthetic_inputs;
+use crate::model::plan::Plan;
+use crate::platform::scale::{generate_kind, ScaleKind};
+use crate::util::table::Table;
+
+/// Node counts swept per topology kind.
+pub const SWEEP_NODES: [usize; 4] = [16, 64, 128, 256];
+
+/// Input volume per source — kept small because the sweep measures the
+/// simulator's scaling with topology size, not with data volume.
+pub const SWEEP_BYTES_PER_SOURCE: usize = 2_000;
+
+/// One sweep cell's result.
+#[derive(Debug, Clone)]
+pub struct ScaleCell {
+    pub kind: ScaleKind,
+    pub nodes: usize,
+    pub n_sources: usize,
+    pub n_mappers: usize,
+    pub n_reducers: usize,
+    pub map_tasks: usize,
+    pub virtual_makespan: f64,
+    pub wall_seconds: f64,
+}
+
+/// Run the full sweep (used by the experiment *and* by tests).
+pub fn sweep() -> Vec<ScaleCell> {
+    let mut cells = Vec::new();
+    for kind in ScaleKind::all() {
+        for &nodes in &SWEEP_NODES {
+            let topo = generate_kind(kind, nodes, 7);
+            // Local push keeps the activity count proportional to the
+            // node count (uniform would create |S|·|M| transfers).
+            let plan = Plan::local_push(&topo);
+            let inputs =
+                synthetic_inputs(topo.n_sources(), SWEEP_BYTES_PER_SOURCE, 0x5CA1E);
+            let app = SyntheticApp::new(1.0);
+            let cfg = JobConfig::default();
+            let t0 = Instant::now();
+            let res = run_job(&topo, &plan, &app, &cfg, &inputs);
+            cells.push(ScaleCell {
+                kind,
+                nodes,
+                n_sources: topo.n_sources(),
+                n_mappers: topo.n_mappers(),
+                n_reducers: topo.n_reducers(),
+                map_tasks: res.metrics.n_map_tasks,
+                virtual_makespan: res.metrics.makespan,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+            });
+        }
+    }
+    cells
+}
+
+/// The `scale` experiment: render the sweep as a table.
+pub fn run() -> Vec<Table> {
+    let mut t = Table::new(
+        "engine scale sweep: run_job on generated topologies (virtual vs wall time)",
+        &["kind", "nodes", "S/M/R", "map tasks", "virtual makespan (s)", "wall (ms)"],
+    );
+    for c in sweep() {
+        t.add_row(vec![
+            c.kind.label().to_string(),
+            c.nodes.to_string(),
+            format!("{}/{}/{}", c.n_sources, c.n_mappers, c.n_reducers),
+            c.map_tasks.to_string(),
+            format!("{:.1}", c.virtual_makespan),
+            format!("{:.2}", c.wall_seconds * 1e3),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The sweep must complete and every cell must do real work.
+    #[test]
+    fn sweep_produces_sane_cells() {
+        let cells = sweep();
+        assert_eq!(cells.len(), ScaleKind::all().len() * SWEEP_NODES.len());
+        for c in &cells {
+            assert!(c.virtual_makespan > 0.0, "{c:?}");
+            assert!(c.map_tasks > 0, "{c:?}");
+            assert!(c.n_sources + c.n_mappers + c.n_reducers >= c.nodes * 9 / 10);
+        }
+    }
+}

@@ -5,8 +5,10 @@
 //! rust + JAX + Pallas stack:
 //!
 //! * **[`platform`]** — the tripartite source/mapper/reducer platform
-//!   model, PlanetLab measurement dataset (Table 1) and the evaluation's
-//!   four network environments (§4.1).
+//!   model, PlanetLab measurement dataset (Table 1), the evaluation's
+//!   four network environments (§4.1), and parameterized generators
+//!   (`platform::scale`) for 16–512-node hierarchical-WAN, federated
+//!   multi-datacenter and edge-heavy platforms.
 //! * **[`model`]** — execution plans (eqs 1–3), barrier semantics, the
 //!   closed-form makespan model (eqs 4–14) and its smooth relaxation.
 //! * **[`solver`]** — from-scratch LP (simplex) and MIP (branch & bound)
@@ -16,18 +18,26 @@
 //!   (alternating LP and PWL-MIP), and a gradient optimizer backed by the
 //!   AOT-compiled JAX/Pallas artifact via PJRT.
 //! * **[`engine`]** — a plan-enforcing MapReduce runtime (the paper's
-//!   modified Hadoop, §3.1) over a virtual-time emulated WAN, with
-//!   speculative execution and work stealing (§4.6.4).
+//!   modified Hadoop, §3.1) built as a discrete-event core: a max-min-
+//!   fair fluid simulation (`engine::fluid`), a virtual-clock event heap
+//!   (`engine::events`), pluggable scheduling policies covering strict
+//!   plan enforcement plus speculative execution and work stealing
+//!   (`engine::scheduler`, §4.6.4), and a thin orchestrator
+//!   (`engine::executor`) driving push/map/shuffle/reduce as events.
 //! * **[`apps`]**/**[`data`]** — the evaluation applications (Word Count,
 //!   Sessionization, Full Inverted Index, synthetic-α) and seeded
 //!   workload generators.
 //! * **[`runtime`]** — the PJRT client wrapper that loads
 //!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py`.
 //! * **[`experiments`]** — regenerates every table and figure of the
-//!   paper's evaluation (Table 1, Figs 4–12).
+//!   paper's evaluation (Table 1, Figs 4–12), plus the post-paper
+//!   `scale` sweep over generated 16–256-node platforms.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
-//! rust binary is self-contained afterwards.
+//! rust binary is self-contained afterwards. The default cargo build has
+//! **zero external dependencies** (error handling included, see
+//! `util::errors`); the PJRT artifact path is opt-in via the `pjrt`
+//! feature, which expects the vendored `xla` crate.
 
 pub mod apps;
 pub mod data;

@@ -29,14 +29,18 @@ const USAGE: &str = "\
 mrperf — geo-distributed MapReduce modeling, optimization & execution
 
 USAGE:
-  mrperf experiment <table1|fig4..fig12|all> [--results DIR]
-  mrperf plan  [--env ENV | --topology FILE.topo] [--alpha A] [--barriers G-P-L] [--optimizer NAME]
-  mrperf run   [--env ENV | --topology FILE.topo] [--app APP] [--alpha A] [--optimizer NAME]
+  mrperf experiment <table1|fig4..fig12|scale|all> [--results DIR]
+  mrperf plan  [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
+               [--alpha A] [--barriers G-P-L] [--optimizer NAME]
+  mrperf run   [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
+               [--app APP] [--alpha A] [--optimizer NAME]
                [--bytes-per-source N] [--speculation] [--stealing] [--replication R]
   mrperf validate
   mrperf list
 
 ENV:        local-dc | 2-dc-intra | 4-dc-global | 8-dc-global (default)
+GEN KIND:   hier-wan | federated | edge-heavy (generated 16-512 node platforms,
+            e.g. --gen hier-wan:256 or --gen edge-heavy:64:9)
 APP:        wordcount | sessionize | inverted-index | synthetic (default)
 OPTIMIZER:  uniform | myopic | e2e-push | e2e-shuffle | e2e-multi (default)
             | gradient (pure-rust) | artifact (AOT JAX/Pallas via PJRT)
@@ -63,11 +67,15 @@ fn parse_barriers(s: &str) -> Option<BarrierConfig> {
 
 
 /// Resolve the platform: `--topology FILE` (custom .topo description)
-/// takes precedence over `--env NAME`.
+/// takes precedence over `--gen KIND:NODES[:SEED]` (generated platform),
+/// which takes precedence over `--env NAME`.
 fn resolve_topology(args: &cli::Args) -> Result<mrperf::platform::Topology, String> {
     if let Some(path) = args.get("topology") {
         return mrperf::platform::load_topology(std::path::Path::new(path))
             .map_err(|e| format!("{e:#}"));
+    }
+    if let Some(spec) = args.get("gen") {
+        return mrperf::platform::scale::parse_spec(spec);
     }
     match parse_env(args.get_or("env", "8-dc-global")) {
         Some(e) => Ok(build_env(e)),
@@ -308,6 +316,11 @@ fn cmd_list() -> ExitCode {
     println!("experiments: {}", experiments::ALL.join(", "));
     let envs: Vec<&str> = EnvKind::all().iter().map(|k| k.label()).collect();
     println!("environments: {}", envs.join(", "));
+    let kinds: Vec<&str> = mrperf::platform::ScaleKind::all()
+        .iter()
+        .map(|k| k.label())
+        .collect();
+    println!("generated topologies (--gen KIND:NODES[:SEED]): {}", kinds.join(", "));
     println!("apps: wordcount, sessionize, inverted-index, synthetic");
     println!(
         "optimizers: uniform, myopic, e2e-push, e2e-shuffle, e2e-multi, gradient, artifact"

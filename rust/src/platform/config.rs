@@ -31,7 +31,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::errors::{anyhow, bail, Context, Result};
 
 use super::topology::{Continent, Topology, TopologyBuilder, GB, MB};
 

@@ -1,12 +1,16 @@
 //! Platform modeling: the tripartite source/mapper/reducer graph (§2.1),
-//! the PlanetLab measurement dataset (Table 1, §3.2), and the four network
-//! environments of the evaluation (§4.1).
+//! the PlanetLab measurement dataset (Table 1, §3.2), the four network
+//! environments of the evaluation (§4.1), and parameterized generators
+//! for much larger topologies ([`scale`]: hierarchical WAN, federated
+//! multi-datacenter, edge-heavy; 16–512+ nodes).
 
 pub mod config;
 pub mod envs;
 pub mod planetlab;
+pub mod scale;
 pub mod topology;
 
 pub use config::{load_topology, parse_topology};
 pub use envs::{build_env, EnvKind};
+pub use scale::{generate_kind, ScaleConfig, ScaleKind};
 pub use topology::{Topology, TopologyBuilder, GB, KB, MB};

@@ -1,0 +1,374 @@
+//! Parameterized topology generators beyond the paper's four 8-node
+//! environments (§4.1): hierarchical WANs, federated multi-datacenter
+//! fabrics, and edge-heavy deployments, from 16 to 512+ nodes.
+//!
+//! The paper validates its optimizer on an emulated PlanetLab testbed
+//! with eight nodes of each role; the geo-distributed MapReduce survey
+//! (Dolev et al., arXiv:1707.01869) and communication-pattern modelling
+//! work (Ceesay et al., arXiv:2005.11608) both point at much larger and
+//! more varied platforms. These generators produce such platforms as
+//! ordinary [`Topology`] values, so every optimizer, the closed-form
+//! model and the engine run on them unchanged. Every generator is
+//! deterministic given its seed — experiments and tests reproduce
+//! bit-for-bit.
+
+use super::topology::{Continent, Topology, TopologyBuilder, GB, MB};
+use crate::util::rng::Pcg64;
+
+/// Intra-cluster (LAN) bandwidth, matching the PlanetLab testbed fabric.
+const LAN: f64 = 125.0 * MB;
+
+/// The generated deployment shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleKind {
+    /// Clusters arranged in a bandwidth tree: LAN inside a cluster, fast
+    /// metro links within a region, continental backbone between regions,
+    /// slow WAN across continents.
+    HierarchicalWan,
+    /// N comparably provisioned data centers joined by heterogeneous,
+    /// directional inter-datacenter links (the geo-federated setting).
+    FederatedDataCenters,
+    /// Many weak edge sites generating data behind thin uplinks, few
+    /// powerful core sites doing the reducing (IoT / edge analytics).
+    EdgeHeavy,
+}
+
+impl ScaleKind {
+    pub fn all() -> [ScaleKind; 3] {
+        [
+            ScaleKind::HierarchicalWan,
+            ScaleKind::FederatedDataCenters,
+            ScaleKind::EdgeHeavy,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleKind::HierarchicalWan => "hier-wan",
+            ScaleKind::FederatedDataCenters => "federated",
+            ScaleKind::EdgeHeavy => "edge-heavy",
+        }
+    }
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    pub kind: ScaleKind,
+    /// Total node budget across all three roles
+    /// (sources + mappers + reducers); must be ≥ 6.
+    pub nodes: usize,
+    pub seed: u64,
+    /// Input data held by each source.
+    pub data_per_source: f64,
+}
+
+/// Default generator seed (any value works; fixed for reproducibility).
+pub const DEFAULT_SEED: u64 = 0x5CA1E;
+
+impl ScaleConfig {
+    pub fn new(kind: ScaleKind, nodes: usize) -> ScaleConfig {
+        ScaleConfig { kind, nodes, seed: DEFAULT_SEED, data_per_source: 1.0 * GB }
+    }
+
+    pub fn seed(mut self, seed: u64) -> ScaleConfig {
+        self.seed = seed;
+        self
+    }
+
+    pub fn data_per_source(mut self, bytes: f64) -> ScaleConfig {
+        assert!(bytes > 0.0 && bytes.is_finite());
+        self.data_per_source = bytes;
+        self
+    }
+}
+
+/// Generate a topology. Panics if `cfg.nodes < 6` (two clusters of one
+/// node per role is the smallest sensible instance).
+pub fn generate(cfg: &ScaleConfig) -> Topology {
+    assert!(cfg.nodes >= 6, "need at least 6 nodes, got {}", cfg.nodes);
+    match cfg.kind {
+        ScaleKind::HierarchicalWan => hierarchical_wan(cfg),
+        ScaleKind::FederatedDataCenters => federated(cfg),
+        ScaleKind::EdgeHeavy => edge_heavy(cfg),
+    }
+}
+
+/// Convenience wrapper: generate with default data volume.
+pub fn generate_kind(kind: ScaleKind, nodes: usize, seed: u64) -> Topology {
+    generate(&ScaleConfig::new(kind, nodes).seed(seed))
+}
+
+/// Parse a CLI generator spec `kind:nodes[:seed]`, e.g. `hier-wan:256`
+/// or `federated:64:9`.
+pub fn parse_spec(spec: &str) -> Result<Topology, String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.len() < 2 || parts.len() > 3 {
+        return Err(format!("bad generator spec '{spec}' (want kind:nodes[:seed])"));
+    }
+    let kind = ScaleKind::all()
+        .into_iter()
+        .find(|k| k.label() == parts[0])
+        .ok_or_else(|| {
+            format!("unknown topology kind '{}' (hier-wan | federated | edge-heavy)", parts[0])
+        })?;
+    let nodes: usize = parts[1]
+        .parse()
+        .map_err(|_| format!("bad node count '{}'", parts[1]))?;
+    if nodes < 6 {
+        return Err("generated topologies need at least 6 nodes".to_string());
+    }
+    if nodes > 4096 {
+        // The generators allocate O(clusters²) bandwidth matrices; keep a
+        // CLI typo from turning into an OOM abort.
+        return Err(format!("node count {nodes} too large (max 4096)"));
+    }
+    let seed: u64 = if parts.len() == 3 {
+        parts[2].parse().map_err(|_| format!("bad seed '{}'", parts[2]))?
+    } else {
+        DEFAULT_SEED
+    };
+    Ok(generate_kind(kind, nodes, seed))
+}
+
+/// Continent of a region index (regions cycle through the continents).
+fn continent(region: usize) -> Continent {
+    match region % 3 {
+        0 => Continent::US,
+        1 => Continent::EU,
+        _ => Continent::Asia,
+    }
+}
+
+/// Log-uniform draw in `[lo, hi]` (bandwidths are naturally log-spread,
+/// like the Table 1 ranges).
+fn log_uniform(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+    (lo.ln() + rng.next_f64() * (hi.ln() - lo.ln())).exp()
+}
+
+/// Leaf clusters of ~4 nodes per role, 4 clusters per region, regions
+/// spread over continents. Bandwidth falls with tree distance.
+fn hierarchical_wan(cfg: &ScaleConfig) -> Topology {
+    let mut rng = Pcg64::new(cfg.seed);
+    let per_role = (cfg.nodes / 3).max(2);
+    let n_clusters = ((per_role + 3) / 4).max(2);
+
+    let mut b = TopologyBuilder::new(format!("hier-wan-{}", cfg.nodes));
+    let mut compute = Vec::with_capacity(n_clusters);
+    for c in 0..n_clusters {
+        b.cluster(&format!("hier-c{c}"), continent(c / 4));
+        compute.push(rng.uniform(20.0, 90.0) * MB);
+    }
+    for i in 0..per_role {
+        let c = i % n_clusters;
+        b.source(c, cfg.data_per_source);
+        b.mapper(c, compute[c]);
+        b.reducer(c, compute[c]);
+    }
+
+    let region = |c: usize| c / 4;
+    let mut bw = vec![vec![0.0f64; n_clusters]; n_clusters];
+    for a in 0..n_clusters {
+        for c2 in 0..n_clusters {
+            bw[a][c2] = if a == c2 {
+                LAN
+            } else if region(a) == region(c2) {
+                // Metro links inside a region.
+                log_uniform(&mut rng, 20.0 * MB, 60.0 * MB)
+            } else if continent(region(a)) == continent(region(c2)) {
+                // Continental backbone between regions.
+                log_uniform(&mut rng, 4.0 * MB, 15.0 * MB)
+            } else {
+                // Intercontinental WAN.
+                log_uniform(&mut rng, 0.5 * MB, 3.0 * MB)
+            };
+        }
+    }
+    b.build_with_bandwidth(|a, c2| bw[a][c2])
+}
+
+/// ~8 nodes of each role per data center (the §4.1 granularity), all DCs
+/// comparably provisioned, inter-DC links heterogeneous and directional.
+fn federated(cfg: &ScaleConfig) -> Topology {
+    let mut rng = Pcg64::new(cfg.seed ^ 0xFEDE_47ED);
+    let per_role = (cfg.nodes / 3).max(2);
+    let n_dc = ((per_role + 7) / 8).max(2);
+
+    let mut b = TopologyBuilder::new(format!("federated-{}", cfg.nodes));
+    let mut compute = Vec::with_capacity(n_dc);
+    for c in 0..n_dc {
+        b.cluster(&format!("dc{c}"), continent(c));
+        compute.push(rng.uniform(40.0, 90.0) * MB);
+    }
+    for i in 0..per_role {
+        let c = i % n_dc;
+        b.source(c, cfg.data_per_source);
+        b.mapper(c, compute[c]);
+        b.reducer(c, compute[c]);
+    }
+
+    let mut bw = vec![vec![0.0f64; n_dc]; n_dc];
+    for a in 0..n_dc {
+        for c2 in 0..n_dc {
+            bw[a][c2] = if a == c2 { LAN } else { log_uniform(&mut rng, 2.0 * MB, 50.0 * MB) };
+        }
+    }
+    b.build_with_bandwidth(|a, c2| bw[a][c2])
+}
+
+/// Asymmetric roles: ~45% sources and ~45% mappers at weak edge sites,
+/// ~10% reducers at a couple of powerful core sites; thin edge uplinks.
+fn edge_heavy(cfg: &ScaleConfig) -> Topology {
+    let mut rng = Pcg64::new(cfg.seed ^ 0x00ED_6E00);
+    let n_sources = (cfg.nodes * 9 / 20).max(2);
+    let n_reducers = (cfg.nodes / 10).max(1);
+    let n_mappers = cfg.nodes.saturating_sub(n_sources + n_reducers).max(2);
+
+    let n_core = 2usize;
+    let n_edge = ((n_sources + 3) / 4).max(1);
+    let n_clusters = n_core + n_edge;
+
+    let mut b = TopologyBuilder::new(format!("edge-heavy-{}", cfg.nodes));
+    let mut compute = Vec::with_capacity(n_clusters);
+    for c in 0..n_clusters {
+        if c < n_core {
+            b.cluster(&format!("core{c}"), continent(c));
+            compute.push(rng.uniform(60.0, 90.0) * MB);
+        } else {
+            b.cluster(&format!("edge{}", c - n_core), continent(c));
+            compute.push(rng.uniform(5.0, 20.0) * MB);
+        }
+    }
+    // Sources live at the edge.
+    for i in 0..n_sources {
+        b.source(n_core + (i % n_edge), cfg.data_per_source);
+    }
+    // Mappers: two thirds co-located with the data at the edge, the rest
+    // in the core. A dedicated counter cycles the edge clusters so none
+    // is starved of mappers (i % n_edge composed with i % 3 would skip
+    // residues).
+    let mut edge_mapper = 0usize;
+    for i in 0..n_mappers {
+        let c = if i % 3 < 2 {
+            let c = n_core + (edge_mapper % n_edge);
+            edge_mapper += 1;
+            c
+        } else {
+            i % n_core
+        };
+        b.mapper(c, compute[c]);
+    }
+    // Reducers run in the core.
+    for i in 0..n_reducers {
+        let c = i % n_core;
+        b.reducer(c, compute[c]);
+    }
+
+    let mut bw = vec![vec![0.0f64; n_clusters]; n_clusters];
+    for a in 0..n_clusters {
+        for c2 in 0..n_clusters {
+            let a_core = a < n_core;
+            let b_core = c2 < n_core;
+            bw[a][c2] = if a == c2 {
+                LAN
+            } else if a_core && b_core {
+                // Core interconnect.
+                log_uniform(&mut rng, 40.0 * MB, 80.0 * MB)
+            } else if !a_core && b_core {
+                // Edge uplink — the bottleneck that makes plan choice
+                // matter.
+                log_uniform(&mut rng, 1.0 * MB, 8.0 * MB)
+            } else if a_core && !b_core {
+                // Core-to-edge downlink.
+                log_uniform(&mut rng, 2.0 * MB, 10.0 * MB)
+            } else {
+                // Edge-to-edge (rarely useful).
+                log_uniform(&mut rng, 0.5 * MB, 2.0 * MB)
+            };
+        }
+    }
+    b.build_with_bandwidth(|a, c2| bw[a][c2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_validate_across_sizes() {
+        for kind in ScaleKind::all() {
+            for nodes in [16usize, 64, 256] {
+                let t = generate_kind(kind, nodes, 1);
+                t.validate();
+                let total = t.n_sources() + t.n_mappers() + t.n_reducers();
+                assert!(
+                    total >= nodes * 9 / 10 && total <= nodes + 3,
+                    "{kind:?} nodes={nodes}: built {total} nodes"
+                );
+                assert!(t.clusters.len() >= 2, "{kind:?} needs ≥2 clusters");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        for kind in ScaleKind::all() {
+            let a = generate_kind(kind, 64, 7);
+            let b = generate_kind(kind, 64, 7);
+            let c = generate_kind(kind, 64, 8);
+            assert_eq!(a.b_sm, b.b_sm, "{kind:?} not deterministic");
+            assert_eq!(a.c_map, b.c_map);
+            assert_ne!(a.b_sm, c.b_sm, "{kind:?} seed has no effect");
+        }
+    }
+
+    #[test]
+    fn hierarchical_wan_bandwidth_spreads_with_distance() {
+        let t = generate_kind(ScaleKind::HierarchicalWan, 256, 3);
+        let min_b = t.b_sm.data().iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_b = t.b_sm.data().iter().cloned().fold(0.0, f64::max);
+        assert!(
+            max_b / min_b > 20.0,
+            "hier-wan should span orders of magnitude: {min_b}..{max_b}"
+        );
+        assert_eq!(max_b, 125.0 * MB, "intra-cluster links are LAN");
+    }
+
+    #[test]
+    fn edge_heavy_is_source_rich_and_reducer_poor() {
+        let t = generate_kind(ScaleKind::EdgeHeavy, 100, 5);
+        assert!(t.n_sources() > 3 * t.n_reducers());
+        assert!(t.n_mappers() > t.n_reducers());
+        // Core reducers are faster than the weakest edge mapper.
+        let min_map = t.c_map.iter().cloned().fold(f64::INFINITY, f64::min);
+        let min_red = t.c_red.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min_red > min_map);
+    }
+
+    #[test]
+    fn federated_has_uniform_roles_per_dc() {
+        let t = generate_kind(ScaleKind::FederatedDataCenters, 48, 2);
+        assert_eq!(t.n_sources(), t.n_mappers());
+        assert_eq!(t.n_mappers(), t.n_reducers());
+        assert_eq!(t.clusters.len(), 2);
+    }
+
+    #[test]
+    fn parse_spec_round_trips() {
+        let t = parse_spec("hier-wan:64").unwrap();
+        assert_eq!(t.name, "hier-wan-64");
+        let t = parse_spec("federated:48:9").unwrap();
+        assert_eq!(t.name, "federated-48");
+        assert!(parse_spec("nope:64").is_err());
+        assert!(parse_spec("hier-wan").is_err());
+        assert!(parse_spec("hier-wan:3").is_err());
+        assert!(parse_spec("hier-wan:64:x").is_err());
+        assert!(parse_spec("hier-wan:400000000").is_err());
+    }
+
+    #[test]
+    fn data_per_source_is_respected() {
+        let t = generate(&ScaleConfig::new(ScaleKind::HierarchicalWan, 32).data_per_source(2.0 * GB));
+        assert!(t.d.iter().all(|&d| d == 2.0 * GB));
+    }
+}

@@ -8,7 +8,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::errors::{anyhow, bail, Context, Result};
 
 /// Shape signature of one artifact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

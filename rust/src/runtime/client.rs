@@ -4,21 +4,42 @@
 //! The PJRT CPU client is created lazily and shared; executables are
 //! cached per artifact path so repeated optimizer invocations pay the
 //! compile cost once.
+//!
+//! The XLA-backed implementation is gated behind the `pjrt` cargo feature
+//! (which requires the vendored `xla` crate from the rust_pallas
+//! toolchain). The default build ships API-compatible stubs whose
+//! constructor returns an error, so every caller degrades gracefully:
+//! `ArtifactPlanner::load` fails cleanly, and the `artifact` optimizer /
+//! runtime benches report the feature as unavailable instead of failing
+//! to link.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::errors::Result;
+
+#[cfg(feature = "pjrt")]
+use crate::util::errors::Context;
+
+#[cfg(not(feature = "pjrt"))]
+use crate::util::errors::Error;
 
 /// A compiled artifact ready to execute.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
+    #[cfg(not(feature = "pjrt"))]
+    _unconstructible: std::convert::Infallible,
 }
 
 /// Wrapper around the process-wide PJRT CPU client.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(not(feature = "pjrt"))]
+    _unconstructible: std::convert::Infallible,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT runtime.
     pub fn cpu() -> Result<Runtime> {
@@ -49,6 +70,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with f32 tensor inputs, returning all tuple outputs as
     /// flat f32 vectors (jax lowers with `return_tuple=True`).
@@ -68,6 +90,33 @@ impl Executable {
             .into_iter()
             .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
             .collect()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub: the default build has no PJRT backend.
+    pub fn cpu() -> Result<Runtime> {
+        Err(Error::msg(
+            "mrperf was built without the PJRT backend; add the vendored \
+             `xla` crate to rust/Cargo.toml and rebuild with `--features \
+             pjrt` to execute AOT artifacts",
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        match self._unconstructible {}
+    }
+
+    pub fn compile_hlo_text(&self, _path: &Path) -> Result<Executable> {
+        match self._unconstructible {}
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    pub fn run_f32(&self, _inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        match self._unconstructible {}
     }
 }
 
@@ -97,7 +146,6 @@ impl Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::artifact::{artifacts_dir, find_artifact, load_manifest};
 
     #[test]
     fn scalar_and_vec_constructors() {
@@ -113,11 +161,20 @@ mod tests {
         let _ = Tensor::new(vec![2, 2], vec![1.0]);
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+
     /// End-to-end PJRT round trip on the mini plan_eval artifact:
     /// uniform 2×2×2 plan on the §1.3-style homogeneous platform.
     /// Requires `make artifacts`; skipped silently otherwise.
+    #[cfg(feature = "pjrt")]
     #[test]
     fn plan_eval_artifact_roundtrip() {
+        use crate::runtime::artifact::{artifacts_dir, find_artifact, load_manifest};
         let Some(dir) = artifacts_dir() else { return };
         if !dir.join("manifest.json").exists() {
             return;

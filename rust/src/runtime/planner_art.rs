@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::errors::{anyhow, ensure, Context, Result};
 
 use super::artifact::{artifacts_dir, find_artifact, load_manifest, ManifestEntry};
 use super::client::{Executable, Runtime, Tensor};
@@ -101,7 +101,7 @@ impl ArtifactPlanner {
         cfg: BarrierConfig,
     ) -> Result<Plan> {
         let (s, m, r, p) = self.shape;
-        anyhow::ensure!(
+        ensure!(
             topo.n_sources() == s && topo.n_mappers() == m && topo.n_reducers() == r,
             "topology shape {}x{}x{} does not match artifact {}x{}x{}",
             topo.n_sources(),
@@ -188,7 +188,7 @@ impl ArtifactPlanner {
                 Tensor::vec(sel.clone()),
                 Tensor::scalar(gscale as f32),
             ])?;
-            anyhow::ensure!(out.len() == 8, "opt_run returned {} outputs", out.len());
+            ensure!(out.len() == 8, "opt_run returned {} outputs", out.len());
             lx = out[0].clone();
             ly = out[1].clone();
             mx = out[2].clone();

@@ -1,0 +1,179 @@
+//! Minimal `anyhow`-compatible error handling.
+//!
+//! The offline build carries no external crates (see the [`crate::util`]
+//! module docs), so this module provides the small subset of `anyhow`'s
+//! API the crate uses: a dynamic [`Error`] carrying a context chain, the
+//! [`Result`] alias, the [`Context`] extension trait for `Result` and
+//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros. Like
+//! `anyhow`, `{:#}` formatting prints the whole chain
+//! (`outer context: ...: root cause`) while `{}` prints only the
+//! outermost message.
+
+use std::fmt;
+
+/// A dynamic error: a root cause plus outer context layers.
+pub struct Error {
+    /// Outermost context first; the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Deliberately no `impl std::error::Error for Error`: exactly like
+// `anyhow::Error`, omitting it keeps the blanket conversion below
+// coherent with core's reflexive `From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Crate-wide result alias (`anyhow::Result` equivalent).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!`: format a message into an [`Error`].
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::errors::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!`: early-return a formatted error.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::errors::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// `ensure!`: early-return a formatted error unless the condition holds.
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::errors::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+pub(crate) use anyhow;
+pub(crate) use bail;
+pub(crate) use ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn might_fail(ok: bool) -> Result<u32> {
+        ensure!(ok, "condition was {ok}");
+        Ok(7)
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = "root cause"
+            .parse::<f64>()
+            .context("parsing the value")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "parsing the value");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing the value: "), "{full}");
+        assert!(e.chain().count() >= 2);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing thing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("value was {}", 42);
+        assert_eq!(format!("{e}"), "value was 42");
+        assert_eq!(might_fail(true).unwrap(), 7);
+        let err = might_fail(false).unwrap_err();
+        assert_eq!(format!("{err}"), "condition was false");
+    }
+
+    #[test]
+    fn io_error_converts_with_source_chain() {
+        let io = std::fs::read_to_string("/definitely/not/a/real/path/xyz");
+        let e = io.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").contains("reading config: "));
+    }
+
+    #[test]
+    fn question_mark_propagates() {
+        fn inner() -> Result<()> {
+            let _ = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}

@@ -1,13 +1,15 @@
 //! From-scratch substrates: RNG, statistics, tables, CLI parsing,
-//! property testing, micro-benchmarking, logging.
+//! property testing, micro-benchmarking, logging, error handling.
 //!
-//! These exist because the offline registry only vendors the `xla`
-//! dependency closure — no `rand`, `clap`, `criterion`, `proptest`,
-//! `serde` or `tokio`. Everything the framework needs beyond `xla` and
-//! `anyhow` is implemented here.
+//! These exist because the offline build has no registry at all — no
+//! `rand`, `clap`, `criterion`, `proptest`, `serde`, `tokio` or even
+//! `anyhow` ([`errors`] is the in-crate replacement). The only optional
+//! external dependency is the vendored `xla` crate behind the `pjrt`
+//! feature (see [`crate::runtime`]).
 
 pub mod bench;
 pub mod cli;
+pub mod errors;
 pub mod mat;
 pub mod logger;
 pub mod qcheck;
