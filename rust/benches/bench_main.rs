@@ -26,6 +26,7 @@ use mrperf::model::makespan::{makespan, AppModel};
 use mrperf::model::plan::Plan;
 use mrperf::model::smooth::smooth_makespan_plan;
 use mrperf::optimizer::lp_build::{build_lp_x, Objective};
+use mrperf::optimizer::perf::{add_scale_ab_benches, add_scale_headline_benches};
 use mrperf::optimizer::{AlternatingLp, E2ePush, Myopic, PlanOptimizer};
 use mrperf::platform::scale::{generate_kind, ScaleKind};
 use mrperf::platform::{build_env, EnvKind};
@@ -115,6 +116,22 @@ fn main() {
         });
     }
 
+    // ---- optimizer scale paths (ISSUE 2) ----------------------------------
+    // A/B of the pre-PR optimizer paths against the sparse/analytic ones
+    // at 64 nodes (single iteration — the baseline is deliberately the
+    // slow path), plus the 256-node acceptance headline. The assertions
+    // at the bottom are the ISSUE 2 acceptance criteria: ≥10× at 64
+    // nodes, <30 s for a hier-wan:256 plan.
+    let oneshot_cfg = BenchConfig {
+        warmup: Duration::ZERO,
+        min_iters: 1,
+        max_iters: 1,
+        target_time: Duration::ZERO,
+    };
+    let mut oneshot = BenchSuite::new(oneshot_cfg);
+    let ab_pairs = add_scale_ab_benches(&mut oneshot, 64);
+    let headline = add_scale_headline_benches(&mut oneshot);
+
     // ---- runtime (PJRT) ---------------------------------------------------
     if let Ok(planner) = mrperf::runtime::ArtifactPlanner::load(8, 8, 8) {
         suite.bench("runtime/artifact_optimize_8x8x8_p16", || {
@@ -125,6 +142,7 @@ fn main() {
     }
 
     suite.report();
+    oneshot.report();
 
     // Surface the ISSUE 1 scale target explicitly.
     if let Some(r) = suite
@@ -138,5 +156,32 @@ fn main() {
             r.mean,
             if ok { "PASS (< 1 s)" } else { "FAIL (>= 1 s)" }
         );
+    }
+
+    // ---- ISSUE 2 acceptance: ≥10× speedup at 64 nodes, <30 s at 256 -------
+    let find = |name: &str| oneshot.results().iter().find(|r| r.name == name);
+    for (label, new_name, old_name) in &ab_pairs {
+        if let (Some(new), Some(old)) = (find(new_name), find(old_name)) {
+            let ratio = old.mean.as_secs_f64() / new.mean.as_secs_f64().max(1e-12);
+            println!(
+                "optimizer scale target: {label} 64-node speedup {ratio:.1}x — {}",
+                if ratio >= 10.0 { "PASS (>= 10x)" } else { "FAIL (< 10x)" }
+            );
+            assert!(
+                ratio >= 10.0,
+                "{label}: {ratio:.1}x speedup over the pre-PR path is below the 10x bar"
+            );
+        }
+    }
+    for name in &headline {
+        if let Some(r) = find(name) {
+            let ok = r.mean < Duration::from_secs(30);
+            println!(
+                "optimizer scale target: {name} mean {:?} — {}",
+                r.mean,
+                if ok { "PASS (< 30 s)" } else { "FAIL (>= 30 s)" }
+            );
+            assert!(ok, "{name} exceeded the 30 s acceptance bound");
+        }
     }
 }

@@ -1,20 +1,30 @@
-//! Scale sweep: engine wall-clock and virtual makespan on generated
-//! topologies far beyond the paper's 8-node environments.
+//! Scale sweep: the full pipeline — **optimize, predict, simulate** — on
+//! generated topologies far beyond the paper's 8-node environments.
 //!
-//! This is the substrate check for every later optimizer/scenario PR:
-//! the event-driven engine core must stay fast as the platform grows.
-//! The sweep runs one synthetic job per (kind, size) cell and reports
-//! the virtual-time makespan next to the real wall-clock cost of
-//! simulating it (target: a 256-node job in well under a second —
-//! asserted by the `engine/scale_*` benches in benches/bench_main.rs).
+//! Two sub-sweeps:
+//!
+//! * **engine sweep** (since PR 1): one synthetic job per (kind, size)
+//!   cell with a fixed local-push plan; checks the discrete-event core
+//!   stays fast as the platform grows (256-node job ≪ 1 s).
+//! * **optimizer sweep** (this PR): for each cell, run the two scalable
+//!   end-to-end optimizers — `AlternatingLp` over the sparse/warm-started
+//!   LP stack and `GradientOptimizer` over analytic reverse-mode
+//!   gradients — then *simulate the optimized plan* on the engine, so the
+//!   table shows model-predicted and engine-simulated makespans next to
+//!   the optimizer's own wall-clock cost, 16 → 256 nodes end to end.
+//!
+//! Both sweeps are deterministic given the generator seeds.
 
 use std::time::Instant;
 
 use crate::apps::SyntheticApp;
-use crate::engine::job::JobConfig;
+use crate::engine::job::{batch_size, JobConfig};
 use crate::engine::run_job;
 use crate::experiments::common::synthetic_inputs;
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::{makespan, AppModel};
 use crate::model::plan::Plan;
+use crate::optimizer::{AlternatingLp, GradientOptimizer, PlanOptimizer};
 use crate::platform::scale::{generate_kind, ScaleKind};
 use crate::util::table::Table;
 
@@ -25,7 +35,7 @@ pub const SWEEP_NODES: [usize; 4] = [16, 64, 128, 256];
 /// simulator's scaling with topology size, not with data volume.
 pub const SWEEP_BYTES_PER_SOURCE: usize = 2_000;
 
-/// One sweep cell's result.
+/// One engine-sweep cell's result.
 #[derive(Debug, Clone)]
 pub struct ScaleCell {
     pub kind: ScaleKind,
@@ -38,7 +48,7 @@ pub struct ScaleCell {
     pub wall_seconds: f64,
 }
 
-/// Run the full sweep (used by the experiment *and* by tests).
+/// Run the engine sweep (used by the experiment *and* by tests).
 pub fn sweep() -> Vec<ScaleCell> {
     let mut cells = Vec::new();
     for kind in ScaleKind::all() {
@@ -68,7 +78,82 @@ pub fn sweep() -> Vec<ScaleCell> {
     cells
 }
 
-/// The `scale` experiment: render the sweep as a table.
+/// One optimizer-sweep cell: an (optimizer, kind, size) combination,
+/// optimized end to end and then simulated.
+#[derive(Debug, Clone)]
+pub struct OptCell {
+    pub kind: ScaleKind,
+    pub nodes: usize,
+    pub scheme: &'static str,
+    /// Wall-clock seconds spent producing the plan.
+    pub opt_wall_seconds: f64,
+    /// Model-predicted makespan of the optimized plan.
+    pub predicted_makespan: f64,
+    /// Model-predicted makespan of the uniform baseline plan.
+    pub uniform_makespan: f64,
+    /// Engine-simulated (virtual-time) makespan of the optimized plan.
+    pub simulated_makespan: f64,
+    /// Wall-clock seconds the engine spent simulating it.
+    pub sim_wall_seconds: f64,
+}
+
+/// Run the optimize-and-simulate sweep over `kinds` up to `max_nodes`
+/// (tests cap the size so debug builds stay fast; the experiment runs the
+/// full 16→256 range).
+pub fn optimizer_sweep(kinds: &[ScaleKind], max_nodes: usize) -> Vec<OptCell> {
+    let app = AppModel::new(1.0);
+    let cfg = BarrierConfig::HADOOP;
+    let mut cells = Vec::new();
+    for &kind in kinds {
+        for &nodes in &SWEEP_NODES {
+            if nodes > max_nodes {
+                continue;
+            }
+            // Build inputs first so the model sees the true bytes (the
+            // fig4 idiom): the generated topology carries 1 GB/source,
+            // but the sweep simulates tiny synthetic inputs — predicted
+            // and simulated makespans are only comparable if the model
+            // is evaluated on the simulated volume.
+            let gen = generate_kind(kind, nodes, 7);
+            let n_src = gen.n_sources();
+            let inputs = synthetic_inputs(n_src, SWEEP_BYTES_PER_SOURCE, 0x5CA1E);
+            let actual_bytes: f64 =
+                inputs.iter().map(|v| batch_size(v) as f64).sum::<f64>() / n_src as f64;
+            let topo = gen.with_uniform_data(actual_bytes);
+            let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+            let uniform = makespan(&topo, app, cfg, &Plan::uniform(s, m, r));
+            let schemes: [(&'static str, Box<dyn PlanOptimizer>); 2] = [
+                ("e2e-multi", Box::new(AlternatingLp::default())),
+                ("gradient", Box::new(GradientOptimizer::default())),
+            ];
+            for (scheme, opt) in schemes {
+                let t0 = Instant::now();
+                let plan = opt.optimize(&topo, app, cfg);
+                let opt_wall = t0.elapsed().as_secs_f64();
+                let predicted = makespan(&topo, app, cfg, &plan);
+
+                let sapp = SyntheticApp::new(1.0);
+                let jc = JobConfig { barriers: cfg, ..JobConfig::default() };
+                let t1 = Instant::now();
+                let res = run_job(&topo, &plan, &sapp, &jc, &inputs);
+                cells.push(OptCell {
+                    kind,
+                    nodes,
+                    scheme,
+                    opt_wall_seconds: opt_wall,
+                    predicted_makespan: predicted,
+                    uniform_makespan: uniform,
+                    simulated_makespan: res.metrics.makespan,
+                    sim_wall_seconds: t1.elapsed().as_secs_f64(),
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// The `scale` experiment: engine sweep + full optimize-and-simulate
+/// sweep, rendered as tables.
 pub fn run() -> Vec<Table> {
     let mut t = Table::new(
         "engine scale sweep: run_job on generated topologies (virtual vs wall time)",
@@ -84,14 +169,40 @@ pub fn run() -> Vec<Table> {
             format!("{:.2}", c.wall_seconds * 1e3),
         ]);
     }
-    vec![t]
+
+    let mut o = Table::new(
+        "optimizer scale sweep: optimize + simulate, 16→256 nodes (α=1, G-P-L)",
+        &[
+            "kind",
+            "nodes",
+            "scheme",
+            "opt wall (s)",
+            "predicted (s)",
+            "vs uniform",
+            "simulated (s)",
+            "sim wall (ms)",
+        ],
+    );
+    for c in optimizer_sweep(&ScaleKind::all(), *SWEEP_NODES.last().unwrap()) {
+        o.add_row(vec![
+            c.kind.label().to_string(),
+            c.nodes.to_string(),
+            c.scheme.to_string(),
+            format!("{:.2}", c.opt_wall_seconds),
+            format!("{:.4}", c.predicted_makespan),
+            format!("{:+.1}%", (c.predicted_makespan / c.uniform_makespan - 1.0) * 100.0),
+            format!("{:.4}", c.simulated_makespan),
+            format!("{:.2}", c.sim_wall_seconds * 1e3),
+        ]);
+    }
+    vec![t, o]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    /// The sweep must complete and every cell must do real work.
+    /// The engine sweep must complete and every cell must do real work.
     #[test]
     fn sweep_produces_sane_cells() {
         let cells = sweep();
@@ -100,6 +211,23 @@ mod tests {
             assert!(c.virtual_makespan > 0.0, "{c:?}");
             assert!(c.map_tasks > 0, "{c:?}");
             assert!(c.n_sources + c.n_mappers + c.n_reducers >= c.nodes * 9 / 10);
+        }
+    }
+
+    /// Optimize-and-simulate cells: plans beat (or tie) uniform under the
+    /// model and the engine agrees the job completes. Capped at 64 nodes
+    /// so the debug-build test stays quick; the full range runs in the
+    /// release-mode experiment.
+    #[test]
+    fn optimizer_sweep_optimizes_and_simulates() {
+        let cells = optimizer_sweep(&[ScaleKind::HierarchicalWan], 64);
+        assert_eq!(cells.len(), 2 * 2); // {16, 64} × {e2e-multi, gradient}
+        for c in &cells {
+            assert!(
+                c.predicted_makespan <= c.uniform_makespan * (1.0 + 1e-9),
+                "{c:?}: optimized plan must not lose to uniform"
+            );
+            assert!(c.simulated_makespan > 0.0, "{c:?}");
         }
     }
 }

@@ -4,6 +4,7 @@
 //! mrperf experiment <id>|all          regenerate a paper table/figure
 //! mrperf plan [options]               compute an optimized execution plan
 //! mrperf run [options]                execute a job on the emulated WAN
+//! mrperf bench [--json DIR]           quick perf suite, JSON-recordable
 //! mrperf validate                     model-vs-engine validation summary
 //! mrperf list                         available experiments / envs / apps
 //! ```
@@ -31,20 +32,25 @@ mrperf — geo-distributed MapReduce modeling, optimization & execution
 USAGE:
   mrperf experiment <table1|fig4..fig12|scale|all> [--results DIR]
   mrperf plan  [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
-               [--alpha A] [--barriers G-P-L] [--optimizer NAME]
+               [--alpha A] [--barriers G-P-L] [--optimizer NAME] [--skew S]
   mrperf run   [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
-               [--app APP] [--alpha A] [--optimizer NAME]
+               [--app APP] [--alpha A] [--optimizer NAME] [--skew S]
                [--bytes-per-source N] [--speculation] [--stealing] [--replication R]
+  mrperf bench [--json DIR] [--filter SUBSTR]
   mrperf validate
   mrperf list
 
 ENV:        local-dc | 2-dc-intra | 4-dc-global | 8-dc-global (default)
 GEN KIND:   hier-wan | federated | edge-heavy (generated 16-512 node platforms,
             e.g. --gen hier-wan:256 or --gen edge-heavy:64:9)
+SKEW:       Zipf data-volume skew across generated sources (0 = uniform,
+            default; only meaningful with --gen)
 APP:        wordcount | sessionize | inverted-index | synthetic (default)
 OPTIMIZER:  uniform | myopic | e2e-push | e2e-shuffle | e2e-multi (default)
-            | gradient (pure-rust) | artifact (AOT JAX/Pallas via PJRT)
+            | gradient (pure-rust analytic) | artifact (AOT JAX/Pallas via PJRT)
 BARRIERS:   three of G|L|P joined by '-', e.g. G-P-L (default), G-G-G, P-P-P
+BENCH:      quick perf suite (solver + optimizer scale paths); --json DIR
+            writes one BENCH_<name>.json per result for trend tracking
 ";
 
 fn parse_env(name: &str) -> Option<EnvKind> {
@@ -75,7 +81,15 @@ fn resolve_topology(args: &cli::Args) -> Result<mrperf::platform::Topology, Stri
             .map_err(|e| format!("{e:#}"));
     }
     if let Some(spec) = args.get("gen") {
-        return mrperf::platform::scale::parse_spec(spec);
+        let mut gen_cfg = mrperf::platform::scale::parse_spec_config(spec)?;
+        let skew = args.get_f64("skew", 0.0).map_err(|e| e.to_string())?;
+        if skew != 0.0 {
+            if !(skew > 0.0 && skew.is_finite()) {
+                return Err(format!("--skew must be a finite value ≥ 0, got {skew}"));
+            }
+            gen_cfg = gen_cfg.skew(skew);
+        }
+        return Ok(mrperf::platform::scale::generate(&gen_cfg));
     }
     match parse_env(args.get_or("env", "8-dc-global")) {
         Some(e) => Ok(build_env(e)),
@@ -297,6 +311,71 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// Quick, JSON-recordable perf suite over the scale-critical paths. The
+/// heavyweight acceptance benches (≥10× assertion, full sweep) live in
+/// `cargo bench`; this subcommand is the fast trend-tracker: run it after
+/// a perf-relevant change with `--json DIR` and commit/diff the
+/// `BENCH_<name>.json` files.
+fn cmd_bench(args: &cli::Args) -> ExitCode {
+    use mrperf::model::makespan::makespan;
+    use mrperf::optimizer::lp_build::{build_lp_x, Objective};
+    use mrperf::optimizer::perf::{add_scale_ab_benches, add_scale_headline_benches};
+    use mrperf::platform::scale::{generate_kind, ScaleKind};
+    use mrperf::util::bench::{black_box, BenchConfig, BenchSuite};
+    use std::time::Duration;
+
+    let filter = args.get("filter").map(String::from);
+    let bench_cfg = BenchConfig {
+        warmup: Duration::from_millis(50),
+        min_iters: 1,
+        max_iters: 50,
+        target_time: Duration::from_millis(300),
+    };
+    let mut suite = BenchSuite::with_filter(bench_cfg, filter);
+    let app = AppModel::new(1.0);
+    let bc = BarrierConfig::HADOOP;
+
+    // Model hot path (reference point for the optimizer numbers).
+    let t8 = build_env(EnvKind::Global8);
+    let plan8 = Plan::uniform(8, 8, 8);
+    suite.bench("model/makespan_eval_8x8x8", || {
+        black_box(makespan(&t8, app, bc, &plan8))
+    });
+
+    // Solver A/B: the same 64-node x-LP through the dense tableau and the
+    // sparse revised simplex.
+    let t64 = generate_kind(ScaleKind::HierarchicalWan, 64, 7);
+    let y64 = vec![1.0 / t64.n_reducers() as f64; t64.n_reducers()];
+    let (lp64, _) = build_lp_x(&t64, app, bc, &y64, Objective::Makespan);
+    suite.bench("solver/lp_x_64node_dense_tableau", || {
+        black_box(mrperf::solver::simplex::solve(&lp64))
+    });
+    suite.bench("solver/lp_x_64node_sparse_revised", || {
+        black_box(mrperf::solver::revised::solve(&lp64))
+    });
+
+    // Optimizer A/B at 32 nodes (shared scaffolding with `cargo bench`,
+    // which runs the asserting 64-node variant — the pre-PR baseline is
+    // too slow at 64 for a quick CLI suite), plus the 256-node headline.
+    let _ab = add_scale_ab_benches(&mut suite, 32);
+    let _headline = add_scale_headline_benches(&mut suite);
+
+    suite.report();
+    if let Some(dir) = args.get("json") {
+        let dir = PathBuf::from(dir);
+        match suite.write_json(&dir) {
+            Ok(paths) => {
+                println!("\nwrote {} BENCH_*.json files to {}", paths.len(), dir.display());
+            }
+            Err(e) => {
+                eprintln!("writing bench JSON to {}: {e}", dir.display());
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    ExitCode::SUCCESS
+}
+
 fn cmd_validate() -> ExitCode {
     println!("running the Fig 4 validation grid (48 model-vs-engine cells)…\n");
     let res = experiments::fig4::run();
@@ -344,6 +423,7 @@ fn main() -> ExitCode {
         Some("experiment") => cmd_experiment(&args),
         Some("plan") => cmd_plan(&args),
         Some("run") => cmd_run(&args),
+        Some("bench") => cmd_bench(&args),
         Some("validate") => cmd_validate(),
         Some("list") => cmd_list(),
         _ => {

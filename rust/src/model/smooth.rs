@@ -162,6 +162,214 @@ pub fn smooth_makespan_logits(
     smooth_makespan_plan(topo, app, cfg, &plan, beta)
 }
 
+// ---------------------------------------------------------------------------
+// Analytic reverse-mode gradient
+// ---------------------------------------------------------------------------
+
+/// Smooth-max that also records the softmax weights (`∂smax/∂v_i`).
+fn smax_with_weights(values: &[f64], beta: f64, weights: &mut [f64]) -> f64 {
+    debug_assert_eq!(values.len(), weights.len());
+    let m = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut sum = 0.0;
+    for (w, &v) in weights.iter_mut().zip(values) {
+        let e = ((v - m) * beta).exp();
+        *w = e;
+        sum += e;
+    }
+    for w in weights.iter_mut() {
+        *w /= sum;
+    }
+    m + sum.ln() / beta
+}
+
+/// [`combine`] with partials: returns `(value, ∂/∂start, ∂/∂cost)`.
+fn combine_with_grad(start: f64, cost: f64, sel: BoundarySel, beta: f64) -> (f64, f64, f64) {
+    let mx = start.max(cost);
+    let es = ((start - mx) * beta).exp();
+    let ec = ((cost - mx) * beta).exp();
+    let sum = es + ec;
+    let sm = mx + sum.ln() / beta;
+    let v = sel.p * sm + (1.0 - sel.p) * (start + cost);
+    let ds = sel.p * (es / sum) + (1.0 - sel.p);
+    let dc = sel.p * (ec / sum) + (1.0 - sel.p);
+    (v, ds, dc)
+}
+
+/// Loss and analytic gradient of [`smooth_makespan_logits`] w.r.t. the
+/// logits: one forward pass (recording smax/softmax weights) plus one
+/// hand-written reverse pass through row-softmax → phase times →
+/// logsumexp. Replaces the `O(S·M + R)` finite-difference evaluations per
+/// optimizer step with `O(1)` evaluations — the pure-rust fast path of
+/// the gradient optimizer (no `pjrt` feature needed).
+pub fn smooth_makespan_grad(
+    topo: &Topology,
+    app: AppModel,
+    cfg: BarrierConfig,
+    logits_x: &Mat,
+    logits_y: &[f64],
+    beta: f64,
+) -> (f64, Mat, Vec<f64>) {
+    let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let alpha = app.alpha;
+    let pm: BoundarySel = cfg.push_map.into();
+    let ms: BoundarySel = cfg.map_shuffle.into();
+    let sr: BoundarySel = cfg.shuffle_reduce.into();
+
+    let x = softmax_rows(logits_x);
+    let y = softmax(logits_y);
+
+    // ---- forward, recording local derivatives --------------------------
+    let mut wpush = Mat::zeros(s, m);
+    let mut push_end = vec![0.0; m];
+    let mut scratch = vec![0.0; s];
+    let mut wcol = vec![0.0; s];
+    for j in 0..m {
+        for i in 0..s {
+            scratch[i] = topo.d[i] * x.get(i, j) / topo.b_sm.get(i, j);
+        }
+        push_end[j] = smax_with_weights(&scratch, beta, &mut wcol);
+        for i in 0..s {
+            wpush[(i, j)] = wcol[i];
+        }
+    }
+    let mut wpmax = vec![0.0; m];
+    let push_max = smax_with_weights(&push_end, beta, &mut wpmax);
+
+    let mut loads = vec![0.0; m];
+    for i in 0..s {
+        for j in 0..m {
+            loads[j] += topo.d[i] * x.get(i, j);
+        }
+    }
+    let mut map_end = vec![0.0; m];
+    let mut ds1 = vec![0.0; m];
+    let mut dc1 = vec![0.0; m];
+    for j in 0..m {
+        let start = pm.g * push_max + (1.0 - pm.g) * push_end[j];
+        let (v, dsv, dcv) = combine_with_grad(start, loads[j] / topo.c_map[j], pm, beta);
+        map_end[j] = v;
+        ds1[j] = dsv;
+        dc1[j] = dcv;
+    }
+    let mut wmmax = vec![0.0; m];
+    let map_max = smax_with_weights(&map_end, beta, &mut wmmax);
+
+    let mut st2 = vec![0.0; m];
+    for j in 0..m {
+        st2[j] = ms.g * map_max + (1.0 - ms.g) * map_end[j];
+    }
+    let mut wshuf = Mat::zeros(r, m);
+    let mut ds2 = Mat::zeros(r, m);
+    let mut dt2 = Mat::zeros(r, m);
+    let mut shuffle_end = vec![0.0; r];
+    let mut per_j = vec![0.0; m];
+    let mut wrow = vec![0.0; m];
+    for k in 0..r {
+        for j in 0..m {
+            let t = alpha * loads[j] * y[k] / topo.b_mr.get(j, k);
+            let (v, dsv, dtv) = combine_with_grad(st2[j], t, ms, beta);
+            per_j[j] = v;
+            ds2[(k, j)] = dsv;
+            dt2[(k, j)] = dtv;
+        }
+        shuffle_end[k] = smax_with_weights(&per_j, beta, &mut wrow);
+        for j in 0..m {
+            wshuf[(k, j)] = wrow[j];
+        }
+    }
+    let mut wsmax = vec![0.0; r];
+    let shuffle_max = smax_with_weights(&shuffle_end, beta, &mut wsmax);
+
+    let d_total = topo.total_data();
+    let mut ds3 = vec![0.0; r];
+    let mut dc3 = vec![0.0; r];
+    let mut reduce_end = vec![0.0; r];
+    for k in 0..r {
+        let start = sr.g * shuffle_max + (1.0 - sr.g) * shuffle_end[k];
+        let (v, dsv, dcv) =
+            combine_with_grad(start, alpha * d_total * y[k] / topo.c_red[k], sr, beta);
+        reduce_end[k] = v;
+        ds3[k] = dsv;
+        dc3[k] = dcv;
+    }
+    let mut wout = vec![0.0; r];
+    let loss = smax_with_weights(&reduce_end, beta, &mut wout);
+
+    // ---- reverse pass ---------------------------------------------------
+    let mut gx = Mat::zeros(s, m); // ∂loss/∂x_ij (before the softmax chain)
+    let mut gy = vec![0.0; r];
+    let mut d_loads = vec![0.0; m];
+
+    let mut d_shuffle_end = vec![0.0; r];
+    let mut d_shuffle_max = 0.0;
+    for k in 0..r {
+        let d_st3 = wout[k] * ds3[k];
+        gy[k] += wout[k] * dc3[k] * alpha * d_total / topo.c_red[k];
+        d_shuffle_max += d_st3 * sr.g;
+        d_shuffle_end[k] += d_st3 * (1.0 - sr.g);
+    }
+    for k in 0..r {
+        d_shuffle_end[k] += d_shuffle_max * wsmax[k];
+    }
+
+    let mut d_st2 = vec![0.0; m];
+    for k in 0..r {
+        for j in 0..m {
+            let d_per = d_shuffle_end[k] * wshuf[(k, j)];
+            d_st2[j] += d_per * ds2[(k, j)];
+            let d_t = d_per * dt2[(k, j)];
+            let b = topo.b_mr.get(j, k);
+            gy[k] += d_t * alpha * loads[j] / b;
+            d_loads[j] += d_t * alpha * y[k] / b;
+        }
+    }
+
+    let mut d_map_end = vec![0.0; m];
+    let mut d_map_max = 0.0;
+    for j in 0..m {
+        d_map_max += d_st2[j] * ms.g;
+        d_map_end[j] += d_st2[j] * (1.0 - ms.g);
+    }
+    for j in 0..m {
+        d_map_end[j] += d_map_max * wmmax[j];
+    }
+
+    let mut d_push_end = vec![0.0; m];
+    let mut d_push_max = 0.0;
+    for j in 0..m {
+        let d_st1 = d_map_end[j] * ds1[j];
+        d_loads[j] += d_map_end[j] * dc1[j] / topo.c_map[j];
+        d_push_max += d_st1 * pm.g;
+        d_push_end[j] += d_st1 * (1.0 - pm.g);
+    }
+    for j in 0..m {
+        d_push_end[j] += d_push_max * wpmax[j];
+    }
+
+    for j in 0..m {
+        for i in 0..s {
+            let d_pc = d_push_end[j] * wpush[(i, j)];
+            gx[(i, j)] += d_pc * topo.d[i] / topo.b_sm.get(i, j) + d_loads[j] * topo.d[i];
+        }
+    }
+
+    // ---- softmax chain --------------------------------------------------
+    let mut glx = Mat::zeros(s, m);
+    for i in 0..s {
+        let mut dot = 0.0;
+        for j in 0..m {
+            dot += gx.get(i, j) * x.get(i, j);
+        }
+        for j in 0..m {
+            glx[(i, j)] = x.get(i, j) * (gx.get(i, j) - dot);
+        }
+    }
+    let doty: f64 = gy.iter().zip(&y).map(|(g, p)| g * p).sum();
+    let gly: Vec<f64> = (0..r).map(|k| y[k] * (gy[k] - doty)).collect();
+
+    (loss, glx, gly)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,6 +447,80 @@ mod tests {
         let a = smooth_makespan_logits(&t, app, BarrierConfig::HADOOP, &logits_x, &logits_y, beta);
         let b = smooth_makespan_plan(&t, app, BarrierConfig::HADOOP, &plan, beta);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn grad_loss_matches_forward_evaluator() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let app = AppModel::new(2.0);
+        let lx = Mat::from_rows(&[&[0.3, -0.7], &[1.2, 0.1]]);
+        let ly = vec![0.5, -0.5];
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            let beta = 1e-3;
+            let want = smooth_makespan_logits(&t, app, cfg, &lx, &ly, beta);
+            let (got, _, _) = smooth_makespan_grad(&t, app, cfg, &lx, &ly, beta);
+            let rel = (got - want).abs() / want.abs().max(1.0);
+            assert!(rel < 1e-12, "cfg {cfg:?}: grad fwd {got} vs evaluator {want}");
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_differences_small() {
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let app = AppModel::new(1.5);
+        let mut rng = Pcg64::new(11);
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            let mut lx = Mat::zeros(2, 2);
+            for i in 0..2 {
+                for j in 0..2 {
+                    lx.set(i, j, rng.normal() * 0.5);
+                }
+            }
+            let ly: Vec<f64> = (0..2).map(|_| rng.normal() * 0.5).collect();
+            let uni_ms = makespan(&t, app, cfg, &Plan::uniform(2, 2, 2));
+            let beta = 50.0 / uni_ms;
+            let (_, glx, gly) = smooth_makespan_grad(&t, app, cfg, &lx, &ly, beta);
+
+            let eps = 1e-5;
+            let gmax = glx
+                .data()
+                .iter()
+                .chain(&gly)
+                .fold(0.0f64, |a, &g| a.max(g.abs()))
+                .max(1e-12);
+            for i in 0..2 {
+                for j in 0..2 {
+                    let mut hi = lx.clone();
+                    hi.set(i, j, lx.get(i, j) + eps);
+                    let mut lo = lx.clone();
+                    lo.set(i, j, lx.get(i, j) - eps);
+                    let fd = (smooth_makespan_logits(&t, app, cfg, &hi, &ly, beta)
+                        - smooth_makespan_logits(&t, app, cfg, &lo, &ly, beta))
+                        / (2.0 * eps);
+                    let rel = (glx.get(i, j) - fd).abs() / gmax;
+                    assert!(rel < 1e-5, "cfg {cfg:?} x[{i}][{j}]: {} vs fd {fd}", glx.get(i, j));
+                }
+            }
+            for k in 0..2 {
+                let mut hi = ly.clone();
+                hi[k] += eps;
+                let mut lo = ly.clone();
+                lo[k] -= eps;
+                let fd = (smooth_makespan_logits(&t, app, cfg, &lx, &hi, beta)
+                    - smooth_makespan_logits(&t, app, cfg, &lx, &lo, beta))
+                    / (2.0 * eps);
+                let rel = (gly[k] - fd).abs() / gmax;
+                assert!(rel < 1e-5, "cfg {cfg:?} y[{k}]: {} vs fd {fd}", gly[k]);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Symmetry aggregation: collapse identical nodes before optimizing.
+//!
+//! Generated topologies ([`crate::platform::scale`]) build clusters whose
+//! nodes share bit-identical bandwidth rows and compute capacities — a
+//! `hier-wan:256` platform has ~85 nodes per role but only ~22 *distinct*
+//! node kinds per role. For the makespan model, spreading a plan evenly
+//! across the members of an identical-node group never hurts: every phase
+//! term is a max/sum of per-node times that scale with the per-node
+//! allocation, so the even split weakly dominates any asymmetric split of
+//! the same group total (for any barrier configuration; this also
+//! preserves the bilinear structure, unlike plain convexity arguments).
+//! A group-symmetric optimum therefore always exists, and optimizing over
+//! group-symmetric plans is *exact*, not a relaxation.
+//!
+//! The quotient instance is an ordinary [`Topology`] over one node per
+//! group with totals substituted (`D' = Σ D`, `C' = Σ C`) and bandwidths
+//! scaled by the group sizes (`B'_GH = n_G·n_H·B`), which makes every
+//! optimizer, model and solver run on it unchanged; [`Quotient::expand`]
+//! maps the quotient plan back by even within-group splits with exactly
+//! the original makespan.
+//!
+//! Aggregation is only attempted at or above [`MIN_NODES_TO_AGGREGATE`]
+//! total nodes, so the paper's 8×8×8 environments keep their historical
+//! code path bit-for-bit.
+
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::{makespan, AppModel};
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::util::mat::Mat;
+
+/// Below this many total nodes (S+M+R) aggregation is skipped entirely.
+pub const MIN_NODES_TO_AGGREGATE: usize = 32;
+
+/// A symmetry-collapsed instance plus the bookkeeping to expand plans.
+pub struct Quotient {
+    /// The aggregated topology (one node per identical-node group).
+    pub topo: Topology,
+    src_group: Vec<usize>,
+    map_group: Vec<usize>,
+    red_group: Vec<usize>,
+    map_count: Vec<usize>,
+    red_count: Vec<usize>,
+}
+
+impl Quotient {
+    /// Expand a plan on the quotient topology to the original topology by
+    /// splitting each group allocation evenly over the group's members.
+    /// Preserves the makespan exactly (see module docs).
+    pub fn expand(&self, qplan: &Plan) -> Plan {
+        let s = self.src_group.len();
+        let m = self.map_group.len();
+        let r = self.red_group.len();
+        let mut x = Mat::zeros(s, m);
+        for i in 0..s {
+            let gi = self.src_group[i];
+            for j in 0..m {
+                let gj = self.map_group[j];
+                x[(i, j)] = qplan.x.get(gi, gj) / self.map_count[gj] as f64;
+            }
+        }
+        let y: Vec<f64> = (0..r)
+            .map(|k| {
+                let gk = self.red_group[k];
+                qplan.y[gk] / self.red_count[gk] as f64
+            })
+            .collect();
+        Plan { x, y }
+    }
+}
+
+/// Cluster-bucketed exact-equality grouping: nodes are candidates for the
+/// same group only within one cluster (where generators reuse parameter
+/// draws), and must match on every model-relevant value bit-for-bit —
+/// conservative by construction: in the worst case every group is a
+/// singleton and `quotient` returns `None`.
+fn group_nodes<FC, FE>(n: usize, cluster_of: FC, same: FE) -> (Vec<usize>, Vec<Vec<usize>>)
+where
+    FC: Fn(usize) -> usize,
+    FE: Fn(usize, usize) -> bool,
+{
+    let mut group_of = vec![0usize; n];
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut reps: Vec<usize> = Vec::new();
+    for i in 0..n {
+        let mut found = None;
+        for (g, &rep) in reps.iter().enumerate() {
+            if cluster_of(rep) == cluster_of(i) && same(rep, i) {
+                found = Some(g);
+                break;
+            }
+        }
+        match found {
+            Some(g) => {
+                group_of[i] = g;
+                groups[g].push(i);
+            }
+            None => {
+                group_of[i] = groups.len();
+                reps.push(i);
+                groups.push(vec![i]);
+            }
+        }
+    }
+    (group_of, groups)
+}
+
+fn col_eq(mat: &Mat, a: usize, b: usize) -> bool {
+    (0..mat.rows()).all(|r| mat.get(r, a) == mat.get(r, b))
+}
+
+/// Build the symmetry quotient, or `None` when the instance is too small
+/// or no role has two identical nodes (then the original path is both
+/// exact and already cheap).
+pub fn quotient(topo: &Topology) -> Option<Quotient> {
+    let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    if s + m + r < MIN_NODES_TO_AGGREGATE {
+        return None;
+    }
+
+    let (src_group, src_groups) = group_nodes(
+        s,
+        |i| topo.source_cluster[i],
+        |a, b| topo.d[a] == topo.d[b] && topo.b_sm.row(a) == topo.b_sm.row(b),
+    );
+    let (map_group, map_groups) = group_nodes(
+        m,
+        |j| topo.mapper_cluster[j],
+        |a, b| {
+            topo.c_map[a] == topo.c_map[b]
+                && col_eq(&topo.b_sm, a, b)
+                && topo.b_mr.row(a) == topo.b_mr.row(b)
+        },
+    );
+    let (red_group, red_groups) = group_nodes(
+        r,
+        |k| topo.reducer_cluster[k],
+        |a, b| topo.c_red[a] == topo.c_red[b] && col_eq(&topo.b_mr, a, b),
+    );
+
+    let (sg, mg, rg) = (src_groups.len(), map_groups.len(), red_groups.len());
+    if sg == s && mg == m && rg == r {
+        return None; // all singletons: nothing to collapse
+    }
+
+    let src_count: Vec<usize> = src_groups.iter().map(|g| g.len()).collect();
+    let map_count: Vec<usize> = map_groups.iter().map(|g| g.len()).collect();
+    let red_count: Vec<usize> = red_groups.iter().map(|g| g.len()).collect();
+
+    let d: Vec<f64> = src_groups
+        .iter()
+        .map(|g| g.iter().map(|&i| topo.d[i]).sum())
+        .collect();
+    let c_map: Vec<f64> = map_groups
+        .iter()
+        .map(|g| g.iter().map(|&j| topo.c_map[j]).sum())
+        .collect();
+    let c_red: Vec<f64> = red_groups
+        .iter()
+        .map(|g| g.iter().map(|&k| topo.c_red[k]).sum())
+        .collect();
+
+    let mut b_sm = Mat::zeros(sg, mg);
+    for (gi, sgm) in src_groups.iter().enumerate() {
+        for (gj, mgm) in map_groups.iter().enumerate() {
+            b_sm[(gi, gj)] = topo.b_sm.get(sgm[0], mgm[0])
+                * (src_count[gi] * map_count[gj]) as f64;
+        }
+    }
+    let mut b_mr = Mat::zeros(mg, rg);
+    for (gj, mgm) in map_groups.iter().enumerate() {
+        for (gk, rgm) in red_groups.iter().enumerate() {
+            b_mr[(gj, gk)] = topo.b_mr.get(mgm[0], rgm[0])
+                * (map_count[gj] * red_count[gk]) as f64;
+        }
+    }
+
+    let qtopo = Topology {
+        name: format!("{}-sym{}x{}x{}", topo.name, sg, mg, rg),
+        clusters: topo.clusters.clone(),
+        source_cluster: src_groups.iter().map(|g| topo.source_cluster[g[0]]).collect(),
+        mapper_cluster: map_groups.iter().map(|g| topo.mapper_cluster[g[0]]).collect(),
+        reducer_cluster: red_groups.iter().map(|g| topo.reducer_cluster[g[0]]).collect(),
+        d,
+        c_map,
+        c_red,
+        b_sm,
+        b_mr,
+    };
+    qtopo.validate();
+
+    Some(Quotient { topo: qtopo, src_group, map_group, red_group, map_count, red_count })
+}
+
+/// Optimize through the symmetry quotient: collapse, run `inner` on the
+/// quotient topology, expand the result, and re-anchor the
+/// never-loses-to-uniform guarantee — the quotient's uniform start is
+/// *count-weighted* in full space, not the full-space uniform plan, so
+/// the inner optimizer's uniform anchor does not carry over. Returns
+/// `None` when the topology does not aggregate (caller runs its direct
+/// path).
+pub fn optimize_via_quotient<F>(
+    topo: &Topology,
+    app: AppModel,
+    cfg: BarrierConfig,
+    inner: F,
+) -> Option<Plan>
+where
+    F: FnOnce(&Topology) -> Plan,
+{
+    let q = quotient(topo)?;
+    let mut plan = q.expand(&inner(&q.topo));
+    plan.renormalize();
+    let uni = Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    if makespan(topo, app, cfg, &uni) < makespan(topo, app, cfg, &plan) {
+        return Some(uni);
+    }
+    Some(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::scale::{generate_kind, ScaleKind};
+    use crate::platform::{build_env, EnvKind};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn paper_envs_do_not_aggregate() {
+        // 24 nodes total < MIN_NODES_TO_AGGREGATE: historical path intact.
+        for kind in EnvKind::all() {
+            assert!(quotient(&build_env(kind)).is_none(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn generated_topologies_collapse() {
+        for kind in ScaleKind::all() {
+            let t = generate_kind(kind, 64, 7);
+            let q = quotient(&t).expect("64-node generated topologies have replicas");
+            let total = q.topo.n_sources() + q.topo.n_mappers() + q.topo.n_reducers();
+            assert!(
+                total < t.n_sources() + t.n_mappers() + t.n_reducers(),
+                "{kind:?}: quotient must shrink"
+            );
+        }
+    }
+
+    #[test]
+    fn expansion_preserves_makespan_exactly() {
+        let t = generate_kind(ScaleKind::HierarchicalWan, 64, 3);
+        let q = quotient(&t).unwrap();
+        let (qs, qm, qr) =
+            (q.topo.n_sources(), q.topo.n_mappers(), q.topo.n_reducers());
+        let mut rng = Pcg64::new(42);
+        for cfg in [
+            BarrierConfig::ALL_GLOBAL,
+            BarrierConfig::HADOOP,
+            BarrierConfig::ALL_PIPELINED,
+        ] {
+            for &alpha in &[0.2, 1.0, 5.0] {
+                let app = AppModel::new(alpha);
+                let qplan = Plan::random(qs, qm, qr, &mut rng);
+                let plan = q.expand(&qplan);
+                plan.check(&t).unwrap();
+                let ms_q = makespan(&q.topo, app, cfg, &qplan);
+                let ms_full = makespan(&t, app, cfg, &plan);
+                let rel = (ms_q - ms_full).abs() / ms_full.max(1e-9);
+                assert!(
+                    rel < 1e-9,
+                    "cfg {cfg:?} α={alpha}: quotient {ms_q} vs expanded {ms_full}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quotient_terminates_on_requotient() {
+        // The quotient of a quotient must strictly shrink or be None —
+        // optimizers recurse on it.
+        let t = generate_kind(ScaleKind::FederatedDataCenters, 128, 9);
+        let mut cur = t;
+        let mut guard = 0;
+        while let Some(q) = quotient(&cur) {
+            let before = cur.n_sources() + cur.n_mappers() + cur.n_reducers();
+            let after = q.topo.n_sources() + q.topo.n_mappers() + q.topo.n_reducers();
+            assert!(after < before);
+            cur = q.topo;
+            guard += 1;
+            assert!(guard < 10, "aggregation must terminate");
+        }
+    }
+}

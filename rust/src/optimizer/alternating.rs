@@ -18,8 +18,13 @@ use crate::model::barrier::BarrierConfig;
 use crate::model::makespan::{makespan, AppModel};
 use crate::model::plan::Plan;
 use crate::platform::Topology;
-use crate::solver::solve_robust as solve;
+use crate::solver::{solve_robust_dense, solve_smart, LpOutcome};
 use crate::util::rng::Pcg64;
+
+/// Cap on one-hot consolidation starts once `accel` is on and the
+/// instance outgrows the paper's 8-reducer environments (the starts —
+/// and with them the pre-screen LP count — would otherwise scale O(r)).
+const ONE_HOT_CAP: usize = 8;
 
 /// Alternating-LP e2e multi-phase optimizer.
 #[derive(Debug, Clone, Copy)]
@@ -32,15 +37,38 @@ pub struct AlternatingLp {
     pub tol: f64,
     /// RNG seed for the random restarts.
     pub seed: u64,
+    /// Scale accelerations: symmetry aggregation ([`super::aggregate`]),
+    /// sparse/warm-started solver dispatch, one-hot start capping.
+    /// Disable for the A/B benchmark baseline: that reproduces the
+    /// pre-optimization *solver and search* path (the
+    /// [`super::lp_build`] sparsity reformulation applies either way —
+    /// same optimal objectives, so the comparison is conservative).
+    /// Exact in both modes.
+    pub accel: bool,
 }
 
 impl Default for AlternatingLp {
     fn default() -> Self {
-        AlternatingLp { random_starts: 3, max_rounds: 15, tol: 1e-6, seed: 0xA17E }
+        AlternatingLp { random_starts: 3, max_rounds: 15, tol: 1e-6, seed: 0xA17E, accel: true }
     }
 }
 
 impl AlternatingLp {
+    /// Solve one LP of a descent. With `accel` the size-dispatching
+    /// solver is used and the basis is carried between rounds (the next
+    /// round's LP differs only in a few coefficients, so the warm solve
+    /// is usually a handful of pivots); without it, the historical dense
+    /// portfolio runs cold every time.
+    fn solve_step(&self, lp: &crate::solver::Lp, basis: &mut Option<Vec<usize>>) -> LpOutcome {
+        if self.accel {
+            let (out, next) = solve_smart(lp, basis.as_deref());
+            *basis = next;
+            out
+        } else {
+            solve_robust_dense(lp)
+        }
+    }
+
     /// One descent from an initial `y`; returns the refined plan and its
     /// exact makespan.
     fn descend(
@@ -52,12 +80,14 @@ impl AlternatingLp {
     ) -> (Plan, f64) {
         let mut best = f64::INFINITY;
         let mut plan = Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        let mut x_basis: Option<Vec<usize>> = None;
+        let mut y_basis: Option<Vec<usize>> = None;
         for _round in 0..self.max_rounds {
             // x-step: optimal push for the current shuffle split. A rare
             // numerically hopeless LP ends this start's descent; the
             // incumbent plan stands and other starts cover the search.
             let (lp, vars) = build_lp_x(topo, app, cfg, &y, Objective::Makespan);
-            let sol = match solve(&lp).optimal() {
+            let sol = match self.solve_step(&lp, &mut x_basis).optimal() {
                 Some((sol, _)) => sol,
                 None => break,
             };
@@ -70,7 +100,7 @@ impl AlternatingLp {
 
             // y-step: optimal shuffle split for that push.
             let (lp, vars) = build_lp_y(topo, app, cfg, &x, Objective::Makespan);
-            let sol = match solve(&lp).optimal() {
+            let sol = match self.solve_step(&lp, &mut y_basis).optimal() {
                 Some((sol, _)) => sol,
                 None => break,
             };
@@ -109,8 +139,19 @@ impl AlternatingLp {
         // These capture the §1.3 "keep the heavy shuffle inside one
         // cluster" optima that interior starts miss (they are the extreme
         // points of the y-simplex, where the bilinear objective's local
-        // minima often sit).
-        for k in 0..r {
+        // minima often sit). Past the paper's 8-reducer scale (accel on)
+        // only the ONE_HOT_CAP best-connected reducers are tried: the
+        // starts would otherwise grow O(r) and dominate the pre-screen.
+        let one_hot_ks: Vec<usize> = if !self.accel || r <= ONE_HOT_CAP {
+            (0..r).collect()
+        } else {
+            let mut ks: Vec<usize> = (0..r).collect();
+            ks.sort_by(|&a, &b| bw[b].partial_cmp(&bw[a]).unwrap().then(a.cmp(&b)));
+            ks.truncate(ONE_HOT_CAP);
+            ks.sort_unstable();
+            ks
+        };
+        for k in one_hot_ks {
             let mut y = vec![0.0; r];
             y[k] = 1.0;
             starts.push(y);
@@ -125,6 +166,18 @@ impl PlanOptimizer for AlternatingLp {
     }
 
     fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        // Collapse identical nodes first (exact; ≥32-node topologies
+        // only): a hier-wan:256 instance descends over ~22 distinct node
+        // kinds per role instead of ~85 raw nodes, shrinking every LP in
+        // the alternation quadratically. The quotient plan expands back
+        // with identical makespan.
+        if self.accel {
+            if let Some(plan) = super::aggregate::optimize_via_quotient(topo, app, cfg, |qt| {
+                self.optimize(qt, app, cfg)
+            }) {
+                return plan;
+            }
+        }
         let r = topo.n_reducers();
         let mut starts = self.deterministic_starts(topo);
         let mut rng = Pcg64::new(self.seed);
@@ -143,7 +196,8 @@ impl PlanOptimizer for AlternatingLp {
             .into_iter()
             .map(|y0| {
                 let (lp, vars) = build_lp_x(topo, app, cfg, &y0, Objective::Makespan);
-                let score = match solve(&lp).optimal() {
+                let mut no_basis = None;
+                let score = match self.solve_step(&lp, &mut no_basis).optimal() {
                     Some((sol, _)) => {
                         let mut p = Plan { x: extract_x(&sol, &vars), y: y0.clone() };
                         p.renormalize();

@@ -8,18 +8,31 @@
 //! the returned plan is the best start under the *exact* (hard-max)
 //! model.
 //!
-//! Two interchangeable gradient backends:
+//! Three interchangeable gradient backends:
+//! * [`AnalyticBackend`] — hand-written reverse-mode gradients of the
+//!   smooth relaxation in pure rust
+//!   ([`crate::model::smooth::smooth_makespan_grad`]): one forward +
+//!   backward pass per step instead of `O(S·M + R)` finite-difference
+//!   evaluations. **The default**; fast without the `pjrt` feature.
 //! * [`FiniteDiffBackend`] — central finite differences against the rust
-//!   smooth evaluator. Always available; used in tests and as a fallback.
+//!   smooth evaluator; retained as the oracle the analytic gradients are
+//!   property-tested against, and for A/B perf benchmarks.
 //! * `runtime::planner_art::ArtifactBackend` — the AOT-compiled JAX/
-//!   Pallas artifact executed via PJRT (analytic gradients, batched
-//!   multi-start in one device call). This is the L1/L2 integration.
+//!   Pallas artifact executed via PJRT (batched multi-start in one device
+//!   call). This is the L1/L2 integration.
+//!
+//! On ≥32-node topologies the optimizer first collapses identical nodes
+//! via [`super::aggregate`] — exact for this model — so a `hier-wan:256`
+//! instance optimizes over ~22 distinct node kinds per role instead of
+//! ~85 raw nodes.
 
 use super::PlanOptimizer;
 use crate::model::barrier::BarrierConfig;
 use crate::model::makespan::{makespan, AppModel};
 use crate::model::plan::Plan;
-use crate::model::smooth::{smooth_makespan_logits, softmax, softmax_rows};
+use crate::model::smooth::{
+    smooth_makespan_grad, smooth_makespan_logits, softmax, softmax_rows,
+};
 use crate::platform::Topology;
 use crate::util::mat::Mat;
 use crate::util::rng::Pcg64;
@@ -36,6 +49,25 @@ pub trait GradBackend {
         logits_y: &[f64],
         beta: f64,
     ) -> (f64, Mat, Vec<f64>);
+}
+
+/// Analytic reverse-mode gradients over the rust smooth evaluator — one
+/// forward+backward pass per step (see module docs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticBackend;
+
+impl GradBackend for AnalyticBackend {
+    fn value_and_grad(
+        &mut self,
+        topo: &Topology,
+        app: AppModel,
+        cfg: BarrierConfig,
+        logits_x: &Mat,
+        logits_y: &[f64],
+        beta: f64,
+    ) -> (f64, Mat, Vec<f64>) {
+        smooth_makespan_grad(topo, app, cfg, logits_x, logits_y, beta)
+    }
 }
 
 /// Central finite differences over the rust smooth evaluator.
@@ -102,6 +134,10 @@ pub struct GradConfig {
     pub beta_start: f64,
     pub beta_end: f64,
     pub seed: u64,
+    /// Collapse identical nodes before optimizing (exact; ≥32-node
+    /// topologies only — see [`super::aggregate`]). Disable to reproduce
+    /// the pre-aggregation code path for A/B benchmarks.
+    pub aggregate: bool,
 }
 
 impl Default for GradConfig {
@@ -116,6 +152,7 @@ impl Default for GradConfig {
             beta_start: 20.0,
             beta_end: 400.0,
             seed: 0x6AD,
+            aggregate: true,
         }
     }
 }
@@ -126,8 +163,15 @@ pub struct GradientOptimizer<B: GradBackend> {
     pub backend: B,
 }
 
-impl Default for GradientOptimizer<FiniteDiffBackend> {
+impl Default for GradientOptimizer<AnalyticBackend> {
     fn default() -> Self {
+        GradientOptimizer { config: GradConfig::default(), backend: AnalyticBackend }
+    }
+}
+
+impl GradientOptimizer<FiniteDiffBackend> {
+    /// The pre-analytic finite-difference path (oracle / A-B baseline).
+    pub fn finite_diff() -> Self {
         GradientOptimizer { config: GradConfig::default(), backend: FiniteDiffBackend::default() }
     }
 }
@@ -198,6 +242,15 @@ impl<B: GradBackend> GradientOptimizer<B> {
         app: AppModel,
         cfg: BarrierConfig,
     ) -> Plan {
+        if self.config.aggregate {
+            if let Some(plan) =
+                super::aggregate::optimize_via_quotient(topo, app, cfg, |qt| {
+                    self.optimize_mut(qt, app, cfg)
+                })
+            {
+                return plan;
+            }
+        }
         let (s, m_, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
         let uniform = Plan::uniform(s, m_, r);
         let scale = makespan(topo, app, cfg, &uniform).max(1e-9);
@@ -230,13 +283,24 @@ impl<B: GradBackend> GradientOptimizer<B> {
     }
 }
 
-impl PlanOptimizer for GradientOptimizer<FiniteDiffBackend> {
+impl PlanOptimizer for GradientOptimizer<AnalyticBackend> {
     fn name(&self) -> &'static str {
         "e2e-multi-grad"
     }
 
     fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
         // PlanOptimizer is &self; clone config into a fresh instance.
+        let mut opt = GradientOptimizer { config: self.config, backend: AnalyticBackend };
+        opt.optimize_mut(topo, app, cfg)
+    }
+}
+
+impl PlanOptimizer for GradientOptimizer<FiniteDiffBackend> {
+    fn name(&self) -> &'static str {
+        "e2e-multi-grad-fd"
+    }
+
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
         let mut opt = GradientOptimizer {
             config: self.config,
             backend: FiniteDiffBackend { eps: self.backend.eps },
@@ -299,6 +363,26 @@ mod tests {
         let uni = makespan(&t, app, cfg, &Plan::uniform(8, 8, 8));
         let ms = makespan(&t, app, cfg, &plan);
         assert!(ms <= uni + 1e-6, "{ms} vs uniform {uni}");
+    }
+
+    #[test]
+    fn analytic_backend_matches_finite_diff_optimizer() {
+        // The analytic default must reproduce the finite-diff path's
+        // results: same config, same starts, gradients agreeing to 1e-5 —
+        // the optimized makespans match tightly.
+        let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let app = AppModel::new(alpha);
+            let a = GradientOptimizer::default().optimize(&t, app, cfg);
+            let f = GradientOptimizer::finite_diff().optimize(&t, app, cfg);
+            let ms_a = makespan(&t, app, cfg, &a);
+            let ms_f = makespan(&t, app, cfg, &f);
+            assert!(
+                (ms_a - ms_f).abs() <= 1e-3 * ms_f,
+                "α={alpha}: analytic {ms_a} vs finite-diff {ms_f}"
+            );
+        }
     }
 
     #[test]

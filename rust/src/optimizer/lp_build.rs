@@ -64,11 +64,26 @@ pub fn build_lp_x(
     let map_end = lp.vars("map_end", m);
     let shuffle_end = lp.vars("shuffle_end", r);
     let t = lp.var("T");
+    // Explicit per-mapper load variables `load_j = Σ_i D_i x_ij`: factoring
+    // the repeated subexpression turns every (s+2)-term map/shuffle
+    // epigraph row into a 3-term row — the ~s-fold sparsity win that makes
+    // the revised simplex cheap on 256-node instances.
+    let load = lp.vars("load", m);
 
     // (eq 2) rows sum to one.
     for i in 0..s {
         let row: Vec<(usize, f64)> = (0..m).map(|j| (x[i][j], 1.0)).collect();
         lp.constraint(&row, Cmp::Eq, 1.0);
+    }
+
+    // Load definitions.
+    for j in 0..m {
+        let mut terms: Vec<(usize, f64)> = Vec::with_capacity(s + 1);
+        for i in 0..s {
+            terms.push((x[i][j], topo.d[i]));
+        }
+        terms.push((load[j], -1.0));
+        lp.constraint(&terms, Cmp::Eq, 0.0);
     }
 
     // (eq 4) push_end_j ≥ D_i x_ij / B_ij.
@@ -78,12 +93,6 @@ pub fn build_lp_x(
             lp.constraint(&[(push_end[j], 1.0), (x[i][j], -coef)], Cmp::Ge, 0.0);
         }
     }
-
-    // load_j = Σ_i D_i x_ij appears as an expression. Helper closure that
-    // emits `target ≥ base_terms + load_j * scale` rows.
-    let load_terms = |j: usize, scale: f64| -> Vec<(usize, f64)> {
-        (0..s).map(|i| (x[i][j], topo.d[i] * scale)).collect()
-    };
 
     // (eqs 5/6/12) map phase.
     let gp = match cfg.push_map {
@@ -101,31 +110,31 @@ pub fn build_lp_x(
         match cfg.push_map {
             Barrier::Global => {
                 // map_end_j ≥ gp + load_j/C_j
-                let mut row = vec![(map_end[j], 1.0), (gp.unwrap(), -1.0)];
-                for (v, c) in load_terms(j, scale) {
-                    row.push((v, -c));
-                }
-                lp.constraint(&row, Cmp::Ge, 0.0);
+                lp.constraint(
+                    &[(map_end[j], 1.0), (gp.unwrap(), -1.0), (load[j], -scale)],
+                    Cmp::Ge,
+                    0.0,
+                );
             }
             Barrier::Local => {
-                let mut row = vec![(map_end[j], 1.0), (push_end[j], -1.0)];
-                for (v, c) in load_terms(j, scale) {
-                    row.push((v, -c));
-                }
-                lp.constraint(&row, Cmp::Ge, 0.0);
+                lp.constraint(
+                    &[(map_end[j], 1.0), (push_end[j], -1.0), (load[j], -scale)],
+                    Cmp::Ge,
+                    0.0,
+                );
             }
             Barrier::Pipelined => {
                 lp.constraint(&[(map_end[j], 1.0), (push_end[j], -1.0)], Cmp::Ge, 0.0);
-                let mut row = vec![(map_end[j], 1.0)];
-                for (v, c) in load_terms(j, scale) {
-                    row.push((v, -c));
-                }
-                lp.constraint(&row, Cmp::Ge, 0.0);
+                lp.constraint(&[(map_end[j], 1.0), (load[j], -scale)], Cmp::Ge, 0.0);
             }
         }
     }
 
-    // (eqs 7/8/13) shuffle phase; cost_jk = α·load_j·y_k / B_jk.
+    // (eqs 7/8/13) shuffle phase; cost_jk = (α·y_k/B_jk)·load_j. Reducers
+    // with no effective key share (α·y_k = 0) incur no transfer time, so
+    // their per-mapper cost rows collapse to start-only rows — a single
+    // row under a global barrier. One-hot shuffle splits (the §1.3
+    // consolidation starts) prune almost the whole block this way.
     let gm = match cfg.map_shuffle {
         Barrier::Global => {
             let gm = lp.var("map_max");
@@ -137,22 +146,43 @@ pub fn build_lp_x(
         _ => None,
     };
     for k in 0..r {
-        for j in 0..m {
-            let scale = alpha * y[k] / topo.b_mr.get(j, k);
+        if alpha * y[k] <= 0.0 {
             match cfg.map_shuffle {
                 Barrier::Global => {
-                    let mut row = vec![(shuffle_end[k], 1.0), (gm.unwrap(), -1.0)];
-                    for (v, c) in load_terms(j, scale) {
-                        row.push((v, -c));
+                    lp.constraint(
+                        &[(shuffle_end[k], 1.0), (gm.unwrap(), -1.0)],
+                        Cmp::Ge,
+                        0.0,
+                    );
+                }
+                _ => {
+                    for j in 0..m {
+                        lp.constraint(
+                            &[(shuffle_end[k], 1.0), (map_end[j], -1.0)],
+                            Cmp::Ge,
+                            0.0,
+                        );
                     }
-                    lp.constraint(&row, Cmp::Ge, 0.0);
+                }
+            }
+            continue;
+        }
+        for j in 0..m {
+            let coef = alpha * y[k] / topo.b_mr.get(j, k);
+            match cfg.map_shuffle {
+                Barrier::Global => {
+                    lp.constraint(
+                        &[(shuffle_end[k], 1.0), (gm.unwrap(), -1.0), (load[j], -coef)],
+                        Cmp::Ge,
+                        0.0,
+                    );
                 }
                 Barrier::Local => {
-                    let mut row = vec![(shuffle_end[k], 1.0), (map_end[j], -1.0)];
-                    for (v, c) in load_terms(j, scale) {
-                        row.push((v, -c));
-                    }
-                    lp.constraint(&row, Cmp::Ge, 0.0);
+                    lp.constraint(
+                        &[(shuffle_end[k], 1.0), (map_end[j], -1.0), (load[j], -coef)],
+                        Cmp::Ge,
+                        0.0,
+                    );
                 }
                 Barrier::Pipelined => {
                     lp.constraint(
@@ -160,41 +190,42 @@ pub fn build_lp_x(
                         Cmp::Ge,
                         0.0,
                     );
-                    let mut row = vec![(shuffle_end[k], 1.0)];
-                    for (v, c) in load_terms(j, scale) {
-                        row.push((v, -c));
-                    }
-                    lp.constraint(&row, Cmp::Ge, 0.0);
+                    lp.constraint(
+                        &[(shuffle_end[k], 1.0), (load[j], -coef)],
+                        Cmp::Ge,
+                        0.0,
+                    );
                 }
             }
         }
     }
 
-    // (eqs 9/10/14) reduce phase; rcost_k = α·D_total·y_k / C_k (constant).
+    // (eqs 9/10/14) reduce phase; rcost_k = α·D_total·y_k / C_k is a
+    // *constant* in the x-LP, so rows sharing a variable pattern are
+    // dominated by the largest rcost and pruned (r rows → 1 under global
+    // and pipelined shuffle-reduce boundaries).
     let d_total = topo.total_data();
-    let gs = match cfg.shuffle_reduce {
+    let rcost = |k: usize| alpha * d_total * y[k] / topo.c_red[k];
+    let rcost_max = (0..r).map(rcost).fold(0.0f64, f64::max);
+    match cfg.shuffle_reduce {
         Barrier::Global => {
             let gs = lp.var("shuffle_max");
             for k in 0..r {
                 lp.constraint(&[(gs, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
             }
-            Some(gs)
+            // T ≥ gs + rcost_k ∀k  ⟺  T ≥ gs + max_k rcost_k.
+            lp.constraint(&[(t, 1.0), (gs, -1.0)], Cmp::Ge, rcost_max);
         }
-        _ => None,
-    };
-    for k in 0..r {
-        let rcost = alpha * d_total * y[k] / topo.c_red[k];
-        match cfg.shuffle_reduce {
-            Barrier::Global => {
-                lp.constraint(&[(t, 1.0), (gs.unwrap(), -1.0)], Cmp::Ge, rcost);
+        Barrier::Local => {
+            for k in 0..r {
+                lp.constraint(&[(t, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, rcost(k));
             }
-            Barrier::Local => {
-                lp.constraint(&[(t, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, rcost);
-            }
-            Barrier::Pipelined => {
+        }
+        Barrier::Pipelined => {
+            for k in 0..r {
                 lp.constraint(&[(t, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
-                lp.constraint(&[(t, 1.0)], Cmp::Ge, rcost);
             }
+            lp.constraint(&[(t, 1.0)], Cmp::Ge, rcost_max);
         }
     }
 
@@ -250,25 +281,46 @@ pub fn build_lp_y(
     let row: Vec<(usize, f64)> = y.iter().map(|&v| (v, 1.0)).collect();
     lp.constraint(&row, Cmp::Eq, 1.0);
 
-    // Shuffle rows; cost_jk = (α·load_j / B_jk)·y_k.
+    // Shuffle rows; cost_jk = (α·load_j / B_jk)·y_k. Loads are constants
+    // in the y-LP, so for each reducer the per-mapper rows share their
+    // variable pattern and dominated ones are pruned:
+    // * global barrier: identical rhs (map_max) → only the largest
+    //   coefficient binds (m rows → 1);
+    // * pipelined: constant start rows collapse to max_j map_end_j, cost
+    //   rows to the largest coefficient (2m rows → 2);
+    // * local: only the Pareto frontier of (coefficient, map_end_j)
+    //   survives.
     for k in 0..r {
-        for j in 0..m {
-            let coef = alpha * loads[j] / topo.b_mr.get(j, k);
-            match cfg.map_shuffle {
-                Barrier::Global => {
-                    lp.constraint(&[(shuffle_end[k], 1.0), (y[k], -coef)], Cmp::Ge, map_max);
+        let coef = |j: usize| alpha * loads[j] / topo.b_mr.get(j, k);
+        match cfg.map_shuffle {
+            Barrier::Global => {
+                let cmax = (0..m).map(coef).fold(0.0f64, f64::max);
+                lp.constraint(&[(shuffle_end[k], 1.0), (y[k], -cmax)], Cmp::Ge, map_max);
+            }
+            Barrier::Local => {
+                let mut idx: Vec<usize> = (0..m).collect();
+                idx.sort_by(|&a, &b| {
+                    coef(b)
+                        .partial_cmp(&coef(a))
+                        .unwrap()
+                        .then(map_end[b].partial_cmp(&map_end[a]).unwrap())
+                });
+                let mut best_rhs = f64::NEG_INFINITY;
+                for &j in &idx {
+                    if map_end[j] > best_rhs {
+                        lp.constraint(
+                            &[(shuffle_end[k], 1.0), (y[k], -coef(j))],
+                            Cmp::Ge,
+                            map_end[j],
+                        );
+                        best_rhs = map_end[j];
+                    }
                 }
-                Barrier::Local => {
-                    lp.constraint(
-                        &[(shuffle_end[k], 1.0), (y[k], -coef)],
-                        Cmp::Ge,
-                        map_end[j],
-                    );
-                }
-                Barrier::Pipelined => {
-                    lp.constraint(&[(shuffle_end[k], 1.0)], Cmp::Ge, map_end[j]);
-                    lp.constraint(&[(shuffle_end[k], 1.0), (y[k], -coef)], Cmp::Ge, 0.0);
-                }
+            }
+            Barrier::Pipelined => {
+                lp.constraint(&[(shuffle_end[k], 1.0)], Cmp::Ge, map_max);
+                let cmax = (0..m).map(coef).fold(0.0f64, f64::max);
+                lp.constraint(&[(shuffle_end[k], 1.0), (y[k], -cmax)], Cmp::Ge, 0.0);
             }
         }
     }

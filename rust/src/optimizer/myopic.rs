@@ -27,13 +27,26 @@ impl PlanOptimizer for Myopic {
         // pass uniform).
         let y0 = vec![1.0 / r as f64; r];
         let (lp, vars) = build_lp_x(topo, app, cfg, &y0, Objective::PushTime);
-        let (sol, _) = solve(&lp).expect_optimal("myopic push LP");
-        let x = extract_x(&sol, &vars);
+        // A numerically hopeless LP (possible on huge ungrouped instances
+        // routed through the sparse solver) degrades to the local-push
+        // heuristic instead of panicking.
+        let x = match solve(&lp).optimal() {
+            Some((sol, _)) => extract_x(&sol, &vars),
+            None => {
+                super::warn_lp_fallback("myopic push LP", "local-push heuristic");
+                Plan::local_push(topo).x
+            }
+        };
 
         // Phase 2: given that push, minimize the shuffle completion.
         let (lp, vars) = build_lp_y(topo, app, cfg, &x, Objective::ShuffleEnd);
-        let (sol, _) = solve(&lp).expect_optimal("myopic shuffle LP");
-        let y = extract_y(&sol, &vars);
+        let y = match solve(&lp).optimal() {
+            Some((sol, _)) => extract_y(&sol, &vars),
+            None => {
+                super::warn_lp_fallback("myopic shuffle LP", "uniform shuffle");
+                y0
+            }
+        };
 
         let mut plan = Plan { x, y };
         plan.renormalize();

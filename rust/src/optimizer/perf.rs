@@ -1,0 +1,67 @@
+//! Shared scale-bench scaffolding for `cargo bench` (benches/bench_main.rs,
+//! which *asserts* the ISSUE 2 acceptance bars) and the `mrperf bench`
+//! CLI subcommand (quick JSON-recorded trend tracking). Keeping the A/B
+//! configurations in one place guarantees both harnesses measure the
+//! same accelerated-vs-pre-PR comparison.
+
+use super::gradient::GradConfig;
+use super::{
+    AlternatingLp, AnalyticBackend, FiniteDiffBackend, GradientOptimizer, PlanOptimizer,
+};
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::platform::scale::{generate_kind, ScaleKind};
+use crate::util::bench::{black_box, BenchSuite};
+
+fn bench_setting() -> (AppModel, BarrierConfig) {
+    (AppModel::new(1.0), BarrierConfig::HADOOP)
+}
+
+/// Register the accelerated-vs-pre-PR optimizer A/B benches on a
+/// `hier-wan:<nodes>` topology (both sides trimmed identically: the
+/// baseline is the deliberately slow path). Returns
+/// `(label, accelerated_name, baseline_name)` pairs for speedup-ratio
+/// assertions.
+pub fn add_scale_ab_benches(
+    suite: &mut BenchSuite,
+    nodes: usize,
+) -> [(&'static str, String, String); 2] {
+    let (app, bc) = bench_setting();
+    let topo = generate_kind(ScaleKind::HierarchicalWan, nodes, 7);
+
+    let fast = AlternatingLp { random_starts: 0, max_rounds: 2, ..Default::default() };
+    let slow = AlternatingLp { accel: false, ..fast };
+    let alt_new = format!("optimizer/scale_{nodes}_alternating");
+    let alt_old = format!("optimizer/scale_{nodes}_alternating_prepr");
+    suite.bench(&alt_new, || black_box(fast.optimize(&topo, app, bc)));
+    suite.bench(&alt_old, || black_box(slow.optimize(&topo, app, bc)));
+
+    let gc = GradConfig { steps: 20, starts: 1, ..Default::default() };
+    let gc_fd = GradConfig { aggregate: false, ..gc };
+    let grad_new = format!("optimizer/scale_{nodes}_gradient_analytic");
+    let grad_old = format!("optimizer/scale_{nodes}_gradient_finitediff_prepr");
+    suite.bench(&grad_new, || {
+        let mut o = GradientOptimizer::new(gc, AnalyticBackend);
+        black_box(o.optimize_mut(&topo, app, bc))
+    });
+    suite.bench(&grad_old, || {
+        let mut o = GradientOptimizer::new(gc_fd, FiniteDiffBackend::default());
+        black_box(o.optimize_mut(&topo, app, bc))
+    });
+
+    [("alternating", alt_new, alt_old), ("gradient", grad_new, grad_old)]
+}
+
+/// Register the acceptance headline: full-default optimizers on
+/// `hier-wan:256`. Returns the bench names for <30 s checks.
+pub fn add_scale_headline_benches(suite: &mut BenchSuite) -> [String; 2] {
+    let (app, bc) = bench_setting();
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 256, 7);
+    let alt = "optimizer/scale_256_alternating".to_string();
+    let grad = "optimizer/scale_256_gradient".to_string();
+    suite.bench(&alt, || black_box(AlternatingLp::default().optimize(&topo, app, bc)));
+    suite.bench(&grad, || {
+        black_box(GradientOptimizer::default().optimize(&topo, app, bc))
+    });
+    [alt, grad]
+}

@@ -26,8 +26,17 @@ impl PlanOptimizer for E2ePush {
         let r = topo.n_reducers();
         let y = vec![1.0 / r as f64; r];
         let (lp, vars) = build_lp_x(topo, app, cfg, &y, Objective::Makespan);
-        let (sol, _) = solve(&lp).expect_optimal("e2e push LP");
-        let mut plan = Plan { x: extract_x(&sol, &vars), y };
+        // Degrade to the local-push heuristic (which keeps the uniform
+        // shuffle this scheme fixes) if the solver fails numerically.
+        let mut plan = match solve(&lp).optimal() {
+            Some((sol, _)) => Plan { x: extract_x(&sol, &vars), y },
+            None => {
+                super::warn_lp_fallback("e2e push LP", "local-push heuristic");
+                let mut p = Plan::local_push(topo);
+                p.y = y;
+                p
+            }
+        };
         plan.renormalize();
         plan
     }
@@ -46,8 +55,16 @@ impl PlanOptimizer for E2eShuffle {
         let (s, m) = (topo.n_sources(), topo.n_mappers());
         let x = Mat::filled(s, m, 1.0 / m as f64);
         let (lp, vars) = build_lp_y(topo, app, cfg, &x, Objective::Makespan);
-        let (sol, _) = solve(&lp).expect_optimal("e2e shuffle LP");
-        let mut plan = Plan { x, y: extract_y(&sol, &vars) };
+        // Degrade to the fully uniform plan if the solver fails.
+        let r = topo.n_reducers();
+        let y = match solve(&lp).optimal() {
+            Some((sol, _)) => extract_y(&sol, &vars),
+            None => {
+                super::warn_lp_fallback("e2e shuffle LP", "uniform shuffle");
+                vec![1.0 / r as f64; r]
+            }
+        };
+        let mut plan = Plan { x, y };
         plan.renormalize();
         plan
     }

@@ -59,8 +59,15 @@ pub struct ScaleConfig {
     /// (sources + mappers + reducers); must be ≥ 6.
     pub nodes: usize,
     pub seed: u64,
-    /// Input data held by each source.
+    /// Input data held by each source (the *mean* when `skew > 0`).
     pub data_per_source: f64,
+    /// Zipf-ish data-volume skew across sources: source `i` holds data
+    /// proportional to `(i+1)^-skew`, normalized so the total volume is
+    /// unchanged. `0` (the default) keeps the historical uniform volumes
+    /// bit-for-bit; real geo-distributed deployments are skewed (a few
+    /// hot sites hold most of the data), which is what makes push-plan
+    /// choice hard.
+    pub skew: f64,
 }
 
 /// Default generator seed (any value works; fixed for reproducibility).
@@ -68,7 +75,7 @@ pub const DEFAULT_SEED: u64 = 0x5CA1E;
 
 impl ScaleConfig {
     pub fn new(kind: ScaleKind, nodes: usize) -> ScaleConfig {
-        ScaleConfig { kind, nodes, seed: DEFAULT_SEED, data_per_source: 1.0 * GB }
+        ScaleConfig { kind, nodes, seed: DEFAULT_SEED, data_per_source: 1.0 * GB, skew: 0.0 }
     }
 
     pub fn seed(mut self, seed: u64) -> ScaleConfig {
@@ -81,6 +88,25 @@ impl ScaleConfig {
         self.data_per_source = bytes;
         self
     }
+
+    pub fn skew(mut self, skew: f64) -> ScaleConfig {
+        assert!(skew >= 0.0 && skew.is_finite(), "skew must be ≥ 0, got {skew}");
+        self.skew = skew;
+        self
+    }
+}
+
+/// Per-source data volumes under the config's skew: Zipf weights
+/// `(i+1)^-skew` scaled so the mean stays `data_per_source` (total data
+/// volume is invariant in the skew). Skew 0 returns exactly uniform
+/// volumes, keeping default-generated topologies bit-identical.
+fn source_volumes(cfg: &ScaleConfig, n: usize) -> Vec<f64> {
+    if cfg.skew == 0.0 {
+        return vec![cfg.data_per_source; n];
+    }
+    let w: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-cfg.skew)).collect();
+    let mean = w.iter().sum::<f64>() / n as f64;
+    w.into_iter().map(|wi| cfg.data_per_source * wi / mean).collect()
 }
 
 /// Generate a topology. Panics if `cfg.nodes < 6` (two clusters of one
@@ -99,9 +125,10 @@ pub fn generate_kind(kind: ScaleKind, nodes: usize, seed: u64) -> Topology {
     generate(&ScaleConfig::new(kind, nodes).seed(seed))
 }
 
-/// Parse a CLI generator spec `kind:nodes[:seed]`, e.g. `hier-wan:256`
-/// or `federated:64:9`.
-pub fn parse_spec(spec: &str) -> Result<Topology, String> {
+/// Parse a CLI generator spec `kind:nodes[:seed]` (e.g. `hier-wan:256`,
+/// `federated:64:9`) into a config — callers can layer further knobs
+/// (`--skew`, data volume) on top before generating.
+pub fn parse_spec_config(spec: &str) -> Result<ScaleConfig, String> {
     let parts: Vec<&str> = spec.split(':').collect();
     if parts.len() < 2 || parts.len() > 3 {
         return Err(format!("bad generator spec '{spec}' (want kind:nodes[:seed])"));
@@ -128,7 +155,12 @@ pub fn parse_spec(spec: &str) -> Result<Topology, String> {
     } else {
         DEFAULT_SEED
     };
-    Ok(generate_kind(kind, nodes, seed))
+    Ok(ScaleConfig::new(kind, nodes).seed(seed))
+}
+
+/// Parse a CLI generator spec and generate the topology.
+pub fn parse_spec(spec: &str) -> Result<Topology, String> {
+    Ok(generate(&parse_spec_config(spec)?))
 }
 
 /// Continent of a region index (regions cycle through the continents).
@@ -159,9 +191,10 @@ fn hierarchical_wan(cfg: &ScaleConfig) -> Topology {
         b.cluster(&format!("hier-c{c}"), continent(c / 4));
         compute.push(rng.uniform(20.0, 90.0) * MB);
     }
+    let dvol = source_volumes(cfg, per_role);
     for i in 0..per_role {
         let c = i % n_clusters;
-        b.source(c, cfg.data_per_source);
+        b.source(c, dvol[i]);
         b.mapper(c, compute[c]);
         b.reducer(c, compute[c]);
     }
@@ -200,9 +233,10 @@ fn federated(cfg: &ScaleConfig) -> Topology {
         b.cluster(&format!("dc{c}"), continent(c));
         compute.push(rng.uniform(40.0, 90.0) * MB);
     }
+    let dvol = source_volumes(cfg, per_role);
     for i in 0..per_role {
         let c = i % n_dc;
-        b.source(c, cfg.data_per_source);
+        b.source(c, dvol[i]);
         b.mapper(c, compute[c]);
         b.reducer(c, compute[c]);
     }
@@ -240,8 +274,9 @@ fn edge_heavy(cfg: &ScaleConfig) -> Topology {
         }
     }
     // Sources live at the edge.
+    let dvol = source_volumes(cfg, n_sources);
     for i in 0..n_sources {
-        b.source(n_core + (i % n_edge), cfg.data_per_source);
+        b.source(n_core + (i % n_edge), dvol[i]);
     }
     // Mappers: two thirds co-located with the data at the edge, the rest
     // in the core. A dedicated counter cycles the edge clusters so none
@@ -370,5 +405,46 @@ mod tests {
     fn data_per_source_is_respected() {
         let t = generate(&ScaleConfig::new(ScaleKind::HierarchicalWan, 32).data_per_source(2.0 * GB));
         assert!(t.d.iter().all(|&d| d == 2.0 * GB));
+    }
+
+    #[test]
+    fn zero_skew_is_exactly_uniform() {
+        // skew = 0 must reproduce the historical volumes bit-for-bit.
+        for kind in ScaleKind::all() {
+            let a = generate(&ScaleConfig::new(kind, 64).seed(3));
+            let b = generate(&ScaleConfig::new(kind, 64).seed(3).skew(0.0));
+            assert_eq!(a.d, b.d, "{kind:?}");
+            assert!(a.d.iter().all(|&d| d == 1.0 * GB));
+        }
+    }
+
+    #[test]
+    fn skew_concentrates_volume_but_preserves_total() {
+        for kind in ScaleKind::all() {
+            let uni = generate(&ScaleConfig::new(kind, 64).seed(3));
+            let skewed = generate(&ScaleConfig::new(kind, 64).seed(3).skew(1.0));
+            // Same total data (the skew redistributes, not inflates)…
+            let rel = (uni.total_data() - skewed.total_data()).abs() / uni.total_data();
+            assert!(rel < 1e-12, "{kind:?}: total changed by {rel}");
+            // …monotonically decreasing per-source volumes, genuinely skewed.
+            for w in skewed.d.windows(2) {
+                assert!(w[0] >= w[1], "{kind:?}: volumes must be non-increasing");
+            }
+            assert!(
+                skewed.d[0] > 3.0 * skewed.d[skewed.d.len() - 1],
+                "{kind:?}: head/tail spread too small"
+            );
+            // Bandwidths untouched by the skew knob.
+            assert_eq!(uni.b_sm, skewed.b_sm, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn parse_spec_config_round_trips() {
+        let cfg = parse_spec_config("edge-heavy:100:5").unwrap();
+        assert_eq!(cfg.kind, ScaleKind::EdgeHeavy);
+        assert_eq!(cfg.nodes, 100);
+        assert_eq!(cfg.seed, 5);
+        assert_eq!(cfg.skew, 0.0);
     }
 }

@@ -281,7 +281,9 @@ mod tests {
         let cfg = BarrierConfig::ALL_GLOBAL;
         let planner = ArtifactPlanner::load(2, 2, 2).unwrap();
         let art = makespan(&t, app, cfg, &planner.optimize(&t, app, cfg).unwrap());
-        let fd_plan = crate::optimizer::GradientOptimizer::default();
+        // Explicitly the finite-difference oracle: the default backend is
+        // analytic now, but this cross-check wants an independent path.
+        let fd_plan = crate::optimizer::GradientOptimizer::finite_diff();
         use crate::optimizer::PlanOptimizer;
         let fd = makespan(&t, app, cfg, &fd_plan.optimize(&t, app, cfg));
         let rel = (art - fd).abs() / fd;

@@ -1,13 +1,14 @@
 //! From-scratch LP/MIP solver stack (the paper used Gurobi 5.0; see
 //! DESIGN.md §3 for the substitution): problem builder, two-phase dense
-//! simplex, branch & bound, and the §2.3 piecewise-linear bilinear
-//! linearization.
+//! simplex, sparse revised simplex, branch & bound, and the §2.3
+//! piecewise-linear bilinear linearization.
 
 pub mod ipm;
 pub mod linalg;
 pub mod lp;
 pub mod mip;
 pub mod pwl;
+pub mod revised;
 pub mod simplex;
 
 pub use lp::{Cmp, Lp, LpOutcome};
@@ -18,17 +19,27 @@ pub use simplex::solve;
 /// the degeneracy that stalls the tableau simplex on these programs).
 pub use ipm::solve as solve_ipm;
 
-/// Portfolio solve: tableau simplex first (an order of magnitude faster
-/// on these sizes — see EXPERIMENTS.md §Perf), interior-point as the
-/// fallback for the degenerate instances where the simplex stalls or
-/// mis-declares infeasibility. The two from-scratch solvers have
-/// complementary failure modes on the crate's heavily degenerate, badly
-/// scaled plan LPs; together they cover every instance the optimizers
-/// generate (see the alternating-LP tests).
+/// Row count above which [`solve_robust`]/[`solve_smart`] switch from the
+/// dense tableau portfolio to the sparse revised simplex. The paper's
+/// 8×8×8 plan LPs stay well below this, so they keep the exact historical
+/// code path; generated 128+-node topologies go sparse.
+pub const DENSE_ROW_CUTOVER: usize = 300;
+
+/// Largest LP the dense portfolio is allowed to take as a *fallback* when
+/// the sparse path reports numerical trouble (the dense tableau is
+/// O(rows·cols) memory).
+const DENSE_FALLBACK_LIMIT: usize = 2000;
+
+/// Dense portfolio solve: tableau simplex first (an order of magnitude
+/// faster on paper-size problems — see EXPERIMENTS.md §Perf),
+/// interior-point as the fallback for the degenerate instances where the
+/// simplex stalls or mis-declares infeasibility. The two from-scratch
+/// solvers have complementary failure modes on the crate's heavily
+/// degenerate, badly scaled plan LPs.
 ///
 /// A simplex "optimal" is only accepted when primal-feasible to 1e-6;
 /// stall-capped bases that drifted are handed to the IPM instead.
-pub fn solve_robust(lp: &Lp) -> LpOutcome {
+pub fn solve_robust_dense(lp: &Lp) -> LpOutcome {
     let first = simplex::solve(lp);
     if let LpOutcome::Optimal { x, objective } = &first {
         if lp.violation(x) < 1e-6 {
@@ -38,5 +49,69 @@ pub fn solve_robust(lp: &Lp) -> LpOutcome {
     match ipm::solve(lp) {
         LpOutcome::Optimal { x, objective } => LpOutcome::Optimal { x, objective },
         _ => first,
+    }
+}
+
+/// Robust solve with automatic dense/sparse dispatch by problem size.
+pub fn solve_robust(lp: &Lp) -> LpOutcome {
+    solve_smart(lp, None).0
+}
+
+/// Size-dispatching solve with optional warm-start basis reuse.
+///
+/// * rows ≤ [`DENSE_ROW_CUTOVER`]: dense portfolio (no basis to reuse).
+/// * larger: sparse revised simplex, warm-started from `warm` when the
+///   structure still matches; its final basis is returned for the next
+///   structurally identical solve. A sparse solution is accepted only if
+///   primal-feasible to 1e-6; otherwise the dense portfolio takes over
+///   when the problem is small enough to afford it.
+pub fn solve_smart(lp: &Lp, warm: Option<&[usize]>) -> (LpOutcome, Option<Vec<usize>>) {
+    if lp.n_rows() <= DENSE_ROW_CUTOVER {
+        return (solve_robust_dense(lp), None);
+    }
+    let (out, basis) = revised::solve_warm(lp, warm);
+    match out {
+        Some(LpOutcome::Optimal { x, objective }) => {
+            if lp.violation(&x) < 1e-6 {
+                return (LpOutcome::Optimal { x, objective }, basis);
+            }
+            if lp.n_rows() <= DENSE_FALLBACK_LIMIT {
+                (solve_robust_dense(lp), None)
+            } else {
+                (LpOutcome::Optimal { x, objective }, basis)
+            }
+        }
+        // Mis-declared infeasibility is the documented failure mode of
+        // from-scratch simplexes on these degenerate plan LPs, so a
+        // sparse Infeasible/Unbounded verdict gets the same dense
+        // cross-check as a drifted optimum whenever it is affordable.
+        Some(other) => {
+            if lp.n_rows() <= DENSE_FALLBACK_LIMIT {
+                (solve_robust_dense(lp), None)
+            } else {
+                (other, basis)
+            }
+        }
+        None => {
+            if lp.n_rows() <= DENSE_FALLBACK_LIMIT {
+                (solve_robust_dense(lp), None)
+            } else {
+                // The sparse solver failed twice (warm + cold retry) and
+                // the LP is too large for the dense portfolio's O(m·n)
+                // memory. Surfacing Infeasible is a mislabel, but every
+                // caller treats it as "no usable solution" and degrades
+                // (the alternating descent keeps its incumbent); flag it
+                // for diagnosis rather than fail silently.
+                if std::env::var("MRPERF_LP_DEBUG").is_ok() {
+                    eprintln!(
+                        "[solve_smart] sparse solver failed on {}x{} LP with no \
+                         affordable dense fallback",
+                        lp.n_rows(),
+                        lp.n_vars
+                    );
+                }
+                (LpOutcome::Infeasible, None)
+            }
+        }
     }
 }

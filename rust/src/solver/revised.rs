@@ -1,0 +1,847 @@
+//! Sparse revised simplex with a product-form inverse (PFI).
+//!
+//! The dense tableau ([`super::simplex`]) carries an explicit `(m+1)×(n+1)`
+//! matrix, which is perfect for the paper's ≲300-row plan LPs but blows up
+//! quadratically on the 256-node generated topologies (the `hier-wan:256`
+//! x-LP has thousands of rows). This module is the large-problem path:
+//!
+//! * the constraint matrix lives in **CSC** (compressed sparse column)
+//!   form and is never densified;
+//! * the basis inverse is a **product of eta matrices** (Bartels–Golub
+//!   style elementary column transforms), rebuilt from the basis columns
+//!   every [`REFACTOR_EVERY`] pivots to bound fill-in and drift;
+//! * pricing is Dantzig with **partial (cyclic block) pricing** on wide
+//!   problems and a Bland fallback on degenerate plateaus;
+//! * a solved basis can be returned and fed back in (**warm start**) —
+//!   the alternating optimizer reuses the previous round's basis, which
+//!   turns most re-solves into a handful of pivots.
+//!
+//! Standard-form conversion, scaling, and tolerances deliberately mirror
+//! the dense solver so the two are interchangeable behind [`Lp`]; the
+//! dense tableau remains the small-problem path and the cross-check
+//! oracle (see `tests/optimizer_scale.rs`).
+
+use super::lp::{Cmp, Lp, LpOutcome};
+use super::simplex::equilibrate;
+
+const EPS: f64 = 1e-9;
+/// Reduced-cost tolerance for the entering test (matches the dense path).
+const EPS_RC: f64 = 1e-6;
+/// Minimum acceptable pivot magnitude in the ratio test.
+const EPS_PIVOT: f64 = 1e-7;
+/// Pivots without objective progress before switching to Bland's rule.
+const STALL_TO_BLAND: usize = 500;
+const MAX_ITERS: usize = 100_000;
+/// Eta-file length that triggers a refactorization.
+const REFACTOR_EVERY: usize = 64;
+/// Partial pricing: once this many columns have been scanned and at least
+/// one candidate found, take the best so far instead of finishing the
+/// sweep. Optimality is only ever declared after a *full* sweep.
+const PARTIAL_SPAN: usize = 4096;
+
+/// Compressed sparse column matrix (column-major, row indices ascending).
+struct Csc {
+    col_ptr: Vec<usize>,
+    row_ix: Vec<usize>,
+    val: Vec<f64>,
+}
+
+impl Csc {
+    fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let a = self.col_ptr[j];
+        let b = self.col_ptr[j + 1];
+        (&self.row_ix[a..b], &self.val[a..b])
+    }
+
+    fn nnz_col(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Scatter column `j` into the dense buffer (caller pre-zeroes).
+    fn scatter(&self, j: usize, out: &mut [f64]) {
+        let (rows, vals) = self.col(j);
+        for (&r, &v) in rows.iter().zip(vals) {
+            out[r] = v;
+        }
+    }
+
+    /// `yᵀ·a_j` for a dense row vector `y`.
+    fn dot_col(&self, j: usize, y: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        let mut acc = 0.0;
+        for (&r, &v) in rows.iter().zip(vals) {
+            acc += y[r] * v;
+        }
+        acc
+    }
+}
+
+/// One elementary transform: pivot on row `r` with transformed column
+/// values `pivot` (at `r`) and `others` (elsewhere).
+struct Eta {
+    r: usize,
+    pivot: f64,
+    others: Vec<(usize, f64)>,
+}
+
+/// Equilibrated standard form `A x = b, x ≥ 0, b ≥ 0` with explicit
+/// slack/surplus and artificial columns (layout mirrors the dense path).
+struct Std {
+    m: usize,
+    n: usize,
+    n_orig: usize,
+    /// Columns `≥ art_base` are artificial.
+    art_base: usize,
+    n_art: usize,
+    csc: Csc,
+    b: Vec<f64>,
+    /// Phase-2 objective over all n columns (scaled; slack/art zero).
+    cost2: Vec<f64>,
+    /// Per row, its slack-or-artificial unit column (basis repair).
+    unit_col: Vec<usize>,
+    /// Initial (cold) basis: one unit column per row.
+    init_basis: Vec<usize>,
+}
+
+fn standardize(lp: &Lp, row_scale: &[f64], col_scale: &[f64]) -> Std {
+    let m = lp.n_rows();
+    let n_orig = lp.n_vars;
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum RowKind {
+        Slack,
+        SurplusArt,
+        Art,
+    }
+    let mut kinds = Vec::with_capacity(m);
+    let mut signs = Vec::with_capacity(m);
+    let mut n_slack = 0usize;
+    let mut n_art = 0usize;
+    for (r, row) in lp.rows.iter().enumerate() {
+        let rhs_scaled = row.rhs / row_scale[r];
+        let (kind, sign) = match row.cmp {
+            Cmp::Le => {
+                if rhs_scaled >= 0.0 {
+                    (RowKind::Slack, 1.0)
+                } else {
+                    (RowKind::SurplusArt, -1.0)
+                }
+            }
+            Cmp::Ge => {
+                if rhs_scaled <= 0.0 {
+                    (RowKind::Slack, -1.0)
+                } else {
+                    (RowKind::SurplusArt, 1.0)
+                }
+            }
+            Cmp::Eq => (RowKind::Art, if rhs_scaled < 0.0 { -1.0 } else { 1.0 }),
+        };
+        match kind {
+            RowKind::Slack => n_slack += 1,
+            RowKind::SurplusArt => {
+                n_slack += 1;
+                n_art += 1;
+            }
+            RowKind::Art => n_art += 1,
+        }
+        kinds.push(kind);
+        signs.push(sign);
+    }
+
+    let art_base = n_orig + n_slack;
+    let n = art_base + n_art;
+
+    // Column-major assembly. Structural entries land in row order because
+    // rows are scanned in order and each row contributes at most one
+    // entry per column (Lp::constraint merges duplicates).
+    let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        cols.push(Vec::new());
+    }
+    let mut b = vec![0.0; m];
+    let mut unit_col = vec![usize::MAX; m];
+    let mut init_basis = vec![usize::MAX; m];
+    let mut slack_cursor = n_orig;
+    let mut art_cursor = art_base;
+    for (r, row) in lp.rows.iter().enumerate() {
+        let sr = signs[r] / row_scale[r];
+        for &(v, c) in &row.terms {
+            cols[v].push((r, c * col_scale[v] * sr));
+        }
+        b[r] = signs[r] * row.rhs / row_scale[r];
+        match kinds[r] {
+            RowKind::Slack => {
+                cols[slack_cursor].push((r, 1.0));
+                unit_col[r] = slack_cursor;
+                init_basis[r] = slack_cursor;
+                slack_cursor += 1;
+            }
+            RowKind::SurplusArt => {
+                cols[slack_cursor].push((r, -1.0));
+                slack_cursor += 1;
+                cols[art_cursor].push((r, 1.0));
+                unit_col[r] = art_cursor;
+                init_basis[r] = art_cursor;
+                art_cursor += 1;
+            }
+            RowKind::Art => {
+                cols[art_cursor].push((r, 1.0));
+                unit_col[r] = art_cursor;
+                init_basis[r] = art_cursor;
+                art_cursor += 1;
+            }
+        }
+    }
+
+    let mut col_ptr = Vec::with_capacity(n + 1);
+    let mut row_ix = Vec::new();
+    let mut val = Vec::new();
+    col_ptr.push(0);
+    for c in &cols {
+        for &(r, v) in c {
+            row_ix.push(r);
+            val.push(v);
+        }
+        col_ptr.push(row_ix.len());
+    }
+
+    let mut cost2 = vec![0.0; n];
+    for v in 0..n_orig {
+        cost2[v] = lp.objective[v] * col_scale[v];
+    }
+
+    Std {
+        m,
+        n,
+        n_orig,
+        art_base,
+        n_art,
+        csc: Csc { col_ptr, row_ix, val },
+        b,
+        cost2,
+        unit_col,
+        init_basis,
+    }
+}
+
+enum Phase {
+    Optimal,
+    /// Iteration cap hit: the incumbent basis is usable but optimality
+    /// was not proven — phase 2 accepts it (callers cross-check the
+    /// solution), phase 1 must NOT conclude infeasibility from it.
+    IterCap,
+    Unbounded,
+    Fail,
+}
+
+struct Rev<'a> {
+    st: &'a Std,
+    basis: Vec<usize>,
+    in_basis: Vec<bool>,
+    etas: Vec<Eta>,
+    /// Value of the basic variable sitting at each row position.
+    xb: Vec<f64>,
+    /// Columns neutralized as numerical noise within a bounded phase.
+    banned: Vec<bool>,
+    price_cursor: usize,
+}
+
+impl<'a> Rev<'a> {
+    fn new(st: &'a Std) -> Rev<'a> {
+        let mut r = Rev {
+            st,
+            basis: Vec::new(),
+            in_basis: vec![false; st.n],
+            etas: Vec::new(),
+            xb: Vec::new(),
+            banned: vec![false; st.n],
+            price_cursor: 0,
+        };
+        r.reset_cold();
+        r
+    }
+
+    fn reset_cold(&mut self) {
+        self.basis = self.st.init_basis.clone();
+        self.in_basis.iter_mut().for_each(|f| *f = false);
+        for &c in &self.basis {
+            self.in_basis[c] = true;
+        }
+        self.etas.clear();
+        self.xb = self.st.b.clone();
+        self.banned.iter_mut().for_each(|f| *f = false);
+        self.price_cursor = 0;
+    }
+
+    /// Apply `B⁻¹` in place.
+    fn ftran(&self, v: &mut [f64]) {
+        for e in &self.etas {
+            let t = v[e.r];
+            if t == 0.0 {
+                continue;
+            }
+            let t = t / e.pivot;
+            v[e.r] = t;
+            for &(i, a) in &e.others {
+                v[i] -= a * t;
+            }
+        }
+    }
+
+    /// Apply `(B⁻¹)ᵀ` in place.
+    fn btran(&self, v: &mut [f64]) {
+        for e in self.etas.iter().rev() {
+            let mut t = v[e.r];
+            for &(i, a) in &e.others {
+                t -= a * v[i];
+            }
+            v[e.r] = t / e.pivot;
+        }
+    }
+
+    /// Rebuild the eta file from the current basis columns (fresh PFI).
+    /// Unit-ish columns are eliminated first (no fill), the rest by
+    /// ascending sparsity — a poor man's Markowitz that keeps the fill
+    /// small for the near-triangular bases these LPs produce. Dependent
+    /// columns are replaced by the row's logical unit column; an
+    /// unrepairable basis reports failure so the caller can fall back.
+    fn refactor(&mut self) -> Result<(), ()> {
+        let m = self.st.m;
+        self.etas.clear();
+        let cols = std::mem::take(&mut self.basis);
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by_key(|&p| self.st.csc.nnz_col(cols[p]));
+
+        let mut row_taken = vec![false; m];
+        let mut col_used = vec![false; self.st.n];
+        let mut new_basis = vec![usize::MAX; m];
+        let mut buf = vec![0.0; m];
+        let mut pivot_in = |slf: &mut Rev<'a>,
+                            c: usize,
+                            want_row: Option<usize>,
+                            row_taken: &mut [bool],
+                            new_basis: &mut [usize],
+                            buf: &mut Vec<f64>|
+         -> bool {
+            buf.iter_mut().for_each(|v| *v = 0.0);
+            slf.st.csc.scatter(c, buf);
+            slf.ftran(buf);
+            let r = match want_row {
+                Some(r) if buf[r].abs() > 1e-10 => r,
+                Some(_) => return false,
+                None => {
+                    let mut best_r = usize::MAX;
+                    let mut best_a = 1e-10;
+                    for (r, &v) in buf.iter().enumerate() {
+                        if !row_taken[r] && v.abs() > best_a {
+                            best_a = v.abs();
+                            best_r = r;
+                        }
+                    }
+                    if best_r == usize::MAX {
+                        return false;
+                    }
+                    best_r
+                }
+            };
+            let mut others = Vec::new();
+            for (i, &v) in buf.iter().enumerate() {
+                if i != r && v.abs() > 1e-12 {
+                    others.push((i, v));
+                }
+            }
+            slf.etas.push(Eta { r, pivot: buf[r], others });
+            row_taken[r] = true;
+            new_basis[r] = c;
+            true
+        };
+
+        for &p in &order {
+            let c = cols[p];
+            if col_used[c] {
+                continue; // duplicate column in a (bogus) warm basis
+            }
+            if pivot_in(self, c, None, &mut row_taken, &mut new_basis, &mut buf) {
+                col_used[c] = true;
+            }
+            // Dependent column: dropped; its row gets repaired below.
+        }
+        for r in 0..m {
+            if !row_taken[r] {
+                let c = self.st.unit_col[r];
+                if col_used[c]
+                    || !pivot_in(self, c, Some(r), &mut row_taken, &mut new_basis, &mut buf)
+                {
+                    self.basis = new_basis; // leave consistent-ish state
+                    return Err(());
+                }
+                col_used[c] = true;
+            }
+        }
+
+        self.in_basis.iter_mut().for_each(|f| *f = false);
+        for &c in &new_basis {
+            self.in_basis[c] = true;
+        }
+        self.basis = new_basis;
+        let mut v = self.st.b.clone();
+        self.ftran(&mut v);
+        for x in v.iter_mut() {
+            if *x < 0.0 && *x > -1e-9 {
+                *x = 0.0;
+            }
+        }
+        self.xb = v;
+        Ok(())
+    }
+
+    /// Install a warm basis. Returns false (leaving the solver cold) if
+    /// the basis has the wrong shape, is singular, or is primal
+    /// infeasible for this instance.
+    fn try_warm(&mut self, warm: &[usize]) -> bool {
+        let m = self.st.m;
+        if warm.len() != m || warm.iter().any(|&c| c >= self.st.n) {
+            return false;
+        }
+        self.basis = warm.to_vec();
+        if self.refactor().is_err() {
+            self.reset_cold();
+            return false;
+        }
+        let mut feasible = true;
+        for (r, &x) in self.xb.iter().enumerate() {
+            if x < -1e-6 {
+                feasible = false;
+                break;
+            }
+            // A warm basis must not resurrect artificial infeasibility.
+            if self.basis[r] >= self.st.art_base && x > 1e-7 {
+                feasible = false;
+                break;
+            }
+        }
+        if !feasible {
+            self.reset_cold();
+            return false;
+        }
+        for x in self.xb.iter_mut() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+        true
+    }
+
+    fn objective(&self, cost: &[f64]) -> f64 {
+        self.basis
+            .iter()
+            .zip(&self.xb)
+            .map(|(&c, &x)| cost[c] * x)
+            .sum()
+    }
+
+    /// Entering column, or None when no eligible column prices out
+    /// negative after a full sweep (optimality).
+    fn price(&mut self, cost: &[f64], allowed: usize, y: &[f64], bland: bool) -> Option<usize> {
+        if allowed == 0 {
+            return None;
+        }
+        let mut best = -EPS_RC;
+        let mut best_j = None;
+        let start = if bland { 0 } else { self.price_cursor % allowed };
+        for off in 0..allowed {
+            let j = (start + off) % allowed;
+            if self.in_basis[j] || self.banned[j] {
+                continue;
+            }
+            let d = cost[j] - self.st.csc.dot_col(j, y);
+            if d < best {
+                best = d;
+                best_j = Some(j);
+                if bland {
+                    break;
+                }
+            }
+            if !bland && best_j.is_some() && off >= PARTIAL_SPAN {
+                break;
+            }
+        }
+        if let Some(j) = best_j {
+            self.price_cursor = (j + 1) % allowed;
+        }
+        best_j
+    }
+
+    /// Leaving row for the transformed entering column, or None
+    /// (unbounded direction).
+    fn choose_leaving(&self, abar: &[f64], phase2: bool) -> Option<usize> {
+        let m = self.st.m;
+        // Zero-valued basic artificials are kicked out eagerly: pivoting
+        // there is degenerate (entering value 0, feasibility untouched)
+        // and stops the artificial from creeping positive during phase 2.
+        if phase2 {
+            for r in 0..m {
+                if self.basis[r] >= self.st.art_base
+                    && self.xb[r] <= EPS
+                    && abar[r].abs() > EPS_PIVOT
+                {
+                    return Some(r);
+                }
+            }
+        }
+        for &min_pivot in &[EPS_PIVOT, EPS] {
+            let mut best_ratio = f64::INFINITY;
+            let mut prow = usize::MAX;
+            for r in 0..m {
+                let coef = abar[r];
+                if coef > min_pivot {
+                    let ratio = self.xb[r] / coef;
+                    if ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && prow != usize::MAX
+                            && self.basis[r] < self.basis[prow])
+                    {
+                        best_ratio = ratio;
+                        prow = r;
+                    }
+                }
+            }
+            if prow != usize::MAX {
+                return Some(prow);
+            }
+        }
+        None
+    }
+
+    fn pivot(&mut self, q: usize, r: usize, abar: &[f64]) {
+        let pivot = abar[r];
+        debug_assert!(pivot.abs() > EPS);
+        let t = self.xb[r] / pivot;
+        for (i, x) in self.xb.iter_mut().enumerate() {
+            if i != r && abar[i] != 0.0 {
+                *x -= abar[i] * t;
+                if *x < 0.0 && *x > -1e-9 {
+                    *x = 0.0;
+                }
+            }
+        }
+        self.xb[r] = if t.abs() < 1e-14 { 0.0 } else { t.max(0.0) };
+        let mut others = Vec::new();
+        for (i, &v) in abar.iter().enumerate() {
+            if i != r && v.abs() > 1e-12 {
+                others.push((i, v));
+            }
+        }
+        self.in_basis[self.basis[r]] = false;
+        self.in_basis[q] = true;
+        self.basis[r] = q;
+        self.etas.push(Eta { r, pivot, others });
+    }
+
+    /// One simplex phase over the given objective. `allowed` bars columns
+    /// `≥ allowed` from entering (artificials in phase 2); `bounded`
+    /// marks phases with a known objective lower bound (phase 1), where
+    /// an "unbounded" column is numerical noise to be neutralized.
+    fn run_phase(&mut self, cost: &[f64], allowed: usize, bounded: bool, phase2: bool) -> Phase {
+        let m = self.st.m;
+        self.banned.iter_mut().for_each(|f| *f = false);
+        let mut last_obj = f64::INFINITY;
+        let mut stalled = 0usize;
+        let mut y = vec![0.0; m];
+        let mut abar = vec![0.0; m];
+        for _iter in 0..MAX_ITERS {
+            if self.etas.len() >= REFACTOR_EVERY && self.refactor().is_err() {
+                return Phase::Fail;
+            }
+            let cur = self.objective(cost);
+            if cur < last_obj - 1e-10 * last_obj.abs().max(1.0) {
+                last_obj = cur;
+                stalled = 0;
+            } else {
+                stalled += 1;
+            }
+            let bland = stalled >= STALL_TO_BLAND;
+
+            y.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..m {
+                y[r] = cost[self.basis[r]];
+            }
+            self.btran(&mut y);
+            let q = match self.price(cost, allowed, &y, bland) {
+                Some(q) => q,
+                None => return Phase::Optimal,
+            };
+            abar.iter_mut().for_each(|v| *v = 0.0);
+            self.st.csc.scatter(q, &mut abar);
+            self.ftran(&mut abar);
+            match self.choose_leaving(&abar, phase2) {
+                Some(r) => self.pivot(q, r, &abar),
+                None => {
+                    if bounded {
+                        self.banned[q] = true;
+                        continue;
+                    }
+                    return Phase::Unbounded;
+                }
+            }
+        }
+        Phase::IterCap
+    }
+}
+
+/// Solve, optionally warm-starting from a previous basis (standard-form
+/// column indices, as returned by this function for a *structurally
+/// identical* LP). Returns `None` on numerical failure — the caller
+/// decides the fallback — plus the final basis for reuse.
+pub fn solve_warm(lp: &Lp, warm: Option<&[usize]>) -> (Option<LpOutcome>, Option<Vec<usize>>) {
+    let (row_scale, col_scale) = equilibrate(lp);
+    let st = standardize(lp, &row_scale, &col_scale);
+    let mut solver = Rev::new(&st);
+
+    let mut warmed = match warm {
+        Some(w) => solver.try_warm(w),
+        None => false,
+    };
+
+    // One cold retry on numerical failure: mid-run refactorization
+    // failures stem from a degenerate accumulated basis (or a poisoned
+    // warm basis), which a fresh start clears; `None` is only reported
+    // when even the cold run fails.
+    for attempt in 0..2 {
+        if attempt > 0 {
+            solver.reset_cold();
+            warmed = false;
+        }
+        if !warmed && st.n_art > 0 {
+            let mut c1 = vec![0.0; st.n];
+            for j in st.art_base..st.n {
+                c1[j] = 1.0;
+            }
+            let p1 = solver.run_phase(&c1, st.n, true, false);
+            // Unbounded cannot happen in the bounded phase.
+            if matches!(p1, Phase::Fail | Phase::Unbounded) {
+                if attempt == 0 {
+                    continue;
+                }
+                return (None, None);
+            }
+            let phase1 = solver.objective(&c1);
+            if phase1 > 1e-5 {
+                // Only a *converged* phase 1 proves infeasibility; at the
+                // iteration cap the residual artificials just mean we ran
+                // out of pivots.
+                if matches!(p1, Phase::IterCap) {
+                    if attempt == 0 {
+                        continue;
+                    }
+                    return (None, None);
+                }
+                return (Some(LpOutcome::Infeasible), None);
+            }
+        }
+
+        match solver.run_phase(&st.cost2, st.art_base, false, true) {
+            // Iteration cap: accept the incumbent; callers cross-check
+            // the solution against the exact constraints and fall back.
+            Phase::Optimal | Phase::IterCap => {}
+            Phase::Unbounded => return (Some(LpOutcome::Unbounded), None),
+            Phase::Fail => {
+                if attempt == 0 {
+                    continue;
+                }
+                return (None, None);
+            }
+        }
+
+        let mut x = vec![0.0; st.n_orig];
+        for r in 0..st.m {
+            let c = solver.basis[r];
+            if c < st.n_orig {
+                x[c] = solver.xb[r].max(0.0);
+            }
+        }
+        for (v, s) in x.iter_mut().zip(&col_scale) {
+            *v *= s;
+        }
+        let objective = lp.objective_at(&x);
+        let basis = solver.basis.clone();
+        return (Some(LpOutcome::Optimal { x, objective }), Some(basis));
+    }
+    (None, None)
+}
+
+/// Solve a minimization LP. Falls back to the dense tableau on numerical
+/// failure so this entry point always produces an answer.
+pub fn solve(lp: &Lp) -> LpOutcome {
+    match solve_warm(lp, None) {
+        (Some(out), _) => out,
+        (None, _) => super::simplex::solve(lp),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::lp::{Cmp, Lp};
+    use crate::util::qcheck::{ensure, qcheck, Config};
+    use crate::util::rng::Pcg64;
+
+    fn assert_opt(outcome: LpOutcome, want_obj: f64, tol: f64) -> Vec<f64> {
+        let (x, obj) = outcome.expect_optimal("revised test");
+        assert!(
+            (obj - want_obj).abs() <= tol,
+            "objective {obj}, expected {want_obj}"
+        );
+        x
+    }
+
+    #[test]
+    fn basic_le_lp() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, -1.0);
+        lp.minimize(y, -1.0);
+        lp.constraint(&[(x, 1.0), (y, 2.0)], Cmp::Le, 4.0);
+        lp.constraint(&[(x, 3.0), (y, 1.0)], Cmp::Le, 6.0);
+        let sol = assert_opt(solve(&lp), -(8.0 / 5.0 + 6.0 / 5.0), 1e-8);
+        assert!((sol[0] - 8.0 / 5.0).abs() < 1e-8);
+        assert!((sol[1] - 6.0 / 5.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn ge_and_eq_need_phase1() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, 2.0);
+        lp.minimize(y, 3.0);
+        lp.constraint(&[(x, 1.0), (y, 1.0)], Cmp::Eq, 10.0);
+        lp.constraint(&[(x, 1.0)], Cmp::Ge, 3.0);
+        let sol = assert_opt(solve(&lp), 20.0, 1e-8);
+        assert!((sol[0] - 10.0).abs() < 1e-8);
+        assert!(sol[1].abs() < 1e-8);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        lp.constraint(&[(x, 1.0)], Cmp::Le, 1.0);
+        lp.constraint(&[(x, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(solve(&lp), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        lp.minimize(x, -1.0);
+        lp.constraint(&[(x, 1.0)], Cmp::Ge, 1.0);
+        assert_eq!(solve(&lp), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn min_max_epigraph_pattern() {
+        let mut lp = Lp::new();
+        let z = lp.var("z");
+        lp.minimize(z, 1.0);
+        for &t in &[3.0, 7.0, 5.0] {
+            lp.constraint(&[(z, 1.0)], Cmp::Ge, t);
+        }
+        assert_opt(solve(&lp), 7.0, 1e-9);
+    }
+
+    #[test]
+    fn transportation_problem() {
+        let mut lp = Lp::new();
+        let f: Vec<Vec<usize>> = (0..2)
+            .map(|i| (0..2).map(|j| lp.var(format!("f{i}{j}"))).collect())
+            .collect();
+        let costs = [[1.0, 2.0], [3.0, 1.0]];
+        for i in 0..2 {
+            for j in 0..2 {
+                lp.minimize(f[i][j], costs[i][j]);
+            }
+        }
+        lp.constraint(&[(f[0][0], 1.0), (f[0][1], 1.0)], Cmp::Eq, 10.0);
+        lp.constraint(&[(f[1][0], 1.0), (f[1][1], 1.0)], Cmp::Eq, 20.0);
+        lp.constraint(&[(f[0][0], 1.0), (f[1][0], 1.0)], Cmp::Eq, 15.0);
+        lp.constraint(&[(f[0][1], 1.0), (f[1][1], 1.0)], Cmp::Eq, 15.0);
+        assert_opt(solve(&lp), 40.0, 1e-7);
+    }
+
+    #[test]
+    fn warm_start_round_trip() {
+        // Solve, re-solve from the returned basis: same optimum, and the
+        // warm solve must succeed without falling back.
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, 1.0);
+        lp.minimize(y, 2.0);
+        lp.constraint(&[(x, 1.0), (y, 1.0)], Cmp::Ge, 4.0);
+        lp.constraint(&[(x, 1.0)], Cmp::Le, 3.0);
+        let (first, basis) = solve_warm(&lp, None);
+        let (_, obj1) = first.expect("cold solve").expect_optimal("cold");
+        let basis = basis.expect("basis returned");
+        let (second, _) = solve_warm(&lp, Some(&basis));
+        let (_, obj2) = second.expect("warm solve").expect_optimal("warm");
+        assert!((obj1 - obj2).abs() < 1e-9, "{obj1} vs {obj2}");
+
+        // A nonsense warm basis must not break correctness either.
+        let bogus = vec![0usize; basis.len()];
+        let (third, _) = solve_warm(&lp, Some(&bogus));
+        let (_, obj3) = third.expect("bogus-warm solve").expect_optimal("bogus");
+        assert!((obj1 - obj3).abs() < 1e-9);
+    }
+
+    /// Property: revised and dense tableau agree on random feasible LPs.
+    #[test]
+    fn qcheck_matches_dense_simplex() {
+        qcheck(Config::default().cases(60), "revised vs dense", |rng: &mut Pcg64| {
+            let nv = rng.range(2, 7);
+            let nc = rng.range(1, 9);
+            let mut lp = Lp::new();
+            let vars: Vec<usize> = (0..nv).map(|i| lp.var(format!("v{i}"))).collect();
+            let x0: Vec<f64> = (0..nv).map(|_| rng.uniform(0.0, 5.0)).collect();
+            for v in &vars {
+                lp.minimize(*v, rng.uniform(-1.0, 2.0));
+            }
+            for _ in 0..nc {
+                let terms: Vec<(usize, f64)> =
+                    vars.iter().map(|&v| (v, rng.uniform(-1.0, 1.0))).collect();
+                let lhs: f64 = terms.iter().map(|&(v, c)| c * x0[v]).sum();
+                if rng.chance(0.3) {
+                    lp.constraint(&terms, Cmp::Ge, lhs - rng.uniform(0.0, 2.0));
+                } else {
+                    lp.constraint(&terms, Cmp::Le, lhs + rng.uniform(0.0, 2.0));
+                }
+            }
+            for v in &vars {
+                lp.upper_bound(*v, 10.0);
+            }
+            let dense = crate::solver::simplex::solve(&lp);
+            let sparse = solve(&lp);
+            match (dense, sparse) {
+                (
+                    LpOutcome::Optimal { objective: od, .. },
+                    LpOutcome::Optimal { x, objective: os },
+                ) => {
+                    ensure(
+                        lp.violation(&x) < 1e-6,
+                        format!("violation {}", lp.violation(&x)),
+                    )?;
+                    ensure(
+                        (od - os).abs() <= 1e-7 * od.abs().max(1.0),
+                        format!("dense {od} vs revised {os}"),
+                    )
+                }
+                (d, s) => ensure(
+                    std::mem::discriminant(&d) == std::mem::discriminant(&s),
+                    format!("outcome mismatch: dense {d:?} vs revised {s:?}"),
+                ),
+            }
+        });
+    }
+}

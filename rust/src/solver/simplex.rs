@@ -190,7 +190,7 @@ pub fn solve(lp: &Lp) -> LpOutcome {
 /// factors such that dividing `A_ij` by `row[i]·(1/col[j])`… concretely we
 /// use `A'_ij = A_ij · col[j] / row[i]`, `b'_i = b_i / row[i]`, and the
 /// scaled variable is `x'_j = x_j / col[j]`.
-fn equilibrate(lp: &Lp) -> (Vec<f64>, Vec<f64>) {
+pub(crate) fn equilibrate(lp: &Lp) -> (Vec<f64>, Vec<f64>) {
     let mut row_scale = vec![1.0f64; lp.n_rows()];
     let mut col_scale = vec![1.0f64; lp.n_vars];
     for _pass in 0..3 {

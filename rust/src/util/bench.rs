@@ -25,6 +25,33 @@ impl BenchResult {
         self.items_per_iter
             .map(|items| items / self.mean.as_secs_f64())
     }
+
+    /// Hand-rolled JSON record (no serde offline). Names are
+    /// crate-internal (`group/bench_name`), so no string escaping is
+    /// needed beyond what [`json_safe`] enforces.
+    pub fn to_json(&self) -> String {
+        let items = match self.items_per_iter {
+            Some(v) => format!("{v}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\"min_ns\":{},\"items_per_iter\":{}}}",
+            json_safe(&self.name),
+            self.iters,
+            self.mean.as_nanos(),
+            self.p50.as_nanos(),
+            self.p95.as_nanos(),
+            self.min.as_nanos(),
+            items
+        )
+    }
+}
+
+/// Keep bench names JSON-literal-safe (strip quotes/backslashes/controls).
+fn json_safe(name: &str) -> String {
+    name.chars()
+        .filter(|c| !c.is_control() && *c != '"' && *c != '\\')
+        .collect()
 }
 
 /// Benchmark runner configuration.
@@ -58,7 +85,27 @@ impl BenchSuite {
     pub fn new(config: BenchConfig) -> Self {
         // `cargo bench -- <filter>` passes the filter as an argument.
         let filter = std::env::args().nth(1).filter(|a| !a.starts_with('-'));
+        Self::with_filter(config, filter)
+    }
+
+    /// Explicit-filter constructor for embedding the harness in the CLI
+    /// (`mrperf bench`), where argv[1] is the subcommand, not a filter.
+    pub fn with_filter(config: BenchConfig, filter: Option<String>) -> Self {
         BenchSuite { config, results: Vec::new(), filter }
+    }
+
+    /// Write one `BENCH_<name>.json` file per result into `dir` (created
+    /// if needed); returns the paths. `/` in bench names becomes `_`.
+    pub fn write_json(&self, dir: &std::path::Path) -> std::io::Result<Vec<std::path::PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let mut paths = Vec::with_capacity(self.results.len());
+        for r in &self.results {
+            let fname = format!("BENCH_{}.json", r.name.replace('/', "_").replace(' ', "_"));
+            let path = dir.join(fname);
+            std::fs::write(&path, r.to_json() + "\n")?;
+            paths.push(path);
+        }
+        Ok(paths)
     }
 
     /// Run one benchmark. `f` is the timed body; return value is
@@ -172,6 +219,48 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.min <= r.p50 && r.p50 <= r.p95);
         assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_fields_present() {
+        let r = BenchResult {
+            name: "optimizer/scale_64_alternating".to_string(),
+            iters: 7,
+            mean: Duration::from_micros(1500),
+            p50: Duration::from_micros(1400),
+            p95: Duration::from_micros(2000),
+            min: Duration::from_micros(1200),
+            items_per_iter: None,
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"name\":\"optimizer/scale_64_alternating\""));
+        assert!(j.contains("\"iters\":7"));
+        assert!(j.contains("\"mean_ns\":1500000"));
+        assert!(j.contains("\"items_per_iter\":null"));
+    }
+
+    #[test]
+    fn write_json_emits_one_file_per_bench() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            min_iters: 1,
+            max_iters: 2,
+            target_time: Duration::from_millis(1),
+        };
+        let mut suite = BenchSuite::with_filter(cfg, None);
+        suite.bench("group/alpha", || 1);
+        suite.bench("group/beta", || 2);
+        let dir = std::env::temp_dir().join(format!(
+            "mrperf_bench_json_{}",
+            std::process::id()
+        ));
+        let paths = suite.write_json(&dir).unwrap();
+        assert_eq!(paths.len(), 2);
+        let first = std::fs::read_to_string(&paths[0]).unwrap();
+        assert!(paths[0].file_name().unwrap().to_str().unwrap() == "BENCH_group_alpha.json");
+        assert!(first.contains("\"name\":\"group/alpha\""));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! ISSUE 2 acceptance tests: the scalable optimizer stack.
+//!
+//! * Oracle: the sparse revised simplex matches the dense tableau
+//!   objective (≤1e-7 relative) on every LP shape the paper environments
+//!   generate.
+//! * Property: the analytic reverse-mode gradient agrees with central
+//!   finite differences (≤1e-5 relative to the gradient's max-norm) on
+//!   random instances across all three barrier configurations.
+//! * Warm starts re-solve to the same optimum on the sparse path.
+//! * End to end: both e2e optimizers produce valid, uniform-beating plans
+//!   on 64-node generated topologies, and the accelerated path matches
+//!   the legacy path's plan quality.
+//!
+//! (The wall-clock acceptance — ≥10× at 64 nodes, <30 s at 256 — is
+//! asserted by `cargo bench`, release mode; see benches/bench_main.rs.)
+
+use mrperf::model::barrier::BarrierConfig;
+use mrperf::model::makespan::{makespan, AppModel};
+use mrperf::model::plan::Plan;
+use mrperf::model::smooth::smooth_makespan_grad;
+use mrperf::optimizer::gradient::{FiniteDiffBackend, GradBackend};
+use mrperf::optimizer::lp_build::{build_lp_x, build_lp_y, extract_x, Objective};
+use mrperf::optimizer::{AlternatingLp, GradientOptimizer, PlanOptimizer};
+use mrperf::platform::scale::{generate_kind, ScaleKind};
+use mrperf::platform::topology::{Continent, Topology, TopologyBuilder};
+use mrperf::platform::{build_env, EnvKind};
+use mrperf::solver::lp::Lp;
+use mrperf::util::mat::Mat;
+use mrperf::util::qcheck::{ensure, qcheck, Config};
+use mrperf::util::rng::Pcg64;
+
+const CFGS: [BarrierConfig; 3] = [
+    BarrierConfig::ALL_GLOBAL,
+    BarrierConfig::HADOOP,
+    BarrierConfig::ALL_PIPELINED,
+];
+
+// ------------------------------------------------------------------ oracle
+
+fn assert_solvers_agree(lp: &Lp, ctx: &str) {
+    let (xd, od) = mrperf::solver::solve_robust_dense(lp).expect_optimal(ctx);
+    let (xs, os) = mrperf::solver::revised::solve(lp).expect_optimal(ctx);
+    assert!(
+        lp.violation(&xs) < 1e-6,
+        "{ctx}: revised violation {}",
+        lp.violation(&xs)
+    );
+    assert!(
+        lp.violation(&xd) < 1e-6,
+        "{ctx}: dense violation {}",
+        lp.violation(&xd)
+    );
+    assert!(
+        (od - os).abs() <= 1e-7 * od.abs().max(1.0),
+        "{ctx}: dense objective {od} vs revised {os}"
+    );
+}
+
+/// The satellite oracle check: both solvers on every LP shape the paper
+/// environments generate (x-LPs over uniform / one-hot / random shuffle
+/// splits, y-LPs over the local-push x, plus the myopic objectives).
+#[test]
+fn revised_simplex_matches_dense_on_paper_env_lps() {
+    let mut rng = Pcg64::new(0xE2E);
+    let app = AppModel::new(1.3);
+    for kind in EnvKind::all() {
+        let t = build_env(kind);
+        let r = t.n_reducers();
+        for cfg in CFGS {
+            let mut ys: Vec<Vec<f64>> = vec![vec![1.0 / r as f64; r]];
+            let mut one_hot = vec![0.0; r];
+            one_hot[0] = 1.0;
+            ys.push(one_hot);
+            let mut yr: Vec<f64> = (0..r).map(|_| rng.exponential(1.0)).collect();
+            let sum: f64 = yr.iter().sum();
+            yr.iter_mut().for_each(|v| *v /= sum);
+            ys.push(yr);
+            for (yi, y) in ys.iter().enumerate() {
+                let (lp, _) = build_lp_x(&t, app, cfg, y, Objective::Makespan);
+                assert_solvers_agree(&lp, &format!("{kind:?}/{}/lp_x[y{yi}]", cfg.label()));
+            }
+            let x = Plan::local_push(&t).x;
+            let (lp, _) = build_lp_y(&t, app, cfg, &x, Objective::Makespan);
+            assert_solvers_agree(&lp, &format!("{kind:?}/{}/lp_y", cfg.label()));
+        }
+    }
+    // Myopic objectives (Global8 covers the shape; they are cfg-light).
+    let t = build_env(EnvKind::Global8);
+    let y = vec![0.125; 8];
+    let (lp, _) = build_lp_x(&t, app, BarrierConfig::ALL_GLOBAL, &y, Objective::PushTime);
+    assert_solvers_agree(&lp, "global8/lp_x[push-time]");
+    let x = Plan::uniform(8, 8, 8).x;
+    let (lp, _) = build_lp_y(&t, app, BarrierConfig::ALL_GLOBAL, &x, Objective::ShuffleEnd);
+    assert_solvers_agree(&lp, "global8/lp_y[shuffle-end]");
+}
+
+// -------------------------------------------------------- analytic gradient
+
+/// Small random multi-cluster topology for gradient property testing.
+fn random_small_topo(rng: &mut Pcg64) -> Topology {
+    let n_clusters = rng.range(2, 4);
+    let mut b = TopologyBuilder::new("qc-topo");
+    for c in 0..n_clusters {
+        b.cluster(&format!("c{c}"), Continent::US);
+    }
+    let s = rng.range(2, 5);
+    let m = rng.range(2, 5);
+    let r = rng.range(2, 5);
+    for i in 0..s {
+        b.source(i % n_clusters, rng.uniform(10.0, 200.0) * 1e9);
+    }
+    for j in 0..m {
+        b.mapper(j % n_clusters, rng.uniform(20.0, 120.0) * 1e6);
+    }
+    for k in 0..r {
+        b.reducer(k % n_clusters, rng.uniform(20.0, 120.0) * 1e6);
+    }
+    let mut bw = vec![vec![0.0f64; n_clusters]; n_clusters];
+    for (a, row) in bw.iter_mut().enumerate() {
+        for (c2, v) in row.iter_mut().enumerate() {
+            *v = if a == c2 { 120.0e6 } else { rng.uniform(2.0, 40.0) * 1e6 };
+        }
+    }
+    b.build_with_bandwidth(|a, c2| bw[a][c2])
+}
+
+/// The satellite property: analytic gradients agree with central finite
+/// differences to 1e-5 (relative to the gradient max-norm) on random
+/// instances, for all three barrier configurations.
+#[test]
+fn qcheck_analytic_gradient_matches_finite_differences() {
+    qcheck(
+        Config::default().cases(25).seed(0x6AD2),
+        "analytic gradient vs finite differences",
+        |rng: &mut Pcg64| {
+            let t = random_small_topo(rng);
+            let (s, m, r) = (t.n_sources(), t.n_mappers(), t.n_reducers());
+            let mut lx = Mat::zeros(s, m);
+            for i in 0..s {
+                for j in 0..m {
+                    lx.set(i, j, rng.normal() * 0.7);
+                }
+            }
+            let ly: Vec<f64> = (0..r).map(|_| rng.normal() * 0.7).collect();
+            let app = AppModel::new(rng.uniform(0.2, 5.0));
+            for cfg in CFGS {
+                let uni = makespan(&t, app, cfg, &Plan::uniform(s, m, r));
+                let beta = 50.0 / uni;
+                let (la, gx, gy) = smooth_makespan_grad(&t, app, cfg, &lx, &ly, beta);
+                let mut fd = FiniteDiffBackend::default();
+                let (lf, fx, fy) = fd.value_and_grad(&t, app, cfg, &lx, &ly, beta);
+                ensure(
+                    (la - lf).abs() <= 1e-9 * lf.abs().max(1.0),
+                    format!("{}: loss {la} vs fd {lf}", cfg.label()),
+                )?;
+                let gmax = gx
+                    .data()
+                    .iter()
+                    .chain(&gy)
+                    .fold(0.0f64, |a, &g| a.max(g.abs()))
+                    .max(1e-12);
+                for i in 0..s {
+                    for j in 0..m {
+                        let rel = (gx.get(i, j) - fx.get(i, j)).abs() / gmax;
+                        ensure(
+                            rel < 1e-5,
+                            format!(
+                                "{}: gx[{i}][{j}] {} vs fd {} (rel {rel})",
+                                cfg.label(),
+                                gx.get(i, j),
+                                fx.get(i, j)
+                            ),
+                        )?;
+                    }
+                }
+                for k in 0..r {
+                    let rel = (gy[k] - fy[k]).abs() / gmax;
+                    ensure(
+                        rel < 1e-5,
+                        format!("{}: gy[{k}] {} vs fd {} (rel {rel})", cfg.label(), gy[k], fy[k]),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------- warm starts
+
+#[test]
+fn sparse_warm_start_consistent_on_64node_lp() {
+    let t = generate_kind(ScaleKind::HierarchicalWan, 64, 7);
+    let app = AppModel::new(1.0);
+    let cfg = BarrierConfig::ALL_GLOBAL;
+    let r = t.n_reducers();
+    let y = vec![1.0 / r as f64; r];
+    let (lp, vars) = build_lp_x(&t, app, cfg, &y, Objective::Makespan);
+    assert!(
+        lp.n_rows() > mrperf::solver::DENSE_ROW_CUTOVER,
+        "64-node x-LP must exercise the sparse path ({} rows)",
+        lp.n_rows()
+    );
+    let (cold, basis) = mrperf::solver::solve_smart(&lp, None);
+    let (xc, oc) = cold.expect_optimal("cold sparse solve");
+    assert!(lp.violation(&xc) < 1e-6, "violation {}", lp.violation(&xc));
+    let basis = basis.expect("sparse path returns its basis");
+    let (warm, _) = mrperf::solver::solve_smart(&lp, Some(&basis));
+    let (_, ow) = warm.expect_optimal("warm sparse solve");
+    assert!(
+        (oc - ow).abs() <= 1e-7 * oc.abs().max(1.0),
+        "cold {oc} vs warm {ow}"
+    );
+    // The LP objective is the exact model makespan of the extracted plan
+    // (formulation consistency at scale)…
+    let mut p = Plan { x: extract_x(&xc, &vars), y: y.clone() };
+    p.renormalize();
+    let ms = makespan(&t, app, cfg, &p);
+    assert!(
+        (ms - oc).abs() <= 1e-5 * oc.max(1.0),
+        "LP objective {oc} vs model {ms}"
+    );
+    // …and no heuristic x beats the LP optimum for this y.
+    let mut local = Plan::local_push(&t);
+    local.y = y;
+    assert!(oc <= makespan(&t, app, cfg, &local) + 1e-6);
+}
+
+// ------------------------------------------------------------- end to end
+
+#[test]
+fn optimizers_scale_to_64_nodes_and_beat_uniform() {
+    let t = generate_kind(ScaleKind::HierarchicalWan, 64, 7);
+    let (s, m, r) = (t.n_sources(), t.n_mappers(), t.n_reducers());
+    let app = AppModel::new(2.0);
+    for cfg in [BarrierConfig::ALL_GLOBAL, BarrierConfig::HADOOP] {
+        let uni = makespan(&t, app, cfg, &Plan::uniform(s, m, r));
+        let alt = AlternatingLp::default().optimize(&t, app, cfg);
+        alt.check(&t).unwrap();
+        let ms_alt = makespan(&t, app, cfg, &alt);
+        assert!(ms_alt <= uni + 1e-6, "{}: alternating {ms_alt} vs uniform {uni}", cfg.label());
+        let grad = GradientOptimizer::default().optimize(&t, app, cfg);
+        grad.check(&t).unwrap();
+        let ms_grad = makespan(&t, app, cfg, &grad);
+        assert!(ms_grad <= uni + 1e-6, "{}: gradient {ms_grad} vs uniform {uni}", cfg.label());
+        // On WAN-bottlenecked topologies the optimizers must genuinely
+        // improve on uniform, not just tie it.
+        assert!(ms_alt < uni * 0.9, "{}: alternating should beat uniform by >10%", cfg.label());
+    }
+}
+
+#[test]
+fn accel_path_matches_legacy_quality_at_32_nodes() {
+    let t = generate_kind(ScaleKind::HierarchicalWan, 32, 5);
+    let app = AppModel::new(2.0);
+    let cfg = BarrierConfig::HADOOP;
+    let fast = AlternatingLp { random_starts: 0, max_rounds: 4, ..Default::default() };
+    let slow = AlternatingLp { accel: false, ..fast };
+    let pf = fast.optimize(&t, app, cfg);
+    pf.check(&t).unwrap();
+    let ps = slow.optimize(&t, app, cfg);
+    ps.check(&t).unwrap();
+    let mf = makespan(&t, app, cfg, &pf);
+    let ml = makespan(&t, app, cfg, &ps);
+    assert!(
+        mf <= ml * 1.05 + 1e-9,
+        "accel plan {mf} must match legacy plan {ml} quality"
+    );
+}

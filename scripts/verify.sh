@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Tier-1 verification for the mrperf workspace: build, test, lint, and a
+# CLI smoke pass. Referenced by .claude/skills/verify/SKILL.md.
+#
+# Usage: scripts/verify.sh [--quick]
+#   --quick   skip clippy and the CLI smoke probes (build + test only)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+QUICK=0
+[[ "${1:-}" == "--quick" ]] && QUICK=1
+
+echo "== tier-1: cargo build --release"
+cargo build --release
+
+echo "== tier-1: cargo test -q"
+cargo test -q
+
+if [[ "$QUICK" == "0" ]]; then
+  if cargo clippy --version >/dev/null 2>&1; then
+    echo "== lint: cargo clippy (warnings are errors)"
+    cargo clippy --all-targets -- -D warnings
+  else
+    echo "== lint: clippy unavailable, skipped"
+  fi
+
+  echo "== smoke: CLI surface"
+  BIN=./target/release/mrperf
+  "$BIN" list >/dev/null
+  "$BIN" plan --env 8-dc-global >/dev/null
+  "$BIN" plan --gen hier-wan:64 --optimizer gradient >/dev/null
+  "$BIN" run --gen hier-wan:64 --optimizer uniform >/dev/null
+  # Clean-error probes must fail (a bare `!` pipeline is exempt from
+  # set -e, so check the status explicitly).
+  if "$BIN" plan --gen hier-wan:3 >/dev/null 2>&1; then
+    echo "FAIL: --gen hier-wan:3 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" plan --gen nope:64 >/dev/null 2>&1; then
+    echo "FAIL: --gen nope:64 should be rejected" >&2
+    exit 1
+  fi
+  echo "smoke OK"
+fi
+
+echo "verify.sh: all green"
