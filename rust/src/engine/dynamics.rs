@@ -1,0 +1,508 @@
+//! Dynamics & fault-injection: seeded, deterministic scenario traces.
+//!
+//! The paper's model (and our engine so far) assumes static link
+//! bandwidths and reliable nodes, yet its own motivation — geo-distributed
+//! data behind wide-area links — is exactly where bandwidth fluctuates and
+//! nodes fail (Dolev et al., arXiv:1707.01869; Ceesay et al.,
+//! arXiv:2005.11608 both single out WAN variability as the dominant
+//! unmodelled effect). A [`ScenarioTrace`] closes that gap: it is a
+//! pre-generated, time-sorted list of [`DynEvent`]s that the executor
+//! injects into its virtual timeline:
+//!
+//! * **bandwidth changes** — inter-cluster link capacities re-scaled
+//!   relative to their topology base values; the fluid simulation
+//!   re-solves its max-min allocation at the event boundary;
+//! * **node failures / recoveries** — a mapper drops out (running work is
+//!   lost and re-queued, no new placements) and later returns;
+//! * **compute-slowdown stragglers** — a node's compute capacity scaled
+//!   down and later restored (the §4.6.4 speculation trigger, now
+//!   reproducible instead of emergent).
+//!
+//! Everything is generated from a `(profile, seed)` pair over a
+//! [`TraceShape`] snapshot of the platform, so runs are reproducible
+//! bit-for-bit: same seed → same trace → same metrics. A trace with zero
+//! events leaves the engine's arithmetic untouched (the executor's fast
+//! path is byte-identical to the static engine — property-tested in
+//! tests/dynamics.rs).
+//!
+//! Scale factors are *absolute with respect to the topology base value*
+//! (never cumulative), so overlapping windows compose last-writer-wins
+//! and a final `factor = 1.0` event always restores the static platform.
+
+use crate::platform::Topology;
+use crate::util::rng::{Pcg64, Zipf};
+
+/// Smallest allowed bandwidth/compute scale factor. Keeps every resource
+/// capacity strictly positive so the fluid simulation cannot starve an
+/// activity into a zero-rate deadlock.
+pub const MIN_FACTOR: f64 = 0.02;
+
+/// One injected platform change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DynEvent {
+    /// Scale every inter-cluster (WAN) link to `factor` × its base
+    /// bandwidth. Intra-cluster (LAN) links are never touched.
+    WanScale { factor: f64 },
+    /// Scale the inter-cluster links touching `cluster` (either endpoint)
+    /// to `factor` × base.
+    ClusterLinkScale { cluster: usize, factor: f64 },
+    /// Mapper `node` fails: running map work there is lost and re-queued,
+    /// and no new tasks are placed on it until it recovers.
+    MapperFail { node: usize },
+    /// Mapper `node` recovers with all its slots free.
+    MapperRecover { node: usize },
+    /// Scale mapper `node`'s compute capacity to `factor` × base
+    /// (a straggler while `factor < 1`).
+    MapperSlowdown { node: usize, factor: f64 },
+    /// Scale reducer `node`'s compute capacity to `factor` × base.
+    ReducerSlowdown { node: usize, factor: f64 },
+}
+
+/// A [`DynEvent`] stamped with its virtual firing time (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedEvent {
+    pub time: f64,
+    pub event: DynEvent,
+}
+
+/// The built-in scenario generators, selected on the CLI as
+/// `--dynamics PROFILE[:SEED]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DynProfile {
+    /// One step: WAN bandwidth drops mid-run, recovers later.
+    Step,
+    /// Square-wave (diurnal-style) WAN oscillation.
+    Periodic,
+    /// Zipf-burst: bursts hit Zipf-popular clusters — a hard link
+    /// degradation, usually with a correlated node outage in the bursted
+    /// cluster (a WAN incident takes machines with it).
+    Burst,
+    /// Node failure/recovery windows only.
+    Failures,
+    /// Compute-slowdown windows only.
+    Stragglers,
+    /// Burst + failures + stragglers combined.
+    Churn,
+}
+
+impl DynProfile {
+    pub fn all() -> [DynProfile; 6] {
+        [
+            DynProfile::Step,
+            DynProfile::Periodic,
+            DynProfile::Burst,
+            DynProfile::Failures,
+            DynProfile::Stragglers,
+            DynProfile::Churn,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DynProfile::Step => "step",
+            DynProfile::Periodic => "periodic",
+            DynProfile::Burst => "burst",
+            DynProfile::Failures => "failures",
+            DynProfile::Stragglers => "stragglers",
+            DynProfile::Churn => "churn",
+        }
+    }
+}
+
+/// Default trace seed when `--dynamics PROFILE` omits `:SEED`.
+pub const DEFAULT_TRACE_SEED: u64 = 7;
+
+/// Parse a CLI dynamics spec `PROFILE[:SEED]` (e.g. `burst`, `burst:7`).
+pub fn parse_spec(spec: &str) -> Result<(DynProfile, u64), String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.is_empty() || parts.len() > 2 {
+        return Err(format!("bad dynamics spec '{spec}' (want PROFILE[:SEED])"));
+    }
+    let profile = DynProfile::all()
+        .into_iter()
+        .find(|p| p.label() == parts[0])
+        .ok_or_else(|| {
+            format!(
+                "unknown dynamics profile '{}' (step | periodic | burst | failures | \
+                 stragglers | churn)",
+                parts[0]
+            )
+        })?;
+    let seed = if parts.len() == 2 {
+        parts[1].parse().map_err(|_| format!("bad dynamics seed '{}'", parts[1]))?
+    } else {
+        DEFAULT_TRACE_SEED
+    };
+    Ok((profile, seed))
+}
+
+/// The platform snapshot a generator needs: the job's expected timescale
+/// plus how many clusters/nodes exist and where the mappers live.
+#[derive(Debug, Clone)]
+pub struct TraceShape {
+    /// Expected job duration (seconds); event times are drawn as
+    /// fractions of it. Any deterministic estimate works (e.g. the
+    /// model-predicted or a measured static makespan).
+    pub horizon: f64,
+    pub n_clusters: usize,
+    /// Cluster of each mapper node (`mapper_cluster[j]`).
+    pub mapper_cluster: Vec<usize>,
+    pub n_reducers: usize,
+}
+
+impl TraceShape {
+    pub fn of(topo: &Topology, horizon: f64) -> TraceShape {
+        TraceShape {
+            horizon,
+            n_clusters: topo.clusters.len(),
+            mapper_cluster: topo.mapper_cluster.clone(),
+            n_reducers: topo.n_reducers(),
+        }
+    }
+
+    fn n_mappers(&self) -> usize {
+        self.mapper_cluster.len()
+    }
+
+    /// Mapper indices living in `cluster`.
+    fn mappers_in(&self, cluster: usize) -> Vec<usize> {
+        (0..self.n_mappers()).filter(|&j| self.mapper_cluster[j] == cluster).collect()
+    }
+}
+
+/// A deterministic, time-sorted scenario trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioTrace {
+    label: String,
+    events: Vec<TimedEvent>,
+}
+
+impl ScenarioTrace {
+    /// The empty trace: dynamics plumbing active, zero events — the
+    /// engine must reproduce static metrics bit-for-bit.
+    pub fn empty(label: impl Into<String>) -> ScenarioTrace {
+        ScenarioTrace { label: label.into(), events: Vec::new() }
+    }
+
+    /// Build from explicit events. Validates times and factors, then
+    /// stable-sorts by time so equal-time events keep insertion order.
+    pub fn from_events(label: impl Into<String>, mut events: Vec<TimedEvent>) -> ScenarioTrace {
+        for te in &events {
+            assert!(
+                te.time.is_finite() && te.time >= 0.0,
+                "event time must be finite and non-negative, got {}",
+                te.time
+            );
+            let factor = match te.event {
+                DynEvent::WanScale { factor }
+                | DynEvent::ClusterLinkScale { factor, .. }
+                | DynEvent::MapperSlowdown { factor, .. }
+                | DynEvent::ReducerSlowdown { factor, .. } => Some(factor),
+                DynEvent::MapperFail { .. } | DynEvent::MapperRecover { .. } => None,
+            };
+            if let Some(f) = factor {
+                assert!(
+                    f.is_finite() && f >= MIN_FACTOR,
+                    "scale factor must be finite and ≥ {MIN_FACTOR}, got {f}"
+                );
+            }
+        }
+        events.sort_by(|a, b| a.time.total_cmp(&b.time));
+        ScenarioTrace { label: label.into(), events }
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Events in non-decreasing time order.
+    pub fn events(&self) -> &[TimedEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Generate the `profile` trace for `shape`, deterministically from
+    /// `seed`.
+    pub fn generate(profile: DynProfile, seed: u64, shape: &TraceShape) -> ScenarioTrace {
+        assert!(
+            shape.horizon.is_finite() && shape.horizon > 0.0,
+            "trace horizon must be positive, got {}",
+            shape.horizon
+        );
+        let mut rng = Pcg64::new(seed);
+        let events = match profile {
+            DynProfile::Step => gen_step(&mut rng, shape),
+            DynProfile::Periodic => gen_periodic(&mut rng, shape),
+            DynProfile::Burst => gen_burst(&mut rng, shape),
+            DynProfile::Failures => gen_failures(&mut rng, shape),
+            DynProfile::Stragglers => gen_stragglers(&mut rng, shape),
+            DynProfile::Churn => {
+                let mut all = gen_burst(&mut rng.fork(), shape);
+                all.extend(gen_failures(&mut rng.fork(), shape));
+                all.extend(gen_stragglers(&mut rng.fork(), shape));
+                all
+            }
+        };
+        ScenarioTrace::from_events(format!("{}:{seed}", profile.label()), events)
+    }
+}
+
+fn gen_step(rng: &mut Pcg64, shape: &TraceShape) -> Vec<TimedEvent> {
+    let h = shape.horizon;
+    let drop_at = h * rng.uniform(0.15, 0.30);
+    let factor = rng.uniform(0.25, 0.45);
+    let recover_at = h * rng.uniform(0.55, 0.75);
+    vec![
+        TimedEvent { time: drop_at, event: DynEvent::WanScale { factor } },
+        TimedEvent { time: recover_at, event: DynEvent::WanScale { factor: 1.0 } },
+    ]
+}
+
+fn gen_periodic(rng: &mut Pcg64, shape: &TraceShape) -> Vec<TimedEvent> {
+    let h = shape.horizon;
+    let period = h * rng.uniform(0.12, 0.20);
+    let low = rng.uniform(0.35, 0.60);
+    let mut events = Vec::new();
+    // Cover well past the horizon (the job usually outlives its estimate
+    // under degradation); cap the count so traces stay small.
+    let mut t = period;
+    let mut degraded = true;
+    while t < 2.0 * h && events.len() < 32 {
+        let factor = if degraded { low } else { 1.0 };
+        events.push(TimedEvent { time: t, event: DynEvent::WanScale { factor } });
+        degraded = !degraded;
+        t += period;
+    }
+    // Always end restored so a long tail runs at full speed.
+    events.push(TimedEvent { time: t, event: DynEvent::WanScale { factor: 1.0 } });
+    events
+}
+
+fn gen_burst(rng: &mut Pcg64, shape: &TraceShape) -> Vec<TimedEvent> {
+    let h = shape.horizon;
+    let n_bursts = 4 + (shape.n_clusters / 4).min(4);
+    let zipf = Zipf::new(shape.n_clusters as u64, 1.2);
+    let mut events = Vec::new();
+    for _ in 0..n_bursts {
+        let cluster = (zipf.sample(rng) - 1) as usize;
+        let t0 = h * rng.uniform(0.05, 0.60);
+        let dur = h * rng.uniform(0.10, 0.25);
+        let factor = rng.uniform(0.05, 0.20).max(MIN_FACTOR);
+        events.push(TimedEvent { time: t0, event: DynEvent::ClusterLinkScale { cluster, factor } });
+        events.push(TimedEvent {
+            time: t0 + dur,
+            event: DynEvent::ClusterLinkScale { cluster, factor: 1.0 },
+        });
+        // Correlated outage: the WAN incident usually takes a machine in
+        // the bursted cluster with it, recovering after the links do.
+        let members = shape.mappers_in(cluster);
+        if !members.is_empty() && rng.chance(0.75) {
+            let node = members[rng.range(0, members.len())];
+            let back = t0 + dur * rng.uniform(1.2, 2.0);
+            events.push(TimedEvent { time: t0, event: DynEvent::MapperFail { node } });
+            events.push(TimedEvent { time: back, event: DynEvent::MapperRecover { node } });
+        }
+    }
+    events
+}
+
+fn gen_failures(rng: &mut Pcg64, shape: &TraceShape) -> Vec<TimedEvent> {
+    let h = shape.horizon;
+    let m = shape.n_mappers();
+    let n_fail = (m / 6).max(1);
+    // Distinct victims: shuffle the node ids, take the first n_fail.
+    let mut nodes: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut nodes);
+    nodes.truncate(n_fail);
+    nodes.sort_unstable();
+    let mut events = Vec::new();
+    for node in nodes {
+        let fail_at = h * rng.uniform(0.05, 0.15);
+        let recover_at = h * rng.uniform(0.55, 0.85);
+        events.push(TimedEvent { time: fail_at, event: DynEvent::MapperFail { node } });
+        events.push(TimedEvent { time: recover_at, event: DynEvent::MapperRecover { node } });
+    }
+    events
+}
+
+fn gen_stragglers(rng: &mut Pcg64, shape: &TraceShape) -> Vec<TimedEvent> {
+    let h = shape.horizon;
+    let m = shape.n_mappers();
+    let n_slow = (m / 5).max(1);
+    let mut nodes: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut nodes);
+    nodes.truncate(n_slow);
+    nodes.sort_unstable();
+    let mut events = Vec::new();
+    for node in nodes {
+        let t0 = h * rng.uniform(0.05, 0.40);
+        let dur = h * rng.uniform(0.30, 0.50);
+        let factor = rng.uniform(0.08, 0.25).max(MIN_FACTOR);
+        events.push(TimedEvent { time: t0, event: DynEvent::MapperSlowdown { node, factor } });
+        events.push(TimedEvent {
+            time: t0 + dur,
+            event: DynEvent::MapperSlowdown { node, factor: 1.0 },
+        });
+    }
+    if shape.n_reducers > 0 {
+        let node = rng.range(0, shape.n_reducers);
+        let factor = rng.uniform(0.20, 0.50).max(MIN_FACTOR);
+        let t0 = h * rng.uniform(0.40, 0.60);
+        events.push(TimedEvent { time: t0, event: DynEvent::ReducerSlowdown { node, factor } });
+        events.push(TimedEvent {
+            time: t0 + h * 0.30,
+            event: DynEvent::ReducerSlowdown { node, factor: 1.0 },
+        });
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> TraceShape {
+        TraceShape {
+            horizon: 100.0,
+            n_clusters: 4,
+            mapper_cluster: (0..12).map(|j| j % 4).collect(),
+            n_reducers: 12,
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        for p in DynProfile::all() {
+            let a = ScenarioTrace::generate(p, 9, &shape());
+            let b = ScenarioTrace::generate(p, 9, &shape());
+            let c = ScenarioTrace::generate(p, 10, &shape());
+            assert_eq!(a, b, "{p:?} not deterministic");
+            assert_ne!(a.events(), c.events(), "{p:?} seed has no effect");
+        }
+    }
+
+    #[test]
+    fn events_are_time_sorted_and_in_bounds() {
+        for p in DynProfile::all() {
+            for seed in [1u64, 7, 42] {
+                let tr = ScenarioTrace::generate(p, seed, &shape());
+                assert!(!tr.is_empty(), "{p:?} generated nothing");
+                let mut last = 0.0;
+                for te in tr.events() {
+                    assert!(te.time >= last, "{p:?}: unsorted at {}", te.time);
+                    last = te.time;
+                    match te.event {
+                        DynEvent::ClusterLinkScale { cluster, .. } => {
+                            assert!(cluster < shape().n_clusters)
+                        }
+                        DynEvent::MapperFail { node }
+                        | DynEvent::MapperRecover { node }
+                        | DynEvent::MapperSlowdown { node, .. } => {
+                            assert!(node < shape().mapper_cluster.len())
+                        }
+                        DynEvent::ReducerSlowdown { node, .. } => {
+                            assert!(node < shape().n_reducers)
+                        }
+                        DynEvent::WanScale { .. } => {}
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_failure_has_a_later_recovery() {
+        for p in [DynProfile::Failures, DynProfile::Burst, DynProfile::Churn] {
+            for seed in 0..20u64 {
+                let tr = ScenarioTrace::generate(p, seed, &shape());
+                let mut down: std::collections::BTreeMap<usize, f64> = Default::default();
+                let mut recovered: std::collections::BTreeSet<usize> = Default::default();
+                for te in tr.events() {
+                    match te.event {
+                        DynEvent::MapperFail { node } => {
+                            down.entry(node).or_insert(te.time);
+                        }
+                        DynEvent::MapperRecover { node } => {
+                            let failed_at = down
+                                .get(&node)
+                                .unwrap_or_else(|| panic!("{p:?}: recovery without failure"));
+                            assert!(te.time >= *failed_at, "{p:?}: recovery before failure");
+                            recovered.insert(node);
+                        }
+                        _ => {}
+                    }
+                }
+                for node in down.keys() {
+                    assert!(recovered.contains(node), "{p:?} seed {seed}: node {node} never recovers");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn factors_respect_min_factor() {
+        for p in DynProfile::all() {
+            for seed in 0..10u64 {
+                let tr = ScenarioTrace::generate(p, seed, &shape());
+                for te in tr.events() {
+                    if let DynEvent::WanScale { factor }
+                    | DynEvent::ClusterLinkScale { factor, .. }
+                    | DynEvent::MapperSlowdown { factor, .. }
+                    | DynEvent::ReducerSlowdown { factor, .. } = te.event
+                    {
+                        assert!((MIN_FACTOR..=1.0 + 1e-12).contains(&factor));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_spec_forms() {
+        assert_eq!(parse_spec("burst").unwrap(), (DynProfile::Burst, DEFAULT_TRACE_SEED));
+        assert_eq!(parse_spec("burst:7").unwrap(), (DynProfile::Burst, 7));
+        assert_eq!(parse_spec("failures:123").unwrap(), (DynProfile::Failures, 123));
+        assert!(parse_spec("nope:1").is_err());
+        assert!(parse_spec("burst:x").is_err());
+        assert!(parse_spec("burst:1:2").is_err());
+    }
+
+    #[test]
+    fn from_events_sorts_stably() {
+        let tr = ScenarioTrace::from_events(
+            "manual",
+            vec![
+                TimedEvent { time: 5.0, event: DynEvent::WanScale { factor: 0.5 } },
+                TimedEvent { time: 1.0, event: DynEvent::MapperFail { node: 0 } },
+                TimedEvent { time: 5.0, event: DynEvent::WanScale { factor: 1.0 } },
+            ],
+        );
+        assert_eq!(tr.events()[0].time, 1.0);
+        // Equal-time events keep insertion order: 0.5 before 1.0.
+        assert_eq!(tr.events()[1].event, DynEvent::WanScale { factor: 0.5 });
+        assert_eq!(tr.events()[2].event, DynEvent::WanScale { factor: 1.0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "scale factor")]
+    fn from_events_rejects_tiny_factors() {
+        let _ = ScenarioTrace::from_events(
+            "bad",
+            vec![TimedEvent { time: 1.0, event: DynEvent::WanScale { factor: 0.0 } }],
+        );
+    }
+
+    #[test]
+    fn empty_trace_has_no_events() {
+        let tr = ScenarioTrace::empty("none");
+        assert!(tr.is_empty());
+        assert_eq!(tr.len(), 0);
+    }
+}

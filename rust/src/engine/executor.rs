@@ -33,6 +33,7 @@
 
 use std::collections::HashMap;
 
+use super::dynamics::{DynEvent, ScenarioTrace};
 use super::events::{EngineEvent, EventQueue, TaskId};
 use super::fluid::{ActivityId, FluidSim, ResourceId};
 use super::job::{batch_size, JobConfig, MapReduceApp, Record};
@@ -135,6 +136,12 @@ struct Executor<'a> {
     // slot accounting
     map_slots_free: Vec<usize>,
     reduce_slots_free: Vec<usize>,
+    // dynamics (fault injection / time-varying platform)
+    dynamics: Option<&'a ScenarioTrace>,
+    /// Next un-applied event in the trace.
+    dyn_cursor: usize,
+    /// Liveness of each mapper node (failures set false, recoveries true).
+    node_up: Vec<bool>,
     // metrics
     metrics: JobMetrics,
     durations: Vec<f64>,
@@ -203,6 +210,9 @@ impl<'a> Executor<'a> {
             all_shuffles_done: false,
             map_slots_free: vec![config.map_slots; m],
             reduce_slots_free: vec![config.reduce_slots; r],
+            dynamics: config.dynamics.as_ref(),
+            dyn_cursor: 0,
+            node_up: vec![true; m],
             metrics: JobMetrics::default(),
             durations: Vec::new(),
             outputs: vec![Vec::new(); r],
@@ -397,6 +407,8 @@ impl<'a> Executor<'a> {
                 queued: &self.maps_left_per_node,
                 capacity: &self.topo.c_map,
                 durations: &self.durations,
+                cluster: &self.topo.mapper_cluster,
+                up: &self.node_up,
             };
             self.scheduler.assign(&view)
         };
@@ -490,6 +502,8 @@ impl<'a> Executor<'a> {
                 queued: &self.maps_left_per_node,
                 capacity: &self.topo.c_map,
                 durations: &self.durations,
+                cluster: &self.topo.mapper_cluster,
+                up: &self.node_up,
             };
             self.scheduler.speculate(&view)
         };
@@ -714,6 +728,188 @@ impl<'a> Executor<'a> {
         self.metrics.makespan = self.sim.now();
     }
 
+    // ------------------------------------------------------- dynamics
+
+    /// Virtual time of the next un-applied trace event, if any.
+    fn next_dyn_time(&self) -> Option<f64> {
+        self.dynamics
+            .and_then(|tr| tr.events().get(self.dyn_cursor))
+            .map(|te| te.time)
+    }
+
+    /// Apply every trace event due at (or before) the current clock,
+    /// then let the scheduler react — failed-node evictions create Ready
+    /// tasks to (re)place, recoveries free slots, slowdowns may trip the
+    /// straggler detector.
+    fn apply_dynamics(&mut self) {
+        let Some(trace) = self.dynamics else { return };
+        let now = self.sim.now();
+        let mut applied = false;
+        while let Some(te) = trace.events().get(self.dyn_cursor) {
+            if te.time > now {
+                break;
+            }
+            self.dyn_cursor += 1;
+            let (m, r) = (self.topo.n_mappers(), self.topo.n_reducers());
+            let effective = match te.event {
+                DynEvent::WanScale { factor } => {
+                    self.scale_links(None, factor);
+                    true
+                }
+                DynEvent::ClusterLinkScale { cluster, factor } => {
+                    self.scale_links(Some(cluster), factor);
+                    true
+                }
+                DynEvent::MapperFail { node } if node < m => {
+                    self.fail_mapper(node);
+                    true
+                }
+                DynEvent::MapperRecover { node } if node < m => {
+                    self.recover_mapper(node);
+                    true
+                }
+                DynEvent::MapperSlowdown { node, factor } if node < m => {
+                    self.sim.set_capacity(self.map_compute[node], self.topo.c_map[node] * factor);
+                    true
+                }
+                DynEvent::ReducerSlowdown { node, factor } if node < r => {
+                    self.sim.set_capacity(self.red_compute[node], self.topo.c_red[node] * factor);
+                    true
+                }
+                // Out-of-range node ids (a trace generated for a different
+                // platform): ignore — and don't count as applied — rather
+                // than panic mid-simulation.
+                DynEvent::MapperFail { .. }
+                | DynEvent::MapperRecover { .. }
+                | DynEvent::MapperSlowdown { .. }
+                | DynEvent::ReducerSlowdown { .. } => false,
+            };
+            if effective {
+                self.metrics.dyn_events += 1;
+                applied = true;
+            }
+        }
+        if applied {
+            self.schedule_maps();
+            self.maybe_speculate();
+        }
+    }
+
+    /// Re-scale inter-cluster links to `factor` × their topology base
+    /// bandwidth — all of them (`cluster = None`) or only those touching
+    /// one cluster. Factors are absolute w.r.t. the base, so `1.0`
+    /// always restores the static platform; the fluid simulation
+    /// re-solves its max-min allocation before the next advance.
+    fn scale_links(&mut self, cluster: Option<usize>, factor: f64) {
+        let (s, m, r) = (self.topo.n_sources(), self.topo.n_mappers(), self.topo.n_reducers());
+        for i in 0..s {
+            for j in 0..m {
+                if self.topo.sm_local(i, j) {
+                    continue;
+                }
+                let touched = match cluster {
+                    None => true,
+                    Some(c) => {
+                        self.topo.source_cluster[i] == c || self.topo.mapper_cluster[j] == c
+                    }
+                };
+                if touched {
+                    self.sim
+                        .set_capacity(self.sm_link[i][j], self.topo.b_sm.get(i, j) * factor);
+                }
+            }
+        }
+        for j in 0..m {
+            for k in 0..r {
+                if self.topo.mr_local(j, k) {
+                    continue;
+                }
+                let touched = match cluster {
+                    None => true,
+                    Some(c) => {
+                        self.topo.mapper_cluster[j] == c || self.topo.reducer_cluster[k] == c
+                    }
+                };
+                if touched {
+                    self.sim
+                        .set_capacity(self.mr_link[j][k], self.topo.b_mr.get(j, k) * factor);
+                }
+            }
+        }
+    }
+
+    /// Mapper `node` fails: cancel the map work executing there (primary
+    /// copies go back to Ready and are re-placed — possibly stolen to a
+    /// live node; speculative copies are simply dropped) and close its
+    /// slots until recovery. Input pushed to the node is not lost (the
+    /// split survives on the source/replica side and is re-fetched over
+    /// the same link when the task runs elsewhere).
+    fn fail_mapper(&mut self, node: NodeId) {
+        if !self.node_up[node] {
+            return;
+        }
+        self.node_up[node] = false;
+        self.metrics.failures_injected += 1;
+        // Collect doomed in-flight activities in a deterministic order
+        // (`pending` is a HashMap; iteration order must not leak into
+        // simulation behavior).
+        let mut doomed: Vec<(ActivityId, EngineEvent)> = self
+            .pending
+            .iter()
+            .filter(|&(_, &ev)| match ev {
+                EngineEvent::MapFinished { task, speculative: false }
+                | EngineEvent::FetchArrived { task, speculative: false } => {
+                    self.tasks[task].state == TaskState::Running
+                        && self.tasks[task].exec_node == Some(node)
+                }
+                EngineEvent::MapFinished { task, speculative: true }
+                | EngineEvent::FetchArrived { task, speculative: true } => {
+                    self.tasks[task].spec_node == Some(node)
+                }
+                _ => false,
+            })
+            .map(|(&a, &ev)| (a, ev))
+            .collect();
+        doomed.sort_by_key(|&(a, _)| a);
+        for (aid, ev) in doomed {
+            self.sim.cancel(aid);
+            self.pending.remove(&aid);
+            match ev {
+                EngineEvent::MapFinished { task, speculative: false }
+                | EngineEvent::FetchArrived { task, speculative: false } => {
+                    // Re-queue the primary copy. A speculative copy (if
+                    // any) keeps running on its own node and can still
+                    // win the re-queued task outright.
+                    let t = &mut self.tasks[task];
+                    t.state = TaskState::Ready;
+                    t.exec_node = None;
+                    t.activity = None;
+                    self.metrics.tasks_requeued += 1;
+                }
+                EngineEvent::MapFinished { task, speculative: true }
+                | EngineEvent::FetchArrived { task, speculative: true } => {
+                    let t = &mut self.tasks[task];
+                    t.spec_node = None;
+                    t.spec_activity = None;
+                    t.spec_fetching = false;
+                }
+                _ => unreachable!("doomed set only holds map/fetch events"),
+            }
+        }
+        // No task occupies the node now; close all slots until recovery.
+        self.map_slots_free[node] = 0;
+    }
+
+    /// Mapper `node` recovers with every slot free (all its work was
+    /// evicted at failure time and nothing could be placed since).
+    fn recover_mapper(&mut self, node: NodeId) {
+        if self.node_up[node] {
+            return;
+        }
+        self.node_up[node] = true;
+        self.map_slots_free[node] = self.config.map_slots;
+    }
+
     /// Dispatch one engine event (popped from the heap in virtual-time
     /// order).
     fn dispatch(&mut self, ev: EngineEvent) {
@@ -781,11 +977,40 @@ impl<'a> Executor<'a> {
     }
 
     fn run(mut self) -> JobResult {
+        // Trace events due at t = 0 (e.g. a node down from the start)
+        // apply before any work is placed.
+        self.apply_dynamics();
         self.start_push();
         // Main loop: advance the fluid clock to the next completion
-        // batch, convert completions to engine events on the heap, and
-        // dispatch them in (time, FIFO) order.
-        while let Some((now, completed)) = self.sim.step() {
+        // batch — never past the next scenario event — convert
+        // completions to engine events on the heap, and dispatch them in
+        // (time, FIFO) order. With no dynamics trace every iteration is
+        // a plain `sim.step()`, arithmetically identical to the static
+        // engine.
+        loop {
+            let step = match self.next_dyn_time() {
+                Some(tt) if self.sim.active_count() > 0 => self.sim.step_until(tt),
+                Some(tt) => {
+                    if self.reduce_done.iter().all(|&d| d) {
+                        // Job finished; drop the trailing trace events.
+                        break;
+                    }
+                    // Nothing in flight (e.g. every remaining task is
+                    // homed on a dead node under plan-local placement):
+                    // idle-jump the clock to the event that may unblock
+                    // progress.
+                    self.sim.jump_to(tt);
+                    Some((self.sim.now(), Vec::new()))
+                }
+                None => self.sim.step(),
+            };
+            let Some((now, completed)) = step else { break };
+            if completed.is_empty() {
+                // The clock reached the next scenario event (no fluid
+                // completion fired): inject it and continue.
+                self.apply_dynamics();
+                continue;
+            }
             for aid in completed {
                 if let Some(ev) = self.pending.remove(&aid) {
                     self.queue.push(now, ev);

@@ -122,6 +122,36 @@ impl FluidSim {
         self.resources.len() - 1
     }
 
+    /// Change a resource's capacity mid-run (time-varying bandwidth or
+    /// compute). The max-min allocation is re-solved before the next
+    /// advance; in-flight activities keep their remaining work and
+    /// continue at the new fair rates.
+    pub fn set_capacity(&mut self, r: ResourceId, capacity: f64) {
+        assert!(
+            capacity > 0.0 && capacity.is_finite(),
+            "capacity must be positive and finite, got {capacity}"
+        );
+        if self.resources[r].capacity != capacity {
+            self.resources[r].capacity = capacity;
+            self.dirty = true;
+        }
+    }
+
+    /// Current capacity of a resource.
+    pub fn capacity(&self, r: ResourceId) -> f64 {
+        self.resources[r].capacity
+    }
+
+    /// Advance the clock while idle (no activities): used by drivers that
+    /// must wait for an external (scenario) event with nothing in flight.
+    /// Never moves the clock backwards.
+    pub fn jump_to(&mut self, t: f64) {
+        assert!(t.is_finite(), "jump_to target must be finite, got {t}");
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
     /// Start an activity needing `work` units across `resources`.
     /// Zero-work activities complete on the next `step`.
     pub fn add_activity(&mut self, work: f64, resources: Vec<ResourceId>) -> ActivityId {
@@ -258,6 +288,16 @@ impl FluidSim {
     /// Advance to the next completion. Returns `(time, completed ids)`,
     /// or `None` when no activities remain.
     pub fn step(&mut self) -> Option<(f64, Vec<ActivityId>)> {
+        self.step_until(f64::INFINITY)
+    }
+
+    /// Like [`FluidSim::step`], but never advance past `t_limit`: if the
+    /// earliest completion lies beyond it, drain partial progress up to
+    /// `t_limit` and return `Some((t_limit, vec![]))` — an empty
+    /// completion batch signalling the limit was reached (so the caller
+    /// can apply an external event and resume). With `t_limit =
+    /// f64::INFINITY` this is exactly `step` (identical arithmetic).
+    pub fn step_until(&mut self, t_limit: f64) -> Option<(f64, Vec<ActivityId>)> {
         self.active.retain(|&a| !self.activities[a].done);
         if self.active.is_empty() {
             return None;
@@ -293,6 +333,19 @@ impl FluidSim {
             dt.is_finite(),
             "deadlock: active activities with zero rate (resource starvation)"
         );
+        if self.now + dt > t_limit {
+            // The next completion lies beyond the limit: drain partial
+            // progress and stop exactly at it (clock never regresses).
+            let part = (t_limit - self.now).max(0.0);
+            if part > 0.0 {
+                for &a in &self.active {
+                    let act = &mut self.activities[a];
+                    act.remaining = (act.remaining - act.rate * part).max(0.0);
+                }
+            }
+            self.now = self.now.max(t_limit);
+            return Some((self.now, Vec::new()));
+        }
         self.now += dt;
         let mut completed = Vec::new();
         for &a in &self.active {
@@ -465,6 +518,71 @@ mod tests {
         assert!((sim.rate(a) - 1.0).abs() < 1e-9, "a at {}", sim.rate(a));
         assert!((sim.rate(b) - 2.0).abs() < 1e-9, "b at {}", sim.rate(b));
         assert!((sim.rate(c) - 3.0).abs() < 1e-9, "c at {}", sim.rate(c));
+    }
+
+    /// A capacity change mid-run re-solves the max-min allocation: the
+    /// surviving work drains at the new rate from the change point.
+    #[test]
+    fn set_capacity_rescales_inflight_work() {
+        // 100 units on a 10/s resource; at t=5 (50 left) the link halves
+        // to 5/s → completion at t = 5 + 50/5 = 15.
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource(10.0);
+        let a = sim.add_activity(100.0, vec![r]);
+        let (t, done) = sim.step_until(5.0).unwrap();
+        assert!(done.is_empty(), "no completion before t=5");
+        assert!((t - 5.0).abs() < 1e-9);
+        assert!((sim.remaining(a) - 50.0).abs() < 1e-9);
+        sim.set_capacity(r, 5.0);
+        assert_eq!(sim.capacity(r), 5.0);
+        let (t, done) = sim.step().unwrap();
+        assert_eq!(done, vec![a]);
+        assert!((t - 15.0).abs() < 1e-9, "completed at {t}");
+    }
+
+    /// step_until at exactly the completion time delivers the completion
+    /// (not an empty limit batch), and an infinite limit is plain step.
+    #[test]
+    fn step_until_boundary_and_infinity() {
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource(10.0);
+        let a = sim.add_activity(100.0, vec![r]);
+        let (t, done) = sim.step_until(10.0).unwrap();
+        assert_eq!(done, vec![a], "completion exactly at the limit fires");
+        assert!((t - 10.0).abs() < 1e-9);
+        let b = sim.add_activity(20.0, vec![r]);
+        let (t, done) = sim.step_until(f64::INFINITY).unwrap();
+        assert_eq!(done, vec![b]);
+        assert!((t - 12.0).abs() < 1e-9);
+    }
+
+    /// Chopping a run into many step_until segments conserves total work
+    /// and the clock (the dynamics interleaving path).
+    #[test]
+    fn step_until_segments_conserve_completion_time() {
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource(4.0);
+        let a = sim.add_activity(100.0, vec![r]);
+        let mut limit = 3.0;
+        loop {
+            let (t, done) = sim.step_until(limit).unwrap();
+            if !done.is_empty() {
+                assert_eq!(done, vec![a]);
+                assert!((t - 25.0).abs() < 1e-6, "completed at {t}");
+                break;
+            }
+            limit += 3.0;
+        }
+        assert!(sim.step().is_none());
+    }
+
+    #[test]
+    fn jump_to_only_moves_forward() {
+        let mut sim = FluidSim::new();
+        sim.jump_to(7.0);
+        assert_eq!(sim.now(), 7.0);
+        sim.jump_to(3.0);
+        assert_eq!(sim.now(), 7.0, "clock never regresses");
     }
 
     /// Many short sequential activities: the maintained active set keeps

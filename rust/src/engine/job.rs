@@ -1,6 +1,7 @@
 //! Job definition: the MapReduce programming model (§1.2) plus the
 //! execution knobs our modified-Hadoop engine exposes (§3.1, §4.6).
 
+use super::dynamics::ScenarioTrace;
 use crate::model::barrier::BarrierConfig;
 
 /// A key/value record. Keys and values are strings (like Hadoop `Text`);
@@ -94,9 +95,17 @@ pub struct JobConfig {
     pub speculation: bool,
     /// Work stealing: idle nodes take non-local pending tasks (§4.6.4).
     pub stealing: bool,
+    /// Locality-aware stealing: prefer same-cluster victims, cross-WAN
+    /// only when the remote backlog (or a dead home node) justifies the
+    /// penalty. Implies stealing when `local_only` is off.
+    pub locality_stealing: bool,
     /// HDFS-style replication factor for pushed input and reducer output
     /// (§4.6.5). 1 = no replication.
     pub replication: usize,
+    /// Injected platform dynamics (time-varying bandwidth, failures,
+    /// stragglers). `None` — and a `Some` trace with zero events — leave
+    /// the engine's static behavior bit-identical.
+    pub dynamics: Option<ScenarioTrace>,
 }
 
 impl Default for JobConfig {
@@ -110,7 +119,9 @@ impl Default for JobConfig {
             local_only: true,
             speculation: false,
             stealing: false,
+            locality_stealing: false,
             replication: 1,
+            dynamics: None,
         }
     }
 }
@@ -126,6 +137,25 @@ impl JobConfig {
     /// plan not strictly enforced.
     pub fn vanilla_hadoop() -> JobConfig {
         JobConfig { local_only: false, speculation: true, stealing: true, ..Default::default() }
+    }
+
+    /// Dynamic execution with locality-aware stealing and speculation —
+    /// the churn-recovery configuration compared against the statically
+    /// enforced plan in `mrperf experiment churn`.
+    pub fn dynamic_locality() -> JobConfig {
+        JobConfig {
+            local_only: false,
+            speculation: true,
+            stealing: true,
+            locality_stealing: true,
+            ..Default::default()
+        }
+    }
+
+    /// Attach a dynamics trace (builder style).
+    pub fn with_dynamics(mut self, trace: ScenarioTrace) -> JobConfig {
+        self.dynamics = Some(trace);
+        self
     }
 }
 
@@ -156,5 +186,10 @@ mod tests {
         assert!(!JobConfig::optimized().speculation);
         let h = JobConfig::vanilla_hadoop();
         assert!(!h.local_only && h.speculation && h.stealing);
+        assert!(!h.locality_stealing && h.dynamics.is_none());
+        let d = JobConfig::dynamic_locality();
+        assert!(!d.local_only && d.stealing && d.locality_stealing && d.speculation);
+        let with = JobConfig::default().with_dynamics(ScenarioTrace::empty("none"));
+        assert!(with.dynamics.is_some());
     }
 }

@@ -24,6 +24,12 @@ pub struct JobMetrics {
     pub spec_won: usize,
     /// Tasks executed on a non-plan node via work stealing.
     pub stolen: usize,
+    /// Dynamics events applied from the scenario trace.
+    pub dyn_events: usize,
+    /// Node failures injected (recoveries are not counted).
+    pub failures_injected: usize,
+    /// Map tasks evicted by a node failure and re-queued.
+    pub tasks_requeued: usize,
     /// Input / intermediate / output record counts (conservation checks).
     pub input_records: usize,
     pub intermediate_records: usize,

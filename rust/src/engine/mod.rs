@@ -9,10 +9,15 @@
 //! * [`events`] — the virtual-clock event heap ([`EventQueue`]) and the
 //!   phase-transition vocabulary ([`EngineEvent`]);
 //! * [`scheduler`] — the [`Scheduler`] trait with plan-local and
-//!   dynamic (stealing + speculation, §4.6.4) policies;
+//!   dynamic (stealing + speculation, §4.6.4) policies, including
+//!   locality-aware stealing;
+//! * [`dynamics`] — seeded scenario traces injecting time-varying
+//!   bandwidth, node failures/recoveries and compute stragglers;
 //! * [`executor`] — the thin orchestrator driving push/map/shuffle/
-//!   reduce as events over the pieces above.
+//!   reduce as events over the pieces above, re-queuing work lost to
+//!   injected failures.
 
+pub mod dynamics;
 pub mod events;
 pub mod executor;
 pub mod fluid;
@@ -21,6 +26,7 @@ pub mod metrics;
 pub mod partitioner;
 pub mod scheduler;
 
+pub use dynamics::{DynEvent, DynProfile, ScenarioTrace, TimedEvent, TraceShape};
 pub use events::{EngineEvent, EventQueue};
 pub use executor::{run_job, JobResult};
 pub use job::{JobConfig, MapReduceApp, Record};

@@ -43,7 +43,8 @@ impl Partitioner {
             .enumerate()
             .map(|(k, q)| (k, q - q.floor()))
             .collect();
-        remainders.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        // total_cmp (descending): degenerate fractions must not panic.
+        remainders.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
         for i in 0..(n_buckets - assigned) {
             counts[remainders[i % remainders.len()].0] += 1;
         }
@@ -59,7 +60,7 @@ impl Partitioner {
                 .max_by(|&a, &b| {
                     let ra = remaining[a] as f64 / (counts[a].max(1)) as f64;
                     let rb = remaining[b] as f64 / (counts[b].max(1)) as f64;
-                    ra.partial_cmp(&rb).unwrap().then(b.cmp(&a))
+                    ra.total_cmp(&rb).then(b.cmp(&a))
                 })
                 .expect("buckets remain but no reducer has quota");
             bucket_owner.push(k);
@@ -153,6 +154,30 @@ mod tests {
                 y[k]
             );
         }
+    }
+
+    /// Regression companion to the total_cmp hardening: degenerate
+    /// fractions (mass concentrated on one reducer, subnormal-tiny
+    /// shares, maximal remainder ties) must apportion without panicking
+    /// and still hand out every bucket. (A NaN fraction is rejected
+    /// earlier by the sum-to-1 assert; the total_cmp sorts are
+    /// defense-in-depth for the comparison itself.)
+    #[test]
+    fn degenerate_fractions_apportion_without_panic() {
+        // Near-total concentration with a dust tail.
+        let tiny = 1e-300;
+        let y = [1.0 - 3.0 * tiny, tiny, tiny, tiny];
+        let p = Partitioner::from_fractions(&y, 64);
+        assert_eq!(p.bucket_counts().iter().sum::<usize>(), 64);
+        assert_eq!(p.bucket_counts()[0], 64, "dust shares round to zero buckets");
+        // All-equal remainders (every quota exactly fractional .5).
+        let p = Partitioner::from_fractions(&[0.25; 4], 6);
+        assert_eq!(p.bucket_counts().iter().sum::<usize>(), 6);
+        // Zero fractions mixed with ties.
+        let p = Partitioner::from_fractions(&[0.5, 0.5, 0.0, 0.0], 7);
+        let c = p.bucket_counts();
+        assert_eq!(c.iter().sum::<usize>(), 7);
+        assert_eq!(c[2] + c[3], 0);
     }
 
     #[test]

@@ -55,6 +55,15 @@ pub struct SchedView<'a> {
     pub capacity: &'a [f64],
     /// Durations of completed map tasks, in completion order.
     pub durations: &'a [f64],
+    /// Cluster (data-center site) of each node — the locality signal: an
+    /// intra-cluster steal re-fetches the split over the LAN, a
+    /// cross-cluster one pays a WAN transfer.
+    pub cluster: &'a [usize],
+    /// Liveness of each node (fault injection, [`super::dynamics`]). A
+    /// down node always shows zero free slots; `up` additionally lets
+    /// policies prioritize work *homed* on dead nodes, which cannot run
+    /// in place until the node recovers.
+    pub up: &'a [bool],
 }
 
 /// A placement decision.
@@ -117,6 +126,15 @@ impl Scheduler for PlanLocalScheduler {
 
 /// Hadoop-style dynamic mechanisms (§4.6.4): plan-local placement first,
 /// then optional work stealing and speculative backups.
+///
+/// With `locality` enabled the stealing pass becomes **locality-aware**:
+/// a thief prefers victims homed in its own cluster (the split re-fetch
+/// stays on the LAN) and falls back to a cross-cluster (WAN) steal only
+/// when the remote backlog justifies the penalty — the victim's home
+/// node is down, or its queue depth is at least `wan_steal_min_queue`.
+/// Speculative backups likewise prefer a node in the straggler's home
+/// cluster. With `locality` off, behavior is the historical
+/// cluster-oblivious policy, bit-for-bit.
 pub struct DynamicScheduler {
     pub stealing: bool,
     pub speculation: bool,
@@ -125,17 +143,70 @@ pub struct DynamicScheduler {
     pub straggler_factor: f64,
     /// Completed-duration samples required before speculation engages.
     pub min_samples: usize,
+    /// Locality-aware stealing (prefer same-cluster victims, WAN only
+    /// when justified).
+    pub locality: bool,
+    /// Minimum queue depth at an *up* remote home before a cross-cluster
+    /// steal is worth the WAN fetch (locality mode only). Work homed on
+    /// a down node is always stealable — it cannot run anywhere else.
+    pub wan_steal_min_queue: usize,
 }
 
 impl DynamicScheduler {
     pub fn new(stealing: bool, speculation: bool) -> DynamicScheduler {
-        DynamicScheduler { stealing, speculation, straggler_factor: 1.5, min_samples: 3 }
+        DynamicScheduler {
+            stealing,
+            speculation,
+            straggler_factor: 1.5,
+            min_samples: 3,
+            locality: false,
+            wan_steal_min_queue: 2,
+        }
+    }
+
+    /// Enable locality-aware stealing (builder style).
+    pub fn with_locality(mut self) -> DynamicScheduler {
+        self.locality = true;
+        self
+    }
+
+    /// Pick the best victim among `waiting` for `thief`, restricted by
+    /// `eligible`. Prefers victims whose home node is down (that work is
+    /// stranded), then the deepest home queue; ties resolve to the
+    /// lowest waiting-list index for determinism.
+    fn best_victim(
+        &self,
+        view: &SchedView,
+        waiting: &[TaskId],
+        thief: NodeId,
+        eligible: impl Fn(TaskId) -> bool,
+    ) -> Option<usize> {
+        let mut best: Option<(bool, usize, usize)> = None; // (down, depth, idx)
+        for (idx, &t) in waiting.iter().enumerate() {
+            if view.home[t] == thief || !eligible(t) {
+                continue;
+            }
+            let down = !view.up[view.home[t]];
+            let depth = view.queued[view.home[t]];
+            let better = match best {
+                None => true,
+                Some((bd, bq, _)) => (down, depth) > (bd, bq),
+            };
+            if better {
+                best = Some((down, depth, idx));
+            }
+        }
+        best.map(|(_, _, idx)| idx)
     }
 }
 
 impl Scheduler for DynamicScheduler {
     fn name(&self) -> &'static str {
-        "dynamic"
+        if self.locality {
+            "dynamic-locality"
+        } else {
+            "dynamic"
+        }
     }
 
     fn assign(&mut self, view: &SchedView) -> Vec<Assignment> {
@@ -156,8 +227,8 @@ impl Scheduler for DynamicScheduler {
             return out;
         }
         // Work stealing: an idle node with no local queued work takes a
-        // waiting task from the most-loaded node; the executor charges
-        // the wide-area fetch of the split.
+        // waiting task from another node; the executor charges the fetch
+        // of the split over the corresponding link.
         let n_nodes = view.free_slots.len();
         loop {
             let mut stole = false;
@@ -174,16 +245,33 @@ impl Scheduler for DynamicScheduler {
                 if waiting.iter().any(|&t| view.home[t] == thief) {
                     continue;
                 }
-                let victim = waiting
-                    .iter()
-                    .enumerate()
-                    .filter(|&(_, &t)| view.home[t] != thief)
-                    .max_by(|a, b| {
-                        let qa = view.queued[view.home[*a.1]];
-                        let qb = view.queued[view.home[*b.1]];
-                        qa.cmp(&qb)
+                let victim = if self.locality {
+                    // Same-cluster victims first (LAN re-fetch); WAN only
+                    // when the remote work is stranded (home down) or the
+                    // backlog clears the penalty threshold.
+                    self.best_victim(view, &waiting, thief, |t| {
+                        view.cluster[view.home[t]] == view.cluster[thief]
                     })
-                    .map(|(idx, _)| idx);
+                    .or_else(|| {
+                        self.best_victim(view, &waiting, thief, |t| {
+                            view.cluster[view.home[t]] != view.cluster[thief]
+                                && (!view.up[view.home[t]]
+                                    || view.queued[view.home[t]] >= self.wan_steal_min_queue)
+                        })
+                    })
+                } else {
+                    // Historical cluster-oblivious policy: deepest queue.
+                    waiting
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &t)| view.home[t] != thief)
+                        .max_by(|a, b| {
+                            let qa = view.queued[view.home[*a.1]];
+                            let qb = view.queued[view.home[*b.1]];
+                            qa.cmp(&qb)
+                        })
+                        .map(|(idx, _)| idx)
+                };
                 if let Some(idx) = victim {
                     let task = waiting.remove(idx);
                     free[thief] -= 1;
@@ -207,7 +295,9 @@ impl Scheduler for DynamicScheduler {
             return Vec::new();
         }
         let mut ds = view.durations.to_vec();
-        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: durations come from the virtual clock and should be
+        // finite, but a degenerate input must not panic the sort.
+        ds.sort_by(f64::total_cmp);
         let median = ds[ds.len() / 2];
         let mut free = view.free_slots.to_vec();
         let mut out = Vec::new();
@@ -215,10 +305,22 @@ impl Scheduler for DynamicScheduler {
             if view.now - rt.started_at <= self.straggler_factor * median {
                 continue;
             }
-            // Fastest node with a free slot, other than the executor.
+            // Fastest node with a free slot, other than the executor; in
+            // locality mode a node in the straggler's home cluster wins
+            // first (the backup's re-fetch stays on the LAN).
+            let home_cluster = view.cluster[view.home[rt.task]];
             let candidate = (0..free.len())
                 .filter(|&n| n != rt.node && free[n] > 0)
-                .max_by(|&a, &b| view.capacity[a].partial_cmp(&view.capacity[b]).unwrap());
+                .max_by(|&a, &b| {
+                    if self.locality {
+                        let la = view.cluster[a] == home_cluster;
+                        let lb = view.cluster[b] == home_cluster;
+                        if la != lb {
+                            return la.cmp(&lb);
+                        }
+                    }
+                    view.capacity[a].total_cmp(&view.capacity[b])
+                });
             if let Some(node) = candidate {
                 free[node] -= 1;
                 out.push(Assignment { task: rt.task, node, speculative: true });
@@ -229,11 +331,16 @@ impl Scheduler for DynamicScheduler {
 }
 
 /// The scheduler implied by a [`JobConfig`] (§4.6.1 presets): strict plan
-/// enforcement unless dynamic mechanisms are enabled.
+/// enforcement unless dynamic mechanisms are enabled; locality-aware
+/// stealing when the config asks for it.
 pub fn for_config(config: &JobConfig) -> Box<dyn Scheduler> {
-    let stealing = config.stealing && !config.local_only;
+    let stealing = (config.stealing || config.locality_stealing) && !config.local_only;
     if stealing || config.speculation {
-        Box::new(DynamicScheduler::new(stealing, config.speculation))
+        let mut s = DynamicScheduler::new(stealing, config.speculation);
+        if config.locality_stealing {
+            s = s.with_locality();
+        }
+        Box::new(s)
     } else {
         Box::new(PlanLocalScheduler)
     }
@@ -243,6 +350,7 @@ pub fn for_config(config: &JobConfig) -> Box<dyn Scheduler> {
 mod tests {
     use super::*;
 
+    /// All nodes in one cluster, all up (the pre-dynamics default).
     fn view<'a>(
         home: &'a [NodeId],
         ready: &'a [TaskId],
@@ -253,8 +361,23 @@ mod tests {
         durations: &'a [f64],
         now: f64,
     ) -> SchedView<'a> {
-        SchedView { now, home, ready, running, free_slots, queued, capacity, durations }
+        let n = free_slots.len();
+        SchedView {
+            now,
+            home,
+            ready,
+            running,
+            free_slots,
+            queued,
+            capacity,
+            durations,
+            cluster: &ONE_CLUSTER[..n],
+            up: &ALL_UP[..n],
+        }
     }
+
+    const ONE_CLUSTER: [usize; 16] = [0; 16];
+    const ALL_UP: [bool; 16] = [true; 16];
 
     #[test]
     fn plan_local_respects_home_and_slots() {
@@ -341,5 +464,132 @@ mod tests {
         // Speculation alone also needs the dynamic policy.
         let cfg = JobConfig { speculation: true, ..JobConfig::default() };
         assert_eq!(for_config(&cfg).name(), "dynamic");
+        // Locality-aware stealing selects the locality variant (and
+        // implies stealing).
+        let cfg = JobConfig {
+            locality_stealing: true,
+            local_only: false,
+            ..JobConfig::default()
+        };
+        assert_eq!(for_config(&cfg).name(), "dynamic-locality");
+    }
+
+    #[test]
+    fn locality_prefers_same_cluster_victims() {
+        // Nodes 0,1 in cluster 0; node 2 in cluster 1. All three tasks
+        // homed on node 0; node 0 has one slot.
+        let home = [0, 0, 0];
+        let ready = [0, 1, 2];
+        let free = [1, 1, 1];
+        let queued = [3, 0, 0];
+        let cap = [1.0, 1.0, 1.0];
+        let cluster = [0, 0, 1];
+        let up = [true, true, true];
+        let v = SchedView {
+            now: 0.0,
+            home: &home,
+            ready: &ready,
+            running: &[],
+            free_slots: &free,
+            queued: &queued,
+            capacity: &cap,
+            durations: &[],
+            cluster: &cluster,
+            up: &up,
+        };
+        let mut s = DynamicScheduler::new(true, false).with_locality();
+        let a = s.assign(&v);
+        // Task 0 runs at home; node 1 steals within the cluster; node 2
+        // steals over the WAN because the backlog (3) clears the
+        // threshold (2).
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0], Assignment { task: 0, node: 0, speculative: false });
+        assert!(a.iter().any(|x| x.node == 1));
+        assert!(a.iter().any(|x| x.node == 2));
+    }
+
+    #[test]
+    fn locality_blocks_unjustified_wan_steals() {
+        // Two tasks homed on node 0 (cluster 0); thief node 1 lives in
+        // cluster 1. With the home up and only a shallow queue, the WAN
+        // steal is not worth the penalty.
+        let home = [0, 0];
+        let ready = [0, 1];
+        let free = [1, 1];
+        let queued = [2, 0];
+        let cap = [1.0, 1.0];
+        let cluster = [0, 1];
+        let up = [true, true];
+        let v = SchedView {
+            now: 0.0,
+            home: &home,
+            ready: &ready,
+            running: &[],
+            free_slots: &free,
+            queued: &queued,
+            capacity: &cap,
+            durations: &[],
+            cluster: &cluster,
+            up: &up,
+        };
+        let mut s = DynamicScheduler::new(true, false).with_locality();
+        s.wan_steal_min_queue = 3; // queue of 2 is below the bar
+        let a = s.assign(&v);
+        assert_eq!(a.len(), 1, "shallow remote queue must not be stolen over WAN");
+        assert_eq!(a[0].node, 0);
+
+        // Same scenario with the home node DOWN: the work is stranded,
+        // so the WAN steal goes through regardless of queue depth.
+        let free_down = [0, 1];
+        let up_down = [false, true];
+        let v = SchedView {
+            now: 0.0,
+            home: &home,
+            ready: &ready,
+            running: &[],
+            free_slots: &free_down,
+            queued: &queued,
+            capacity: &cap,
+            durations: &[],
+            cluster: &cluster,
+            up: &up_down,
+        };
+        let a = s.assign(&v);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].node, 1, "stranded work is stolen over WAN");
+    }
+
+    #[test]
+    fn locality_speculation_prefers_home_cluster() {
+        // Straggler homed (and running) in cluster 0; backup candidates:
+        // node 1 (cluster 0, slow) and node 2 (cluster 1, fast). The
+        // locality policy picks the home-cluster node.
+        let home = [0];
+        let running = [RunningTask { task: 0, node: 0, started_at: 0.0 }];
+        let free = [0, 1, 1];
+        let queued = [1, 0, 0];
+        let cap = [1.0, 2.0, 9.0];
+        let durations = [1.0, 1.0, 1.0];
+        let cluster = [0, 0, 1];
+        let up = [true, true, true];
+        let v = SchedView {
+            now: 10.0,
+            home: &home,
+            ready: &[],
+            running: &running,
+            free_slots: &free,
+            queued: &queued,
+            capacity: &cap,
+            durations: &durations,
+            cluster: &cluster,
+            up: &up,
+        };
+        let mut s = DynamicScheduler::new(false, true).with_locality();
+        let a = s.speculate(&v);
+        assert_eq!(a, vec![Assignment { task: 0, node: 1, speculative: true }]);
+        // Without locality the fastest node wins (historical behavior).
+        let mut s = DynamicScheduler::new(false, true);
+        let a = s.speculate(&v);
+        assert_eq!(a, vec![Assignment { task: 0, node: 2, speculative: true }]);
     }
 }

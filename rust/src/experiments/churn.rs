@@ -1,0 +1,246 @@
+//! Churn experiment: optimized-plan degradation vs. dynamic-scheduler
+//! recovery under injected platform dynamics.
+//!
+//! For each generated topology size the pipeline is: optimize an
+//! end-to-end plan (`e2e-multi`), simulate it **statically**, then
+//! simulate it again under a seeded [`ScenarioTrace`] — once with the
+//! statically enforced [`PlanLocalScheduler`] (the paper's "our
+//! optimization" execution mode) and once with the locality-aware
+//! [`DynamicScheduler`] (stealing + speculation). The static plan-local
+//! makespan doubles as the trace horizon, so every row of a cell sees
+//! the *same* absolute event times and the whole table is deterministic
+//! given `(generator seed, trace seed)`.
+//!
+//! The headline comparison: under failure-bearing profiles (`burst`,
+//! `failures`, `churn`) the plan-local row stalls until dead nodes
+//! recover, while the dynamic row steals the stranded splits — mostly
+//! within the cluster, over the WAN only when justified — and degrades
+//! far less.
+//!
+//! [`DynamicScheduler`]: crate::engine::scheduler::DynamicScheduler
+//! [`PlanLocalScheduler`]: crate::engine::scheduler::PlanLocalScheduler
+
+use crate::apps::SyntheticApp;
+use crate::engine::dynamics::{self, DynProfile, ScenarioTrace, TraceShape};
+use crate::engine::job::{batch_size, JobConfig};
+use crate::engine::run_job;
+use crate::experiments::common::synthetic_inputs;
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::experiments::scale::SWEEP_NODES;
+use crate::optimizer::{AlternatingLp, PlanOptimizer};
+use crate::platform::scale::{generate, parse_spec_config, ScaleConfig};
+use crate::platform::ScaleKind;
+use crate::util::table::Table;
+
+/// Defaults for `mrperf experiment churn` (and `experiment all`).
+pub const DEFAULT_GEN: &str = "hier-wan:256";
+pub const DEFAULT_DYNAMICS: &str = "burst:7";
+
+/// Input volume per source: larger than the scale sweep's so the map
+/// phase spans enough of the run for mid-run failures to matter.
+pub const CHURN_BYTES_PER_SOURCE: usize = 4_000;
+
+/// Map compute-cost factor for the churn workload (§3.2 heterogeneity
+/// emulation): makes the job compute-bound enough that the map phase
+/// spans a sizeable fraction of the run — a mid-run outage then almost
+/// surely intersects it, which is the scenario the experiment exists to
+/// show (failures during a WAN-bound push would only gate placement).
+pub const CHURN_MAP_COST: f64 = 25.0;
+
+/// One (size, scheduler) comparison under one trace.
+#[derive(Debug, Clone)]
+pub struct ChurnCell {
+    pub kind: ScaleKind,
+    pub nodes: usize,
+    pub scheduler: &'static str,
+    /// Makespan with no dynamics (the baseline for degradation).
+    pub static_makespan: f64,
+    /// Makespan under the injected trace.
+    pub churn_makespan: f64,
+    pub dyn_events: usize,
+    pub failures: usize,
+    pub requeued: usize,
+    pub stolen: usize,
+    pub spec_launched: usize,
+}
+
+impl ChurnCell {
+    /// Relative makespan degradation under churn.
+    pub fn degradation(&self) -> f64 {
+        self.churn_makespan / self.static_makespan - 1.0
+    }
+}
+
+/// The two execution modes compared per cell.
+fn sched_configs() -> [(&'static str, JobConfig); 2] {
+    [
+        ("plan-local", JobConfig::optimized()),
+        ("dynamic+locality", JobConfig::dynamic_locality()),
+    ]
+}
+
+/// Sizes swept for a `--gen kind:nodes[:seed]` spec: every standard
+/// sweep size below the requested node count, plus the request itself.
+fn sweep_sizes(max_nodes: usize) -> Vec<usize> {
+    let mut sizes: Vec<usize> =
+        SWEEP_NODES.iter().cloned().filter(|&n| n < max_nodes).collect();
+    sizes.push(max_nodes);
+    sizes
+}
+
+/// Run the churn comparison; deterministic given the specs.
+pub fn run_cells(gen_spec: &str, dyn_spec: &str) -> Result<Vec<ChurnCell>, String> {
+    let base = parse_spec_config(gen_spec)?;
+    let (profile, trace_seed) = dynamics::parse_spec(dyn_spec)?;
+    run_cells_at(&base, profile, trace_seed, &sweep_sizes(base.nodes))
+}
+
+/// Inner driver over explicit sizes (tests cap the size so debug builds
+/// stay quick; the experiment runs the full range).
+pub fn run_cells_at(
+    base: &ScaleConfig,
+    profile: DynProfile,
+    trace_seed: u64,
+    sizes: &[usize],
+) -> Result<Vec<ChurnCell>, String> {
+    let app = AppModel::new(1.0);
+    let bc = BarrierConfig::HADOOP;
+    let mut cells = Vec::new();
+    for &nodes in sizes {
+        let gen = generate(&ScaleConfig::new(base.kind, nodes).seed(base.seed));
+        let inputs = synthetic_inputs(gen.n_sources(), CHURN_BYTES_PER_SOURCE, 0x5CA1E);
+        // Evaluate the model (and thus the optimizer) on the volume the
+        // engine will actually simulate (the fig4 idiom).
+        let mean_bytes = inputs.iter().map(|v| batch_size(v) as f64).sum::<f64>()
+            / gen.n_sources() as f64;
+        let topo = gen.with_uniform_data(mean_bytes);
+        let plan = AlternatingLp::default().optimize(&topo, app, bc);
+        // α = 1 keeps the fractional-emission accumulator exact (safe to
+        // reuse one instance across runs); the map-cost factor makes the
+        // workload compute-bound (see CHURN_MAP_COST).
+        let sapp = SyntheticApp::new(1.0).with_costs(CHURN_MAP_COST, 2.0);
+
+        // Static plan-local makespan anchors the trace horizon: every
+        // scheduler row of this cell sees identical event times. The same
+        // run doubles as the plan-local row's static baseline (it is
+        // deterministic, so re-running it would only repeat work).
+        let static_pl = run_job(&topo, &plan, &sapp, &sched_configs()[0].1, &inputs).metrics;
+        let horizon = static_pl.makespan.max(1e-9);
+        let trace = ScenarioTrace::generate(profile, trace_seed, &TraceShape::of(&topo, horizon));
+
+        for (idx, (label, cfg)) in sched_configs().into_iter().enumerate() {
+            let stat = if idx == 0 {
+                static_pl.clone()
+            } else {
+                run_job(&topo, &plan, &sapp, &cfg, &inputs).metrics
+            };
+            let churn_cfg = cfg.clone().with_dynamics(trace.clone());
+            let m = run_job(&topo, &plan, &sapp, &churn_cfg, &inputs).metrics;
+            assert_eq!(
+                m.output_records, m.input_records,
+                "{label} lost records under churn at {nodes} nodes"
+            );
+            cells.push(ChurnCell {
+                kind: base.kind,
+                nodes,
+                scheduler: label,
+                static_makespan: stat.makespan,
+                churn_makespan: m.makespan,
+                dyn_events: m.dyn_events,
+                failures: m.failures_injected,
+                requeued: m.tasks_requeued,
+                stolen: m.stolen,
+                spec_launched: m.spec_launched,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the churn table for explicit specs.
+pub fn run_with(gen_spec: &str, dyn_spec: &str) -> Result<Vec<Table>, String> {
+    let cells = run_cells(gen_spec, dyn_spec)?;
+    let mut t = Table::new(
+        format!(
+            "churn: optimized plan under dynamics (--gen {gen_spec} --dynamics {dyn_spec}) — \
+             plan-local enforcement vs locality-aware dynamic recovery"
+        ),
+        &[
+            "kind",
+            "nodes",
+            "scheduler",
+            "static (s)",
+            "churn (s)",
+            "degradation",
+            "events",
+            "failures",
+            "requeued",
+            "stolen",
+            "spec",
+        ],
+    );
+    for c in &cells {
+        t.add_row(vec![
+            c.kind.label().to_string(),
+            c.nodes.to_string(),
+            c.scheduler.to_string(),
+            format!("{:.4}", c.static_makespan),
+            format!("{:.4}", c.churn_makespan),
+            format!("{:+.1}%", c.degradation() * 100.0),
+            c.dyn_events.to_string(),
+            c.failures.to_string(),
+            c.requeued.to_string(),
+            c.stolen.to_string(),
+            c.spec_launched.to_string(),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// The `churn` experiment with its default specs (used by
+/// `mrperf experiment all`).
+pub fn run() -> Vec<Table> {
+    run_with(DEFAULT_GEN, DEFAULT_DYNAMICS).expect("default churn specs are valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same specs → bit-identical cells (the determinism acceptance
+    /// criterion, sized down so the debug-build test stays quick).
+    #[test]
+    fn churn_cells_are_deterministic() {
+        let base = parse_spec_config("hier-wan:16").unwrap();
+        let a = run_cells_at(&base, DynProfile::Burst, 7, &[16]).unwrap();
+        let b = run_cells_at(&base, DynProfile::Burst, 7, &[16]).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.scheduler, y.scheduler);
+            assert_eq!(x.static_makespan.to_bits(), y.static_makespan.to_bits());
+            assert_eq!(x.churn_makespan.to_bits(), y.churn_makespan.to_bits());
+            assert_eq!(
+                (x.dyn_events, x.failures, x.requeued, x.stolen, x.spec_launched),
+                (y.dyn_events, y.failures, y.requeued, y.stolen, y.spec_launched)
+            );
+        }
+        // The trace must actually do something in this scenario.
+        assert!(a.iter().all(|c| c.dyn_events > 0), "{a:?}");
+    }
+
+    #[test]
+    fn rendered_tables_are_deterministic() {
+        let a = run_with("hier-wan:16", "failures:3").unwrap();
+        let b = run_with("hier-wan:16", "failures:3").unwrap();
+        let ra: Vec<String> = a.iter().map(Table::render).collect();
+        let rb: Vec<String> = b.iter().map(Table::render).collect();
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn bad_specs_error_cleanly() {
+        assert!(run_with("nope:16", "burst:7").is_err());
+        assert!(run_with("hier-wan:16", "nope:7").is_err());
+    }
+}

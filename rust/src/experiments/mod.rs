@@ -13,7 +13,9 @@
 //! | fig11  | dynamics atop hadoop baseline                   | [`fig9to12`] |
 //! | fig12  | wide-area replication                           | [`fig9to12`] |
 //! | scale  | engine sweep on generated 16–256-node platforms | [`scale`] |
+//! | churn  | plan-local vs dynamic schedulers under dynamics | [`churn`] |
 
+pub mod churn;
 pub mod common;
 pub mod fig4;
 pub mod fig5678;
@@ -24,13 +26,15 @@ pub mod table1;
 use crate::util::table::Table;
 use std::path::Path;
 
-/// All experiment ids, in paper order (plus the post-paper scale sweep).
-pub const ALL: [&str; 11] = [
+/// All experiment ids, in paper order (plus the post-paper scale and
+/// churn sweeps).
+pub const ALL: [&str; 12] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "scale",
+    "scale", "churn",
 ];
 
-/// Run one experiment by id.
+/// Run one experiment by id (`churn` with its default specs; the CLI
+/// passes `--gen`/`--dynamics` through [`churn::run_with`] directly).
 pub fn run(id: &str) -> Option<Vec<Table>> {
     Some(match id {
         "table1" => table1::run(),
@@ -44,25 +48,31 @@ pub fn run(id: &str) -> Option<Vec<Table>> {
         "fig11" => fig9to12::run_fig11(),
         "fig12" => fig9to12::run_fig12(),
         "scale" => scale::run(),
+        "churn" => churn::run(),
         _ => return None,
     })
+}
+
+/// Print tables and persist CSVs under `results/`.
+pub fn report_tables(id: &str, tables: &[Table], results_dir: &Path) {
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        let name = if tables.len() == 1 {
+            id.to_string()
+        } else {
+            format!("{id}_{i}")
+        };
+        if let Err(e) = t.write_csv(results_dir, &name) {
+            eprintln!("warning: could not write CSV for {id}: {e}");
+        }
+    }
 }
 
 /// Run, print, and persist CSVs under `results/`.
 pub fn run_and_report(id: &str, results_dir: &Path) -> bool {
     match run(id) {
         Some(tables) => {
-            for (i, t) in tables.iter().enumerate() {
-                println!("{}", t.render());
-                let name = if tables.len() == 1 {
-                    id.to_string()
-                } else {
-                    format!("{id}_{i}")
-                };
-                if let Err(e) = t.write_csv(results_dir, &name) {
-                    eprintln!("warning: could not write CSV for {id}: {e}");
-                }
-            }
+            report_tables(id, &tables, results_dir);
             true
         }
         None => false,

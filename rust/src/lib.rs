@@ -21,9 +21,12 @@
 //!   modified Hadoop, §3.1) built as a discrete-event core: a max-min-
 //!   fair fluid simulation (`engine::fluid`), a virtual-clock event heap
 //!   (`engine::events`), pluggable scheduling policies covering strict
-//!   plan enforcement plus speculative execution and work stealing
-//!   (`engine::scheduler`, §4.6.4), and a thin orchestrator
-//!   (`engine::executor`) driving push/map/shuffle/reduce as events.
+//!   plan enforcement plus speculative execution and (locality-aware)
+//!   work stealing (`engine::scheduler`, §4.6.4), a seeded dynamics /
+//!   fault-injection layer (`engine::dynamics`: time-varying bandwidth,
+//!   node failures, stragglers), and a thin orchestrator
+//!   (`engine::executor`) driving push/map/shuffle/reduce as events and
+//!   re-queuing work lost to injected failures.
 //! * **[`apps`]**/**[`data`]** — the evaluation applications (Word Count,
 //!   Sessionization, Full Inverted Index, synthetic-α) and seeded
 //!   workload generators.
@@ -31,7 +34,9 @@
 //!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py`.
 //! * **[`experiments`]** — regenerates every table and figure of the
 //!   paper's evaluation (Table 1, Figs 4–12), plus the post-paper
-//!   `scale` sweep over generated 16–256-node platforms.
+//!   `scale` sweep over generated 16–256-node platforms and the `churn`
+//!   comparison of plan-local vs dynamic scheduling under injected
+//!   platform dynamics.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! rust binary is self-contained afterwards. The default cargo build has

@@ -30,12 +30,14 @@ const USAGE: &str = "\
 mrperf — geo-distributed MapReduce modeling, optimization & execution
 
 USAGE:
-  mrperf experiment <table1|fig4..fig12|scale|all> [--results DIR]
+  mrperf experiment <table1|fig4..fig12|scale|churn|all> [--results DIR]
+               [--gen KIND:NODES[:SEED]] [--dynamics PROFILE[:SEED]]  (churn only)
   mrperf plan  [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
                [--alpha A] [--barriers G-P-L] [--optimizer NAME] [--skew S]
   mrperf run   [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
                [--app APP] [--alpha A] [--optimizer NAME] [--skew S]
-               [--bytes-per-source N] [--speculation] [--stealing] [--replication R]
+               [--bytes-per-source N] [--speculation] [--stealing] [--locality]
+               [--replication R] [--dynamics PROFILE[:SEED]]
   mrperf bench [--json DIR] [--filter SUBSTR]
   mrperf validate
   mrperf list
@@ -49,6 +51,11 @@ APP:        wordcount | sessionize | inverted-index | synthetic (default)
 OPTIMIZER:  uniform | myopic | e2e-push | e2e-shuffle | e2e-multi (default)
             | gradient (pure-rust analytic) | artifact (AOT JAX/Pallas via PJRT)
 BARRIERS:   three of G|L|P joined by '-', e.g. G-P-L (default), G-G-G, P-P-P
+DYNAMICS:   seeded fault/variability trace injected into the engine run:
+            step | periodic | burst | failures | stragglers | churn
+            (e.g. --dynamics burst:7; see `mrperf experiment churn`)
+LOCALITY:   --locality enables locality-aware work stealing (same-cluster
+            steals preferred, WAN only when justified); implies --stealing
 BENCH:      quick perf suite (solver + optimizer scale paths); --json DIR
             writes one BENCH_<name>.json per result for trend tracking
 ";
@@ -140,7 +147,24 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
     };
     for id in ids {
         println!("\n### experiment {id}\n");
-        if !experiments::run_and_report(id, &results_dir) {
+        // `churn` takes CLI-configurable specs; everything else is fixed.
+        let ok = if id == "churn" {
+            let gen_spec = args.get_or("gen", experiments::churn::DEFAULT_GEN);
+            let dyn_spec = args.get_or("dynamics", experiments::churn::DEFAULT_DYNAMICS);
+            match experiments::churn::run_with(gen_spec, dyn_spec) {
+                Ok(tables) => {
+                    experiments::report_tables(id, &tables, &results_dir);
+                    true
+                }
+                Err(e) => {
+                    eprintln!("churn: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else {
+            experiments::run_and_report(id, &results_dir)
+        };
+        if !ok {
             eprintln!("unknown experiment '{id}'");
             return ExitCode::FAILURE;
         }
@@ -269,14 +293,47 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    let jc = JobConfig {
+    let stealing = args.flag("stealing") || args.flag("locality");
+    let mut jc = JobConfig {
         barriers: cfg,
         speculation: args.flag("speculation"),
-        stealing: args.flag("stealing"),
-        local_only: !(args.flag("speculation") || args.flag("stealing")),
+        stealing,
+        locality_stealing: args.flag("locality"),
+        local_only: !(args.flag("speculation") || stealing),
         replication: args.get_usize("replication", 1).unwrap_or(1),
         ..JobConfig::default()
     };
+    if let Some(spec) = args.get("dynamics") {
+        let (profile, dseed) = match mrperf::engine::dynamics::parse_spec(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        // Horizon: the model-predicted makespan on the volume actually
+        // simulated (topo.d carries the nominal platform volume, which
+        // can be orders of magnitude above the synthetic inputs).
+        let mean_bytes = inputs
+            .iter()
+            .map(|v| mrperf::engine::job::batch_size(v) as f64)
+            .sum::<f64>()
+            / n as f64;
+        let href = topo.clone().with_uniform_data(mean_bytes.max(1.0));
+        let horizon = evaluate(&href, AppModel::new(alpha), cfg, &plan).makespan.max(1e-9);
+        let trace = mrperf::engine::ScenarioTrace::generate(
+            profile,
+            dseed,
+            &mrperf::engine::TraceShape::of(&topo, horizon),
+        );
+        println!(
+            "dynamics: {} — {} events over a {:.3} s horizon",
+            trace.label(),
+            trace.len(),
+            horizon
+        );
+        jc = jc.with_dynamics(trace);
+    }
     println!(
         "running {app_name} (α≈{alpha:.2}) on {} with {optimizer} plan, barriers {} …",
         topo.name,
@@ -304,8 +361,14 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
     );
     if m.spec_launched > 0 || m.stolen > 0 {
         println!(
-            "dynamics          {:>10} speculative ({} won), {} stolen",
+            "scheduling        {:>10} speculative ({} won), {} stolen",
             m.spec_launched, m.spec_won, m.stolen
+        );
+    }
+    if m.dyn_events > 0 {
+        println!(
+            "churn             {:>10} trace events, {} failures, {} tasks requeued",
+            m.dyn_events, m.failures_injected, m.tasks_requeued
         );
     }
     ExitCode::SUCCESS
@@ -404,12 +467,17 @@ fn cmd_list() -> ExitCode {
     println!(
         "optimizers: uniform, myopic, e2e-push, e2e-shuffle, e2e-multi, gradient, artifact"
     );
+    let profiles: Vec<&str> = mrperf::engine::DynProfile::all()
+        .iter()
+        .map(|p| p.label())
+        .collect();
+    println!("dynamics profiles (--dynamics PROFILE[:SEED]): {}", profiles.join(", "));
     ExitCode::SUCCESS
 }
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = match cli::parse(&argv, &["verbose", "speculation", "stealing"]) {
+    let args = match cli::parse(&argv, &["verbose", "speculation", "stealing", "locality"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("{e}\n\n{USAGE}");

@@ -146,7 +146,9 @@ impl AlternatingLp {
             (0..r).collect()
         } else {
             let mut ks: Vec<usize> = (0..r).collect();
-            ks.sort_by(|&a, &b| bw[b].partial_cmp(&bw[a]).unwrap().then(a.cmp(&b)));
+            // total_cmp (descending): a zero/NaN-bandwidth node must
+            // degrade the ranking, not panic the sort.
+            ks.sort_by(|&a, &b| bw[b].total_cmp(&bw[a]).then(a.cmp(&b)));
             ks.truncate(ONE_HOT_CAP);
             ks.sort_unstable();
             ks
@@ -208,7 +210,9 @@ impl PlanOptimizer for AlternatingLp {
                 (score, y0)
             })
             .collect();
-        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp: a NaN score (degenerate topology) ranks last instead
+        // of panicking the pre-screen sort.
+        scored.sort_by(|a, b| a.0.total_cmp(&b.0));
 
         let mut best_plan = None;
         let mut best_ms = f64::INFINITY;
@@ -248,6 +252,44 @@ mod tests {
             ] {
                 assert!(e2e <= other + 1e-6, "α={alpha}: e2e {e2e} vs {other}");
             }
+        }
+    }
+
+    /// Regression (NaN-unsafe sort): ranking one-hot starts by aggregate
+    /// shuffle bandwidth used `partial_cmp(..).unwrap()`, which panics
+    /// when a degenerate topology carries a zero/NaN-bandwidth node
+    /// (0-capacity column sums can propagate NaN). `f64::total_cmp` must
+    /// keep the ranking deterministic and panic-free. Fails on the
+    /// pre-fix code.
+    #[test]
+    fn one_hot_start_ranking_survives_nan_bandwidth_nodes() {
+        use crate::platform::topology::{Cluster, Continent, Topology};
+        use crate::util::mat::Mat;
+        let r = ONE_HOT_CAP + 4; // past the cap so the ranking sort runs
+        let mut b_mr = Mat::filled(2, r, 5.0 * MB);
+        for j in 0..2 {
+            b_mr[(j, 0)] = f64::NAN; // dead link probe / NaN telemetry
+            b_mr[(j, 1)] = 0.0; // zero-bandwidth node
+        }
+        let topo = Topology {
+            name: "degenerate".into(),
+            clusters: vec![Cluster { id: 0, name: "c0".into(), continent: Continent::US }],
+            source_cluster: vec![0; 2],
+            mapper_cluster: vec![0; 2],
+            reducer_cluster: vec![0; r],
+            d: vec![1.0 * MB; 2],
+            c_map: vec![10.0 * MB; 2],
+            c_red: vec![10.0 * MB; r],
+            b_sm: Mat::filled(2, 2, 10.0 * MB),
+            b_mr,
+        };
+        let starts = AlternatingLp::default().deterministic_starts(&topo);
+        // 3 seeded interior starts + ONE_HOT_CAP capped one-hot starts,
+        // each a valid vertex of the y-simplex.
+        assert_eq!(starts.len(), 3 + ONE_HOT_CAP);
+        for y in &starts[3..] {
+            assert_eq!(y.iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(y.iter().filter(|&&v| v == 0.0).count(), r - 1);
         }
     }
 

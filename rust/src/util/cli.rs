@@ -2,6 +2,9 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional
 //! arguments, with typed getters and an auto-generated usage block.
+//! A `--key` that is not a declared flag and has no value (end of argv,
+//! or directly followed by another `--opt`) is a [`CliError`], not a
+//! silent boolean flag.
 
 use std::collections::BTreeMap;
 
@@ -44,13 +47,18 @@ pub fn parse(argv: &[String], flag_keys: &[&str]) -> Result<Args, CliError> {
                 args.flags.push(stripped.to_string());
             } else if let Some(next) = it.peek() {
                 if next.starts_with("--") {
-                    // Treat as a flag even if not declared; value-less.
-                    args.flags.push(stripped.to_string());
+                    // An undeclared key directly followed by another
+                    // option has no value: error out instead of silently
+                    // recording a bogus flag (`mrperf run --gen --skew 2`
+                    // must not run with the default topology).
+                    return Err(CliError::MissingValue(stripped.to_string()));
                 } else {
                     args.options.insert(stripped.to_string(), it.next().unwrap().clone());
                 }
             } else {
-                args.flags.push(stripped.to_string());
+                // Undeclared key at end of argv: same story
+                // (`mrperf run --gen` used to silently become a flag).
+                return Err(CliError::MissingValue(stripped.to_string()));
             }
         } else {
             args.positional.push(a.clone());
@@ -157,15 +165,38 @@ mod tests {
     }
 
     #[test]
-    fn trailing_flag() {
-        let a = parse(&sv(&["--quiet"]), &[]).unwrap();
+    fn trailing_declared_flag_is_fine() {
+        let a = parse(&sv(&["run", "--quiet"]), &["quiet"]).unwrap();
         assert!(a.flag("quiet"));
     }
 
+    /// Regression: an undeclared option at end-of-argv was silently
+    /// recorded as a boolean flag (`mrperf run --gen` ran with the
+    /// default topology). It must error.
     #[test]
-    fn undeclared_flag_before_option() {
-        let a = parse(&sv(&["--fast", "--n", "3"]), &[]).unwrap();
-        assert!(a.flag("fast"));
+    fn trailing_undeclared_option_errors() {
+        let err = parse(&sv(&["run", "--gen"]), &["verbose"]).unwrap_err();
+        assert!(matches!(err, CliError::MissingValue(ref k) if k == "gen"), "{err}");
+    }
+
+    /// Regression: an undeclared option directly followed by another
+    /// `--opt` was silently recorded as a flag too (`--gen --skew 2`).
+    #[test]
+    fn adjacent_undeclared_option_errors() {
+        let err = parse(&sv(&["--gen", "--skew", "2"]), &[]).unwrap_err();
+        assert!(matches!(err, CliError::MissingValue(ref k) if k == "gen"), "{err}");
+    }
+
+    #[test]
+    fn declared_flag_before_option_still_parses() {
+        let a = parse(&sv(&["--verbose", "--n", "3"]), &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
         assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn negative_number_values_are_not_options() {
+        let a = parse(&sv(&["--alpha", "-1.5"]), &[]).unwrap();
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), -1.5);
     }
 }

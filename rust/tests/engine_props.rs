@@ -132,8 +132,14 @@ fn schedulers_never_exceed_per_node_capacity() {
     qcheck(Config::default().cases(150), "scheduler slot capacity", |rng| {
         let n_nodes = rng.range(1, 12);
         let n_tasks = rng.range(0, 40);
+        let n_clusters = rng.range(1, 4);
         let home: Vec<usize> = (0..n_tasks).map(|_| rng.range(0, n_nodes)).collect();
-        let free: Vec<usize> = (0..n_nodes).map(|_| rng.range(0, 4)).collect();
+        let cluster: Vec<usize> = (0..n_nodes).map(|_| rng.range(0, n_clusters)).collect();
+        // Down nodes always present zero free slots (executor invariant).
+        let up: Vec<bool> = (0..n_nodes).map(|_| rng.chance(0.85)).collect();
+        let free: Vec<usize> = (0..n_nodes)
+            .map(|n| if up[n] { rng.range(0, 4) } else { 0 })
+            .collect();
         let mut queued = vec![0usize; n_nodes];
         for &h in &home {
             queued[h] += 1;
@@ -154,6 +160,8 @@ fn schedulers_never_exceed_per_node_capacity() {
             queued: &queued,
             capacity: &capacity,
             durations: &durations,
+            cluster: &cluster,
+            up: &up,
         };
 
         let mut plan_local = PlanLocalScheduler;
@@ -166,19 +174,29 @@ fn schedulers_never_exceed_per_node_capacity() {
             )?;
         }
 
-        let mut dynamic = DynamicScheduler::new(true, true);
-        let a = dynamic.assign(&view);
-        check_capacity(&a, &free, "dynamic assign")?;
-        let mut seen = std::collections::HashSet::new();
-        for asg in &a {
-            ensure(!asg.speculative, "assign() must not return speculative placements")?;
-            ensure(ready.contains(&asg.task), format!("task {} was not ready", asg.task))?;
-            ensure(seen.insert(asg.task), format!("task {} assigned twice", asg.task))?;
-        }
-        let backups = dynamic.speculate(&view);
-        check_capacity(&backups, &free, "dynamic speculate")?;
-        for b in &backups {
-            ensure(b.speculative, "speculate() must mark assignments speculative")?;
+        for locality in [false, true] {
+            let mut dynamic = DynamicScheduler::new(true, true);
+            if locality {
+                dynamic = dynamic.with_locality();
+            }
+            let label = if locality { "dynamic-locality" } else { "dynamic" };
+            let a = dynamic.assign(&view);
+            check_capacity(&a, &free, &format!("{label} assign"))?;
+            let mut seen = std::collections::HashSet::new();
+            for asg in &a {
+                ensure(!asg.speculative, "assign() must not return speculative placements")?;
+                ensure(ready.contains(&asg.task), format!("task {} was not ready", asg.task))?;
+                ensure(seen.insert(asg.task), format!("task {} assigned twice", asg.task))?;
+                ensure(
+                    up[asg.node],
+                    format!("{label}: task {} placed on a down node", asg.task),
+                )?;
+            }
+            let backups = dynamic.speculate(&view);
+            check_capacity(&backups, &free, &format!("{label} speculate"))?;
+            for b in &backups {
+                ensure(b.speculative, "speculate() must mark assignments speculative")?;
+            }
         }
         Ok(())
     });

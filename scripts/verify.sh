@@ -30,6 +30,8 @@ if [[ "$QUICK" == "0" ]]; then
   "$BIN" plan --env 8-dc-global >/dev/null
   "$BIN" plan --gen hier-wan:64 --optimizer gradient >/dev/null
   "$BIN" run --gen hier-wan:64 --optimizer uniform >/dev/null
+  "$BIN" run --gen hier-wan:16 --optimizer uniform --locality --dynamics failures:3 >/dev/null
+  "$BIN" experiment churn --gen hier-wan:16 --dynamics burst:7 >/dev/null
   # Clean-error probes must fail (a bare `!` pipeline is exempt from
   # set -e, so check the status explicitly).
   if "$BIN" plan --gen hier-wan:3 >/dev/null 2>&1; then
@@ -38,6 +40,14 @@ if [[ "$QUICK" == "0" ]]; then
   fi
   if "$BIN" plan --gen nope:64 >/dev/null 2>&1; then
     echo "FAIL: --gen nope:64 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" run --gen >/dev/null 2>&1; then
+    echo "FAIL: trailing value-less --gen should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" run --gen hier-wan:16 --dynamics nope:1 >/dev/null 2>&1; then
+    echo "FAIL: --dynamics nope:1 should be rejected" >&2
     exit 1
   fi
   echo "smoke OK"
