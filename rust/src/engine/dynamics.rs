@@ -13,10 +13,41 @@
 //!   relative to their topology base values; the fluid simulation
 //!   re-solves its max-min allocation at the event boundary;
 //! * **node failures / recoveries** — a mapper drops out (running work is
-//!   lost and re-queued, no new placements) and later returns;
+//!   lost and re-queued, no new placements) and later returns; a reducer
+//!   drops out (in-flight shuffle transfers and partial reduce work are
+//!   lost; its outstanding key range either waits for recovery under
+//!   strict plan enforcement or is adopted by a surviving reducer when
+//!   the scheduler allows re-partitioning — see the reducer-failure
+//!   lifecycle below) and later returns;
 //! * **compute-slowdown stragglers** — a node's compute capacity scaled
 //!   down and later restored (the §4.6.4 speculation trigger, now
 //!   reproducible instead of emergent).
+//!
+//! ## Reducer-failure lifecycle
+//!
+//! [`DynEvent::ReducerFail`] kills reducer `k` at its firing time:
+//!
+//! 1. the executor cancels `k`'s in-flight shuffle transfers and any
+//!    running reduce compute deterministically (sorted `ActivityId`
+//!    order — hash-map iteration order must never leak into the
+//!    simulation);
+//! 2. shuffle bytes already delivered to `k` for key ranges it has not
+//!    finished reducing are *lost* (the node's local disk died with it)
+//!    and de-credited;
+//! 3. the [`Scheduler`](super::scheduler::Scheduler) is asked, per
+//!    outstanding key range, for a surviving reducer to adopt it
+//!    (`reassign_reduce`). Plan-enforcing policies decline — the range
+//!    waits for [`DynEvent::ReducerRecover`] — while the dynamic
+//!    policies pick a survivor (same-cluster first in locality mode);
+//! 4. lost transfers are replayed from their originating mappers (map
+//!    outputs are durable until job end, as in Hadoop) to the range's
+//!    current owner, counted in `metrics.reduce_bytes_replayed`, and the
+//!    adopted range's reduce re-executes from scratch on the new node.
+//!
+//! [`DynEvent::ReducerRecover`] restores the node with all reduce slots
+//! free and replays whatever held transfers still target ranges it owns.
+//! Mapper-style last-writer-wins semantics apply: double failures are
+//! idempotent, recovery of an up node is a no-op.
 //!
 //! Everything is generated from a `(profile, seed)` pair over a
 //! [`TraceShape`] snapshot of the platform, so runs are reproducible
@@ -51,6 +82,12 @@ pub enum DynEvent {
     MapperFail { node: usize },
     /// Mapper `node` recovers with all its slots free.
     MapperRecover { node: usize },
+    /// Reducer `node` fails: in-flight shuffle transfers and partial
+    /// reduce work there are lost; its outstanding key ranges wait for
+    /// recovery or are adopted by survivors (see the module docs).
+    ReducerFail { node: usize },
+    /// Reducer `node` recovers with all reduce slots free.
+    ReducerRecover { node: usize },
     /// Scale mapper `node`'s compute capacity to `factor` × base
     /// (a straggler while `factor < 1`).
     MapperSlowdown { node: usize, factor: f64 },
@@ -77,7 +114,8 @@ pub enum DynProfile {
     /// degradation, usually with a correlated node outage in the bursted
     /// cluster (a WAN incident takes machines with it).
     Burst,
-    /// Node failure/recovery windows only.
+    /// Node failure/recovery windows only: early mapper outages plus
+    /// mid-run outages of the most attractive reducers.
     Failures,
     /// Compute-slowdown windows only.
     Stragglers,
@@ -148,15 +186,33 @@ pub struct TraceShape {
     /// Cluster of each mapper node (`mapper_cluster[j]`).
     pub mapper_cluster: Vec<usize>,
     pub n_reducers: usize,
+    /// Reducer indices in descending *attractiveness* (compute capacity
+    /// × aggregate incoming shuffle bandwidth). Failure profiles draw
+    /// reducer victims from the top of this ranking: the best-provisioned,
+    /// best-connected nodes are exactly where load-seeking plans
+    /// concentrate the shuffle, so outages there are the ones a
+    /// failure-aware plan must hedge against.
+    pub reducer_rank: Vec<usize>,
 }
 
 impl TraceShape {
     pub fn of(topo: &Topology, horizon: f64) -> TraceShape {
+        let r = topo.n_reducers();
+        let attract: Vec<f64> = (0..r)
+            .map(|k| {
+                topo.c_red[k]
+                    * (0..topo.n_mappers()).map(|j| topo.b_mr.get(j, k)).sum::<f64>()
+            })
+            .collect();
+        let mut reducer_rank: Vec<usize> = (0..r).collect();
+        // total_cmp (descending): degenerate capacities must not panic.
+        reducer_rank.sort_by(|&a, &b| attract[b].total_cmp(&attract[a]).then(a.cmp(&b)));
         TraceShape {
             horizon,
             n_clusters: topo.clusters.len(),
             mapper_cluster: topo.mapper_cluster.clone(),
-            n_reducers: topo.n_reducers(),
+            n_reducers: r,
+            reducer_rank,
         }
     }
 
@@ -198,7 +254,10 @@ impl ScenarioTrace {
                 | DynEvent::ClusterLinkScale { factor, .. }
                 | DynEvent::MapperSlowdown { factor, .. }
                 | DynEvent::ReducerSlowdown { factor, .. } => Some(factor),
-                DynEvent::MapperFail { .. } | DynEvent::MapperRecover { .. } => None,
+                DynEvent::MapperFail { .. }
+                | DynEvent::MapperRecover { .. }
+                | DynEvent::ReducerFail { .. }
+                | DynEvent::ReducerRecover { .. } => None,
             };
             if let Some(f) = factor {
                 assert!(
@@ -329,6 +388,23 @@ fn gen_failures(rng: &mut Pcg64, shape: &TraceShape) -> Vec<TimedEvent> {
         events.push(TimedEvent { time: fail_at, event: DynEvent::MapperFail { node } });
         events.push(TimedEvent { time: recover_at, event: DynEvent::MapperRecover { node } });
     }
+    // Reducer outages (drawn *after* the mapper events so the mapper part
+    // of the stream is unchanged for a given seed). Victims come from the
+    // top of the attractiveness ranking — where plans concentrate the
+    // shuffle — failing mid-run (the shuffle is in flight under Hadoop's
+    // pipelined map/shuffle boundary) and recovering only around the
+    // nominal end of the job, so an un-hedged plan that waits for
+    // recovery pays for the whole outage.
+    if shape.n_reducers > 0 {
+        let n_red = (shape.n_reducers / 8).max(1).min(shape.reducer_rank.len());
+        for &node in shape.reducer_rank.iter().take(n_red) {
+            let fail_at = h * rng.uniform(0.30, 0.50);
+            let recover_at = h * rng.uniform(0.90, 1.15);
+            events.push(TimedEvent { time: fail_at, event: DynEvent::ReducerFail { node } });
+            events
+                .push(TimedEvent { time: recover_at, event: DynEvent::ReducerRecover { node } });
+        }
+    }
     events
 }
 
@@ -374,6 +450,7 @@ mod tests {
             n_clusters: 4,
             mapper_cluster: (0..12).map(|j| j % 4).collect(),
             n_reducers: 12,
+            reducer_rank: (0..12).rev().collect(),
         }
     }
 
@@ -407,7 +484,9 @@ mod tests {
                         | DynEvent::MapperSlowdown { node, .. } => {
                             assert!(node < shape().mapper_cluster.len())
                         }
-                        DynEvent::ReducerSlowdown { node, .. } => {
+                        DynEvent::ReducerSlowdown { node, .. }
+                        | DynEvent::ReducerFail { node }
+                        | DynEvent::ReducerRecover { node } => {
                             assert!(node < shape().n_reducers)
                         }
                         DynEvent::WanScale { .. } => {}
@@ -419,28 +498,67 @@ mod tests {
 
     #[test]
     fn every_failure_has_a_later_recovery() {
+        // Mapper and reducer outages are paired independently (a node id
+        // names a different machine per role).
         for p in [DynProfile::Failures, DynProfile::Burst, DynProfile::Churn] {
             for seed in 0..20u64 {
                 let tr = ScenarioTrace::generate(p, seed, &shape());
-                let mut down: std::collections::BTreeMap<usize, f64> = Default::default();
-                let mut recovered: std::collections::BTreeSet<usize> = Default::default();
+                let mut down: std::collections::BTreeMap<(bool, usize), f64> = Default::default();
+                let mut recovered: std::collections::BTreeSet<(bool, usize)> = Default::default();
                 for te in tr.events() {
-                    match te.event {
-                        DynEvent::MapperFail { node } => {
-                            down.entry(node).or_insert(te.time);
-                        }
-                        DynEvent::MapperRecover { node } => {
-                            let failed_at = down
-                                .get(&node)
-                                .unwrap_or_else(|| panic!("{p:?}: recovery without failure"));
-                            assert!(te.time >= *failed_at, "{p:?}: recovery before failure");
-                            recovered.insert(node);
-                        }
-                        _ => {}
+                    let (key, is_recover) = match te.event {
+                        DynEvent::MapperFail { node } => ((false, node), false),
+                        DynEvent::MapperRecover { node } => ((false, node), true),
+                        DynEvent::ReducerFail { node } => ((true, node), false),
+                        DynEvent::ReducerRecover { node } => ((true, node), true),
+                        _ => continue,
+                    };
+                    if is_recover {
+                        let failed_at = down
+                            .get(&key)
+                            .unwrap_or_else(|| panic!("{p:?}: recovery without failure"));
+                        assert!(te.time >= *failed_at, "{p:?}: recovery before failure");
+                        recovered.insert(key);
+                    } else {
+                        down.entry(key).or_insert(te.time);
                     }
                 }
-                for node in down.keys() {
-                    assert!(recovered.contains(node), "{p:?} seed {seed}: node {node} never recovers");
+                for key in down.keys() {
+                    assert!(recovered.contains(key), "{p:?} seed {seed}: {key:?} never recovers");
+                }
+            }
+        }
+    }
+
+    /// The failures (and hence churn) profile must take down reducers —
+    /// specifically the top of the attractiveness ranking — in addition
+    /// to mappers, and a reducer outage must start no earlier than 30%
+    /// into the horizon (so it reliably intersects the shuffle).
+    #[test]
+    fn failures_profile_targets_ranked_reducers() {
+        for p in [DynProfile::Failures, DynProfile::Churn] {
+            for seed in [1u64, 7, 42] {
+                let sh = shape();
+                let tr = ScenarioTrace::generate(p, seed, &sh);
+                let expected = (sh.n_reducers / 8).max(1);
+                let mut seen = Vec::new();
+                for te in tr.events() {
+                    if let DynEvent::ReducerFail { node } = te.event {
+                        assert!(te.time >= 0.30 * sh.horizon, "{p:?}: reducer fails too early");
+                        seen.push(node);
+                    }
+                }
+                assert!(
+                    seen.len() >= expected.max(1),
+                    "{p:?} seed {seed}: only {} reducer outages",
+                    seen.len()
+                );
+                // Victims come from the front of the ranking.
+                for node in &seen {
+                    assert!(
+                        sh.reducer_rank[..seen.len().max(1)].contains(node),
+                        "{p:?}: victim {node} not among the top-ranked reducers"
+                    );
                 }
             }
         }

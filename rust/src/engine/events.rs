@@ -31,13 +31,17 @@ pub enum EngineEvent {
     FetchArrived { task: TaskId, speculative: bool },
     /// A map task's compute finished (primary or speculative copy).
     MapFinished { task: TaskId, speculative: bool },
-    /// One shuffle transfer was fully delivered to `reducer` (§3.1.3).
-    ShuffleArrived { reducer: usize },
-    /// Reducer `reducer` finished its compute.
-    ReduceFinished { reducer: usize },
-    /// One replicated output write of reducer `reducer` completed
+    /// Shuffle transfer `xfer` (an index into the executor's transfer
+    /// table, which records source node, key range, payload and byte
+    /// count — the state a reducer failure needs to replay it) was fully
+    /// delivered (§3.1.3).
+    ShuffleArrived { xfer: usize },
+    /// The reduce compute of key range `range` finished (on whichever
+    /// reducer currently owns the range — ownership moves on failures).
+    ReduceFinished { range: usize },
+    /// One replicated output write of key range `range` completed
     /// (§4.6.5).
-    OutputWritten { reducer: usize },
+    OutputWritten { range: usize },
 }
 
 struct Entry<E> {

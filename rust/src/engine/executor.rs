@@ -27,6 +27,21 @@
 //!   requires application-level changes (Verma et al. [28], §3.1.4) and
 //!   is treated as Local by the engine (the *model* supports it).
 //!
+//! **Reduce is restartable**: every shuffle transfer is recorded in a
+//! transfer table (source node, key range, payload, bytes), and each key
+//! range has a current *owner* reducer (identity until a failure moves
+//! it). When a reducer fails ([`super::dynamics::DynEvent::ReducerFail`])
+//! its in-flight transfers and running reduce compute are cancelled
+//! deterministically, delivered-but-unreduced bytes are de-credited, and
+//! the scheduler is asked per orphaned range for a surviving adopter
+//! ([`Scheduler::reassign_reduce`]) — plan-enforcing policies decline and
+//! the range waits for recovery instead. Lost transfers are replayed
+//! from their originating mappers (map outputs are durable until job
+//! end, as in Hadoop) and the range's reduce re-executes from scratch;
+//! `metrics.reduce_bytes_replayed` accounts the extra wire traffic. A
+//! range whose reduce *compute* has completed is durable — a later
+//! failure of its owner cannot lose it.
+//!
 //! The engine executes the *real* map/reduce functions on real records —
 //! byte counts, skew and record conservation are genuine — while time is
 //! virtual (charged from the topology's bandwidths/compute rates).
@@ -39,7 +54,7 @@ use super::fluid::{ActivityId, FluidSim, ResourceId};
 use super::job::{batch_size, JobConfig, MapReduceApp, Record};
 use super::metrics::JobMetrics;
 use super::partitioner::Partitioner;
-use super::scheduler::{self, NodeId, RunningTask, SchedView, Scheduler};
+use super::scheduler::{self, NodeId, ReduceView, RunningTask, SchedView, Scheduler};
 use crate::model::barrier::Barrier;
 use crate::model::plan::Plan;
 use crate::platform::Topology;
@@ -74,6 +89,33 @@ struct MapTask {
     started_at: f64,
     /// Map outputs per reducer (filled when the task first runs).
     outputs: Option<Vec<Vec<Record>>>,
+}
+
+/// Lifecycle of one shuffle transfer (restartable reduce).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum XferState {
+    /// Waiting to be (re)sent — the owning reducer is down, or the data
+    /// was lost to a failure and a resend is pending.
+    Held,
+    /// On the wire to the range's current owner.
+    InFlight,
+    /// Delivered to the current owner and still credited.
+    Delivered,
+}
+
+/// One mapper→reducer shuffle transfer, kept until job end so a reducer
+/// failure can replay it (map outputs are durable, like Hadoop's).
+struct ShuffleXfer {
+    /// Node the map output lives on (exec node of the producing task).
+    from: NodeId,
+    /// Key range (the *plan's* reducer index; ownership may move).
+    range: usize,
+    records: Vec<Record>,
+    bytes: f64,
+    state: XferState,
+    /// Whether this transfer has ever been put on the wire — resends of
+    /// a sent transfer are replay traffic, first sends are not.
+    sent_once: bool,
 }
 
 /// Run one job; returns metrics plus the final output records per reducer.
@@ -122,8 +164,26 @@ struct Executor<'a> {
     maps_left: usize,
     maps_left_per_node: Vec<usize>,
     shuffle_xfers_left: Vec<usize>,
-    /// Intermediate records delivered to each reducer.
-    reducer_inbox: Vec<Vec<Record>>,
+    /// Every shuffle transfer ever emitted (indexed by the `xfer` id in
+    /// [`EngineEvent::ShuffleArrived`]); payloads are retained until job
+    /// end so reducer failures can replay them.
+    xfers: Vec<ShuffleXfer>,
+    /// Transfer ids per key range, in creation order (so reduce input
+    /// gathering touches only the range's own transfers instead of
+    /// scanning the whole table).
+    range_xfers: Vec<Vec<usize>>,
+    /// Cached total input bytes per key range.
+    range_bytes: Vec<f64>,
+    /// Physical reducer currently owning each key range (identity until a
+    /// failure reassigns a range to a survivor).
+    range_owner: Vec<NodeId>,
+    /// Liveness of each reducer node.
+    reducer_up: Vec<bool>,
+    /// In-flight reduce compute per range (cancelled on owner failure).
+    range_compute: Vec<Option<ActivityId>>,
+    /// Reduce compute finished per range — the durability point: from
+    /// here a failure of the owner can no longer lose the range's work.
+    reduce_compute_done: Vec<bool>,
     /// Map outputs parked until the shuffle may start (barrier).
     /// Keyed by (home node, exec node): the Local barrier gates on the
     /// home node's queue, while the shuffle transfer originates at the
@@ -202,7 +262,13 @@ impl<'a> Executor<'a> {
             maps_left: 0,
             maps_left_per_node: vec![0; m],
             shuffle_xfers_left: vec![0; r],
-            reducer_inbox: vec![Vec::new(); r],
+            xfers: Vec::new(),
+            range_xfers: vec![Vec::new(); r],
+            range_bytes: vec![0.0; r],
+            range_owner: (0..r).collect(),
+            reducer_up: vec![true; r],
+            range_compute: vec![None; r],
+            reduce_compute_done: vec![false; r],
             parked_outputs: Vec::new(),
             reduce_started: vec![false; r],
             reduce_done: vec![false; r],
@@ -620,19 +686,63 @@ impl<'a> Executor<'a> {
                 continue;
             }
             let bytes = batch_size(&recs) as f64;
-            self.reducer_inbox[k].extend(recs);
-            let a = self.sim.add_activity(
+            let id = self.xfers.len();
+            self.xfers.push(ShuffleXfer {
+                from: from_node,
+                range: k,
+                records: recs,
                 bytes,
-                vec![
-                    self.mr_link[from_node][k],
-                    self.map_egress[from_node],
-                    self.red_ingress[k],
-                ],
-            );
-            self.pending.insert(a, EngineEvent::ShuffleArrived { reducer: k });
+                state: XferState::Held,
+                sent_once: false,
+            });
+            self.range_xfers[k].push(id);
+            self.range_bytes[k] += bytes;
             self.shuffle_xfers_left[k] += 1;
             self.metrics.shuffle_bytes += bytes;
+            self.send_xfer(id);
         }
+    }
+
+    /// Put transfer `id` on the wire to its range's current owner. If the
+    /// owner is down the transfer stays `Held` — it is resent when the
+    /// owner recovers or the range is adopted by a survivor. Resends of a
+    /// previously sent transfer are replay traffic.
+    fn send_xfer(&mut self, id: usize) {
+        let range = self.xfers[id].range;
+        let owner = self.range_owner[range];
+        if !self.reducer_up[owner] {
+            self.xfers[id].state = XferState::Held;
+            return;
+        }
+        let from = self.xfers[id].from;
+        let bytes = self.xfers[id].bytes;
+        let a = self.sim.add_activity(
+            bytes,
+            vec![self.mr_link[from][owner], self.map_egress[from], self.red_ingress[owner]],
+        );
+        self.pending.insert(a, EngineEvent::ShuffleArrived { xfer: id });
+        self.xfers[id].state = XferState::InFlight;
+        if self.xfers[id].sent_once {
+            self.metrics.reduce_bytes_replayed += bytes;
+        }
+        self.xfers[id].sent_once = true;
+    }
+
+    /// Move range `k`'s payloads out of the transfer table, concatenated
+    /// in transfer order — the same accumulation order the
+    /// pre-restartable engine used, so the static path is unchanged.
+    /// Only called past the range's durability point
+    /// (`reduce_compute_done`), after which no failure path can ever
+    /// need to replay these records again, so moving (not cloning) is
+    /// safe and keeps the memory profile of the old move-based inbox.
+    fn take_range_input(&mut self, k: usize) -> Vec<Record> {
+        debug_assert!(self.reduce_compute_done[k], "input taken before durability");
+        let mut recs = Vec::new();
+        for i in 0..self.range_xfers[k].len() {
+            let id = self.range_xfers[k][i];
+            recs.append(&mut self.xfers[id].records);
+        }
+        recs
     }
 
     /// All maps done and all shuffle transfers delivered?
@@ -649,12 +759,16 @@ impl<'a> Executor<'a> {
 
     fn maybe_start_reduces(&mut self) {
         let r = self.topo.n_reducers();
-        // Shuffle/reduce barrier: Local (Hadoop default) starts reducer k
-        // when its own inbox is complete; Global waits for every reducer.
-        // Pipelined is treated as Local (see module docs).
+        // Shuffle/reduce barrier: Local (Hadoop default) starts range k
+        // when its own transfers are all delivered; Global waits for
+        // every range. Pipelined is treated as Local (see module docs).
         let global = self.config.barriers.shuffle_reduce == Barrier::Global;
         for k in 0..r {
-            if self.reduce_started[k] || self.reduce_slots_free[k] == 0 {
+            let owner = self.range_owner[k];
+            if self.reduce_started[k]
+                || !self.reducer_up[owner]
+                || self.reduce_slots_free[owner] == 0
+            {
                 continue;
             }
             let mine_done = self.maps_left == 0 && self.shuffle_xfers_left[k] == 0;
@@ -665,14 +779,35 @@ impl<'a> Executor<'a> {
         }
     }
 
+    /// Start (or restart, after a failure) the reduce of key range `k` on
+    /// its current owner. The real reduce function runs at compute
+    /// *completion* ([`Executor::on_reduce_compute_done`]) — a failed
+    /// attempt therefore needs no output/metric rollback, it simply never
+    /// produced anything.
     fn start_reduce(&mut self, k: usize) {
+        let owner = self.range_owner[k];
         self.reduce_started[k] = true;
-        self.reduce_slots_free[k] -= 1;
+        self.reduce_slots_free[owner] -= 1;
         self.metrics.n_reduce_tasks += 1;
+        // Cached exact-integer byte total — equals the old `batch_size`
+        // of the concatenated inbox.
+        let in_bytes = self.range_bytes[k];
+        let work = in_bytes * self.app.reduce_cost_factor();
+        let a = self.sim.add_activity(work.max(1.0), vec![self.red_compute[owner]]);
+        self.pending.insert(a, EngineEvent::ReduceFinished { range: k });
+        self.range_compute[k] = Some(a);
+        self.writes_left[k] = 0;
+    }
+
+    fn on_reduce_compute_done(&mut self, k: usize) {
+        let owner = self.range_owner[k];
+        self.reduce_compute_done[k] = true;
+        self.range_compute[k] = None;
+        // Free the slot so a survivor can adopt further orphaned ranges.
+        self.reduce_slots_free[owner] += 1;
         // Sort by full key (SortComparator), group by group_key
         // (GroupingComparator), run the real reduce function.
-        let mut inbox = std::mem::take(&mut self.reducer_inbox[k]);
-        let in_bytes = batch_size(&inbox) as f64;
+        let mut inbox = self.take_range_input(k);
         inbox.sort();
         let mut outs: Vec<Record> = Vec::new();
         let mut idx = 0;
@@ -689,18 +824,9 @@ impl<'a> Executor<'a> {
         let out_bytes = batch_size(&outs) as f64;
         self.outputs[k] = outs;
         self.metrics.output_bytes += out_bytes;
-
-        let work = in_bytes * self.app.reduce_cost_factor();
-        let a = self.sim.add_activity(work.max(1.0), vec![self.red_compute[k]]);
-        self.pending.insert(a, EngineEvent::ReduceFinished { reducer: k });
-        self.writes_left[k] = 0;
-    }
-
-    fn on_reduce_compute_done(&mut self, k: usize) {
         // Output materialization to the distributed file system with
         // replication (§4.6.5): repl−1 wide-area copies.
         let repl = self.config.replication.max(1);
-        let out_bytes = batch_size(&self.outputs[k]) as f64;
         if repl > 1 && out_bytes > 0.0 {
             let r = self.topo.n_reducers();
             for extra in 1..repl {
@@ -709,11 +835,11 @@ impl<'a> Executor<'a> {
                 let a = self.sim.add_activity(
                     out_bytes,
                     vec![
-                        self.mr_link[target.min(self.topo.n_mappers() - 1)][k],
+                        self.mr_link[target.min(self.topo.n_mappers() - 1)][owner],
                         self.red_ingress[target],
                     ],
                 );
-                self.pending.insert(a, EngineEvent::OutputWritten { reducer: k });
+                self.pending.insert(a, EngineEvent::OutputWritten { range: k });
                 self.writes_left[k] += 1;
                 self.metrics.output_bytes += out_bytes;
             }
@@ -721,6 +847,10 @@ impl<'a> Executor<'a> {
         if self.writes_left[k] == 0 {
             self.finish_reduce(k);
         }
+        // The freed slot may unblock another range adopted by this owner
+        // (a survivor can hold several orphaned ranges but drains them
+        // one slot at a time). No-op in static runs.
+        self.maybe_start_reduces();
     }
 
     fn finish_reduce(&mut self, k: usize) {
@@ -768,6 +898,14 @@ impl<'a> Executor<'a> {
                     self.recover_mapper(node);
                     true
                 }
+                DynEvent::ReducerFail { node } if node < r => {
+                    self.fail_reducer(node);
+                    true
+                }
+                DynEvent::ReducerRecover { node } if node < r => {
+                    self.recover_reducer(node);
+                    true
+                }
                 DynEvent::MapperSlowdown { node, factor } if node < m => {
                     self.sim.set_capacity(self.map_compute[node], self.topo.c_map[node] * factor);
                     true
@@ -782,6 +920,8 @@ impl<'a> Executor<'a> {
                 DynEvent::MapperFail { .. }
                 | DynEvent::MapperRecover { .. }
                 | DynEvent::MapperSlowdown { .. }
+                | DynEvent::ReducerFail { .. }
+                | DynEvent::ReducerRecover { .. }
                 | DynEvent::ReducerSlowdown { .. } => false,
             };
             if effective {
@@ -910,6 +1050,165 @@ impl<'a> Executor<'a> {
         self.map_slots_free[node] = self.config.map_slots;
     }
 
+    /// Reducer `node` fails (see the module docs for the lifecycle):
+    /// cancel its in-flight shuffle/reduce activities deterministically,
+    /// de-credit delivered-but-unreduced data, and ask the scheduler to
+    /// re-partition each orphaned key range onto a survivor. Ranges whose
+    /// reduce compute already finished are durable and unaffected.
+    fn fail_reducer(&mut self, node: NodeId) {
+        if !self.reducer_up[node] {
+            return;
+        }
+        self.reducer_up[node] = false;
+        self.metrics.failures_injected += 1;
+        self.metrics.reducers_failed += 1;
+        let r = self.topo.n_reducers();
+
+        // 1. Cancel doomed in-flight activities in sorted ActivityId
+        //    order (`pending` is a HashMap; iteration order must not leak
+        //    into simulation behavior).
+        let mut doomed: Vec<(ActivityId, EngineEvent)> = self
+            .pending
+            .iter()
+            .filter(|&(_, &ev)| match ev {
+                EngineEvent::ShuffleArrived { xfer } => {
+                    self.range_owner[self.xfers[xfer].range] == node
+                        && self.xfers[xfer].state == XferState::InFlight
+                }
+                EngineEvent::ReduceFinished { range } => {
+                    self.range_owner[range] == node && !self.reduce_compute_done[range]
+                }
+                _ => false,
+            })
+            .map(|(&a, &ev)| (a, ev))
+            .collect();
+        doomed.sort_by_key(|&(a, _)| a);
+        for (aid, ev) in doomed {
+            self.sim.cancel(aid);
+            self.pending.remove(&aid);
+            match ev {
+                EngineEvent::ShuffleArrived { xfer } => {
+                    self.xfers[xfer].state = XferState::Held;
+                }
+                EngineEvent::ReduceFinished { range } => {
+                    // Partial reduce progress is lost; the range restarts
+                    // from scratch once its input is back in place.
+                    self.range_compute[range] = None;
+                    self.reduce_started[range] = false;
+                }
+                _ => unreachable!("doomed set only holds shuffle/reduce events"),
+            }
+        }
+
+        // 2. Data already delivered to the dead node for unreduced ranges
+        //    died with its disk: de-credit and mark for resend (touching
+        //    only the affected ranges' transfer lists).
+        let mut lost_any = false;
+        for k in 0..r {
+            if self.range_owner[k] != node || self.reduce_compute_done[k] {
+                continue;
+            }
+            for i in 0..self.range_xfers[k].len() {
+                let id = self.range_xfers[k][i];
+                if self.xfers[id].state == XferState::Delivered {
+                    self.xfers[id].state = XferState::Held;
+                    self.metrics.shuffle_bytes_delivered -= self.xfers[id].bytes;
+                    self.shuffle_xfers_left[k] += 1;
+                    lost_any = true;
+                }
+            }
+        }
+        if lost_any && self.all_shuffles_done {
+            // Re-open the shuffle phase so the Global shuffle/reduce
+            // barrier re-gates on the replayed deliveries.
+            self.all_shuffles_done = false;
+        }
+
+        // 3. Re-partition each orphaned range via the scheduler (ascending
+        //    range order for determinism). Outstanding-bytes bookkeeping
+        //    lets the policy spread successive adoptions. Capacities are
+        //    the *current* fluid-sim rates, not the topology base, so an
+        //    actively slowed straggler (ReducerSlowdown in effect) does
+        //    not win the adoption tie-break on its nominal speed.
+        let capacity: Vec<f64> =
+            (0..r).map(|k| self.sim.capacity(self.red_compute[k])).collect();
+        let mut assigned = vec![0.0f64; r];
+        for k in 0..r {
+            if !self.reduce_compute_done[k] {
+                assigned[self.range_owner[k]] += self.range_bytes[k];
+            }
+        }
+        for k in 0..r {
+            if self.range_owner[k] != node || self.reduce_compute_done[k] {
+                continue;
+            }
+            let choice = {
+                let view = ReduceView {
+                    dead: node,
+                    up: &self.reducer_up,
+                    cluster: &self.topo.reducer_cluster,
+                    capacity: &capacity,
+                    assigned_bytes: &assigned,
+                };
+                self.scheduler.reassign_reduce(&view)
+            };
+            // Enforce the contract rather than trust the policy: the
+            // adopter must be a live reducer other than the dead one.
+            if let Some(new_owner) = choice {
+                if new_owner != node && new_owner < r && self.reducer_up[new_owner] {
+                    self.range_owner[k] = new_owner;
+                    assigned[node] -= self.range_bytes[k];
+                    assigned[new_owner] += self.range_bytes[k];
+                    self.metrics.reduce_ranges_reassigned += 1;
+                    // Replay the range's held transfers to the adopter.
+                    self.resend_held(k);
+                }
+            }
+            // No adopter (plan enforcement / no survivor): the range and
+            // its held transfers wait for the node's recovery.
+        }
+
+        // 4. Close the dead node's reduce slots until recovery.
+        self.reduce_slots_free[node] = 0;
+        // Adopted zero-transfer ranges may be immediately startable.
+        self.maybe_start_reduces();
+    }
+
+    /// Reducer `node` recovers with every reduce slot free (its work was
+    /// evicted at failure time and nothing could start there since).
+    /// Transfers still targeting ranges it kept through the outage are
+    /// resent.
+    fn recover_reducer(&mut self, node: NodeId) {
+        if self.reducer_up[node] {
+            return;
+        }
+        self.reducer_up[node] = true;
+        self.reduce_slots_free[node] = self.config.reduce_slots;
+        // Resend held transfers for ranges this node kept through the
+        // outage (range then transfer-id order — deterministic).
+        for k in 0..self.topo.n_reducers() {
+            if self.range_owner[k] == node {
+                self.resend_held(k);
+            }
+        }
+        self.maybe_start_reduces();
+    }
+
+    /// Resend range `k`'s held transfers to its current owner, in
+    /// transfer-id (creation) order — deterministic. Shared by the
+    /// adoption and recovery paths so their replay behavior can never
+    /// diverge.
+    fn resend_held(&mut self, k: usize) {
+        let held: Vec<usize> = self.range_xfers[k]
+            .iter()
+            .copied()
+            .filter(|&id| self.xfers[id].state == XferState::Held)
+            .collect();
+        for id in held {
+            self.send_xfer(id);
+        }
+    }
+
     /// Dispatch one engine event (popped from the heap in virtual-time
     /// order).
     fn dispatch(&mut self, ev: EngineEvent) {
@@ -958,19 +1257,22 @@ impl<'a> Executor<'a> {
             EngineEvent::MapFinished { task, speculative } => {
                 self.on_map_done(task, speculative);
             }
-            EngineEvent::ShuffleArrived { reducer } => {
-                self.shuffle_xfers_left[reducer] -= 1;
+            EngineEvent::ShuffleArrived { xfer } => {
+                let range = self.xfers[xfer].range;
+                self.xfers[xfer].state = XferState::Delivered;
+                self.metrics.shuffle_bytes_delivered += self.xfers[xfer].bytes;
+                self.shuffle_xfers_left[range] -= 1;
                 self.metrics.shuffle_end = self.sim.now();
                 self.maybe_finish_shuffle_phase();
                 self.maybe_start_reduces();
             }
-            EngineEvent::ReduceFinished { reducer } => {
-                self.on_reduce_compute_done(reducer);
+            EngineEvent::ReduceFinished { range } => {
+                self.on_reduce_compute_done(range);
             }
-            EngineEvent::OutputWritten { reducer } => {
-                self.writes_left[reducer] -= 1;
-                if self.writes_left[reducer] == 0 {
-                    self.finish_reduce(reducer);
+            EngineEvent::OutputWritten { range } => {
+                self.writes_left[range] -= 1;
+                if self.writes_left[range] == 0 {
+                    self.finish_reduce(range);
                 }
             }
         }

@@ -26,10 +26,26 @@ pub struct JobMetrics {
     pub stolen: usize,
     /// Dynamics events applied from the scenario trace.
     pub dyn_events: usize,
-    /// Node failures injected (recoveries are not counted).
+    /// Node failures injected, mapper and reducer (recoveries are not
+    /// counted).
     pub failures_injected: usize,
     /// Map tasks evicted by a node failure and re-queued.
     pub tasks_requeued: usize,
+    /// Reducer failures injected.
+    pub reducers_failed: usize,
+    /// Key ranges adopted by a surviving reducer after a failure
+    /// (plan-enforcing schedulers decline and wait for recovery instead).
+    pub reduce_ranges_reassigned: usize,
+    /// Shuffle bytes re-sent because a reducer failure lost them (the
+    /// replay traffic on top of `shuffle_bytes`).
+    pub reduce_bytes_replayed: f64,
+    /// Shuffle bytes currently *credited* as delivered: incremented on
+    /// delivery, de-credited when a reducer failure loses data that had
+    /// already arrived. At job end every unique shuffle byte is credited
+    /// exactly once, so `shuffle_bytes_delivered == shuffle_bytes` — the
+    /// byte-conservation invariant property-tested in tests/dynamics.rs
+    /// (total wire traffic is `shuffle_bytes + reduce_bytes_replayed`).
+    pub shuffle_bytes_delivered: f64,
     /// Input / intermediate / output record counts (conservation checks).
     pub input_records: usize,
     pub intermediate_records: usize,

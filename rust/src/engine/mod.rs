@@ -12,10 +12,12 @@
 //!   dynamic (stealing + speculation, §4.6.4) policies, including
 //!   locality-aware stealing;
 //! * [`dynamics`] — seeded scenario traces injecting time-varying
-//!   bandwidth, node failures/recoveries and compute stragglers;
+//!   bandwidth, mapper *and reducer* failures/recoveries and compute
+//!   stragglers (see the reducer-failure lifecycle in the module docs);
 //! * [`executor`] — the thin orchestrator driving push/map/shuffle/
-//!   reduce as events over the pieces above, re-queuing work lost to
-//!   injected failures.
+//!   reduce as events over the pieces above, re-queuing map work lost to
+//!   injected failures and replaying/re-partitioning reduce work via the
+//!   retained shuffle-transfer table (restartable reduce).
 
 pub mod dynamics;
 pub mod events;

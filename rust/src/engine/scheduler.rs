@@ -66,6 +66,30 @@ pub struct SchedView<'a> {
     pub up: &'a [bool],
 }
 
+/// Read-only snapshot for re-partitioning a dead reducer's outstanding
+/// key range (restartable reduce). All slices are indexed by physical
+/// reducer id.
+#[derive(Debug, Clone, Copy)]
+pub struct ReduceView<'a> {
+    /// The failed reducer whose key range needs a new home.
+    pub dead: NodeId,
+    /// Liveness of each reducer.
+    pub up: &'a [bool],
+    /// Cluster (data-center site) of each reducer — the locality signal:
+    /// adopting within the dead reducer's cluster keeps the replayed
+    /// shuffle re-fetch mostly on the LAN.
+    pub cluster: &'a [usize],
+    /// *Current effective* reducer compute capacity (input bytes/s) —
+    /// the executor passes the live fluid-sim rates, so an actively
+    /// slowed straggler doesn't win an adoption on its nominal speed.
+    pub capacity: &'a [f64],
+    /// Outstanding (not yet reduced) shuffle bytes currently assigned to
+    /// each reducer — own range plus ranges already adopted. Lets a
+    /// policy spread successive adoptions instead of piling every
+    /// orphaned range on one survivor.
+    pub assigned_bytes: &'a [f64],
+}
+
 /// A placement decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Assignment {
@@ -98,6 +122,18 @@ pub trait Scheduler: Send {
     fn may_speculate(&self, n_duration_samples: usize) -> bool {
         let _ = n_duration_samples;
         false
+    }
+
+    /// Pick a surviving reducer to adopt a dead reducer's outstanding key
+    /// range, or `None` to leave the range waiting for recovery. The
+    /// executor then replays the lost shuffle transfers to the returned
+    /// node and re-runs the range's reduce there. The default — strict
+    /// plan enforcement — declines: the paper's statically enforced plans
+    /// have no recovery path, which is exactly the fragility the hedged
+    /// optimizer prices in.
+    fn reassign_reduce(&mut self, view: &ReduceView) -> Option<NodeId> {
+        let _ = view;
+        None
     }
 }
 
@@ -328,6 +364,34 @@ impl Scheduler for DynamicScheduler {
         }
         out
     }
+
+    /// Adopt the orphaned range on a survivor: in locality mode a
+    /// reducer in the dead node's cluster wins first (the replayed
+    /// re-fetch stays on the LAN); within the preferred group the
+    /// least-loaded survivor is chosen, then the fastest, then the lowest
+    /// index for determinism. Stealing-disabled configurations keep the
+    /// plan-enforcing behavior (wait for recovery).
+    fn reassign_reduce(&mut self, view: &ReduceView) -> Option<NodeId> {
+        if !self.stealing {
+            return None;
+        }
+        (0..view.up.len())
+            .filter(|&k| k != view.dead && view.up[k])
+            .min_by(|&a, &b| {
+                if self.locality {
+                    let la = view.cluster[a] == view.cluster[view.dead];
+                    let lb = view.cluster[b] == view.cluster[view.dead];
+                    if la != lb {
+                        // Same-cluster survivors sort first.
+                        return lb.cmp(&la);
+                    }
+                }
+                view.assigned_bytes[a]
+                    .total_cmp(&view.assigned_bytes[b])
+                    .then(view.capacity[b].total_cmp(&view.capacity[a]))
+                    .then(a.cmp(&b))
+            })
+    }
 }
 
 /// The scheduler implied by a [`JobConfig`] (§4.6.1 presets): strict plan
@@ -557,6 +621,48 @@ mod tests {
         let a = s.assign(&v);
         assert_eq!(a.len(), 1);
         assert_eq!(a[0].node, 1, "stranded work is stolen over WAN");
+    }
+
+    #[test]
+    fn reassign_reduce_policies() {
+        // Reducer 1 dead; 0 and 2 share its cluster, 3 is remote but
+        // fastest and empty.
+        let up = [true, false, true, true];
+        let cluster = [0, 0, 0, 1];
+        let capacity = [5.0, 9.0, 4.0, 20.0];
+        let assigned = [10.0, 0.0, 2.0, 0.0];
+        let v = ReduceView {
+            dead: 1,
+            up: &up,
+            cluster: &cluster,
+            capacity: &capacity,
+            assigned_bytes: &assigned,
+        };
+        // Strict plan enforcement waits for recovery.
+        assert_eq!(PlanLocalScheduler.reassign_reduce(&v), None);
+        // Stealing-disabled dynamic config also waits.
+        assert_eq!(DynamicScheduler::new(false, true).reassign_reduce(&v), None);
+        // Cluster-oblivious dynamic: least-loaded survivor anywhere.
+        assert_eq!(DynamicScheduler::new(true, false).reassign_reduce(&v), Some(3));
+        // Locality: the least-loaded same-cluster survivor wins even
+        // though node 3 is faster and emptier.
+        let mut s = DynamicScheduler::new(true, false).with_locality();
+        assert_eq!(s.reassign_reduce(&v), Some(2));
+        // No survivor at all → None.
+        let none_up = [false, false, false, false];
+        let v = ReduceView { up: &none_up, ..v };
+        assert_eq!(s.reassign_reduce(&v), None);
+        // Ties on load resolve to the faster, then lower-index node.
+        let even = [1.0, 0.0, 1.0, 1.0];
+        let v = ReduceView {
+            dead: 1,
+            up: &up,
+            cluster: &[0, 0, 0, 0],
+            capacity: &capacity,
+            assigned_bytes: &even,
+        };
+        let mut s = DynamicScheduler::new(true, false);
+        assert_eq!(s.reassign_reduce(&v), Some(3), "fastest survivor breaks the load tie");
     }
 
     #[test]

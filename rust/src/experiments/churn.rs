@@ -17,25 +17,41 @@
 //! within the cluster, over the WAN only when justified — and degrades
 //! far less.
 //!
+//! `--profiles all` switches to the **matrix** form: every dynamics
+//! profile × {plan-local, dynamic, dynamic+locality, hedged} at the
+//! requested size, tabulating makespan degradation, replay bytes and
+//! recovery counters. The `hedged` row executes a
+//! [`FailureAwareOptimizer`] plan (`--hedge RATE`) under the *same*
+//! strict plan-local enforcement as the first row — isolating what
+//! failure-aware *planning* buys without any runtime adaptivity — and
+//! under a failure-bearing trace it beats the unhedged plan-local row
+//! because far less key-range mass strands on the dead reducers.
+//!
 //! [`DynamicScheduler`]: crate::engine::scheduler::DynamicScheduler
 //! [`PlanLocalScheduler`]: crate::engine::scheduler::PlanLocalScheduler
+//! [`FailureAwareOptimizer`]: crate::optimizer::FailureAwareOptimizer
 
 use crate::apps::SyntheticApp;
 use crate::engine::dynamics::{self, DynProfile, ScenarioTrace, TraceShape};
-use crate::engine::job::{batch_size, JobConfig};
+use crate::engine::job::{batch_size, JobConfig, Record};
 use crate::engine::run_job;
 use crate::experiments::common::synthetic_inputs;
 use crate::model::barrier::BarrierConfig;
 use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
 use crate::experiments::scale::SWEEP_NODES;
-use crate::optimizer::{AlternatingLp, PlanOptimizer};
+use crate::optimizer::{AlternatingLp, FailureAwareOptimizer, PlanOptimizer};
 use crate::platform::scale::{generate, parse_spec_config, ScaleConfig};
-use crate::platform::ScaleKind;
+use crate::platform::{ScaleKind, Topology};
 use crate::util::table::Table;
 
 /// Defaults for `mrperf experiment churn` (and `experiment all`).
 pub const DEFAULT_GEN: &str = "hier-wan:256";
 pub const DEFAULT_DYNAMICS: &str = "burst:7";
+
+/// Default hedge rate for the matrix's `hedged` row when `--hedge` is
+/// not given (a 5% expected reducer unavailability).
+pub const DEFAULT_HEDGE: f64 = 0.05;
 
 /// Input volume per source: larger than the scale sweep's so the map
 /// phase spans enough of the run for mid-run failures to matter.
@@ -63,6 +79,9 @@ pub struct ChurnCell {
     pub requeued: usize,
     pub stolen: usize,
     pub spec_launched: usize,
+    pub reducers_failed: usize,
+    pub ranges_reassigned: usize,
+    pub replay_bytes: f64,
 }
 
 impl ChurnCell {
@@ -96,6 +115,38 @@ pub fn run_cells(gen_spec: &str, dyn_spec: &str) -> Result<Vec<ChurnCell>, Strin
     run_cells_at(&base, profile, trace_seed, &sweep_sizes(base.nodes))
 }
 
+/// Shared per-size setup — both the single-profile sweep and the
+/// `--profiles all` matrix build their cells from exactly this, so the
+/// matrix's `plan-local` row is the same scenario as the single-profile
+/// table's.
+struct CellSetup {
+    topo: Topology,
+    inputs: Vec<Vec<Record>>,
+    /// The unhedged end-to-end plan.
+    plan: Plan,
+    sapp: SyntheticApp,
+    app: AppModel,
+    bc: BarrierConfig,
+}
+
+fn cell_setup(base: &ScaleConfig, nodes: usize) -> CellSetup {
+    let app = AppModel::new(1.0);
+    let bc = BarrierConfig::HADOOP;
+    let gen = generate(&ScaleConfig::new(base.kind, nodes).seed(base.seed));
+    let inputs = synthetic_inputs(gen.n_sources(), CHURN_BYTES_PER_SOURCE, 0x5CA1E);
+    // Evaluate the model (and thus the optimizer) on the volume the
+    // engine will actually simulate (the fig4 idiom).
+    let mean_bytes =
+        inputs.iter().map(|v| batch_size(v) as f64).sum::<f64>() / gen.n_sources() as f64;
+    let topo = gen.with_uniform_data(mean_bytes);
+    let plan = AlternatingLp::default().optimize(&topo, app, bc);
+    // α = 1 keeps the fractional-emission accumulator exact (safe to
+    // reuse one instance across runs); the map-cost factor makes the
+    // workload compute-bound (see CHURN_MAP_COST).
+    let sapp = SyntheticApp::new(1.0).with_costs(CHURN_MAP_COST, 2.0);
+    CellSetup { topo, inputs, plan, sapp, app, bc }
+}
+
 /// Inner driver over explicit sizes (tests cap the size so debug builds
 /// stay quick; the experiment runs the full range).
 pub fn run_cells_at(
@@ -104,22 +155,9 @@ pub fn run_cells_at(
     trace_seed: u64,
     sizes: &[usize],
 ) -> Result<Vec<ChurnCell>, String> {
-    let app = AppModel::new(1.0);
-    let bc = BarrierConfig::HADOOP;
     let mut cells = Vec::new();
     for &nodes in sizes {
-        let gen = generate(&ScaleConfig::new(base.kind, nodes).seed(base.seed));
-        let inputs = synthetic_inputs(gen.n_sources(), CHURN_BYTES_PER_SOURCE, 0x5CA1E);
-        // Evaluate the model (and thus the optimizer) on the volume the
-        // engine will actually simulate (the fig4 idiom).
-        let mean_bytes = inputs.iter().map(|v| batch_size(v) as f64).sum::<f64>()
-            / gen.n_sources() as f64;
-        let topo = gen.with_uniform_data(mean_bytes);
-        let plan = AlternatingLp::default().optimize(&topo, app, bc);
-        // α = 1 keeps the fractional-emission accumulator exact (safe to
-        // reuse one instance across runs); the map-cost factor makes the
-        // workload compute-bound (see CHURN_MAP_COST).
-        let sapp = SyntheticApp::new(1.0).with_costs(CHURN_MAP_COST, 2.0);
+        let CellSetup { topo, inputs, plan, sapp, .. } = cell_setup(base, nodes);
 
         // Static plan-local makespan anchors the trace horizon: every
         // scheduler row of this cell sees identical event times. The same
@@ -152,6 +190,9 @@ pub fn run_cells_at(
                 requeued: m.tasks_requeued,
                 stolen: m.stolen,
                 spec_launched: m.spec_launched,
+                reducers_failed: m.reducers_failed,
+                ranges_reassigned: m.reduce_ranges_reassigned,
+                replay_bytes: m.reduce_bytes_replayed,
             });
         }
     }
@@ -178,6 +219,9 @@ pub fn run_with(gen_spec: &str, dyn_spec: &str) -> Result<Vec<Table>, String> {
             "requeued",
             "stolen",
             "spec",
+            "red-fail",
+            "adopted",
+            "replay (KB)",
         ],
     );
     for c in &cells {
@@ -193,6 +237,9 @@ pub fn run_with(gen_spec: &str, dyn_spec: &str) -> Result<Vec<Table>, String> {
             c.requeued.to_string(),
             c.stolen.to_string(),
             c.spec_launched.to_string(),
+            c.reducers_failed.to_string(),
+            c.ranges_reassigned.to_string(),
+            format!("{:.1}", c.replay_bytes / 1e3),
         ]);
     }
     Ok(vec![t])
@@ -202,6 +249,150 @@ pub fn run_with(gen_spec: &str, dyn_spec: &str) -> Result<Vec<Table>, String> {
 /// `mrperf experiment all`).
 pub fn run() -> Vec<Table> {
     run_with(DEFAULT_GEN, DEFAULT_DYNAMICS).expect("default churn specs are valid")
+}
+
+// ------------------------------------------------------ profile matrix
+
+/// One cell of the `--profiles all` matrix.
+#[derive(Debug, Clone)]
+pub struct MatrixCell {
+    pub profile: DynProfile,
+    /// Execution mode: `plan-local` | `dynamic` | `dynamic+locality` |
+    /// `hedged` (hedged plan under plan-local enforcement).
+    pub mode: &'static str,
+    pub static_makespan: f64,
+    pub churn_makespan: f64,
+    pub dyn_events: usize,
+    pub failures: usize,
+    pub reducers_failed: usize,
+    pub requeued: usize,
+    pub stolen: usize,
+    pub ranges_reassigned: usize,
+    pub replay_bytes: f64,
+}
+
+impl MatrixCell {
+    pub fn degradation(&self) -> f64 {
+        self.churn_makespan / self.static_makespan - 1.0
+    }
+}
+
+/// The four execution modes of the matrix. The first three run the
+/// unhedged e2e plan; `hedged` runs the failure-aware plan under the same
+/// strict enforcement as `plan-local`, so the pairwise comparison
+/// isolates planning from runtime adaptivity.
+fn matrix_modes() -> [(&'static str, bool, JobConfig); 4] {
+    [
+        ("plan-local", false, JobConfig::optimized()),
+        ("dynamic", false, JobConfig::vanilla_hadoop()),
+        ("dynamic+locality", false, JobConfig::dynamic_locality()),
+        ("hedged", true, JobConfig::optimized()),
+    ]
+}
+
+/// Run the full profile × mode matrix at the spec's topology size. Every
+/// mode of a profile row sees the *same* trace (horizon anchored on the
+/// unhedged plan-local static run), so the whole matrix is deterministic
+/// given `(generator seed, trace seed, hedge)`.
+pub fn run_matrix_at(
+    base: &ScaleConfig,
+    trace_seed: u64,
+    hedge: f64,
+) -> Result<Vec<MatrixCell>, String> {
+    crate::optimizer::hedged::validate_hedge(hedge).map_err(|e| format!("--hedge: {e}"))?;
+    let CellSetup { topo, inputs, plan, sapp, app, bc } = cell_setup(base, base.nodes);
+    let hedged_plan = FailureAwareOptimizer::new(hedge).optimize(&topo, app, bc);
+
+    // Static baselines per mode; the unhedged plan-local one anchors the
+    // trace horizon for every row.
+    let statics: Vec<f64> = matrix_modes()
+        .iter()
+        .map(|(_, hedged, cfg)| {
+            let p = if *hedged { &hedged_plan } else { &plan };
+            run_job(&topo, p, &sapp, cfg, &inputs).metrics.makespan
+        })
+        .collect();
+    let horizon = statics[0].max(1e-9);
+
+    let mut cells = Vec::new();
+    for profile in DynProfile::all() {
+        let trace =
+            ScenarioTrace::generate(profile, trace_seed, &TraceShape::of(&topo, horizon));
+        for (idx, (mode, hedged, cfg)) in matrix_modes().into_iter().enumerate() {
+            let p = if hedged { &hedged_plan } else { &plan };
+            let churn_cfg = cfg.with_dynamics(trace.clone());
+            let m = run_job(&topo, p, &sapp, &churn_cfg, &inputs).metrics;
+            assert_eq!(
+                m.output_records, m.input_records,
+                "{mode} lost records under {profile:?}"
+            );
+            cells.push(MatrixCell {
+                profile,
+                mode,
+                static_makespan: statics[idx],
+                churn_makespan: m.makespan,
+                dyn_events: m.dyn_events,
+                failures: m.failures_injected,
+                reducers_failed: m.reducers_failed,
+                requeued: m.tasks_requeued,
+                stolen: m.stolen,
+                ranges_reassigned: m.reduce_ranges_reassigned,
+                replay_bytes: m.reduce_bytes_replayed,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the `--profiles all` matrix for explicit specs.
+pub fn run_matrix_with(
+    gen_spec: &str,
+    dyn_spec: &str,
+    hedge: f64,
+) -> Result<Vec<Table>, String> {
+    let base = parse_spec_config(gen_spec)?;
+    // The profile part of `--dynamics` is ignored in matrix form (all
+    // profiles run); the seed is honored.
+    let (_, trace_seed) = dynamics::parse_spec(dyn_spec)?;
+    let cells = run_matrix_at(&base, trace_seed, hedge)?;
+    let mut t = Table::new(
+        format!(
+            "churn matrix: every dynamics profile × execution mode \
+             (--gen {gen_spec} --dynamics seed {trace_seed} --hedge {hedge}) — \
+             the hedged row is the failure-aware plan under plan-local enforcement"
+        ),
+        &[
+            "profile",
+            "mode",
+            "static (s)",
+            "churn (s)",
+            "degradation",
+            "events",
+            "failures",
+            "red-fail",
+            "requeued",
+            "stolen",
+            "adopted",
+            "replay (KB)",
+        ],
+    );
+    for c in &cells {
+        t.add_row(vec![
+            c.profile.label().to_string(),
+            c.mode.to_string(),
+            format!("{:.4}", c.static_makespan),
+            format!("{:.4}", c.churn_makespan),
+            format!("{:+.1}%", c.degradation() * 100.0),
+            c.dyn_events.to_string(),
+            c.failures.to_string(),
+            c.reducers_failed.to_string(),
+            c.requeued.to_string(),
+            c.stolen.to_string(),
+            c.ranges_reassigned.to_string(),
+            format!("{:.1}", c.replay_bytes / 1e3),
+        ]);
+    }
+    Ok(vec![t])
 }
 
 #[cfg(test)]
@@ -220,13 +411,52 @@ mod tests {
             assert_eq!(x.scheduler, y.scheduler);
             assert_eq!(x.static_makespan.to_bits(), y.static_makespan.to_bits());
             assert_eq!(x.churn_makespan.to_bits(), y.churn_makespan.to_bits());
+            assert_eq!(x.replay_bytes.to_bits(), y.replay_bytes.to_bits());
             assert_eq!(
                 (x.dyn_events, x.failures, x.requeued, x.stolen, x.spec_launched),
                 (y.dyn_events, y.failures, y.requeued, y.stolen, y.spec_launched)
             );
+            assert_eq!(
+                (x.reducers_failed, x.ranges_reassigned),
+                (y.reducers_failed, y.ranges_reassigned)
+            );
         }
         // The trace must actually do something in this scenario.
         assert!(a.iter().all(|c| c.dyn_events > 0), "{a:?}");
+    }
+
+    /// The matrix form is deterministic and covers every profile × mode
+    /// combination; under the failures profile the reducer outages must
+    /// actually fire and the adaptive modes must adopt orphaned ranges.
+    #[test]
+    fn matrix_is_deterministic_and_covers_all_modes() {
+        let base = parse_spec_config("hier-wan:16").unwrap();
+        let a = run_matrix_at(&base, 7, 0.1).unwrap();
+        let b = run_matrix_at(&base, 7, 0.1).unwrap();
+        assert_eq!(a.len(), DynProfile::all().len() * 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.profile, x.mode), (y.profile, y.mode));
+            assert_eq!(x.churn_makespan.to_bits(), y.churn_makespan.to_bits());
+            assert_eq!(x.replay_bytes.to_bits(), y.replay_bytes.to_bits());
+        }
+        let failures: Vec<&MatrixCell> =
+            a.iter().filter(|c| c.profile == DynProfile::Failures).collect();
+        assert!(failures.iter().all(|c| c.reducers_failed > 0), "{failures:?}");
+        assert!(
+            failures
+                .iter()
+                .filter(|c| c.mode.starts_with("dynamic"))
+                .all(|c| c.ranges_reassigned > 0),
+            "adaptive modes must adopt the orphaned ranges: {failures:?}"
+        );
+    }
+
+    #[test]
+    fn matrix_rejects_bad_hedge() {
+        let base = parse_spec_config("hier-wan:16").unwrap();
+        assert!(run_matrix_at(&base, 7, 1.0).is_err());
+        assert!(run_matrix_at(&base, 7, f64::NAN).is_err());
+        assert!(run_matrix_with("hier-wan:16", "failures:7", -0.1).is_err());
     }
 
     #[test]

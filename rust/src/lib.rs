@@ -15,18 +15,23 @@
 //!   with the paper's piecewise-linear bilinear linearization (§2.3).
 //! * **[`optimizer`]** — the execution-plan optimizers the evaluation
 //!   compares: uniform, myopic, single-phase, end-to-end multi-phase
-//!   (alternating LP and PWL-MIP), and a gradient optimizer backed by the
-//!   AOT-compiled JAX/Pallas artifact via PJRT.
+//!   (alternating LP and PWL-MIP), a gradient optimizer backed by the
+//!   AOT-compiled JAX/Pallas artifact via PJRT, and a failure-aware
+//!   wrapper (`optimizer::hedged`) that re-solves the alternating LP
+//!   against a failure-discounted platform so plans hedge the shuffle
+//!   split against an expected reducer failure rate.
 //! * **[`engine`]** — a plan-enforcing MapReduce runtime (the paper's
 //!   modified Hadoop, §3.1) built as a discrete-event core: a max-min-
 //!   fair fluid simulation (`engine::fluid`), a virtual-clock event heap
 //!   (`engine::events`), pluggable scheduling policies covering strict
-//!   plan enforcement plus speculative execution and (locality-aware)
-//!   work stealing (`engine::scheduler`, §4.6.4), a seeded dynamics /
-//!   fault-injection layer (`engine::dynamics`: time-varying bandwidth,
-//!   node failures, stragglers), and a thin orchestrator
-//!   (`engine::executor`) driving push/map/shuffle/reduce as events and
-//!   re-queuing work lost to injected failures.
+//!   plan enforcement plus speculative execution, (locality-aware) work
+//!   stealing and reduce re-partitioning (`engine::scheduler`, §4.6.4),
+//!   a seeded dynamics / fault-injection layer (`engine::dynamics`:
+//!   time-varying bandwidth, mapper *and reducer* failures, stragglers),
+//!   and a thin orchestrator (`engine::executor`) driving push/map/
+//!   shuffle/reduce as events, re-queuing map work lost to injected
+//!   failures and replaying reduce work through a retained
+//!   shuffle-transfer table (restartable reduce).
 //! * **[`apps`]**/**[`data`]** — the evaluation applications (Word Count,
 //!   Sessionization, Full Inverted Index, synthetic-α) and seeded
 //!   workload generators.

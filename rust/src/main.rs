@@ -31,13 +31,15 @@ mrperf — geo-distributed MapReduce modeling, optimization & execution
 
 USAGE:
   mrperf experiment <table1|fig4..fig12|scale|churn|all> [--results DIR]
-               [--gen KIND:NODES[:SEED]] [--dynamics PROFILE[:SEED]]  (churn only)
+               [--gen KIND:NODES[:SEED]] [--dynamics PROFILE[:SEED]]
+               [--profiles all] [--hedge RATE]                        (churn only)
   mrperf plan  [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
                [--alpha A] [--barriers G-P-L] [--optimizer NAME] [--skew S]
+               [--hedge RATE]
   mrperf run   [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
                [--app APP] [--alpha A] [--optimizer NAME] [--skew S]
                [--bytes-per-source N] [--speculation] [--stealing] [--locality]
-               [--replication R] [--dynamics PROFILE[:SEED]]
+               [--replication R] [--dynamics PROFILE[:SEED]] [--hedge RATE]
   mrperf bench [--json DIR] [--filter SUBSTR]
   mrperf validate
   mrperf list
@@ -56,6 +58,12 @@ DYNAMICS:   seeded fault/variability trace injected into the engine run:
             (e.g. --dynamics burst:7; see `mrperf experiment churn`)
 LOCALITY:   --locality enables locality-aware work stealing (same-cluster
             steals preferred, WAN only when justified); implies --stealing
+HEDGE:      --hedge RATE (0 ≤ RATE < 1) plans against an expected reducer
+            failure rate: per-reducer capacity discounting, a replay-cost
+            term in the shuffle/reduce times, and a uniform insurance mix
+            of the key split. RATE=0 (default) is bit-identical to the
+            unhedged optimizer. `experiment churn --profiles all` runs the
+            full dynamics-profile × execution-mode matrix with a hedged row
 BENCH:      quick perf suite (solver + optimizer scale paths); --json DIR
             writes one BENCH_<name>.json per result for trend tracking
 ";
@@ -109,7 +117,22 @@ fn make_plan(
     topo: &mrperf::platform::Topology,
     app: AppModel,
     cfg: BarrierConfig,
+    hedge: f64,
 ) -> Result<Plan, String> {
+    if hedge != 0.0 {
+        mrperf::optimizer::hedged::validate_hedge(hedge).map_err(|e| format!("--hedge: {e}"))?;
+        if optimizer == "e2e-multi" {
+            // The first-class hedged path (discounted platform + uniform
+            // insurance mix + final x-step).
+            return Ok(mrperf::optimizer::FailureAwareOptimizer::new(hedge)
+                .optimize(topo, app, cfg));
+        }
+        // Any other optimizer hedges by planning against the discounted
+        // platform (no insurance mix — that is specific to the
+        // alternating-LP wrapper).
+        let ht = mrperf::optimizer::hedged::discount_topology(topo, hedge);
+        return make_plan(optimizer, &ht, app, cfg, 0.0);
+    }
     Ok(match optimizer {
         "uniform" => Uniform.optimize(topo, app, cfg),
         "myopic" => Myopic.optimize(topo, app, cfg),
@@ -151,7 +174,27 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
         let ok = if id == "churn" {
             let gen_spec = args.get_or("gen", experiments::churn::DEFAULT_GEN);
             let dyn_spec = args.get_or("dynamics", experiments::churn::DEFAULT_DYNAMICS);
-            match experiments::churn::run_with(gen_spec, dyn_spec) {
+            let tables = match args.get("profiles") {
+                Some("all") => {
+                    let hedge = match args.get_f64("hedge", experiments::churn::DEFAULT_HEDGE)
+                    {
+                        Ok(h) => h,
+                        Err(e) => {
+                            eprintln!("{e}");
+                            return ExitCode::FAILURE;
+                        }
+                    };
+                    experiments::churn::run_matrix_with(gen_spec, dyn_spec, hedge)
+                }
+                Some(other) => Err(format!("--profiles only accepts 'all', got '{other}'")),
+                None if args.get("hedge").is_some() => Err(
+                    "--hedge only applies to the matrix form; add --profiles all \
+                     (the single-profile churn table has no hedged row)"
+                    .to_string(),
+                ),
+                None => experiments::churn::run_with(gen_spec, dyn_spec),
+            };
+            match tables {
                 Ok(tables) => {
                     experiments::report_tables(id, &tables, &results_dir);
                     true
@@ -189,8 +232,15 @@ fn cmd_plan(args: &cli::Args) -> ExitCode {
         }
     };
     let optimizer = args.get_or("optimizer", "e2e-multi");
+    let hedge = match args.get_f64("hedge", 0.0) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
     let app = AppModel::new(alpha);
-    let plan = match make_plan(optimizer, &topo, app, cfg) {
+    let plan = match make_plan(optimizer, &topo, app, cfg, hedge) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("{e}");
@@ -286,7 +336,14 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
 
     let cfg =
         parse_barriers(args.get_or("barriers", "G-P-L")).unwrap_or(BarrierConfig::HADOOP);
-    let plan = match make_plan(optimizer, &topo, AppModel::new(alpha), cfg) {
+    let hedge = match args.get_f64("hedge", 0.0) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let plan = match make_plan(optimizer, &topo, AppModel::new(alpha), cfg, hedge) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("{e}");
@@ -465,7 +522,8 @@ fn cmd_list() -> ExitCode {
     println!("generated topologies (--gen KIND:NODES[:SEED]): {}", kinds.join(", "));
     println!("apps: wordcount, sessionize, inverted-index, synthetic");
     println!(
-        "optimizers: uniform, myopic, e2e-push, e2e-shuffle, e2e-multi, gradient, artifact"
+        "optimizers: uniform, myopic, e2e-push, e2e-shuffle, e2e-multi, gradient, artifact \
+         (any of them + --hedge RATE plans against an expected reducer failure rate)"
     );
     let profiles: Vec<&str> = mrperf::engine::DynProfile::all()
         .iter()

@@ -1,0 +1,193 @@
+//! Failure-aware end-to-end optimization: plans that hedge the push and
+//! shuffle split against an expected reducer failure rate.
+//!
+//! The paper's end-to-end plans assume reducers never die — so the
+//! optimum freely concentrates the key space on the best-provisioned,
+//! best-connected reducers, which is exactly the plan a single reducer
+//! outage hurts most: under strict plan enforcement the orphaned key
+//! range waits for recovery and its whole input is replayed
+//! (`engine::dynamics` reducer-failure lifecycle). Geo-distributed
+//! deployments make this the dominant robustness gap (arXiv:1707.01869),
+//! and communication-aware placement of reduce work is where the replay
+//! bytes are won or lost (Meta-MapReduce, arXiv:1508.01171).
+//!
+//! [`FailureAwareOptimizer`] wraps any [`PlanOptimizer`] and re-solves it
+//! against a *failure-discounted* platform, then mixes the resulting
+//! shuffle split toward uniform:
+//!
+//! 1. **Per-reducer capacity discounting** — every reducer is available
+//!    only a `(1 − rate)` fraction of the time, so its effective compute
+//!    capacity is `c_red · (1 − rate)`.
+//! 2. **Replay-cost term** — in expectation a `rate` fraction of each
+//!    reducer's shuffle bytes crosses the network twice (lost to a
+//!    failure, replayed from the mappers), so the effective mapper→
+//!    reducer bandwidth is `b_mr / (1 + rate)`. Both terms inflate the
+//!    shuffle/reduce phase times in the alternating LPs relative to the
+//!    (failure-free) push/map constants, which provably spreads the
+//!    optimal `y` over more reducers: as the `y`-coefficients grow
+//!    relative to the constant terms, the epigraph optimum moves from a
+//!    few concentrated reducers toward the inverse-cost split.
+//! 3. **Uniform insurance mix** — the solved split is blended as
+//!    `y ← (1 − rate)·y* + rate/|R|`: against an adversary that may take
+//!    down *any* reducer with probability `rate`, mixing with uniform
+//!    bounds the key-range mass a single outage can strand (the classic
+//!    hedge of smooth fictitious play). A final x-step LP re-optimizes
+//!    the push fractions for the blended split on the discounted
+//!    platform.
+//!
+//! With `rate = 0` the wrapper returns the inner optimizer's plan
+//! unchanged — bit-identical, property-tested in
+//! tests/optimizer_hedge.rs — so hedging is strictly opt-in
+//! (`mrperf run … --hedge RATE`, `mrperf experiment churn … --hedge`).
+
+use super::lp_build::{build_lp_x, extract_x, Objective};
+use super::{AlternatingLp, PlanOptimizer};
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::solver::solve_smart;
+
+/// Validate a hedge rate: finite and in `[0, 1)`. The single source of
+/// truth for the accepted range — the CLI, the churn matrix and this
+/// module's asserts all go through it, so they can never drift apart.
+pub fn validate_hedge(rate: f64) -> Result<(), String> {
+    if rate.is_finite() && (0.0..1.0).contains(&rate) {
+        Ok(())
+    } else {
+        Err(format!("hedge rate must be in [0, 1), got {rate}"))
+    }
+}
+
+/// Wraps a plan optimizer with failure-aware capacity discounting, a
+/// replay-cost term and a uniform insurance mix (see the module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct FailureAwareOptimizer<O = AlternatingLp> {
+    pub inner: O,
+    /// Expected per-reducer unavailability, in `[0, 1)`. `0` delegates to
+    /// the inner optimizer untouched.
+    pub rate: f64,
+}
+
+impl FailureAwareOptimizer<AlternatingLp> {
+    /// Hedge the default end-to-end multi-phase optimizer.
+    pub fn new(rate: f64) -> FailureAwareOptimizer<AlternatingLp> {
+        FailureAwareOptimizer::wrap(AlternatingLp::default(), rate)
+    }
+}
+
+impl<O: PlanOptimizer> FailureAwareOptimizer<O> {
+    pub fn wrap(inner: O, rate: f64) -> FailureAwareOptimizer<O> {
+        validate_hedge(rate).unwrap_or_else(|e| panic!("{e}"));
+        FailureAwareOptimizer { inner, rate }
+    }
+}
+
+/// The failure-discounted platform a hedged optimizer plans against:
+/// reducer capacities scaled by `1 − rate` (availability), mapper→reducer
+/// bandwidths by `1 / (1 + rate)` (expected replay traffic). Sources,
+/// mappers and push links are untouched — mapper recovery has existed
+/// since the dynamics layer landed and is already priced by the engine.
+pub fn discount_topology(topo: &Topology, rate: f64) -> Topology {
+    validate_hedge(rate).unwrap_or_else(|e| panic!("{e}"));
+    let mut t = topo.clone();
+    for c in t.c_red.iter_mut() {
+        *c *= 1.0 - rate;
+    }
+    let (m, r) = (t.n_mappers(), t.n_reducers());
+    for j in 0..m {
+        for k in 0..r {
+            let b = t.b_mr.get(j, k);
+            t.b_mr.set(j, k, b / (1.0 + rate));
+        }
+    }
+    t
+}
+
+impl<O: PlanOptimizer> PlanOptimizer for FailureAwareOptimizer<O> {
+    fn name(&self) -> &'static str {
+        "e2e-hedged"
+    }
+
+    fn optimize(&self, topo: &Topology, app: AppModel, cfg: BarrierConfig) -> Plan {
+        if self.rate == 0.0 {
+            // Bit-identical to the unhedged optimizer by construction.
+            return self.inner.optimize(topo, app, cfg);
+        }
+        let hedged = discount_topology(topo, self.rate);
+        let base = self.inner.optimize(&hedged, app, cfg);
+
+        // Uniform insurance mix: bound the mass any single outage can
+        // strand. Every reducer ends up with at least rate/|R|.
+        let r = topo.n_reducers();
+        let y: Vec<f64> =
+            base.y.iter().map(|v| (1.0 - self.rate) * v + self.rate / r as f64).collect();
+
+        // Final x-step: the optimal push for the blended split on the
+        // discounted platform (one more round of the alternating LP). A
+        // numerically hopeless LP keeps the inner optimizer's x.
+        let (lp, vars) = build_lp_x(&hedged, app, cfg, &y, Objective::Makespan);
+        let x = match solve_smart(&lp, None).0.optimal() {
+            Some((sol, _)) => extract_x(&sol, &vars),
+            None => base.x.clone(),
+        };
+        let mut plan = Plan { x, y };
+        plan.renormalize();
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{build_env, EnvKind, MB};
+
+    #[test]
+    fn discount_scales_reduce_side_only() {
+        let t = build_env(EnvKind::Global8);
+        let h = discount_topology(&t, 0.2);
+        assert_eq!(h.d, t.d);
+        assert_eq!(h.c_map, t.c_map);
+        assert_eq!(h.b_sm, t.b_sm);
+        for k in 0..t.n_reducers() {
+            assert!((h.c_red[k] - 0.8 * t.c_red[k]).abs() < 1e-9 * t.c_red[k]);
+        }
+        for j in 0..t.n_mappers() {
+            for k in 0..t.n_reducers() {
+                let expect = t.b_mr.get(j, k) / 1.2;
+                assert!((h.b_mr.get(j, k) - expect).abs() < 1e-9 * expect);
+            }
+        }
+    }
+
+    #[test]
+    fn hedged_plan_is_valid_and_floors_every_reducer() {
+        let t = build_env(EnvKind::Global4);
+        let app = AppModel::new(1.0);
+        let cfg = BarrierConfig::HADOOP;
+        let rate = 0.25;
+        let plan = FailureAwareOptimizer::new(rate).optimize(&t, app, cfg);
+        plan.check(&t).unwrap();
+        let r = t.n_reducers() as f64;
+        for &y in &plan.y {
+            // renormalize() can shave a hair off the exact floor.
+            assert!(y >= rate / r - 1e-9, "insurance floor violated: y={y}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "hedge rate")]
+    fn rejects_out_of_range_rate() {
+        let _ = FailureAwareOptimizer::new(1.0);
+    }
+
+    #[test]
+    fn zero_rate_delegates_unchanged() {
+        let t = crate::platform::topology::example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+        let app = AppModel::new(10.0);
+        let cfg = BarrierConfig::ALL_GLOBAL;
+        let hedged = FailureAwareOptimizer::new(0.0).optimize(&t, app, cfg);
+        let plain = AlternatingLp::default().optimize(&t, app, cfg);
+        assert_eq!(hedged, plain);
+    }
+}

@@ -7,6 +7,7 @@
 //! | e2e single-phase push | makespan       | push only     | [`single_phase`] |
 //! | e2e single-phase shuf | makespan       | shuffle only  | [`single_phase`] |
 //! | e2e multi-phase       | makespan       | push + shuffle| [`alternating`] (LP), [`mip_opt`] (PWL-MIP), [`gradient`] (analytic / finite-diff / JAX-PJRT) |
+//! | e2e hedged            | expected makespan under failures | push + shuffle | [`hedged`] (failure-discounted alternating LP) |
 //!
 //! ## Scale paths (256-node plans in seconds)
 //!
@@ -45,6 +46,7 @@
 pub mod aggregate;
 pub mod alternating;
 pub mod gradient;
+pub mod hedged;
 pub mod lp_build;
 pub mod mip_opt;
 pub mod myopic;
@@ -75,6 +77,7 @@ pub(crate) fn warn_lp_fallback(what: &str, fallback: &str) {
 
 pub use alternating::AlternatingLp;
 pub use gradient::{AnalyticBackend, FiniteDiffBackend, GradientOptimizer};
+pub use hedged::FailureAwareOptimizer;
 pub use lp_build::Objective;
 pub use mip_opt::PwlMipOptimizer;
 pub use myopic::Myopic;

@@ -26,7 +26,7 @@ use mrperf::util::qcheck::{ensure, qcheck, Config};
 /// Bit-exact signature of every metric field (floats by bit pattern).
 fn sig(m: &JobMetrics) -> String {
     format!(
-        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
         m.makespan.to_bits(),
         m.push_end.to_bits(),
         m.map_end.to_bits(),
@@ -34,6 +34,8 @@ fn sig(m: &JobMetrics) -> String {
         m.push_bytes.to_bits(),
         m.shuffle_bytes.to_bits(),
         m.output_bytes.to_bits(),
+        m.reduce_bytes_replayed.to_bits(),
+        m.shuffle_bytes_delivered.to_bits(),
         m.n_map_tasks,
         m.n_reduce_tasks,
         m.spec_launched,
@@ -42,6 +44,8 @@ fn sig(m: &JobMetrics) -> String {
         m.dyn_events,
         m.failures_injected,
         m.tasks_requeued,
+        m.reducers_failed,
+        m.reduce_ranges_reassigned,
         m.input_records,
         m.intermediate_records,
         m.output_records
@@ -132,6 +136,17 @@ fn failed_node_tasks_always_complete() {
             ensure(
                 m.failures_injected > 0,
                 format!("seed {trace_seed:#x}: trace injected no failure"),
+            )?;
+            // Shuffle byte conservation (restartable reduce): every
+            // unique byte ends up credited exactly once, whatever was
+            // lost and replayed along the way. Byte counts are integers
+            // < 2^53, so the f64 sums are exact and equality is exact.
+            ensure(
+                m.shuffle_bytes_delivered == m.shuffle_bytes,
+                format!(
+                    "seed {trace_seed:#x}: delivered {} != shuffled {} (replayed {})",
+                    m.shuffle_bytes_delivered, m.shuffle_bytes, m.reduce_bytes_replayed
+                ),
             )?;
             ensure(
                 m.input_records == stat.input_records,
@@ -235,6 +250,194 @@ fn dynamic_locality_beats_plan_local_under_failures() {
         dl.makespan,
         pl.makespan
     );
+}
+
+/// Reducer-failure byte conservation for both scheduler families
+/// (ISSUE 4 satellite): across generated failure traces — which now take
+/// down reducers mid-run in addition to mappers — no shuffle byte is
+/// lost or double-credited (`delivered == shuffled`, replay accounted
+/// separately), records are conserved, and the stealing schedulers adopt
+/// every orphaned key range while plan enforcement never does.
+#[test]
+fn reducer_failures_conserve_bytes_for_both_schedulers() {
+    qcheck(Config::default().cases(10), "reducer-failure byte conservation", |rng| {
+        let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+        let plan = Plan::local_push(&topo);
+        let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xFA11);
+        let trace_seed = rng.next_u64();
+        let stat = run_job(&topo, &plan, &SyntheticApp::new(1.0), &JobConfig::default(), &inputs)
+            .metrics;
+        let trace = ScenarioTrace::generate(
+            DynProfile::Failures,
+            trace_seed,
+            &TraceShape::of(&topo, stat.makespan),
+        );
+        for (plan_local, base) in
+            [(true, JobConfig::default()), (false, JobConfig::dynamic_locality())]
+        {
+            let cfg = base.clone().with_dynamics(trace.clone());
+            let m = run_job(&topo, &plan, &SyntheticApp::new(1.0), &cfg, &inputs).metrics;
+            ensure(
+                m.reducers_failed > 0,
+                format!("seed {trace_seed:#x}: no reducer outage landed"),
+            )?;
+            ensure(
+                m.shuffle_bytes_delivered == m.shuffle_bytes,
+                format!(
+                    "seed {trace_seed:#x} plan_local={plan_local}: delivered {} != \
+                     shuffled {} (replayed {})",
+                    m.shuffle_bytes_delivered, m.shuffle_bytes, m.reduce_bytes_replayed
+                ),
+            )?;
+            ensure(
+                m.output_records == m.input_records,
+                format!(
+                    "seed {trace_seed:#x} plan_local={plan_local}: lost records \
+                     ({} in, {} out)",
+                    m.input_records, m.output_records
+                ),
+            )?;
+            if plan_local {
+                ensure(
+                    m.reduce_ranges_reassigned == 0,
+                    "plan enforcement must never re-partition a key range",
+                )?;
+            } else {
+                ensure(
+                    m.reduce_ranges_reassigned > 0,
+                    format!(
+                        "seed {trace_seed:#x}: stealing scheduler adopted no orphaned range \
+                         ({} reducer failures)",
+                        m.reducers_failed
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic targeted reducer outage from t = 0: the plan-enforcing
+/// run holds the dead reducer's key range for the whole outage window,
+/// while the dynamic scheduler adopts it immediately and finishes far
+/// earlier. Nothing was on the wire at failure time, so neither run
+/// replays any bytes — pinning the first-send/replay accounting split.
+#[test]
+fn reducer_outage_stalls_plan_local_but_dynamic_adopts() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 32, 5);
+    let plan = Plan::local_push(&topo); // uniform y: every range has mass
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 14, 0xBEEF);
+    let app = SyntheticApp::new(1.0);
+
+    let static_m = run_job(&topo, &plan, &app, &JobConfig::optimized(), &inputs).metrics;
+    let s = static_m.makespan;
+    assert!(s > 0.0);
+
+    let victim = 0usize;
+    let trace = ScenarioTrace::from_events(
+        "targeted-reducer-outage",
+        vec![
+            TimedEvent { time: 0.0, event: DynEvent::ReducerFail { node: victim } },
+            TimedEvent { time: 1.8 * s, event: DynEvent::ReducerRecover { node: victim } },
+        ],
+    );
+
+    let pl = run_job(
+        &topo,
+        &plan,
+        &app,
+        &JobConfig::optimized().with_dynamics(trace.clone()),
+        &inputs,
+    )
+    .metrics;
+    let dl = run_job(
+        &topo,
+        &plan,
+        &app,
+        &JobConfig::dynamic_locality().with_dynamics(trace),
+        &inputs,
+    )
+    .metrics;
+
+    for m in [&pl, &dl] {
+        assert_eq!(m.output_records, m.input_records, "lost records");
+        assert_eq!(m.shuffle_bytes_delivered, m.shuffle_bytes, "lost bytes");
+        assert_eq!(m.reducers_failed, 1);
+        assert_eq!(
+            m.reduce_bytes_replayed, 0.0,
+            "nothing was on the wire at t=0, so nothing is a replay"
+        );
+    }
+    assert_eq!(pl.reduce_ranges_reassigned, 0, "plan enforcement must wait");
+    assert!(
+        pl.makespan > 1.7 * s,
+        "plan-local must stall until recovery: {} vs static {s}",
+        pl.makespan
+    );
+    assert!(dl.reduce_ranges_reassigned >= 1, "dynamic must adopt the range");
+    assert!(
+        dl.makespan < pl.makespan,
+        "adoption ({}) must beat waiting ({})",
+        dl.makespan,
+        pl.makespan
+    );
+}
+
+/// Deterministic mid-reduce blackout: every reducer dies while reduce
+/// compute is in flight (slow reducers guarantee nothing is durable yet
+/// for the last ranges), so delivered data is genuinely lost and must be
+/// replayed after recovery — `reduce_bytes_replayed > 0` — and under the
+/// stealing scheduler the same-timestamp failure cascade re-partitions
+/// ranges through the shrinking survivor set before stalling. Both
+/// families still conserve every byte and record.
+#[test]
+fn full_reducer_blackout_replays_lost_bytes() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0x10AD);
+    // Slow reduce: the reduce phase dominates, so a failure between
+    // shuffle_end and makespan reliably catches non-durable ranges.
+    let app = SyntheticApp::new(1.0).with_costs(1.0, 50.0);
+
+    let stat = run_job(&topo, &plan, &app, &JobConfig::optimized(), &inputs).metrics;
+    assert!(stat.makespan > stat.shuffle_end, "reduce phase must be non-trivial");
+    let fail_at = 0.5 * (stat.shuffle_end + stat.makespan);
+    let recover_at = 2.5 * stat.makespan;
+
+    let mut events = Vec::new();
+    for k in 0..topo.n_reducers() {
+        events.push(TimedEvent { time: fail_at, event: DynEvent::ReducerFail { node: k } });
+        events
+            .push(TimedEvent { time: recover_at, event: DynEvent::ReducerRecover { node: k } });
+    }
+    let trace = ScenarioTrace::from_events("blackout", events);
+
+    for (plan_local, base) in
+        [(true, JobConfig::optimized()), (false, JobConfig::dynamic_locality())]
+    {
+        let cfg = base.clone().with_dynamics(trace.clone());
+        let m = run_job(&topo, &plan, &app, &cfg, &inputs).metrics;
+        assert_eq!(m.output_records, m.input_records, "plan_local={plan_local}");
+        assert_eq!(m.shuffle_bytes_delivered, m.shuffle_bytes, "plan_local={plan_local}");
+        assert_eq!(m.reducers_failed, topo.n_reducers(), "plan_local={plan_local}");
+        assert!(
+            m.reduce_bytes_replayed > 0.0,
+            "plan_local={plan_local}: a blackout mid-reduce must force replays"
+        );
+        assert!(
+            m.makespan > 2.0 * stat.makespan,
+            "plan_local={plan_local}: the blackout must stall the job ({} vs {})",
+            m.makespan,
+            stat.makespan
+        );
+        if plan_local {
+            assert_eq!(m.reduce_ranges_reassigned, 0);
+        }
+        // (Whether the stealing scheduler manages an adoption before the
+        // cascade exhausts the survivor set depends on which ranges were
+        // already durable; adoption itself is pinned deterministically in
+        // reducer_outage_stalls_plan_local_but_dynamic_adopts.)
+    }
 }
 
 /// Bandwidth-profile smoke: step/periodic/burst traces apply, never

@@ -1,0 +1,174 @@
+//! Failure-aware (hedged) optimizer acceptance tests (ISSUE 4):
+//!
+//! * `--hedge 0` is *bit-identical* to the unhedged alternating optimizer
+//!   on all four paper environments — hedging is strictly opt-in;
+//! * under a pinned reducer-failure trace on a generated 64-node
+//!   platform, the hedged plan strictly beats the unhedged plan when both
+//!   are executed with strict plan-local enforcement (the acceptance
+//!   scenario of `mrperf experiment churn --profiles all --hedge`);
+//! * the LPs built from a failure-discounted platform still pass the
+//!   revised-vs-dense solver oracle.
+
+use mrperf::apps::SyntheticApp;
+use mrperf::engine::dynamics::{DynEvent, ScenarioTrace, TimedEvent};
+use mrperf::engine::job::{batch_size, JobConfig};
+use mrperf::engine::run_job;
+use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::barrier::BarrierConfig;
+use mrperf::model::makespan::AppModel;
+use mrperf::model::plan::Plan;
+use mrperf::optimizer::hedged::discount_topology;
+use mrperf::optimizer::lp_build::{build_lp_x, build_lp_y, Objective};
+use mrperf::optimizer::{AlternatingLp, FailureAwareOptimizer, PlanOptimizer};
+use mrperf::platform::scale::{generate_kind, ScaleKind};
+use mrperf::platform::{build_env, EnvKind};
+use mrperf::solver::lp::Lp;
+
+/// `--hedge 0` must reproduce the unhedged plan bit-for-bit on every
+/// paper environment, across barrier configurations and α regimes.
+#[test]
+fn hedge_zero_is_bit_identical_on_all_paper_envs() {
+    for kind in EnvKind::all() {
+        let t = build_env(kind);
+        for cfg in [BarrierConfig::ALL_GLOBAL, BarrierConfig::HADOOP] {
+            for &alpha in &[0.1, 1.0, 10.0] {
+                let app = AppModel::new(alpha);
+                let hedged = FailureAwareOptimizer::new(0.0).optimize(&t, app, cfg);
+                let plain = AlternatingLp::default().optimize(&t, app, cfg);
+                assert_eq!(
+                    hedged, plain,
+                    "{kind:?}/{}/α={alpha}: --hedge 0 diverged from the unhedged plan",
+                    cfg.label()
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance scenario: on `hier-wan:64`, take down exactly the
+/// reducers the hedge moved key-range mass *away from* (the unhedged
+/// plan's concentration points), from t=0 until well past both static
+/// makespans. Both plans run under strict plan-local enforcement — no
+/// runtime adaptivity — so the comparison isolates failure-aware
+/// planning: the unhedged plan strands strictly more key-range mass on
+/// the dead reducers and pays a strictly longer replay/reduce tail.
+#[test]
+fn hedged_plan_beats_unhedged_under_pinned_failure_trace_at_64_nodes() {
+    let gen = generate_kind(ScaleKind::HierarchicalWan, 64, 7);
+    let inputs = synthetic_inputs(gen.n_sources(), 1 << 13, 0x5CA1E);
+    let mean_bytes =
+        inputs.iter().map(|v| batch_size(v) as f64).sum::<f64>() / gen.n_sources() as f64;
+    let topo = gen.with_uniform_data(mean_bytes);
+    let app = AppModel::new(1.0);
+    let cfg = BarrierConfig::HADOOP;
+    let rate = 0.3;
+
+    let unhedged = AlternatingLp::default().optimize(&topo, app, cfg);
+    let hedged = FailureAwareOptimizer::new(rate).optimize(&topo, app, cfg);
+    unhedged.check(&topo).unwrap();
+    hedged.check(&topo).unwrap();
+
+    // The reducers the hedge meaningfully de-concentrated (≥1% of the
+    // key space, i.e. several partitioner buckets). If this set is empty
+    // the hedge is not doing its job.
+    let victims: Vec<usize> = (0..topo.n_reducers())
+        .filter(|&k| unhedged.y[k] - hedged.y[k] > 0.01)
+        .collect();
+    assert!(
+        !victims.is_empty(),
+        "hedging must move key-range mass off the concentration points \
+         (unhedged y = {:?}, hedged y = {:?})",
+        unhedged.y,
+        hedged.y
+    );
+
+    let sapp = SyntheticApp::new(1.0);
+    let s_u = run_job(&topo, &unhedged, &sapp, &JobConfig::optimized(), &inputs)
+        .metrics
+        .makespan;
+    let s_h =
+        run_job(&topo, &hedged, &sapp, &JobConfig::optimized(), &inputs).metrics.makespan;
+    let recover_at = 2.2 * s_u.max(s_h);
+
+    let mut events = Vec::new();
+    for &v in &victims {
+        events.push(TimedEvent { time: 0.0, event: DynEvent::ReducerFail { node: v } });
+        events.push(TimedEvent { time: recover_at, event: DynEvent::ReducerRecover { node: v } });
+    }
+    let trace = ScenarioTrace::from_events("pinned-reducer-outage", events);
+
+    let m_u = run_job(
+        &topo,
+        &unhedged,
+        &sapp,
+        &JobConfig::optimized().with_dynamics(trace.clone()),
+        &inputs,
+    )
+    .metrics;
+    let m_h = run_job(
+        &topo,
+        &hedged,
+        &sapp,
+        &JobConfig::optimized().with_dynamics(trace),
+        &inputs,
+    )
+    .metrics;
+
+    for (label, m) in [("unhedged", &m_u), ("hedged", &m_h)] {
+        assert_eq!(m.output_records, m.input_records, "{label} lost records");
+        assert_eq!(m.shuffle_bytes_delivered, m.shuffle_bytes, "{label} lost bytes");
+        assert_eq!(m.reducers_failed, victims.len(), "{label}");
+    }
+    // The unhedged plan concentrated on the victims, so it stalls for
+    // the full outage; the hedge bounds the stranded mass.
+    assert!(
+        m_u.makespan > recover_at,
+        "unhedged plan-local must stall past recovery ({} vs {recover_at})",
+        m_u.makespan
+    );
+    assert!(
+        m_h.makespan < m_u.makespan,
+        "hedged plan ({}) must strictly beat the unhedged plan ({}) under the outage",
+        m_h.makespan,
+        m_u.makespan
+    );
+}
+
+/// The hedged LPs are ordinary makespan LPs over a rescaled platform —
+/// they must still satisfy the revised-vs-dense solver cross-check on
+/// every paper-env shape (the tests/optimizer_scale.rs oracle, applied
+/// to the discounted topology).
+#[test]
+fn hedged_lps_pass_the_solver_oracle() {
+    fn assert_solvers_agree(lp: &Lp, ctx: &str) {
+        let (xd, od) = mrperf::solver::solve_robust_dense(lp).expect_optimal(ctx);
+        let (xs, os) = mrperf::solver::revised::solve(lp).expect_optimal(ctx);
+        assert!(lp.violation(&xs) < 1e-6, "{ctx}: revised violation {}", lp.violation(&xs));
+        assert!(lp.violation(&xd) < 1e-6, "{ctx}: dense violation {}", lp.violation(&xd));
+        assert!(
+            (od - os).abs() <= 1e-7 * od.abs().max(1.0),
+            "{ctx}: dense objective {od} vs revised {os}"
+        );
+    }
+
+    let app = AppModel::new(1.3);
+    for kind in [EnvKind::Global4, EnvKind::Global8] {
+        let t = discount_topology(&build_env(kind), 0.3);
+        let r = t.n_reducers();
+        for cfg in [BarrierConfig::ALL_GLOBAL, BarrierConfig::HADOOP] {
+            let uniform = vec![1.0 / r as f64; r];
+            let mut one_hot = vec![0.0; r];
+            one_hot[0] = 1.0;
+            for (yi, y) in [uniform, one_hot].iter().enumerate() {
+                let (lp, _) = build_lp_x(&t, app, cfg, y, Objective::Makespan);
+                assert_solvers_agree(
+                    &lp,
+                    &format!("hedged/{kind:?}/{}/lp_x[y{yi}]", cfg.label()),
+                );
+            }
+            let x = Plan::local_push(&t).x;
+            let (lp, _) = build_lp_y(&t, app, cfg, &x, Objective::Makespan);
+            assert_solvers_agree(&lp, &format!("hedged/{kind:?}/{}/lp_y", cfg.label()));
+        }
+    }
+}

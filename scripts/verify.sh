@@ -31,7 +31,9 @@ if [[ "$QUICK" == "0" ]]; then
   "$BIN" plan --gen hier-wan:64 --optimizer gradient >/dev/null
   "$BIN" run --gen hier-wan:64 --optimizer uniform >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer uniform --locality --dynamics failures:3 >/dev/null
+  "$BIN" run --gen hier-wan:16 --optimizer e2e-multi --hedge 0.1 --dynamics failures:3 >/dev/null
   "$BIN" experiment churn --gen hier-wan:16 --dynamics burst:7 >/dev/null
+  "$BIN" experiment churn --profiles all --gen hier-wan:16 --dynamics failures:7 --hedge 0.05 >/dev/null
   # Clean-error probes must fail (a bare `!` pipeline is exempt from
   # set -e, so check the status explicitly).
   if "$BIN" plan --gen hier-wan:3 >/dev/null 2>&1; then
@@ -50,7 +52,23 @@ if [[ "$QUICK" == "0" ]]; then
     echo "FAIL: --dynamics nope:1 should be rejected" >&2
     exit 1
   fi
+  if "$BIN" run --gen hier-wan:16 --hedge 1.5 >/dev/null 2>&1; then
+    echo "FAIL: --hedge 1.5 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment churn --profiles some --gen hier-wan:16 >/dev/null 2>&1; then
+    echo "FAIL: --profiles some should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment churn --gen hier-wan:16 --hedge 0.1 >/dev/null 2>&1; then
+    echo "FAIL: --hedge without --profiles all should be rejected" >&2
+    exit 1
+  fi
   echo "smoke OK"
 fi
+
+# (The golden-pin presence gate lives in .github/workflows/verify.yml,
+# which runs right after this script — single-sourced there so the path
+# and message cannot drift.)
 
 echo "verify.sh: all green"
