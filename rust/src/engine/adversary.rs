@@ -1,0 +1,651 @@
+//! Adversarial scenario search: the worst-case trace for a *given plan*.
+//!
+//! The churn experiment injects *random* seeded traces — but a plan that
+//! survives seeded churn may still collapse under the worst-case
+//! dynamics for that specific plan, which is exactly the regime
+//! geo-distributed deployments care about (WAN variability is the
+//! dominant unmodelled effect, arXiv:1707.01869; shuffle-pattern
+//! sensitivity makes the damage plan-dependent, arXiv:2005.11608). This
+//! module searches the trace space for the perturbation, within an
+//! explicit budget, that maximizes makespan degradation of one concrete
+//! `(plan, execution mode)` pair, using the deterministic executor as
+//! the oracle.
+//!
+//! ## Perturbation budget
+//!
+//! A [`PerturbBudget`] bounds what the adversary may do — without a
+//! budget the worst case is trivial (fail everything forever):
+//!
+//! * at most `max_outages` node outages (mapper or reducer), each with a
+//!   bounded window (`≤ max_window_frac ×` horizon);
+//! * at most `max_link_events` link-degradation windows with bounded
+//!   scale factors (`≥ min_link_factor`, itself `≥` [`MIN_FACTOR`]).
+//!
+//! ## Search
+//!
+//! Candidates are small *genomes* — a list of outage / link-window genes
+//! with times expressed as fractions of the horizon — evaluated by
+//! materializing a [`ScenarioTrace`] and running the job. The search is
+//! **seeded random restarts + greedy coordinate refinement**:
+//!
+//! 1. draw `restarts` random genomes from a seeded [`Pcg64`], plus any
+//!    caller-provided seed traces (typically the seeded `failures`
+//!    profile, so the found trace is guaranteed at least as bad);
+//! 2. keep the genome with the largest makespan;
+//! 3. per gene, try a deterministic move set (shift the window, extend
+//!    it to the budget bound, retarget the victim along the
+//!    attractiveness ranking, deepen the link degradation) and accept
+//!    strictly improving moves; optionally grow the genome while under
+//!    budget. Repeat for `refine_passes` passes or until no move helps.
+//!
+//! Everything is deterministic given [`SearchConfig::seed`]: the RNG
+//! only shapes the initial candidates, moves are a fixed function of the
+//! genome, and the executor oracle is bit-reproducible.
+
+use super::dynamics::{DynEvent, ScenarioTrace, TimedEvent, TraceShape, MIN_FACTOR};
+use super::executor::run_job;
+use super::job::{JobConfig, MapReduceApp, Record};
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::util::rng::Pcg64;
+
+/// What the adversary is allowed to perturb. All windows are fractions
+/// of the search horizon (the static makespan).
+#[derive(Debug, Clone, Copy)]
+pub struct PerturbBudget {
+    /// Maximum number of node outages (mapper + reducer combined).
+    pub max_outages: usize,
+    /// Maximum number of link-degradation windows.
+    pub max_link_events: usize,
+    /// Smallest allowed link scale factor (must be ≥ [`MIN_FACTOR`]).
+    pub min_link_factor: f64,
+    /// Longest outage / degradation window, as a fraction of the
+    /// horizon.
+    pub max_window_frac: f64,
+}
+
+impl PerturbBudget {
+    /// A budget of `k` node outages with default link-event allowance
+    /// (up to 2 windows), a 0.05 link-factor floor and windows bounded
+    /// by one full horizon.
+    pub fn outages(k: usize) -> PerturbBudget {
+        PerturbBudget {
+            max_outages: k,
+            max_link_events: k.min(2),
+            min_link_factor: 0.05,
+            max_window_frac: 1.0,
+        }
+    }
+
+    /// Budget sanity: the adversary must be allowed to do *something*,
+    /// factors must respect the engine's floor, windows must be positive
+    /// and bounded.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_outages == 0 && self.max_link_events == 0 {
+            return Err("adversary budget allows no perturbation at all".into());
+        }
+        if !(self.min_link_factor.is_finite() && self.min_link_factor >= MIN_FACTOR) {
+            return Err(format!(
+                "min_link_factor must be ≥ {MIN_FACTOR}, got {}",
+                self.min_link_factor
+            ));
+        }
+        if !(self.max_window_frac.is_finite()
+            && self.max_window_frac > 0.0
+            && self.max_window_frac <= 4.0)
+        {
+            return Err(format!(
+                "max_window_frac must be in (0, 4], got {}",
+                self.max_window_frac
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Search knobs. Deterministic given `seed`.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    pub budget: PerturbBudget,
+    pub seed: u64,
+    /// Random initial candidates (on top of any caller-seeded traces).
+    pub restarts: usize,
+    /// Greedy coordinate-refinement passes over the best genome.
+    pub refine_passes: usize,
+    /// The static makespan of `(plan, base)` if the caller already
+    /// measured it — skips the search's own baseline run. Must be the
+    /// bit-exact executor result (the executor is deterministic, so a
+    /// caller-side run of the same job qualifies); it anchors the
+    /// horizon every candidate trace is scaled by.
+    pub known_static_makespan: Option<f64>,
+}
+
+impl SearchConfig {
+    pub fn new(budget: PerturbBudget, seed: u64) -> SearchConfig {
+        SearchConfig {
+            budget,
+            seed,
+            restarts: 6,
+            refine_passes: 2,
+            known_static_makespan: None,
+        }
+    }
+}
+
+/// The search outcome: the worst trace found and its damage.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// The worst-case trace (label `adversary:SEED`), replayable via
+    /// [`JobConfig::with_dynamics`].
+    pub trace: ScenarioTrace,
+    /// Makespan of the attacked mode with no dynamics.
+    pub static_makespan: f64,
+    /// Makespan under the worst trace found.
+    pub worst_makespan: f64,
+    /// Executor evaluations spent.
+    pub evals: usize,
+}
+
+impl SearchResult {
+    /// Relative makespan degradation of the worst trace.
+    pub fn degradation(&self) -> f64 {
+        self.worst_makespan / self.static_makespan - 1.0
+    }
+}
+
+/// One perturbation gene. Times are fractions of the horizon.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Gene {
+    MapperOutage { node: usize, start: f64, window: f64 },
+    ReducerOutage { node: usize, start: f64, window: f64 },
+    LinkWindow { cluster: Option<usize>, factor: f64, start: f64, window: f64 },
+}
+
+fn outage_count(genes: &[Gene]) -> usize {
+    genes
+        .iter()
+        .filter(|g| matches!(g, Gene::MapperOutage { .. } | Gene::ReducerOutage { .. }))
+        .count()
+}
+
+/// Materialize a genome into a valid, time-sorted trace.
+fn to_trace(genes: &[Gene], horizon: f64, label: &str) -> ScenarioTrace {
+    let mut events = Vec::with_capacity(2 * genes.len());
+    for g in genes {
+        match *g {
+            Gene::MapperOutage { node, start, window } => {
+                events.push(TimedEvent {
+                    time: start * horizon,
+                    event: DynEvent::MapperFail { node },
+                });
+                events.push(TimedEvent {
+                    time: (start + window) * horizon,
+                    event: DynEvent::MapperRecover { node },
+                });
+            }
+            Gene::ReducerOutage { node, start, window } => {
+                events.push(TimedEvent {
+                    time: start * horizon,
+                    event: DynEvent::ReducerFail { node },
+                });
+                events.push(TimedEvent {
+                    time: (start + window) * horizon,
+                    event: DynEvent::ReducerRecover { node },
+                });
+            }
+            Gene::LinkWindow { cluster, factor, start, window } => {
+                let (hit, restore) = match cluster {
+                    Some(c) => (
+                        DynEvent::ClusterLinkScale { cluster: c, factor },
+                        DynEvent::ClusterLinkScale { cluster: c, factor: 1.0 },
+                    ),
+                    None => (
+                        DynEvent::WanScale { factor },
+                        DynEvent::WanScale { factor: 1.0 },
+                    ),
+                };
+                events.push(TimedEvent { time: start * horizon, event: hit });
+                events.push(TimedEvent { time: (start + window) * horizon, event: restore });
+            }
+        }
+    }
+    ScenarioTrace::from_events(label, events)
+}
+
+/// Random genome within budget: mostly reducer outages on the most
+/// attractive (plan-loaded) nodes, some mapper outages, an optional link
+/// window.
+fn gen_random(rng: &mut Pcg64, shape: &TraceShape, b: &PerturbBudget) -> Vec<Gene> {
+    let m = shape.mapper_cluster.len();
+    let r = shape.n_reducers;
+    let mut genes = Vec::new();
+    if b.max_outages > 0 && (m > 0 || r > 0) {
+        let n_out = rng.range(1, b.max_outages + 1);
+        for _ in 0..n_out {
+            let start = rng.uniform(0.0, 0.8);
+            let window = rng.uniform(0.3 * b.max_window_frac, b.max_window_frac);
+            // Reducers hurt plan-enforcing modes most: bias toward them,
+            // targeting the top half of the attractiveness ranking.
+            if r > 0 && (m == 0 || rng.chance(0.6)) {
+                let top = (r / 2).max(1);
+                let node = shape.reducer_rank[rng.range(0, top.min(shape.reducer_rank.len()))];
+                genes.push(Gene::ReducerOutage { node, start, window });
+            } else if m > 0 {
+                let node = rng.range(0, m);
+                genes.push(Gene::MapperOutage { node, start, window });
+            }
+        }
+    }
+    if b.max_link_events > 0 && shape.n_clusters > 0 {
+        let n_link = rng.range(0, b.max_link_events + 1);
+        for _ in 0..n_link {
+            let cluster = if rng.chance(0.3) {
+                None // whole-WAN degradation
+            } else {
+                Some(rng.range(0, shape.n_clusters))
+            };
+            let factor = rng.uniform(b.min_link_factor, 0.30).max(b.min_link_factor);
+            let start = rng.uniform(0.0, 0.7);
+            let window = rng
+                .uniform(0.25 * b.max_window_frac, 0.75 * b.max_window_frac)
+                .max(0.01);
+            genes.push(Gene::LinkWindow { cluster, factor, start, window });
+        }
+    }
+    if genes.is_empty() {
+        // Budget allows only link events but the coin said zero: take
+        // one WAN window so every candidate perturbs something.
+        genes.push(Gene::LinkWindow {
+            cluster: None,
+            factor: b.min_link_factor,
+            start: 0.1,
+            window: (0.5 * b.max_window_frac).max(0.01),
+        });
+    }
+    genes
+}
+
+/// Best-effort import of an existing trace (e.g. the seeded `failures`
+/// profile) into a genome, clipped to the budget: paired fail/recover
+/// events become outage genes, paired degrade/restore link events become
+/// link genes. Unpaired failures get the maximum window.
+fn genes_from_trace(
+    trace: &ScenarioTrace,
+    horizon: f64,
+    b: &PerturbBudget,
+) -> Vec<Gene> {
+    let frac = |t: f64| (t / horizon).max(0.0);
+    let clamp_w = |w: f64| w.clamp(0.01, b.max_window_frac);
+    let mut outages: Vec<Gene> = Vec::new();
+    let mut links: Vec<Gene> = Vec::new();
+    // (is_reducer, node) -> (start_frac, resolved)
+    let mut open: Vec<(bool, usize, f64)> = Vec::new();
+    let mut open_links: Vec<(Option<usize>, f64, f64)> = Vec::new(); // (cluster, factor, start)
+    for te in trace.events() {
+        match te.event {
+            DynEvent::MapperFail { node } => open.push((false, node, frac(te.time))),
+            DynEvent::ReducerFail { node } => open.push((true, node, frac(te.time))),
+            DynEvent::MapperRecover { node } | DynEvent::ReducerRecover { node } => {
+                let is_red = matches!(te.event, DynEvent::ReducerRecover { .. });
+                if let Some(pos) =
+                    open.iter().position(|&(r, n, _)| r == is_red && n == node)
+                {
+                    let (_, _, start) = open.remove(pos);
+                    let window = clamp_w(frac(te.time) - start);
+                    outages.push(if is_red {
+                        Gene::ReducerOutage { node, start, window }
+                    } else {
+                        Gene::MapperOutage { node, start, window }
+                    });
+                }
+            }
+            DynEvent::ClusterLinkScale { cluster, factor } => {
+                let cl = Some(cluster);
+                if factor < 1.0 {
+                    open_links.push((cl, factor.max(b.min_link_factor), frac(te.time)));
+                } else if let Some(pos) = open_links.iter().position(|&(c, _, _)| c == cl) {
+                    let (c, f, start) = open_links.remove(pos);
+                    let window = clamp_w(frac(te.time) - start);
+                    links.push(Gene::LinkWindow { cluster: c, factor: f, start, window });
+                }
+            }
+            DynEvent::WanScale { factor } => {
+                if factor < 1.0 {
+                    open_links.push((None, factor.max(b.min_link_factor), frac(te.time)));
+                } else if let Some(pos) = open_links.iter().position(|&(c, _, _)| c.is_none()) {
+                    let (c, f, start) = open_links.remove(pos);
+                    let window = clamp_w(frac(te.time) - start);
+                    links.push(Gene::LinkWindow { cluster: c, factor: f, start, window });
+                }
+            }
+            // Slowdowns and refreshes are outside the adversary's budget
+            // vocabulary; ignore them in the import.
+            _ => {}
+        }
+    }
+    for (is_red, node, start) in open {
+        let window = b.max_window_frac;
+        outages.push(if is_red {
+            Gene::ReducerOutage { node, start, window }
+        } else {
+            Gene::MapperOutage { node, start, window }
+        });
+    }
+    // When the budget clips the import, keep reducer outages first —
+    // they are what plan-enforcing modes cannot recover from.
+    outages.sort_by_key(|g| match g {
+        Gene::ReducerOutage { .. } => 0u8,
+        _ => 1u8,
+    });
+    outages.truncate(b.max_outages);
+    links.truncate(b.max_link_events);
+    outages.extend(links);
+    outages
+}
+
+/// Deterministic move set for one gene: shift / extend the window,
+/// retarget the victim, deepen the degradation — each bounded by the
+/// budget.
+fn moves(g: Gene, b: &PerturbBudget, shape: &TraceShape) -> Vec<Gene> {
+    let mut out = Vec::new();
+    match g {
+        Gene::MapperOutage { node, start, window } => {
+            out.push(Gene::MapperOutage { node, start, window: b.max_window_frac });
+            out.push(Gene::MapperOutage { node, start: (start - 0.15).max(0.0), window });
+            out.push(Gene::MapperOutage { node, start: (start + 0.15).min(1.0), window });
+            out.push(Gene::MapperOutage { node, start: 0.0, window: b.max_window_frac });
+            let m = shape.mapper_cluster.len();
+            if m > 1 {
+                out.push(Gene::MapperOutage { node: (node + 1) % m, start, window });
+            }
+        }
+        Gene::ReducerOutage { node, start, window } => {
+            out.push(Gene::ReducerOutage { node, start, window: b.max_window_frac });
+            out.push(Gene::ReducerOutage { node, start: (start - 0.15).max(0.0), window });
+            out.push(Gene::ReducerOutage { node, start: (start + 0.15).min(1.0), window });
+            out.push(Gene::ReducerOutage { node, start: 0.35, window: b.max_window_frac });
+            // Retarget along the attractiveness ranking (where the plan
+            // concentrates shuffle mass).
+            let rank = &shape.reducer_rank;
+            if rank.len() > 1 {
+                let pos = rank.iter().position(|&k| k == node).unwrap_or(0);
+                let next = rank[(pos + 1) % rank.len()];
+                out.push(Gene::ReducerOutage { node: next, start, window });
+            }
+        }
+        Gene::LinkWindow { cluster, factor, start, window } => {
+            out.push(Gene::LinkWindow { cluster, factor: b.min_link_factor, start, window });
+            out.push(Gene::LinkWindow {
+                cluster,
+                factor,
+                start,
+                window: b.max_window_frac,
+            });
+            out.push(Gene::LinkWindow {
+                cluster,
+                factor,
+                start: (start - 0.15).max(0.0),
+                window,
+            });
+            out.push(Gene::LinkWindow {
+                cluster,
+                factor,
+                start: (start + 0.15).min(1.0),
+                window,
+            });
+            if shape.n_clusters > 1 {
+                let next = match cluster {
+                    Some(c) => Some((c + 1) % shape.n_clusters),
+                    None => Some(0),
+                };
+                out.push(Gene::LinkWindow { cluster: next, factor, start, window });
+            }
+        }
+    }
+    out
+}
+
+/// Search for the trace (within `cfg.budget`) that maximizes the
+/// makespan of `(plan, base)` on `topo`. `seed_traces` join the initial
+/// candidate pool (clipped to the budget), so passing the seeded
+/// `failures` profile guarantees the result is at least as damaging as
+/// it. `base` must carry no dynamics of its own.
+pub fn search(
+    topo: &Topology,
+    plan: &Plan,
+    app: &dyn MapReduceApp,
+    base: &JobConfig,
+    inputs: &[Vec<Record>],
+    seed_traces: &[ScenarioTrace],
+    cfg: &SearchConfig,
+) -> Result<SearchResult, String> {
+    cfg.budget.validate()?;
+    if base.dynamics.is_some() {
+        return Err("adversary base config must not carry its own dynamics trace".into());
+    }
+    let static_makespan = cfg
+        .known_static_makespan
+        .unwrap_or_else(|| run_job(topo, plan, app, base, inputs).metrics.makespan)
+        .max(1e-9);
+    let horizon = static_makespan;
+    let shape = TraceShape::of(topo, horizon);
+    let label = format!("adversary:{}", cfg.seed);
+
+    let mut evals = 0usize;
+    let mut eval = |genes: &[Gene]| -> f64 {
+        evals += 1;
+        let trace = to_trace(genes, horizon, &label);
+        let cfg_dyn = base.clone().with_dynamics(trace);
+        run_job(topo, plan, app, &cfg_dyn, inputs).metrics.makespan
+    };
+
+    // Initial pool: random restarts, then imported seed traces (ties go
+    // to the earliest candidate, so an equally-bad random candidate wins
+    // over the seed — refinement treats them the same).
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut pool: Vec<Vec<Gene>> = (0..cfg.restarts.max(1))
+        .map(|_| gen_random(&mut rng, &shape, &cfg.budget))
+        .collect();
+    for tr in seed_traces {
+        let genes = genes_from_trace(tr, horizon, &cfg.budget);
+        if !genes.is_empty() {
+            pool.push(genes);
+        }
+    }
+
+    let mut best_genes = pool[0].clone();
+    let mut best_val = eval(&best_genes);
+    for cand in &pool[1..] {
+        let val = eval(cand);
+        if val > best_val {
+            best_val = val;
+            best_genes = cand.clone();
+        }
+    }
+
+    // Greedy coordinate refinement: per gene, take the best strictly
+    // improving move; optionally grow the genome while under budget.
+    for _pass in 0..cfg.refine_passes {
+        let mut improved = false;
+        for gi in 0..best_genes.len() {
+            let mut best_move: Option<(Gene, f64)> = None;
+            for mv in moves(best_genes[gi], &cfg.budget, &shape) {
+                if mv == best_genes[gi] {
+                    continue;
+                }
+                let mut cand = best_genes.clone();
+                cand[gi] = mv;
+                let val = eval(&cand);
+                let bar = best_move.as_ref().map_or(best_val, |&(_, v)| v);
+                if val > bar {
+                    best_move = Some((mv, val));
+                }
+            }
+            if let Some((mv, val)) = best_move {
+                best_genes[gi] = mv;
+                best_val = val;
+                improved = true;
+            }
+        }
+        // Grow: one more reducer outage on the highest-ranked reducer
+        // not yet attacked, if the budget allows it.
+        if outage_count(&best_genes) < cfg.budget.max_outages && shape.n_reducers > 0 {
+            let attacked: Vec<usize> = best_genes
+                .iter()
+                .filter_map(|g| match g {
+                    Gene::ReducerOutage { node, .. } => Some(*node),
+                    _ => None,
+                })
+                .collect();
+            if let Some(&fresh) =
+                shape.reducer_rank.iter().find(|k| !attacked.contains(*k))
+            {
+                let mut cand = best_genes.clone();
+                cand.push(Gene::ReducerOutage {
+                    node: fresh,
+                    start: 0.35,
+                    window: cfg.budget.max_window_frac,
+                });
+                let val = eval(&cand);
+                if val > best_val {
+                    best_genes = cand;
+                    best_val = val;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    Ok(SearchResult {
+        trace: to_trace(&best_genes, horizon, &label),
+        static_makespan,
+        worst_makespan: best_val,
+        evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dynamics::DynProfile;
+
+    fn shape() -> TraceShape {
+        TraceShape {
+            horizon: 100.0,
+            n_clusters: 4,
+            mapper_cluster: (0..8).map(|j| j % 4).collect(),
+            n_sources: 4,
+            n_reducers: 8,
+            reducer_rank: (0..8).rev().collect(),
+        }
+    }
+
+    #[test]
+    fn budget_validation() {
+        assert!(PerturbBudget::outages(3).validate().is_ok());
+        assert!(PerturbBudget { max_outages: 0, max_link_events: 0, ..PerturbBudget::outages(1) }
+            .validate()
+            .is_err());
+        assert!(PerturbBudget { min_link_factor: 0.0, ..PerturbBudget::outages(1) }
+            .validate()
+            .is_err());
+        assert!(PerturbBudget { max_window_frac: 0.0, ..PerturbBudget::outages(1) }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn random_genomes_respect_budget() {
+        let b = PerturbBudget::outages(3);
+        let mut rng = Pcg64::new(9);
+        for _ in 0..50 {
+            let genes = gen_random(&mut rng, &shape(), &b);
+            assert!(!genes.is_empty());
+            assert!(outage_count(&genes) <= b.max_outages);
+            let links = genes.len() - outage_count(&genes);
+            assert!(links <= b.max_link_events);
+            let tr = to_trace(&genes, 100.0, "t");
+            // from_events validated every factor/time; outages pair up.
+            assert_eq!(tr.len(), 2 * genes.len());
+        }
+    }
+
+    #[test]
+    fn seeded_failures_trace_imports_within_budget() {
+        let sh = shape();
+        let tr = ScenarioTrace::generate(DynProfile::Failures, 7, &sh);
+        let b = PerturbBudget::outages(8);
+        let genes = genes_from_trace(&tr, sh.horizon, &b);
+        assert!(!genes.is_empty());
+        assert!(outage_count(&genes) <= b.max_outages);
+        // The failures profile always takes down a top-ranked reducer;
+        // the import must preserve at least one reducer outage.
+        assert!(
+            genes.iter().any(|g| matches!(g, Gene::ReducerOutage { .. })),
+            "{genes:?}"
+        );
+        for g in &genes {
+            let window = match g {
+                Gene::MapperOutage { window, .. }
+                | Gene::ReducerOutage { window, .. }
+                | Gene::LinkWindow { window, .. } => *window,
+            };
+            assert!(window > 0.0 && window <= b.max_window_frac);
+        }
+    }
+
+    #[test]
+    fn moves_stay_within_budget() {
+        let b = PerturbBudget::outages(2);
+        let sh = shape();
+        let genes = [
+            Gene::ReducerOutage { node: 7, start: 0.4, window: 0.5 },
+            Gene::MapperOutage { node: 1, start: 0.1, window: 0.3 },
+            Gene::LinkWindow { cluster: Some(1), factor: 0.2, start: 0.2, window: 0.3 },
+        ];
+        for g in genes {
+            let ms = moves(g, &b, &sh);
+            assert!(!ms.is_empty());
+            for mv in ms {
+                match mv {
+                    Gene::MapperOutage { node, start, window } => {
+                        assert!(node < sh.mapper_cluster.len());
+                        assert!((0.0..=1.0).contains(&start));
+                        assert!(window > 0.0 && window <= b.max_window_frac);
+                    }
+                    Gene::ReducerOutage { node, start, window } => {
+                        assert!(node < sh.n_reducers);
+                        assert!((0.0..=1.0).contains(&start));
+                        assert!(window > 0.0 && window <= b.max_window_frac);
+                    }
+                    Gene::LinkWindow { cluster, factor, start, window } => {
+                        if let Some(c) = cluster {
+                            assert!(c < sh.n_clusters);
+                        }
+                        assert!(factor >= b.min_link_factor);
+                        assert!((0.0..=1.0).contains(&start));
+                        assert!(window > 0.0 && window <= b.max_window_frac);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The window-extension move — the one that guarantees strict
+    /// improvement over the seeded failures profile under plan
+    /// enforcement — must always be present for outage genes.
+    #[test]
+    fn outage_moves_include_window_extension() {
+        let b = PerturbBudget::outages(2);
+        let g = Gene::ReducerOutage { node: 3, start: 0.4, window: 0.5 };
+        let ms = moves(g, &b, &shape());
+        assert!(ms.contains(&Gene::ReducerOutage {
+            node: 3,
+            start: 0.4,
+            window: b.max_window_frac
+        }));
+    }
+}

@@ -21,7 +21,35 @@
 //!   lifecycle below) and later returns;
 //! * **compute-slowdown stragglers** — a node's compute capacity scaled
 //!   down and later restored (the §4.6.4 speculation trigger, now
-//!   reproducible instead of emergent).
+//!   reproducible instead of emergent);
+//! * **data staleness** — a source refreshes a fraction of its data
+//!   mid-push ([`DynEvent::SourceRefresh`]): copies already on the wire
+//!   or already delivered for splits that have not sealed yet are stale
+//!   and must be re-pushed (see the staleness lifecycle below).
+//!
+//! ## Staleness lifecycle
+//!
+//! [`DynEvent::SourceRefresh`] re-dirties `fraction` of `source`'s data
+//! at its firing time. The executor walks the source's push transfers in
+//! creation order and re-dirties transfers feeding *un-sealed* splits
+//! until the refreshed byte volume is covered:
+//!
+//! 1. a transfer still on the wire is cancelled and restarted from byte
+//!    zero (the half-written copy is stale);
+//! 2. a transfer already delivered is discarded at the mapper: its bytes
+//!    are de-credited from `metrics.push_bytes_delivered` and the
+//!    split's push gate re-opens;
+//! 3. every re-send is counted in `metrics.push_bytes_repushed` (the
+//!    staleness analogue of `reduce_bytes_replayed`), and a refresh that
+//!    re-dirtied at least one transfer bumps `metrics.sources_refreshed`.
+//!
+//! Once every part of a split has arrived and the push barrier released
+//! it, the split is *sealed*: the map task consumed a consistent
+//! snapshot, and a later refresh of its source creates a new version
+//! this job never observes (HDFS-style immutable inputs). At job end
+//! `push_bytes_delivered == push_bytes` exactly — the same integer-exact
+//! byte-conservation invariant the restartable reduce maintains for the
+//! shuffle.
 //!
 //! ## Reducer-failure lifecycle
 //!
@@ -59,6 +87,24 @@
 //! Scale factors are *absolute with respect to the topology base value*
 //! (never cumulative), so overlapping windows compose last-writer-wins
 //! and a final `factor = 1.0` event always restores the static platform.
+//!
+//! # Example
+//!
+//! Traces are reproducible bit-for-bit from a `(profile, seed)` pair:
+//!
+//! ```
+//! use mrperf::engine::dynamics::{DynProfile, ScenarioTrace, TraceShape};
+//! use mrperf::platform::{build_env, EnvKind};
+//!
+//! let topo = build_env(EnvKind::Global8);
+//! let shape = TraceShape::of(&topo, 120.0); // horizon: expected makespan
+//! let a = ScenarioTrace::generate(DynProfile::Failures, 7, &shape);
+//! let b = ScenarioTrace::generate(DynProfile::Failures, 7, &shape);
+//! assert_eq!(a, b);          // same seed → same trace
+//! assert!(!a.is_empty());    // every profile emits events
+//! let c = ScenarioTrace::generate(DynProfile::Staleness, 7, &shape);
+//! assert_ne!(a.events(), c.events());
+//! ```
 
 use crate::platform::Topology;
 use crate::util::rng::{Pcg64, Zipf};
@@ -93,6 +139,11 @@ pub enum DynEvent {
     MapperSlowdown { node: usize, factor: f64 },
     /// Scale reducer `node`'s compute capacity to `factor` × base.
     ReducerSlowdown { node: usize, factor: f64 },
+    /// Source `source` refreshes `fraction` of its data mid-job: push
+    /// transfers feeding splits that have not sealed yet carry stale
+    /// bytes and must be re-sent (see the staleness lifecycle in the
+    /// module docs). `fraction` must be in `(0, 1]`.
+    SourceRefresh { source: usize, fraction: f64 },
 }
 
 /// A [`DynEvent`] stamped with its virtual firing time (seconds).
@@ -121,10 +172,14 @@ pub enum DynProfile {
     Stragglers,
     /// Burst + failures + stragglers combined.
     Churn,
+    /// Correlated data staleness: Zipf-popular sources refresh fractions
+    /// of their data early in the run, forcing re-pushes of splits whose
+    /// data was still in flight or not yet sealed.
+    Staleness,
 }
 
 impl DynProfile {
-    pub fn all() -> [DynProfile; 6] {
+    pub fn all() -> [DynProfile; 7] {
         [
             DynProfile::Step,
             DynProfile::Periodic,
@@ -132,6 +187,7 @@ impl DynProfile {
             DynProfile::Failures,
             DynProfile::Stragglers,
             DynProfile::Churn,
+            DynProfile::Staleness,
         ]
     }
 
@@ -143,6 +199,7 @@ impl DynProfile {
             DynProfile::Failures => "failures",
             DynProfile::Stragglers => "stragglers",
             DynProfile::Churn => "churn",
+            DynProfile::Staleness => "staleness",
         }
     }
 }
@@ -162,7 +219,7 @@ pub fn parse_spec(spec: &str) -> Result<(DynProfile, u64), String> {
         .ok_or_else(|| {
             format!(
                 "unknown dynamics profile '{}' (step | periodic | burst | failures | \
-                 stragglers | churn)",
+                 stragglers | churn | staleness)",
                 parts[0]
             )
         })?;
@@ -185,6 +242,9 @@ pub struct TraceShape {
     pub n_clusters: usize,
     /// Cluster of each mapper node (`mapper_cluster[j]`).
     pub mapper_cluster: Vec<usize>,
+    /// Number of data sources (staleness profiles draw refresh victims
+    /// from these).
+    pub n_sources: usize,
     pub n_reducers: usize,
     /// Reducer indices in descending *attractiveness* (compute capacity
     /// × aggregate incoming shuffle bandwidth). Failure profiles draw
@@ -211,6 +271,7 @@ impl TraceShape {
             horizon,
             n_clusters: topo.clusters.len(),
             mapper_cluster: topo.mapper_cluster.clone(),
+            n_sources: topo.n_sources(),
             n_reducers: r,
             reducer_rank,
         }
@@ -258,6 +319,13 @@ impl ScenarioTrace {
                 | DynEvent::MapperRecover { .. }
                 | DynEvent::ReducerFail { .. }
                 | DynEvent::ReducerRecover { .. } => None,
+                DynEvent::SourceRefresh { fraction, .. } => {
+                    assert!(
+                        fraction.is_finite() && fraction > 0.0 && fraction <= 1.0,
+                        "refresh fraction must be in (0, 1], got {fraction}"
+                    );
+                    None
+                }
             };
             if let Some(f) = factor {
                 assert!(
@@ -302,6 +370,7 @@ impl ScenarioTrace {
             DynProfile::Burst => gen_burst(&mut rng, shape),
             DynProfile::Failures => gen_failures(&mut rng, shape),
             DynProfile::Stragglers => gen_stragglers(&mut rng, shape),
+            DynProfile::Staleness => gen_staleness(&mut rng, shape),
             DynProfile::Churn => {
                 let mut all = gen_burst(&mut rng.fork(), shape);
                 all.extend(gen_failures(&mut rng.fork(), shape));
@@ -440,6 +509,29 @@ fn gen_stragglers(rng: &mut Pcg64, shape: &TraceShape) -> Vec<TimedEvent> {
     events
 }
 
+/// Correlated data staleness: Zipf-popular sources refresh fractions of
+/// their data while the push is (likely) still in progress. Times are
+/// drawn early in the horizon so a push-bound job reliably sees at least
+/// one refresh land before its splits seal; refreshes landing after the
+/// push are harmless no-ops.
+fn gen_staleness(rng: &mut Pcg64, shape: &TraceShape) -> Vec<TimedEvent> {
+    let h = shape.horizon;
+    let s = shape.n_sources;
+    if s == 0 {
+        return Vec::new();
+    }
+    let n_refresh = (s / 3).max(3);
+    let zipf = Zipf::new(s as u64, 1.1);
+    let mut events = Vec::new();
+    for _ in 0..n_refresh {
+        let source = (zipf.sample(rng) - 1) as usize;
+        let t = h * rng.uniform(0.02, 0.25);
+        let fraction = rng.uniform(0.20, 0.60);
+        events.push(TimedEvent { time: t, event: DynEvent::SourceRefresh { source, fraction } });
+    }
+    events
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -449,6 +541,7 @@ mod tests {
             horizon: 100.0,
             n_clusters: 4,
             mapper_cluster: (0..12).map(|j| j % 4).collect(),
+            n_sources: 6,
             n_reducers: 12,
             reducer_rank: (0..12).rev().collect(),
         }
@@ -488,6 +581,10 @@ mod tests {
                         | DynEvent::ReducerFail { node }
                         | DynEvent::ReducerRecover { node } => {
                             assert!(node < shape().n_reducers)
+                        }
+                        DynEvent::SourceRefresh { source, fraction } => {
+                            assert!(source < shape().n_sources);
+                            assert!(fraction > 0.0 && fraction <= 1.0);
                         }
                         DynEvent::WanScale { .. } => {}
                     }
@@ -622,5 +719,56 @@ mod tests {
         let tr = ScenarioTrace::empty("none");
         assert!(tr.is_empty());
         assert_eq!(tr.len(), 0);
+    }
+
+    /// The staleness profile emits only early source refreshes (they must
+    /// be able to intersect the push phase) with in-range fractions, and
+    /// is seed-deterministic like every other profile.
+    #[test]
+    fn staleness_profile_refreshes_sources_early() {
+        for seed in [1u64, 7, 42] {
+            let sh = shape();
+            let tr = ScenarioTrace::generate(DynProfile::Staleness, seed, &sh);
+            assert!(tr.len() >= (sh.n_sources / 3).max(3), "too few refreshes");
+            for te in tr.events() {
+                match te.event {
+                    DynEvent::SourceRefresh { source, fraction } => {
+                        assert!(source < sh.n_sources);
+                        assert!((0.20..=0.60).contains(&fraction), "fraction {fraction}");
+                        assert!(
+                            te.time <= 0.25 * sh.horizon,
+                            "refresh at {} too late to hit the push",
+                            te.time
+                        );
+                    }
+                    other => panic!("staleness emitted a non-refresh event {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn staleness_handles_zero_sources() {
+        let sh = TraceShape { n_sources: 0, ..shape() };
+        let tr = ScenarioTrace::generate(DynProfile::Staleness, 7, &sh);
+        assert!(tr.is_empty());
+    }
+
+    #[test]
+    fn parse_spec_accepts_staleness() {
+        assert_eq!(parse_spec("staleness").unwrap(), (DynProfile::Staleness, DEFAULT_TRACE_SEED));
+        assert_eq!(parse_spec("staleness:9").unwrap(), (DynProfile::Staleness, 9));
+    }
+
+    #[test]
+    #[should_panic(expected = "refresh fraction")]
+    fn from_events_rejects_bad_refresh_fraction() {
+        let _ = ScenarioTrace::from_events(
+            "bad",
+            vec![TimedEvent {
+                time: 1.0,
+                event: DynEvent::SourceRefresh { source: 0, fraction: 0.0 },
+            }],
+        );
     }
 }

@@ -23,9 +23,12 @@ pub type TaskId = usize;
 /// A phase-transition event on the engine's virtual timeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineEvent {
-    /// One part (or replica copy) of a map task's input split arrived at
-    /// its mapper (§3.1.2 push).
-    PushArrived { task: TaskId },
+    /// Push transfer `xfer` (an index into the executor's push-transfer
+    /// table, which records task, source, target node and byte count —
+    /// the state a source refresh needs to re-send it) was fully
+    /// delivered: one part (or replica copy) of a map task's input split
+    /// arrived at its mapper (§3.1.2 push).
+    PushArrived { xfer: usize },
     /// A remote fetch of a task's split finished — the stolen
     /// (`speculative: false`) or backup-copy (`true`) path of §4.6.4.
     FetchArrived { task: TaskId, speculative: bool },

@@ -42,6 +42,17 @@
 //! range whose reduce *compute* has completed is durable — a later
 //! failure of its owner cannot lose it.
 //!
+//! **The push is restartable too**: every source→mapper transfer is
+//! recorded in a push-transfer table. A source refresh
+//! ([`super::dynamics::DynEvent::SourceRefresh`], the `staleness`
+//! profile) re-dirties transfers feeding splits that have not sealed
+//! yet: in-flight copies restart from byte zero, delivered copies are
+//! discarded (de-credited from `metrics.push_bytes_delivered`) and
+//! re-sent, with the re-push traffic accounted in
+//! `metrics.push_bytes_repushed`. At job end
+//! `push_bytes_delivered == push_bytes` exactly — the push-side mirror
+//! of the shuffle's byte-conservation invariant.
+//!
 //! The engine executes the *real* map/reduce functions on real records —
 //! byte counts, skew and record conservation are genuine — while time is
 //! virtual (charged from the topology's bandwidths/compute rates).
@@ -103,6 +114,25 @@ enum XferState {
     Delivered,
 }
 
+/// One source→mapper push transfer (a part of a split, or a replica
+/// copy of one), kept so a source refresh ([`DynEvent::SourceRefresh`])
+/// can invalidate and re-send it while the split is still unsealed.
+struct PushXfer {
+    /// Map task whose split this transfer feeds.
+    task: TaskId,
+    /// Source the data originates at.
+    source: usize,
+    /// Mapper (or replica) node the data lands on.
+    to: NodeId,
+    bytes: f64,
+    state: XferState,
+    /// Whether this transfer has ever been put on the wire — re-sends of
+    /// a sent transfer are staleness re-push traffic, first sends are not.
+    sent_once: bool,
+    /// In-flight fluid activity (so a refresh can cancel it).
+    activity: Option<ActivityId>,
+}
+
 /// One mapper→reducer shuffle transfer, kept until job end so a reducer
 /// failure can replay it (map outputs are durable, like Hadoop's).
 struct ShuffleXfer {
@@ -159,6 +189,17 @@ struct Executor<'a> {
     /// per-event scheduling snapshots don't rebuild it).
     task_home: Vec<NodeId>,
     partitioner: Partitioner,
+    // push state (restartable under source refreshes)
+    /// Every push transfer ever emitted (indexed by the `xfer` id in
+    /// [`EngineEvent::PushArrived`]); retained so a source refresh can
+    /// invalidate and re-send copies of unsealed splits.
+    push_xfers: Vec<PushXfer>,
+    /// Transfer ids per source, in creation order (refresh selection
+    /// walks only the refreshed source's transfers).
+    source_xfers: Vec<Vec<usize>>,
+    /// Total push bytes originating at each source (incl. replicas) —
+    /// the base a refresh fraction applies to.
+    source_push_bytes: Vec<f64>,
     // shuffle state
     push_parts_left: usize,
     maps_left: usize,
@@ -258,6 +299,9 @@ impl<'a> Executor<'a> {
             tasks: Vec::new(),
             task_home: Vec::new(),
             partitioner,
+            push_xfers: Vec::new(),
+            source_xfers: vec![Vec::new(); s],
+            source_push_bytes: vec![0.0; s],
             push_parts_left: 0,
             maps_left: 0,
             maps_left_per_node: vec![0; m],
@@ -368,7 +412,8 @@ impl<'a> Executor<'a> {
         }
     }
 
-    /// Kick off all push transfers.
+    /// Kick off all push transfers (each recorded in the push-transfer
+    /// table so a source refresh can invalidate and re-send it).
     fn start_push(&mut self) {
         let repl = self.config.replication.max(1);
         let m = self.topo.n_mappers();
@@ -380,36 +425,14 @@ impl<'a> Executor<'a> {
                 .map(|(src, recs)| (*src, batch_size(recs) as f64))
                 .collect();
             for (src, bytes) in parts {
-                let a = self.sim.add_activity(
-                    bytes,
-                    vec![
-                        self.sm_link[src][mapper],
-                        self.src_egress[src],
-                        self.map_ingress[mapper],
-                    ],
-                );
-                self.pending.insert(a, EngineEvent::PushArrived { task: tid });
-                self.tasks[tid].pending_parts += 1;
-                self.push_parts_left += 1;
-                self.metrics.push_bytes += bytes;
+                self.emit_push(tid, src, mapper, bytes);
                 // HDFS-style replication: each replica is one more
                 // wide-area copy of the block (§4.6.5). Replica writes
                 // gate the split like primary parts (the HDFS write
                 // pipeline completes when all replicas acknowledge).
                 for extra in 1..repl {
                     let replica_node = (mapper + extra) % m;
-                    let a = self.sim.add_activity(
-                        bytes,
-                        vec![
-                            self.sm_link[src][replica_node],
-                            self.src_egress[src],
-                            self.map_ingress[replica_node],
-                        ],
-                    );
-                    self.pending.insert(a, EngineEvent::PushArrived { task: tid });
-                    self.tasks[tid].pending_parts += 1;
-                    self.push_parts_left += 1;
-                    self.metrics.push_bytes += bytes;
+                    self.emit_push(tid, src, replica_node, bytes);
                 }
             }
         }
@@ -417,6 +440,45 @@ impl<'a> Executor<'a> {
         if self.push_parts_left == 0 {
             self.release_maps_after_push();
         }
+    }
+
+    /// Record one push transfer and put it on the wire.
+    fn emit_push(&mut self, tid: TaskId, src: usize, to: NodeId, bytes: f64) {
+        let id = self.push_xfers.len();
+        self.push_xfers.push(PushXfer {
+            task: tid,
+            source: src,
+            to,
+            bytes,
+            state: XferState::Held,
+            sent_once: false,
+            activity: None,
+        });
+        self.source_xfers[src].push(id);
+        self.source_push_bytes[src] += bytes;
+        self.tasks[tid].pending_parts += 1;
+        self.push_parts_left += 1;
+        self.metrics.push_bytes += bytes;
+        self.send_push(id);
+    }
+
+    /// Put push transfer `id` on the wire (first send or staleness
+    /// re-send). Re-sends of a previously sent transfer are re-push
+    /// traffic.
+    fn send_push(&mut self, id: usize) {
+        let (src, to, bytes) =
+            (self.push_xfers[id].source, self.push_xfers[id].to, self.push_xfers[id].bytes);
+        let a = self.sim.add_activity(
+            bytes,
+            vec![self.sm_link[src][to], self.src_egress[src], self.map_ingress[to]],
+        );
+        self.pending.insert(a, EngineEvent::PushArrived { xfer: id });
+        self.push_xfers[id].state = XferState::InFlight;
+        self.push_xfers[id].activity = Some(a);
+        if self.push_xfers[id].sent_once {
+            self.metrics.push_bytes_repushed += bytes;
+        }
+        self.push_xfers[id].sent_once = true;
     }
 
     fn release_maps_after_push(&mut self) {
@@ -880,7 +942,8 @@ impl<'a> Executor<'a> {
                 break;
             }
             self.dyn_cursor += 1;
-            let (m, r) = (self.topo.n_mappers(), self.topo.n_reducers());
+            let (s, m, r) =
+                (self.topo.n_sources(), self.topo.n_mappers(), self.topo.n_reducers());
             let effective = match te.event {
                 DynEvent::WanScale { factor } => {
                     self.scale_links(None, factor);
@@ -914,6 +977,10 @@ impl<'a> Executor<'a> {
                     self.sim.set_capacity(self.red_compute[node], self.topo.c_red[node] * factor);
                     true
                 }
+                DynEvent::SourceRefresh { source, fraction } if source < s => {
+                    self.refresh_source(source, fraction);
+                    true
+                }
                 // Out-of-range node ids (a trace generated for a different
                 // platform): ignore — and don't count as applied — rather
                 // than panic mid-simulation.
@@ -922,7 +989,8 @@ impl<'a> Executor<'a> {
                 | DynEvent::MapperSlowdown { .. }
                 | DynEvent::ReducerFail { .. }
                 | DynEvent::ReducerRecover { .. }
-                | DynEvent::ReducerSlowdown { .. } => false,
+                | DynEvent::ReducerSlowdown { .. }
+                | DynEvent::SourceRefresh { .. } => false,
             };
             if effective {
                 self.metrics.dyn_events += 1;
@@ -1048,6 +1116,67 @@ impl<'a> Executor<'a> {
         }
         self.node_up[node] = true;
         self.map_slots_free[node] = self.config.map_slots;
+    }
+
+    /// Source `source` refreshed `fraction` of its data (see the
+    /// staleness lifecycle in [`super::dynamics`]): walk the source's
+    /// push transfers in creation order and re-dirty transfers feeding
+    /// *unsealed* splits (tasks still waiting for data) until the
+    /// refreshed byte volume is covered. An in-flight copy is cancelled
+    /// and restarted from byte zero; a delivered copy is discarded at the
+    /// mapper — de-credited from `push_bytes_delivered` with the split's
+    /// push gate re-opened. Every re-send is counted in
+    /// `push_bytes_repushed`. Splits whose data fully arrived and whose
+    /// barrier released them are sealed: the map task consumed a
+    /// consistent snapshot, and the refresh produces a new version this
+    /// job never observes.
+    fn refresh_source(&mut self, source: usize, fraction: f64) {
+        let target = fraction * self.source_push_bytes[source];
+        if target <= 0.0 {
+            return;
+        }
+        let mut acc = 0.0f64;
+        let mut dirtied: Vec<usize> = Vec::new();
+        for &id in &self.source_xfers[source] {
+            if acc >= target {
+                break;
+            }
+            if self.tasks[self.push_xfers[id].task].state != TaskState::WaitingForData {
+                continue;
+            }
+            acc += self.push_xfers[id].bytes;
+            dirtied.push(id);
+        }
+        if dirtied.is_empty() {
+            return;
+        }
+        self.metrics.sources_refreshed += 1;
+        for id in dirtied {
+            match self.push_xfers[id].state {
+                XferState::InFlight => {
+                    // The half-written copy is stale: cancel and restart
+                    // the transfer from byte zero. `push_parts_left` and
+                    // the split's gate still count it as outstanding.
+                    let a = self.push_xfers[id]
+                        .activity
+                        .take()
+                        .expect("in-flight push transfer has an activity");
+                    self.sim.cancel(a);
+                    self.pending.remove(&a);
+                }
+                XferState::Delivered => {
+                    // The delivered copy is stale: discard it at the
+                    // mapper and re-open the split's push gate.
+                    self.metrics.push_bytes_delivered -= self.push_xfers[id].bytes;
+                    self.tasks[self.push_xfers[id].task].pending_parts += 1;
+                    self.push_parts_left += 1;
+                }
+                XferState::Held => {
+                    unreachable!("push transfers are sent immediately and never held")
+                }
+            }
+            self.send_push(id);
+        }
     }
 
     /// Reducer `node` fails (see the module docs for the lifecycle):
@@ -1213,7 +1342,11 @@ impl<'a> Executor<'a> {
     /// order).
     fn dispatch(&mut self, ev: EngineEvent) {
         match ev {
-            EngineEvent::PushArrived { task } => {
+            EngineEvent::PushArrived { xfer } => {
+                let task = self.push_xfers[xfer].task;
+                self.push_xfers[xfer].state = XferState::Delivered;
+                self.push_xfers[xfer].activity = None;
+                self.metrics.push_bytes_delivered += self.push_xfers[xfer].bytes;
                 self.push_parts_left -= 1;
                 self.metrics.push_end = self.sim.now();
                 self.tasks[task].pending_parts -= 1;

@@ -46,6 +46,21 @@ pub struct JobMetrics {
     /// byte-conservation invariant property-tested in tests/dynamics.rs
     /// (total wire traffic is `shuffle_bytes + reduce_bytes_replayed`).
     pub shuffle_bytes_delivered: f64,
+    /// Source-refresh events (staleness dynamics) that actually
+    /// re-dirtied in-progress push data. A refresh landing after every
+    /// affected split sealed is a no-op for this job and is not counted.
+    pub sources_refreshed: usize,
+    /// Push bytes re-sent because a source refresh re-dirtied them (the
+    /// staleness replay traffic on top of `push_bytes`). Mirrors
+    /// `reduce_bytes_replayed` on the push side.
+    pub push_bytes_repushed: f64,
+    /// Push bytes currently *credited* as delivered: incremented on
+    /// arrival, de-credited when a source refresh invalidates a copy that
+    /// had already arrived. At job end every unique push byte is credited
+    /// exactly once, so `push_bytes_delivered == push_bytes` — the same
+    /// exact-integer conservation discipline as the shuffle (total push
+    /// wire traffic is `push_bytes + push_bytes_repushed`).
+    pub push_bytes_delivered: f64,
     /// Input / intermediate / output record counts (conservation checks).
     pub input_records: usize,
     pub intermediate_records: usize,

@@ -12,13 +12,19 @@
 //!   dynamic (stealing + speculation, §4.6.4) policies, including
 //!   locality-aware stealing;
 //! * [`dynamics`] — seeded scenario traces injecting time-varying
-//!   bandwidth, mapper *and reducer* failures/recoveries and compute
-//!   stragglers (see the reducer-failure lifecycle in the module docs);
+//!   bandwidth, mapper *and reducer* failures/recoveries, compute
+//!   stragglers and correlated data staleness (see the reducer-failure
+//!   and staleness lifecycles in the module docs);
+//! * [`adversary`] — budgeted adversarial trace search: the worst-case
+//!   churn for a *given plan*, found by seeded random restarts plus
+//!   greedy refinement with the executor as the deterministic oracle;
 //! * [`executor`] — the thin orchestrator driving push/map/shuffle/
 //!   reduce as events over the pieces above, re-queuing map work lost to
-//!   injected failures and replaying/re-partitioning reduce work via the
-//!   retained shuffle-transfer table (restartable reduce).
+//!   injected failures, replaying/re-partitioning reduce work via the
+//!   retained shuffle-transfer table (restartable reduce), and
+//!   re-sending stale push data via the retained push-transfer table.
 
+pub mod adversary;
 pub mod dynamics;
 pub mod events;
 pub mod executor;
@@ -28,6 +34,7 @@ pub mod metrics;
 pub mod partitioner;
 pub mod scheduler;
 
+pub use adversary::{PerturbBudget, SearchConfig, SearchResult};
 pub use dynamics::{DynEvent, DynProfile, ScenarioTrace, TimedEvent, TraceShape};
 pub use events::{EngineEvent, EventQueue};
 pub use executor::{run_job, JobResult};

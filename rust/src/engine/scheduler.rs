@@ -18,6 +18,33 @@
 //! Contract: a scheduler must never assign more tasks to a node than it
 //! has free slots. The executor additionally enforces this, and
 //! tests/engine_props.rs property-tests it for every implementation.
+//!
+//! # Example
+//!
+//! Policies are plain values over a read-only snapshot — no engine
+//! required to exercise one:
+//!
+//! ```
+//! use mrperf::engine::scheduler::{PlanLocalScheduler, SchedView, Scheduler};
+//!
+//! // Two tasks, homed on nodes 0 and 1; node 1 has no free slot.
+//! let view = SchedView {
+//!     now: 0.0,
+//!     home: &[0, 1],
+//!     ready: &[0, 1],
+//!     running: &[],
+//!     free_slots: &[1, 0],
+//!     queued: &[1, 1],
+//!     capacity: &[1.0, 1.0],
+//!     durations: &[],
+//!     cluster: &[0, 0],
+//!     up: &[true, true],
+//! };
+//! let placed = PlanLocalScheduler.assign(&view);
+//! // Strict plan enforcement: task 0 runs at home, task 1 must wait.
+//! assert_eq!(placed.len(), 1);
+//! assert_eq!((placed[0].task, placed[0].node), (0, 0));
+//! ```
 
 use super::events::TaskId;
 use super::job::JobConfig;

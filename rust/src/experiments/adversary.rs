@@ -1,0 +1,310 @@
+//! Adversary experiment: worst-case trace search for an optimized plan,
+//! reported per scheduler family.
+//!
+//! The churn experiment answers "how does the plan fare under *random*
+//! seeded churn"; this one answers the harder question the paper's
+//! end-to-end claim ultimately rests on: "how bad can churn *get* for
+//! this specific plan, within an explicit perturbation budget" — and
+//! how much of that worst case each execution mode recovers. The
+//! pipeline:
+//!
+//! 1. build the same scenario as `experiment churn` at the requested
+//!    size ([`super::churn::cell_setup`] — same topology, inputs and
+//!    unhedged `e2e-multi` plan, so the comparison against the seeded
+//!    `failures` profile is apples-to-apples);
+//! 2. run the seeded `failures` profile under plan-local enforcement —
+//!    the random-churn baseline;
+//! 3. run the adversarial search ([`crate::engine::adversary::search`])
+//!    against the plan-local mode, seeding the candidate pool with that
+//!    same `failures` trace so the found trace is at least as damaging
+//!    (greedy refinement then makes it strictly worse in practice: the
+//!    budget allows longer outage windows than the seeded profile ever
+//!    draws);
+//! 4. replay the worst-case trace under every execution mode —
+//!    plan-local, dynamic, dynamic+locality, and the hedged plan under
+//!    plan-local enforcement — tabulating static vs adversarial
+//!    makespan, degradation, and the seeded-failures degradation next to
+//!    it. The spread across rows is the measurable robustness gap.
+//!
+//! Deterministic given `(generator seed, search seed, budget, restarts,
+//! hedge)`.
+
+use crate::engine::adversary::{search, PerturbBudget, SearchConfig, SearchResult};
+use crate::engine::dynamics::{DynEvent, DynProfile, ScenarioTrace, TraceShape};
+use crate::engine::job::JobConfig;
+use crate::engine::run_job;
+use crate::experiments::churn::{cell_setup, CellSetup, DEFAULT_HEDGE};
+use crate::optimizer::{FailureAwareOptimizer, PlanOptimizer};
+use crate::platform::scale::parse_spec_config;
+use crate::util::table::Table;
+
+/// Defaults for `mrperf experiment adversary` (and `experiment all`).
+pub const DEFAULT_GEN: &str = "hier-wan:64";
+pub const DEFAULT_SEED: u64 = 7;
+pub const DEFAULT_RESTARTS: usize = 6;
+
+/// One execution mode's showing under the worst-case trace.
+#[derive(Debug, Clone)]
+pub struct AdversaryCell {
+    /// `plan-local` | `dynamic` | `dynamic+locality` | `hedged`.
+    pub mode: &'static str,
+    pub static_makespan: f64,
+    pub adversary_makespan: f64,
+    /// The same mode under the seeded `failures` profile (the
+    /// random-churn baseline the adversary must beat).
+    pub failures_makespan: f64,
+    pub ranges_reassigned: usize,
+    pub stolen: usize,
+    pub replay_bytes: f64,
+}
+
+impl AdversaryCell {
+    pub fn degradation(&self) -> f64 {
+        self.adversary_makespan / self.static_makespan - 1.0
+    }
+
+    pub fn failures_degradation(&self) -> f64 {
+        self.failures_makespan / self.static_makespan - 1.0
+    }
+}
+
+/// The experiment outcome: the search result plus the per-mode table.
+#[derive(Debug, Clone)]
+pub struct AdversaryOutcome {
+    pub result: SearchResult,
+    /// Plan-local degradation under the seeded `failures` profile.
+    pub failures_degradation: f64,
+    pub cells: Vec<AdversaryCell>,
+}
+
+/// The execution modes replayed under the worst-case trace. Mirrors the
+/// churn matrix: the `hedged` row is the failure-aware plan under the
+/// same strict enforcement as `plan-local`.
+fn modes() -> [(&'static str, bool, JobConfig); 4] {
+    [
+        ("plan-local", false, JobConfig::optimized()),
+        ("dynamic", false, JobConfig::vanilla_hadoop()),
+        ("dynamic+locality", false, JobConfig::dynamic_locality()),
+        ("hedged", true, JobConfig::optimized()),
+    ]
+}
+
+/// Run the full adversary pipeline. `budget` of `None` derives the node
+/// budget from the seeded `failures` profile's own outage count (so the
+/// seeded trace always fits the pool un-clipped).
+pub fn run_at(
+    gen_spec: &str,
+    seed: u64,
+    budget: Option<usize>,
+    restarts: usize,
+    hedge: f64,
+) -> Result<AdversaryOutcome, String> {
+    crate::optimizer::hedged::validate_hedge(hedge).map_err(|e| format!("--hedge: {e}"))?;
+    if restarts == 0 {
+        return Err("--restarts must be at least 1".into());
+    }
+    if budget == Some(0) {
+        return Err("--budget 0 allows the adversary no outage at all".into());
+    }
+    let base = parse_spec_config(gen_spec)?;
+    let CellSetup { topo, inputs, plan, sapp, app, bc } = cell_setup(&base, base.nodes);
+    let hedged_plan = FailureAwareOptimizer::new(hedge).optimize(&topo, app, bc);
+
+    // Plan-local static run anchors the horizon, exactly as in churn.
+    let plan_local = JobConfig::optimized();
+    let static_pl = run_job(&topo, &plan, &sapp, &plan_local, &inputs).metrics;
+    let horizon = static_pl.makespan.max(1e-9);
+    let shape = TraceShape::of(&topo, horizon);
+
+    // Random-churn baseline: the seeded failures profile.
+    let failures_trace = ScenarioTrace::generate(DynProfile::Failures, seed, &shape);
+
+    // Budget: default to the seeded profile's own outage count, so the
+    // imported seed candidate is never clipped.
+    let k = budget.unwrap_or_else(|| {
+        failures_trace
+            .events()
+            .iter()
+            .filter(|te| {
+                matches!(
+                    te.event,
+                    DynEvent::MapperFail { .. } | DynEvent::ReducerFail { .. }
+                )
+            })
+            .count()
+            .max(1)
+    });
+    // The static run above anchors the horizon; hand its makespan to the
+    // search so it doesn't repeat the identical deterministic simulation.
+    let search_cfg = SearchConfig {
+        restarts,
+        known_static_makespan: Some(static_pl.makespan),
+        ..SearchConfig::new(PerturbBudget::outages(k), seed)
+    };
+    let result = search(
+        &topo,
+        &plan,
+        &sapp,
+        &plan_local,
+        &inputs,
+        std::slice::from_ref(&failures_trace),
+        &search_cfg,
+    )?;
+
+    // Replay worst case + baseline under every mode. The plan-local
+    // static run is the one already measured for the horizon (the
+    // executor is deterministic, so re-running it would only repeat
+    // work).
+    let mut cells = Vec::new();
+    for (idx, (mode, hedged, cfg)) in modes().into_iter().enumerate() {
+        let p = if hedged { &hedged_plan } else { &plan };
+        let stat = if idx == 0 {
+            static_pl.clone()
+        } else {
+            run_job(&topo, p, &sapp, &cfg, &inputs).metrics
+        };
+        let adv_cfg = cfg.clone().with_dynamics(result.trace.clone());
+        let adv = run_job(&topo, p, &sapp, &adv_cfg, &inputs).metrics;
+        assert_eq!(
+            adv.output_records, adv.input_records,
+            "{mode} lost records under the adversarial trace"
+        );
+        let fail_cfg = cfg.with_dynamics(failures_trace.clone());
+        let fail = run_job(&topo, p, &sapp, &fail_cfg, &inputs).metrics;
+        cells.push(AdversaryCell {
+            mode,
+            static_makespan: stat.makespan,
+            adversary_makespan: adv.makespan,
+            failures_makespan: fail.makespan,
+            ranges_reassigned: adv.reduce_ranges_reassigned,
+            stolen: adv.stolen,
+            replay_bytes: adv.reduce_bytes_replayed,
+        });
+    }
+    let failures_degradation = cells[0].failures_degradation();
+    Ok(AdversaryOutcome { result, failures_degradation, cells })
+}
+
+/// Render the adversary report for explicit knobs.
+pub fn run_with(
+    gen_spec: &str,
+    seed: u64,
+    budget: Option<usize>,
+    restarts: usize,
+    hedge: f64,
+) -> Result<Vec<Table>, String> {
+    let out = run_at(gen_spec, seed, budget, restarts, hedge)?;
+
+    // Table 1: the worst-case trace itself, event by event.
+    let mut tt = Table::new(
+        format!(
+            "adversary: worst-case trace found (--gen {gen_spec} --seed {seed}, \
+             {} executor evaluations)",
+            out.result.evals
+        ),
+        &["time (s)", "event"],
+    )
+    .label_first();
+    for te in out.result.trace.events() {
+        let desc = match te.event {
+            DynEvent::WanScale { factor } => format!("WAN links × {factor:.3}"),
+            DynEvent::ClusterLinkScale { cluster, factor } => {
+                format!("cluster {cluster} links × {factor:.3}")
+            }
+            DynEvent::MapperFail { node } => format!("mapper {node} fails"),
+            DynEvent::MapperRecover { node } => format!("mapper {node} recovers"),
+            DynEvent::ReducerFail { node } => format!("reducer {node} fails"),
+            DynEvent::ReducerRecover { node } => format!("reducer {node} recovers"),
+            DynEvent::MapperSlowdown { node, factor } => {
+                format!("mapper {node} compute × {factor:.3}")
+            }
+            DynEvent::ReducerSlowdown { node, factor } => {
+                format!("reducer {node} compute × {factor:.3}")
+            }
+            DynEvent::SourceRefresh { source, fraction } => {
+                format!("source {source} refreshes {:.0}% of its data", fraction * 100.0)
+            }
+        };
+        tt.add_row(vec![format!("{:.4}", te.time), desc]);
+    }
+
+    // Table 2: per-mode robustness under the worst case, with the seeded
+    // failures profile alongside.
+    let mut t = Table::new(
+        format!(
+            "adversary robustness: worst-case vs seeded failures per execution mode \
+             (plan-local worst-case {:+.1}% vs seeded {:+.1}%)",
+            out.cells[0].degradation() * 100.0,
+            out.failures_degradation * 100.0
+        ),
+        &[
+            "mode",
+            "static (s)",
+            "adversary (s)",
+            "adv-deg.",
+            "failures (s)",
+            "fail-deg.",
+            "adopted",
+            "stolen",
+            "replay (KB)",
+        ],
+    );
+    for c in &out.cells {
+        t.add_row(vec![
+            c.mode.to_string(),
+            format!("{:.4}", c.static_makespan),
+            format!("{:.4}", c.adversary_makespan),
+            format!("{:+.1}%", c.degradation() * 100.0),
+            format!("{:.4}", c.failures_makespan),
+            format!("{:+.1}%", c.failures_degradation() * 100.0),
+            c.ranges_reassigned.to_string(),
+            c.stolen.to_string(),
+            format!("{:.1}", c.replay_bytes / 1e3),
+        ]);
+    }
+    Ok(vec![tt, t])
+}
+
+/// The `adversary` experiment with its default knobs (used by
+/// `mrperf experiment all`).
+pub fn run() -> Vec<Table> {
+    run_with(DEFAULT_GEN, DEFAULT_SEED, None, DEFAULT_RESTARTS, DEFAULT_HEDGE)
+        .expect("default adversary knobs are valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same knobs → bit-identical outcome (sized down for debug builds).
+    #[test]
+    fn adversary_outcome_is_deterministic() {
+        let a = run_at("hier-wan:16", 7, Some(2), 2, 0.1).unwrap();
+        let b = run_at("hier-wan:16", 7, Some(2), 2, 0.1).unwrap();
+        assert_eq!(a.result.trace, b.result.trace);
+        assert_eq!(a.result.worst_makespan.to_bits(), b.result.worst_makespan.to_bits());
+        assert_eq!(a.result.evals, b.result.evals);
+        assert_eq!(a.cells.len(), 4);
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.mode, y.mode);
+            assert_eq!(x.adversary_makespan.to_bits(), y.adversary_makespan.to_bits());
+            assert_eq!(x.failures_makespan.to_bits(), y.failures_makespan.to_bits());
+        }
+        // The adversary must be at least as damaging to plan-local as
+        // the seeded failures profile it was seeded with.
+        assert!(
+            a.cells[0].degradation() >= a.failures_degradation,
+            "adversary {:+.3} < seeded failures {:+.3}",
+            a.cells[0].degradation(),
+            a.failures_degradation
+        );
+    }
+
+    #[test]
+    fn bad_knobs_error_cleanly() {
+        assert!(run_at("nope:16", 7, None, 2, 0.0).is_err());
+        assert!(run_at("hier-wan:16", 7, Some(0), 2, 0.0).is_err());
+        assert!(run_at("hier-wan:16", 7, None, 0, 0.0).is_err());
+        assert!(run_at("hier-wan:16", 7, None, 2, 1.5).is_err());
+    }
+}

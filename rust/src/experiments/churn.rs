@@ -25,7 +25,11 @@
 //! strict plan-local enforcement as the first row — isolating what
 //! failure-aware *planning* buys without any runtime adaptivity — and
 //! under a failure-bearing trace it beats the unhedged plan-local row
-//! because far less key-range mass strands on the dead reducers.
+//! because far less key-range mass strands on the dead reducers. The
+//! matrix includes the `staleness` profile (sources refreshing data
+//! mid-push): its `refresh` / `repush (KB)` columns account the re-sent
+//! push traffic, conserved exactly (`push_bytes_delivered ==
+//! push_bytes` is asserted per cell).
 //!
 //! [`DynamicScheduler`]: crate::engine::scheduler::DynamicScheduler
 //! [`PlanLocalScheduler`]: crate::engine::scheduler::PlanLocalScheduler
@@ -115,21 +119,22 @@ pub fn run_cells(gen_spec: &str, dyn_spec: &str) -> Result<Vec<ChurnCell>, Strin
     run_cells_at(&base, profile, trace_seed, &sweep_sizes(base.nodes))
 }
 
-/// Shared per-size setup — both the single-profile sweep and the
-/// `--profiles all` matrix build their cells from exactly this, so the
-/// matrix's `plan-local` row is the same scenario as the single-profile
-/// table's.
-struct CellSetup {
-    topo: Topology,
-    inputs: Vec<Vec<Record>>,
+/// Shared per-size setup — the single-profile sweep, the
+/// `--profiles all` matrix *and* the adversary experiment build their
+/// cells from exactly this, so their `plan-local` rows are the same
+/// scenario and the adversary's "vs seeded failures" comparison is
+/// apples-to-apples.
+pub(crate) struct CellSetup {
+    pub(crate) topo: Topology,
+    pub(crate) inputs: Vec<Vec<Record>>,
     /// The unhedged end-to-end plan.
-    plan: Plan,
-    sapp: SyntheticApp,
-    app: AppModel,
-    bc: BarrierConfig,
+    pub(crate) plan: Plan,
+    pub(crate) sapp: SyntheticApp,
+    pub(crate) app: AppModel,
+    pub(crate) bc: BarrierConfig,
 }
 
-fn cell_setup(base: &ScaleConfig, nodes: usize) -> CellSetup {
+pub(crate) fn cell_setup(base: &ScaleConfig, nodes: usize) -> CellSetup {
     let app = AppModel::new(1.0);
     let bc = BarrierConfig::HADOOP;
     let gen = generate(&ScaleConfig::new(base.kind, nodes).seed(base.seed));
@@ -269,6 +274,9 @@ pub struct MatrixCell {
     pub stolen: usize,
     pub ranges_reassigned: usize,
     pub replay_bytes: f64,
+    /// Staleness counters (non-zero only under the `staleness` profile).
+    pub sources_refreshed: usize,
+    pub repush_bytes: f64,
 }
 
 impl MatrixCell {
@@ -326,6 +334,10 @@ pub fn run_matrix_at(
                 m.output_records, m.input_records,
                 "{mode} lost records under {profile:?}"
             );
+            assert_eq!(
+                m.push_bytes_delivered, m.push_bytes,
+                "{mode} lost push bytes under {profile:?}"
+            );
             cells.push(MatrixCell {
                 profile,
                 mode,
@@ -338,6 +350,8 @@ pub fn run_matrix_at(
                 stolen: m.stolen,
                 ranges_reassigned: m.reduce_ranges_reassigned,
                 replay_bytes: m.reduce_bytes_replayed,
+                sources_refreshed: m.sources_refreshed,
+                repush_bytes: m.push_bytes_repushed,
             });
         }
     }
@@ -374,6 +388,8 @@ pub fn run_matrix_with(
             "stolen",
             "adopted",
             "replay (KB)",
+            "refresh",
+            "repush (KB)",
         ],
     );
     for c in &cells {
@@ -390,6 +406,8 @@ pub fn run_matrix_with(
             c.stolen.to_string(),
             c.ranges_reassigned.to_string(),
             format!("{:.1}", c.replay_bytes / 1e3),
+            c.sources_refreshed.to_string(),
+            format!("{:.1}", c.repush_bytes / 1e3),
         ]);
     }
     Ok(vec![t])

@@ -14,7 +14,12 @@
 //! | fig12  | wide-area replication                           | [`fig9to12`] |
 //! | scale  | engine sweep on generated 16–256-node platforms | [`scale`] |
 //! | churn  | plan-local vs dynamic schedulers under dynamics | [`churn`] |
+//! | adversary | worst-case trace search, per-scheduler robustness | [`adversary`] |
+//!
+//! See `rust/src/experiments/README.md` for the paper-figure ↔
+//! experiment mapping and docs/CLI.md for the full flag reference.
 
+pub mod adversary;
 pub mod churn;
 pub mod common;
 pub mod fig4;
@@ -26,15 +31,16 @@ pub mod table1;
 use crate::util::table::Table;
 use std::path::Path;
 
-/// All experiment ids, in paper order (plus the post-paper scale and
-/// churn sweeps).
-pub const ALL: [&str; 12] = [
+/// All experiment ids, in paper order (plus the post-paper scale, churn
+/// and adversary sweeps).
+pub const ALL: [&str; 13] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "scale", "churn",
+    "scale", "churn", "adversary",
 ];
 
-/// Run one experiment by id (`churn` with its default specs; the CLI
-/// passes `--gen`/`--dynamics` through [`churn::run_with`] directly).
+/// Run one experiment by id (`churn` and `adversary` with their default
+/// knobs; the CLI passes `--gen`/`--dynamics`/`--budget`/… through
+/// [`churn::run_with`] / [`adversary::run_with`] directly).
 pub fn run(id: &str) -> Option<Vec<Table>> {
     Some(match id {
         "table1" => table1::run(),
@@ -49,6 +55,7 @@ pub fn run(id: &str) -> Option<Vec<Table>> {
         "fig12" => fig9to12::run_fig12(),
         "scale" => scale::run(),
         "churn" => churn::run(),
+        "adversary" => adversary::run(),
         _ => return None,
     })
 }

@@ -27,11 +27,15 @@
 //!   plan enforcement plus speculative execution, (locality-aware) work
 //!   stealing and reduce re-partitioning (`engine::scheduler`, §4.6.4),
 //!   a seeded dynamics / fault-injection layer (`engine::dynamics`:
-//!   time-varying bandwidth, mapper *and reducer* failures, stragglers),
-//!   and a thin orchestrator (`engine::executor`) driving push/map/
-//!   shuffle/reduce as events, re-queuing map work lost to injected
-//!   failures and replaying reduce work through a retained
-//!   shuffle-transfer table (restartable reduce).
+//!   time-varying bandwidth, mapper *and reducer* failures, stragglers,
+//!   correlated data staleness), a budgeted adversarial trace search
+//!   (`engine::adversary`: the worst-case churn for a given plan, with
+//!   the executor as deterministic oracle), and a thin orchestrator
+//!   (`engine::executor`) driving push/map/shuffle/reduce as events,
+//!   re-queuing map work lost to injected failures, replaying reduce
+//!   work through a retained shuffle-transfer table (restartable
+//!   reduce) and re-sending stale push data through a retained
+//!   push-transfer table.
 //! * **[`apps`]**/**[`data`]** — the evaluation applications (Word Count,
 //!   Sessionization, Full Inverted Index, synthetic-α) and seeded
 //!   workload generators.
@@ -48,6 +52,12 @@
 //! **zero external dependencies** (error handling included, see
 //! `util::errors`); the PJRT artifact path is opt-in via the `pjrt`
 //! feature, which expects the vendored `xla` crate.
+//!
+//! **Further reading:** the layer map, paper-§ ↔ module table and the
+//! determinism / byte-conservation invariants each layer must preserve
+//! live in `docs/ARCHITECTURE.md` (repository root); the full CLI
+//! reference is `docs/CLI.md`; the paper-figure ↔ experiment mapping is
+//! `rust/src/experiments/README.md`.
 
 pub mod apps;
 pub mod data;

@@ -30,9 +30,10 @@ const USAGE: &str = "\
 mrperf — geo-distributed MapReduce modeling, optimization & execution
 
 USAGE:
-  mrperf experiment <table1|fig4..fig12|scale|churn|all> [--results DIR]
+  mrperf experiment <table1|fig4..fig12|scale|churn|adversary|all> [--results DIR]
                [--gen KIND:NODES[:SEED]] [--dynamics PROFILE[:SEED]]
                [--profiles all] [--hedge RATE]                        (churn only)
+               [--budget K] [--seed S] [--restarts R] [--hedge RATE]  (adversary only)
   mrperf plan  [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
                [--alpha A] [--barriers G-P-L] [--optimizer NAME] [--skew S]
                [--hedge RATE]
@@ -54,8 +55,10 @@ OPTIMIZER:  uniform | myopic | e2e-push | e2e-shuffle | e2e-multi (default)
             | gradient (pure-rust analytic) | artifact (AOT JAX/Pallas via PJRT)
 BARRIERS:   three of G|L|P joined by '-', e.g. G-P-L (default), G-G-G, P-P-P
 DYNAMICS:   seeded fault/variability trace injected into the engine run:
-            step | periodic | burst | failures | stragglers | churn
-            (e.g. --dynamics burst:7; see `mrperf experiment churn`)
+            step | periodic | burst | failures | stragglers | churn | staleness
+            (e.g. --dynamics burst:7 or --dynamics staleness:3; staleness makes
+            sources refresh data mid-push, forcing exact-accounted re-pushes;
+            see `mrperf experiment churn`)
 LOCALITY:   --locality enables locality-aware work stealing (same-cluster
             steals preferred, WAN only when justified); implies --stealing
 HEDGE:      --hedge RATE (0 ≤ RATE < 1) plans against an expected reducer
@@ -66,6 +69,15 @@ HEDGE:      --hedge RATE (0 ≤ RATE < 1) plans against an expected reducer
             full dynamics-profile × execution-mode matrix with a hedged row
 BENCH:      quick perf suite (solver + optimizer scale paths); --json DIR
             writes one BENCH_<name>.json per result for trend tracking
+ADVERSARY:  `mrperf experiment adversary` searches (seeded restarts + greedy
+            refinement, deterministic given --seed) for the worst-case trace
+            within a perturbation budget: --budget K bounds the node outages
+            (default: the seeded failures profile's own outage count), and the
+            report compares the found trace against the seeded failures
+            profile for every execution mode (plan-local | dynamic |
+            dynamic+locality | hedged)
+
+Full reference: docs/CLI.md — paper-figure mapping: rust/src/experiments/README.md
 ";
 
 fn parse_env(name: &str) -> Option<EnvKind> {
@@ -170,8 +182,40 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
     };
     for id in ids {
         println!("\n### experiment {id}\n");
-        // `churn` takes CLI-configurable specs; everything else is fixed.
-        let ok = if id == "churn" {
+        // `churn` and `adversary` take CLI-configurable knobs; everything
+        // else is fixed.
+        let ok = if id == "adversary" {
+            let gen_spec = args.get_or("gen", experiments::adversary::DEFAULT_GEN);
+            let knobs = (|| -> Result<(u64, Option<usize>, usize, f64), String> {
+                let seed = args
+                    .get_u64("seed", experiments::adversary::DEFAULT_SEED)
+                    .map_err(|e| e.to_string())?;
+                let budget = match args.get("budget") {
+                    None => None,
+                    Some(_) => Some(args.get_usize("budget", 0).map_err(|e| e.to_string())?),
+                };
+                let restarts = args
+                    .get_usize("restarts", experiments::adversary::DEFAULT_RESTARTS)
+                    .map_err(|e| e.to_string())?;
+                let hedge = args
+                    .get_f64("hedge", experiments::churn::DEFAULT_HEDGE)
+                    .map_err(|e| e.to_string())?;
+                Ok((seed, budget, restarts, hedge))
+            })();
+            let tables = knobs.and_then(|(seed, budget, restarts, hedge)| {
+                experiments::adversary::run_with(gen_spec, seed, budget, restarts, hedge)
+            });
+            match tables {
+                Ok(tables) => {
+                    experiments::report_tables(id, &tables, &results_dir);
+                    true
+                }
+                Err(e) => {
+                    eprintln!("adversary: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else if id == "churn" {
             let gen_spec = args.get_or("gen", experiments::churn::DEFAULT_GEN);
             let dyn_spec = args.get_or("dynamics", experiments::churn::DEFAULT_DYNAMICS);
             let tables = match args.get("profiles") {
@@ -426,6 +470,15 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
         println!(
             "churn             {:>10} trace events, {} failures, {} tasks requeued",
             m.dyn_events, m.failures_injected, m.tasks_requeued
+        );
+    }
+    if m.sources_refreshed > 0 {
+        println!(
+            "staleness         {:>10} source refreshes, {:.1} KB re-pushed \
+             (delivered == pushed: {})",
+            m.sources_refreshed,
+            m.push_bytes_repushed / 1e3,
+            m.push_bytes_delivered == m.push_bytes
         );
     }
     ExitCode::SUCCESS

@@ -39,6 +39,30 @@
 //! unchanged — bit-identical, property-tested in
 //! tests/optimizer_hedge.rs — so hedging is strictly opt-in
 //! (`mrperf run … --hedge RATE`, `mrperf experiment churn … --hedge`).
+//!
+//! # Example
+//!
+//! ```
+//! use mrperf::model::barrier::BarrierConfig;
+//! use mrperf::model::makespan::AppModel;
+//! use mrperf::optimizer::{AlternatingLp, FailureAwareOptimizer, PlanOptimizer};
+//! use mrperf::platform::{build_env, EnvKind};
+//!
+//! let topo = build_env(EnvKind::Global4);
+//! let (app, cfg) = (AppModel::new(1.0), BarrierConfig::HADOOP);
+//!
+//! // Rate 0 is bit-identical to the unhedged optimizer …
+//! let plain = AlternatingLp::default().optimize(&topo, app, cfg);
+//! let zero = FailureAwareOptimizer::new(0.0).optimize(&topo, app, cfg);
+//! assert_eq!(zero, plain);
+//!
+//! // … while a positive rate floors every reducer's share at rate/|R|
+//! // (the uniform insurance mix bounding strandable key-range mass).
+//! let rate = 0.2;
+//! let hedged = FailureAwareOptimizer::new(rate).optimize(&topo, app, cfg);
+//! let floor = rate / topo.n_reducers() as f64;
+//! assert!(hedged.y.iter().all(|&y| y >= floor - 1e-9));
+//! ```
 
 use super::lp_build::{build_lp_x, extract_x, Objective};
 use super::{AlternatingLp, PlanOptimizer};

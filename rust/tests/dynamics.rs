@@ -26,7 +26,7 @@ use mrperf::util::qcheck::{ensure, qcheck, Config};
 /// Bit-exact signature of every metric field (floats by bit pattern).
 fn sig(m: &JobMetrics) -> String {
     format!(
-        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
         m.makespan.to_bits(),
         m.push_end.to_bits(),
         m.map_end.to_bits(),
@@ -36,6 +36,8 @@ fn sig(m: &JobMetrics) -> String {
         m.output_bytes.to_bits(),
         m.reduce_bytes_replayed.to_bits(),
         m.shuffle_bytes_delivered.to_bits(),
+        m.push_bytes_repushed.to_bits(),
+        m.push_bytes_delivered.to_bits(),
         m.n_map_tasks,
         m.n_reduce_tasks,
         m.spec_launched,
@@ -46,6 +48,7 @@ fn sig(m: &JobMetrics) -> String {
         m.tasks_requeued,
         m.reducers_failed,
         m.reduce_ranges_reassigned,
+        m.sources_refreshed,
         m.input_records,
         m.intermediate_records,
         m.output_records
@@ -147,6 +150,12 @@ fn failed_node_tasks_always_complete() {
                     "seed {trace_seed:#x}: delivered {} != shuffled {} (replayed {})",
                     m.shuffle_bytes_delivered, m.shuffle_bytes, m.reduce_bytes_replayed
                 ),
+            )?;
+            // Push-side conservation holds under every trace (no
+            // refresh events here, so no re-push traffic either).
+            ensure(
+                m.push_bytes_delivered == m.push_bytes && m.push_bytes_repushed == 0.0,
+                "push conservation broke under a failure trace",
             )?;
             ensure(
                 m.input_records == stat.input_records,
@@ -466,6 +475,161 @@ fn bandwidth_profiles_apply_and_conserve() {
         );
         assert!(m.dyn_events > 0, "{profile:?}: no event applied");
     }
+}
+
+/// Staleness byte-conservation qcheck (ISSUE 5 tentpole): across
+/// generated staleness traces — sources refreshing fractions of their
+/// data mid-push — every push byte ends up credited exactly once
+/// (`push_bytes_delivered == push_bytes`, re-push traffic accounted
+/// separately in `push_bytes_repushed`), for both scheduler families,
+/// with full record conservation. A uniform plan keeps the push phase
+/// WAN-bound and long, so the early refreshes reliably land before the
+/// splits seal.
+#[test]
+fn staleness_conserves_push_bytes_for_both_schedulers() {
+    qcheck(Config::default().cases(10), "staleness push-byte conservation", |rng| {
+        let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+        let plan = Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0x57A1);
+        let trace_seed = rng.next_u64();
+        let stat = run_job(&topo, &plan, &SyntheticApp::new(1.0), &JobConfig::default(), &inputs)
+            .metrics;
+        let trace = ScenarioTrace::generate(
+            DynProfile::Staleness,
+            trace_seed,
+            &TraceShape::of(&topo, stat.makespan),
+        );
+        for base in [JobConfig::default(), JobConfig::dynamic_locality()] {
+            let cfg = base.clone().with_dynamics(trace.clone());
+            let m = run_job(&topo, &plan, &SyntheticApp::new(1.0), &cfg, &inputs).metrics;
+            ensure(
+                m.sources_refreshed > 0,
+                format!("seed {trace_seed:#x}: no refresh landed mid-push"),
+            )?;
+            ensure(
+                m.push_bytes_repushed > 0.0,
+                format!("seed {trace_seed:#x}: a landed refresh must re-push bytes"),
+            )?;
+            // Exact conservation: byte counts are integers < 2^53, so
+            // the f64 sums are exact and equality is exact.
+            ensure(
+                m.push_bytes_delivered == m.push_bytes,
+                format!(
+                    "seed {trace_seed:#x}: delivered {} != pushed {} (repushed {})",
+                    m.push_bytes_delivered, m.push_bytes, m.push_bytes_repushed
+                ),
+            )?;
+            ensure(
+                m.push_bytes == stat.push_bytes,
+                "re-pushes must not inflate the base push_bytes account",
+            )?;
+            // The shuffle-side invariant must survive staleness too.
+            ensure(
+                m.shuffle_bytes_delivered == m.shuffle_bytes,
+                "shuffle conservation broke under staleness",
+            )?;
+            ensure(
+                m.output_records == m.input_records,
+                format!(
+                    "seed {trace_seed:#x}: lost records ({} in, {} out)",
+                    m.input_records, m.output_records
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic full-refresh pin: every source refreshes 100% of its
+/// data while the push is mid-flight, under the default Global push→map
+/// barrier (no split has sealed). Every transfer is therefore stale and
+/// re-sent exactly once more: `push_bytes_repushed == push_bytes`
+/// exactly, the conservation invariant holds, and the re-push visibly
+/// delays the WAN-bound job. Also pins same-config determinism.
+#[test]
+fn full_refresh_repushes_every_byte_exactly_once() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xF8E5);
+    let app = SyntheticApp::new(1.0);
+
+    let stat = run_job(&topo, &plan, &app, &JobConfig::default(), &inputs).metrics;
+    assert!(stat.push_end > 0.0);
+    let t0 = 0.5 * stat.push_end;
+    let events: Vec<TimedEvent> = (0..topo.n_sources())
+        .map(|i| TimedEvent {
+            time: t0,
+            event: DynEvent::SourceRefresh { source: i, fraction: 1.0 },
+        })
+        .collect();
+    let trace = ScenarioTrace::from_events("full-refresh", events);
+
+    let run = || {
+        run_job(
+            &topo,
+            &plan,
+            &app,
+            &JobConfig::default().with_dynamics(trace.clone()),
+            &inputs,
+        )
+        .metrics
+    };
+    let m = run();
+    assert_eq!(m.sources_refreshed, topo.n_sources(), "every refresh must land");
+    assert_eq!(
+        m.push_bytes_repushed, m.push_bytes,
+        "a 100% refresh of every source mid-push re-sends exactly every byte once"
+    );
+    assert_eq!(m.push_bytes, stat.push_bytes);
+    assert_eq!(m.push_bytes_delivered, m.push_bytes, "conservation");
+    assert_eq!(m.output_records, m.input_records);
+    assert!(
+        m.makespan > stat.makespan,
+        "re-pushing the whole WAN-bound input must cost time ({} vs {})",
+        m.makespan,
+        stat.makespan
+    );
+    // Same config, same trace → bit-identical metrics.
+    assert_eq!(sig(&m), sig(&run()), "staleness run is nondeterministic");
+}
+
+/// A refresh landing after the push completed is a no-op: the splits
+/// sealed, the job ran to completion on its consistent snapshot, and
+/// the metrics besides dyn_events are bit-identical to the static run.
+#[test]
+fn late_refresh_is_a_noop() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::uniform(topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0x1A7E);
+    let app = SyntheticApp::new(1.0);
+    let stat = run_job(&topo, &plan, &app, &JobConfig::default(), &inputs).metrics;
+    let trace = ScenarioTrace::from_events(
+        "late-refresh",
+        vec![TimedEvent {
+            time: stat.push_end * 1.01,
+            event: DynEvent::SourceRefresh { source: 0, fraction: 1.0 },
+        }],
+    );
+    let m = run_job(
+        &topo,
+        &plan,
+        &app,
+        &JobConfig::default().with_dynamics(trace),
+        &inputs,
+    )
+    .metrics;
+    assert_eq!(m.sources_refreshed, 0, "sealed splits must not re-dirty");
+    assert_eq!(m.push_bytes_repushed, 0.0);
+    // The event boundary re-accumulates partial fluid progress, so the
+    // makespan may differ by ulps from the static run — but no more.
+    assert!(
+        (m.makespan - stat.makespan).abs() <= 1e-9 * stat.makespan,
+        "no-op refresh changed the makespan: {} vs {}",
+        m.makespan,
+        stat.makespan
+    );
+    assert_eq!(m.push_bytes_delivered, m.push_bytes);
+    assert_eq!(m.output_records, stat.output_records);
 }
 
 /// Straggler smoke: a slowdown trace applies cleanly under the dynamic

@@ -16,6 +16,10 @@ cargo build --release
 echo "== tier-1: cargo test -q"
 cargo test -q
 
+echo "== tier-1: cargo test --doc"
+# Module-doc examples are runnable and gated here so docs cannot rot.
+cargo test --doc -q
+
 if [[ "$QUICK" == "0" ]]; then
   if cargo clippy --version >/dev/null 2>&1; then
     echo "== lint: cargo clippy (warnings are errors)"
@@ -32,8 +36,10 @@ if [[ "$QUICK" == "0" ]]; then
   "$BIN" run --gen hier-wan:64 --optimizer uniform >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer uniform --locality --dynamics failures:3 >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer e2e-multi --hedge 0.1 --dynamics failures:3 >/dev/null
+  "$BIN" run --gen hier-wan:16 --optimizer uniform --dynamics staleness:3 >/dev/null
   "$BIN" experiment churn --gen hier-wan:16 --dynamics burst:7 >/dev/null
   "$BIN" experiment churn --profiles all --gen hier-wan:16 --dynamics failures:7 --hedge 0.05 >/dev/null
+  "$BIN" experiment adversary --gen hier-wan:16 --seed 7 --budget 2 --restarts 2 >/dev/null
   # Clean-error probes must fail (a bare `!` pipeline is exempt from
   # set -e, so check the status explicitly).
   if "$BIN" plan --gen hier-wan:3 >/dev/null 2>&1; then
@@ -62,6 +68,18 @@ if [[ "$QUICK" == "0" ]]; then
   fi
   if "$BIN" experiment churn --gen hier-wan:16 --hedge 0.1 >/dev/null 2>&1; then
     echo "FAIL: --hedge without --profiles all should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" run --gen hier-wan:16 --dynamics staleness:x >/dev/null 2>&1; then
+    echo "FAIL: --dynamics staleness:x should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment adversary --gen hier-wan:16 --budget 0 >/dev/null 2>&1; then
+    echo "FAIL: adversary --budget 0 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment adversary --gen hier-wan:16 --restarts 0 >/dev/null 2>&1; then
+    echo "FAIL: adversary --restarts 0 should be rejected" >&2
     exit 1
   fi
   echo "smoke OK"
