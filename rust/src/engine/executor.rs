@@ -161,15 +161,120 @@ pub fn run_job(
     config: &JobConfig,
     inputs: &[Vec<Record>],
 ) -> JobResult {
-    Executor::new(topo, plan, app, config, inputs).run()
+    let mut sim = FluidSim::new();
+    let res = ResourceSet::build(&mut sim, topo);
+    let mut exec =
+        Executor::new(topo, plan, app, config, inputs, res, config.dynamics.as_ref(), 0, 1.0);
+    // Trace events due at t = 0 (e.g. a node down from the start)
+    // apply before any work is placed.
+    exec.start(&mut sim);
+    // Main loop: advance the fluid clock to the next completion
+    // batch — never past the next scenario event — convert
+    // completions to engine events on the heap, and dispatch them in
+    // (time, FIFO) order. With no dynamics trace every iteration is
+    // a plain `sim.step()`, arithmetically identical to the static
+    // engine.
+    loop {
+        let step = match exec.next_dyn_time() {
+            Some(tt) if sim.active_count() > 0 => sim.step_until(tt),
+            Some(tt) => {
+                if exec.is_complete() {
+                    // Job finished; drop the trailing trace events.
+                    break;
+                }
+                // Nothing in flight (e.g. every remaining task is
+                // homed on a dead node under plan-local placement):
+                // idle-jump the clock to the event that may unblock
+                // progress.
+                sim.jump_to(tt);
+                Some((sim.now(), Vec::new()))
+            }
+            None => sim.step(),
+        };
+        let Some((now, completed)) = step else { break };
+        if completed.is_empty() {
+            // The clock reached the next scenario event (no fluid
+            // completion fired): inject it and continue.
+            exec.apply_dynamics(&mut sim);
+            continue;
+        }
+        for aid in completed {
+            // A miss is a cancelled losing copy — nothing to dispatch.
+            exec.enqueue(now, aid);
+        }
+        exec.drain(&mut sim);
+        // Straggler check once per batch (needs the clock to have
+        // advanced).
+        exec.maybe_speculate(&mut sim);
+    }
+    exec.into_result()
 }
 
-struct Executor<'a> {
+/// The fluid resources of one topology, in their canonical creation
+/// order (load-bearing: resource ids feed the max-min solver's
+/// deterministic tie-breaks, so replaying this exact order is part of
+/// the bit-identity contract). Built once per [`FluidSim`] and shared by
+/// every job running on it — concurrent jobs contend for the *same*
+/// links, NICs and CPUs, which is the whole point of the tenancy layer.
+#[derive(Debug, Clone)]
+pub(crate) struct ResourceSet {
+    sm_link: Vec<Vec<ResourceId>>,
+    mr_link: Vec<Vec<ResourceId>>,
+    src_egress: Vec<ResourceId>,
+    map_ingress: Vec<ResourceId>,
+    map_egress: Vec<ResourceId>,
+    red_ingress: Vec<ResourceId>,
+    map_compute: Vec<ResourceId>,
+    red_compute: Vec<ResourceId>,
+}
+
+impl ResourceSet {
+    pub(crate) fn build(sim: &mut FluidSim, topo: &Topology) -> ResourceSet {
+        let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        let sm_link: Vec<Vec<ResourceId>> = (0..s)
+            .map(|i| (0..m).map(|j| sim.add_resource(topo.b_sm.get(i, j))).collect())
+            .collect();
+        let mr_link: Vec<Vec<ResourceId>> = (0..m)
+            .map(|j| (0..r).map(|k| sim.add_resource(topo.b_mr.get(j, k))).collect())
+            .collect();
+        let src_egress: Vec<ResourceId> = (0..s).map(|_| sim.add_resource(NIC_BPS)).collect();
+        let map_ingress: Vec<ResourceId> = (0..m).map(|_| sim.add_resource(NIC_BPS)).collect();
+        let map_egress: Vec<ResourceId> = (0..m).map(|_| sim.add_resource(NIC_BPS)).collect();
+        let red_ingress: Vec<ResourceId> = (0..r).map(|_| sim.add_resource(NIC_BPS)).collect();
+        let map_compute: Vec<ResourceId> =
+            (0..m).map(|j| sim.add_resource(topo.c_map[j])).collect();
+        let red_compute: Vec<ResourceId> =
+            (0..r).map(|k| sim.add_resource(topo.c_red[k])).collect();
+        ResourceSet {
+            sm_link,
+            mr_link,
+            src_egress,
+            map_ingress,
+            map_egress,
+            red_ingress,
+            map_compute,
+            red_compute,
+        }
+    }
+}
+
+/// One job's execution state machine. The fluid simulation is *not*
+/// owned here: the driver ([`run_job`], or the multi-job engine in
+/// [`super::tenancy`]) owns the clock and threads `&mut FluidSim`
+/// through every method, so several executors can share one simulation
+/// (and therefore one contended network).
+pub(crate) struct Executor<'a> {
     topo: &'a Topology,
     plan: &'a Plan,
     app: &'a dyn MapReduceApp,
     config: &'a JobConfig,
-    sim: FluidSim,
+    /// Routing tag stamped on every fluid activity this job creates
+    /// (the tenancy layer uses the job index; single-job runs use 0).
+    tag: u64,
+    /// Slot capacities after the fair-share weight is applied
+    /// (`weight = 1.0` reproduces `config.{map,reduce}_slots` exactly).
+    map_slots: usize,
+    reduce_slots: usize,
     /// Fluid completion → engine event, drained through `queue`.
     pending: HashMap<ActivityId, EngineEvent>,
     queue: EventQueue<EngineEvent>,
@@ -250,41 +355,51 @@ struct Executor<'a> {
 }
 
 impl<'a> Executor<'a> {
-    fn new(
+    /// Build one job's executor over an existing simulation. `res` must
+    /// have been built by [`ResourceSet::build`] against the same
+    /// `FluidSim` the driver will thread through the other methods.
+    /// `weight` scales the job's slot capacities (fair-share tenancy);
+    /// `1.0` reproduces the config's slot counts exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
         topo: &'a Topology,
         plan: &'a Plan,
         app: &'a dyn MapReduceApp,
         config: &'a JobConfig,
         inputs: &[Vec<Record>],
+        res: ResourceSet,
+        dynamics: Option<&'a ScenarioTrace>,
+        tag: u64,
+        weight: f64,
     ) -> Executor<'a> {
         plan.check(topo).unwrap_or_else(|e| panic!("invalid plan: {e}"));
         let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
         assert_eq!(inputs.len(), s, "one input vector per source");
-
-        let mut sim = FluidSim::new();
-        let sm_link: Vec<Vec<ResourceId>> = (0..s)
-            .map(|i| (0..m).map(|j| sim.add_resource(topo.b_sm.get(i, j))).collect())
-            .collect();
-        let mr_link: Vec<Vec<ResourceId>> = (0..m)
-            .map(|j| (0..r).map(|k| sim.add_resource(topo.b_mr.get(j, k))).collect())
-            .collect();
-        let src_egress: Vec<ResourceId> = (0..s).map(|_| sim.add_resource(NIC_BPS)).collect();
-        let map_ingress: Vec<ResourceId> = (0..m).map(|_| sim.add_resource(NIC_BPS)).collect();
-        let map_egress: Vec<ResourceId> = (0..m).map(|_| sim.add_resource(NIC_BPS)).collect();
-        let red_ingress: Vec<ResourceId> = (0..r).map(|_| sim.add_resource(NIC_BPS)).collect();
-        let map_compute: Vec<ResourceId> =
-            (0..m).map(|j| sim.add_resource(topo.c_map[j])).collect();
-        let red_compute: Vec<ResourceId> =
-            (0..r).map(|k| sim.add_resource(topo.c_red[k])).collect();
+        assert!(weight > 0.0 && weight.is_finite(), "job weight must be positive");
+        let map_slots = ((config.map_slots as f64 * weight).round() as usize).max(1);
+        let reduce_slots = ((config.reduce_slots as f64 * weight).round() as usize).max(1);
 
         let partitioner = Partitioner::from_fractions(&plan.y, config.n_buckets);
+
+        let ResourceSet {
+            sm_link,
+            mr_link,
+            src_egress,
+            map_ingress,
+            map_egress,
+            red_ingress,
+            map_compute,
+            red_compute,
+        } = res;
 
         let mut exec = Executor {
             topo,
             plan,
             app,
             config,
-            sim,
+            tag,
+            map_slots,
+            reduce_slots,
             pending: HashMap::new(),
             queue: EventQueue::new(),
             scheduler: scheduler::for_config(config),
@@ -318,9 +433,9 @@ impl<'a> Executor<'a> {
             reduce_done: vec![false; r],
             writes_left: vec![0; r],
             all_shuffles_done: false,
-            map_slots_free: vec![config.map_slots; m],
-            reduce_slots_free: vec![config.reduce_slots; r],
-            dynamics: config.dynamics.as_ref(),
+            map_slots_free: vec![map_slots; m],
+            reduce_slots_free: vec![reduce_slots; r],
+            dynamics,
             dyn_cursor: 0,
             node_up: vec![true; m],
             metrics: JobMetrics::default(),
@@ -414,7 +529,7 @@ impl<'a> Executor<'a> {
 
     /// Kick off all push transfers (each recorded in the push-transfer
     /// table so a source refresh can invalidate and re-send it).
-    fn start_push(&mut self) {
+    fn start_push(&mut self, sim: &mut FluidSim) {
         let repl = self.config.replication.max(1);
         let m = self.topo.n_mappers();
         for tid in 0..self.tasks.len() {
@@ -425,25 +540,25 @@ impl<'a> Executor<'a> {
                 .map(|(src, recs)| (*src, batch_size(recs) as f64))
                 .collect();
             for (src, bytes) in parts {
-                self.emit_push(tid, src, mapper, bytes);
+                self.emit_push(sim, tid, src, mapper, bytes);
                 // HDFS-style replication: each replica is one more
                 // wide-area copy of the block (§4.6.5). Replica writes
                 // gate the split like primary parts (the HDFS write
                 // pipeline completes when all replicas acknowledge).
                 for extra in 1..repl {
                     let replica_node = (mapper + extra) % m;
-                    self.emit_push(tid, src, replica_node, bytes);
+                    self.emit_push(sim, tid, src, replica_node, bytes);
                 }
             }
         }
         // Degenerate: no input at all.
         if self.push_parts_left == 0 {
-            self.release_maps_after_push();
+            self.release_maps_after_push(sim);
         }
     }
 
     /// Record one push transfer and put it on the wire.
-    fn emit_push(&mut self, tid: TaskId, src: usize, to: NodeId, bytes: f64) {
+    fn emit_push(&mut self, sim: &mut FluidSim, tid: TaskId, src: usize, to: NodeId, bytes: f64) {
         let id = self.push_xfers.len();
         self.push_xfers.push(PushXfer {
             task: tid,
@@ -459,18 +574,19 @@ impl<'a> Executor<'a> {
         self.tasks[tid].pending_parts += 1;
         self.push_parts_left += 1;
         self.metrics.push_bytes += bytes;
-        self.send_push(id);
+        self.send_push(sim, id);
     }
 
     /// Put push transfer `id` on the wire (first send or staleness
     /// re-send). Re-sends of a previously sent transfer are re-push
     /// traffic.
-    fn send_push(&mut self, id: usize) {
+    fn send_push(&mut self, sim: &mut FluidSim, id: usize) {
         let (src, to, bytes) =
             (self.push_xfers[id].source, self.push_xfers[id].to, self.push_xfers[id].bytes);
-        let a = self.sim.add_activity(
+        let a = sim.add_activity_tagged(
             bytes,
             vec![self.sm_link[src][to], self.src_egress[src], self.map_ingress[to]],
+            self.tag,
         );
         self.pending.insert(a, EngineEvent::PushArrived { xfer: id });
         self.push_xfers[id].state = XferState::InFlight;
@@ -481,7 +597,7 @@ impl<'a> Executor<'a> {
         self.push_xfers[id].sent_once = true;
     }
 
-    fn release_maps_after_push(&mut self) {
+    fn release_maps_after_push(&mut self, sim: &mut FluidSim) {
         for tid in 0..self.tasks.len() {
             if self.tasks[tid].state == TaskState::WaitingForData
                 && self.tasks[tid].pending_parts == 0
@@ -489,7 +605,7 @@ impl<'a> Executor<'a> {
                 self.tasks[tid].state = TaskState::Ready;
             }
         }
-        self.schedule_maps();
+        self.schedule_maps(sim);
     }
 
     /// Execute the map function for a task (eagerly, once).
@@ -518,7 +634,7 @@ impl<'a> Executor<'a> {
     }
 
     /// Snapshot the cluster, ask the scheduler for placements, apply them.
-    fn schedule_maps(&mut self) {
+    fn schedule_maps(&mut self, sim: &mut FluidSim) {
         let ready: Vec<TaskId> = (0..self.tasks.len())
             .filter(|&t| self.tasks[t].state == TaskState::Ready)
             .collect();
@@ -527,7 +643,7 @@ impl<'a> Executor<'a> {
         }
         let assignments = {
             let view = SchedView {
-                now: self.sim.now(),
+                now: sim.now(),
                 home: &self.task_home,
                 ready: &ready,
                 running: &[],
@@ -552,11 +668,11 @@ impl<'a> Executor<'a> {
             if a.node != self.tasks[a.task].mapper {
                 self.metrics.stolen += 1;
             }
-            self.start_map(a.task, a.node, false);
+            self.start_map(sim, a.task, a.node, false);
         }
     }
 
-    fn start_map(&mut self, tid: TaskId, node: NodeId, speculative: bool) {
+    fn start_map(&mut self, sim: &mut FluidSim, tid: TaskId, node: NodeId, speculative: bool) {
         let plan_node = self.tasks[tid].mapper;
         if speculative {
             self.tasks[tid].spec_node = Some(node);
@@ -564,7 +680,7 @@ impl<'a> Executor<'a> {
         } else {
             self.tasks[tid].state = TaskState::Running;
             self.tasks[tid].exec_node = Some(node);
-            self.tasks[tid].started_at = self.sim.now();
+            self.tasks[tid].started_at = sim.now();
         }
         self.map_slots_free[node] -= 1;
 
@@ -573,24 +689,31 @@ impl<'a> Executor<'a> {
             // speculative copy path). Node-pair bandwidth approximated by
             // the cluster-pair mapper→reducer matrix (nodes co-located).
             let bytes = self.tasks[tid].bytes;
-            let a = self.sim.add_activity(
+            let a = sim.add_activity_tagged(
                 bytes,
                 vec![
                     self.mr_link[plan_node][node.min(self.topo.n_reducers() - 1)],
                     self.map_egress[plan_node],
                     self.map_ingress[node],
                 ],
+                self.tag,
             );
             self.pending
                 .insert(a, EngineEvent::FetchArrived { task: tid, speculative });
         } else {
-            self.start_map_compute(tid, node, speculative);
+            self.start_map_compute(sim, tid, node, speculative);
         }
     }
 
-    fn start_map_compute(&mut self, tid: TaskId, node: NodeId, speculative: bool) {
+    fn start_map_compute(
+        &mut self,
+        sim: &mut FluidSim,
+        tid: TaskId,
+        node: NodeId,
+        speculative: bool,
+    ) {
         let work = self.tasks[tid].bytes * self.app.map_cost_factor();
-        let a = self.sim.add_activity(work, vec![self.map_compute[node]]);
+        let a = sim.add_activity_tagged(work, vec![self.map_compute[node]], self.tag);
         self.pending
             .insert(a, EngineEvent::MapFinished { task: tid, speculative });
         if speculative {
@@ -601,8 +724,9 @@ impl<'a> Executor<'a> {
     }
 
     /// Straggler check (§4.6.4): snapshot the running set and let the
-    /// scheduler pick backup copies.
-    fn maybe_speculate(&mut self) {
+    /// scheduler pick backup copies. Drivers call this once per
+    /// completion batch (the clock must have advanced).
+    pub(crate) fn maybe_speculate(&mut self, sim: &mut FluidSim) {
         if !self.config.speculation || !self.scheduler.may_speculate(self.durations.len()) {
             return;
         }
@@ -622,7 +746,7 @@ impl<'a> Executor<'a> {
         }
         let backups = {
             let view = SchedView {
-                now: self.sim.now(),
+                now: sim.now(),
                 home: &self.task_home,
                 ready: &[],
                 running: &running,
@@ -643,12 +767,12 @@ impl<'a> Executor<'a> {
             {
                 continue;
             }
-            self.start_map(a.task, a.node, true);
+            self.start_map(sim, a.task, a.node, true);
             self.metrics.spec_launched += 1;
         }
     }
 
-    fn on_map_done(&mut self, tid: TaskId, speculative: bool) {
+    fn on_map_done(&mut self, sim: &mut FluidSim, tid: TaskId, speculative: bool) {
         if self.tasks[tid].state == TaskState::Done {
             return; // lost the race
         }
@@ -660,8 +784,8 @@ impl<'a> Executor<'a> {
         // Cancel the losing copy and free its slot.
         if speculative {
             if let Some(a) = self.tasks[tid].activity {
-                if !self.sim.is_done(a) {
-                    self.sim.cancel(a);
+                if !sim.is_done(a) {
+                    sim.cancel(a);
                     self.pending.remove(&a);
                 }
             }
@@ -670,8 +794,8 @@ impl<'a> Executor<'a> {
             }
             self.metrics.spec_won += 1;
         } else if let Some(a) = self.tasks[tid].spec_activity {
-            if !self.sim.is_done(a) {
-                self.sim.cancel(a);
+            if !sim.is_done(a) {
+                sim.cancel(a);
                 self.pending.remove(&a);
             }
             if let Some(loser) = self.tasks[tid].spec_node {
@@ -683,11 +807,11 @@ impl<'a> Executor<'a> {
         }
         self.tasks[tid].state = TaskState::Done;
         self.map_slots_free[node] += 1;
-        self.durations.push(self.sim.now() - self.tasks[tid].started_at);
+        self.durations.push(sim.now() - self.tasks[tid].started_at);
         self.maps_left -= 1;
         self.maps_left_per_node[self.tasks[tid].mapper] =
             self.maps_left_per_node[self.tasks[tid].mapper].saturating_sub(1);
-        self.metrics.map_end = self.sim.now();
+        self.metrics.map_end = sim.now();
 
         self.materialize_outputs(tid);
         let outs = self.tasks[tid].outputs.take().unwrap();
@@ -697,7 +821,7 @@ impl<'a> Executor<'a> {
             Barrier::Global => {
                 self.parked_outputs.push((home, node, outs));
                 if self.maps_left == 0 {
-                    self.release_shuffle();
+                    self.release_shuffle(sim);
                 }
             }
             Barrier::Local => {
@@ -722,27 +846,27 @@ impl<'a> Executor<'a> {
                         released
                     };
                     for (_home, exec_node, outs) in mine {
-                        self.emit_shuffle(exec_node, outs);
+                        self.emit_shuffle(sim, exec_node, outs);
                     }
                 }
             }
             Barrier::Pipelined => {
-                self.emit_shuffle(node, outs);
+                self.emit_shuffle(sim, node, outs);
             }
         }
-        self.schedule_maps();
-        self.maybe_speculate();
-        self.maybe_finish_shuffle_phase();
+        self.schedule_maps(sim);
+        self.maybe_speculate(sim);
+        self.maybe_finish_shuffle_phase(sim);
     }
 
-    fn release_shuffle(&mut self) {
+    fn release_shuffle(&mut self, sim: &mut FluidSim) {
         let parked = std::mem::take(&mut self.parked_outputs);
         for (_home, exec_node, outs) in parked {
-            self.emit_shuffle(exec_node, outs);
+            self.emit_shuffle(sim, exec_node, outs);
         }
     }
 
-    fn emit_shuffle(&mut self, from_node: NodeId, outs: Vec<Vec<Record>>) {
+    fn emit_shuffle(&mut self, sim: &mut FluidSim, from_node: NodeId, outs: Vec<Vec<Record>>) {
         for (k, recs) in outs.into_iter().enumerate() {
             if recs.is_empty() {
                 continue;
@@ -761,7 +885,7 @@ impl<'a> Executor<'a> {
             self.range_bytes[k] += bytes;
             self.shuffle_xfers_left[k] += 1;
             self.metrics.shuffle_bytes += bytes;
-            self.send_xfer(id);
+            self.send_xfer(sim, id);
         }
     }
 
@@ -769,7 +893,7 @@ impl<'a> Executor<'a> {
     /// owner is down the transfer stays `Held` — it is resent when the
     /// owner recovers or the range is adopted by a survivor. Resends of a
     /// previously sent transfer are replay traffic.
-    fn send_xfer(&mut self, id: usize) {
+    fn send_xfer(&mut self, sim: &mut FluidSim, id: usize) {
         let range = self.xfers[id].range;
         let owner = self.range_owner[range];
         if !self.reducer_up[owner] {
@@ -778,9 +902,10 @@ impl<'a> Executor<'a> {
         }
         let from = self.xfers[id].from;
         let bytes = self.xfers[id].bytes;
-        let a = self.sim.add_activity(
+        let a = sim.add_activity_tagged(
             bytes,
             vec![self.mr_link[from][owner], self.map_egress[from], self.red_ingress[owner]],
+            self.tag,
         );
         self.pending.insert(a, EngineEvent::ShuffleArrived { xfer: id });
         self.xfers[id].state = XferState::InFlight;
@@ -808,18 +933,18 @@ impl<'a> Executor<'a> {
     }
 
     /// All maps done and all shuffle transfers delivered?
-    fn maybe_finish_shuffle_phase(&mut self) {
+    fn maybe_finish_shuffle_phase(&mut self, sim: &mut FluidSim) {
         if self.maps_left == 0
             && self.shuffle_xfers_left.iter().all(|&c| c == 0)
             && !self.all_shuffles_done
         {
             self.all_shuffles_done = true;
-            self.metrics.shuffle_end = self.sim.now();
-            self.maybe_start_reduces();
+            self.metrics.shuffle_end = sim.now();
+            self.maybe_start_reduces(sim);
         }
     }
 
-    fn maybe_start_reduces(&mut self) {
+    fn maybe_start_reduces(&mut self, sim: &mut FluidSim) {
         let r = self.topo.n_reducers();
         // Shuffle/reduce barrier: Local (Hadoop default) starts range k
         // when its own transfers are all delivered; Global waits for
@@ -836,7 +961,7 @@ impl<'a> Executor<'a> {
             let mine_done = self.maps_left == 0 && self.shuffle_xfers_left[k] == 0;
             let gate = if global { self.all_shuffles_done } else { mine_done };
             if gate {
-                self.start_reduce(k);
+                self.start_reduce(sim, k);
             }
         }
     }
@@ -846,7 +971,7 @@ impl<'a> Executor<'a> {
     /// *completion* ([`Executor::on_reduce_compute_done`]) — a failed
     /// attempt therefore needs no output/metric rollback, it simply never
     /// produced anything.
-    fn start_reduce(&mut self, k: usize) {
+    fn start_reduce(&mut self, sim: &mut FluidSim, k: usize) {
         let owner = self.range_owner[k];
         self.reduce_started[k] = true;
         self.reduce_slots_free[owner] -= 1;
@@ -855,13 +980,13 @@ impl<'a> Executor<'a> {
         // of the concatenated inbox.
         let in_bytes = self.range_bytes[k];
         let work = in_bytes * self.app.reduce_cost_factor();
-        let a = self.sim.add_activity(work.max(1.0), vec![self.red_compute[owner]]);
+        let a = sim.add_activity_tagged(work.max(1.0), vec![self.red_compute[owner]], self.tag);
         self.pending.insert(a, EngineEvent::ReduceFinished { range: k });
         self.range_compute[k] = Some(a);
         self.writes_left[k] = 0;
     }
 
-    fn on_reduce_compute_done(&mut self, k: usize) {
+    fn on_reduce_compute_done(&mut self, sim: &mut FluidSim, k: usize) {
         let owner = self.range_owner[k];
         self.reduce_compute_done[k] = true;
         self.range_compute[k] = None;
@@ -894,12 +1019,13 @@ impl<'a> Executor<'a> {
             for extra in 1..repl {
                 let target = (k + extra) % r;
                 // Reducer-to-reducer copy over the cluster-pair link.
-                let a = self.sim.add_activity(
+                let a = sim.add_activity_tagged(
                     out_bytes,
                     vec![
                         self.mr_link[target.min(self.topo.n_mappers() - 1)][owner],
                         self.red_ingress[target],
                     ],
+                    self.tag,
                 );
                 self.pending.insert(a, EngineEvent::OutputWritten { range: k });
                 self.writes_left[k] += 1;
@@ -907,23 +1033,23 @@ impl<'a> Executor<'a> {
             }
         }
         if self.writes_left[k] == 0 {
-            self.finish_reduce(k);
+            self.finish_reduce(sim, k);
         }
         // The freed slot may unblock another range adopted by this owner
         // (a survivor can hold several orphaned ranges but drains them
         // one slot at a time). No-op in static runs.
-        self.maybe_start_reduces();
+        self.maybe_start_reduces(sim);
     }
 
-    fn finish_reduce(&mut self, k: usize) {
+    fn finish_reduce(&mut self, sim: &mut FluidSim, k: usize) {
         self.reduce_done[k] = true;
-        self.metrics.makespan = self.sim.now();
+        self.metrics.makespan = sim.now();
     }
 
     // ------------------------------------------------------- dynamics
 
     /// Virtual time of the next un-applied trace event, if any.
-    fn next_dyn_time(&self) -> Option<f64> {
+    pub(crate) fn next_dyn_time(&self) -> Option<f64> {
         self.dynamics
             .and_then(|tr| tr.events().get(self.dyn_cursor))
             .map(|te| te.time)
@@ -933,9 +1059,9 @@ impl<'a> Executor<'a> {
     /// then let the scheduler react — failed-node evictions create Ready
     /// tasks to (re)place, recoveries free slots, slowdowns may trip the
     /// straggler detector.
-    fn apply_dynamics(&mut self) {
+    pub(crate) fn apply_dynamics(&mut self, sim: &mut FluidSim) {
         let Some(trace) = self.dynamics else { return };
-        let now = self.sim.now();
+        let now = sim.now();
         let mut applied = false;
         while let Some(te) = trace.events().get(self.dyn_cursor) {
             if te.time > now {
@@ -946,15 +1072,15 @@ impl<'a> Executor<'a> {
                 (self.topo.n_sources(), self.topo.n_mappers(), self.topo.n_reducers());
             let effective = match te.event {
                 DynEvent::WanScale { factor } => {
-                    self.scale_links(None, factor);
+                    self.scale_links(sim, None, factor);
                     true
                 }
                 DynEvent::ClusterLinkScale { cluster, factor } => {
-                    self.scale_links(Some(cluster), factor);
+                    self.scale_links(sim, Some(cluster), factor);
                     true
                 }
                 DynEvent::MapperFail { node } if node < m => {
-                    self.fail_mapper(node);
+                    self.fail_mapper(sim, node);
                     true
                 }
                 DynEvent::MapperRecover { node } if node < m => {
@@ -962,23 +1088,23 @@ impl<'a> Executor<'a> {
                     true
                 }
                 DynEvent::ReducerFail { node } if node < r => {
-                    self.fail_reducer(node);
+                    self.fail_reducer(sim, node);
                     true
                 }
                 DynEvent::ReducerRecover { node } if node < r => {
-                    self.recover_reducer(node);
+                    self.recover_reducer(sim, node);
                     true
                 }
                 DynEvent::MapperSlowdown { node, factor } if node < m => {
-                    self.sim.set_capacity(self.map_compute[node], self.topo.c_map[node] * factor);
+                    sim.set_capacity(self.map_compute[node], self.topo.c_map[node] * factor);
                     true
                 }
                 DynEvent::ReducerSlowdown { node, factor } if node < r => {
-                    self.sim.set_capacity(self.red_compute[node], self.topo.c_red[node] * factor);
+                    sim.set_capacity(self.red_compute[node], self.topo.c_red[node] * factor);
                     true
                 }
                 DynEvent::SourceRefresh { source, fraction } if source < s => {
-                    self.refresh_source(source, fraction);
+                    self.refresh_source(sim, source, fraction);
                     true
                 }
                 // Out-of-range node ids (a trace generated for a different
@@ -998,8 +1124,8 @@ impl<'a> Executor<'a> {
             }
         }
         if applied {
-            self.schedule_maps();
-            self.maybe_speculate();
+            self.schedule_maps(sim);
+            self.maybe_speculate(sim);
         }
     }
 
@@ -1008,7 +1134,7 @@ impl<'a> Executor<'a> {
     /// one cluster. Factors are absolute w.r.t. the base, so `1.0`
     /// always restores the static platform; the fluid simulation
     /// re-solves its max-min allocation before the next advance.
-    fn scale_links(&mut self, cluster: Option<usize>, factor: f64) {
+    fn scale_links(&mut self, sim: &mut FluidSim, cluster: Option<usize>, factor: f64) {
         let (s, m, r) = (self.topo.n_sources(), self.topo.n_mappers(), self.topo.n_reducers());
         for i in 0..s {
             for j in 0..m {
@@ -1022,8 +1148,7 @@ impl<'a> Executor<'a> {
                     }
                 };
                 if touched {
-                    self.sim
-                        .set_capacity(self.sm_link[i][j], self.topo.b_sm.get(i, j) * factor);
+                    sim.set_capacity(self.sm_link[i][j], self.topo.b_sm.get(i, j) * factor);
                 }
             }
         }
@@ -1039,8 +1164,7 @@ impl<'a> Executor<'a> {
                     }
                 };
                 if touched {
-                    self.sim
-                        .set_capacity(self.mr_link[j][k], self.topo.b_mr.get(j, k) * factor);
+                    sim.set_capacity(self.mr_link[j][k], self.topo.b_mr.get(j, k) * factor);
                 }
             }
         }
@@ -1052,7 +1176,7 @@ impl<'a> Executor<'a> {
     /// slots until recovery. Input pushed to the node is not lost (the
     /// split survives on the source/replica side and is re-fetched over
     /// the same link when the task runs elsewhere).
-    fn fail_mapper(&mut self, node: NodeId) {
+    fn fail_mapper(&mut self, sim: &mut FluidSim, node: NodeId) {
         if !self.node_up[node] {
             return;
         }
@@ -1080,7 +1204,7 @@ impl<'a> Executor<'a> {
             .collect();
         doomed.sort_by_key(|&(a, _)| a);
         for (aid, ev) in doomed {
-            self.sim.cancel(aid);
+            sim.cancel(aid);
             self.pending.remove(&aid);
             match ev {
                 EngineEvent::MapFinished { task, speculative: false }
@@ -1115,7 +1239,7 @@ impl<'a> Executor<'a> {
             return;
         }
         self.node_up[node] = true;
-        self.map_slots_free[node] = self.config.map_slots;
+        self.map_slots_free[node] = self.map_slots;
     }
 
     /// Source `source` refreshed `fraction` of its data (see the
@@ -1130,7 +1254,7 @@ impl<'a> Executor<'a> {
     /// barrier released them are sealed: the map task consumed a
     /// consistent snapshot, and the refresh produces a new version this
     /// job never observes.
-    fn refresh_source(&mut self, source: usize, fraction: f64) {
+    fn refresh_source(&mut self, sim: &mut FluidSim, source: usize, fraction: f64) {
         let target = fraction * self.source_push_bytes[source];
         if target <= 0.0 {
             return;
@@ -1161,7 +1285,7 @@ impl<'a> Executor<'a> {
                         .activity
                         .take()
                         .expect("in-flight push transfer has an activity");
-                    self.sim.cancel(a);
+                    sim.cancel(a);
                     self.pending.remove(&a);
                 }
                 XferState::Delivered => {
@@ -1175,7 +1299,7 @@ impl<'a> Executor<'a> {
                     unreachable!("push transfers are sent immediately and never held")
                 }
             }
-            self.send_push(id);
+            self.send_push(sim, id);
         }
     }
 
@@ -1184,7 +1308,7 @@ impl<'a> Executor<'a> {
     /// de-credit delivered-but-unreduced data, and ask the scheduler to
     /// re-partition each orphaned key range onto a survivor. Ranges whose
     /// reduce compute already finished are durable and unaffected.
-    fn fail_reducer(&mut self, node: NodeId) {
+    fn fail_reducer(&mut self, sim: &mut FluidSim, node: NodeId) {
         if !self.reducer_up[node] {
             return;
         }
@@ -1213,7 +1337,7 @@ impl<'a> Executor<'a> {
             .collect();
         doomed.sort_by_key(|&(a, _)| a);
         for (aid, ev) in doomed {
-            self.sim.cancel(aid);
+            sim.cancel(aid);
             self.pending.remove(&aid);
             match ev {
                 EngineEvent::ShuffleArrived { xfer } => {
@@ -1260,7 +1384,7 @@ impl<'a> Executor<'a> {
         //    actively slowed straggler (ReducerSlowdown in effect) does
         //    not win the adoption tie-break on its nominal speed.
         let capacity: Vec<f64> =
-            (0..r).map(|k| self.sim.capacity(self.red_compute[k])).collect();
+            (0..r).map(|k| sim.capacity(self.red_compute[k])).collect();
         let mut assigned = vec![0.0f64; r];
         for k in 0..r {
             if !self.reduce_compute_done[k] {
@@ -1290,7 +1414,7 @@ impl<'a> Executor<'a> {
                     assigned[new_owner] += self.range_bytes[k];
                     self.metrics.reduce_ranges_reassigned += 1;
                     // Replay the range's held transfers to the adopter.
-                    self.resend_held(k);
+                    self.resend_held(sim, k);
                 }
             }
             // No adopter (plan enforcement / no survivor): the range and
@@ -1300,47 +1424,47 @@ impl<'a> Executor<'a> {
         // 4. Close the dead node's reduce slots until recovery.
         self.reduce_slots_free[node] = 0;
         // Adopted zero-transfer ranges may be immediately startable.
-        self.maybe_start_reduces();
+        self.maybe_start_reduces(sim);
     }
 
     /// Reducer `node` recovers with every reduce slot free (its work was
     /// evicted at failure time and nothing could start there since).
     /// Transfers still targeting ranges it kept through the outage are
     /// resent.
-    fn recover_reducer(&mut self, node: NodeId) {
+    fn recover_reducer(&mut self, sim: &mut FluidSim, node: NodeId) {
         if self.reducer_up[node] {
             return;
         }
         self.reducer_up[node] = true;
-        self.reduce_slots_free[node] = self.config.reduce_slots;
+        self.reduce_slots_free[node] = self.reduce_slots;
         // Resend held transfers for ranges this node kept through the
         // outage (range then transfer-id order — deterministic).
         for k in 0..self.topo.n_reducers() {
             if self.range_owner[k] == node {
-                self.resend_held(k);
+                self.resend_held(sim, k);
             }
         }
-        self.maybe_start_reduces();
+        self.maybe_start_reduces(sim);
     }
 
     /// Resend range `k`'s held transfers to its current owner, in
     /// transfer-id (creation) order — deterministic. Shared by the
     /// adoption and recovery paths so their replay behavior can never
     /// diverge.
-    fn resend_held(&mut self, k: usize) {
+    fn resend_held(&mut self, sim: &mut FluidSim, k: usize) {
         let held: Vec<usize> = self.range_xfers[k]
             .iter()
             .copied()
             .filter(|&id| self.xfers[id].state == XferState::Held)
             .collect();
         for id in held {
-            self.send_xfer(id);
+            self.send_xfer(sim, id);
         }
     }
 
     /// Dispatch one engine event (popped from the heap in virtual-time
     /// order).
-    fn dispatch(&mut self, ev: EngineEvent) {
+    fn dispatch(&mut self, sim: &mut FluidSim, ev: EngineEvent) {
         match ev {
             EngineEvent::PushArrived { xfer } => {
                 let task = self.push_xfers[xfer].task;
@@ -1348,12 +1472,12 @@ impl<'a> Executor<'a> {
                 self.push_xfers[xfer].activity = None;
                 self.metrics.push_bytes_delivered += self.push_xfers[xfer].bytes;
                 self.push_parts_left -= 1;
-                self.metrics.push_end = self.sim.now();
+                self.metrics.push_end = sim.now();
                 self.tasks[task].pending_parts -= 1;
                 match self.config.barriers.push_map {
                     Barrier::Global => {
                         if self.push_parts_left == 0 {
-                            self.release_maps_after_push();
+                            self.release_maps_after_push(sim);
                         }
                     }
                     _ => {
@@ -1363,7 +1487,7 @@ impl<'a> Executor<'a> {
                             && self.tasks[task].state == TaskState::WaitingForData
                         {
                             self.tasks[task].state = TaskState::Ready;
-                            self.schedule_maps();
+                            self.schedule_maps(sim);
                         }
                     }
                 }
@@ -1372,7 +1496,7 @@ impl<'a> Executor<'a> {
                 // Stolen task: its input arrived at the thief.
                 if self.tasks[task].state == TaskState::Running {
                     let node = self.tasks[task].exec_node.unwrap();
-                    self.start_map_compute(task, node, false);
+                    self.start_map_compute(sim, task, node, false);
                 }
             }
             EngineEvent::FetchArrived { task, speculative: true } => {
@@ -1384,81 +1508,76 @@ impl<'a> Executor<'a> {
                     }
                 } else {
                     let node = self.tasks[task].spec_node.unwrap();
-                    self.start_map_compute(task, node, true);
+                    self.start_map_compute(sim, task, node, true);
                 }
             }
             EngineEvent::MapFinished { task, speculative } => {
-                self.on_map_done(task, speculative);
+                self.on_map_done(sim, task, speculative);
             }
             EngineEvent::ShuffleArrived { xfer } => {
                 let range = self.xfers[xfer].range;
                 self.xfers[xfer].state = XferState::Delivered;
                 self.metrics.shuffle_bytes_delivered += self.xfers[xfer].bytes;
                 self.shuffle_xfers_left[range] -= 1;
-                self.metrics.shuffle_end = self.sim.now();
-                self.maybe_finish_shuffle_phase();
-                self.maybe_start_reduces();
+                self.metrics.shuffle_end = sim.now();
+                self.maybe_finish_shuffle_phase(sim);
+                self.maybe_start_reduces(sim);
             }
             EngineEvent::ReduceFinished { range } => {
-                self.on_reduce_compute_done(range);
+                self.on_reduce_compute_done(sim, range);
             }
             EngineEvent::OutputWritten { range } => {
                 self.writes_left[range] -= 1;
                 if self.writes_left[range] == 0 {
-                    self.finish_reduce(range);
+                    self.finish_reduce(sim, range);
                 }
             }
         }
     }
 
-    fn run(mut self) -> JobResult {
-        // Trace events due at t = 0 (e.g. a node down from the start)
-        // apply before any work is placed.
-        self.apply_dynamics();
-        self.start_push();
-        // Main loop: advance the fluid clock to the next completion
-        // batch — never past the next scenario event — convert
-        // completions to engine events on the heap, and dispatch them in
-        // (time, FIFO) order. With no dynamics trace every iteration is
-        // a plain `sim.step()`, arithmetically identical to the static
-        // engine.
-        loop {
-            let step = match self.next_dyn_time() {
-                Some(tt) if self.sim.active_count() > 0 => self.sim.step_until(tt),
-                Some(tt) => {
-                    if self.reduce_done.iter().all(|&d| d) {
-                        // Job finished; drop the trailing trace events.
-                        break;
-                    }
-                    // Nothing in flight (e.g. every remaining task is
-                    // homed on a dead node under plan-local placement):
-                    // idle-jump the clock to the event that may unblock
-                    // progress.
-                    self.sim.jump_to(tt);
-                    Some((self.sim.now(), Vec::new()))
-                }
-                None => self.sim.step(),
-            };
-            let Some((now, completed)) = step else { break };
-            if completed.is_empty() {
-                // The clock reached the next scenario event (no fluid
-                // completion fired): inject it and continue.
-                self.apply_dynamics();
-                continue;
-            }
-            for aid in completed {
-                if let Some(ev) = self.pending.remove(&aid) {
-                    self.queue.push(now, ev);
-                }
-                // else: a cancelled losing copy — nothing to dispatch.
-            }
-            while let Some((_t, ev)) = self.queue.pop() {
-                self.dispatch(ev);
-            }
-            // Straggler check once per batch (needs the clock to have
-            // advanced).
-            self.maybe_speculate();
+    // ----------------------------------------------- driver interface
+    //
+    // The granular lifecycle [`run_job`] and the tenancy engine both
+    // drive: `start`, then per completion batch `enqueue` every
+    // completed activity, `drain`, `maybe_speculate`; `apply_dynamics`
+    // on empty (limit-hit) batches; `into_result` once `is_complete`.
+
+    /// Apply trace events due at t = 0 and put the push on the wire.
+    pub(crate) fn start(&mut self, sim: &mut FluidSim) {
+        self.apply_dynamics(sim);
+        self.start_push(sim);
+    }
+
+    /// Route one completed fluid activity to this job's event heap.
+    /// Returns false for a cancelled losing copy (nothing to dispatch).
+    pub(crate) fn enqueue(&mut self, now: f64, aid: ActivityId) -> bool {
+        if let Some(ev) = self.pending.remove(&aid) {
+            self.queue.push(now, ev);
+            true
+        } else {
+            false
         }
+    }
+
+    /// Dispatch every queued engine event in (time, FIFO) order.
+    pub(crate) fn drain(&mut self, sim: &mut FluidSim) {
+        while let Some((_t, ev)) = self.queue.pop() {
+            self.dispatch(sim, ev);
+        }
+    }
+
+    /// Every key range reduced and written?
+    pub(crate) fn is_complete(&self) -> bool {
+        self.reduce_done.iter().all(|&d| d)
+    }
+
+    /// The routing tag this executor stamps on its activities.
+    pub(crate) fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    /// Finalize a completed job.
+    pub(crate) fn into_result(self) -> JobResult {
         assert!(
             self.reduce_done.iter().all(|&d| d),
             "job ended with unfinished reducers (maps_left={}, xfers={:?})",

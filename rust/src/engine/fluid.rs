@@ -54,6 +54,10 @@ struct Activity {
     done: bool,
     /// Latest fair rate (recomputed whenever the active set changes).
     rate: f64,
+    /// Caller-owned routing tag (the tenancy layer stores a job id here
+    /// to route completions back to the owning executor). Never touched
+    /// by the allocation arithmetic.
+    tag: u64,
 }
 
 /// One resource's fair share in the progressive-filling heap.
@@ -155,15 +159,38 @@ impl FluidSim {
     /// Start an activity needing `work` units across `resources`.
     /// Zero-work activities complete on the next `step`.
     pub fn add_activity(&mut self, work: f64, resources: Vec<ResourceId>) -> ActivityId {
+        self.add_activity_tagged(work, resources, 0)
+    }
+
+    /// Like [`FluidSim::add_activity`] but with a caller-owned routing
+    /// `tag` retrievable via [`FluidSim::tag`]. The tag does not affect
+    /// the allocation: a tagged run is bit-identical to an untagged one.
+    pub fn add_activity_tagged(
+        &mut self,
+        work: f64,
+        resources: Vec<ResourceId>,
+        tag: u64,
+    ) -> ActivityId {
         assert!(work >= 0.0 && work.is_finite());
         assert!(!resources.is_empty(), "activity must use at least one resource");
         for &r in &resources {
             assert!(r < self.resources.len(), "dangling resource {r}");
         }
-        self.activities.push(Activity { remaining: work, resources, done: false, rate: 0.0 });
+        self.activities.push(Activity {
+            remaining: work,
+            resources,
+            done: false,
+            rate: 0.0,
+            tag,
+        });
         self.active.push(self.activities.len() - 1);
         self.dirty = true;
         self.activities.len() - 1
+    }
+
+    /// Routing tag an activity was created with (0 unless tagged).
+    pub fn tag(&self, id: ActivityId) -> u64 {
+        self.activities[id].tag
     }
 
     /// Cancel a running activity (e.g. a losing speculative copy).
@@ -574,6 +601,20 @@ mod tests {
             limit += 3.0;
         }
         assert!(sim.step().is_none());
+    }
+
+    /// Tags route completions without perturbing the allocation.
+    #[test]
+    fn tags_are_inert_and_retrievable() {
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource(10.0);
+        let a = sim.add_activity(100.0, vec![r]);
+        let b = sim.add_activity_tagged(100.0, vec![r], 42);
+        assert_eq!(sim.tag(a), 0);
+        assert_eq!(sim.tag(b), 42);
+        let (t, done) = sim.step().unwrap();
+        assert_eq!(done, vec![a, b]);
+        assert!((t - 20.0).abs() < 1e-9, "tags must not change fair shares");
     }
 
     #[test]

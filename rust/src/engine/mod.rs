@@ -22,7 +22,12 @@
 //!   reduce as events over the pieces above, re-queuing map work lost to
 //!   injected failures, replaying/re-partitioning reduce work via the
 //!   retained shuffle-transfer table (restartable reduce), and
-//!   re-sending stale push data via the retained push-transfer table.
+//!   re-sending stale push data via the retained push-transfer table;
+//! * [`tenancy`] — the multi-tenant job-stream layer: seeded arrival
+//!   processes feed a queue, a cross-job [`StreamPolicy`] (FIFO,
+//!   fair-share, deadline-aware admission) admits jobs, and every
+//!   in-flight job runs over ONE shared fluid network, contending for
+//!   the same links under max-min fairness.
 
 pub mod adversary;
 pub mod dynamics;
@@ -33,6 +38,7 @@ pub mod job;
 pub mod metrics;
 pub mod partitioner;
 pub mod scheduler;
+pub mod tenancy;
 
 pub use adversary::{PerturbBudget, SearchConfig, SearchResult};
 pub use dynamics::{DynEvent, DynProfile, ScenarioTrace, TimedEvent, TraceShape};
@@ -41,4 +47,8 @@ pub use executor::{run_job, JobResult};
 pub use job::{JobConfig, MapReduceApp, Record};
 pub use metrics::JobMetrics;
 pub use partitioner::Partitioner;
-pub use scheduler::{DynamicScheduler, PlanLocalScheduler, Scheduler};
+pub use scheduler::{
+    stream_policy, DynamicScheduler, PlanLocalScheduler, Scheduler, StreamDecision,
+    StreamPolicy,
+};
+pub use tenancy::{run_stream, ArrivalSpec, JobOutcome, StreamJob, StreamResult};

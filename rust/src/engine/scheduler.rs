@@ -437,6 +437,140 @@ pub fn for_config(config: &JobConfig) -> Box<dyn Scheduler> {
     }
 }
 
+// ------------------------------------------------ cross-job policies
+
+/// One job waiting in the tenancy layer's admission queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueuedJob {
+    /// Stream index of the job (what [`StreamDecision`] refers to).
+    pub job: usize,
+    /// Arrival (submission) virtual time.
+    pub arrival: f64,
+    /// Fair-share weight (scales the job's slot capacities).
+    pub weight: f64,
+    /// Completion deadline in absolute virtual time
+    /// (`f64::INFINITY` = none).
+    pub deadline: f64,
+    /// Estimated standalone service time (calibration run).
+    pub est_service: f64,
+}
+
+/// Snapshot of the stream state a policy decides over.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamView<'a> {
+    /// Current virtual time.
+    pub now: f64,
+    /// Jobs submitted but neither admitted nor rejected, in
+    /// (arrival, stream index) order.
+    pub queued: &'a [QueuedJob],
+    /// Jobs currently executing.
+    pub running: usize,
+}
+
+/// A cross-job admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamDecision {
+    /// Start the job (by stream index) now.
+    Admit(usize),
+    /// Drop the job without running it (deadline-aware admission
+    /// control); a rejected job counts against goodput.
+    Reject(usize),
+}
+
+/// A cross-job scheduling policy: consulted by the tenancy engine
+/// whenever the queue or the running set changes (arrivals and job
+/// completions). The engine enforces the contract — decisions about
+/// jobs not currently queued are ignored, so a policy bug cannot
+/// double-admit.
+pub trait StreamPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, view: &StreamView) -> Vec<StreamDecision>;
+}
+
+/// FIFO: one job at a time, in arrival order — the M/G/1 baseline whose
+/// latency knee the tenancy experiment is built to expose.
+#[derive(Debug, Default)]
+pub struct FifoStream;
+
+impl StreamPolicy for FifoStream {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn decide(&mut self, view: &StreamView) -> Vec<StreamDecision> {
+        if view.running == 0 {
+            view.queued.first().map(|q| StreamDecision::Admit(q.job)).into_iter().collect()
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Fair share: admit up to `max_inflight` concurrent jobs in arrival
+/// order. Concurrent jobs contend in the shared fluid network (max-min
+/// fair at every link/NIC/CPU); per-job weights materialize as scaled
+/// slot capacities at admission.
+#[derive(Debug)]
+pub struct FairShareStream {
+    pub max_inflight: usize,
+}
+
+impl Default for FairShareStream {
+    fn default() -> Self {
+        FairShareStream { max_inflight: 4 }
+    }
+}
+
+impl StreamPolicy for FairShareStream {
+    fn name(&self) -> &'static str {
+        "fair-share"
+    }
+    fn decide(&mut self, view: &StreamView) -> Vec<StreamDecision> {
+        let room = self.max_inflight.saturating_sub(view.running);
+        view.queued.iter().take(room).map(|q| StreamDecision::Admit(q.job)).collect()
+    }
+}
+
+/// Deadline-aware admission control: walk the queue in arrival order
+/// and admit a job only if its estimated finish — `now + est_service ×
+/// (jobs that would then be in flight)`, a processor-sharing slowdown
+/// estimate — meets its deadline; otherwise reject it outright rather
+/// than let it burn shared bandwidth on a miss.
+#[derive(Debug, Default)]
+pub struct DeadlineStream;
+
+impl StreamPolicy for DeadlineStream {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+    fn decide(&mut self, view: &StreamView) -> Vec<StreamDecision> {
+        let mut out = Vec::new();
+        let mut admitted = 0usize;
+        for q in view.queued {
+            let inflight = (view.running + admitted + 1) as f64;
+            let est_finish = view.now + q.est_service * inflight;
+            if q.deadline.is_finite() && est_finish > q.deadline {
+                out.push(StreamDecision::Reject(q.job));
+            } else {
+                out.push(StreamDecision::Admit(q.job));
+                admitted += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Look up a cross-job policy by CLI name.
+pub fn stream_policy(name: &str) -> Result<Box<dyn StreamPolicy>, String> {
+    match name {
+        "fifo" => Ok(Box::new(FifoStream)),
+        "fair-share" => Ok(Box::new(FairShareStream::default())),
+        "deadline" => Ok(Box::new(DeadlineStream)),
+        other => Err(format!(
+            "unknown stream policy '{other}' (expected fifo | fair-share | deadline)"
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -724,5 +858,62 @@ mod tests {
         let mut s = DynamicScheduler::new(false, true);
         let a = s.speculate(&v);
         assert_eq!(a, vec![Assignment { task: 0, node: 2, speculative: true }]);
+    }
+
+    // --------------------------------------- cross-job stream policies
+
+    fn qjob(job: usize, arrival: f64, deadline: f64, est: f64) -> QueuedJob {
+        QueuedJob { job, arrival, weight: 1.0, deadline, est_service: est }
+    }
+
+    #[test]
+    fn fifo_admits_one_at_a_time() {
+        let q = [qjob(0, 0.0, f64::INFINITY, 10.0), qjob(1, 1.0, f64::INFINITY, 10.0)];
+        let mut p = FifoStream;
+        let idle = StreamView { now: 1.0, queued: &q, running: 0 };
+        assert_eq!(p.decide(&idle), vec![StreamDecision::Admit(0)]);
+        let busy = StreamView { now: 1.0, queued: &q[1..], running: 1 };
+        assert_eq!(p.decide(&busy), Vec::new());
+    }
+
+    #[test]
+    fn fair_share_fills_to_cap() {
+        let q = [
+            qjob(3, 0.0, f64::INFINITY, 10.0),
+            qjob(4, 1.0, f64::INFINITY, 10.0),
+            qjob(5, 2.0, f64::INFINITY, 10.0),
+        ];
+        let mut p = FairShareStream { max_inflight: 3 };
+        let v = StreamView { now: 2.0, queued: &q, running: 1 };
+        assert_eq!(
+            p.decide(&v),
+            vec![StreamDecision::Admit(3), StreamDecision::Admit(4)],
+            "cap 3 with 1 running leaves room for 2, in arrival order"
+        );
+    }
+
+    #[test]
+    fn deadline_rejects_hopeless_jobs() {
+        // est_service 10; with one running, the first admit sees slowdown
+        // ×2 → finish at 20. Deadline 15 → reject; deadline 25 → admit.
+        let q = [qjob(0, 0.0, 15.0, 10.0), qjob(1, 0.0, 25.0, 10.0)];
+        let mut p = DeadlineStream;
+        let v = StreamView { now: 0.0, queued: &q, running: 1 };
+        assert_eq!(
+            p.decide(&v),
+            vec![StreamDecision::Reject(0), StreamDecision::Admit(1)]
+        );
+        // No deadline → always admitted.
+        let q2 = [qjob(2, 0.0, f64::INFINITY, 1e9)];
+        let v2 = StreamView { now: 0.0, queued: &q2, running: 5 };
+        assert_eq!(p.decide(&v2), vec![StreamDecision::Admit(2)]);
+    }
+
+    #[test]
+    fn stream_policy_factory_names() {
+        for name in ["fifo", "fair-share", "deadline"] {
+            assert_eq!(stream_policy(name).unwrap().name(), name);
+        }
+        assert!(stream_policy("bogus").is_err());
     }
 }

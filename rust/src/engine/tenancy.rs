@@ -1,0 +1,554 @@
+//! Multi-tenant job-stream layer: a seeded arrival process feeds a job
+//! queue; a cross-job [`StreamPolicy`] admits jobs; every admitted job
+//! runs as its own [`super::executor`] state machine over ONE shared
+//! [`FluidSim`], so concurrent jobs contend for the same WAN links,
+//! NICs and CPUs under max-min fairness — the "heavy traffic from
+//! millions of users" regime the single-job paper model cannot see.
+//!
+//! Activities are stamped with their job's index ([`FluidSim::tag`]);
+//! the stream engine routes each fluid completion back to the owning
+//! executor, drains per-job event heaps in admission order, and runs
+//! the policy again whenever the queue or the running set changes.
+//!
+//! ## Invariants
+//!
+//! * **Single-job streams are bit-identical to [`run_job`]**: one job
+//!   arriving at t = 0 replays exactly the single-job resource creation
+//!   order, activity ids and event ordering, so every metric matches
+//!   bit for bit per seed (tests/tenancy.rs).
+//! * **Per-job exact byte conservation**: each executor keeps its own
+//!   transfer tables and credit counters, so
+//!   `push_bytes_delivered == push_bytes` and
+//!   `shuffle_bytes_delivered == shuffle_bytes` hold for every
+//!   concurrent job — including under fault injection, where replay
+//!   and re-push traffic are accounted separately.
+//! * **Per-job times are absolute virtual times** (shared clock):
+//!   a job's latency is `finished - arrival`, not its makespan field.
+//!
+//! A platform [`ScenarioTrace`] passed to [`run_stream`] is shared:
+//! each active executor applies due events against its own cursor, and
+//! because scale factors are absolute w.r.t. the topology base, a
+//! late-admitted job re-applying an old event is idempotent.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't carry the libxla_extension rpath)
+//! use mrperf::engine::tenancy::{run_stream, ArrivalSpec, StreamJob};
+//! use mrperf::engine::scheduler::stream_policy;
+//! use mrperf::engine::{JobConfig, Record};
+//! use mrperf::model::plan::Plan;
+//! use mrperf::platform::topology::example_1_3;
+//! use mrperf::platform::MB;
+//!
+//! let topo = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
+//! let plan = Plan::local_push(&topo);
+//! let config = JobConfig::default();
+//! let app = mrperf::apps::SyntheticApp::new(1.0);
+//! let inputs: Vec<Vec<Record>> = (0..topo.n_sources())
+//!     .map(|i| vec![Record::new(format!("k{i}"), "v")])
+//!     .collect();
+//! let arrivals = ArrivalSpec::parse("poisson:0.05:7").unwrap().generate(3);
+//! let jobs: Vec<StreamJob> = arrivals
+//!     .iter()
+//!     .map(|&t| StreamJob::new(t, &plan, &app, &config, &inputs))
+//!     .collect();
+//! let mut policy = stream_policy("fair-share").unwrap();
+//! let result = run_stream(&topo, &jobs, policy.as_mut(), None).unwrap();
+//! assert_eq!(result.jobs.len(), 3);
+//! ```
+
+use super::dynamics::ScenarioTrace;
+use super::executor::{Executor, ResourceSet};
+use super::fluid::FluidSim;
+use super::job::{JobConfig, MapReduceApp, Record};
+use super::metrics::JobMetrics;
+use super::scheduler::{QueuedJob, StreamDecision, StreamPolicy, StreamView};
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::util::rng::Pcg64;
+
+#[allow(unused_imports)] // doc links
+use super::executor::run_job;
+
+/// One job submission in a stream. All jobs run on the same topology;
+/// plan/app/config/inputs may differ per job.
+pub struct StreamJob<'a> {
+    /// Submission virtual time (≥ 0, finite).
+    pub arrival: f64,
+    pub plan: &'a Plan,
+    pub app: &'a dyn MapReduceApp,
+    pub config: &'a JobConfig,
+    pub inputs: &'a [Vec<Record>],
+    /// Fair-share weight: scales the job's map/reduce slot capacities
+    /// at admission (1.0 = the config's counts exactly).
+    pub weight: f64,
+    /// Completion deadline in absolute virtual time
+    /// (`f64::INFINITY` = none). Used by deadline-aware admission and
+    /// by goodput accounting for every policy.
+    pub deadline: f64,
+    /// Estimated standalone service time (e.g. a calibration
+    /// [`run_job`]); the deadline policy's slowdown estimate scales it.
+    pub est_service: f64,
+}
+
+impl<'a> StreamJob<'a> {
+    /// A weight-1, deadline-free submission.
+    pub fn new(
+        arrival: f64,
+        plan: &'a Plan,
+        app: &'a dyn MapReduceApp,
+        config: &'a JobConfig,
+        inputs: &'a [Vec<Record>],
+    ) -> StreamJob<'a> {
+        StreamJob {
+            arrival,
+            plan,
+            app,
+            config,
+            inputs,
+            weight: 1.0,
+            deadline: f64::INFINITY,
+            est_service: 0.0,
+        }
+    }
+}
+
+/// What happened to one submitted job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// Submission time (copied from the [`StreamJob`]).
+    pub arrival: f64,
+    /// Admission time (absolute virtual time; NaN if never admitted).
+    pub started: f64,
+    /// Completion time (absolute virtual time; NaN if never finished).
+    pub finished: f64,
+    /// Dropped by admission control (or stranded un-admitted at stream
+    /// end) without running.
+    pub rejected: bool,
+    /// Completed at or before its deadline (an infinite deadline is
+    /// always met by a completed job; a rejected job never meets it).
+    pub met_deadline: bool,
+    /// Per-job engine metrics (`None` for rejected jobs). Phase spans
+    /// are absolute virtual times on the shared clock.
+    pub metrics: Option<JobMetrics>,
+}
+
+impl JobOutcome {
+    /// Sojourn time: completion minus submission (NaN if rejected).
+    pub fn latency(&self) -> f64 {
+        self.finished - self.arrival
+    }
+}
+
+/// Result of one stream run.
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    /// One outcome per submitted job, in submission (input) order.
+    pub jobs: Vec<JobOutcome>,
+    /// Virtual time when the last admitted job finished.
+    pub makespan: f64,
+}
+
+/// A deterministic arrival process for `mrperf experiment tenancy`'s
+/// `--arrivals PROFILE[:RATE[:SEED]]` flag.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Exponential inter-arrivals at `rate` jobs per (virtual) second,
+    /// drawn from a seeded [`Pcg64`] by inverse transform.
+    Poisson { rate: f64, seed: u64 },
+    /// Evenly spaced arrivals: job n at `n / rate`.
+    Periodic { rate: f64 },
+    /// Explicit arrival times (non-decreasing not required; the stream
+    /// engine orders by arrival).
+    Trace(Vec<f64>),
+}
+
+impl ArrivalSpec {
+    /// Parse `poisson:RATE[:SEED]` | `periodic:RATE` | `trace:t1,t2,..`.
+    /// Rejects zero/negative/non-finite rates and empty traces with
+    /// CLI-grade messages.
+    pub fn parse(spec: &str) -> Result<ArrivalSpec, String> {
+        let bad = |why: &str| {
+            Err(format!(
+                "invalid value '{spec}' for --arrivals ({why}; expected \
+                 poisson:RATE[:SEED] | periodic:RATE | trace:t1,t2,...)"
+            ))
+        };
+        let mut parts = spec.splitn(2, ':');
+        let profile = parts.next().unwrap_or("");
+        let rest = parts.next();
+        match profile {
+            "poisson" => {
+                let Some(rest) = rest else { return bad("missing rate") };
+                let mut it = rest.splitn(2, ':');
+                let rate_s = it.next().unwrap_or("");
+                let rate: f64 = match rate_s.parse() {
+                    Ok(v) => v,
+                    Err(_) => return bad("rate is not a number"),
+                };
+                if !(rate.is_finite() && rate > 0.0) {
+                    return bad("rate must be finite and > 0");
+                }
+                let seed = match it.next() {
+                    None => 7,
+                    Some(s) => match s.parse() {
+                        Ok(v) => v,
+                        Err(_) => return bad("seed is not an integer"),
+                    },
+                };
+                Ok(ArrivalSpec::Poisson { rate, seed })
+            }
+            "periodic" => {
+                let Some(rest) = rest else { return bad("missing rate") };
+                let rate: f64 = match rest.parse() {
+                    Ok(v) => v,
+                    Err(_) => return bad("rate is not a number"),
+                };
+                if !(rate.is_finite() && rate > 0.0) {
+                    return bad("rate must be finite and > 0");
+                }
+                Ok(ArrivalSpec::Periodic { rate })
+            }
+            "trace" => {
+                let Some(rest) = rest else { return bad("missing times") };
+                let mut times = Vec::new();
+                for tok in rest.split(',') {
+                    let t: f64 = match tok.trim().parse() {
+                        Ok(v) => v,
+                        Err(_) => return bad("trace time is not a number"),
+                    };
+                    if !(t.is_finite() && t >= 0.0) {
+                        return bad("trace times must be finite and >= 0");
+                    }
+                    times.push(t);
+                }
+                if times.is_empty() {
+                    return bad("empty trace");
+                }
+                Ok(ArrivalSpec::Trace(times))
+            }
+            _ => bad("unknown profile"),
+        }
+    }
+
+    /// First `n` arrival times of the process, deterministically.
+    pub fn generate(&self, n: usize) -> Vec<f64> {
+        match self {
+            ArrivalSpec::Poisson { rate, seed } => {
+                let mut rng = Pcg64::new(*seed);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        let u = rng.next_f64();
+                        t += -(1.0 - u).ln() / rate;
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalSpec::Periodic { rate } => (0..n).map(|i| i as f64 / rate).collect(),
+            ArrivalSpec::Trace(times) => times.iter().take(n).copied().collect(),
+        }
+    }
+}
+
+fn validate<'a>(jobs: &[StreamJob<'a>], topo: &Topology) -> Result<(), String> {
+    if jobs.is_empty() {
+        return Err("empty job stream (need at least one job)".into());
+    }
+    for (i, j) in jobs.iter().enumerate() {
+        if !(j.arrival.is_finite() && j.arrival >= 0.0) {
+            return Err(format!(
+                "job {i}: arrival time {} must be finite and >= 0",
+                j.arrival
+            ));
+        }
+        if !(j.weight.is_finite() && j.weight > 0.0) {
+            return Err(format!("job {i}: weight {} must be finite and > 0", j.weight));
+        }
+        if j.config.dynamics.is_some() {
+            return Err(format!(
+                "job {i}: per-job dynamics traces are not supported in a stream; \
+                 pass the trace to run_stream (it applies platform-wide)"
+            ));
+        }
+        if j.inputs.len() != topo.n_sources() {
+            return Err(format!(
+                "job {i}: {} input vectors for a {}-source topology",
+                j.inputs.len(),
+                topo.n_sources()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Run a stream of jobs over one shared fluid network under a cross-job
+/// policy. `dynamics`, if given, is a platform-wide scenario trace
+/// every active job observes. Outputs are dropped (only metrics are
+/// kept) to bound memory across many jobs.
+pub fn run_stream<'a>(
+    topo: &'a Topology,
+    jobs: &[StreamJob<'a>],
+    policy: &mut dyn StreamPolicy,
+    dynamics: Option<&'a ScenarioTrace>,
+) -> Result<StreamResult, String> {
+    validate(jobs, topo)?;
+
+    // Submission order: (arrival, input index) — deterministic.
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| {
+        jobs[a].arrival.total_cmp(&jobs[b].arrival).then(a.cmp(&b))
+    });
+
+    let mut sim = FluidSim::new();
+    let res = ResourceSet::build(&mut sim, topo);
+
+    let mut outcomes: Vec<JobOutcome> = jobs
+        .iter()
+        .map(|j| JobOutcome {
+            arrival: j.arrival,
+            started: f64::NAN,
+            finished: f64::NAN,
+            rejected: false,
+            met_deadline: false,
+            metrics: None,
+        })
+        .collect();
+
+    let mut next_arrival = 0usize; // cursor into `order`
+    let mut queued: Vec<QueuedJob> = Vec::new();
+    // Admission order; each executor's activities carry its job index
+    // as the fluid tag.
+    let mut active: Vec<(usize, Executor<'a>)> = Vec::new();
+    let mut makespan = 0.0f64;
+
+    // Apply the policy over the current queue; returns true if any job
+    // was admitted (the caller may need to re-check idle exit).
+    let mut admit = |sim: &mut FluidSim,
+                     queued: &mut Vec<QueuedJob>,
+                     active: &mut Vec<(usize, Executor<'a>)>,
+                     outcomes: &mut Vec<JobOutcome>|
+     -> bool {
+        if queued.is_empty() {
+            return false;
+        }
+        let decisions = {
+            let view = StreamView { now: sim.now(), queued, running: active.len() };
+            policy.decide(&view)
+        };
+        let mut admitted_any = false;
+        for d in decisions {
+            // Enforce the contract: only currently queued jobs can be
+            // admitted or rejected, each at most once.
+            match d {
+                StreamDecision::Admit(job) => {
+                    let Some(pos) = queued.iter().position(|q| q.job == job) else {
+                        continue;
+                    };
+                    queued.remove(pos);
+                    let sj = &jobs[job];
+                    let mut exec = Executor::new(
+                        topo,
+                        sj.plan,
+                        sj.app,
+                        sj.config,
+                        sj.inputs,
+                        res.clone(),
+                        dynamics,
+                        job as u64,
+                        sj.weight,
+                    );
+                    outcomes[job].started = sim.now();
+                    // Due trace events apply at admission (factors are
+                    // absolute, so re-application is idempotent), then
+                    // the push goes on the wire.
+                    exec.start(sim);
+                    active.push((job, exec));
+                    admitted_any = true;
+                }
+                StreamDecision::Reject(job) => {
+                    let Some(pos) = queued.iter().position(|q| q.job == job) else {
+                        continue;
+                    };
+                    queued.remove(pos);
+                    outcomes[job].rejected = true;
+                }
+            }
+        }
+        admitted_any
+    };
+
+    loop {
+        // Never step past the next arrival or the next scenario event
+        // of any active job.
+        let mut bound: Option<f64> = order
+            .get(next_arrival)
+            .map(|&j| jobs[j].arrival.max(sim.now()));
+        for (_, exec) in &active {
+            if let Some(t) = exec.next_dyn_time() {
+                bound = Some(match bound {
+                    None => t,
+                    Some(b) => b.min(t),
+                });
+            }
+        }
+
+        let step = match bound {
+            Some(tt) if sim.active_count() > 0 => sim.step_until(tt),
+            Some(tt) => {
+                // Nothing in flight: idle-jump to the arrival/event.
+                sim.jump_to(tt);
+                Some((sim.now(), Vec::new()))
+            }
+            None => sim.step(),
+        };
+
+        let Some((now, completed)) = step else {
+            // Simulation drained with no future arrivals bound. Give
+            // the policy a last chance over whatever is still queued;
+            // if nothing is admitted we are done.
+            if admit(&mut sim, &mut queued, &mut active, &mut outcomes) {
+                continue;
+            }
+            break;
+        };
+
+        if completed.is_empty() {
+            // Reached the bound: enqueue due arrivals, inject due
+            // scenario events, then let the policy react.
+            while let Some(&j) = order.get(next_arrival) {
+                if jobs[j].arrival > now {
+                    break;
+                }
+                next_arrival += 1;
+                queued.push(QueuedJob {
+                    job: j,
+                    arrival: jobs[j].arrival,
+                    weight: jobs[j].weight,
+                    deadline: jobs[j].deadline,
+                    est_service: jobs[j].est_service,
+                });
+            }
+            for (_, exec) in active.iter_mut() {
+                exec.apply_dynamics(&mut sim);
+            }
+            admit(&mut sim, &mut queued, &mut active, &mut outcomes);
+            continue;
+        }
+
+        // Route each completion to its owning job's event heap, then
+        // drain and straggler-check per job in admission order.
+        for aid in completed {
+            let tag = sim.tag(aid);
+            if let Some((_, exec)) = active.iter_mut().find(|(j, _)| *j as u64 == tag) {
+                exec.enqueue(now, aid);
+            }
+            // else: activity of a job that already completed (a
+            // cancelled losing copy) — nothing to dispatch.
+        }
+        for (_, exec) in active.iter_mut() {
+            exec.drain(&mut sim);
+        }
+        for (_, exec) in active.iter_mut() {
+            exec.maybe_speculate(&mut sim);
+        }
+
+        // Harvest finished jobs (admission order preserved).
+        let mut finished_any = false;
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].1.is_complete() {
+                let (job, exec) = active.remove(i);
+                let result = exec.into_result();
+                let fin = result.metrics.makespan;
+                outcomes[job].finished = fin;
+                outcomes[job].met_deadline = fin <= jobs[job].deadline;
+                outcomes[job].metrics = Some(result.metrics);
+                makespan = makespan.max(fin);
+                finished_any = true;
+            } else {
+                i += 1;
+            }
+        }
+        if finished_any {
+            admit(&mut sim, &mut queued, &mut active, &mut outcomes);
+        }
+    }
+
+    assert!(active.is_empty(), "stream ended with jobs still running");
+    // Jobs still queued when the stream drains were never admitted
+    // (e.g. FIFO never got an idle slot before arrivals stopped —
+    // impossible — or the policy declined them): count as rejected.
+    for q in queued {
+        outcomes[q.job].rejected = true;
+    }
+    Ok(StreamResult { jobs: outcomes, makespan })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_poisson_with_and_without_seed() {
+        assert_eq!(
+            ArrivalSpec::parse("poisson:0.5").unwrap(),
+            ArrivalSpec::Poisson { rate: 0.5, seed: 7 }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("poisson:2:99").unwrap(),
+            ArrivalSpec::Poisson { rate: 2.0, seed: 99 }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("periodic:0.25").unwrap(),
+            ArrivalSpec::Periodic { rate: 0.25 }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("trace:0,5,9.5").unwrap(),
+            ArrivalSpec::Trace(vec![0.0, 5.0, 9.5])
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "poisson:0",
+            "poisson:-1",
+            "poisson:inf",
+            "poisson:abc",
+            "poisson",
+            "periodic:0",
+            "periodic:-2",
+            "periodic",
+            "trace:",
+            "trace:1,-3",
+            "trace:1,nan",
+            "uniform:1",
+            "",
+        ] {
+            let e = ArrivalSpec::parse(bad).unwrap_err();
+            assert!(e.contains("--arrivals"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seeded_and_increasing() {
+        let spec = ArrivalSpec::Poisson { rate: 0.1, seed: 42 };
+        let a = spec.generate(50);
+        let b = spec.generate(50);
+        assert_eq!(a, b, "same seed, same arrivals");
+        for w in a.windows(2) {
+            assert!(w[1] > w[0], "arrivals strictly increase");
+        }
+        let other = ArrivalSpec::Poisson { rate: 0.1, seed: 43 }.generate(50);
+        assert_ne!(a, other, "different seed, different arrivals");
+        // Mean inter-arrival ≈ 1/rate over 50 draws (loose check).
+        let mean = a.last().unwrap() / 50.0;
+        assert!((5.0..20.0).contains(&mean), "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn periodic_arrivals_evenly_spaced() {
+        let a = ArrivalSpec::Periodic { rate: 0.5 }.generate(4);
+        assert_eq!(a, vec![0.0, 2.0, 4.0, 6.0]);
+    }
+}

@@ -15,6 +15,7 @@
 //! | scale  | engine sweep on generated 16–256-node platforms | [`scale`] |
 //! | churn  | plan-local vs dynamic schedulers under dynamics | [`churn`] |
 //! | adversary | worst-case trace search, per-scheduler robustness | [`adversary`] |
+//! | tenancy | multi-tenant job streams: load × cross-job policy | [`tenancy`] |
 //!
 //! See `rust/src/experiments/README.md` for the paper-figure ↔
 //! experiment mapping and docs/CLI.md for the full flag reference.
@@ -27,20 +28,22 @@ pub mod fig5678;
 pub mod fig9to12;
 pub mod scale;
 pub mod table1;
+pub mod tenancy;
 
 use crate::util::table::Table;
 use std::path::Path;
 
-/// All experiment ids, in paper order (plus the post-paper scale, churn
-/// and adversary sweeps).
-pub const ALL: [&str; 13] = [
+/// All experiment ids, in paper order (plus the post-paper scale,
+/// churn, adversary and tenancy sweeps).
+pub const ALL: [&str; 14] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "scale", "churn", "adversary",
+    "scale", "churn", "adversary", "tenancy",
 ];
 
-/// Run one experiment by id (`churn` and `adversary` with their default
-/// knobs; the CLI passes `--gen`/`--dynamics`/`--budget`/… through
-/// [`churn::run_with`] / [`adversary::run_with`] directly).
+/// Run one experiment by id (`churn`, `adversary` and `tenancy` with
+/// their default knobs; the CLI passes `--gen`/`--dynamics`/
+/// `--arrivals`/… through [`churn::run_with`] /
+/// [`adversary::run_with`] / [`tenancy::run_with`] directly).
 pub fn run(id: &str) -> Option<Vec<Table>> {
     Some(match id {
         "table1" => table1::run(),
@@ -56,6 +59,7 @@ pub fn run(id: &str) -> Option<Vec<Table>> {
         "scale" => scale::run(),
         "churn" => churn::run(),
         "adversary" => adversary::run(),
+        "tenancy" => tenancy::run(),
         _ => return None,
     })
 }

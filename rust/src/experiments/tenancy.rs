@@ -1,0 +1,473 @@
+//! Tenancy experiment: offered load × cross-job policy on ONE shared
+//! fluid network.
+//!
+//! The pipeline: optimize one end-to-end plan for the generated
+//! topology, run it **standalone** once to calibrate the service time
+//! `S`, then sweep offered loads ρ — each a seeded Poisson stream of
+//! jobs at rate λ = ρ / S — under each cross-job [`StreamPolicy`]
+//! (`fifo` | `fair-share` | `deadline`). Every job gets the deadline
+//! `arrival + slack × S` regardless of policy, so the goodput column
+//! (jobs finished by their deadline) is comparable across rows: FIFO
+//! protects latency per admitted job but queues the rest; fair-share
+//! overlaps jobs on the shared links (max-min contention stretches
+//! each); deadline-aware admission sheds jobs it estimates hopeless
+//! instead of letting them rot in the queue.
+//!
+//! An explicit `--arrivals PROFILE[:RATE[:SEED]]` overrides the load
+//! sweep with that single arrival process. Job latencies are sojourn
+//! times (`finished - arrival`); p50/p99 go through the NaN-safe
+//! [`percentile`]. Per-job exact byte conservation
+//! (`push_bytes_delivered == push_bytes`,
+//! `shuffle_bytes_delivered == shuffle_bytes`) is asserted for every
+//! completed job of every cell, including under an optional
+//! platform-wide `--dynamics` trace.
+//!
+//! [`StreamPolicy`]: crate::engine::scheduler::StreamPolicy
+//! [`percentile`]: crate::util::stats::percentile
+
+use crate::apps::SyntheticApp;
+use crate::engine::dynamics::{self, ScenarioTrace, TraceShape};
+use crate::engine::job::{batch_size, JobConfig, Record};
+use crate::engine::tenancy::{run_stream, ArrivalSpec, StreamJob};
+use crate::engine::{run_job, stream_policy};
+use crate::experiments::common::synthetic_inputs;
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::AppModel;
+use crate::optimizer::{AlternatingLp, PlanOptimizer};
+use crate::platform::scale::{generate, parse_spec_config, ScaleConfig};
+use crate::util::stats::percentile;
+use crate::util::table::Table;
+
+/// Defaults for `mrperf experiment tenancy` (and `experiment all`).
+pub const DEFAULT_GEN: &str = "hier-wan:64";
+pub const DEFAULT_JOBS: usize = 10;
+pub const DEFAULT_LOADS: &str = "0.5,1,2";
+pub const DEFAULT_POLICIES: &str = "fifo,fair-share,deadline";
+pub const DEFAULT_SLACK: f64 = 3.0;
+
+/// Input volume per source: modest, so a ten-job stream stays quick
+/// while still pushing real bytes through the shared links.
+pub const TENANCY_BYTES_PER_SOURCE: usize = 4_096;
+
+/// Data seed for the calibration inputs; job j uses `+ 1 + j`.
+const INPUT_SEED: u64 = 0x7E4A;
+/// Seed of the swept Poisson arrival processes (explicit `--arrivals`
+/// specs carry their own).
+const ARRIVAL_SEED: u64 = 11;
+
+/// One (policy, sweep point) cell.
+#[derive(Debug, Clone)]
+pub struct TenancyCell {
+    pub policy: &'static str,
+    /// Offered load ρ (`None` when an explicit `--arrivals` spec
+    /// replaced the sweep).
+    pub load: Option<f64>,
+    /// Arrival rate λ in jobs per virtual second (`None` for explicit
+    /// trace arrivals, which have no single rate).
+    pub lambda: Option<f64>,
+    /// Jobs submitted.
+    pub jobs: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    /// Sojourn-time percentiles over completed jobs (NaN when no job
+    /// completed).
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+    /// Percent of submitted jobs that finished by their deadline.
+    pub goodput: f64,
+}
+
+fn parse_loads(spec: &str) -> Result<Vec<f64>, String> {
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let v: f64 = tok.trim().parse().map_err(|_| {
+            format!(
+                "invalid value '{spec}' for --loads ('{tok}' is not a number; \
+                 expected comma-separated offered loads, e.g. 0.5,1,2)"
+            )
+        })?;
+        if !(v.is_finite() && v > 0.0) {
+            return Err(format!(
+                "invalid value '{spec}' for --loads (loads must be finite and > 0)"
+            ));
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Run the sweep; deterministic given the knobs. An explicit
+/// `arrivals` spec overrides the `loads` sweep (one point per policy).
+pub fn run_points(
+    gen_spec: &str,
+    arrivals: Option<&str>,
+    n_jobs: usize,
+    loads: &[f64],
+    policies: &[&str],
+    slack: f64,
+    dyn_spec: Option<&str>,
+) -> Result<Vec<TenancyCell>, String> {
+    if n_jobs == 0 {
+        return Err("invalid value '0' for --jobs (need at least one job)".into());
+    }
+    if !(slack.is_finite() && slack > 0.0) {
+        return Err(format!(
+            "invalid value '{slack}' for --slack (must be finite and > 0)"
+        ));
+    }
+    if policies.is_empty() {
+        return Err(
+            "invalid value '' for --policies (expected comma-separated \
+             fifo | fair-share | deadline)"
+                .into(),
+        );
+    }
+    for p in policies {
+        stream_policy(p)?; // fail fast on unknown names
+    }
+    let arrival_spec = arrivals.map(ArrivalSpec::parse).transpose()?;
+    if arrival_spec.is_none() {
+        if loads.is_empty() {
+            return Err("invalid value '' for --loads (need at least one load)".into());
+        }
+        for &l in loads {
+            if !(l.is_finite() && l > 0.0) {
+                return Err(format!(
+                    "invalid value '{l}' for --loads (loads must be finite and > 0)"
+                ));
+            }
+        }
+    }
+
+    let base = parse_spec_config(gen_spec)?;
+    let gen = generate(&ScaleConfig::new(base.kind, base.nodes).seed(base.seed));
+    let n_sources = gen.n_sources();
+    let cal_inputs = synthetic_inputs(n_sources, TENANCY_BYTES_PER_SOURCE, INPUT_SEED);
+    // Evaluate the model (and thus the optimizer) on the volume the
+    // engine will actually simulate (the fig4 idiom).
+    let mean_bytes =
+        cal_inputs.iter().map(|v| batch_size(v) as f64).sum::<f64>() / n_sources as f64;
+    let topo = gen.with_uniform_data(mean_bytes);
+    let app = AppModel::new(1.0);
+    let plan = AlternatingLp::default().optimize(&topo, app, BarrierConfig::HADOOP);
+    let sapp = SyntheticApp::new(1.0);
+    let config = JobConfig::optimized();
+
+    // Calibration run: the standalone service time S anchors the swept
+    // arrival rates (λ = ρ / S), every deadline (arrival + slack × S)
+    // and the deadline policy's service estimate.
+    let s = run_job(&topo, &plan, &sapp, &config, &cal_inputs)
+        .metrics
+        .makespan
+        .max(1e-9);
+
+    let trace = match dyn_spec {
+        None => None,
+        Some(ds) => {
+            let (profile, seed) = dynamics::parse_spec(ds)?;
+            // Horizon sized to a fully serialized stream, so events
+            // land inside every sweep point's busy period.
+            let horizon = s * n_jobs as f64;
+            Some(ScenarioTrace::generate(profile, seed, &TraceShape::of(&topo, horizon)))
+        }
+    };
+
+    // Per-job inputs (distinct seeds) are shared across sweep points:
+    // the same job stream meets every (policy, load) cell.
+    let job_inputs: Vec<Vec<Vec<Record>>> = (0..n_jobs)
+        .map(|j| {
+            synthetic_inputs(n_sources, TENANCY_BYTES_PER_SOURCE, INPUT_SEED + 1 + j as u64)
+        })
+        .collect();
+
+    let points: Vec<(Option<f64>, ArrivalSpec)> = match &arrival_spec {
+        Some(spec) => vec![(None, spec.clone())],
+        None => loads
+            .iter()
+            .map(|&rho| {
+                (Some(rho), ArrivalSpec::Poisson { rate: rho / s, seed: ARRIVAL_SEED })
+            })
+            .collect(),
+    };
+
+    let mut cells = Vec::new();
+    for &pname in policies {
+        for (load, spec) in &points {
+            let arr = spec.generate(n_jobs);
+            let lambda = match spec {
+                ArrivalSpec::Poisson { rate, .. } | ArrivalSpec::Periodic { rate } => {
+                    Some(*rate)
+                }
+                ArrivalSpec::Trace(_) => None,
+            };
+            let jobs: Vec<StreamJob> = arr
+                .iter()
+                .zip(&job_inputs)
+                .map(|(&t, inputs)| {
+                    let mut sj = StreamJob::new(t, &plan, &sapp, &config, inputs);
+                    sj.deadline = t + slack * s;
+                    sj.est_service = s;
+                    sj
+                })
+                .collect();
+            let mut policy = stream_policy(pname)?;
+            let name = policy.name();
+            let result = run_stream(&topo, &jobs, policy.as_mut(), trace.as_ref())?;
+
+            let mut lats = Vec::new();
+            let (mut completed, mut rejected, mut met) = (0usize, 0usize, 0usize);
+            for o in &result.jobs {
+                if o.rejected {
+                    rejected += 1;
+                    continue;
+                }
+                let m = o
+                    .metrics
+                    .as_ref()
+                    .expect("non-rejected stream job must carry metrics");
+                assert_eq!(
+                    m.push_bytes_delivered, m.push_bytes,
+                    "{name} lost push bytes in a concurrent stream"
+                );
+                assert_eq!(
+                    m.shuffle_bytes_delivered, m.shuffle_bytes,
+                    "{name} lost shuffle bytes in a concurrent stream"
+                );
+                assert_eq!(
+                    m.output_records, m.input_records,
+                    "{name} lost records in a concurrent stream"
+                );
+                completed += 1;
+                if o.met_deadline {
+                    met += 1;
+                }
+                lats.push(o.latency());
+            }
+            let (p50, p99, max) = if lats.is_empty() {
+                (f64::NAN, f64::NAN, f64::NAN)
+            } else {
+                (
+                    percentile(&lats, 50.0),
+                    percentile(&lats, 99.0),
+                    lats.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+                )
+            };
+            cells.push(TenancyCell {
+                policy: name,
+                load: *load,
+                lambda,
+                jobs: result.jobs.len(),
+                completed,
+                rejected,
+                p50,
+                p99,
+                max,
+                goodput: met as f64 / result.jobs.len() as f64 * 100.0,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the tenancy table for explicit knobs (the CLI entry point).
+#[allow(clippy::too_many_arguments)]
+pub fn run_with(
+    gen_spec: &str,
+    arrivals: Option<&str>,
+    n_jobs: usize,
+    loads_spec: &str,
+    policies_spec: &str,
+    slack: f64,
+    dyn_spec: Option<&str>,
+) -> Result<Vec<Table>, String> {
+    let loads = parse_loads(loads_spec)?;
+    let policies: Vec<&str> = policies_spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if policies.is_empty() {
+        return Err(format!(
+            "invalid value '{policies_spec}' for --policies (expected \
+             comma-separated fifo | fair-share | deadline)"
+        ));
+    }
+    let cells = run_points(gen_spec, arrivals, n_jobs, &loads, &policies, slack, dyn_spec)?;
+
+    let arrivals_note = match arrivals {
+        Some(a) => format!(" --arrivals {a} (overrides --loads)"),
+        None => String::new(),
+    };
+    let dyn_note = match dyn_spec {
+        Some(d) => format!(" --dynamics {d}"),
+        None => String::new(),
+    };
+    let mut t = Table::new(
+        format!(
+            "tenancy: offered load × cross-job policy on one shared fluid network \
+             (--gen {gen_spec} --jobs {n_jobs} --slack {slack}{arrivals_note}{dyn_note}) — \
+             latencies are sojourn times, goodput counts deadline \
+             (arrival + slack × S) hits"
+        ),
+        &[
+            "policy",
+            "load",
+            "lambda (j/s)",
+            "jobs",
+            "done",
+            "rejected",
+            "p50 (s)",
+            "p99 (s)",
+            "max (s)",
+            "goodput",
+        ],
+    );
+    let fs = |x: f64| if x.is_nan() { "-".to_string() } else { format!("{x:.4}") };
+    for c in &cells {
+        t.add_row(vec![
+            c.policy.to_string(),
+            c.load.map_or_else(|| "-".to_string(), |l| format!("{l:.2}")),
+            c.lambda.map_or_else(|| "-".to_string(), |l| format!("{l:.4}")),
+            c.jobs.to_string(),
+            c.completed.to_string(),
+            c.rejected.to_string(),
+            fs(c.p50),
+            fs(c.p99),
+            fs(c.max),
+            format!("{:.0}%", c.goodput),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// The `tenancy` experiment with its default knobs (used by
+/// `mrperf experiment all`).
+pub fn run() -> Vec<Table> {
+    run_with(
+        DEFAULT_GEN,
+        None,
+        DEFAULT_JOBS,
+        DEFAULT_LOADS,
+        DEFAULT_POLICIES,
+        DEFAULT_SLACK,
+        None,
+    )
+    .expect("default tenancy knobs are valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same knobs → bit-identical cells (sized down so the debug-build
+    /// test stays quick).
+    #[test]
+    fn tenancy_cells_are_deterministic() {
+        let run = || {
+            run_points(
+                "hier-wan:16",
+                None,
+                4,
+                &[1.0],
+                &["fifo", "fair-share", "deadline"],
+                3.0,
+                None,
+            )
+            .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), 3, "3 policies × 1 load");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.policy, y.policy);
+            assert_eq!(x.p50.to_bits(), y.p50.to_bits());
+            assert_eq!(x.p99.to_bits(), y.p99.to_bits());
+            assert_eq!(x.max.to_bits(), y.max.to_bits());
+            assert_eq!(
+                (x.jobs, x.completed, x.rejected),
+                (y.jobs, y.completed, y.rejected)
+            );
+        }
+        // Every submitted job is accounted for.
+        for c in &a {
+            assert_eq!(c.completed + c.rejected, c.jobs, "{c:?}");
+        }
+    }
+
+    /// Four simultaneous arrivals, slack 3 × S: deadline-aware
+    /// admission estimates the 4th job's finish at 4 × S > deadline and
+    /// sheds exactly it.
+    #[test]
+    fn deadline_policy_rejects_overload() {
+        let cells = run_points(
+            "hier-wan:16",
+            Some("trace:0,0,0,0"),
+            4,
+            &[1.0],
+            &["deadline"],
+            3.0,
+            None,
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].rejected, 1, "{:?}", cells[0]);
+        assert_eq!(cells[0].completed, 3, "{:?}", cells[0]);
+    }
+
+    /// An explicit --arrivals spec replaces the whole load sweep.
+    #[test]
+    fn explicit_arrivals_override_loads() {
+        let cells = run_points(
+            "hier-wan:16",
+            Some("periodic:1"),
+            3,
+            &[0.5, 1.0, 2.0],
+            &["fifo"],
+            3.0,
+            None,
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].load, None);
+        assert_eq!(cells[0].lambda, Some(1.0));
+        assert_eq!(cells[0].jobs, 3);
+    }
+
+    #[test]
+    fn rejects_bad_knobs() {
+        let ok_policies = ["fifo"];
+        let e = run_points("hier-wan:16", None, 0, &[1.0], &ok_policies, 3.0, None)
+            .unwrap_err();
+        assert!(e.contains("--jobs"), "{e}");
+        let e = run_points("hier-wan:16", None, 2, &[0.0], &ok_policies, 3.0, None)
+            .unwrap_err();
+        assert!(e.contains("--loads"), "{e}");
+        let e = run_points("hier-wan:16", None, 2, &[1.0], &["bogus"], 3.0, None)
+            .unwrap_err();
+        assert!(e.contains("stream policy"), "{e}");
+        let e = run_points("hier-wan:16", None, 2, &[1.0], &ok_policies, f64::NAN, None)
+            .unwrap_err();
+        assert!(e.contains("--slack"), "{e}");
+        let e = run_points(
+            "hier-wan:16",
+            Some("uniform:1"),
+            2,
+            &[1.0],
+            &ok_policies,
+            3.0,
+            None,
+        )
+        .unwrap_err();
+        assert!(e.contains("--arrivals"), "{e}");
+        assert!(run_points("nope:16", None, 2, &[1.0], &ok_policies, 3.0, None).is_err());
+        assert!(
+            run_with("hier-wan:16", None, 2, "abc", "fifo", 3.0, None).is_err(),
+            "--loads must parse"
+        );
+        assert!(
+            run_with("hier-wan:16", None, 2, "1", " , ", 3.0, None).is_err(),
+            "--policies must name a policy"
+        );
+    }
+}

@@ -35,7 +35,10 @@
 //!   re-queuing map work lost to injected failures, replaying reduce
 //!   work through a retained shuffle-transfer table (restartable
 //!   reduce) and re-sending stale push data through a retained
-//!   push-transfer table.
+//!   push-transfer table; plus a multi-tenant job-stream layer
+//!   (`engine::tenancy`) where seeded arrival processes feed cross-job
+//!   admission policies (FIFO, fair-share, deadline-aware) and every
+//!   in-flight job contends on ONE shared fluid network.
 //! * **[`apps`]**/**[`data`]** — the evaluation applications (Word Count,
 //!   Sessionization, Full Inverted Index, synthetic-α) and seeded
 //!   workload generators.
@@ -43,9 +46,10 @@
 //!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py`.
 //! * **[`experiments`]** — regenerates every table and figure of the
 //!   paper's evaluation (Table 1, Figs 4–12), plus the post-paper
-//!   `scale` sweep over generated 16–256-node platforms and the `churn`
+//!   `scale` sweep over generated 16–256-node platforms, the `churn`
 //!   comparison of plan-local vs dynamic scheduling under injected
-//!   platform dynamics.
+//!   platform dynamics, the `adversary` worst-case trace search and
+//!   the `tenancy` multi-tenant load × policy sweep.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! rust binary is self-contained afterwards. The default cargo build has

@@ -30,10 +30,13 @@ const USAGE: &str = "\
 mrperf — geo-distributed MapReduce modeling, optimization & execution
 
 USAGE:
-  mrperf experiment <table1|fig4..fig12|scale|churn|adversary|all> [--results DIR]
+  mrperf experiment <table1|fig4..fig12|scale|churn|adversary|tenancy|all>
+               [--results DIR]
                [--gen KIND:NODES[:SEED]] [--dynamics PROFILE[:SEED]]
                [--profiles all] [--hedge RATE]                        (churn only)
                [--budget K] [--seed S] [--restarts R] [--hedge RATE]  (adversary only)
+               [--arrivals PROFILE[:RATE[:SEED]]] [--jobs N] [--loads L1,L2,..]
+               [--policies P1,P2,..] [--slack S]                      (tenancy only)
   mrperf plan  [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
                [--alpha A] [--barriers G-P-L] [--optimizer NAME] [--skew S]
                [--hedge RATE]
@@ -69,6 +72,14 @@ HEDGE:      --hedge RATE (0 ≤ RATE < 1) plans against an expected reducer
             full dynamics-profile × execution-mode matrix with a hedged row
 BENCH:      quick perf suite (solver + optimizer scale paths); --json DIR
             writes one BENCH_<name>.json per result for trend tracking
+TENANCY:    `mrperf experiment tenancy` runs multi-tenant job streams over ONE
+            shared fluid network: --loads sweeps offered load ρ (Poisson
+            arrivals at λ = ρ / S, S calibrated by a standalone run) across
+            --policies (fifo | fair-share | deadline); --arrivals
+            poisson:RATE[:SEED] | periodic:RATE | trace:t1,t2,... replaces the
+            sweep; every job's deadline is arrival + --slack × S, and the
+            goodput column counts deadline hits. --dynamics injects a
+            platform-wide trace every concurrent job observes
 ADVERSARY:  `mrperf experiment adversary` searches (seeded restarts + greedy
             refinement, deterministic given --seed) for the worst-case trace
             within a perturbation budget: --budget K bounds the node outages
@@ -182,8 +193,8 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
     };
     for id in ids {
         println!("\n### experiment {id}\n");
-        // `churn` and `adversary` take CLI-configurable knobs; everything
-        // else is fixed.
+        // `churn`, `adversary` and `tenancy` take CLI-configurable
+        // knobs; everything else is fixed.
         let ok = if id == "adversary" {
             let gen_spec = args.get_or("gen", experiments::adversary::DEFAULT_GEN);
             let knobs = (|| -> Result<(u64, Option<usize>, usize, f64), String> {
@@ -245,6 +256,38 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
                 }
                 Err(e) => {
                     eprintln!("churn: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else if id == "tenancy" {
+            let gen_spec = args.get_or("gen", experiments::tenancy::DEFAULT_GEN);
+            let knobs = (|| -> Result<(usize, f64), String> {
+                let jobs = args
+                    .get_usize("jobs", experiments::tenancy::DEFAULT_JOBS)
+                    .map_err(|e| e.to_string())?;
+                let slack = args
+                    .get_f64("slack", experiments::tenancy::DEFAULT_SLACK)
+                    .map_err(|e| e.to_string())?;
+                Ok((jobs, slack))
+            })();
+            let tables = knobs.and_then(|(jobs, slack)| {
+                experiments::tenancy::run_with(
+                    gen_spec,
+                    args.get("arrivals"),
+                    jobs,
+                    args.get_or("loads", experiments::tenancy::DEFAULT_LOADS),
+                    args.get_or("policies", experiments::tenancy::DEFAULT_POLICIES),
+                    slack,
+                    args.get("dynamics"),
+                )
+            });
+            match tables {
+                Ok(tables) => {
+                    experiments::report_tables(id, &tables, &results_dir);
+                    true
+                }
+                Err(e) => {
+                    eprintln!("tenancy: {e}");
                     return ExitCode::FAILURE;
                 }
             }

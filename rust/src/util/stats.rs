@@ -16,8 +16,17 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// NaN policy: `f64::min`/`f64::max` folds would silently *drop* NaN
+    /// extremes (IEEE min/max prefer the non-NaN operand), producing a
+    /// Summary whose `min`/`max` look clean while `mean`/`stddev` are
+    /// poisoned — so we reject NaN input outright with a clear message
+    /// instead of returning an inconsistent summary.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of on empty sample");
+        assert!(
+            xs.iter().all(|x| !x.is_nan()),
+            "Summary::of on NaN-bearing sample"
+        );
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -66,6 +75,11 @@ pub struct LinFit {
     pub n: usize,
 }
 
+/// Panics on a degenerate x sample (`sxx == 0`: all x identical, or any
+/// NaN, which poisons `sxx` into NaN and fails the `sxx > 0` guard). A
+/// zero-variance *y* sample is fine: the fit is the horizontal line and
+/// R² is reported as 1.0 (the line explains all — i.e. none — of the
+/// variance) rather than dividing by `syy == 0`.
 pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinFit {
     assert_eq!(xs.len(), ys.len());
     assert!(xs.len() >= 2, "need at least two points");
@@ -94,10 +108,14 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 }
 
 /// Percentile (nearest-rank) of an unsorted sample, `p` in [0,100].
+///
+/// NaN-safe: sorts with [`f64::total_cmp`], under which NaN orders after
+/// `+inf`, so a NaN-bearing sample never panics — high percentiles of such
+/// a sample return NaN (poisoned tail) rather than aborting the run.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
     v[rank.min(v.len()) - 1]
 }
@@ -164,6 +182,40 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 1.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_nan_does_not_panic() {
+        // Regression: the old partial_cmp().unwrap() sort aborted on NaN.
+        let xs = [1.0, f64::NAN, 2.0, 3.0];
+        // NaN totally-orders after +inf, so low/mid percentiles stay clean…
+        assert_eq!(percentile(&xs, 25.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 75.0), 3.0);
+        // …and the poisoned tail reports NaN instead of panicking.
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN-bearing sample")]
+    fn summary_rejects_nan() {
+        let _ = Summary::of(&[1.0, f64::NAN]);
+    }
+
+    #[test]
+    fn linear_fit_zero_y_variance() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = [4.0, 4.0, 4.0];
+        let f = linear_fit(&xs, &ys);
+        assert_eq!(f.slope, 0.0);
+        assert_eq!(f.intercept, 4.0);
+        assert_eq!(f.r2, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate x sample")]
+    fn linear_fit_degenerate_x() {
+        let _ = linear_fit(&[2.0, 2.0], &[1.0, 3.0]);
     }
 
     #[test]

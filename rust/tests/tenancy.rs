@@ -1,0 +1,303 @@
+//! Multi-tenant stream-layer properties (ISSUE 6):
+//!
+//! * **single-job equivalence** — a one-job stream arriving at t = 0
+//!   reproduces `run_job`'s metrics bit-for-bit, with and without a
+//!   platform dynamics trace (the stream plumbing must not perturb the
+//!   arithmetic);
+//! * **determinism** — the same job stream under the same policy gives
+//!   bit-identical per-job metrics and outcome times across runs;
+//! * **per-job conservation** — every concurrent job conserves its own
+//!   push and shuffle bytes exactly, including under injected failures;
+//! * **policy semantics** — FIFO serializes the jobs on the shared
+//!   network while fair-share overlaps them (and the contention from
+//!   overlap visibly stretches each job past its standalone time);
+//! * **validation** — malformed streams are rejected with CLI-grade
+//!   messages before any simulation runs.
+
+use mrperf::apps::SyntheticApp;
+use mrperf::engine::dynamics::{DynProfile, ScenarioTrace, TraceShape};
+use mrperf::engine::job::JobConfig;
+use mrperf::engine::tenancy::{run_stream, StreamJob};
+use mrperf::engine::{run_job, stream_policy, JobMetrics, Record};
+use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::plan::Plan;
+use mrperf::platform::scale::{generate_kind, ScaleKind};
+use mrperf::platform::Topology;
+use mrperf::util::qcheck::{ensure, qcheck, Config};
+
+/// Bit-exact signature of every metric field (floats by bit pattern).
+fn sig(m: &JobMetrics) -> String {
+    format!(
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        m.makespan.to_bits(),
+        m.push_end.to_bits(),
+        m.map_end.to_bits(),
+        m.shuffle_end.to_bits(),
+        m.push_bytes.to_bits(),
+        m.shuffle_bytes.to_bits(),
+        m.output_bytes.to_bits(),
+        m.reduce_bytes_replayed.to_bits(),
+        m.shuffle_bytes_delivered.to_bits(),
+        m.push_bytes_repushed.to_bits(),
+        m.push_bytes_delivered.to_bits(),
+        m.n_map_tasks,
+        m.n_reduce_tasks,
+        m.spec_launched,
+        m.spec_won,
+        m.stolen,
+        m.dyn_events,
+        m.failures_injected,
+        m.tasks_requeued,
+        m.reducers_failed,
+        m.reduce_ranges_reassigned,
+        m.sources_refreshed,
+        m.input_records,
+        m.intermediate_records,
+        m.output_records
+    )
+}
+
+fn setup(seed: u64) -> (Topology, Plan) {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, seed);
+    let plan = Plan::local_push(&topo);
+    (topo, plan)
+}
+
+/// A one-job stream at t = 0 IS the single-job path: every metric
+/// matches `run_job` bit for bit, both statically and under a shared
+/// failures trace (passed per-job to `run_job`, platform-wide to
+/// `run_stream`).
+#[test]
+fn single_job_stream_is_bit_identical_to_single_job() {
+    let (topo, plan) = setup(3);
+    let app = SyntheticApp::new(1.0);
+    let config = JobConfig::default();
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xD11A);
+    let jobs = [StreamJob::new(0.0, &plan, &app, &config, &inputs)];
+
+    let single = run_job(&topo, &plan, &app, &config, &inputs).metrics;
+    let mut policy = stream_policy("fifo").unwrap();
+    let res = run_stream(&topo, &jobs, policy.as_mut(), None).unwrap();
+    let o = &res.jobs[0];
+    let m = o.metrics.as_ref().expect("the lone job must complete");
+    assert_eq!(sig(&single), sig(m), "single-job stream diverged from run_job");
+    assert_eq!(o.started.to_bits(), 0.0f64.to_bits());
+    assert_eq!(o.finished.to_bits(), single.makespan.to_bits());
+    assert_eq!(res.makespan.to_bits(), single.makespan.to_bits());
+
+    // Same equivalence with a failures trace actually firing mid-run.
+    let trace = ScenarioTrace::generate(
+        DynProfile::Failures,
+        7,
+        &TraceShape::of(&topo, single.makespan),
+    );
+    let dyn_cfg = config.clone().with_dynamics(trace.clone());
+    let single_dyn = run_job(&topo, &plan, &app, &dyn_cfg, &inputs).metrics;
+    assert!(single_dyn.failures_injected > 0, "trace must actually fire");
+    let mut policy = stream_policy("fifo").unwrap();
+    let res = run_stream(&topo, &jobs, policy.as_mut(), Some(&trace)).unwrap();
+    assert_eq!(
+        sig(&single_dyn),
+        sig(res.jobs[0].metrics.as_ref().expect("job must complete")),
+        "single-job stream diverged from run_job under dynamics"
+    );
+}
+
+/// Same seed, same stream, same policy → bit-identical per-job metrics
+/// and outcome times; fair-share overlaps all three jobs at t = 0.
+#[test]
+fn same_seed_streams_are_bit_identical() {
+    let (topo, plan) = setup(3);
+    let app = SyntheticApp::new(1.0);
+    let config = JobConfig::default();
+    let inputs_a = synthetic_inputs(topo.n_sources(), 1 << 13, 0xA11CE);
+    let inputs_b = synthetic_inputs(topo.n_sources(), 1 << 13, 0xB0B);
+    // The third arrival lands mid-run of the first two whatever the
+    // absolute time scale of this topology is.
+    let arr2 = 0.25 * run_job(&topo, &plan, &app, &config, &inputs_a).metrics.makespan;
+    assert!(arr2 > 0.0);
+    let run = || {
+        let jobs = vec![
+            StreamJob::new(0.0, &plan, &app, &config, &inputs_a),
+            StreamJob::new(0.0, &plan, &app, &config, &inputs_b),
+            StreamJob::new(arr2, &plan, &app, &config, &inputs_a),
+        ];
+        let mut policy = stream_policy("fair-share").unwrap();
+        run_stream(&topo, &jobs, policy.as_mut(), None).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    for (i, (x, y)) in a.jobs.iter().zip(&b.jobs).enumerate() {
+        assert!(!x.rejected, "job {i} rejected");
+        assert_eq!(x.started.to_bits(), y.started.to_bits(), "job {i}");
+        assert_eq!(x.finished.to_bits(), y.finished.to_bits(), "job {i}");
+        assert_eq!(
+            sig(x.metrics.as_ref().unwrap()),
+            sig(y.metrics.as_ref().unwrap()),
+            "job {i}: stream run is nondeterministic"
+        );
+    }
+    // Fair-share (cap 4) admits every job the moment it arrives, so all
+    // three overlap: the first two each take at least their standalone
+    // makespan (4 × arr2) under contention, so the third arrives while
+    // both still run.
+    assert_eq!(a.jobs[0].started, 0.0);
+    assert_eq!(a.jobs[1].started, 0.0);
+    assert_eq!(a.jobs[2].started.to_bits(), arr2.to_bits());
+    assert!(
+        a.jobs[2].started < a.jobs[0].finished.min(a.jobs[1].finished),
+        "third job must overlap the first two"
+    );
+}
+
+/// Per-job exact byte conservation with ≥ 2 concurrent jobs under
+/// generated failure traces: each executor keeps its own transfer
+/// tables, so no byte is lost or cross-credited between tenants.
+#[test]
+fn concurrent_jobs_conserve_bytes_under_failures() {
+    qcheck(Config::default().cases(8), "per-job conservation in a stream", |rng| {
+        let (topo, plan) = setup(3);
+        let app = SyntheticApp::new(1.0);
+        let config = JobConfig::default();
+        let inputs_a = synthetic_inputs(topo.n_sources(), 1 << 13, 0xFA11);
+        let inputs_b = synthetic_inputs(topo.n_sources(), 1 << 13, 0xFA12);
+        let trace_seed = rng.next_u64();
+        // A standalone run fixes the horizon: the concurrent stream runs
+        // at least as long, so events land while both jobs are active.
+        let stat = run_job(&topo, &plan, &app, &config, &inputs_a).metrics;
+        let trace = ScenarioTrace::generate(
+            DynProfile::Failures,
+            trace_seed,
+            &TraceShape::of(&topo, stat.makespan),
+        );
+        let jobs = vec![
+            StreamJob::new(0.0, &plan, &app, &config, &inputs_a),
+            StreamJob::new(0.0, &plan, &app, &config, &inputs_b),
+        ];
+        let mut policy = stream_policy("fair-share").unwrap();
+        let res = run_stream(&topo, &jobs, policy.as_mut(), Some(&trace))
+            .map_err(|e| format!("run_stream: {e}"))?;
+        let mut any_failures = false;
+        for (i, o) in res.jobs.iter().enumerate() {
+            ensure(!o.rejected, format!("job {i} was rejected"))?;
+            ensure(o.started == 0.0, format!("job {i} must be admitted at t=0"))?;
+            let m = o.metrics.as_ref().expect("completed job carries metrics");
+            // Byte counts are integers < 2^53, so the f64 sums are exact
+            // and equality is exact.
+            ensure(
+                m.push_bytes_delivered == m.push_bytes,
+                format!(
+                    "seed {trace_seed:#x} job {i}: push delivered {} != pushed {}",
+                    m.push_bytes_delivered, m.push_bytes
+                ),
+            )?;
+            ensure(
+                m.shuffle_bytes_delivered == m.shuffle_bytes,
+                format!(
+                    "seed {trace_seed:#x} job {i}: shuffle delivered {} != \
+                     shuffled {} (replayed {})",
+                    m.shuffle_bytes_delivered, m.shuffle_bytes, m.reduce_bytes_replayed
+                ),
+            )?;
+            ensure(
+                m.output_records == m.input_records,
+                format!(
+                    "seed {trace_seed:#x} job {i}: lost records ({} in, {} out)",
+                    m.input_records, m.output_records
+                ),
+            )?;
+            any_failures |= m.failures_injected > 0;
+        }
+        ensure(
+            any_failures,
+            format!("seed {trace_seed:#x}: no failure landed on any job"),
+        )?;
+        Ok(())
+    });
+}
+
+/// Policy semantics on two simultaneous submissions: FIFO admits the
+/// second only when the first finishes (and its first job is
+/// bit-identical to the standalone run — an idle queue must not perturb
+/// the tenant), while fair-share admits both at t = 0 and the shared
+/// source NICs stretch the overlapped job past its standalone makespan.
+#[test]
+fn fifo_serializes_and_fair_share_overlaps() {
+    let (topo, plan) = setup(3);
+    let app = SyntheticApp::new(1.0);
+    let config = JobConfig::default();
+    let inputs_a = synthetic_inputs(topo.n_sources(), 1 << 13, 0xA11CE);
+    let inputs_b = synthetic_inputs(topo.n_sources(), 1 << 13, 0xB0B);
+    let jobs = vec![
+        StreamJob::new(0.0, &plan, &app, &config, &inputs_a),
+        StreamJob::new(0.0, &plan, &app, &config, &inputs_b),
+    ];
+    let single = run_job(&topo, &plan, &app, &config, &inputs_a).metrics;
+
+    let mut fifo = stream_policy("fifo").unwrap();
+    let f = run_stream(&topo, &jobs, fifo.as_mut(), None).unwrap();
+    assert!(!f.jobs[0].rejected && !f.jobs[1].rejected);
+    assert_eq!(f.jobs[0].started, 0.0);
+    assert_eq!(
+        sig(f.jobs[0].metrics.as_ref().unwrap()),
+        sig(&single),
+        "an idle FIFO queue must not perturb the running tenant"
+    );
+    assert!(
+        f.jobs[1].started >= f.jobs[0].finished,
+        "fifo must serialize: second started {} before first finished {}",
+        f.jobs[1].started,
+        f.jobs[0].finished
+    );
+
+    let mut fair = stream_policy("fair-share").unwrap();
+    let s = run_stream(&topo, &jobs, fair.as_mut(), None).unwrap();
+    assert_eq!(s.jobs[0].started, 0.0);
+    assert_eq!(s.jobs[1].started, 0.0, "fair-share must overlap");
+    // Both jobs push from the same sources from t = 0, so max-min
+    // sharing of every source NIC strictly slows job 0 down vs its
+    // standalone run.
+    assert!(
+        s.jobs[0].finished > single.makespan,
+        "overlap must cost job 0 time ({} vs standalone {})",
+        s.jobs[0].finished,
+        single.makespan
+    );
+}
+
+/// Malformed streams are rejected with CLI-grade messages before any
+/// simulation state is built.
+#[test]
+fn stream_validation_rejects_bad_inputs() {
+    let (topo, plan) = setup(3);
+    let app = SyntheticApp::new(1.0);
+    let config = JobConfig::default();
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 10, 1);
+    let mut policy = stream_policy("fifo").unwrap();
+
+    let none: Vec<StreamJob> = Vec::new();
+    let e = run_stream(&topo, &none, policy.as_mut(), None).unwrap_err();
+    assert!(e.contains("empty job stream"), "{e}");
+
+    let mut j = StreamJob::new(f64::NAN, &plan, &app, &config, &inputs);
+    let e = run_stream(&topo, std::slice::from_ref(&j), policy.as_mut(), None).unwrap_err();
+    assert!(e.contains("arrival"), "{e}");
+
+    j.arrival = 0.0;
+    j.weight = 0.0;
+    let e = run_stream(&topo, std::slice::from_ref(&j), policy.as_mut(), None).unwrap_err();
+    assert!(e.contains("weight"), "{e}");
+
+    let dyn_cfg = config.clone().with_dynamics(ScenarioTrace::empty("none"));
+    let j2 = StreamJob::new(0.0, &plan, &app, &dyn_cfg, &inputs);
+    let e = run_stream(&topo, std::slice::from_ref(&j2), policy.as_mut(), None).unwrap_err();
+    assert!(e.contains("per-job dynamics"), "{e}");
+
+    let short: Vec<Vec<Record>> = Vec::new();
+    let j3 = StreamJob::new(0.0, &plan, &app, &config, &short);
+    let e = run_stream(&topo, std::slice::from_ref(&j3), policy.as_mut(), None).unwrap_err();
+    assert!(e.contains("input vectors"), "{e}");
+
+    assert!(stream_policy("bogus").unwrap_err().contains("stream policy"));
+}

@@ -40,6 +40,8 @@ if [[ "$QUICK" == "0" ]]; then
   "$BIN" experiment churn --gen hier-wan:16 --dynamics burst:7 >/dev/null
   "$BIN" experiment churn --profiles all --gen hier-wan:16 --dynamics failures:7 --hedge 0.05 >/dev/null
   "$BIN" experiment adversary --gen hier-wan:16 --seed 7 --budget 2 --restarts 2 >/dev/null
+  "$BIN" experiment tenancy --gen hier-wan:16 --jobs 4 --loads 1 --policies fifo,fair-share,deadline >/dev/null
+  "$BIN" experiment tenancy --gen hier-wan:16 --jobs 3 --arrivals trace:0,0,0 --policies deadline --slack 2 >/dev/null
   # Clean-error probes must fail (a bare `!` pipeline is exempt from
   # set -e, so check the status explicitly).
   if "$BIN" plan --gen hier-wan:3 >/dev/null 2>&1; then
@@ -80,6 +82,22 @@ if [[ "$QUICK" == "0" ]]; then
   fi
   if "$BIN" experiment adversary --gen hier-wan:16 --restarts 0 >/dev/null 2>&1; then
     echo "FAIL: adversary --restarts 0 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment tenancy --gen hier-wan:16 --jobs 0 >/dev/null 2>&1; then
+    echo "FAIL: tenancy --jobs 0 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment tenancy --gen hier-wan:16 --jobs 2 --arrivals poisson:0 >/dev/null 2>&1; then
+    echo "FAIL: tenancy --arrivals poisson:0 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment tenancy --gen hier-wan:16 --jobs 2 --policies bogus >/dev/null 2>&1; then
+    echo "FAIL: tenancy --policies bogus should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment tenancy --gen hier-wan:16 --jobs 2 --loads 0 >/dev/null 2>&1; then
+    echo "FAIL: tenancy --loads 0 should be rejected" >&2
     exit 1
   fi
   echo "smoke OK"
