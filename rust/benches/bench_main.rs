@@ -25,7 +25,7 @@ use mrperf::model::barrier::BarrierConfig;
 use mrperf::model::makespan::{makespan, AppModel};
 use mrperf::model::plan::Plan;
 use mrperf::model::smooth::smooth_makespan_plan;
-use mrperf::optimizer::lp_build::{build_lp_x, Objective};
+use mrperf::optimizer::lp_build::{build_lp_x, build_lp_y, Objective};
 use mrperf::optimizer::perf::{add_scale_ab_benches, add_scale_headline_benches};
 use mrperf::optimizer::{AlternatingLp, E2ePush, Myopic, PlanOptimizer};
 use mrperf::platform::scale::{generate_kind, ScaleKind};
@@ -116,6 +116,60 @@ fn main() {
         });
     }
 
+    // ---- ISSUE 7 engine gate: 4096 nodes, sub-second ----------------------
+    // The incremental component re-solve is what makes this affordable:
+    // pre-PR every event re-filled all ~12k resources; now only the dirty
+    // component refills. One-shot (no warmup) so the gate measures a cold
+    // run, same as a user invoking `mrperf run --gen hier-wan:4096`.
+    let issue7_cfg = BenchConfig {
+        warmup: Duration::ZERO,
+        min_iters: 1,
+        max_iters: 1,
+        target_time: Duration::ZERO,
+    };
+    let mut issue7 = BenchSuite::new(issue7_cfg);
+    {
+        let gtopo = generate_kind(ScaleKind::HierarchicalWan, 4096, 7);
+        let gplan = Plan::local_push(&gtopo);
+        let ginputs = synthetic_inputs(gtopo.n_sources(), 2_000, 11);
+        let gapp = SyntheticApp::new(1.0);
+        issue7.bench("engine/scale_4096node_hier_wan_job", || {
+            black_box(
+                run_job(&gtopo, &gplan, &gapp, &JobConfig::default(), &ginputs)
+                    .metrics
+                    .makespan,
+            )
+        });
+    }
+
+    // ---- ISSUE 7 solver gate: devex (bounded) vs Dantzig (materialized) ---
+    // A/B the hier-wan:256 plan LP through the pre-PR path — Dantzig
+    // pricing on the LP with single-variable rows materialized — and the
+    // new path — devex pricing on the implicit-bound LP. Three iterations
+    // each (the solves are deterministic; this just smooths scheduler
+    // noise on a one-shot measurement).
+    let devex_cfg = BenchConfig {
+        warmup: Duration::ZERO,
+        min_iters: 3,
+        max_iters: 3,
+        target_time: Duration::ZERO,
+    };
+    let mut devex_suite = BenchSuite::new(devex_cfg);
+    {
+        use mrperf::solver::revised::solve_warm_pricing;
+        use mrperf::solver::Pricing;
+        let t256 = generate_kind(ScaleKind::HierarchicalWan, 256, 7);
+        let y256 = vec![1.0 / t256.n_reducers() as f64; t256.n_reducers()];
+        let (lp256, _) = build_lp_x(&t256, app, BarrierConfig::HADOOP, &y256, Objective::Makespan);
+        let lp256_rows = lp256.materialize_bounds();
+        devex_suite.bench("solver/lp_x_256node_devex_bounded", || {
+            black_box(solve_warm_pricing(&lp256, None, Pricing::Devex))
+        });
+        devex_suite.bench("solver/lp_x_256node_dantzig_materialized", || {
+            black_box(solve_warm_pricing(&lp256_rows, None, Pricing::Dantzig))
+        });
+    }
+
     // ---- optimizer scale paths (ISSUE 2) ----------------------------------
     // A/B of the pre-PR optimizer paths against the sparse/analytic ones
     // at 64 nodes (single iteration — the baseline is deliberately the
@@ -143,6 +197,8 @@ fn main() {
 
     suite.report();
     oneshot.report();
+    issue7.report();
+    devex_suite.report();
 
     // Surface the ISSUE 1 scale target explicitly.
     if let Some(r) = suite
@@ -184,4 +240,77 @@ fn main() {
             assert!(ok, "{name} exceeded the 30 s acceptance bound");
         }
     }
+
+    // ---- ISSUE 7 acceptance gates ------------------------------------------
+    // (1) 4096-node engine run stays sub-second (cold, single shot).
+    let g4096 = issue7
+        .results()
+        .iter()
+        .find(|r| r.name.contains("scale_4096node"))
+        .expect("4096-node gate bench must have run");
+    let ok = g4096.mean < Duration::from_secs(1);
+    println!(
+        "engine scale target: 4096-node run_job {:?} — {}",
+        g4096.mean,
+        if ok { "PASS (< 1 s)" } else { "FAIL (>= 1 s)" }
+    );
+    assert!(ok, "4096-node hier-wan run took {:?} (gate: < 1 s)", g4096.mean);
+
+    // (2) Implicit bounds strictly cut the plan-LP row count on every
+    // paper environment: materializing the bounds back into explicit
+    // rows must always grow the (x-LP + y-LP) total — i.e. at least one
+    // single-variable constraint per env now lives in the bound vectors
+    // instead of the row list.
+    for env in EnvKind::all() {
+        let t = build_env(env);
+        let (s, m, r) = (t.n_sources(), t.n_mappers(), t.n_reducers());
+        let y0 = vec![1.0 / r as f64; r];
+        let (lpx, _) = build_lp_x(&t, app, BarrierConfig::HADOOP, &y0, Objective::Makespan);
+        let (lpy, _) = build_lp_y(
+            &t,
+            app,
+            BarrierConfig::HADOOP,
+            &Plan::uniform(s, m, r).x,
+            Objective::Makespan,
+        );
+        let bounded = lpx.n_rows() + lpy.n_rows();
+        let materialized =
+            lpx.materialize_bounds().n_rows() + lpy.materialize_bounds().n_rows();
+        println!(
+            "row-count target: {} plan LPs {bounded} rows bounded vs {materialized} \
+             materialized — {}",
+            t.name,
+            if materialized > bounded { "PASS (reduced)" } else { "FAIL (no cut)" }
+        );
+        assert!(
+            materialized > bounded,
+            "{}: implicit bounds must strictly reduce plan-LP rows \
+             ({bounded} bounded vs {materialized} materialized)",
+            t.name
+        );
+    }
+
+    // (3) Devex pricing on the implicit-bound LP beats the pre-PR path
+    // (Dantzig pricing, bounds materialized as rows) by ≥ 2× on the
+    // hier-wan:256 plan LP.
+    let dfind = |name: &str| {
+        devex_suite
+            .results()
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("devex gate bench '{name}' must have run"))
+            .mean
+            .as_secs_f64()
+    };
+    let devex = dfind("solver/lp_x_256node_devex_bounded");
+    let dantzig = dfind("solver/lp_x_256node_dantzig_materialized");
+    let ratio = dantzig / devex.max(1e-12);
+    println!(
+        "solver pricing target: hier-wan:256 x-LP devex {ratio:.1}x over Dantzig — {}",
+        if ratio >= 2.0 { "PASS (>= 2x)" } else { "FAIL (< 2x)" }
+    );
+    assert!(
+        ratio >= 2.0,
+        "devex pricing only {ratio:.1}x over the Dantzig/materialized path (gate: >= 2x)"
+    );
 }

@@ -162,6 +162,7 @@ pub fn run_job(
     inputs: &[Vec<Record>],
 ) -> JobResult {
     let mut sim = FluidSim::new();
+    sim.set_threads(config.threads.max(1));
     let res = ResourceSet::build(&mut sim, topo);
     let mut exec =
         Executor::new(topo, plan, app, config, inputs, res, config.dynamics.as_ref(), 0, 1.0);
@@ -207,7 +208,10 @@ pub fn run_job(
         // advanced).
         exec.maybe_speculate(&mut sim);
     }
-    exec.into_result()
+    let mut result = exec.into_result();
+    result.metrics.fluid_resolves = sim.resolves();
+    result.metrics.fluid_resources_touched = sim.resources_touched();
+    result
 }
 
 /// The fluid resources of one topology, in their canonical creation

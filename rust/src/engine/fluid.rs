@@ -16,7 +16,7 @@
 //!
 //! ## Scaling
 //!
-//! The simulator is sized for the generated 16–512-node topologies of
+//! The simulator is sized for the generated 16–4096-node topologies of
 //! [`crate::platform::scale`], not just the paper's 8-node environments:
 //!
 //! * the active set is maintained incrementally, so stepping costs
@@ -27,7 +27,19 @@
 //! * progressive filling runs over a lazy min-heap of per-resource fair
 //!   shares instead of rescanning every resource per freeze round —
 //!   shares only grow as activities freeze, so a popped entry is either
-//!   current (freeze at it) or stale (re-push the refreshed share).
+//!   current (freeze at it) or stale (re-push the refreshed share);
+//! * re-solves are **incremental**: each event (activity start/finish,
+//!   cancellation, `set_capacity`) dirties the resources it touches, and
+//!   only connected components of the activity↔resource graph containing
+//!   a dirtied resource are re-filled. A clean component's stored rates
+//!   are exactly what re-filling would produce, because the filling
+//!   arithmetic is component-local and `retain` preserves the relative
+//!   activity order inside untouched components;
+//! * with [`FluidSim::set_threads`], dirty components are sharded
+//!   round-robin over `std::thread::scope` workers. Every component's
+//!   arithmetic is self-contained and the merged rate writes are
+//!   disjoint, so metrics are **bit-identical for every thread count**
+//!   (property-tested in tests/engine_threads.rs).
 //!
 //! The max-min allocation is unique, so the heap order changes nothing
 //! observable; it only removes the O(resources × rounds) scan that
@@ -106,6 +118,16 @@ pub struct FluidSim {
     res_stamp: Vec<u64>,
     res_slot: Vec<usize>,
     stamp: u64,
+    /// Per-resource "affected since last solve" flags plus the list of
+    /// set flags, so clearing costs O(dirtied), not O(all resources).
+    res_dirty: Vec<bool>,
+    dirty_res: Vec<ResourceId>,
+    /// Worker threads for the component re-solve (0 and 1 both mean
+    /// sequential; the default stays zero-cost).
+    threads: usize,
+    /// Perf counters: re-solve invocations and resources re-filled.
+    n_resolves: u64,
+    n_resources_touched: u64,
 }
 
 impl FluidSim {
@@ -117,13 +139,58 @@ impl FluidSim {
         self.now
     }
 
+    /// Use `n` worker threads for max-min re-solves. Dirty components are
+    /// sharded round-robin and merged deterministically, so results are
+    /// bit-identical for every `n ≥ 1`. Panics on `n = 0`.
+    pub fn set_threads(&mut self, n: usize) {
+        assert!(n >= 1, "thread count must be >= 1, got {n}");
+        self.threads = n;
+    }
+
+    /// Configured worker-thread count (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads.max(1)
+    }
+
+    /// Total max-min re-solve invocations since construction.
+    pub fn resolves(&self) -> u64 {
+        self.n_resolves
+    }
+
+    /// Total resources re-filled across all re-solves. Clean components
+    /// skipped by the incremental decomposition are not counted, so this
+    /// divided by [`FluidSim::resolves`] is the mean re-solve footprint.
+    pub fn resources_touched(&self) -> u64 {
+        self.n_resources_touched
+    }
+
     /// Register a resource with the given capacity (units/second).
     pub fn add_resource(&mut self, capacity: f64) -> ResourceId {
         assert!(capacity > 0.0 && capacity.is_finite());
         self.resources.push(Resource { capacity });
         self.res_stamp.push(0);
         self.res_slot.push(0);
+        self.res_dirty.push(false);
         self.resources.len() - 1
+    }
+
+    /// Flag a resource as affected by an event since the last re-solve.
+    fn mark_res(&mut self, r: ResourceId) {
+        if !self.res_dirty[r] {
+            self.res_dirty[r] = true;
+            self.dirty_res.push(r);
+        }
+    }
+
+    /// Flag every resource an activity crosses (membership changed).
+    fn mark_activity(&mut self, id: ActivityId) {
+        for i in 0..self.activities[id].resources.len() {
+            let r = self.activities[id].resources[i];
+            if !self.res_dirty[r] {
+                self.res_dirty[r] = true;
+                self.dirty_res.push(r);
+            }
+        }
     }
 
     /// Change a resource's capacity mid-run (time-varying bandwidth or
@@ -138,6 +205,7 @@ impl FluidSim {
         if self.resources[r].capacity != capacity {
             self.resources[r].capacity = capacity;
             self.dirty = true;
+            self.mark_res(r);
         }
     }
 
@@ -176,6 +244,9 @@ impl FluidSim {
         for &r in &resources {
             assert!(r < self.resources.len(), "dangling resource {r}");
         }
+        for i in 0..resources.len() {
+            self.mark_res(resources[i]);
+        }
         self.activities.push(Activity {
             remaining: work,
             resources,
@@ -198,6 +269,7 @@ impl FluidSim {
         if !self.activities[id].done {
             self.activities[id].done = true;
             self.dirty = true;
+            self.mark_activity(id);
         }
     }
 
@@ -224,7 +296,17 @@ impl FluidSim {
         self.active.iter().filter(|&&a| !self.activities[a].done).count()
     }
 
-    /// Max-min fair allocation by progressive filling (lazy-heap form).
+    /// Max-min fair allocation by progressive filling, restricted to the
+    /// connected components of the activity↔resource graph affected by
+    /// events since the last solve. Components without a dirtied
+    /// resource keep their stored rates — which are exactly what a
+    /// re-fill would produce, since the filling arithmetic is
+    /// component-local and `retain` preserves the relative activity
+    /// order inside an untouched component. With `threads > 1`, dirty
+    /// components are sharded round-robin over scoped worker threads;
+    /// each component's arithmetic is self-contained and the merged rate
+    /// writes are disjoint, so the result is bit-identical for every
+    /// thread count.
     fn recompute_rates(&mut self) {
         self.active.retain(|&a| !self.activities[a].done);
         // Move the active list out so scratch fields can be borrowed
@@ -251,62 +333,133 @@ impl FluidSim {
                 users[self.res_slot[r]].push(ai);
             }
         }
-        let mut remaining_cap: Vec<f64> =
-            used.iter().map(|&r| self.resources[r].capacity).collect();
-        let mut unfrozen_count: Vec<usize> = users.iter().map(Vec::len).collect();
-        let mut rate: Vec<f64> = vec![f64::INFINITY; active.len()];
-        let mut frozen: Vec<bool> = vec![false; active.len()];
-        let mut n_frozen = 0usize;
 
-        let mut heap: BinaryHeap<Reverse<ShareEntry>> =
-            BinaryHeap::with_capacity(used.len());
-        for slot in 0..used.len() {
-            if unfrozen_count[slot] > 0 {
-                heap.push(Reverse(ShareEntry {
-                    share: remaining_cap[slot] / unfrozen_count[slot] as f64,
-                    slot,
-                }));
-            }
-        }
-        while n_frozen < active.len() {
-            let Some(Reverse(entry)) = heap.pop() else { break };
-            let slot = entry.slot;
-            if unfrozen_count[slot] == 0 {
-                continue; // fully frozen since the entry was pushed
-            }
-            let share = (remaining_cap[slot].max(0.0)) / unfrozen_count[slot] as f64;
-            if share > entry.share {
-                // Stale: freezes elsewhere released capacity per user;
-                // re-queue at the current (larger) share.
-                heap.push(Reverse(ShareEntry { share, slot }));
+        // Connected components of the bipartite graph, numbered by first
+        // appearance along `active` (deterministic).
+        let mut comp_of_act: Vec<usize> = vec![usize::MAX; active.len()];
+        let mut comp_of_slot: Vec<usize> = vec![usize::MAX; used.len()];
+        let mut n_comp = 0usize;
+        let mut stack: Vec<usize> = Vec::new();
+        for seed in 0..active.len() {
+            if comp_of_act[seed] != usize::MAX {
                 continue;
             }
-            // This resource is the bottleneck: freeze its unfrozen users.
-            let us: Vec<usize> =
-                users[slot].iter().cloned().filter(|&ai| !frozen[ai]).collect();
-            for ai in us {
-                frozen[ai] = true;
-                n_frozen += 1;
-                rate[ai] = share;
-                // Charge this activity to all its resources.
-                for &r2 in &self.activities[active[ai]].resources {
-                    let s2 = self.res_slot[r2];
-                    remaining_cap[s2] -= share;
-                    unfrozen_count[s2] -= 1;
-                    if s2 != slot && unfrozen_count[s2] > 0 {
-                        heap.push(Reverse(ShareEntry {
-                            share: (remaining_cap[s2].max(0.0))
-                                / unfrozen_count[s2] as f64,
-                            slot: s2,
-                        }));
+            comp_of_act[seed] = n_comp;
+            stack.push(seed);
+            while let Some(ai) = stack.pop() {
+                for &r in &self.activities[active[ai]].resources {
+                    let slot = self.res_slot[r];
+                    if comp_of_slot[slot] == usize::MAX {
+                        comp_of_slot[slot] = n_comp;
+                        for &aj in &users[slot] {
+                            if comp_of_act[aj] == usize::MAX {
+                                comp_of_act[aj] = n_comp;
+                                stack.push(aj);
+                            }
+                        }
                     }
                 }
             }
-            remaining_cap[slot] = remaining_cap[slot].max(0.0);
+            n_comp += 1;
         }
 
-        for (ai, &a) in active.iter().enumerate() {
-            self.activities[a].rate = rate[ai];
+        // A component re-fills iff an event dirtied one of its resources
+        // (any event that can change a sub-component's max-min solution
+        // dirties a resource inside it: membership changes dirty the
+        // changed activity's resources, capacity changes dirty the
+        // target). Dirty components get dense indices in component order.
+        let mut dirty_ix: Vec<usize> = vec![usize::MAX; n_comp];
+        for slot in 0..used.len() {
+            if self.res_dirty[used[slot]] {
+                dirty_ix[comp_of_slot[slot]] = 0;
+            }
+        }
+        let mut n_dirty = 0usize;
+        for ix in dirty_ix.iter_mut() {
+            if *ix != usize::MAX {
+                *ix = n_dirty;
+                n_dirty += 1;
+            }
+        }
+        for &r in &self.dirty_res {
+            self.res_dirty[r] = false;
+        }
+        self.dirty_res.clear();
+
+        // Member lists per dirty component, ascending — the preserved
+        // within-component order is what keeps the arithmetic
+        // bit-identical to a full global solve.
+        let mut comp_slots: Vec<Vec<usize>> = vec![Vec::new(); n_dirty];
+        for slot in 0..used.len() {
+            let ix = dirty_ix[comp_of_slot[slot]];
+            if ix != usize::MAX {
+                comp_slots[ix].push(slot);
+            }
+        }
+        let mut comp_acts: Vec<Vec<usize>> = vec![Vec::new(); n_dirty];
+        for ai in 0..active.len() {
+            let ix = dirty_ix[comp_of_act[ai]];
+            if ix != usize::MAX {
+                comp_acts[ix].push(ai);
+            }
+        }
+
+        self.n_resolves += 1;
+        self.n_resources_touched +=
+            comp_slots.iter().map(|s| s.len() as u64).sum::<u64>();
+
+        let nt = self.threads.max(1).min(n_dirty.max(1));
+        let activities = &self.activities;
+        let resources = &self.resources;
+        let res_slot = &self.res_slot;
+        let active_ref = &active;
+        let used_ref = &used;
+        let users_ref = &users;
+        let comp_acts_ref = &comp_acts;
+        let comp_slots_ref = &comp_slots;
+        let solve_shard = move |t: usize, nt: usize| -> Vec<(usize, f64)> {
+            let mut out = Vec::new();
+            let mut slot_local = vec![usize::MAX; used_ref.len()];
+            let mut act_local = vec![usize::MAX; active_ref.len()];
+            let mut ci = t;
+            while ci < n_dirty {
+                fill_component(
+                    &comp_acts_ref[ci],
+                    &comp_slots_ref[ci],
+                    active_ref,
+                    activities,
+                    resources,
+                    used_ref,
+                    users_ref,
+                    res_slot,
+                    &mut slot_local,
+                    &mut act_local,
+                    &mut out,
+                );
+                ci += nt;
+            }
+            out
+        };
+        let updates: Vec<(usize, f64)> = if nt <= 1 {
+            solve_shard(0, 1)
+        } else {
+            std::thread::scope(|s| {
+                let solve_shard = &solve_shard;
+                let handles: Vec<_> = (0..nt)
+                    .map(|t| s.spawn(move || solve_shard(t, nt)))
+                    .collect();
+                // Join in spawn order; writes are disjoint, so the merge
+                // order is immaterial to the result.
+                let mut all = Vec::new();
+                for h in handles {
+                    all.extend(h.join().expect("fluid re-solve shard panicked"));
+                }
+                all
+            })
+        };
+
+        for (ai, rate) in updates {
+            self.activities[active[ai]].rate = rate;
         }
         self.active = active;
         self.dirty = false;
@@ -345,6 +498,9 @@ impl FluidSim {
                 self.activities[a].remaining = 0.0;
             }
             self.dirty = true;
+            for i in 0..instant.len() {
+                self.mark_activity(instant[i]);
+            }
             instant.sort_unstable();
             return Some((self.now, instant));
         }
@@ -386,6 +542,9 @@ impl FluidSim {
         }
         debug_assert!(!completed.is_empty());
         self.dirty = true;
+        for i in 0..completed.len() {
+            self.mark_activity(completed[i]);
+        }
         completed.sort_unstable();
         Some((self.now, completed))
     }
@@ -394,6 +553,99 @@ impl FluidSim {
     pub fn run_to_completion(&mut self) -> f64 {
         while self.step().is_some() {}
         self.now
+    }
+}
+
+/// Progressive filling (lazy-heap form) over one connected component.
+/// `acts` / `slots` are the component's members — indices into `active` /
+/// `used` — in ascending order; `slot_local` / `act_local` are caller
+/// scratch (only entries belonging to this component are written, and
+/// only those are read, so the scratch needs no clearing between
+/// components). Appends `(active-index, rate)` pairs to `out`.
+///
+/// The arithmetic — share values, freeze order, charge order, stale-entry
+/// re-pushes — is exactly the global algorithm restricted to the
+/// component: local slot/activity indices preserve the global relative
+/// order, and components never interact, which is what makes incremental
+/// and sharded solves bit-identical to a full solve.
+#[allow(clippy::too_many_arguments)]
+fn fill_component(
+    acts: &[usize],
+    slots: &[usize],
+    active: &[ActivityId],
+    activities: &[Activity],
+    resources: &[Resource],
+    used: &[ResourceId],
+    users: &[Vec<usize>],
+    res_slot: &[usize],
+    slot_local: &mut [usize],
+    act_local: &mut [usize],
+    out: &mut Vec<(usize, f64)>,
+) {
+    for (ls, &slot) in slots.iter().enumerate() {
+        slot_local[slot] = ls;
+    }
+    for (la, &ai) in acts.iter().enumerate() {
+        act_local[ai] = la;
+    }
+    let mut remaining_cap: Vec<f64> =
+        slots.iter().map(|&s| resources[used[s]].capacity).collect();
+    let mut unfrozen_count: Vec<usize> = slots.iter().map(|&s| users[s].len()).collect();
+    let mut rate: Vec<f64> = vec![f64::INFINITY; acts.len()];
+    let mut frozen: Vec<bool> = vec![false; acts.len()];
+    let mut n_frozen = 0usize;
+
+    let mut heap: BinaryHeap<Reverse<ShareEntry>> =
+        BinaryHeap::with_capacity(slots.len());
+    for ls in 0..slots.len() {
+        if unfrozen_count[ls] > 0 {
+            heap.push(Reverse(ShareEntry {
+                share: remaining_cap[ls] / unfrozen_count[ls] as f64,
+                slot: ls,
+            }));
+        }
+    }
+    while n_frozen < acts.len() {
+        let Some(Reverse(entry)) = heap.pop() else { break };
+        let ls = entry.slot;
+        if unfrozen_count[ls] == 0 {
+            continue; // fully frozen since the entry was pushed
+        }
+        let share = (remaining_cap[ls].max(0.0)) / unfrozen_count[ls] as f64;
+        if share > entry.share {
+            // Stale: freezes elsewhere released capacity per user;
+            // re-queue at the current (larger) share.
+            heap.push(Reverse(ShareEntry { share, slot: ls }));
+            continue;
+        }
+        // This resource is the bottleneck: freeze its unfrozen users.
+        let us: Vec<usize> = users[slots[ls]]
+            .iter()
+            .map(|&ai| act_local[ai])
+            .filter(|&la| !frozen[la])
+            .collect();
+        for la in us {
+            frozen[la] = true;
+            n_frozen += 1;
+            rate[la] = share;
+            // Charge this activity to all its resources.
+            for &r2 in &activities[active[acts[la]]].resources {
+                let ls2 = slot_local[res_slot[r2]];
+                remaining_cap[ls2] -= share;
+                unfrozen_count[ls2] -= 1;
+                if ls2 != ls && unfrozen_count[ls2] > 0 {
+                    heap.push(Reverse(ShareEntry {
+                        share: (remaining_cap[ls2].max(0.0))
+                            / unfrozen_count[ls2] as f64,
+                        slot: ls2,
+                    }));
+                }
+            }
+        }
+        remaining_cap[ls] = remaining_cap[ls].max(0.0);
+    }
+    for (la, &ai) in acts.iter().enumerate() {
+        out.push((ai, rate[la]));
     }
 }
 
@@ -624,6 +876,110 @@ mod tests {
         assert_eq!(sim.now(), 7.0);
         sim.jump_to(3.0);
         assert_eq!(sim.now(), 7.0, "clock never regresses");
+    }
+
+    /// A disjoint component keeps its rates without being re-filled: the
+    /// touched-resource counter grows only by the dirty component.
+    #[test]
+    fn incremental_skips_clean_components() {
+        let mut sim = FluidSim::new();
+        let r1 = sim.add_resource(10.0);
+        let r2 = sim.add_resource(4.0);
+        let a = sim.add_activity(100.0, vec![r1]);
+        sim.recompute_rates();
+        assert_eq!(sim.resolves(), 1);
+        assert_eq!(sim.resources_touched(), 1);
+        let b = sim.add_activity(100.0, vec![r2]);
+        sim.recompute_rates();
+        // Only b's component was re-filled; a's rate is kept.
+        assert_eq!(sim.resolves(), 2);
+        assert_eq!(sim.resources_touched(), 2);
+        assert!((sim.rate(a) - 10.0).abs() < 1e-12);
+        assert!((sim.rate(b) - 4.0).abs() < 1e-12);
+    }
+
+    /// `set_capacity` re-fills exactly the component of its resource.
+    #[test]
+    fn set_capacity_refills_only_its_component() {
+        let mut sim = FluidSim::new();
+        let r1 = sim.add_resource(10.0);
+        let r2 = sim.add_resource(4.0);
+        let a = sim.add_activity(100.0, vec![r1]);
+        let b = sim.add_activity(100.0, vec![r2]);
+        sim.recompute_rates();
+        assert_eq!(sim.resources_touched(), 2);
+        sim.set_capacity(r2, 8.0);
+        sim.recompute_rates();
+        assert_eq!(sim.resources_touched(), 3, "only r2's component re-filled");
+        assert!((sim.rate(a) - 10.0).abs() < 1e-12);
+        assert!((sim.rate(b) - 8.0).abs() < 1e-12);
+    }
+
+    /// A completion dirties its resources, so the survivor's component
+    /// re-fills while disjoint components are skipped.
+    #[test]
+    fn completion_refills_shared_component_only() {
+        let mut sim = FluidSim::new();
+        let shared = sim.add_resource(10.0);
+        let solo = sim.add_resource(3.0);
+        sim.add_activity(50.0, vec![shared]);
+        let b = sim.add_activity(100.0, vec![shared]);
+        let c = sim.add_activity(300.0, vec![solo]);
+        let (_, done) = sim.step().unwrap();
+        assert_eq!(done.len(), 1);
+        let touched_before = sim.resources_touched();
+        sim.recompute_rates();
+        // Only the shared resource's component re-fills (1 resource).
+        assert_eq!(sim.resources_touched(), touched_before + 1);
+        assert!((sim.rate(b) - 10.0).abs() < 1e-12);
+        assert!((sim.rate(c) - 3.0).abs() < 1e-12);
+    }
+
+    /// The sharded parallel re-solve is bit-identical to sequential for
+    /// every thread count, on a randomized mesh of overlapping
+    /// activities with mid-run events.
+    #[test]
+    fn thread_counts_are_bit_identical() {
+        use crate::util::rng::Pcg64;
+        let run = |threads: usize| -> (u64, Vec<u64>) {
+            let mut rng = Pcg64::new(0xF1D0);
+            let mut sim = FluidSim::new();
+            sim.set_threads(threads);
+            let rs: Vec<ResourceId> =
+                (0..16).map(|i| sim.add_resource(1.0 + (i % 5) as f64)).collect();
+            let mut times = Vec::new();
+            for round in 0..30 {
+                // 1–3 new activities over random resource subsets.
+                for _ in 0..rng.range(1, 4) {
+                    let k = rng.range(1, 4);
+                    let mut res: Vec<ResourceId> =
+                        (0..k).map(|_| rs[rng.range(0, rs.len())]).collect();
+                    res.sort_unstable();
+                    res.dedup();
+                    sim.add_activity(rng.uniform(1.0, 20.0), res);
+                }
+                if round % 7 == 3 {
+                    let r = rs[rng.range(0, rs.len())];
+                    sim.set_capacity(r, rng.uniform(0.5, 6.0));
+                }
+                let (t, done) = sim.step().unwrap();
+                times.push(t.to_bits());
+                for a in done {
+                    assert!(sim.is_done(a));
+                }
+            }
+            (sim.run_to_completion().to_bits(), times)
+        };
+        let base = run(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(run(threads), base, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "thread count must be >= 1")]
+    fn zero_threads_rejected() {
+        FluidSim::new().set_threads(0);
     }
 
     /// Many short sequential activities: the maintained active set keeps

@@ -106,6 +106,10 @@ pub struct JobConfig {
     /// stragglers). `None` — and a `Some` trace with zero events — leave
     /// the engine's static behavior bit-identical.
     pub dynamics: Option<ScenarioTrace>,
+    /// Worker threads for the fluid re-solve (`FluidSim::set_threads`).
+    /// Results are bit-identical for every value ≥ 1; values > 1 only
+    /// change wall-clock time. Must be ≥ 1.
+    pub threads: usize,
 }
 
 impl Default for JobConfig {
@@ -122,6 +126,7 @@ impl Default for JobConfig {
             locality_stealing: false,
             replication: 1,
             dynamics: None,
+            threads: 1,
         }
     }
 }

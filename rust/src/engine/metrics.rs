@@ -65,6 +65,13 @@ pub struct JobMetrics {
     pub input_records: usize,
     pub intermediate_records: usize,
     pub output_records: usize,
+    /// Fluid-engine hot-path counters: rate-recompute invocations and the
+    /// cumulative number of resources whose component was actually
+    /// re-filled (the incremental solver skips clean components, so
+    /// `fluid_resources_touched` ≪ resolves × total resources on sparse
+    /// event streams). Independent of the configured thread count.
+    pub fluid_resolves: u64,
+    pub fluid_resources_touched: u64,
 }
 
 impl JobMetrics {

@@ -300,6 +300,11 @@ pub fn run_stream<'a>(
     });
 
     let mut sim = FluidSim::new();
+    // The stream shares one simulator: solve with the widest thread
+    // request among the jobs (bit-identical for every value ≥ 1).
+    sim.set_threads(
+        jobs.iter().map(|j| j.config.threads).max().unwrap_or(1).max(1),
+    );
     let res = ResourceSet::build(&mut sim, topo);
 
     let mut outcomes: Vec<JobOutcome> = jobs

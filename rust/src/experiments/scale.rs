@@ -28,8 +28,15 @@ use crate::optimizer::{AlternatingLp, GradientOptimizer, PlanOptimizer};
 use crate::platform::scale::{generate_kind, ScaleKind};
 use crate::util::table::Table;
 
-/// Node counts swept per topology kind.
+/// Node counts swept per topology kind by the *optimizer* sweep (the
+/// LP/gradient pipeline is the costly half; its range stays 16→256).
 pub const SWEEP_NODES: [usize; 4] = [16, 64, 128, 256];
+
+/// Node counts swept by the *engine* sweep — extends to the generator
+/// cap ([`crate::platform::scale::MAX_NODES`]); the incremental fluid
+/// re-solve keeps even the 4096-node run sub-second (bench-gated in
+/// `benches/bench_main.rs`).
+pub const ENGINE_SWEEP_NODES: [usize; 7] = [16, 64, 128, 256, 512, 1024, 4096];
 
 /// Input volume per source — kept small because the sweep measures the
 /// simulator's scaling with topology size, not with data volume.
@@ -48,11 +55,18 @@ pub struct ScaleCell {
     pub wall_seconds: f64,
 }
 
-/// Run the engine sweep (used by the experiment *and* by tests).
+/// Run the engine sweep over the full 16→4096 range (the experiment).
 pub fn sweep() -> Vec<ScaleCell> {
+    sweep_at(*ENGINE_SWEEP_NODES.last().unwrap())
+}
+
+/// Engine sweep capped at `max_nodes` — tests cap the size so
+/// debug-build runs stay fast; the release-mode experiment runs the
+/// full range.
+pub fn sweep_at(max_nodes: usize) -> Vec<ScaleCell> {
     let mut cells = Vec::new();
     for kind in ScaleKind::all() {
-        for &nodes in &SWEEP_NODES {
+        for &nodes in ENGINE_SWEEP_NODES.iter().filter(|&&n| n <= max_nodes) {
             let topo = generate_kind(kind, nodes, 7);
             // Local push keeps the activity count proportional to the
             // node count (uniform would create |S|·|M| transfers).
@@ -156,7 +170,7 @@ pub fn optimizer_sweep(kinds: &[ScaleKind], max_nodes: usize) -> Vec<OptCell> {
 /// sweep, rendered as tables.
 pub fn run() -> Vec<Table> {
     let mut t = Table::new(
-        "engine scale sweep: run_job on generated topologies (virtual vs wall time)",
+        "engine scale sweep: run_job on generated topologies, 16→4096 nodes (virtual vs wall time)",
         &["kind", "nodes", "S/M/R", "map tasks", "virtual makespan (s)", "wall (ms)"],
     );
     for c in sweep() {
@@ -203,15 +217,33 @@ mod tests {
     use super::*;
 
     /// The engine sweep must complete and every cell must do real work.
+    /// Capped at 256 nodes so the debug-build test stays quick; the full
+    /// 16→4096 range runs in the release-mode experiment and its bench
+    /// gate.
     #[test]
     fn sweep_produces_sane_cells() {
-        let cells = sweep();
-        assert_eq!(cells.len(), ScaleKind::all().len() * SWEEP_NODES.len());
+        let cells = sweep_at(256);
+        let sizes = ENGINE_SWEEP_NODES.iter().filter(|&&n| n <= 256).count();
+        assert_eq!(cells.len(), ScaleKind::all().len() * sizes);
         for c in &cells {
             assert!(c.virtual_makespan > 0.0, "{c:?}");
             assert!(c.map_tasks > 0, "{c:?}");
             assert!(c.n_sources + c.n_mappers + c.n_reducers >= c.nodes * 9 / 10);
         }
+    }
+
+    /// The engine sweep's extended range must stay inside the generator
+    /// cap the CLI enforces.
+    #[test]
+    fn engine_sweep_respects_generator_cap() {
+        assert!(ENGINE_SWEEP_NODES
+            .iter()
+            .all(|&n| n <= crate::platform::scale::MAX_NODES));
+        assert_eq!(
+            *ENGINE_SWEEP_NODES.last().unwrap(),
+            crate::platform::scale::MAX_NODES,
+            "the sweep should exercise the cap itself"
+        );
     }
 
     /// Optimize-and-simulate cells: plans beat (or tie) uniform under the

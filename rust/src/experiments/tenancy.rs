@@ -99,6 +99,7 @@ fn parse_loads(spec: &str) -> Result<Vec<f64>, String> {
 
 /// Run the sweep; deterministic given the knobs. An explicit
 /// `arrivals` spec overrides the `loads` sweep (one point per policy).
+#[allow(clippy::too_many_arguments)]
 pub fn run_points(
     gen_spec: &str,
     arrivals: Option<&str>,
@@ -107,9 +108,15 @@ pub fn run_points(
     policies: &[&str],
     slack: f64,
     dyn_spec: Option<&str>,
+    threads: usize,
 ) -> Result<Vec<TenancyCell>, String> {
     if n_jobs == 0 {
         return Err("invalid value '0' for --jobs (need at least one job)".into());
+    }
+    if threads == 0 {
+        return Err(
+            "invalid value '0' for --threads (need at least one solver thread)".into()
+        );
     }
     if !(slack.is_finite() && slack > 0.0) {
         return Err(format!(
@@ -152,7 +159,11 @@ pub fn run_points(
     let app = AppModel::new(1.0);
     let plan = AlternatingLp::default().optimize(&topo, app, BarrierConfig::HADOOP);
     let sapp = SyntheticApp::new(1.0);
-    let config = JobConfig::optimized();
+    let mut config = JobConfig::optimized();
+    // Metrics are bit-identical for every thread count ≥ 1 (property-
+    // tested in tests/engine_threads.rs), so the knob only changes wall
+    // time — every cell, including the calibration run, uses it.
+    config.threads = threads;
 
     // Calibration run: the standalone service time S anchors the swept
     // arrival rates (λ = ρ / S), every deadline (arrival + slack × S)
@@ -280,6 +291,7 @@ pub fn run_with(
     policies_spec: &str,
     slack: f64,
     dyn_spec: Option<&str>,
+    threads: usize,
 ) -> Result<Vec<Table>, String> {
     let loads = parse_loads(loads_spec)?;
     let policies: Vec<&str> = policies_spec
@@ -293,7 +305,8 @@ pub fn run_with(
              comma-separated fifo | fair-share | deadline)"
         ));
     }
-    let cells = run_points(gen_spec, arrivals, n_jobs, &loads, &policies, slack, dyn_spec)?;
+    let cells =
+        run_points(gen_spec, arrivals, n_jobs, &loads, &policies, slack, dyn_spec, threads)?;
 
     let arrivals_note = match arrivals {
         Some(a) => format!(" --arrivals {a} (overrides --loads)"),
@@ -303,10 +316,16 @@ pub fn run_with(
         Some(d) => format!(" --dynamics {d}"),
         None => String::new(),
     };
+    let threads_note = if threads > 1 {
+        format!(" --threads {threads}")
+    } else {
+        String::new()
+    };
     let mut t = Table::new(
         format!(
             "tenancy: offered load × cross-job policy on one shared fluid network \
-             (--gen {gen_spec} --jobs {n_jobs} --slack {slack}{arrivals_note}{dyn_note}) — \
+             (--gen {gen_spec} --jobs {n_jobs} --slack \
+             {slack}{arrivals_note}{dyn_note}{threads_note}) — \
              latencies are sojourn times, goodput counts deadline \
              (arrival + slack × S) hits"
         ),
@@ -352,6 +371,7 @@ pub fn run() -> Vec<Table> {
         DEFAULT_POLICIES,
         DEFAULT_SLACK,
         None,
+        1,
     )
     .expect("default tenancy knobs are valid")
 }
@@ -373,6 +393,7 @@ mod tests {
                 &["fifo", "fair-share", "deadline"],
                 3.0,
                 None,
+                1,
             )
             .unwrap()
         };
@@ -408,6 +429,7 @@ mod tests {
             &["deadline"],
             3.0,
             None,
+            1,
         )
         .unwrap();
         assert_eq!(cells.len(), 1);
@@ -426,6 +448,7 @@ mod tests {
             &["fifo"],
             3.0,
             None,
+            1,
         )
         .unwrap();
         assert_eq!(cells.len(), 1);
@@ -437,18 +460,21 @@ mod tests {
     #[test]
     fn rejects_bad_knobs() {
         let ok_policies = ["fifo"];
-        let e = run_points("hier-wan:16", None, 0, &[1.0], &ok_policies, 3.0, None)
+        let e = run_points("hier-wan:16", None, 0, &[1.0], &ok_policies, 3.0, None, 1)
             .unwrap_err();
         assert!(e.contains("--jobs"), "{e}");
-        let e = run_points("hier-wan:16", None, 2, &[0.0], &ok_policies, 3.0, None)
+        let e = run_points("hier-wan:16", None, 2, &[0.0], &ok_policies, 3.0, None, 1)
             .unwrap_err();
         assert!(e.contains("--loads"), "{e}");
-        let e = run_points("hier-wan:16", None, 2, &[1.0], &["bogus"], 3.0, None)
+        let e = run_points("hier-wan:16", None, 2, &[1.0], &["bogus"], 3.0, None, 1)
             .unwrap_err();
         assert!(e.contains("stream policy"), "{e}");
-        let e = run_points("hier-wan:16", None, 2, &[1.0], &ok_policies, f64::NAN, None)
+        let e = run_points("hier-wan:16", None, 2, &[1.0], &ok_policies, f64::NAN, None, 1)
             .unwrap_err();
         assert!(e.contains("--slack"), "{e}");
+        let e = run_points("hier-wan:16", None, 2, &[1.0], &ok_policies, 3.0, None, 0)
+            .unwrap_err();
+        assert!(e.contains("--threads"), "{e}");
         let e = run_points(
             "hier-wan:16",
             Some("uniform:1"),
@@ -457,16 +483,19 @@ mod tests {
             &ok_policies,
             3.0,
             None,
+            1,
         )
         .unwrap_err();
         assert!(e.contains("--arrivals"), "{e}");
-        assert!(run_points("nope:16", None, 2, &[1.0], &ok_policies, 3.0, None).is_err());
         assert!(
-            run_with("hier-wan:16", None, 2, "abc", "fifo", 3.0, None).is_err(),
+            run_points("nope:16", None, 2, &[1.0], &ok_policies, 3.0, None, 1).is_err()
+        );
+        assert!(
+            run_with("hier-wan:16", None, 2, "abc", "fifo", 3.0, None, 1).is_err(),
             "--loads must parse"
         );
         assert!(
-            run_with("hier-wan:16", None, 2, "1", " , ", 3.0, None).is_err(),
+            run_with("hier-wan:16", None, 2, "1", " , ", 3.0, None, 1).is_err(),
             "--policies must name a policy"
         );
     }

@@ -36,7 +36,7 @@ USAGE:
                [--profiles all] [--hedge RATE]                        (churn only)
                [--budget K] [--seed S] [--restarts R] [--hedge RATE]  (adversary only)
                [--arrivals PROFILE[:RATE[:SEED]]] [--jobs N] [--loads L1,L2,..]
-               [--policies P1,P2,..] [--slack S]                      (tenancy only)
+               [--policies P1,P2,..] [--slack S] [--threads N]        (tenancy only)
   mrperf plan  [--env ENV | --topology FILE.topo | --gen KIND:NODES[:SEED]]
                [--alpha A] [--barriers G-P-L] [--optimizer NAME] [--skew S]
                [--hedge RATE]
@@ -44,6 +44,7 @@ USAGE:
                [--app APP] [--alpha A] [--optimizer NAME] [--skew S]
                [--bytes-per-source N] [--speculation] [--stealing] [--locality]
                [--replication R] [--dynamics PROFILE[:SEED]] [--hedge RATE]
+               [--threads N]
   mrperf bench [--json DIR] [--filter SUBSTR]
   mrperf validate
   mrperf list
@@ -70,8 +71,13 @@ HEDGE:      --hedge RATE (0 ≤ RATE < 1) plans against an expected reducer
             of the key split. RATE=0 (default) is bit-identical to the
             unhedged optimizer. `experiment churn --profiles all` runs the
             full dynamics-profile × execution-mode matrix with a hedged row
+THREADS:    --threads N (N ≥ 1, default 1) solves the fluid network's dirty
+            components on N OS threads. Metrics are bit-identical for every
+            thread count — the knob trades wall time only, never results
 BENCH:      quick perf suite (solver + optimizer scale paths); --json DIR
-            writes one BENCH_<name>.json per result for trend tracking
+            writes one BENCH_<name>.json per result for trend tracking, plus
+            BENCH_hot_path_counters.json (simplex iterations/refactorizations
+            and fluid re-solve counters from a fixed probe job)
 TENANCY:    `mrperf experiment tenancy` runs multi-tenant job streams over ONE
             shared fluid network: --loads sweeps offered load ρ (Poisson
             arrivals at λ = ρ / S, S calibrated by a standalone run) across
@@ -261,16 +267,17 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
             }
         } else if id == "tenancy" {
             let gen_spec = args.get_or("gen", experiments::tenancy::DEFAULT_GEN);
-            let knobs = (|| -> Result<(usize, f64), String> {
+            let knobs = (|| -> Result<(usize, f64, usize), String> {
                 let jobs = args
                     .get_usize("jobs", experiments::tenancy::DEFAULT_JOBS)
                     .map_err(|e| e.to_string())?;
                 let slack = args
                     .get_f64("slack", experiments::tenancy::DEFAULT_SLACK)
                     .map_err(|e| e.to_string())?;
-                Ok((jobs, slack))
+                let threads = args.get_usize("threads", 1).map_err(|e| e.to_string())?;
+                Ok((jobs, slack, threads))
             })();
-            let tables = knobs.and_then(|(jobs, slack)| {
+            let tables = knobs.and_then(|(jobs, slack, threads)| {
                 experiments::tenancy::run_with(
                     gen_spec,
                     args.get("arrivals"),
@@ -279,6 +286,7 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
                     args.get_or("policies", experiments::tenancy::DEFAULT_POLICIES),
                     slack,
                     args.get("dynamics"),
+                    threads,
                 )
             });
             match tables {
@@ -437,6 +445,19 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    let threads = match args.get_usize("threads", 1) {
+        Ok(0) => {
+            eprintln!(
+                "invalid value '0' for --threads (need at least one solver thread)"
+            );
+            return ExitCode::FAILURE;
+        }
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
     let stealing = args.flag("stealing") || args.flag("locality");
     let mut jc = JobConfig {
         barriers: cfg,
@@ -445,6 +466,7 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
         locality_stealing: args.flag("locality"),
         local_only: !(args.flag("speculation") || stealing),
         replication: args.get_usize("replication", 1).unwrap_or(1),
+        threads,
         ..JobConfig::default()
     };
     if let Some(spec) = args.get("dynamics") {
@@ -503,6 +525,14 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
         m.shuffle_bytes / 1e6,
         m.output_bytes / 1e6
     );
+    println!(
+        "fluid solver      {:>10} re-solves / {} component resources re-filled \
+         ({} thread{})",
+        m.fluid_resolves,
+        m.fluid_resources_touched,
+        threads,
+        if threads == 1 { "" } else { "s" }
+    );
     if m.spec_launched > 0 || m.stolen > 0 {
         println!(
             "scheduling        {:>10} speculative ({} won), {} stolen",
@@ -550,6 +580,10 @@ fn cmd_bench(args: &cli::Args) -> ExitCode {
     let mut suite = BenchSuite::with_filter(bench_cfg, filter);
     let app = AppModel::new(1.0);
     let bc = BarrierConfig::HADOOP;
+    // Bracket the whole suite with the solver's hot-path counters so the
+    // JSON snapshot below tracks algorithmic work (pivots + bound flips,
+    // refactorizations), not just wall time.
+    mrperf::solver::reset_hot_path_counters();
 
     // Model hot path (reference point for the optimizer numbers).
     let t8 = build_env(EnvKind::Global8);
@@ -588,6 +622,40 @@ fn cmd_bench(args: &cli::Args) -> ExitCode {
                 return ExitCode::FAILURE;
             }
         }
+        // Counter snapshot: solver work accumulated across the suite
+        // above, plus the fluid engine's counters from one fixed probe
+        // job (both deterministic, so diffs track algorithm changes).
+        let (solver_iterations, solver_refactorizations) =
+            mrperf::solver::hot_path_counters();
+        let probe_topo = generate_kind(ScaleKind::HierarchicalWan, 64, 7);
+        let probe_plan = Plan::local_push(&probe_topo);
+        let probe_inputs = mrperf::experiments::common::synthetic_inputs(
+            probe_topo.n_sources(),
+            2_000,
+            0x5CA1E,
+        );
+        let probe = run_job(
+            &probe_topo,
+            &probe_plan,
+            &mrperf::apps::SyntheticApp::new(1.0),
+            &JobConfig::default(),
+            &probe_inputs,
+        );
+        let counters = format!(
+            "{{\n  \"name\": \"hot_path_counters\",\n  \
+             \"solver_iterations\": {solver_iterations},\n  \
+             \"solver_refactorizations\": {solver_refactorizations},\n  \
+             \"fluid_probe\": \"hier-wan:64 local-push synthetic run\",\n  \
+             \"fluid_resolves\": {},\n  \
+             \"fluid_resources_touched\": {}\n}}\n",
+            probe.metrics.fluid_resolves, probe.metrics.fluid_resources_touched,
+        );
+        let path = dir.join("BENCH_hot_path_counters.json");
+        if let Err(e) = std::fs::write(&path, counters) {
+            eprintln!("writing {}: {e}", path.display());
+            return ExitCode::FAILURE;
+        }
+        println!("wrote {}", path.display());
     }
     ExitCode::SUCCESS
 }

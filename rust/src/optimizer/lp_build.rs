@@ -11,6 +11,11 @@
 //! barrier semantics are supported; the per-node time variables make
 //! local/pipelined boundaries expressible (eqs 12–14).
 //!
+//! Epigraph rows with a *single* variable and constant rhs (`T ≥ c`)
+//! are emitted as implicit variable bounds ([`Lp::bound_below`]) rather
+//! than constraint rows — the bounded revised simplex handles them in
+//! the ratio test for free, and every row saved shrinks the basis.
+//!
 //! Objectives:
 //! * `Makespan` — eq 11, the end-to-end objective.
 //! * `PushTime` — myopic push (§4.2): minimize `max_j push_end_j`.
@@ -225,7 +230,8 @@ pub fn build_lp_x(
             for k in 0..r {
                 lp.constraint(&[(t, 1.0), (shuffle_end[k], -1.0)], Cmp::Ge, 0.0);
             }
-            lp.constraint(&[(t, 1.0)], Cmp::Ge, rcost_max);
+            // Single-variable row `T ≥ rcost_max` → implicit bound (free).
+            lp.bound_below(t, rcost_max);
         }
     }
 
@@ -318,7 +324,9 @@ pub fn build_lp_y(
                 }
             }
             Barrier::Pipelined => {
-                lp.constraint(&[(shuffle_end[k], 1.0)], Cmp::Ge, map_max);
+                // Start row `shuffle_end_k ≥ map_max` is single-variable
+                // with a constant rhs → implicit bound (r rows saved).
+                lp.bound_below(shuffle_end[k], map_max);
                 let cmax = (0..m).map(coef).fold(0.0f64, f64::max);
                 lp.constraint(&[(shuffle_end[k], 1.0), (y[k], -cmax)], Cmp::Ge, 0.0);
             }
@@ -356,8 +364,9 @@ pub fn build_lp_y(
             }
         }
     }
-    // The makespan can never undercut the (constant) map completion.
-    lp.constraint(&[(t, 1.0)], Cmp::Ge, map_max);
+    // The makespan can never undercut the (constant) map completion —
+    // an implicit lower bound on T, not a row (every y-LP saves it).
+    lp.bound_below(t, map_max);
 
     let obj_var = match objective {
         Objective::Makespan => t,

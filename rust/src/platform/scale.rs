@@ -1,6 +1,7 @@
 //! Parameterized topology generators beyond the paper's four 8-node
 //! environments (§4.1): hierarchical WANs, federated multi-datacenter
-//! fabrics, and edge-heavy deployments, from 16 to 512+ nodes.
+//! fabrics, and edge-heavy deployments, from 16 to [`MAX_NODES`] (4096)
+//! nodes.
 //!
 //! The paper validates its optimizer on an emulated PlanetLab testbed
 //! with eight nodes of each role; the geo-distributed MapReduce survey
@@ -72,6 +73,12 @@ pub struct ScaleConfig {
 
 /// Default generator seed (any value works; fixed for reproducibility).
 pub const DEFAULT_SEED: u64 = 0x5CA1E;
+
+/// Largest supported generated topology. The generators allocate
+/// O(clusters²) bandwidth matrices and the engine run at this size is
+/// bench-gated under a second (`benches/bench_main.rs`); the CLI and the
+/// scale/churn sweeps all share this single cap.
+pub const MAX_NODES: usize = 4096;
 
 impl ScaleConfig {
     pub fn new(kind: ScaleKind, nodes: usize) -> ScaleConfig {
@@ -145,10 +152,10 @@ pub fn parse_spec_config(spec: &str) -> Result<ScaleConfig, String> {
     if nodes < 6 {
         return Err("generated topologies need at least 6 nodes".to_string());
     }
-    if nodes > 4096 {
+    if nodes > MAX_NODES {
         // The generators allocate O(clusters²) bandwidth matrices; keep a
         // CLI typo from turning into an OOM abort.
-        return Err(format!("node count {nodes} too large (max 4096)"));
+        return Err(format!("node count {nodes} too large (max {MAX_NODES})"));
     }
     let seed: u64 = if parts.len() == 3 {
         parts[2].parse().map_err(|_| format!("bad seed '{}'", parts[2]))?
@@ -399,6 +406,22 @@ mod tests {
         assert!(parse_spec("hier-wan:3").is_err());
         assert!(parse_spec("hier-wan:64:x").is_err());
         assert!(parse_spec("hier-wan:400000000").is_err());
+    }
+
+    /// The cap, the error message, and the sweep bounds all come from the
+    /// shared `MAX_NODES`: the boundary is accepted, one past it is
+    /// rejected with an error naming the real limit.
+    #[test]
+    fn node_cap_is_exact_and_named_in_error() {
+        let at_cap = parse_spec_config(&format!("hier-wan:{MAX_NODES}"));
+        assert!(at_cap.is_ok(), "{MAX_NODES} nodes must be accepted");
+        assert_eq!(at_cap.unwrap().nodes, MAX_NODES);
+        let over = parse_spec_config(&format!("hier-wan:{}", MAX_NODES + 1));
+        let msg = over.unwrap_err();
+        assert!(
+            msg.contains(&MAX_NODES.to_string()),
+            "rejection must name the cap: {msg}"
+        );
     }
 
     #[test]

@@ -121,6 +121,11 @@ fn standardize(lp: &Lp) -> Standard {
 
 /// Solve a minimization LP with the interior-point method.
 pub fn solve(lp: &Lp) -> LpOutcome {
+    if lp.has_implicit_bounds() {
+        // Row-only solver: lower implicit bounds into explicit rows
+        // (the recursive call sees no bounds).
+        return solve(&lp.materialize_bounds());
+    }
     if lp.n_rows() == 0 {
         // Unconstrained: optimum at 0 for c ≥ 0, else unbounded.
         if lp.objective.iter().any(|&c| c < 0.0) {

@@ -6,7 +6,14 @@
 //! algorithm, [`super::mip`] branch & bound, [`super::pwl`] the paper's
 //! piecewise-linear bilinear linearization.
 //!
-//! All variables are non-negative; general bounds are encoded as rows.
+//! All variables are non-negative. Simple bounds `l ≤ x ≤ u` can be
+//! attached *implicitly* via [`Lp::bound_below`] / [`Lp::bound_above`]:
+//! the revised simplex handles them inside the ratio test without
+//! spending a constraint row each, which is the row-count cut the plan
+//! LPs rely on. Solvers that only understand rows call
+//! [`Lp::materialize_bounds`] to lower them back into explicit rows
+//! (the dense tableau and IPM paths do this internally, so they remain
+//! drop-in oracles for bounded problems).
 
 /// Constraint sense.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,6 +39,11 @@ pub struct Lp {
     /// sized `n_vars`, zero-filled.
     pub objective: Vec<f64>,
     pub rows: Vec<Row>,
+    /// Implicit per-variable lower bounds (default 0; never negative —
+    /// the stack's variables are non-negative by construction).
+    pub lower: Vec<f64>,
+    /// Implicit per-variable upper bounds (default `+∞`).
+    pub upper: Vec<f64>,
     names: Vec<String>,
 }
 
@@ -45,6 +57,8 @@ impl Lp {
         let idx = self.n_vars;
         self.n_vars += 1;
         self.objective.push(0.0);
+        self.lower.push(0.0);
+        self.upper.push(f64::INFINITY);
         self.names.push(name.into());
         idx
     }
@@ -80,9 +94,51 @@ impl Lp {
         self.rows.push(Row { terms: merged, cmp, rhs });
     }
 
-    /// Convenience: `var ≤ ub`.
+    /// Convenience: `var ≤ ub` as an explicit constraint row. Kept
+    /// row-based (MIP branching and the PWL builder rewrite rows);
+    /// prefer [`Lp::bound_above`] on pure-LP hot paths.
     pub fn upper_bound(&mut self, var: usize, ub: f64) {
         self.constraint(&[(var, 1.0)], Cmp::Le, ub);
+    }
+
+    /// Tighten the implicit lower bound: `var ≥ lb` without a row.
+    /// Repeated calls keep the tightest (largest) bound; values below
+    /// the default 0 are ignored (variables stay non-negative).
+    pub fn bound_below(&mut self, var: usize, lb: f64) {
+        self.lower[var] = self.lower[var].max(lb);
+    }
+
+    /// Tighten the implicit upper bound: `var ≤ ub` without a row.
+    /// Repeated calls keep the tightest (smallest) bound.
+    pub fn bound_above(&mut self, var: usize, ub: f64) {
+        self.upper[var] = self.upper[var].min(ub);
+    }
+
+    /// Whether any implicit bound is tighter than the default `[0, ∞)`.
+    pub fn has_implicit_bounds(&self) -> bool {
+        self.lower.iter().any(|&l| l > 0.0)
+            || self.upper.iter().any(|u| u.is_finite())
+    }
+
+    /// A copy with every implicit bound lowered into an explicit row
+    /// (`x ≥ l` / `x ≤ u`) and the bound vectors reset to `[0, ∞)`.
+    /// This is the bridge to row-only solvers and the baseline the
+    /// bench row-count gate compares against.
+    pub fn materialize_bounds(&self) -> Lp {
+        let mut out = self.clone();
+        for j in 0..out.n_vars {
+            out.lower[j] = 0.0;
+            out.upper[j] = f64::INFINITY;
+        }
+        for j in 0..self.n_vars {
+            if self.lower[j] > 0.0 {
+                out.constraint(&[(j, 1.0)], Cmp::Ge, self.lower[j]);
+            }
+            if self.upper[j].is_finite() {
+                out.constraint(&[(j, 1.0)], Cmp::Le, self.upper[j]);
+            }
+        }
+        out
     }
 
     /// Convenience: fix `var = value`.
@@ -111,8 +167,10 @@ impl Lp {
             };
             worst = worst.max(viol);
         }
-        for &v in x {
-            worst = worst.max((-v).max(0.0));
+        for (j, &v) in x.iter().enumerate() {
+            let lo = self.lower.get(j).copied().unwrap_or(0.0);
+            let hi = self.upper.get(j).copied().unwrap_or(f64::INFINITY);
+            worst = worst.max(lo - v).max(v - hi).max(-v);
         }
         worst
     }
@@ -174,5 +232,43 @@ mod tests {
         let mut lp = Lp::new();
         let _ = lp.var("x");
         assert!(lp.violation(&[-0.5]) == 0.5);
+    }
+
+    #[test]
+    fn implicit_bounds_tighten_and_count_no_rows() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        assert!(!lp.has_implicit_bounds());
+        lp.bound_below(x, 2.0);
+        lp.bound_below(x, 1.0); // looser: ignored
+        lp.bound_above(x, 5.0);
+        lp.bound_above(x, 7.0); // looser: ignored
+        assert_eq!(lp.lower[x], 2.0);
+        assert_eq!(lp.upper[x], 5.0);
+        assert!(lp.has_implicit_bounds());
+        assert_eq!(lp.n_rows(), 0, "bounds must not spend rows");
+        assert_eq!(lp.violation(&[1.0]), 1.0); // below lower
+        assert_eq!(lp.violation(&[6.0]), 1.0); // above upper
+        assert_eq!(lp.violation(&[3.0]), 0.0);
+    }
+
+    #[test]
+    fn materialize_bounds_round_trips_to_rows() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.constraint(&[(x, 1.0), (y, 1.0)], Cmp::Ge, 1.0);
+        lp.bound_below(x, 0.5);
+        lp.bound_above(y, 2.0);
+        let mat = lp.materialize_bounds();
+        assert_eq!(mat.n_rows(), 3, "one row per non-default bound");
+        assert!(!mat.has_implicit_bounds());
+        // Same feasible region: violations agree at probe points.
+        for probe in [[0.2, 0.9], [0.5, 2.5], [0.6, 0.4], [0.5, 0.5]] {
+            assert!(
+                (lp.violation(&probe) - mat.violation(&probe)).abs() < 1e-12,
+                "probe {probe:?}"
+            );
+        }
     }
 }

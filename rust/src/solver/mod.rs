@@ -13,7 +13,32 @@ pub mod simplex;
 
 pub use lp::{Cmp, Lp, LpOutcome};
 pub use mip::{solve_binary, MipConfig, MipOutcome};
+pub use revised::Pricing;
 pub use simplex::solve;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Hot-path counters for the revised simplex, accumulated process-wide
+/// (Relaxed atomics: they are observability, not synchronization).
+/// `mrperf bench --json` snapshots them per benchmark so BENCH_*.json
+/// files track algorithmic work, not just wall time.
+pub(crate) static SOLVER_ITERATIONS: AtomicU64 = AtomicU64::new(0);
+pub(crate) static SOLVER_REFACTORIZATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of (simplex iterations — pivots plus bound flips,
+/// refactorizations) since process start or the last reset.
+pub fn hot_path_counters() -> (u64, u64) {
+    (
+        SOLVER_ITERATIONS.load(Ordering::Relaxed),
+        SOLVER_REFACTORIZATIONS.load(Ordering::Relaxed),
+    )
+}
+
+/// Zero the hot-path counters (bench harness bracketing).
+pub fn reset_hot_path_counters() {
+    SOLVER_ITERATIONS.store(0, Ordering::Relaxed);
+    SOLVER_REFACTORIZATIONS.store(0, Ordering::Relaxed);
+}
 
 /// Default LP solver for the plan optimizers: interior-point (immune to
 /// the degeneracy that stalls the tableau simplex on these programs).

@@ -1,4 +1,4 @@
-//! Sparse revised simplex with a product-form inverse (PFI).
+//! Sparse bounded-variable revised simplex with a product-form inverse.
 //!
 //! The dense tableau ([`super::simplex`]) carries an explicit `(m+1)×(n+1)`
 //! matrix, which is perfect for the paper's ≲300-row plan LPs but blows up
@@ -10,8 +10,17 @@
 //! * the basis inverse is a **product of eta matrices** (Bartels–Golub
 //!   style elementary column transforms), rebuilt from the basis columns
 //!   every [`REFACTOR_EVERY`] pivots to bound fill-in and drift;
-//! * pricing is Dantzig with **partial (cyclic block) pricing** on wide
-//!   problems and a Bland fallback on degenerate plateaus;
+//! * simple bounds `l ≤ x ≤ u` ([`Lp::bound_below`]/[`Lp::bound_above`])
+//!   are handled **implicitly**: lower bounds are shifted out of the
+//!   right-hand side and upper bounds live in the ratio test, so a bound
+//!   costs zero constraint rows. A nonbasic variable sits at either of
+//!   its bounds, and a "bound flip" step moves it across without a basis
+//!   change (no eta, no refactorization pressure);
+//! * pricing is **devex** (Forrest–Goldfarb reference weights, a cheap
+//!   steepest-edge approximation) with cyclic partial sweeps on wide
+//!   problems and a Bland fallback on degenerate plateaus; classic
+//!   Dantzig pricing is kept behind [`Pricing::Dantzig`] for A/B
+//!   benchmarking;
 //! * a solved basis can be returned and fed back in (**warm start**) —
 //!   the alternating optimizer reuses the previous round's basis, which
 //!   turns most re-solves into a handful of pivots.
@@ -19,10 +28,13 @@
 //! Standard-form conversion, scaling, and tolerances deliberately mirror
 //! the dense solver so the two are interchangeable behind [`Lp`]; the
 //! dense tableau remains the small-problem path and the cross-check
-//! oracle (see `tests/optimizer_scale.rs`).
+//! oracle (see `tests/optimizer_scale.rs` and `tests/solver_bounded.rs`).
+
+use std::sync::atomic::Ordering::Relaxed;
 
 use super::lp::{Cmp, Lp, LpOutcome};
 use super::simplex::equilibrate;
+use super::{SOLVER_ITERATIONS, SOLVER_REFACTORIZATIONS};
 
 const EPS: f64 = 1e-9;
 /// Reduced-cost tolerance for the entering test (matches the dense path).
@@ -38,6 +50,20 @@ const REFACTOR_EVERY: usize = 64;
 /// one candidate found, take the best so far instead of finishing the
 /// sweep. Optimality is only ever declared after a *full* sweep.
 const PARTIAL_SPAN: usize = 4096;
+/// Devex weight ceiling: past this the reference framework has drifted
+/// far from the current basis and the weights are reset to 1.
+const DEVEX_RESET: f64 = 1e10;
+
+/// Entering-column selection rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pricing {
+    /// Most-negative reduced cost (textbook rule; cheap per sweep but
+    /// step counts degrade on long thin polytopes).
+    Dantzig,
+    /// Devex reference weights: approximate steepest edge at Dantzig
+    /// cost. The default.
+    Devex,
+}
 
 /// Compressed sparse column matrix (column-major, row indices ascending).
 struct Csc {
@@ -84,8 +110,9 @@ struct Eta {
     others: Vec<(usize, f64)>,
 }
 
-/// Equilibrated standard form `A x = b, x ≥ 0, b ≥ 0` with explicit
-/// slack/surplus and artificial columns (layout mirrors the dense path).
+/// Equilibrated standard form `A z = b, 0 ≤ z ≤ u` (z is the scaled,
+/// lower-shifted variable) with explicit slack/surplus and artificial
+/// columns (layout mirrors the dense path).
 struct Std {
     m: usize,
     n: usize,
@@ -97,6 +124,10 @@ struct Std {
     b: Vec<f64>,
     /// Phase-2 objective over all n columns (scaled; slack/art zero).
     cost2: Vec<f64>,
+    /// Scaled upper bound per column (`(u−l)/col_scale` for structural
+    /// columns with a finite bound, `+∞` otherwise — slacks and
+    /// artificials are never bounded above).
+    upper: Vec<f64>,
     /// Per row, its slack-or-artificial unit column (basis repair).
     unit_col: Vec<usize>,
     /// Initial (cold) basis: one unit column per row.
@@ -106,6 +137,18 @@ struct Std {
 fn standardize(lp: &Lp, row_scale: &[f64], col_scale: &[f64]) -> Std {
     let m = lp.n_rows();
     let n_orig = lp.n_vars;
+
+    // Shift lower bounds out of the right-hand side: the standard-form
+    // variable is z = (x − l)/col_scale, so each row's rhs drops by
+    // Σ A_ij·l_j. With all-zero lower bounds this is the identity.
+    let rhs_eff: Vec<f64> = lp
+        .rows
+        .iter()
+        .map(|row| {
+            let shift: f64 = row.terms.iter().map(|&(v, c)| c * lp.lower[v]).sum();
+            row.rhs - shift
+        })
+        .collect();
 
     #[derive(Clone, Copy, PartialEq)]
     enum RowKind {
@@ -118,7 +161,7 @@ fn standardize(lp: &Lp, row_scale: &[f64], col_scale: &[f64]) -> Std {
     let mut n_slack = 0usize;
     let mut n_art = 0usize;
     for (r, row) in lp.rows.iter().enumerate() {
-        let rhs_scaled = row.rhs / row_scale[r];
+        let rhs_scaled = rhs_eff[r] / row_scale[r];
         let (kind, sign) = match row.cmp {
             Cmp::Le => {
                 if rhs_scaled >= 0.0 {
@@ -168,7 +211,7 @@ fn standardize(lp: &Lp, row_scale: &[f64], col_scale: &[f64]) -> Std {
         for &(v, c) in &row.terms {
             cols[v].push((r, c * col_scale[v] * sr));
         }
-        b[r] = signs[r] * row.rhs / row_scale[r];
+        b[r] = signs[r] * rhs_eff[r] / row_scale[r];
         match kinds[r] {
             RowKind::Slack => {
                 cols[slack_cursor].push((r, 1.0));
@@ -210,6 +253,13 @@ fn standardize(lp: &Lp, row_scale: &[f64], col_scale: &[f64]) -> Std {
         cost2[v] = lp.objective[v] * col_scale[v];
     }
 
+    let mut upper = vec![f64::INFINITY; n];
+    for v in 0..n_orig {
+        if lp.upper[v].is_finite() {
+            upper[v] = (lp.upper[v] - lp.lower[v]) / col_scale[v];
+        }
+    }
+
     Std {
         m,
         n,
@@ -219,6 +269,7 @@ fn standardize(lp: &Lp, row_scale: &[f64], col_scale: &[f64]) -> Std {
         csc: Csc { col_ptr, row_ix, val },
         b,
         cost2,
+        upper,
         unit_col,
         init_basis,
     }
@@ -234,10 +285,27 @@ enum Phase {
     Fail,
 }
 
+/// Outcome of the bounded ratio test for one entering column.
+enum Step {
+    /// Basis change: the variable at row `r` leaves (to its lower bound,
+    /// or to its upper when `to_upper`) after the entering variable
+    /// moves by `t` along its improving direction.
+    Pivot { r: usize, t: f64, to_upper: bool },
+    /// The entering variable hits its *own* opposite bound first: flip
+    /// it across — no eta, no basis change.
+    Flip,
+}
+
 struct Rev<'a> {
     st: &'a Std,
+    pricing: Pricing,
     basis: Vec<usize>,
     in_basis: Vec<bool>,
+    /// Nonbasic-at-upper flags (false = at lower bound; only meaningful
+    /// for nonbasic columns, kept false while basic).
+    at_upper: Vec<bool>,
+    /// Devex reference weights, reset to 1 per phase and on blowup.
+    weights: Vec<f64>,
     etas: Vec<Eta>,
     /// Value of the basic variable sitting at each row position.
     xb: Vec<f64>,
@@ -247,11 +315,14 @@ struct Rev<'a> {
 }
 
 impl<'a> Rev<'a> {
-    fn new(st: &'a Std) -> Rev<'a> {
+    fn new(st: &'a Std, pricing: Pricing) -> Rev<'a> {
         let mut r = Rev {
             st,
+            pricing,
             basis: Vec::new(),
             in_basis: vec![false; st.n],
+            at_upper: vec![false; st.n],
+            weights: vec![1.0; st.n],
             etas: Vec::new(),
             xb: Vec::new(),
             banned: vec![false; st.n],
@@ -267,6 +338,8 @@ impl<'a> Rev<'a> {
         for &c in &self.basis {
             self.in_basis[c] = true;
         }
+        self.at_upper.iter_mut().for_each(|f| *f = false);
+        self.weights.iter_mut().for_each(|w| *w = 1.0);
         self.etas.clear();
         self.xb = self.st.b.clone();
         self.banned.iter_mut().for_each(|f| *f = false);
@@ -299,6 +372,21 @@ impl<'a> Rev<'a> {
         }
     }
 
+    /// The effective right-hand side seen by the basis: `b` minus the
+    /// columns parked at their upper bounds.
+    fn effective_b(&self) -> Vec<f64> {
+        let mut v = self.st.b.clone();
+        for j in 0..self.st.n {
+            if self.at_upper[j] && !self.in_basis[j] {
+                let (rows, vals) = self.st.csc.col(j);
+                for (&r, &a) in rows.iter().zip(vals) {
+                    v[r] -= a * self.st.upper[j];
+                }
+            }
+        }
+        v
+    }
+
     /// Rebuild the eta file from the current basis columns (fresh PFI).
     /// Unit-ish columns are eliminated first (no fill), the rest by
     /// ascending sparsity — a poor man's Markowitz that keeps the fill
@@ -306,6 +394,7 @@ impl<'a> Rev<'a> {
     /// columns are replaced by the row's logical unit column; an
     /// unrepairable basis reports failure so the caller can fall back.
     fn refactor(&mut self) -> Result<(), ()> {
+        SOLVER_REFACTORIZATIONS.fetch_add(1, Relaxed);
         let m = self.st.m;
         self.etas.clear();
         let cols = std::mem::take(&mut self.basis);
@@ -384,7 +473,12 @@ impl<'a> Rev<'a> {
             self.in_basis[c] = true;
         }
         self.basis = new_basis;
-        let mut v = self.st.b.clone();
+        // A column that re-entered the basis must not keep a stale
+        // at-upper flag (possible after warm-basis repair).
+        for &c in &self.basis {
+            self.at_upper[c] = false;
+        }
+        let mut v = self.effective_b();
         self.ftran(&mut v);
         for x in v.iter_mut() {
             if *x < 0.0 && *x > -1e-9 {
@@ -397,20 +491,22 @@ impl<'a> Rev<'a> {
 
     /// Install a warm basis. Returns false (leaving the solver cold) if
     /// the basis has the wrong shape, is singular, or is primal
-    /// infeasible for this instance.
+    /// infeasible for this instance. Bound status is not part of the
+    /// warm handshake: every nonbasic column starts at its lower bound.
     fn try_warm(&mut self, warm: &[usize]) -> bool {
         let m = self.st.m;
         if warm.len() != m || warm.iter().any(|&c| c >= self.st.n) {
             return false;
         }
         self.basis = warm.to_vec();
+        self.at_upper.iter_mut().for_each(|f| *f = false);
         if self.refactor().is_err() {
             self.reset_cold();
             return false;
         }
         let mut feasible = true;
         for (r, &x) in self.xb.iter().enumerate() {
-            if x < -1e-6 {
+            if x < -1e-6 || x > self.st.upper[self.basis[r]] + 1e-6 {
                 feasible = false;
                 break;
             }
@@ -432,22 +528,38 @@ impl<'a> Rev<'a> {
         true
     }
 
+    /// Objective of the current (basic + at-upper nonbasic) point.
     fn objective(&self, cost: &[f64]) -> f64 {
-        self.basis
+        let mut obj: f64 = self
+            .basis
             .iter()
             .zip(&self.xb)
             .map(|(&c, &x)| cost[c] * x)
-            .sum()
+            .sum();
+        for j in 0..self.st.n {
+            if self.at_upper[j] && !self.in_basis[j] && cost[j] != 0.0 {
+                obj += cost[j] * self.st.upper[j];
+            }
+        }
+        obj
     }
 
-    /// Entering column, or None when no eligible column prices out
-    /// negative after a full sweep (optimality).
-    fn price(&mut self, cost: &[f64], allowed: usize, y: &[f64], bland: bool) -> Option<usize> {
+    /// Entering column and its improving direction (+1 = increase from
+    /// the lower bound, −1 = decrease from the upper bound), or None
+    /// when no eligible column prices out after a full sweep
+    /// (optimality).
+    fn price(
+        &mut self,
+        cost: &[f64],
+        allowed: usize,
+        y: &[f64],
+        bland: bool,
+    ) -> Option<(usize, f64)> {
         if allowed == 0 {
             return None;
         }
-        let mut best = -EPS_RC;
-        let mut best_j = None;
+        let mut best_score = 0.0f64;
+        let mut best: Option<(usize, f64)> = None;
         let start = if bland { 0 } else { self.price_cursor % allowed };
         for off in 0..allowed {
             let j = (start + off) % allowed;
@@ -455,29 +567,48 @@ impl<'a> Rev<'a> {
                 continue;
             }
             let d = cost[j] - self.st.csc.dot_col(j, y);
-            if d < best {
-                best = d;
-                best_j = Some(j);
-                if bland {
-                    break;
+            let dir = if self.at_upper[j] {
+                if d > EPS_RC {
+                    -1.0
+                } else {
+                    continue;
                 }
+            } else if d < -EPS_RC {
+                1.0
+            } else {
+                continue;
+            };
+            if bland {
+                self.price_cursor = (j + 1) % allowed;
+                return Some((j, dir));
             }
-            if !bland && best_j.is_some() && off >= PARTIAL_SPAN {
+            let score = match self.pricing {
+                Pricing::Dantzig => d.abs(),
+                Pricing::Devex => d * d / self.weights[j],
+            };
+            if score > best_score {
+                best_score = score;
+                best = Some((j, dir));
+            }
+            if best.is_some() && off >= PARTIAL_SPAN {
                 break;
             }
         }
-        if let Some(j) = best_j {
+        if let Some((j, _)) = best {
             self.price_cursor = (j + 1) % allowed;
         }
-        best_j
+        best
     }
 
-    /// Leaving row for the transformed entering column, or None
-    /// (unbounded direction).
-    fn choose_leaving(&self, abar: &[f64], phase2: bool) -> Option<usize> {
+    /// Bounded ratio test: the entering variable moves by `t ≥ 0` along
+    /// `dir`; each basic variable drifts by `−dir·ābar_r·t` and is
+    /// blocked at 0 *and* at its own upper bound; the entering variable
+    /// itself is blocked at its opposite bound (a flip). None =
+    /// unbounded direction.
+    fn choose_step(&self, q: usize, dir: f64, abar: &[f64], phase2: bool) -> Option<Step> {
         let m = self.st.m;
         // Zero-valued basic artificials are kicked out eagerly: pivoting
-        // there is degenerate (entering value 0, feasibility untouched)
+        // there is degenerate (step length 0, feasibility untouched)
         // and stops the artificial from creeping positive during phase 2.
         if phase2 {
             for r in 0..m {
@@ -485,55 +616,131 @@ impl<'a> Rev<'a> {
                     && self.xb[r] <= EPS
                     && abar[r].abs() > EPS_PIVOT
                 {
-                    return Some(r);
+                    return Some(Step::Pivot { r, t: 0.0, to_upper: false });
                 }
             }
         }
+        let uq = self.st.upper[q];
         for &min_pivot in &[EPS_PIVOT, EPS] {
             let mut best_ratio = f64::INFINITY;
             let mut prow = usize::MAX;
+            let mut p_upper = false;
             for r in 0..m {
-                let coef = abar[r];
-                if coef > min_pivot {
-                    let ratio = self.xb[r] / coef;
-                    if ratio < best_ratio - EPS
-                        || (ratio < best_ratio + EPS
-                            && prow != usize::MAX
-                            && self.basis[r] < self.basis[prow])
-                    {
-                        best_ratio = ratio;
-                        prow = r;
+                let coef = dir * abar[r];
+                let (ratio, goes_upper) = if coef > min_pivot {
+                    (self.xb[r] / coef, false)
+                } else if coef < -min_pivot {
+                    let ub = self.st.upper[self.basis[r]];
+                    if !ub.is_finite() {
+                        continue;
                     }
+                    ((ub - self.xb[r]) / -coef, true)
+                } else {
+                    continue;
+                };
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && prow != usize::MAX
+                        && self.basis[r] < self.basis[prow])
+                {
+                    best_ratio = ratio;
+                    prow = r;
+                    p_upper = goes_upper;
                 }
             }
-            if prow != usize::MAX {
-                return Some(prow);
+            // The entering variable's own bound wins ties: a flip costs
+            // no eta and cannot be degenerate.
+            if uq.is_finite() && uq <= best_ratio {
+                return Some(Step::Flip);
             }
+            if prow != usize::MAX {
+                return Some(Step::Pivot { r: prow, t: best_ratio.max(0.0), to_upper: p_upper });
+            }
+        }
+        if uq.is_finite() {
+            return Some(Step::Flip);
         }
         None
     }
 
-    fn pivot(&mut self, q: usize, r: usize, abar: &[f64]) {
-        let pivot = abar[r];
-        debug_assert!(pivot.abs() > EPS);
-        let t = self.xb[r] / pivot;
+    /// Move the entering variable all the way to its opposite bound
+    /// without a basis change.
+    fn apply_flip(&mut self, q: usize, dir: f64, abar: &[f64]) {
+        let uq = self.st.upper[q];
         for (i, x) in self.xb.iter_mut().enumerate() {
-            if i != r && abar[i] != 0.0 {
-                *x -= abar[i] * t;
+            if abar[i] != 0.0 {
+                *x -= dir * abar[i] * uq;
                 if *x < 0.0 && *x > -1e-9 {
                     *x = 0.0;
                 }
             }
         }
-        self.xb[r] = if t.abs() < 1e-14 { 0.0 } else { t.max(0.0) };
+        self.at_upper[q] = !self.at_upper[q];
+    }
+
+    /// Devex weight update for the pivot `(q enters at row r)`; must run
+    /// *before* the basis changes (needs the outgoing `Bᵀ⁻¹`).
+    fn devex_update(&mut self, q: usize, r: usize, abar: &[f64], allowed: usize) {
+        let arq = abar[r];
+        if arq.abs() < EPS_PIVOT {
+            return;
+        }
+        let wq = self.weights[q];
+        let wq_over = wq / (arq * arq);
+        // Pivot row of the tableau: ρᵀ a_j gives each column's entry.
+        let mut rho = vec![0.0; self.st.m];
+        rho[r] = 1.0;
+        self.btran(&mut rho);
+        let mut blown = false;
+        for j in 0..allowed {
+            if j == q || self.in_basis[j] || self.banned[j] {
+                continue;
+            }
+            let alpha = self.st.csc.dot_col(j, &rho);
+            if alpha != 0.0 {
+                let cand = (alpha * alpha) * wq_over;
+                if cand > self.weights[j] {
+                    self.weights[j] = cand;
+                    if cand > DEVEX_RESET {
+                        blown = true;
+                    }
+                }
+            }
+        }
+        let leaving = self.basis[r];
+        self.weights[leaving] = wq_over.max(1.0);
+        if blown || self.weights[leaving] > DEVEX_RESET {
+            // New reference framework.
+            self.weights.iter_mut().for_each(|w| *w = 1.0);
+        }
+    }
+
+    fn pivot(&mut self, q: usize, dir: f64, r: usize, t: f64, to_upper: bool, abar: &[f64]) {
+        let pivot = abar[r];
+        debug_assert!(pivot.abs() > EPS);
+        for (i, x) in self.xb.iter_mut().enumerate() {
+            if i != r && abar[i] != 0.0 {
+                *x -= dir * abar[i] * t;
+                if *x < 0.0 && *x > -1e-9 {
+                    *x = 0.0;
+                }
+            }
+        }
+        // Entering value: moved `t` up from 0, or `t` down from its
+        // upper bound.
+        let enter_val = if dir > 0.0 { t } else { self.st.upper[q] - t };
+        self.xb[r] = if enter_val.abs() < 1e-14 { 0.0 } else { enter_val.max(0.0) };
         let mut others = Vec::new();
         for (i, &v) in abar.iter().enumerate() {
             if i != r && v.abs() > 1e-12 {
                 others.push((i, v));
             }
         }
-        self.in_basis[self.basis[r]] = false;
+        let leaving = self.basis[r];
+        self.in_basis[leaving] = false;
+        self.at_upper[leaving] = to_upper;
         self.in_basis[q] = true;
+        self.at_upper[q] = false;
         self.basis[r] = q;
         self.etas.push(Eta { r, pivot, others });
     }
@@ -545,6 +752,7 @@ impl<'a> Rev<'a> {
     fn run_phase(&mut self, cost: &[f64], allowed: usize, bounded: bool, phase2: bool) -> Phase {
         let m = self.st.m;
         self.banned.iter_mut().for_each(|f| *f = false);
+        self.weights.iter_mut().for_each(|w| *w = 1.0);
         let mut last_obj = f64::INFINITY;
         let mut stalled = 0usize;
         let mut y = vec![0.0; m];
@@ -554,7 +762,12 @@ impl<'a> Rev<'a> {
                 return Phase::Fail;
             }
             let cur = self.objective(cost);
-            if cur < last_obj - 1e-10 * last_obj.abs().max(1.0) {
+            // `!is_finite` seeds the tracker on the first iteration (an
+            // `inf − inf` guard: the subtraction below is NaN there and
+            // every comparison with NaN is false, which would leave
+            // `last_obj` stuck at +∞ and hand the whole run to Bland's
+            // rule after the stall cap).
+            if !last_obj.is_finite() || cur < last_obj - 1e-10 * last_obj.abs().max(1.0) {
                 last_obj = cur;
                 stalled = 0;
             } else {
@@ -567,15 +780,25 @@ impl<'a> Rev<'a> {
                 y[r] = cost[self.basis[r]];
             }
             self.btran(&mut y);
-            let q = match self.price(cost, allowed, &y, bland) {
-                Some(q) => q,
+            let (q, dir) = match self.price(cost, allowed, &y, bland) {
+                Some(qd) => qd,
                 None => return Phase::Optimal,
             };
             abar.iter_mut().for_each(|v| *v = 0.0);
             self.st.csc.scatter(q, &mut abar);
             self.ftran(&mut abar);
-            match self.choose_leaving(&abar, phase2) {
-                Some(r) => self.pivot(q, r, &abar),
+            match self.choose_step(q, dir, &abar, phase2) {
+                Some(Step::Flip) => {
+                    SOLVER_ITERATIONS.fetch_add(1, Relaxed);
+                    self.apply_flip(q, dir, &abar);
+                }
+                Some(Step::Pivot { r, t, to_upper }) => {
+                    SOLVER_ITERATIONS.fetch_add(1, Relaxed);
+                    if self.pricing == Pricing::Devex {
+                        self.devex_update(q, r, &abar, allowed);
+                    }
+                    self.pivot(q, dir, r, t, to_upper, &abar);
+                }
                 None => {
                     if bounded {
                         self.banned[q] = true;
@@ -594,9 +817,26 @@ impl<'a> Rev<'a> {
 /// identical* LP). Returns `None` on numerical failure — the caller
 /// decides the fallback — plus the final basis for reuse.
 pub fn solve_warm(lp: &Lp, warm: Option<&[usize]>) -> (Option<LpOutcome>, Option<Vec<usize>>) {
+    solve_warm_pricing(lp, warm, Pricing::Devex)
+}
+
+/// [`solve_warm`] with an explicit pricing rule (the A/B benches compare
+/// devex against classic Dantzig on the same instances).
+pub fn solve_warm_pricing(
+    lp: &Lp,
+    warm: Option<&[usize]>,
+    pricing: Pricing,
+) -> (Option<LpOutcome>, Option<Vec<usize>>) {
+    // Crossed implicit bounds make the box itself empty — no simplex
+    // machinery needed (and the shift below would misbehave).
+    for j in 0..lp.n_vars {
+        if lp.lower[j] > lp.upper[j] + 1e-12 {
+            return (Some(LpOutcome::Infeasible), None);
+        }
+    }
     let (row_scale, col_scale) = equilibrate(lp);
     let st = standardize(lp, &row_scale, &col_scale);
-    let mut solver = Rev::new(&st);
+    let mut solver = Rev::new(&st, pricing);
 
     let mut warmed = match warm {
         Some(w) => solver.try_warm(w),
@@ -654,6 +894,11 @@ pub fn solve_warm(lp: &Lp, warm: Option<&[usize]>) -> (Option<LpOutcome>, Option
         }
 
         let mut x = vec![0.0; st.n_orig];
+        for (j, xv) in x.iter_mut().enumerate() {
+            if solver.at_upper[j] && !solver.in_basis[j] {
+                *xv = st.upper[j];
+            }
+        }
         for r in 0..st.m {
             let c = solver.basis[r];
             if c < st.n_orig {
@@ -662,6 +907,10 @@ pub fn solve_warm(lp: &Lp, warm: Option<&[usize]>) -> (Option<LpOutcome>, Option
         }
         for (v, s) in x.iter_mut().zip(&col_scale) {
             *v *= s;
+        }
+        // Undo the lower-bound shift.
+        for (v, &l) in x.iter_mut().zip(&lp.lower) {
+            *v += l;
         }
         let objective = lp.objective_at(&x);
         let basis = solver.basis.clone();
@@ -772,6 +1021,65 @@ mod tests {
     }
 
     #[test]
+    fn implicit_upper_bounds_respected() {
+        // max x+y ⇔ min −x−y over x+y ≤ 4 with the box x ≤ 1.5, y ≤ 3:
+        // the row binds (1.5 + 3 > 4) so the optimum is −4.
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, -1.0);
+        lp.minimize(y, -1.0);
+        lp.constraint(&[(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        lp.bound_above(x, 1.5);
+        lp.bound_above(y, 3.0);
+        let sol = assert_opt(solve(&lp), -4.0, 1e-8);
+        assert!(sol[0] <= 1.5 + 1e-8 && sol[1] <= 3.0 + 1e-8, "{sol:?}");
+        // Tighten until the box binds instead of the row.
+        let mut lp2 = lp.clone();
+        lp2.bound_above(x, 1.0);
+        lp2.bound_above(y, 2.0);
+        let sol2 = assert_opt(solve(&lp2), -3.0, 1e-8);
+        assert!((sol2[0] - 1.0).abs() < 1e-8 && (sol2[1] - 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn implicit_lower_bounds_shift() {
+        // min 2x + y, x+y ≥ 4, x ≥ 1, y ≥ 2 → x = 1, y = 3, obj 5.
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, 2.0);
+        lp.minimize(y, 1.0);
+        lp.constraint(&[(x, 1.0), (y, 1.0)], Cmp::Ge, 4.0);
+        lp.bound_below(x, 1.0);
+        lp.bound_below(y, 2.0);
+        let sol = assert_opt(solve(&lp), 5.0, 1e-8);
+        assert!((sol[0] - 1.0).abs() < 1e-8 && (sol[1] - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn pure_box_lp_no_rows() {
+        // No constraint rows at all: the optimum is a pure bound flip.
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        lp.minimize(x, -1.0);
+        lp.bound_above(x, 2.5);
+        let sol = assert_opt(solve(&lp), -2.5, 1e-9);
+        assert!((sol[0] - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crossed_bounds_are_infeasible() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        lp.minimize(x, 1.0);
+        lp.constraint(&[(x, 1.0)], Cmp::Le, 10.0);
+        lp.bound_below(x, 3.0);
+        lp.bound_above(x, 2.0);
+        assert_eq!(solve(&lp), LpOutcome::Infeasible);
+    }
+
+    #[test]
     fn warm_start_round_trip() {
         // Solve, re-solve from the returned basis: same optimum, and the
         // warm solve must succeed without falling back.
@@ -796,7 +1104,26 @@ mod tests {
         assert!((obj1 - obj3).abs() < 1e-9);
     }
 
-    /// Property: revised and dense tableau agree on random feasible LPs.
+    #[test]
+    fn warm_start_round_trip_with_bounds() {
+        let mut lp = Lp::new();
+        let x = lp.var("x");
+        let y = lp.var("y");
+        lp.minimize(x, 1.0);
+        lp.minimize(y, 2.0);
+        lp.constraint(&[(x, 1.0), (y, 1.0)], Cmp::Ge, 4.0);
+        lp.bound_above(x, 3.0);
+        lp.bound_below(y, 0.5);
+        let (first, basis) = solve_warm(&lp, None);
+        let (_, obj1) = first.expect("cold solve").expect_optimal("cold");
+        let basis = basis.expect("basis returned");
+        let (second, _) = solve_warm(&lp, Some(&basis));
+        let (_, obj2) = second.expect("warm solve").expect_optimal("warm");
+        assert!((obj1 - obj2).abs() < 1e-9, "{obj1} vs {obj2}");
+    }
+
+    /// Property: revised and dense tableau agree on random feasible LPs
+    /// whose variable bounds are *explicit rows* (the pre-bounds shape).
     #[test]
     fn qcheck_matches_dense_simplex() {
         qcheck(Config::default().cases(60), "revised vs dense", |rng: &mut Pcg64| {
@@ -840,6 +1167,102 @@ mod tests {
                 (d, s) => ensure(
                     std::mem::discriminant(&d) == std::mem::discriminant(&s),
                     format!("outcome mismatch: dense {d:?} vs revised {s:?}"),
+                ),
+            }
+        });
+    }
+
+    /// Property: the bounded path (implicit box, known-feasible random
+    /// LPs) matches the dense oracle, which materializes the bounds into
+    /// rows internally.
+    #[test]
+    fn qcheck_bounded_matches_dense_simplex() {
+        qcheck(Config::default().cases(60), "bounded vs dense", |rng: &mut Pcg64| {
+            let nv = rng.range(2, 7);
+            let nc = rng.range(1, 9);
+            let mut lp = Lp::new();
+            let vars: Vec<usize> = (0..nv).map(|i| lp.var(format!("v{i}"))).collect();
+            // Feasible-by-construction interior point inside the box.
+            let x0: Vec<f64> = (0..nv).map(|_| rng.uniform(1.0, 4.0)).collect();
+            for (j, v) in vars.iter().enumerate() {
+                lp.minimize(*v, rng.uniform(-1.0, 2.0));
+                if rng.chance(0.5) {
+                    lp.bound_below(*v, rng.uniform(0.0, x0[j]));
+                }
+                lp.bound_above(*v, rng.uniform(x0[j], 8.0));
+            }
+            for _ in 0..nc {
+                let terms: Vec<(usize, f64)> =
+                    vars.iter().map(|&v| (v, rng.uniform(-1.0, 1.0))).collect();
+                let lhs: f64 = terms.iter().map(|&(v, c)| c * x0[v]).sum();
+                match rng.range(0, 3) {
+                    0 => lp.constraint(&terms, Cmp::Ge, lhs - rng.uniform(0.0, 2.0)),
+                    1 => lp.constraint(&terms, Cmp::Le, lhs + rng.uniform(0.0, 2.0)),
+                    _ => lp.constraint(&terms, Cmp::Eq, lhs),
+                }
+            }
+            let dense = crate::solver::simplex::solve(&lp);
+            let sparse = solve(&lp);
+            match (dense, sparse) {
+                (
+                    LpOutcome::Optimal { objective: od, .. },
+                    LpOutcome::Optimal { x, objective: os },
+                ) => {
+                    ensure(
+                        lp.violation(&x) < 1e-6,
+                        format!("violation {}", lp.violation(&x)),
+                    )?;
+                    ensure(
+                        (od - os).abs() <= 1e-7 * od.abs().max(1.0),
+                        format!("dense {od} vs bounded revised {os}"),
+                    )
+                }
+                (d, s) => ensure(
+                    std::mem::discriminant(&d) == std::mem::discriminant(&s),
+                    format!("outcome mismatch: dense {d:?} vs bounded {s:?}"),
+                ),
+            }
+        });
+    }
+
+    /// Property: devex and Dantzig pricing reach the same optimum (the
+    /// path differs; the value may not).
+    #[test]
+    fn qcheck_devex_matches_dantzig() {
+        qcheck(Config::default().cases(60), "devex vs dantzig", |rng: &mut Pcg64| {
+            let nv = rng.range(2, 7);
+            let nc = rng.range(1, 8);
+            let mut lp = Lp::new();
+            let vars: Vec<usize> = (0..nv).map(|i| lp.var(format!("v{i}"))).collect();
+            let x0: Vec<f64> = (0..nv).map(|_| rng.uniform(0.0, 5.0)).collect();
+            for v in &vars {
+                lp.minimize(*v, rng.uniform(-1.0, 2.0));
+                lp.bound_above(*v, 10.0);
+            }
+            for _ in 0..nc {
+                let terms: Vec<(usize, f64)> =
+                    vars.iter().map(|&v| (v, rng.uniform(-1.0, 1.0))).collect();
+                let lhs: f64 = terms.iter().map(|&(v, c)| c * x0[v]).sum();
+                if rng.chance(0.3) {
+                    lp.constraint(&terms, Cmp::Ge, lhs - rng.uniform(0.0, 2.0));
+                } else {
+                    lp.constraint(&terms, Cmp::Le, lhs + rng.uniform(0.0, 2.0));
+                }
+            }
+            let (devex, _) = solve_warm_pricing(&lp, None, Pricing::Devex);
+            let (dantzig, _) = solve_warm_pricing(&lp, None, Pricing::Dantzig);
+            match (devex, dantzig) {
+                (
+                    Some(LpOutcome::Optimal { objective: ox, .. }),
+                    Some(LpOutcome::Optimal { objective: oz, .. }),
+                ) => ensure(
+                    (ox - oz).abs() <= 1e-7 * ox.abs().max(1.0),
+                    format!("devex {ox} vs dantzig {oz}"),
+                ),
+                (a, b) => ensure(
+                    matches!((&a, &b), (Some(x), Some(y))
+                        if std::mem::discriminant(x) == std::mem::discriminant(y)),
+                    format!("outcome mismatch: devex {a:?} vs dantzig {b:?}"),
                 ),
             }
         });

@@ -173,6 +173,12 @@ impl Tableau {
 /// pivoting (geometric-mean row/column scaling, 3 passes) and map the
 /// solution back, which keeps the tableau well-conditioned.
 pub fn solve(lp: &Lp) -> LpOutcome {
+    if lp.has_implicit_bounds() {
+        // The dense tableau only understands rows; lower implicit
+        // bounds into explicit rows so it stays a drop-in oracle for
+        // bounded problems (the recursive call sees no bounds).
+        return solve(&lp.materialize_bounds());
+    }
     let (row_scale, col_scale) = equilibrate(lp);
     match solve_scaled(lp, &row_scale, &col_scale) {
         LpOutcome::Optimal { mut x, .. } => {

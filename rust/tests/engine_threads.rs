@@ -1,0 +1,166 @@
+//! Thread-count invariance (ISSUE 7): the parallel fluid re-solve is a
+//! pure wall-clock optimization. Every metric of every run — static,
+//! under every dynamics profile, and across a multi-tenant stream — must
+//! be bit-identical for every `JobConfig::threads` value ≥ 1, because
+//! the solver shards *whole dirty components* with a fixed assignment
+//! (`component_index % threads`) and each component's fill is the same
+//! sequential arithmetic wherever it runs. A run that differs by one ULP
+//! under `--threads 8` is a bug, not noise.
+
+use mrperf::apps::SyntheticApp;
+use mrperf::engine::dynamics::{DynProfile, ScenarioTrace, TraceShape};
+use mrperf::engine::job::JobConfig;
+use mrperf::engine::tenancy::{run_stream, StreamJob};
+use mrperf::engine::{run_job, stream_policy, JobMetrics};
+use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::plan::Plan;
+use mrperf::platform::scale::{generate_kind, ScaleKind};
+use mrperf::platform::Topology;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Bit-exact signature over every metric field, including the fluid
+/// hot-path counters (the incremental solver touches the same components
+/// in the same order whatever the thread count, so even the counters
+/// must match exactly).
+fn sig(m: &JobMetrics) -> String {
+    format!(
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        m.makespan.to_bits(),
+        m.push_end.to_bits(),
+        m.map_end.to_bits(),
+        m.shuffle_end.to_bits(),
+        m.push_bytes.to_bits(),
+        m.shuffle_bytes.to_bits(),
+        m.output_bytes.to_bits(),
+        m.reduce_bytes_replayed.to_bits(),
+        m.shuffle_bytes_delivered.to_bits(),
+        m.push_bytes_repushed.to_bits(),
+        m.push_bytes_delivered.to_bits(),
+        m.n_map_tasks,
+        m.n_reduce_tasks,
+        m.spec_launched,
+        m.spec_won,
+        m.stolen,
+        m.dyn_events,
+        m.failures_injected,
+        m.tasks_requeued,
+        m.reducers_failed,
+        m.reduce_ranges_reassigned,
+        m.sources_refreshed,
+        m.input_records,
+        m.intermediate_records,
+        m.output_records,
+        m.fluid_resolves,
+        m.fluid_resources_touched
+    )
+}
+
+fn setup() -> (Topology, Plan) {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    (topo, plan)
+}
+
+fn config_with_threads(threads: usize) -> JobConfig {
+    let mut c = JobConfig::default();
+    c.threads = threads;
+    c
+}
+
+/// Static run: one job, four thread counts, one signature.
+#[test]
+fn run_job_is_bit_identical_across_thread_counts() {
+    let (topo, plan) = setup();
+    let app = SyntheticApp::new(1.0);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xD11A);
+
+    let baseline = run_job(&topo, &plan, &app, &config_with_threads(1), &inputs);
+    let base_sig = sig(&baseline.metrics);
+    assert!(baseline.metrics.fluid_resolves > 0, "probe must exercise the solver");
+    for &t in &THREAD_COUNTS[1..] {
+        let res = run_job(&topo, &plan, &app, &config_with_threads(t), &inputs);
+        assert_eq!(
+            base_sig,
+            sig(&res.metrics),
+            "threads={t} diverged from the single-thread run"
+        );
+        // Outputs too: the records the reducers emit must be untouched.
+        assert_eq!(baseline.outputs, res.outputs, "threads={t} changed job output");
+    }
+}
+
+/// Every dynamics profile (failures, stragglers, churn, staleness, …)
+/// perturbs the event stream mid-run; the re-solve cascade after each
+/// event must still be thread-count invariant.
+#[test]
+fn dynamics_runs_are_bit_identical_across_thread_counts() {
+    let (topo, plan) = setup();
+    let app = SyntheticApp::new(1.0);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xD11A);
+    let horizon = run_job(&topo, &plan, &app, &config_with_threads(1), &inputs)
+        .metrics
+        .makespan;
+
+    for profile in DynProfile::all() {
+        let trace =
+            ScenarioTrace::generate(profile, 7, &TraceShape::of(&topo, horizon));
+        let run = |threads: usize| {
+            let cfg = config_with_threads(threads).with_dynamics(trace.clone());
+            sig(&run_job(&topo, &plan, &app, &cfg, &inputs).metrics)
+        };
+        let base = run(1);
+        for &t in &THREAD_COUNTS[1..] {
+            assert_eq!(
+                base,
+                run(t),
+                "threads={t} diverged under the {} profile",
+                profile.label()
+            );
+        }
+    }
+}
+
+/// A multi-tenant fair-share stream shares ONE simulator across jobs
+/// (the stream solves with the widest per-job thread request): per-job
+/// metrics, outcome times, and the stream makespan must all match the
+/// single-thread stream bit for bit — including when jobs *disagree*
+/// about the thread count.
+#[test]
+fn tenancy_stream_is_bit_identical_across_thread_counts() {
+    let (topo, plan) = setup();
+    let app = SyntheticApp::new(1.0);
+    let inputs_a = synthetic_inputs(topo.n_sources(), 1 << 13, 0xA11CE);
+    let inputs_b = synthetic_inputs(topo.n_sources(), 1 << 13, 0xB0B);
+    let arr2 = 0.25
+        * run_job(&topo, &plan, &app, &config_with_threads(1), &inputs_a)
+            .metrics
+            .makespan;
+
+    let run = |thread_triple: [usize; 3]| {
+        let cfgs: Vec<JobConfig> =
+            thread_triple.iter().map(|&t| config_with_threads(t)).collect();
+        let jobs = vec![
+            StreamJob::new(0.0, &plan, &app, &cfgs[0], &inputs_a),
+            StreamJob::new(0.0, &plan, &app, &cfgs[1], &inputs_b),
+            StreamJob::new(arr2, &plan, &app, &cfgs[2], &inputs_a),
+        ];
+        let mut policy = stream_policy("fair-share").unwrap();
+        let res = run_stream(&topo, &jobs, policy.as_mut(), None).unwrap();
+        let mut out = vec![format!("{:x}", res.makespan.to_bits())];
+        for o in &res.jobs {
+            out.push(format!(
+                "{:x}/{:x}/{}",
+                o.started.to_bits(),
+                o.finished.to_bits(),
+                sig(o.metrics.as_ref().expect("stream job must complete"))
+            ));
+        }
+        out
+    };
+
+    let base = run([1, 1, 1]);
+    for triple in [[2, 2, 2], [4, 4, 4], [8, 8, 8], [1, 4, 2]] {
+        assert_eq!(base, run(triple), "stream diverged with threads {triple:?}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Bounded-variable revised simplex vs the dense oracle (ISSUE 7).
+//!
+//! The sparse solver now keeps `0 ≤ x ≤ u` (and shifted lower bounds)
+//! implicit; the dense tableau portfolio still materializes every bound
+//! as an explicit row. Agreement between the two on every LP shape the
+//! paper environments actually emit — x-step, y-step, hedged, and
+//! symmetry-aggregated quotient programs, under every barrier config —
+//! is the correctness gate for the bound handling, and a devex-vs-
+//! Dantzig A/B on the same instances pins pricing down as a pure
+//! speed/ordering choice that never changes the optimum.
+
+use mrperf::model::barrier::{Barrier, BarrierConfig};
+use mrperf::model::makespan::AppModel;
+use mrperf::model::plan::Plan;
+use mrperf::optimizer::aggregate::quotient;
+use mrperf::optimizer::hedged::discount_topology;
+use mrperf::optimizer::lp_build::{build_lp_x, build_lp_y, Objective};
+use mrperf::platform::scale::{generate_kind, ScaleKind};
+use mrperf::platform::{build_env, EnvKind, Topology};
+use mrperf::solver::{revised, solve_robust_dense, Lp, LpOutcome, Pricing};
+
+/// Barrier configs that exercise all three single-variable-row →
+/// implicit-bound conversion sites in `lp_build` (the Pipelined branches)
+/// as well as the unconverted shapes.
+fn barrier_configs() -> Vec<BarrierConfig> {
+    let all = [Barrier::Global, Barrier::Local, Barrier::Pipelined];
+    let mut out = vec![BarrierConfig::HADOOP, BarrierConfig::ALL_GLOBAL];
+    for b in all {
+        out.push(BarrierConfig::new(b, Barrier::Pipelined, Barrier::Pipelined));
+    }
+    out
+}
+
+/// Every plan-LP shape a topology emits under a barrier config.
+fn plan_lps(topo: &Topology, cfg: BarrierConfig) -> Vec<(String, Lp)> {
+    let app = AppModel::new(1.0);
+    let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let y0 = vec![1.0 / r as f64; r];
+    let x0 = Plan::uniform(s, m, r).x;
+    let mut out = Vec::new();
+    for obj in [Objective::Makespan, Objective::PushTime, Objective::ShuffleEnd] {
+        let (lpx, _) = build_lp_x(topo, app, cfg, &y0, obj);
+        out.push((format!("{} x-LP {obj:?} {}", topo.name, cfg.label()), lpx));
+    }
+    let (lpy, _) = build_lp_y(topo, app, cfg, &x0, Objective::Makespan);
+    out.push((format!("{} y-LP {}", topo.name, cfg.label()), lpy));
+    out
+}
+
+fn optimal_objective(out: &LpOutcome, label: &str) -> f64 {
+    match out {
+        LpOutcome::Optimal { objective, .. } => *objective,
+        other => panic!("{label}: expected Optimal, got {other:?}"),
+    }
+}
+
+fn assert_close(a: f64, b: f64, label: &str) {
+    let scale = 1.0 + a.abs().max(b.abs());
+    assert!(
+        (a - b).abs() <= 1e-7 * scale,
+        "{label}: bounded revised {a} vs dense oracle {b} (rel diff {})",
+        (a - b).abs() / scale
+    );
+}
+
+/// Check the sparse bounded solver against the dense portfolio on one
+/// LP, then check that both pricing rules land on the same optimum.
+fn check_lp(label: &str, lp: &Lp) {
+    let dense = optimal_objective(&solve_robust_dense(lp), label);
+    let (devex_out, _) = revised::solve_warm_pricing(lp, None, Pricing::Devex);
+    let devex = optimal_objective(
+        &devex_out.unwrap_or_else(|| panic!("{label}: devex solve failed")),
+        label,
+    );
+    assert_close(devex, dense, label);
+    let (dantzig_out, _) = revised::solve_warm_pricing(lp, None, Pricing::Dantzig);
+    let dantzig = optimal_objective(
+        &dantzig_out.unwrap_or_else(|| panic!("{label}: dantzig solve failed")),
+        label,
+    );
+    assert_close(dantzig, dense, &format!("{label} [dantzig]"));
+}
+
+/// Every paper environment × barrier config × objective: the bounded
+/// revised simplex agrees with the dense oracle to 1e-7.
+#[test]
+fn bounded_matches_dense_on_every_paper_env_lp() {
+    for env in EnvKind::all() {
+        let topo = build_env(env);
+        for cfg in barrier_configs() {
+            for (label, lp) in plan_lps(&topo, cfg) {
+                check_lp(&label, &lp);
+            }
+        }
+    }
+}
+
+/// Hedged planning solves the same LP shapes on a capacity-discounted
+/// topology; the bound handling must survive the discount too.
+#[test]
+fn bounded_matches_dense_on_hedged_lps() {
+    for env in EnvKind::all() {
+        let topo = discount_topology(&build_env(env), 0.1);
+        for (label, lp) in plan_lps(&topo, BarrierConfig::HADOOP) {
+            check_lp(&format!("hedged {label}"), &lp);
+        }
+    }
+}
+
+/// Symmetry-aggregated (quotient) instances of generated topologies:
+/// this is the LP shape the alternating optimizer actually solves at
+/// scale, with per-group weights far from 1.
+#[test]
+fn bounded_matches_dense_on_aggregated_quotient_lps() {
+    for kind in
+        [ScaleKind::HierarchicalWan, ScaleKind::FederatedDataCenters, ScaleKind::EdgeHeavy]
+    {
+        let topo = generate_kind(kind, 64, 7);
+        let q = quotient(&topo).expect("64-node generated topologies aggregate");
+        for cfg in [BarrierConfig::HADOOP, BarrierConfig::ALL_GLOBAL] {
+            for (label, lp) in plan_lps(&q.topo, cfg) {
+                check_lp(&format!("quotient {label}"), &lp);
+            }
+        }
+    }
+}

@@ -37,11 +37,13 @@ if [[ "$QUICK" == "0" ]]; then
   "$BIN" run --gen hier-wan:16 --optimizer uniform --locality --dynamics failures:3 >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer e2e-multi --hedge 0.1 --dynamics failures:3 >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer uniform --dynamics staleness:3 >/dev/null
+  "$BIN" run --gen hier-wan:16 --optimizer uniform --threads 4 >/dev/null
   "$BIN" experiment churn --gen hier-wan:16 --dynamics burst:7 >/dev/null
   "$BIN" experiment churn --profiles all --gen hier-wan:16 --dynamics failures:7 --hedge 0.05 >/dev/null
   "$BIN" experiment adversary --gen hier-wan:16 --seed 7 --budget 2 --restarts 2 >/dev/null
   "$BIN" experiment tenancy --gen hier-wan:16 --jobs 4 --loads 1 --policies fifo,fair-share,deadline >/dev/null
   "$BIN" experiment tenancy --gen hier-wan:16 --jobs 3 --arrivals trace:0,0,0 --policies deadline --slack 2 >/dev/null
+  "$BIN" experiment tenancy --gen hier-wan:16 --jobs 4 --loads 1 --policies fair-share --threads 4 >/dev/null
   # Clean-error probes must fail (a bare `!` pipeline is exempt from
   # set -e, so check the status explicitly).
   if "$BIN" plan --gen hier-wan:3 >/dev/null 2>&1; then
@@ -98,6 +100,14 @@ if [[ "$QUICK" == "0" ]]; then
   fi
   if "$BIN" experiment tenancy --gen hier-wan:16 --jobs 2 --loads 0 >/dev/null 2>&1; then
     echo "FAIL: tenancy --loads 0 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" run --gen hier-wan:16 --optimizer uniform --threads 0 >/dev/null 2>&1; then
+    echo "FAIL: run --threads 0 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" experiment tenancy --gen hier-wan:16 --jobs 2 --threads 0 >/dev/null 2>&1; then
+    echo "FAIL: tenancy --threads 0 should be rejected" >&2
     exit 1
   fi
   echo "smoke OK"
