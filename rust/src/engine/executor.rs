@@ -57,7 +57,7 @@
 //! byte counts, skew and record conservation are genuine — while time is
 //! virtual (charged from the topology's bandwidths/compute rates).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::dynamics::{DynEvent, ScenarioTrace};
 use super::events::{EngineEvent, EventQueue, TaskId};
@@ -280,7 +280,10 @@ pub(crate) struct Executor<'a> {
     map_slots: usize,
     reduce_slots: usize,
     /// Fluid completion → engine event, drained through `queue`.
-    pending: HashMap<ActivityId, EngineEvent>,
+    /// A BTreeMap so every traversal is in ActivityId order by
+    /// construction — iteration order must never leak into simulation
+    /// behavior (detlint D001).
+    pending: BTreeMap<ActivityId, EngineEvent>,
     queue: EventQueue<EngineEvent>,
     scheduler: Box<dyn Scheduler>,
     // resources
@@ -404,7 +407,7 @@ impl<'a> Executor<'a> {
             tag,
             map_slots,
             reduce_slots,
-            pending: HashMap::new(),
+            pending: BTreeMap::new(),
             queue: EventQueue::new(),
             scheduler: scheduler::for_config(config),
             sm_link,
@@ -490,8 +493,10 @@ impl<'a> Executor<'a> {
             let n_splits = ((vol + self.config.split_size - 1) / self.config.split_size).max(1);
             // Round-robin records of each part across the splits keeps
             // every split reading proportionally from every source.
-            let mut split_parts: Vec<HashMap<usize, Vec<Record>>> =
-                vec![HashMap::new(); n_splits];
+            // Keyed by source in a BTreeMap so the per-split part list
+            // comes out in source order with no explicit sort.
+            let mut split_parts: Vec<BTreeMap<usize, Vec<Record>>> =
+                vec![BTreeMap::new(); n_splits];
             for (src, recs) in &per_mapper_parts[j] {
                 for (idx, rec) in recs.iter().enumerate() {
                     split_parts[idx % n_splits]
@@ -504,8 +509,7 @@ impl<'a> Executor<'a> {
                 if parts_map.is_empty() {
                     continue;
                 }
-                let mut parts: Vec<(usize, Vec<Record>)> = parts_map.into_iter().collect();
-                parts.sort_by_key(|(src, _)| *src);
+                let parts: Vec<(usize, Vec<Record>)> = parts_map.into_iter().collect();
                 let bytes: usize = parts.iter().map(|(_, r)| batch_size(r)).sum();
                 self.tasks.push(MapTask {
                     mapper: j,
@@ -596,6 +600,9 @@ impl<'a> Executor<'a> {
         self.push_xfers[id].state = XferState::InFlight;
         self.push_xfers[id].activity = Some(a);
         if self.push_xfers[id].sent_once {
+            // Exact: byte counts are integers < 2^53 carried in f64, so
+            // this accumulation is exact — no rounding drift across
+            // re-pushes.
             self.metrics.push_bytes_repushed += bytes;
         }
         self.push_xfers[id].sent_once = true;
@@ -914,6 +921,9 @@ impl<'a> Executor<'a> {
         self.pending.insert(a, EngineEvent::ShuffleArrived { xfer: id });
         self.xfers[id].state = XferState::InFlight;
         if self.xfers[id].sent_once {
+            // Exact: byte counts are integers < 2^53 carried in f64, so
+            // this accumulation is exact — no rounding drift across
+            // replays.
             self.metrics.reduce_bytes_replayed += bytes;
         }
         self.xfers[id].sent_once = true;
@@ -1186,10 +1196,10 @@ impl<'a> Executor<'a> {
         }
         self.node_up[node] = false;
         self.metrics.failures_injected += 1;
-        // Collect doomed in-flight activities in a deterministic order
-        // (`pending` is a HashMap; iteration order must not leak into
-        // simulation behavior).
-        let mut doomed: Vec<(ActivityId, EngineEvent)> = self
+        // Collect doomed in-flight activities. `pending` is a BTreeMap,
+        // so this traversal is already in ascending ActivityId order —
+        // deterministic by construction.
+        let doomed: Vec<(ActivityId, EngineEvent)> = self
             .pending
             .iter()
             .filter(|&(_, &ev)| match ev {
@@ -1206,7 +1216,6 @@ impl<'a> Executor<'a> {
             })
             .map(|(&a, &ev)| (a, ev))
             .collect();
-        doomed.sort_by_key(|&(a, _)| a);
         for (aid, ev) in doomed {
             sim.cancel(aid);
             self.pending.remove(&aid);
@@ -1321,10 +1330,10 @@ impl<'a> Executor<'a> {
         self.metrics.reducers_failed += 1;
         let r = self.topo.n_reducers();
 
-        // 1. Cancel doomed in-flight activities in sorted ActivityId
-        //    order (`pending` is a HashMap; iteration order must not leak
-        //    into simulation behavior).
-        let mut doomed: Vec<(ActivityId, EngineEvent)> = self
+        // 1. Cancel doomed in-flight activities. `pending` is a BTreeMap,
+        //    so this traversal is already in ascending ActivityId order —
+        //    deterministic by construction.
+        let doomed: Vec<(ActivityId, EngineEvent)> = self
             .pending
             .iter()
             .filter(|&(_, &ev)| match ev {
@@ -1339,7 +1348,6 @@ impl<'a> Executor<'a> {
             })
             .map(|(&a, &ev)| (a, ev))
             .collect();
-        doomed.sort_by_key(|&(a, _)| a);
         for (aid, ev) in doomed {
             sim.cancel(aid);
             self.pending.remove(&aid);
@@ -1474,6 +1482,8 @@ impl<'a> Executor<'a> {
                 let task = self.push_xfers[xfer].task;
                 self.push_xfers[xfer].state = XferState::Delivered;
                 self.push_xfers[xfer].activity = None;
+                // Exact: byte counts are integers < 2^53 carried in f64;
+                // at job end push_bytes_delivered == push_bytes exactly.
                 self.metrics.push_bytes_delivered += self.push_xfers[xfer].bytes;
                 self.push_parts_left -= 1;
                 self.metrics.push_end = sim.now();
@@ -1521,6 +1531,8 @@ impl<'a> Executor<'a> {
             EngineEvent::ShuffleArrived { xfer } => {
                 let range = self.xfers[xfer].range;
                 self.xfers[xfer].state = XferState::Delivered;
+                // Exact: byte counts are integers < 2^53 carried in f64;
+                // shuffle credits sum to shuffle_bytes exactly at job end.
                 self.metrics.shuffle_bytes_delivered += self.xfers[xfer].bytes;
                 self.shuffle_xfers_left[range] -= 1;
                 self.metrics.shuffle_end = sim.now();
@@ -1597,6 +1609,7 @@ mod tests {
     use super::*;
     use crate::model::barrier::BarrierConfig;
     use crate::platform::topology::example_1_3;
+    use std::collections::HashMap;
     use crate::platform::MB;
 
     /// Identity app: passes records through unchanged (α = 1).

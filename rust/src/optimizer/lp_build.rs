@@ -305,11 +305,12 @@ pub fn build_lp_y(
             }
             Barrier::Local => {
                 let mut idx: Vec<usize> = (0..m).collect();
+                // `total_cmp` on both keys: a NaN coefficient (NaN/zero
+                // bandwidth entry) must not panic the Pareto sweep.
                 idx.sort_by(|&a, &b| {
                     coef(b)
-                        .partial_cmp(&coef(a))
-                        .unwrap()
-                        .then(map_end[b].partial_cmp(&map_end[a]).unwrap())
+                        .total_cmp(&coef(a))
+                        .then(map_end[b].total_cmp(&map_end[a]))
                 });
                 let mut best_rhs = f64::NEG_INFINITY;
                 for &j in &idx {
@@ -456,6 +457,25 @@ mod tests {
             let rel = (ms - obj).abs() / obj.max(1.0);
             assert!(rel < 1e-6, "cfg {cfg:?}: model {ms} vs LP {obj}");
         }
+    }
+
+    /// Regression (NaN-unsafe sort): the local-barrier Pareto sweep
+    /// ranked mappers by shuffle coefficient with
+    /// `partial_cmp(..).unwrap()`, which panics when a `b_mr` entry is
+    /// NaN (dead-link probe / missing telemetry turns `loads/b` NaN).
+    /// `f64::total_cmp` keeps the sweep deterministic and panic-free —
+    /// the LP still builds and the NaN row is simply ranked first.
+    /// Fails on the pre-fix code.
+    #[test]
+    fn lp_y_local_barrier_survives_nan_bandwidth() {
+        let mut t = topo();
+        t.b_mr[(0, 0)] = f64::NAN;
+        let app = AppModel::new(10.0);
+        let cfg = BarrierConfig::new(Barrier::Global, Barrier::Local, Barrier::Global);
+        let x = Plan::local_push(&t).x;
+        let (lp, vars) = build_lp_y(&t, app, cfg, &x, Objective::Makespan);
+        assert_eq!(vars.y.len(), t.n_reducers());
+        assert!(lp.n_rows() > 0);
     }
 
     /// Myopic push LP: matches the analytic waterfilling optimum

@@ -92,13 +92,12 @@ impl Topology {
     /// Index of the mapper with the fastest link from source `i`
     /// (Hadoop's locality heuristic: push to the most local mapper).
     pub fn most_local_mapper(&self, i: usize) -> usize {
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN bandwidth
+        // (dead-link probe) must not panic the heuristic. NaN totally
+        // orders after +inf, so it wins max_by — deterministic, and the
+        // degenerate link surfaces downstream rather than aborting here.
         (0..self.n_mappers())
-            .max_by(|&a, &b| {
-                self.b_sm
-                    .get(i, a)
-                    .partial_cmp(&self.b_sm.get(i, b))
-                    .unwrap()
-            })
+            .max_by(|&a, &b| self.b_sm.get(i, a).total_cmp(&self.b_sm.get(i, b)))
             .expect("topology has no mappers")
     }
 
@@ -274,6 +273,33 @@ mod tests {
         let t = example_1_3(100.0 * MB, 10.0 * MB, 100.0 * MB);
         assert_eq!(t.most_local_mapper(0), 0);
         assert_eq!(t.most_local_mapper(1), 1);
+    }
+
+    /// Regression (NaN-unsafe sort): the locality heuristic ranked
+    /// links with `partial_cmp(..).unwrap()`, which panics on a NaN
+    /// bandwidth entry (dead-link probe / missing telemetry).
+    /// `f64::total_cmp` ranks NaN after +inf, so the call stays
+    /// deterministic and panic-free. Fails on the pre-fix code.
+    #[test]
+    fn most_local_mapper_survives_nan_bandwidth() {
+        let mut b_sm = Mat::filled(1, 3, 10.0 * MB);
+        b_sm[(0, 1)] = f64::NAN;
+        let t = Topology {
+            name: "degenerate".into(),
+            clusters: vec![Cluster { id: 0, name: "c0".into(), continent: Continent::US }],
+            source_cluster: vec![0],
+            mapper_cluster: vec![0; 3],
+            reducer_cluster: vec![0],
+            d: vec![1.0 * MB],
+            c_map: vec![10.0 * MB; 3],
+            c_red: vec![10.0 * MB],
+            b_sm,
+            b_mr: Mat::filled(3, 1, 10.0 * MB),
+        };
+        // NaN totally orders above every finite bandwidth, so the NaN
+        // link wins — the key property is a deterministic index, not a
+        // panic.
+        assert_eq!(t.most_local_mapper(0), 1);
     }
 
     #[test]

@@ -211,13 +211,7 @@ impl ArtifactPlanner {
             Tensor::vec(sel),
         ])?;
         let scores = &eval[0]; // (P, 5)
-        let best = (0..p)
-            .min_by(|&a, &b| {
-                scores[a * 5 + 4]
-                    .partial_cmp(&scores[b * 5 + 4])
-                    .unwrap()
-            })
-            .unwrap();
+        let best = best_start(&scores.data, p);
 
         // Decode the winning start's logits into a Plan.
         let mut logits_x = Mat::zeros(s, m);
@@ -233,12 +227,40 @@ impl ArtifactPlanner {
     }
 }
 
+/// Index of the start whose hard-model makespan (column 4 of the
+/// `(P, 5)` score matrix) is smallest. `f32::total_cmp` so a NaN score
+/// — e.g. from a degenerate topology propagating through the evaluator
+/// — totally orders after every finite value instead of panicking.
+fn best_start(scores: &[f32], p: usize) -> usize {
+    (0..p)
+        .min_by(|&a, &b| scores[a * 5 + 4].total_cmp(&scores[b * 5 + 4]))
+        .expect("planner evaluated zero starts")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::makespan::makespan;
     use crate::platform::topology::example_1_3;
     use crate::platform::MB;
+
+    /// Regression (NaN-unsafe sort): picking the best start used
+    /// `partial_cmp(..).unwrap()` over hard-model scores, which panics
+    /// when an evaluator score is NaN (degenerate bandwidth propagates
+    /// through the softmax/cost graph). `f32::total_cmp` ranks NaN
+    /// after +inf, so the finite starts still win deterministically.
+    /// Fails on the pre-fix code.
+    #[test]
+    fn best_start_survives_nan_scores() {
+        let scores = vec![
+            0.0, 0.0, 0.0, 0.0, f32::NAN, // start 0: NaN makespan
+            0.0, 0.0, 0.0, 0.0, 3.5, // start 1: best finite
+            0.0, 0.0, 0.0, 0.0, 7.0, // start 2: worse finite
+        ];
+        assert_eq!(best_start(&scores, 3), 1);
+        // All-NaN still resolves (first index) rather than panicking.
+        assert_eq!(best_start(&[f32::NAN; 5], 1), 0);
+    }
 
     fn artifacts_available() -> bool {
         artifacts_dir()

@@ -1,0 +1,1015 @@
+//! detlint — determinism & invariant static analysis for the mrperf tree.
+//!
+//! The engine's headline guarantees (bit-identical replay per seed,
+//! zero-event neutrality, thread-count-invariant metrics, exact byte
+//! conservation) rest on coding rules that no compiler checks. detlint
+//! machine-checks them at CI time, with no toolchain dependency beyond
+//! the analyzer itself: the pass is line/token-based over a
+//! comment/string-masked view of each source file — no `syn`, no
+//! crates.io, mirroring the library's zero-dependency discipline.
+//!
+//! Rule catalog (see `docs/LINTS.md` for the invariant each protects):
+//!
+//! * **D001** — iteration over `HashMap`/`HashSet` (`.iter()`, `.keys()`,
+//!   `.values()`, `.drain()`, `.into_iter()`, `for … in &map`) inside
+//!   `engine/`, `optimizer/` or `experiments/`, unless the result is
+//!   explicitly sorted nearby or the site carries an allow annotation.
+//! * **D002** — `partial_cmp` inside a `sort_by` / `sort_unstable_by` /
+//!   `max_by` / `min_by` / `binary_search_by` comparator (anywhere);
+//!   NaN-safe ordering requires `total_cmp`.
+//! * **D003** — wall-clock time (`Instant::now`, `SystemTime`,
+//!   `std::time`) inside `engine/`, `model/`, `solver/`, `optimizer/`;
+//!   bench files (path containing `bench`) are allowlisted.
+//! * **D004** — ambient randomness (`thread_rng`, `rand::random`,
+//!   `RandomState`) anywhere.
+//! * **D005** — thread creation (`std::thread`, `thread::spawn`,
+//!   `.spawn(`) anywhere except `engine/fluid.rs` (the sharded re-solve).
+//! * **D006** — `+=` into an exact-conservation counter (a field whose
+//!   name ends in `_bytes_delivered`, `_repushed` or `_replayed`)
+//!   without an adjacent comment containing `exact` within the three
+//!   preceding lines.
+//!
+//! Annotations: `// detlint: allow(D001) <reason>` suppresses a finding
+//! on the same line, or — when the comment stands on its own line — on
+//! the next code line. `// detlint: allow-file(D001) <reason>`
+//! suppresses a rule for the whole file. A missing or empty reason is
+//! itself an error (rule id `DLINT`), and malformed annotations never
+//! suppress anything.
+//!
+//! `scripts/detlint.py` is a line-for-line behavioral mirror used by
+//! toolchain-less CI containers; `tests/fixtures/` pins both
+//! implementations to the same findings.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::Path;
+
+/// Rule ids detlint can emit (besides the meta-rule `DLINT`).
+pub const RULE_IDS: [&str; 6] = ["D001", "D002", "D003", "D004", "D005", "D006"];
+
+/// How many lines after a flagged hash iteration an explicit `.sort`
+/// (or `BTree` re-collection) counts as "the result flows through a
+/// sort" (the collect-then-sort idiom).
+pub const D001_SORT_WINDOW: usize = 8;
+
+/// How many lines above a D006 credit an `exact` comment counts as
+/// adjacent.
+pub const D006_COMMENT_WINDOW: usize = 3;
+
+/// One diagnostic. `file` is the display path exactly as reported.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+/// Aggregate result of an analysis run.
+#[derive(Debug, Default)]
+pub struct Analysis {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Unsuppressed findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by a well-formed allow annotation.
+    pub suppressed: usize,
+}
+
+/// A source file split into a comment-stream and a code-stream, line by
+/// line. String/char-literal contents are blanked out of the code
+/// stream (so tokens inside literals never match) and comments are
+/// blanked too; the comment stream holds only comment text.
+#[derive(Debug)]
+pub struct Masked {
+    pub code: Vec<String>,
+    pub comment: Vec<String>,
+}
+
+fn is_word_b(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Mask comments and string/char literals. Handles line comments,
+/// nested block comments, `"…"` (with escapes), `r"…"`/`r#"…"#` raw
+/// strings, byte strings, char literals and lifetimes.
+pub fn mask_source(text: &str) -> Masked {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(u32),
+        Chr,
+    }
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(n);
+    let mut com = String::with_capacity(n);
+    let mut st = St::Code;
+    let mut i = 0usize;
+    // Push `k` placeholder spaces to one stream and real chars to none.
+    let blank = |s: &mut String, t: &mut String, k: usize| {
+        for _ in 0..k {
+            s.push(' ');
+            t.push(' ');
+        }
+    };
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            code.push('\n');
+            com.push('\n');
+            if st == St::Line {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                let prev_word = i > 0 && (chars[i - 1].is_ascii_alphanumeric() || chars[i - 1] == '_');
+                if c == '/' && next == Some('/') {
+                    st = St::Line;
+                    code.push(' ');
+                    code.push(' ');
+                    com.push('/');
+                    com.push('/');
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    code.push(' ');
+                    code.push(' ');
+                    com.push('/');
+                    com.push('*');
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    blank(&mut code, &mut com, 1);
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_word {
+                    // r"…", r#"…"#, br"…", b"…", b'…'
+                    let (mut j, is_b) = if c == 'b' { (i + 1, true) } else { (i, false) };
+                    if is_b && chars.get(j).copied() == Some('\'') {
+                        // byte char literal b'x'
+                        blank(&mut code, &mut com, 2);
+                        st = St::Chr;
+                        i = j + 1;
+                        continue;
+                    }
+                    if is_b && chars.get(j).copied() == Some('"') {
+                        blank(&mut code, &mut com, 2);
+                        st = St::Str;
+                        i = j + 1;
+                        continue;
+                    }
+                    if is_b && chars.get(j).copied() != Some('r') {
+                        code.push(c);
+                        com.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                    if is_b {
+                        j += 1; // past the 'r'
+                    } else {
+                        j = i + 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j).copied() == Some('#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j).copied() == Some('"') {
+                        blank(&mut code, &mut com, j + 1 - i);
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        com.push(' ');
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if next == Some('\\') {
+                        blank(&mut code, &mut com, 1);
+                        st = St::Chr;
+                        i += 1;
+                    } else if chars.get(i + 2).copied() == Some('\'') && next != Some('\'') {
+                        blank(&mut code, &mut com, 3);
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        com.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    com.push(' ');
+                    i += 1;
+                }
+            }
+            St::Line => {
+                com.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::Block(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::Block(d + 1);
+                    com.push('/');
+                    com.push('*');
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    com.push('*');
+                    com.push('/');
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else {
+                    com.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && chars.get(i + 1).map_or(false, |&x| x != '\n') {
+                    blank(&mut code, &mut com, 2);
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Code;
+                    blank(&mut code, &mut com, 1);
+                    i += 1;
+                } else {
+                    blank(&mut code, &mut com, 1);
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..h as usize {
+                        if chars.get(i + 1 + k).copied() != Some('#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        blank(&mut code, &mut com, 1 + h as usize);
+                        st = St::Code;
+                        i += 1 + h as usize;
+                    } else {
+                        blank(&mut code, &mut com, 1);
+                        i += 1;
+                    }
+                } else {
+                    blank(&mut code, &mut com, 1);
+                    i += 1;
+                }
+            }
+            St::Chr => {
+                if c == '\\' && chars.get(i + 1).map_or(false, |&x| x != '\n') {
+                    blank(&mut code, &mut com, 2);
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Code;
+                    blank(&mut code, &mut com, 1);
+                    i += 1;
+                } else {
+                    blank(&mut code, &mut com, 1);
+                    i += 1;
+                }
+            }
+        }
+    }
+    Masked {
+        code: code.split('\n').map(|s| s.to_string()).collect(),
+        comment: com.split('\n').map(|s| s.to_string()).collect(),
+    }
+}
+
+/// Byte offsets of word-bounded occurrences of `needle` in `hay`.
+/// Boundaries are only enforced on needle edges that are word chars, so
+/// needles like `.spawn(` or `std::time` behave as expected.
+pub fn token_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let hb = hay.as_bytes();
+    let nb = needle.as_bytes();
+    let mut out = Vec::new();
+    if nb.is_empty() || hb.len() < nb.len() {
+        return out;
+    }
+    let first_w = is_word_b(nb[0]);
+    let last_w = is_word_b(nb[nb.len() - 1]);
+    let mut i = 0usize;
+    while i + nb.len() <= hb.len() {
+        if &hb[i..i + nb.len()] == nb {
+            let pre_ok = !first_w || i == 0 || !is_word_b(hb[i - 1]);
+            let post_ok =
+                !last_w || i + nb.len() == hb.len() || !is_word_b(hb[i + nb.len()]);
+            if pre_ok && post_ok {
+                out.push(i);
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Per-file allow state parsed from annotations.
+#[derive(Debug, Default)]
+struct Allows {
+    file: BTreeSet<String>,
+    line: BTreeMap<usize, BTreeSet<String>>,
+}
+
+/// Parse `detlint:` annotations out of the comment stream. Returns the
+/// allow tables plus DLINT findings for malformed annotations.
+fn parse_annotations(rel: &str, m: &Masked, findings: &mut Vec<Finding>) -> Allows {
+    let mut allows = Allows::default();
+    for (idx, comment) in m.comment.iter().enumerate() {
+        let lineno = idx + 1;
+        let pos = match comment.find("detlint:") {
+            Some(p) => p,
+            None => continue,
+        };
+        let rest = comment[pos + "detlint:".len()..].trim_start();
+        let (file_scope, body) = if let Some(b) = rest.strip_prefix("allow-file(") {
+            (true, b)
+        } else if let Some(b) = rest.strip_prefix("allow(") {
+            (false, b)
+        } else {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "DLINT".to_string(),
+                message: format!(
+                    "malformed detlint annotation (expected `allow(RULE) reason` \
+                     or `allow-file(RULE) reason`): `{}`",
+                    rest.trim()
+                ),
+            });
+            continue;
+        };
+        let close = match body.find(')') {
+            Some(c) => c,
+            None => {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: "DLINT".to_string(),
+                    message: "malformed detlint annotation: missing `)`".to_string(),
+                });
+                continue;
+            }
+        };
+        let rule = body[..close].trim().to_string();
+        if !RULE_IDS.contains(&rule.as_str()) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "DLINT".to_string(),
+                message: format!("unknown rule `{rule}` in detlint annotation"),
+            });
+            continue;
+        }
+        let reason = body[close + 1..].trim();
+        if reason.is_empty() {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "DLINT".to_string(),
+                message: format!(
+                    "detlint allow({rule}) annotation requires a non-empty reason"
+                ),
+            });
+            continue;
+        }
+        if file_scope {
+            allows.file.insert(rule);
+        } else {
+            // Same-line annotation if the line has code; otherwise the
+            // annotation targets the next non-blank code line.
+            let mut target = lineno;
+            if m.code[idx].trim().is_empty() {
+                for (j, code) in m.code.iter().enumerate().skip(idx + 1) {
+                    if !code.trim().is_empty() {
+                        target = j + 1;
+                        break;
+                    }
+                }
+            }
+            allows.line.entry(target).or_default().insert(rule);
+        }
+    }
+    allows
+}
+
+/// Path components of a `/`-separated relative path.
+fn comps(rel: &str) -> Vec<&str> {
+    rel.split('/').filter(|c| !c.is_empty()).collect()
+}
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    comps(rel).iter().any(|c| dirs.contains(c))
+}
+
+fn is_fluid_rs(rel: &str) -> bool {
+    let c = comps(rel);
+    c.len() >= 2 && c[c.len() - 2] == "engine" && c[c.len() - 1] == "fluid.rs"
+}
+
+/// Registered hash-container binding names: `name: …HashMap<…>` /
+/// `name: …HashSet<…>` (let bindings, struct fields, fn params) and
+/// `name = HashMap::new()`-style initializers.
+fn hash_names(m: &Masked) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line in &m.code {
+        for needle in ["HashMap", "HashSet"] {
+            for p in token_positions(line, needle) {
+                if let Some(name) = binder_before(line, p) {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Walk backwards from a type-position `p` over type-ish characters to
+/// the binding `:` (or initializer `=`), then extract the identifier.
+fn binder_before(line: &str, p: usize) -> Option<String> {
+    let b = line.as_bytes();
+    let mut q = p as isize - 1;
+    while q >= 0 {
+        let ch = b[q as usize];
+        if ch == b':' {
+            if q > 0 && b[q as usize - 1] == b':' {
+                q -= 2; // `::` path segment — keep walking left
+                continue;
+            }
+            return ident_ending_at(line, q as usize);
+        } else if ch == b'=' {
+            // Reject `==`, `<=`, `=>` partners.
+            if q > 0 && matches!(b[q as usize - 1], b'=' | b'<' | b'>' | b'!') {
+                return None;
+            }
+            return ident_ending_at(line, q as usize);
+        } else if is_word_b(ch)
+            || matches!(ch, b'<' | b'>' | b',' | b'&' | b'\'' | b' ' | b'\t' | b'[' | b']')
+        {
+            q -= 1;
+        } else {
+            return None;
+        }
+    }
+    None
+}
+
+/// Identifier whose last char sits immediately (modulo spaces) before
+/// byte offset `end` in `line`.
+fn ident_ending_at(line: &str, end: usize) -> Option<String> {
+    let b = line.as_bytes();
+    let mut e = end as isize - 1;
+    while e >= 0 && (b[e as usize] == b' ' || b[e as usize] == b'\t') {
+        e -= 1;
+    }
+    let stop = e;
+    while e >= 0 && is_word_b(b[e as usize]) {
+        e -= 1;
+    }
+    if e == stop {
+        return None;
+    }
+    let name = &line[(e + 1) as usize..=stop as usize];
+    if name.is_empty() || name.as_bytes()[0].is_ascii_digit() {
+        return None;
+    }
+    match name {
+        "mut" | "let" | "pub" | "ref" => None,
+        _ => Some(name.to_string()),
+    }
+}
+
+const D001_METHODS: [&str; 7] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".drain(",
+];
+
+/// D001: hash-container iteration in order-sensitive modules.
+fn rule_d001(rel: &str, m: &Masked, out: &mut Vec<Finding>) {
+    if !in_dirs(rel, &["engine", "optimizer", "experiments"]) {
+        return;
+    }
+    let names = hash_names(m);
+    if names.is_empty() {
+        return;
+    }
+    for (idx, line) in m.code.iter().enumerate() {
+        for name in &names {
+            let mut hit = false;
+            for p in token_positions(line, name) {
+                let after = &line[p + name.len()..];
+                if D001_METHODS.iter().any(|mth| after.starts_with(mth)) {
+                    hit = true;
+                } else if after.trim().is_empty() {
+                    // Multiline method chain: `self.name` at end of line,
+                    // `.iter()` on the next code line.
+                    if let Some(next) = m.code[idx + 1..].iter().find(|l| !l.trim().is_empty())
+                    {
+                        let nt = next.trim_start();
+                        if D001_METHODS.iter().any(|mth| nt.starts_with(mth)) {
+                            hit = true;
+                        }
+                    }
+                }
+            }
+            if !hit {
+                // `for … in &name` / `for … in name` (move iteration).
+                for p in token_positions(line, "in") {
+                    let mut rest = line[p + 2..].trim_start();
+                    rest = rest.strip_prefix('&').unwrap_or(rest);
+                    rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+                    rest = rest.strip_prefix("self.").unwrap_or(rest);
+                    if let Some(tail) = rest.strip_prefix(name.as_str()) {
+                        let nb = tail.as_bytes().first().copied();
+                        // A following `.` or `(` means a method chain or
+                        // call — handled (or not a direct map iteration).
+                        if nb.map_or(true, |c| !is_word_b(c) && c != b'.' && c != b'(') {
+                            hit = true;
+                        }
+                    }
+                }
+            }
+            if hit && !sorted_nearby(m, idx) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: "D001".to_string(),
+                    message: format!(
+                        "iteration over hash container `{name}` may leak nondeterministic \
+                         order; sort the result, use BTreeMap/BTreeSet, or annotate \
+                         `// detlint: allow(D001) <reason>`"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// The collect-then-sort escape: an explicit sort (or BTree
+/// re-collection) within [`D001_SORT_WINDOW`] lines of the iteration.
+fn sorted_nearby(m: &Masked, idx: usize) -> bool {
+    let end = (idx + D001_SORT_WINDOW + 1).min(m.code.len());
+    m.code[idx..end]
+        .iter()
+        .any(|l| l.contains(".sort") || l.contains("BTree"))
+}
+
+const D002_OPENERS: [&str; 5] = [
+    "sort_by",
+    "sort_unstable_by",
+    "max_by",
+    "min_by",
+    "binary_search_by",
+];
+
+/// D002: `partial_cmp` inside a comparator-call's parentheses.
+fn rule_d002(rel: &str, m: &Masked, out: &mut Vec<Finding>) {
+    let all = m.code.join("\n");
+    // Byte offset of each line start, for offset → line mapping.
+    let mut starts = vec![0usize];
+    for (i, b) in all.bytes().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    let line_of = |off: usize| match starts.binary_search(&off) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    };
+    let bytes = all.as_bytes();
+    for opener in D002_OPENERS {
+        for p in token_positions(&all, opener) {
+            // Find the call's `(`, allowing whitespace (incl. newlines).
+            let mut j = p + opener.len();
+            while j < bytes.len() && (bytes[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if j >= bytes.len() || bytes[j] != b'(' {
+                continue;
+            }
+            // Walk to the matching `)` (strings are already blanked).
+            let start = j;
+            let mut depth = 0i32;
+            while j < bytes.len() {
+                match bytes[j] {
+                    b'(' => depth += 1,
+                    b')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let span = &all[start..j.min(bytes.len())];
+            for q in token_positions(span, "partial_cmp") {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: line_of(start + q),
+                    rule: "D002".to_string(),
+                    message: format!(
+                        "`partial_cmp` inside `{opener}` comparator; use `total_cmp` \
+                         for a NaN-safe total order"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// D003: wall-clock time sources in the deterministic core.
+fn rule_d003(rel: &str, m: &Masked, out: &mut Vec<Finding>) {
+    if !in_dirs(rel, &["engine", "model", "solver", "optimizer"]) {
+        return;
+    }
+    // Bench/timing files measure wall-clock by design.
+    let c = comps(rel);
+    if c.iter().any(|s| *s == "benches") || c.last().map_or(false, |f| f.contains("bench")) {
+        return;
+    }
+    for (idx, line) in m.code.iter().enumerate() {
+        for token in ["Instant::now", "SystemTime", "std::time"] {
+            if !token_positions(line, token).is_empty() {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: "D003".to_string(),
+                    message: format!(
+                        "wall-clock time source `{token}` in the deterministic core; \
+                         use virtual time, or move timing to bench/experiment code"
+                    ),
+                });
+                break; // one report per line
+            }
+        }
+    }
+}
+
+/// D004: ambient (unseeded) randomness anywhere.
+fn rule_d004(rel: &str, m: &Masked, out: &mut Vec<Finding>) {
+    for (idx, line) in m.code.iter().enumerate() {
+        for token in ["thread_rng", "rand::random", "RandomState"] {
+            if !token_positions(line, token).is_empty() {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: "D004".to_string(),
+                    message: format!(
+                        "ambient randomness `{token}`; every draw must flow from an \
+                         explicit seed through util::rng::Pcg64"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// D005: thread creation outside the sharded fluid re-solve.
+fn rule_d005(rel: &str, m: &Masked, out: &mut Vec<Finding>) {
+    if is_fluid_rs(rel) {
+        return;
+    }
+    for (idx, line) in m.code.iter().enumerate() {
+        for token in ["std::thread", "thread::spawn", ".spawn("] {
+            if !token_positions(line, token).is_empty() {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: "D005".to_string(),
+                    message: format!(
+                        "thread creation `{token}` outside engine/fluid.rs; \
+                         parallelism is confined to the sharded fluid re-solve"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+const D006_SUFFIXES: [&str; 3] = ["_bytes_delivered", "_repushed", "_replayed"];
+
+/// D006: `+=` into an exact-conservation counter without an adjacent
+/// `exact` comment.
+fn rule_d006(rel: &str, m: &Masked, out: &mut Vec<Finding>) {
+    for (idx, line) in m.code.iter().enumerate() {
+        for p in token_positions(line, "+=") {
+            let b = line.as_bytes();
+            let mut e = p as isize - 1;
+            while e >= 0 && (b[e as usize] == b' ' || b[e as usize] == b'\t') {
+                e -= 1;
+            }
+            let stop = e;
+            while e >= 0 && is_word_b(b[e as usize]) {
+                e -= 1;
+            }
+            if e == stop {
+                continue;
+            }
+            let name = &line[(e + 1) as usize..=stop as usize];
+            if !D006_SUFFIXES.iter().any(|s| name.ends_with(s)) {
+                continue;
+            }
+            let lo = idx.saturating_sub(D006_COMMENT_WINDOW);
+            let has_exact = m.comment[lo..=idx]
+                .iter()
+                .any(|c| c.to_ascii_lowercase().contains("exact"));
+            if !has_exact {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: "D006".to_string(),
+                    message: format!(
+                        "`+=` into exact-conservation counter `{name}` without an \
+                         adjacent `exact` comment; byte credits must stay exact \
+                         (integers carried in f64)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Analyze one file's source. `rel` is the path used both for display
+/// and for rule scoping (its components decide D001/D003/D005 scope).
+pub fn analyze_source(rel: &str, text: &str, analysis: &mut Analysis) {
+    let m = mask_source(text);
+    let mut raw: Vec<Finding> = Vec::new();
+    let allows = parse_annotations(rel, &m, &mut raw);
+    // DLINT findings are never suppressible; collect them apart.
+    let mut findings: Vec<Finding> = raw;
+    let mut candidates: Vec<Finding> = Vec::new();
+    rule_d001(rel, &m, &mut candidates);
+    rule_d002(rel, &m, &mut candidates);
+    rule_d003(rel, &m, &mut candidates);
+    rule_d004(rel, &m, &mut candidates);
+    rule_d005(rel, &m, &mut candidates);
+    rule_d006(rel, &m, &mut candidates);
+    for f in candidates {
+        let allowed = allows.file.contains(&f.rule)
+            || allows
+                .line
+                .get(&f.line)
+                .map_or(false, |set| set.contains(&f.rule));
+        if allowed {
+            analysis.suppressed += 1;
+        } else {
+            findings.push(f);
+        }
+    }
+    findings.sort();
+    findings.dedup();
+    analysis.files += 1;
+    analysis.findings.extend(findings);
+}
+
+/// Recursively collect `.rs` files under `dir`, as `/`-separated paths
+/// relative to `dir`, in sorted (deterministic) order.
+pub fn collect_rs_files(dir: &Path) -> std::io::Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut stack = vec![String::new()];
+    while let Some(prefix) = stack.pop() {
+        let full = if prefix.is_empty() {
+            dir.to_path_buf()
+        } else {
+            dir.join(&prefix)
+        };
+        let mut entries: Vec<(String, bool)> = Vec::new();
+        for entry in fs::read_dir(&full)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let is_dir = entry.file_type()?.is_dir();
+            entries.push((name, is_dir));
+        }
+        entries.sort();
+        for (name, is_dir) in entries {
+            let rel = if prefix.is_empty() {
+                name.clone()
+            } else {
+                format!("{prefix}/{name}")
+            };
+            if is_dir {
+                stack.push(rel);
+            } else if name.ends_with(".rs") {
+                out.push(rel);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Analyze every `.rs` file under `root`. `display_prefix` (when
+/// non-empty) is prepended to each relative path in diagnostics; rule
+/// scoping always uses the path relative to `root`.
+pub fn analyze_tree(
+    root: &Path,
+    display_prefix: &str,
+    analysis: &mut Analysis,
+) -> std::io::Result<()> {
+    for rel in collect_rs_files(root)? {
+        let text = fs::read_to_string(root.join(&rel))?;
+        let before = analysis.findings.len();
+        analyze_source(&rel, &text, analysis);
+        if !display_prefix.is_empty() {
+            let pfx = display_prefix.trim_end_matches('/');
+            for f in &mut analysis.findings[before..] {
+                f.file = format!("{pfx}/{}", f.file);
+            }
+        }
+    }
+    analysis.findings.sort();
+    analysis.findings.dedup();
+    Ok(())
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the machine-readable report (stable schema, see
+/// `docs/LINTS.md`). The Python mirror emits the same shape.
+pub fn render_json(a: &Analysis) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"version\":1,\"files\":{},\"suppressed\":{},\"findings\":[",
+        a.files, a.suppressed
+    ));
+    for (i, f) in a.findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"message\":\"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.rule),
+            json_escape(&f.message)
+        ));
+    }
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masker_blanks_strings_and_comments() {
+        let m = mask_source("let x = \"HashMap.iter()\"; // HashMap\nlet y = 1;\n");
+        assert!(!m.code[0].contains("HashMap"));
+        assert!(m.comment[0].contains("HashMap"));
+        assert!(m.code[1].contains("let y = 1;"));
+    }
+
+    #[test]
+    fn masker_handles_lifetimes_and_chars() {
+        let m = mask_source("fn f<'a>(x: &'a str) -> char { 'x' }\n");
+        assert!(m.code[0].contains("fn f<'a>(x: &'a str)"));
+        assert!(!m.code[0].contains("'x'"));
+    }
+
+    #[test]
+    fn masker_handles_raw_strings() {
+        let m = mask_source("let r = r#\"thread_rng\"#; let k = r;\n");
+        assert!(!m.code[0].contains("thread_rng"));
+        assert!(m.code[0].contains("let k = r;"));
+    }
+
+    #[test]
+    fn masker_handles_nested_block_comments() {
+        let m = mask_source("/* a /* b */ still comment */ let z = 2;\n");
+        assert!(m.code[0].contains("let z = 2;"));
+        assert!(!m.code[0].contains("still"));
+    }
+
+    #[test]
+    fn token_positions_respect_word_boundaries() {
+        assert_eq!(token_positions("sort_by_key(x)", "sort_by"), Vec::<usize>::new());
+        assert_eq!(token_positions("xs.sort_by(c)", "sort_by"), vec![3]);
+        assert_eq!(token_positions("pending_parts += 1", "pending"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn d002_flags_partial_cmp_in_comparator_only() {
+        let bad = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let good = "impl O { fn cmp(&self, o: &O) -> Ordering {\n\
+                    self.v.partial_cmp(&o.v).unwrap_or(Ordering::Equal) } }\n";
+        let mut a = Analysis::default();
+        analyze_source("solver/x.rs", bad, &mut a);
+        assert_eq!(a.findings.len(), 1);
+        assert_eq!(a.findings[0].rule, "D002");
+        let mut b = Analysis::default();
+        analyze_source("solver/y.rs", good, &mut b);
+        assert!(b.findings.is_empty(), "{:?}", b.findings);
+    }
+
+    #[test]
+    fn d001_sort_escape_and_scope() {
+        let src = "use std::collections::HashMap;\n\
+                   pub fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n\
+                   let mut ks: Vec<u32> = m.keys().copied().collect();\n\
+                   ks.sort();\n\
+                   ks\n}\n";
+        let mut a = Analysis::default();
+        analyze_source("engine/x.rs", src, &mut a);
+        assert!(a.findings.is_empty(), "{:?}", a.findings);
+        // Same source without the sort → finding.
+        let src2 = src.replace("ks.sort();\n", "");
+        let mut b = Analysis::default();
+        analyze_source("engine/x.rs", &src2, &mut b);
+        assert_eq!(b.findings.len(), 1);
+        assert_eq!(b.findings[0].rule, "D001");
+        // Out of scope → clean either way.
+        let mut c = Analysis::default();
+        analyze_source("util/x.rs", &src2, &mut c);
+        assert!(c.findings.is_empty());
+    }
+
+    #[test]
+    fn annotation_requires_reason_and_never_suppresses_when_malformed() {
+        let src = "use std::collections::HashMap;\n\
+                   pub fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                   // detlint: allow(D001)\n\
+                   m.values().sum()\n}\n";
+        let mut a = Analysis::default();
+        analyze_source("engine/x.rs", src, &mut a);
+        let rules: Vec<&str> = a.findings.iter().map(|f| f.rule.as_str()).collect();
+        assert!(rules.contains(&"DLINT"), "{rules:?}");
+        assert!(rules.contains(&"D001"), "{rules:?}");
+        let fixed = src.replace("allow(D001)", "allow(D001) order-free commutative sum");
+        let mut b = Analysis::default();
+        analyze_source("engine/x.rs", &fixed, &mut b);
+        assert!(b.findings.is_empty(), "{:?}", b.findings);
+        assert_eq!(b.suppressed, 1);
+    }
+
+    #[test]
+    fn d006_exact_comment_window() {
+        let bad = "fn f(m: &mut M, b: f64) { m.push_bytes_repushed += b; }\n";
+        let good = "fn f(m: &mut M, b: f64) {\n\
+                    // Exact: integer bytes in f64.\n\
+                    m.push_bytes_repushed += b;\n}\n";
+        let mut a = Analysis::default();
+        analyze_source("engine/x.rs", bad, &mut a);
+        assert_eq!(a.findings.len(), 1);
+        assert_eq!(a.findings[0].rule, "D006");
+        let mut b = Analysis::default();
+        analyze_source("engine/x.rs", good, &mut b);
+        assert!(b.findings.is_empty(), "{:?}", b.findings);
+    }
+
+    #[test]
+    fn json_escapes_and_shape() {
+        let mut a = Analysis::default();
+        a.files = 1;
+        a.findings.push(Finding {
+            file: "a\"b.rs".into(),
+            line: 3,
+            rule: "D004".into(),
+            message: "back\\slash".into(),
+        });
+        let j = render_json(&a);
+        assert!(j.starts_with("{\"version\":1,"));
+        assert!(j.contains("a\\\"b.rs"));
+        assert!(j.contains("back\\\\slash"));
+        assert!(j.ends_with("]}\n"));
+    }
+}

@@ -1,0 +1,78 @@
+//! detlint CLI. `detlint [--json] [PATH ...]` — PATHs are files or
+//! directories (default `rust/src`). Exit 0 when clean, 1 on any
+//! unallowed finding, 2 on usage/IO errors.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use detlint::{analyze_source, analyze_tree, render_json, Analysis};
+
+const USAGE: &str = "usage: detlint [--json] [PATH ...]\n\
+    Static determinism/invariant analysis for the mrperf tree.\n\
+    PATH defaults to rust/src. Exit 0 clean, 1 findings, 2 errors.\n\
+    Rules and allow-annotation syntax: docs/LINTS.md";
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut paths: Vec<String> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            a if a.starts_with('-') => {
+                eprintln!("detlint: unknown flag `{a}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            a => paths.push(a.to_string()),
+        }
+    }
+    if paths.is_empty() {
+        paths.push("rust/src".to_string());
+    }
+
+    let mut analysis = Analysis::default();
+    for p in &paths {
+        let path = Path::new(p);
+        if path.is_dir() {
+            if let Err(e) = analyze_tree(path, p, &mut analysis) {
+                eprintln!("detlint: error scanning `{p}`: {e}");
+                return ExitCode::from(2);
+            }
+        } else if path.is_file() {
+            match std::fs::read_to_string(path) {
+                Ok(text) => analyze_source(p, &text, &mut analysis),
+                Err(e) => {
+                    eprintln!("detlint: error reading `{p}`: {e}");
+                    return ExitCode::from(2);
+                }
+            }
+        } else {
+            eprintln!("detlint: no such file or directory: `{p}`");
+            return ExitCode::from(2);
+        }
+    }
+    analysis.findings.sort();
+    analysis.findings.dedup();
+
+    if json {
+        print!("{}", render_json(&analysis));
+    } else {
+        for f in &analysis.findings {
+            println!("{}:{}: {} {}", f.file, f.line, f.rule, f.message);
+        }
+        println!(
+            "detlint: {} finding(s) in {} file(s), {} suppressed by allow",
+            analysis.findings.len(),
+            analysis.files,
+            analysis.suppressed
+        );
+    }
+    if analysis.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration tests for detlint: the fixture contract (shared with
+//! the Python mirror via tests/fixtures/expected.txt), per-fixture
+//! pass/fail polarity, the repo-clean self-test, and the `--json`
+//! schema.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use detlint::{analyze_source, analyze_tree, collect_rs_files, render_json, Analysis};
+
+fn fixtures_tree() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tree")
+}
+
+fn expected() -> Vec<(String, usize, String)> {
+    let text = fs::read_to_string(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/expected.txt"),
+    )
+    .expect("expected.txt");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.rsplitn(3, ':');
+        let rule = parts.next().unwrap().to_string();
+        let lineno: usize = parts.next().unwrap().parse().expect("line number");
+        let file = parts.next().unwrap().to_string();
+        out.push((file, lineno, rule));
+    }
+    out
+}
+
+/// The full fixture tree must produce exactly the findings pinned in
+/// expected.txt — the cross-implementation contract.
+#[test]
+fn fixtures_match_expected() {
+    let mut a = Analysis::default();
+    analyze_tree(&fixtures_tree(), "", &mut a).expect("scan fixtures");
+    let got: Vec<(String, usize, String)> = a
+        .findings
+        .iter()
+        .map(|f| (f.file.clone(), f.line, f.rule.clone()))
+        .collect();
+    assert_eq!(got, expected(), "fixture findings drifted from expected.txt");
+    // The three reasoned allow annotations in the good fixtures must
+    // each suppress exactly one finding.
+    assert_eq!(a.suppressed, 3, "allow-annotation suppression count");
+}
+
+/// Every `bad_*` fixture must fail on its own; every other fixture
+/// must be clean on its own (single-file scans keep tree-relative
+/// paths so rule scoping still applies).
+#[test]
+fn per_fixture_polarity() {
+    let tree = fixtures_tree();
+    let files = collect_rs_files(&tree).expect("list fixtures");
+    assert!(files.len() >= 12, "fixture set shrank: {files:?}");
+    for rel in files {
+        let text = fs::read_to_string(tree.join(&rel)).expect("read fixture");
+        let mut a = Analysis::default();
+        analyze_source(&rel, &text, &mut a);
+        let is_bad = rel.rsplit('/').next().unwrap().starts_with("bad_");
+        if is_bad {
+            assert!(!a.findings.is_empty(), "{rel}: expected findings, got none");
+        } else {
+            assert!(a.findings.is_empty(), "{rel}: expected clean, got {:?}", a.findings);
+        }
+    }
+}
+
+/// Every rule id appears at least once in the bad fixtures, so no rule
+/// can silently stop firing.
+#[test]
+fn every_rule_exercised() {
+    let rules: BTreeSet<String> = expected().into_iter().map(|(_, _, r)| r).collect();
+    for id in detlint::RULE_IDS.iter().chain(["DLINT"].iter()) {
+        assert!(rules.contains(*id), "rule {id} has no bad fixture");
+    }
+}
+
+/// The repository's own source tree ships lint-clean: zero unallowed
+/// findings over rust/src. This is the same gate CI runs.
+#[test]
+fn repo_is_lint_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let mut a = Analysis::default();
+    analyze_tree(&src, "rust/src", &mut a).expect("scan rust/src");
+    assert!(a.files > 50, "suspiciously few files scanned: {}", a.files);
+    assert!(
+        a.findings.is_empty(),
+        "rust/src has detlint findings:\n{}",
+        a.findings
+            .iter()
+            .map(|f| format!("{}:{}: {} {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// `--json` output schema: version, counts, and per-finding keys, with
+/// paths/messages escaped. (The Python mirror round-trips the same
+/// output through json.loads in its --self-test.)
+#[test]
+fn json_schema() {
+    let mut a = Analysis::default();
+    analyze_tree(&fixtures_tree(), "", &mut a).expect("scan fixtures");
+    let j = render_json(&a);
+    assert!(j.starts_with("{\"version\":1,\"files\":"));
+    assert!(j.contains("\"suppressed\":3"));
+    assert!(j.contains("\"findings\":["));
+    for key in ["\"file\":", "\"line\":", "\"rule\":", "\"message\":"] {
+        assert!(j.contains(key), "missing {key} in JSON output");
+    }
+    // Structural sanity: balanced braces/brackets outside strings.
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in j.chars() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '{' | '[' if !in_str => depth += 1,
+            '}' | ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+        assert!(depth >= 0, "unbalanced JSON");
+    }
+    assert_eq!(depth, 0, "unbalanced JSON");
+    assert!(!in_str, "unterminated string in JSON");
+    assert_eq!(
+        j.matches("\"rule\":").count(),
+        expected().len(),
+        "finding count in JSON drifted from expected.txt"
+    );
+}

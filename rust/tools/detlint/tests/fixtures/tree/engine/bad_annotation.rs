@@ -1,0 +1,11 @@
+use std::collections::HashMap;
+
+pub fn broken(m: &HashMap<u32, u32>) -> u32 {
+    // detlint: allow(D001)
+    m.values().sum()
+}
+
+pub fn unknown(m: &HashMap<u32, u32>) -> u32 {
+    // detlint: allow(D999) not a rule id
+    m.values().sum()
+}

@@ -1,0 +1,26 @@
+// Known-bad D001: unsorted hash-container iteration in engine scope.
+use std::collections::HashMap;
+
+pub fn sum_keys(m: &HashMap<usize, u64>) -> u64 {
+    let mut total = 0;
+    for (k, _v) in m.iter() {
+        total += *k as u64;
+    }
+    total
+}
+
+pub fn first_key(map: HashMap<String, u32>) -> Option<String> {
+    map.keys().next().cloned()
+}
+
+pub struct Holder {
+    inner: HashMap<u32, u32>,
+}
+
+impl Holder {
+    pub fn drain_all(&mut self) -> Vec<(u32, u32)> {
+        self.inner
+            .drain()
+            .collect()
+    }
+}

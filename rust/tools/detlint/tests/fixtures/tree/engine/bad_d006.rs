@@ -1,0 +1,9 @@
+pub struct Metrics {
+    pub push_bytes_delivered: f64,
+    pub push_bytes_repushed: f64,
+}
+
+pub fn credit(m: &mut Metrics, bytes: f64) {
+    m.push_bytes_delivered += bytes;
+    m.push_bytes_repushed += bytes;
+}

@@ -1,0 +1,10 @@
+// Known-good D005: engine/fluid.rs is the one file allowed to spawn
+// threads (the sharded fluid re-solve).
+pub fn shard(n: usize) -> usize {
+    let mut total = 0;
+    std::thread::scope(|s| {
+        let h = s.spawn(move || n);
+        total += h.join().unwrap();
+    });
+    total
+}

@@ -1,0 +1,6 @@
+use std::collections::HashSet;
+
+// detlint: allow-file(D001) membership counting only; no order-dependent traversal
+pub fn count(s: &HashSet<u32>) -> usize {
+    s.iter().count()
+}

@@ -1,0 +1,17 @@
+// Known-good D001: sorted drains, BTreeMap, and a reasoned allow.
+use std::collections::{BTreeMap, HashMap};
+
+pub fn sorted_keys(m: &HashMap<usize, u64>) -> Vec<usize> {
+    let mut ks: Vec<usize> = m.keys().copied().collect();
+    ks.sort();
+    ks
+}
+
+pub fn ordered(b: &BTreeMap<usize, u64>) -> u64 {
+    b.values().sum()
+}
+
+pub fn tagged(m: &HashMap<usize, u64>) -> u64 {
+    // detlint: allow(D001) summing is order-free (commutative integer fold)
+    m.values().sum()
+}

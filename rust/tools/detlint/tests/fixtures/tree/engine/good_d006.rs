@@ -1,0 +1,14 @@
+pub struct Metrics {
+    pub shuffle_bytes_delivered: f64,
+    pub reduce_bytes_replayed: f64,
+}
+
+pub fn credit(m: &mut Metrics, bytes: f64) {
+    // Exact: byte counts are integers < 2^53 carried in f64.
+    m.shuffle_bytes_delivered += bytes;
+}
+
+pub fn replay(m: &mut Metrics, bytes: f64) {
+    // detlint: allow(D006) replay credit audited by the conservation tests
+    m.reduce_bytes_replayed += bytes;
+}

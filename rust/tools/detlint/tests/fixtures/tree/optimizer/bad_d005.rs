@@ -1,0 +1,4 @@
+pub fn fan_out() {
+    let h = std::thread::spawn(|| {});
+    h.join().unwrap();
+}

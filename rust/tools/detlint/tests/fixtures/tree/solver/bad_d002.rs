@@ -1,0 +1,12 @@
+pub fn rank(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn pick(xs: &[f64]) -> f64 {
+    xs.iter()
+        .cloned()
+        .max_by(|a, b| {
+            a.partial_cmp(b).unwrap()
+        })
+        .unwrap()
+}

@@ -1,0 +1,15 @@
+use std::cmp::Ordering;
+
+pub fn rank(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub struct Wrapped(pub f64);
+
+impl Wrapped {
+    // A partial_cmp outside a comparator-call context is not D002's
+    // business (Ord impls may consult it with an explicit fallback).
+    pub fn cmp_or_equal(&self, other: &Wrapped) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(Ordering::Equal)
+    }
+}

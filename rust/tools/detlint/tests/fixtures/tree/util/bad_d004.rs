@@ -1,0 +1,7 @@
+use std::collections::hash_map::RandomState;
+
+pub fn draw() -> u64 {
+    let mut rng = rand::thread_rng();
+    let _ = RandomState::new();
+    rng.gen()
+}

@@ -1,0 +1,6 @@
+// Known-good D003: wall-clock timing is fine outside the deterministic
+// core (util/, experiments timing, benches).
+pub fn stamp() -> u64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}

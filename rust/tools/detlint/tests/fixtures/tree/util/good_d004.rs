@@ -1,0 +1,4 @@
+// Known-good D004: all randomness flows from an explicit seed.
+pub fn draw(seed: u64) -> u64 {
+    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}

@@ -1,0 +1,617 @@
+#!/usr/bin/env python3
+"""detlint (Python mirror) — determinism & invariant static analysis.
+
+Behavioral mirror of the canonical Rust implementation in
+rust/tools/detlint. It exists so the detlint gate runs in CI and
+builder containers that carry **no Rust toolchain**: the pass is pure
+source analysis, so requiring cargo to enforce it would be
+self-defeating. Both implementations are pinned to the same findings
+over rust/tools/detlint/tests/fixtures (see --self-test), and the rule
+catalog is documented once in docs/LINTS.md.
+
+Usage:
+    scripts/detlint.py [--json] [PATH ...]    # default PATH: rust/src
+    scripts/detlint.py --self-test            # fixture + JSON contract
+
+Exit codes: 0 clean, 1 findings, 2 usage/IO errors.
+"""
+
+import json
+import os
+import sys
+
+RULE_IDS = ("D001", "D002", "D003", "D004", "D005", "D006")
+D001_SORT_WINDOW = 8
+D006_COMMENT_WINDOW = 3
+D001_METHODS = (
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".drain(",
+)
+D002_OPENERS = ("sort_by", "sort_unstable_by", "max_by", "min_by", "binary_search_by")
+D006_SUFFIXES = ("_bytes_delivered", "_repushed", "_replayed")
+
+
+def is_word(c):
+    return c.isalnum() and c.isascii() or c == "_"
+
+
+def mask_source(text):
+    """Split source into (code_lines, comment_lines) with string/char
+    literal contents and comments blanked out of the code stream."""
+    CODE, LINE, BLOCK, STR, RAWSTR, CHR = range(6)
+    chars = text
+    n = len(chars)
+    code, com = [], []
+    st, depth, hashes = CODE, 0, 0
+    i = 0
+
+    def blank(k):
+        code.append(" " * k)
+        com.append(" " * k)
+
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            code.append("\n")
+            com.append("\n")
+            if st == LINE:
+                st = CODE
+            i += 1
+            continue
+        nxt = chars[i + 1] if i + 1 < n else ""
+        if st == CODE:
+            prev_word = i > 0 and is_word(chars[i - 1])
+            if c == "/" and nxt == "/":
+                st = LINE
+                code.append("  ")
+                com.append("//")
+                i += 2
+            elif c == "/" and nxt == "*":
+                st, depth = BLOCK, 1
+                code.append("  ")
+                com.append("/*")
+                i += 2
+            elif c == '"':
+                st = STR
+                blank(1)
+                i += 1
+            elif c in ("r", "b") and not prev_word:
+                j = i + 1 if c == "b" else i
+                is_b = c == "b"
+                if is_b and j < n and chars[j] == "'":
+                    blank(2)
+                    st = CHR
+                    i = j + 1
+                    continue
+                if is_b and j < n and chars[j] == '"':
+                    blank(2)
+                    st = STR
+                    i = j + 1
+                    continue
+                if is_b and (j >= n or chars[j] != "r"):
+                    code.append(c)
+                    com.append(" ")
+                    i += 1
+                    continue
+                j = j + 1 if is_b else i + 1
+                h = 0
+                while j < n and chars[j] == "#":
+                    h += 1
+                    j += 1
+                if j < n and chars[j] == '"':
+                    blank(j + 1 - i)
+                    st, hashes = RAWSTR, h
+                    i = j + 1
+                else:
+                    code.append(c)
+                    com.append(" ")
+                    i += 1
+            elif c == "'":
+                if nxt == "\\":
+                    blank(1)
+                    st = CHR
+                    i += 1
+                elif i + 2 < n and chars[i + 2] == "'" and nxt != "'":
+                    blank(3)
+                    i += 3
+                else:
+                    code.append("'")
+                    com.append(" ")
+                    i += 1
+            else:
+                code.append(c)
+                com.append(" ")
+                i += 1
+        elif st == LINE:
+            com.append(c)
+            code.append(" ")
+            i += 1
+        elif st == BLOCK:
+            if c == "/" and nxt == "*":
+                depth += 1
+                com.append("/*")
+                code.append("  ")
+                i += 2
+            elif c == "*" and nxt == "/":
+                depth -= 1
+                st = CODE if depth == 0 else BLOCK
+                com.append("*/")
+                code.append("  ")
+                i += 2
+            else:
+                com.append(c)
+                code.append(" ")
+                i += 1
+        elif st == STR:
+            if c == "\\" and nxt and nxt != "\n":
+                blank(2)
+                i += 2
+            elif c == '"':
+                st = CODE
+                blank(1)
+                i += 1
+            else:
+                blank(1)
+                i += 1
+        elif st == RAWSTR:
+            if c == '"' and chars[i + 1 : i + 1 + hashes] == "#" * hashes:
+                blank(1 + hashes)
+                st = CODE
+                i += 1 + hashes
+            else:
+                blank(1)
+                i += 1
+        else:  # CHR
+            if c == "\\" and nxt and nxt != "\n":
+                blank(2)
+                i += 2
+            elif c == "'":
+                st = CODE
+                blank(1)
+                i += 1
+            else:
+                blank(1)
+                i += 1
+    joined_code = "".join(code).split("\n")
+    joined_com = "".join(com).split("\n")
+    return joined_code, joined_com
+
+
+def token_positions(hay, needle):
+    """Word-bounded occurrences (boundaries enforced only on word-char
+    needle edges, so `.spawn(` and `std::time` work)."""
+    out = []
+    if not needle or len(hay) < len(needle):
+        return out
+    first_w, last_w = is_word(needle[0]), is_word(needle[-1])
+    start = 0
+    while True:
+        p = hay.find(needle, start)
+        if p < 0:
+            return out
+        pre_ok = not first_w or p == 0 or not is_word(hay[p - 1])
+        post = p + len(needle)
+        post_ok = not last_w or post == len(hay) or not is_word(hay[post])
+        if pre_ok and post_ok:
+            out.append(p)
+        start = p + 1
+
+
+def comps(rel):
+    return [c for c in rel.split("/") if c]
+
+
+def in_dirs(rel, dirs):
+    return any(c in dirs for c in comps(rel))
+
+
+def is_fluid_rs(rel):
+    c = comps(rel)
+    return len(c) >= 2 and c[-2] == "engine" and c[-1] == "fluid.rs"
+
+
+def ident_ending_at(line, end):
+    e = end - 1
+    while e >= 0 and line[e] in " \t":
+        e -= 1
+    stop = e
+    while e >= 0 and is_word(line[e]):
+        e -= 1
+    if e == stop:
+        return None
+    name = line[e + 1 : stop + 1]
+    if not name or name[0].isdigit() or name in ("mut", "let", "pub", "ref"):
+        return None
+    return name
+
+
+TYPE_CHARS = set("<>,&' \t[]")
+
+
+def binder_before(line, p):
+    q = p - 1
+    while q >= 0:
+        ch = line[q]
+        if ch == ":":
+            if q > 0 and line[q - 1] == ":":
+                q -= 2
+                continue
+            return ident_ending_at(line, q)
+        if ch == "=":
+            if q > 0 and line[q - 1] in "=<>!":
+                return None
+            return ident_ending_at(line, q)
+        if is_word(ch) or ch in TYPE_CHARS:
+            q -= 1
+        else:
+            return None
+    return None
+
+
+def hash_names(code):
+    names = set()
+    for line in code:
+        for needle in ("HashMap", "HashSet"):
+            for p in token_positions(line, needle):
+                name = binder_before(line, p)
+                if name:
+                    names.add(name)
+    return names
+
+
+def parse_annotations(rel, code, com, findings):
+    file_allows, line_allows = set(), {}
+    for idx, comment in enumerate(com):
+        lineno = idx + 1
+        pos = comment.find("detlint:")
+        if pos < 0:
+            continue
+        rest = comment[pos + len("detlint:") :].lstrip()
+        if rest.startswith("allow-file("):
+            file_scope, body = True, rest[len("allow-file(") :]
+        elif rest.startswith("allow("):
+            file_scope, body = False, rest[len("allow(") :]
+        else:
+            findings.append(
+                (rel, lineno, "DLINT",
+                 "malformed detlint annotation (expected `allow(RULE) reason` "
+                 "or `allow-file(RULE) reason`): `%s`" % rest.strip())
+            )
+            continue
+        close = body.find(")")
+        if close < 0:
+            findings.append(
+                (rel, lineno, "DLINT", "malformed detlint annotation: missing `)`")
+            )
+            continue
+        rule = body[:close].strip()
+        if rule not in RULE_IDS:
+            findings.append(
+                (rel, lineno, "DLINT", "unknown rule `%s` in detlint annotation" % rule)
+            )
+            continue
+        reason = body[close + 1 :].strip()
+        if not reason:
+            findings.append(
+                (rel, lineno, "DLINT",
+                 "detlint allow(%s) annotation requires a non-empty reason" % rule)
+            )
+            continue
+        if file_scope:
+            file_allows.add(rule)
+        else:
+            target = lineno
+            if not code[idx].strip():
+                for j in range(idx + 1, len(code)):
+                    if code[j].strip():
+                        target = j + 1
+                        break
+            line_allows.setdefault(target, set()).add(rule)
+    return file_allows, line_allows
+
+
+def sorted_nearby(code, idx):
+    end = min(idx + D001_SORT_WINDOW + 1, len(code))
+    return any(".sort" in l or "BTree" in l for l in code[idx:end])
+
+
+def rule_d001(rel, code, out):
+    if not in_dirs(rel, ("engine", "optimizer", "experiments")):
+        return
+    names = hash_names(code)
+    if not names:
+        return
+    for idx, line in enumerate(code):
+        for name in names:
+            hit = False
+            for p in token_positions(line, name):
+                after = line[p + len(name) :]
+                if any(after.startswith(m) for m in D001_METHODS):
+                    hit = True
+                elif not after.strip():
+                    # Multiline method chain: `self.name` at end of line,
+                    # `.iter()` on the next code line.
+                    nxt = next((l for l in code[idx + 1 :] if l.strip()), "")
+                    if any(nxt.lstrip().startswith(m) for m in D001_METHODS):
+                        hit = True
+            if not hit:
+                for p in token_positions(line, "in"):
+                    rest = line[p + 2 :].lstrip()
+                    if rest.startswith("&"):
+                        rest = rest[1:]
+                    if rest.startswith("mut "):
+                        rest = rest[4:].lstrip()
+                    if rest.startswith("self."):
+                        rest = rest[5:]
+                    if rest.startswith(name):
+                        tail = rest[len(name) :]
+                        if not tail or (not is_word(tail[0]) and tail[0] not in ".("):
+                            hit = True
+            if hit and not sorted_nearby(code, idx):
+                out.append(
+                    (rel, idx + 1, "D001",
+                     "iteration over hash container `%s` may leak nondeterministic "
+                     "order; sort the result, use BTreeMap/BTreeSet, or annotate "
+                     "`// detlint: allow(D001) <reason>`" % name)
+                )
+
+
+def rule_d002(rel, code, out):
+    all_code = "\n".join(code)
+    starts = [0]
+    for i, ch in enumerate(all_code):
+        if ch == "\n":
+            starts.append(i + 1)
+
+    def line_of(off):
+        import bisect
+
+        return bisect.bisect_right(starts, off)
+
+    for opener in D002_OPENERS:
+        for p in token_positions(all_code, opener):
+            j = p + len(opener)
+            while j < len(all_code) and all_code[j].isspace():
+                j += 1
+            if j >= len(all_code) or all_code[j] != "(":
+                continue
+            start = j
+            depth = 0
+            while j < len(all_code):
+                if all_code[j] == "(":
+                    depth += 1
+                elif all_code[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            span = all_code[start:j]
+            for q in token_positions(span, "partial_cmp"):
+                out.append(
+                    (rel, line_of(start + q), "D002",
+                     "`partial_cmp` inside `%s` comparator; use `total_cmp` "
+                     "for a NaN-safe total order" % opener)
+                )
+
+
+def rule_d003(rel, code, out):
+    if not in_dirs(rel, ("engine", "model", "solver", "optimizer")):
+        return
+    c = comps(rel)
+    if any(s == "benches" for s in c) or (c and "bench" in c[-1]):
+        return
+    for idx, line in enumerate(code):
+        for token in ("Instant::now", "SystemTime", "std::time"):
+            if token_positions(line, token):
+                out.append(
+                    (rel, idx + 1, "D003",
+                     "wall-clock time source `%s` in the deterministic core; "
+                     "use virtual time, or move timing to bench/experiment code"
+                     % token)
+                )
+                break
+
+
+def rule_d004(rel, code, out):
+    for idx, line in enumerate(code):
+        for token in ("thread_rng", "rand::random", "RandomState"):
+            if token_positions(line, token):
+                out.append(
+                    (rel, idx + 1, "D004",
+                     "ambient randomness `%s`; every draw must flow from an "
+                     "explicit seed through util::rng::Pcg64" % token)
+                )
+                break
+
+
+def rule_d005(rel, code, out):
+    if is_fluid_rs(rel):
+        return
+    for idx, line in enumerate(code):
+        for token in ("std::thread", "thread::spawn", ".spawn("):
+            if token_positions(line, token):
+                out.append(
+                    (rel, idx + 1, "D005",
+                     "thread creation `%s` outside engine/fluid.rs; "
+                     "parallelism is confined to the sharded fluid re-solve"
+                     % token)
+                )
+                break
+
+
+def rule_d006(rel, code, com, out):
+    for idx, line in enumerate(code):
+        for p in token_positions(line, "+="):
+            name = ident_ending_at(line, p)
+            if not name or not any(name.endswith(s) for s in D006_SUFFIXES):
+                continue
+            lo = max(0, idx - D006_COMMENT_WINDOW)
+            if any("exact" in c.lower() for c in com[lo : idx + 1]):
+                continue
+            out.append(
+                (rel, idx + 1, "D006",
+                 "`+=` into exact-conservation counter `%s` without an "
+                 "adjacent `exact` comment; byte credits must stay exact "
+                 "(integers carried in f64)" % name)
+            )
+
+
+def analyze_source(rel, text, analysis):
+    code, com = mask_source(text)
+    findings = []
+    file_allows, line_allows = parse_annotations(rel, code, com, findings)
+    candidates = []
+    rule_d001(rel, code, candidates)
+    rule_d002(rel, code, candidates)
+    rule_d003(rel, code, candidates)
+    rule_d004(rel, code, candidates)
+    rule_d005(rel, code, candidates)
+    rule_d006(rel, code, com, candidates)
+    for f in candidates:
+        _, line, rule, _ = f
+        if rule in file_allows or rule in line_allows.get(line, ()):
+            analysis["suppressed"] += 1
+        else:
+            findings.append(f)
+    analysis["files"] += 1
+    analysis["findings"].extend(sorted(set(findings)))
+
+
+def collect_rs_files(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for f in sorted(filenames):
+            if f.endswith(".rs"):
+                full = os.path.join(dirpath, f)
+                out.append(os.path.relpath(full, root).replace(os.sep, "/"))
+    return sorted(out)
+
+
+def analyze_tree(root, display_prefix, analysis):
+    for rel in collect_rs_files(root):
+        with open(os.path.join(root, rel), encoding="utf-8") as fh:
+            text = fh.read()
+        before = len(analysis["findings"])
+        analyze_source(rel, text, analysis)
+        if display_prefix:
+            pfx = display_prefix.rstrip("/")
+            analysis["findings"][before:] = [
+                ("%s/%s" % (pfx, f), l, r, m)
+                for (f, l, r, m) in analysis["findings"][before:]
+            ]
+    analysis["findings"] = sorted(set(analysis["findings"]))
+
+
+def new_analysis():
+    return {"files": 0, "suppressed": 0, "findings": []}
+
+
+def render_json(analysis):
+    return (
+        json.dumps(
+            {
+                "version": 1,
+                "files": analysis["files"],
+                "suppressed": analysis["suppressed"],
+                "findings": [
+                    {"file": f, "line": l, "rule": r, "message": m}
+                    for (f, l, r, m) in analysis["findings"]
+                ],
+            },
+            separators=(",", ":"),
+        )
+        + "\n"
+    )
+
+
+def self_test(repo_root):
+    """Pin this mirror to the fixture contract shared with the Rust
+    implementation, and round-trip the JSON schema."""
+    fixtures = os.path.join(repo_root, "rust/tools/detlint/tests/fixtures")
+    tree = os.path.join(fixtures, "tree")
+    if not os.path.isdir(tree):
+        print("detlint --self-test: fixture tree missing: %s" % tree, file=sys.stderr)
+        return 2
+    analysis = new_analysis()
+    analyze_tree(tree, "", analysis)
+    got = [(f, l, r) for (f, l, r, _) in analysis["findings"]]
+    expected = []
+    with open(os.path.join(fixtures, "expected.txt"), encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            file_, lineno, rule = line.rsplit(":", 2)
+            expected.append((file_, int(lineno), rule))
+    if got != expected:
+        print("detlint --self-test: fixture findings drifted from expected.txt",
+              file=sys.stderr)
+        for f in sorted(set(got) - set(expected)):
+            print("  unexpected: %s:%d:%s" % f, file=sys.stderr)
+        for f in sorted(set(expected) - set(got)):
+            print("  missing:    %s:%d:%s" % f, file=sys.stderr)
+        return 1
+    if analysis["suppressed"] != 3:
+        print("detlint --self-test: expected 3 allow-suppressed findings, got %d"
+              % analysis["suppressed"], file=sys.stderr)
+        return 1
+    parsed = json.loads(render_json(analysis))
+    assert parsed["version"] == 1 and len(parsed["findings"]) == len(expected)
+    for key in ("file", "line", "rule", "message"):
+        assert all(key in f for f in parsed["findings"])
+    print("detlint --self-test: OK (%d fixture findings, %d suppressed)"
+          % (len(expected), analysis["suppressed"]))
+    return 0
+
+
+def main(argv):
+    json_mode = False
+    selftest = False
+    paths = []
+    for a in argv[1:]:
+        if a == "--json":
+            json_mode = True
+        elif a == "--self-test":
+            selftest = True
+        elif a in ("--help", "-h"):
+            print(__doc__)
+            return 0
+        elif a.startswith("-"):
+            print("detlint: unknown flag `%s`" % a, file=sys.stderr)
+            return 2
+        else:
+            paths.append(a)
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if selftest:
+        return self_test(repo_root)
+    if not paths:
+        paths = ["rust/src"]
+    analysis = new_analysis()
+    for p in paths:
+        if os.path.isdir(p):
+            analyze_tree(p, p, analysis)
+        elif os.path.isfile(p):
+            with open(p, encoding="utf-8") as fh:
+                analyze_source(p, fh.read(), analysis)
+        else:
+            print("detlint: no such file or directory: `%s`" % p, file=sys.stderr)
+            return 2
+    analysis["findings"] = sorted(set(analysis["findings"]))
+    if json_mode:
+        sys.stdout.write(render_json(analysis))
+    else:
+        for f, l, r, m in analysis["findings"]:
+            print("%s:%d: %s %s" % (f, l, r, m))
+        print("detlint: %d finding(s) in %d file(s), %d suppressed by allow"
+              % (len(analysis["findings"]), analysis["files"], analysis["suppressed"]))
+    return 1 if analysis["findings"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

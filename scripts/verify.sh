@@ -10,6 +10,20 @@ cd "$(dirname "$0")/.."
 QUICK=0
 [[ "${1:-}" == "--quick" ]] && QUICK=1
 
+# Hard gate: determinism / invariant static analysis (docs/LINTS.md).
+# Pure source analysis via the Python mirror of rust/tools/detlint —
+# runs (and must pass) even in containers with no Rust toolchain.
+echo "== detlint: self-test"
+python3 scripts/detlint.py --self-test
+
+echo "== detlint: rust/src must be lint-clean"
+python3 scripts/detlint.py rust/src
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "verify.sh: cargo unavailable — detlint gate green, build/test/smoke skipped"
+  exit 0
+fi
+
 echo "== tier-1: cargo build --release"
 cargo build --release
 
@@ -20,10 +34,13 @@ echo "== tier-1: cargo test --doc"
 # Module-doc examples are runnable and gated here so docs cannot rot.
 cargo test --doc -q
 
+echo "== detlint: canonical crate tests (pins Rust impl to the fixtures)"
+cargo test -q -p detlint
+
 if [[ "$QUICK" == "0" ]]; then
   if cargo clippy --version >/dev/null 2>&1; then
     echo "== lint: cargo clippy (warnings are errors)"
-    cargo clippy --all-targets -- -D warnings
+    cargo clippy --workspace --all-targets -- -D warnings
   else
     echo "== lint: clippy unavailable, skipped"
   fi
