@@ -128,6 +128,18 @@ impl<E> EventQueue<E> {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Restore the clock on an **empty** queue (checkpoint resume: the
+    /// executor only snapshots at event boundaries, where the heap is
+    /// drained, so only the clamp floor needs to survive — a fresh
+    /// insertion sequence is equivalent because relative order among
+    /// co-resident entries is all `seq` ever decides). Panics if events
+    /// are pending or the time is not finite.
+    pub fn restore_clock(&mut self, t: f64) {
+        assert!(t.is_finite(), "clock must be finite, got {t}");
+        assert!(self.heap.is_empty(), "restore_clock requires an empty queue");
+        self.last = t;
+    }
 }
 
 impl<E> Default for EventQueue<E> {
@@ -181,6 +193,23 @@ mod tests {
     fn rejects_nan_times() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn restore_clock_sets_the_clamp_floor() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.restore_clock(7.5);
+        assert_eq!(q.now(), 7.5);
+        q.push(2.0, "past");
+        assert_eq!(q.pop(), Some((7.5, "past")), "clamped to the restored clock");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty queue")]
+    fn restore_clock_rejects_pending_events() {
+        let mut q = EventQueue::new();
+        q.push(1.0, ());
+        q.restore_clock(2.0);
     }
 
     #[test]

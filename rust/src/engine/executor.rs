@@ -53,11 +53,36 @@
 //! `push_bytes_delivered == push_bytes` exactly — the push-side mirror
 //! of the shuffle's byte-conservation invariant.
 //!
+//! **Retry budgets and the dead-letter queue**: every eviction of a work
+//! item by a node failure counts one attempt against
+//! `JobConfig::max_attempts`. A map split or key range that exhausts the
+//! budget is *dead-lettered* instead of requeued forever (the pre-budget
+//! engine replayed the same split indefinitely under a flapping node):
+//! its remaining transfers move to [`XferState::Dead`], its bytes move
+//! from the delivery credit to `metrics.dlq_bytes`, and the item is
+//! recorded in the job's [`DeadLetterQueue`]. The dead-letter decision is
+//! made *at failure time*, whether or not a reassignment target exists —
+//! which is exactly the classic integration bug (failures counted but
+//! never routed to the DLQ) this design rules out. Byte conservation
+//! generalizes to `shuffle_bytes_delivered + dlq_bytes == shuffle_bytes`
+//! exactly at job end, and a job that dead-lettered anything finishes
+//! with [`JobOutcome::PartialWithDlq`].
+//!
+//! **Checkpoint/resume**: at event boundaries (drained event heap) the
+//! executor's full mutable state — task/transfer tables, range owners,
+//! byte credits, the virtual clock, the dynamics cursor — can be
+//! exported ([`Executor::encode_state`]) and later restored
+//! ([`Executor::restore_state`]) onto a freshly constructed executor,
+//! continuing bit-identically. The file codec and crash/resume drivers
+//! live in [`super::snapshot`].
+//!
 //! The engine executes the *real* map/reduce functions on real records —
 //! byte counts, skew and record conservation are genuine — while time is
 //! virtual (charged from the topology's bandwidths/compute rates).
 
 use std::collections::BTreeMap;
+
+use crate::util::json::Json;
 
 use super::dynamics::{DynEvent, ScenarioTrace};
 use super::events::{EngineEvent, EventQueue, TaskId};
@@ -81,6 +106,10 @@ enum TaskState {
     Ready,
     Running,
     Done,
+    /// Dead-lettered: the split exhausted its retry budget and will never
+    /// run. Barrier accounting treats it like a completed map with no
+    /// output.
+    Dead,
 }
 
 struct MapTask {
@@ -98,6 +127,9 @@ struct MapTask {
     spec_fetching: bool,
     pending_parts: usize,
     started_at: f64,
+    /// Failed attempts so far (evictions by node failures). Reaching
+    /// `JobConfig::max_attempts` dead-letters the split.
+    attempts: u32,
     /// Map outputs per reducer (filled when the task first runs).
     outputs: Option<Vec<Vec<Record>>>,
 }
@@ -112,6 +144,10 @@ enum XferState {
     InFlight,
     /// Delivered to the current owner and still credited.
     Delivered,
+    /// Written off: the transfer's range (or producing split) was
+    /// dead-lettered. Its bytes are accounted in `metrics.dlq_bytes` and
+    /// it is never (re)sent.
+    Dead,
 }
 
 /// One source→mapper push transfer (a part of a split, or a replica
@@ -148,10 +184,74 @@ struct ShuffleXfer {
     sent_once: bool,
 }
 
+/// What kind of work item a dead-letter entry records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DlqKind {
+    /// A map split (`id` indexes the task table).
+    Split,
+    /// A reduce key range (`id` is the plan's reducer index).
+    Range,
+}
+
+/// One permanently-failed work item.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DlqEntry {
+    pub kind: DlqKind,
+    /// Task id (splits) or key-range index (ranges).
+    pub id: usize,
+    /// Input bytes of the split, or total shuffle bytes written off for
+    /// the range (including map outputs emitted after the range died).
+    pub bytes: f64,
+    /// Failed attempts consumed when the item was dead-lettered.
+    pub attempts: u32,
+    /// Virtual time of the dead-letter decision.
+    pub at: f64,
+}
+
+/// Work items that exhausted their retry budget
+/// (`JobConfig::max_attempts`). Entries are appended at failure time —
+/// *never* deferred to a reassignment that may not exist — in
+/// deterministic (event, then id) order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeadLetterQueue {
+    pub entries: Vec<DlqEntry>,
+}
+
+impl DeadLetterQueue {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries of one kind, in dead-letter order.
+    pub fn of_kind(&self, kind: DlqKind) -> impl Iterator<Item = &DlqEntry> {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+}
+
+/// How a job ended. (Distinct from the tenancy layer's per-job stream
+/// outcome struct `engine::tenancy::JobOutcome`; refer to this one as
+/// `engine::executor::JobOutcome`.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// Every split mapped and every range reduced.
+    Complete,
+    /// The job finished, but some work exhausted its retry budget and
+    /// sits in the dead-letter queue; outputs are partial.
+    PartialWithDlq,
+}
+
 /// Run one job; returns metrics plus the final output records per reducer.
 pub struct JobResult {
     pub metrics: JobMetrics,
     pub outputs: Vec<Vec<Record>>,
+    /// `Complete`, or `PartialWithDlq` when the DLQ is non-empty.
+    pub outcome: JobOutcome,
+    /// Work items that exhausted their retry budget.
+    pub dlq: DeadLetterQueue,
 }
 
 pub fn run_job(
@@ -233,22 +333,28 @@ pub(crate) struct ResourceSet {
 }
 
 impl ResourceSet {
-    pub(crate) fn build(sim: &mut FluidSim, topo: &Topology) -> ResourceSet {
+    /// The canonical resource-id layout for `topo`: pure arithmetic over
+    /// the creation order (ids are assigned `0..` as [`ResourceSet::build`]
+    /// adds them), with **no** simulation side effects. Snapshot resume
+    /// uses this to rebuild an executor's resource handles against an
+    /// already-populated restored [`FluidSim`]; `build` asserts against it
+    /// id-by-id, so the two can never drift.
+    pub(crate) fn layout(topo: &Topology) -> ResourceSet {
         let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
-        let sm_link: Vec<Vec<ResourceId>> = (0..s)
-            .map(|i| (0..m).map(|j| sim.add_resource(topo.b_sm.get(i, j))).collect())
-            .collect();
-        let mr_link: Vec<Vec<ResourceId>> = (0..m)
-            .map(|j| (0..r).map(|k| sim.add_resource(topo.b_mr.get(j, k))).collect())
-            .collect();
-        let src_egress: Vec<ResourceId> = (0..s).map(|_| sim.add_resource(NIC_BPS)).collect();
-        let map_ingress: Vec<ResourceId> = (0..m).map(|_| sim.add_resource(NIC_BPS)).collect();
-        let map_egress: Vec<ResourceId> = (0..m).map(|_| sim.add_resource(NIC_BPS)).collect();
-        let red_ingress: Vec<ResourceId> = (0..r).map(|_| sim.add_resource(NIC_BPS)).collect();
-        let map_compute: Vec<ResourceId> =
-            (0..m).map(|j| sim.add_resource(topo.c_map[j])).collect();
-        let red_compute: Vec<ResourceId> =
-            (0..r).map(|k| sim.add_resource(topo.c_red[k])).collect();
+        let mut next: ResourceId = 0;
+        let mut take = |n: usize, next: &mut ResourceId| -> Vec<ResourceId> {
+            let v: Vec<ResourceId> = (*next..*next + n).collect();
+            *next += n;
+            v
+        };
+        let sm_link: Vec<Vec<ResourceId>> = (0..s).map(|_| take(m, &mut next)).collect();
+        let mr_link: Vec<Vec<ResourceId>> = (0..m).map(|_| take(r, &mut next)).collect();
+        let src_egress = take(s, &mut next);
+        let map_ingress = take(m, &mut next);
+        let map_egress = take(m, &mut next);
+        let red_ingress = take(r, &mut next);
+        let map_compute = take(m, &mut next);
+        let red_compute = take(r, &mut next);
         ResourceSet {
             sm_link,
             mr_link,
@@ -259,6 +365,53 @@ impl ResourceSet {
             map_compute,
             red_compute,
         }
+    }
+
+    /// Total resources `build` registers for `topo`.
+    pub(crate) fn n_resources(topo: &Topology) -> usize {
+        let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        s * m + m * r + s + 3 * m + 2 * r
+    }
+
+    pub(crate) fn build(sim: &mut FluidSim, topo: &Topology) -> ResourceSet {
+        let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        let rs = ResourceSet::layout(topo);
+        // Register capacities in exactly the layout's canonical order,
+        // asserting each id matches (which also requires the sim to be
+        // empty — the layout numbers resources from zero).
+        let mut add = |sim: &mut FluidSim, expect: ResourceId, cap: f64| {
+            let got = sim.add_resource(cap);
+            assert_eq!(got, expect, "ResourceSet::build requires a fresh FluidSim");
+        };
+        for i in 0..s {
+            for j in 0..m {
+                add(sim, rs.sm_link[i][j], topo.b_sm.get(i, j));
+            }
+        }
+        for j in 0..m {
+            for k in 0..r {
+                add(sim, rs.mr_link[j][k], topo.b_mr.get(j, k));
+            }
+        }
+        for i in 0..s {
+            add(sim, rs.src_egress[i], NIC_BPS);
+        }
+        for j in 0..m {
+            add(sim, rs.map_ingress[j], NIC_BPS);
+        }
+        for j in 0..m {
+            add(sim, rs.map_egress[j], NIC_BPS);
+        }
+        for k in 0..r {
+            add(sim, rs.red_ingress[k], NIC_BPS);
+        }
+        for j in 0..m {
+            add(sim, rs.map_compute[j], topo.c_map[j]);
+        }
+        for k in 0..r {
+            add(sim, rs.red_compute[k], topo.c_red[k]);
+        }
+        rs
     }
 }
 
@@ -346,6 +499,12 @@ pub(crate) struct Executor<'a> {
     reduce_done: Vec<bool>,
     writes_left: Vec<usize>,
     all_shuffles_done: bool,
+    // retry budgets / dead-letter queue
+    /// Failed attempts per key range (owner failures while un-durable).
+    range_attempts: Vec<u32>,
+    /// Dead-lettered ranges (reduce never runs; bytes written off).
+    range_dead: Vec<bool>,
+    dlq: DeadLetterQueue,
     // slot accounting
     map_slots_free: Vec<usize>,
     reduce_slots_free: Vec<usize>,
@@ -383,6 +542,10 @@ impl<'a> Executor<'a> {
         let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
         assert_eq!(inputs.len(), s, "one input vector per source");
         assert!(weight > 0.0 && weight.is_finite(), "job weight must be positive");
+        assert!(
+            config.max_attempts >= 1,
+            "max_attempts must be >= 1 (an unbounded retry budget is not expressible)"
+        );
         let map_slots = ((config.map_slots as f64 * weight).round() as usize).max(1);
         let reduce_slots = ((config.reduce_slots as f64 * weight).round() as usize).max(1);
 
@@ -440,6 +603,9 @@ impl<'a> Executor<'a> {
             reduce_done: vec![false; r],
             writes_left: vec![0; r],
             all_shuffles_done: false,
+            range_attempts: vec![0; r],
+            range_dead: vec![false; r],
+            dlq: DeadLetterQueue::default(),
             map_slots_free: vec![map_slots; m],
             reduce_slots_free: vec![reduce_slots; r],
             dynamics,
@@ -523,6 +689,7 @@ impl<'a> Executor<'a> {
                     spec_fetching: false,
                     pending_parts: 0,
                     started_at: 0.0,
+                    attempts: 0,
                     outputs: None,
                 });
             }
@@ -837,28 +1004,8 @@ impl<'a> Executor<'a> {
             }
             Barrier::Local => {
                 self.parked_outputs.push((home, node, outs));
-                // Release a home cohort's outputs once that node has no
-                // maps left. Filtering by HOME (not exec) node matches
-                // the gate, so outputs of tasks that ran remotely
-                // (stolen or speculative winner) are released with
-                // their cohort instead of stranding unshuffled.
                 if self.maps_left_per_node[home] == 0 {
-                    let mine: Vec<(NodeId, NodeId, Vec<Vec<Record>>)> = {
-                        let mut kept = Vec::new();
-                        let mut released = Vec::new();
-                        for entry in self.parked_outputs.drain(..) {
-                            if entry.0 == home {
-                                released.push(entry);
-                            } else {
-                                kept.push(entry);
-                            }
-                        }
-                        self.parked_outputs = kept;
-                        released
-                    };
-                    for (_home, exec_node, outs) in mine {
-                        self.emit_shuffle(sim, exec_node, outs);
-                    }
+                    self.release_local_cohort(sim, home);
                 }
             }
             Barrier::Pipelined => {
@@ -877,12 +1024,68 @@ impl<'a> Executor<'a> {
         }
     }
 
+    /// Release a home cohort's parked outputs once that node has no maps
+    /// left (the Local map/shuffle barrier). Filtering by HOME (not exec)
+    /// node matches the gate, so outputs of tasks that ran remotely
+    /// (stolen or speculative winner) are released with their cohort
+    /// instead of stranding unshuffled. Shared by map completion and
+    /// split dead-lettering — both retire the cohort's last member.
+    fn release_local_cohort(&mut self, sim: &mut FluidSim, home: NodeId) {
+        let mine: Vec<(NodeId, NodeId, Vec<Vec<Record>>)> = {
+            let mut kept = Vec::new();
+            let mut released = Vec::new();
+            for entry in self.parked_outputs.drain(..) {
+                if entry.0 == home {
+                    released.push(entry);
+                } else {
+                    kept.push(entry);
+                }
+            }
+            self.parked_outputs = kept;
+            released
+        };
+        for (_home, exec_node, outs) in mine {
+            self.emit_shuffle(sim, exec_node, outs);
+        }
+    }
+
     fn emit_shuffle(&mut self, sim: &mut FluidSim, from_node: NodeId, outs: Vec<Vec<Record>>) {
         for (k, recs) in outs.into_iter().enumerate() {
             if recs.is_empty() {
                 continue;
             }
             let bytes = batch_size(&recs) as f64;
+            if self.range_dead[k] {
+                // The range was dead-lettered while this mapper was still
+                // running: record the output as Dead immediately (never
+                // wired, payload dropped) so the shuffle barrier cannot
+                // deadlock waiting on a range that will never drain.
+                let id = self.xfers.len();
+                self.xfers.push(ShuffleXfer {
+                    from: from_node,
+                    range: k,
+                    records: Vec::new(),
+                    bytes,
+                    state: XferState::Dead,
+                    sent_once: false,
+                });
+                self.range_xfers[k].push(id);
+                self.range_bytes[k] += bytes;
+                // Exact: byte counts are integers < 2^53 carried in f64;
+                // crediting the write-off on both sides keeps
+                // shuffle_bytes_delivered + dlq_bytes == shuffle_bytes.
+                self.metrics.shuffle_bytes += bytes;
+                self.metrics.dlq_bytes += bytes;
+                if let Some(e) = self
+                    .dlq
+                    .entries
+                    .iter_mut()
+                    .find(|e| e.kind == DlqKind::Range && e.id == k)
+                {
+                    e.bytes += bytes;
+                }
+                continue;
+            }
             let id = self.xfers.len();
             self.xfers.push(ShuffleXfer {
                 from: from_node,
@@ -1216,20 +1419,30 @@ impl<'a> Executor<'a> {
             })
             .map(|(&a, &ev)| (a, ev))
             .collect();
+        let mut exhausted: Vec<TaskId> = Vec::new();
         for (aid, ev) in doomed {
             sim.cancel(aid);
             self.pending.remove(&aid);
             match ev {
                 EngineEvent::MapFinished { task, speculative: false }
                 | EngineEvent::FetchArrived { task, speculative: false } => {
-                    // Re-queue the primary copy. A speculative copy (if
-                    // any) keeps running on its own node and can still
-                    // win the re-queued task outright.
+                    // The eviction consumes one attempt. Within budget,
+                    // re-queue the primary copy (a speculative copy, if
+                    // any, keeps running on its own node and can still
+                    // win the re-queued task outright); at budget, the
+                    // split is dead-lettered below, after every doomed
+                    // activity has been retired.
+                    let budget = self.config.max_attempts;
                     let t = &mut self.tasks[task];
                     t.state = TaskState::Ready;
                     t.exec_node = None;
                     t.activity = None;
-                    self.metrics.tasks_requeued += 1;
+                    t.attempts += 1;
+                    if t.attempts >= budget {
+                        exhausted.push(task);
+                    } else {
+                        self.metrics.tasks_requeued += 1;
+                    }
                 }
                 EngineEvent::MapFinished { task, speculative: true }
                 | EngineEvent::FetchArrived { task, speculative: true } => {
@@ -1241,8 +1454,129 @@ impl<'a> Executor<'a> {
                 _ => unreachable!("doomed set only holds map/fetch events"),
             }
         }
+        for tid in exhausted {
+            self.dead_letter_split(sim, tid);
+        }
         // No task occupies the node now; close all slots until recovery.
         self.map_slots_free[node] = 0;
+    }
+
+    /// Route map split `tid` to the dead-letter queue: kill any surviving
+    /// speculative copy, retire the split from every barrier gate exactly
+    /// as a completed map with no output would, and record the entry. The
+    /// split's push bytes were delivered and stay credited; no shuffle
+    /// bytes ever exist for it.
+    fn dead_letter_split(&mut self, sim: &mut FluidSim, tid: TaskId) {
+        debug_assert!(
+            self.tasks[tid].state != TaskState::Done && self.tasks[tid].state != TaskState::Dead,
+            "dead-lettering a finished split"
+        );
+        // A speculative copy on a *surviving* node may still be running
+        // (fetching or computing); budget exhaustion retires the split as
+        // a whole, so cancel it. `pending` is a BTreeMap — ascending
+        // ActivityId order, deterministic.
+        let doomed: Vec<ActivityId> = self
+            .pending
+            .iter()
+            .filter(|&(_, &ev)| match ev {
+                EngineEvent::MapFinished { task, .. } | EngineEvent::FetchArrived { task, .. } => {
+                    task == tid
+                }
+                _ => false,
+            })
+            .map(|(&a, _)| a)
+            .collect();
+        for a in doomed {
+            sim.cancel(a);
+            self.pending.remove(&a);
+        }
+        if let Some(spec_node) = self.tasks[tid].spec_node.take() {
+            // The spec node is up (a node failure clears spec bookkeeping
+            // for copies it hosted), so its slot really is occupied.
+            self.map_slots_free[spec_node] += 1;
+        }
+        self.tasks[tid].spec_activity = None;
+        self.tasks[tid].spec_fetching = false;
+        self.tasks[tid].state = TaskState::Dead;
+
+        let home = self.tasks[tid].mapper;
+        self.maps_left -= 1;
+        self.maps_left_per_node[home] = self.maps_left_per_node[home].saturating_sub(1);
+        self.metrics.splits_dead_lettered += 1;
+        self.dlq.entries.push(DlqEntry {
+            kind: DlqKind::Split,
+            id: tid,
+            bytes: self.tasks[tid].bytes,
+            attempts: self.tasks[tid].attempts,
+            at: sim.now(),
+        });
+        self.metrics.makespan = self.metrics.makespan.max(sim.now());
+
+        // Mirror the barrier bookkeeping of a map completion (with no
+        // output): the dead split must not gate the shuffle forever.
+        match self.config.barriers.map_shuffle {
+            Barrier::Global => {
+                if self.maps_left == 0 {
+                    self.release_shuffle(sim);
+                }
+            }
+            Barrier::Local => {
+                if self.maps_left_per_node[home] == 0 {
+                    self.release_local_cohort(sim, home);
+                }
+            }
+            Barrier::Pipelined => {}
+        }
+        self.maybe_finish_shuffle_phase(sim);
+    }
+
+    /// Route key range `k` to the dead-letter queue: write off every one
+    /// of its transfers (bytes move to `metrics.dlq_bytes`, preserving
+    /// `shuffle_bytes_delivered + dlq_bytes == shuffle_bytes`), close its
+    /// shuffle gate, and mark the range reduced-without-running so the
+    /// job can finish around it. Called at failure time — never deferred
+    /// to a reassignment that may not exist.
+    fn dead_letter_range(&mut self, sim: &mut FluidSim, k: usize) {
+        debug_assert!(!self.range_dead[k] && !self.reduce_compute_done[k]);
+        self.range_dead[k] = true;
+        let mut dead_bytes = 0.0f64;
+        for i in 0..self.range_xfers[k].len() {
+            let id = self.range_xfers[k][i];
+            debug_assert!(
+                self.xfers[id].state != XferState::InFlight,
+                "dead-lettered range still has in-flight transfers"
+            );
+            if self.xfers[id].state == XferState::Dead {
+                continue;
+            }
+            if self.xfers[id].state == XferState::Delivered {
+                // Defensive: the reducer-failure path de-credits before
+                // dead-lettering, so this arm is normally unreachable.
+                self.metrics.shuffle_bytes_delivered -= self.xfers[id].bytes;
+            }
+            self.xfers[id].state = XferState::Dead;
+            self.xfers[id].records = Vec::new();
+            // Exact: byte counts are integers < 2^53 carried in f64, so
+            // the write-off keeps the conservation identity exact.
+            self.metrics.dlq_bytes += self.xfers[id].bytes;
+            dead_bytes += self.xfers[id].bytes;
+        }
+        self.shuffle_xfers_left[k] = 0;
+        // Reduced-without-running: the gate flags let `is_complete` and
+        // `maybe_start_reduces` treat the range as settled.
+        self.reduce_started[k] = true;
+        self.reduce_done[k] = true;
+        self.reduce_compute_done[k] = true;
+        self.range_compute[k] = None;
+        self.metrics.ranges_dead_lettered += 1;
+        self.dlq.entries.push(DlqEntry {
+            kind: DlqKind::Range,
+            id: k,
+            bytes: dead_bytes,
+            attempts: self.range_attempts[k],
+            at: sim.now(),
+        });
+        self.metrics.makespan = self.metrics.makespan.max(sim.now());
     }
 
     /// Mapper `node` recovers with every slot free (all its work was
@@ -1388,6 +1722,24 @@ impl<'a> Executor<'a> {
             // barrier re-gates on the replayed deliveries.
             self.all_shuffles_done = false;
         }
+
+        // 2.5 The eviction consumes one attempt per orphaned range.
+        //     Exhausted ranges are dead-lettered *at failure time* —
+        //     never deferred to a reassignment that may not exist (a
+        //     full reducer blackout leaves no adoption target, and a
+        //     deferred write-off would strand the range forever).
+        //     Dead-lettering marks the range settled, so steps 3–4
+        //     skip it via their `reduce_compute_done` filters.
+        for k in 0..r {
+            if self.range_owner[k] != node || self.reduce_compute_done[k] {
+                continue;
+            }
+            self.range_attempts[k] += 1;
+            if self.range_attempts[k] >= self.config.max_attempts {
+                self.dead_letter_range(sim, k);
+            }
+        }
+        self.maybe_finish_shuffle_phase(sim);
 
         // 3. Re-partition each orphaned range via the scheduler (ascending
         //    range order for determinism). Outstanding-bytes bookkeeping
@@ -1551,6 +1903,413 @@ impl<'a> Executor<'a> {
         }
     }
 
+    // ----------------------------------------------- checkpoint codec
+    //
+    // `encode_state` serializes every mutable field (the immutable
+    // inputs — topology, plan, app, config, inputs — are the resume
+    // contract: the caller reconstructs the executor from the same
+    // arguments and `restore_state` overlays the dynamic state).
+    // Snapshots are only legal at *event boundaries*: the event heap
+    // drained (`drain` returned), so only its clock survives; in-flight
+    // fluid activities are captured by the separately exported
+    // [`FluidSim`] state, referenced here by [`ActivityId`].
+
+    /// Number of map splits (`build_splits` is deterministic, so this is
+    /// a cheap compatibility probe for snapshot headers).
+    pub(crate) fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Serialize the executor's mutable state. Panics if called away
+    /// from an event boundary (undrained event heap) or mid-dispatch
+    /// (materialized-but-untaken map outputs).
+    pub(crate) fn encode_state(&self) -> Json {
+        assert!(
+            self.queue.is_empty(),
+            "snapshots are only legal at event boundaries (event heap drained)"
+        );
+        let recs = |rs: &[Record]| -> Json {
+            Json::Arr(
+                rs.iter()
+                    .map(|r| {
+                        Json::Arr(vec![Json::Str(r.key.clone()), Json::Str(r.value.clone())])
+                    })
+                    .collect(),
+            )
+        };
+        let uints = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::uint(x)).collect());
+        let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
+        let tasks = Json::Arr(
+            self.tasks
+                .iter()
+                .map(|t| {
+                    assert!(
+                        t.outputs.is_none(),
+                        "snapshots are only legal at event boundaries (untaken map outputs)"
+                    );
+                    Json::Obj(vec![
+                        ("state".into(), Json::uint(task_state_code(t.state))),
+                        ("exec".into(), Json::opt_uint(t.exec_node)),
+                        ("act".into(), Json::opt_uint(t.activity)),
+                        ("spec".into(), Json::opt_uint(t.spec_node)),
+                        ("spec_act".into(), Json::opt_uint(t.spec_activity)),
+                        ("spec_fetch".into(), Json::Bool(t.spec_fetching)),
+                        ("parts_left".into(), Json::uint(t.pending_parts)),
+                        ("started".into(), Json::f64_bits(t.started_at)),
+                        ("attempts".into(), Json::uint(t.attempts as usize)),
+                    ])
+                })
+                .collect(),
+        );
+        let push_xfers = Json::Arr(
+            self.push_xfers
+                .iter()
+                .map(|x| {
+                    Json::Obj(vec![
+                        ("task".into(), Json::uint(x.task)),
+                        ("src".into(), Json::uint(x.source)),
+                        ("to".into(), Json::uint(x.to)),
+                        ("bytes".into(), Json::f64_bits(x.bytes)),
+                        ("state".into(), Json::uint(xfer_state_code(x.state))),
+                        ("sent".into(), Json::Bool(x.sent_once)),
+                        ("act".into(), Json::opt_uint(x.activity)),
+                    ])
+                })
+                .collect(),
+        );
+        let xfers = Json::Arr(
+            self.xfers
+                .iter()
+                .map(|x| {
+                    Json::Obj(vec![
+                        ("from".into(), Json::uint(x.from)),
+                        ("range".into(), Json::uint(x.range)),
+                        ("bytes".into(), Json::f64_bits(x.bytes)),
+                        ("state".into(), Json::uint(xfer_state_code(x.state))),
+                        ("sent".into(), Json::Bool(x.sent_once)),
+                        ("recs".into(), recs(&x.records)),
+                    ])
+                })
+                .collect(),
+        );
+        let parked = Json::Arr(
+            self.parked_outputs
+                .iter()
+                .map(|(home, exec, outs)| {
+                    Json::Obj(vec![
+                        ("home".into(), Json::uint(*home)),
+                        ("exec".into(), Json::uint(*exec)),
+                        ("outs".into(), Json::Arr(outs.iter().map(|o| recs(o)).collect())),
+                    ])
+                })
+                .collect(),
+        );
+        let pending = Json::Arr(
+            self.pending
+                .iter()
+                .map(|(&aid, ev)| Json::Arr(vec![Json::uint(aid), event_to_json(ev)]))
+                .collect(),
+        );
+        let dlq = Json::Arr(
+            self.dlq
+                .entries
+                .iter()
+                .map(|e| {
+                    Json::Obj(vec![
+                        (
+                            "kind".into(),
+                            Json::Str(
+                                match e.kind {
+                                    DlqKind::Split => "split",
+                                    DlqKind::Range => "range",
+                                }
+                                .into(),
+                            ),
+                        ),
+                        ("id".into(), Json::uint(e.id)),
+                        ("bytes".into(), Json::f64_bits(e.bytes)),
+                        ("attempts".into(), Json::uint(e.attempts as usize)),
+                        ("at".into(), Json::f64_bits(e.at)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("clock".into(), Json::f64_bits(self.queue.now())),
+            ("dyn_cursor".into(), Json::uint(self.dyn_cursor)),
+            ("push_parts_left".into(), Json::uint(self.push_parts_left)),
+            ("maps_left".into(), Json::uint(self.maps_left)),
+            ("maps_left_per_node".into(), uints(&self.maps_left_per_node)),
+            ("shuffle_xfers_left".into(), uints(&self.shuffle_xfers_left)),
+            ("all_shuffles_done".into(), Json::Bool(self.all_shuffles_done)),
+            ("range_owner".into(), uints(&self.range_owner)),
+            ("reducer_up".into(), bools(&self.reducer_up)),
+            (
+                "range_compute".into(),
+                Json::Arr(self.range_compute.iter().map(|&a| Json::opt_uint(a)).collect()),
+            ),
+            ("reduce_compute_done".into(), bools(&self.reduce_compute_done)),
+            ("reduce_started".into(), bools(&self.reduce_started)),
+            ("reduce_done".into(), bools(&self.reduce_done)),
+            ("writes_left".into(), uints(&self.writes_left)),
+            (
+                "range_attempts".into(),
+                Json::Arr(self.range_attempts.iter().map(|&a| Json::uint(a as usize)).collect()),
+            ),
+            ("range_dead".into(), bools(&self.range_dead)),
+            ("node_up".into(), bools(&self.node_up)),
+            ("map_slots_free".into(), uints(&self.map_slots_free)),
+            ("reduce_slots_free".into(), uints(&self.reduce_slots_free)),
+            (
+                "durations".into(),
+                Json::Arr(self.durations.iter().map(|&d| Json::f64_bits(d)).collect()),
+            ),
+            ("tasks".into(), tasks),
+            ("push_xfers".into(), push_xfers),
+            ("xfers".into(), xfers),
+            ("parked_outputs".into(), parked),
+            ("pending".into(), pending),
+            ("dlq".into(), dlq),
+            (
+                "outputs".into(),
+                Json::Arr(self.outputs.iter().map(|o| recs(o)).collect()),
+            ),
+            ("metrics".into(), super::snapshot::encode_metrics(&self.metrics)),
+        ])
+    }
+
+    /// Overlay a decoded snapshot onto a freshly constructed executor
+    /// (same topology/plan/app/config/inputs/weight/tag — the caller's
+    /// contract, compatibility-probed by [`super::snapshot`]'s header).
+    /// `n_activities` is the restored fluid simulation's activity count,
+    /// used to bounds-check every [`ActivityId`] reference. On error the
+    /// executor is left partially overwritten — discard it.
+    pub(crate) fn restore_state(&mut self, st: &Json, n_activities: usize) -> Result<(), String> {
+        let (m, r) = (self.topo.n_mappers(), self.topo.n_reducers());
+        let uints = |j: &Json, n: usize, what: &str| -> Result<Vec<usize>, String> {
+            let arr = j.as_arr()?;
+            if arr.len() != n {
+                return Err(format!("{what}: expected {n} entries, got {}", arr.len()));
+            }
+            arr.iter().map(|v| v.as_usize()).collect()
+        };
+        let bools = |j: &Json, n: usize, what: &str| -> Result<Vec<bool>, String> {
+            let arr = j.as_arr()?;
+            if arr.len() != n {
+                return Err(format!("{what}: expected {n} entries, got {}", arr.len()));
+            }
+            arr.iter().map(|v| v.as_bool()).collect()
+        };
+        let recs = |j: &Json| -> Result<Vec<Record>, String> {
+            j.as_arr()?
+                .iter()
+                .map(|p| {
+                    let kv = p.as_arr()?;
+                    if kv.len() != 2 {
+                        return Err("record must be a [key, value] pair".into());
+                    }
+                    Ok(Record::new(kv[0].as_str()?, kv[1].as_str()?))
+                })
+                .collect()
+        };
+        let opt_act = |j: &Json| -> Result<Option<ActivityId>, String> {
+            let a = j.as_opt_usize()?;
+            if let Some(id) = a {
+                if id >= n_activities {
+                    return Err(format!("activity id {id} out of range (< {n_activities})"));
+                }
+            }
+            Ok(a)
+        };
+
+        self.queue.restore_clock(st.field("clock")?.as_f64_bits()?);
+        self.dyn_cursor = st.field("dyn_cursor")?.as_usize()?;
+        if let Some(trace) = self.dynamics {
+            if self.dyn_cursor > trace.events().len() {
+                return Err("dynamics cursor past the end of the trace".into());
+            }
+        }
+        self.push_parts_left = st.field("push_parts_left")?.as_usize()?;
+        self.maps_left = st.field("maps_left")?.as_usize()?;
+        self.maps_left_per_node = uints(st.field("maps_left_per_node")?, m, "maps_left_per_node")?;
+        self.shuffle_xfers_left =
+            uints(st.field("shuffle_xfers_left")?, r, "shuffle_xfers_left")?;
+        self.all_shuffles_done = st.field("all_shuffles_done")?.as_bool()?;
+        self.range_owner = uints(st.field("range_owner")?, r, "range_owner")?;
+        if self.range_owner.iter().any(|&o| o >= r) {
+            return Err("range owner out of range".into());
+        }
+        self.reducer_up = bools(st.field("reducer_up")?, r, "reducer_up")?;
+        {
+            let arr = st.field("range_compute")?.as_arr()?;
+            if arr.len() != r {
+                return Err(format!("range_compute: expected {r} entries, got {}", arr.len()));
+            }
+            self.range_compute = arr.iter().map(&opt_act).collect::<Result<_, _>>()?;
+        }
+        self.reduce_compute_done =
+            bools(st.field("reduce_compute_done")?, r, "reduce_compute_done")?;
+        self.reduce_started = bools(st.field("reduce_started")?, r, "reduce_started")?;
+        self.reduce_done = bools(st.field("reduce_done")?, r, "reduce_done")?;
+        self.writes_left = uints(st.field("writes_left")?, r, "writes_left")?;
+        self.range_attempts = uints(st.field("range_attempts")?, r, "range_attempts")?
+            .into_iter()
+            .map(|a| a as u32)
+            .collect();
+        self.range_dead = bools(st.field("range_dead")?, r, "range_dead")?;
+        self.node_up = bools(st.field("node_up")?, m, "node_up")?;
+        self.map_slots_free = uints(st.field("map_slots_free")?, m, "map_slots_free")?;
+        self.reduce_slots_free = uints(st.field("reduce_slots_free")?, r, "reduce_slots_free")?;
+        self.durations = st
+            .field("durations")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_f64_bits())
+            .collect::<Result<_, _>>()?;
+
+        let tasks = st.field("tasks")?.as_arr()?;
+        if tasks.len() != self.tasks.len() {
+            return Err(format!(
+                "snapshot has {} tasks, this job builds {}",
+                tasks.len(),
+                self.tasks.len()
+            ));
+        }
+        for (t, j) in self.tasks.iter_mut().zip(tasks) {
+            t.state = task_state_from_code(j.field("state")?.as_usize()?)?;
+            t.exec_node = j.field("exec")?.as_opt_usize()?;
+            t.activity = opt_act(j.field("act")?)?;
+            t.spec_node = j.field("spec")?.as_opt_usize()?;
+            t.spec_activity = opt_act(j.field("spec_act")?)?;
+            t.spec_fetching = j.field("spec_fetch")?.as_bool()?;
+            t.pending_parts = j.field("parts_left")?.as_usize()?;
+            t.started_at = j.field("started")?.as_f64_bits()?;
+            t.attempts = j.field("attempts")?.as_usize()? as u32;
+            t.outputs = None;
+            if t.exec_node.map_or(false, |n| n >= m) || t.spec_node.map_or(false, |n| n >= m) {
+                return Err("task exec/spec node out of range".into());
+            }
+        }
+
+        // Transfer tables are rebuilt wholesale; the per-source and
+        // per-range indexes (and their byte totals) are re-derived by
+        // walking in creation order — the same accumulation order the
+        // original run used, so the f64 sums are bit-identical.
+        let s = self.topo.n_sources();
+        self.push_xfers = Vec::new();
+        self.source_xfers = vec![Vec::new(); s];
+        self.source_push_bytes = vec![0.0; s];
+        for j in st.field("push_xfers")?.as_arr()? {
+            let x = PushXfer {
+                task: j.field("task")?.as_usize()?,
+                source: j.field("src")?.as_usize()?,
+                to: j.field("to")?.as_usize()?,
+                bytes: j.field("bytes")?.as_f64_bits()?,
+                state: xfer_state_from_code(j.field("state")?.as_usize()?)?,
+                sent_once: j.field("sent")?.as_bool()?,
+                activity: opt_act(j.field("act")?)?,
+            };
+            if x.task >= self.tasks.len() || x.source >= s || x.to >= m {
+                return Err("push transfer reference out of range".into());
+            }
+            self.source_xfers[x.source].push(self.push_xfers.len());
+            self.source_push_bytes[x.source] += x.bytes;
+            self.push_xfers.push(x);
+        }
+        self.xfers = Vec::new();
+        self.range_xfers = vec![Vec::new(); r];
+        self.range_bytes = vec![0.0; r];
+        for j in st.field("xfers")?.as_arr()? {
+            let x = ShuffleXfer {
+                from: j.field("from")?.as_usize()?,
+                range: j.field("range")?.as_usize()?,
+                bytes: j.field("bytes")?.as_f64_bits()?,
+                state: xfer_state_from_code(j.field("state")?.as_usize()?)?,
+                sent_once: j.field("sent")?.as_bool()?,
+                records: recs(j.field("recs")?)?,
+            };
+            if x.from >= m || x.range >= r {
+                return Err("shuffle transfer reference out of range".into());
+            }
+            self.range_xfers[x.range].push(self.xfers.len());
+            self.range_bytes[x.range] += x.bytes;
+            self.xfers.push(x);
+        }
+
+        self.parked_outputs = Vec::new();
+        for j in st.field("parked_outputs")?.as_arr()? {
+            let home = j.field("home")?.as_usize()?;
+            let exec = j.field("exec")?.as_usize()?;
+            if home >= m || exec >= m {
+                return Err("parked output node out of range".into());
+            }
+            let outs = j
+                .field("outs")?
+                .as_arr()?
+                .iter()
+                .map(&recs)
+                .collect::<Result<Vec<_>, _>>()?;
+            if outs.len() != r {
+                return Err("parked output must have one record list per range".into());
+            }
+            self.parked_outputs.push((home, exec, outs));
+        }
+
+        self.pending = BTreeMap::new();
+        for j in st.field("pending")?.as_arr()? {
+            let pair = j.as_arr()?;
+            if pair.len() != 2 {
+                return Err("pending entry must be [activity, event]".into());
+            }
+            let aid = pair[0].as_usize()?;
+            if aid >= n_activities {
+                return Err(format!("pending activity {aid} out of range (< {n_activities})"));
+            }
+            let ev = event_from_json(&pair[1])?;
+            let (n_push, n_shuf, n_tasks) = (self.push_xfers.len(), self.xfers.len(), self.tasks.len());
+            let ok = match ev {
+                EngineEvent::PushArrived { xfer } => xfer < n_push,
+                EngineEvent::ShuffleArrived { xfer } => xfer < n_shuf,
+                EngineEvent::FetchArrived { task, .. } | EngineEvent::MapFinished { task, .. } => {
+                    task < n_tasks
+                }
+                EngineEvent::ReduceFinished { range } | EngineEvent::OutputWritten { range } => {
+                    range < r
+                }
+            };
+            if !ok {
+                return Err("pending event reference out of range".into());
+            }
+            if self.pending.insert(aid, ev).is_some() {
+                return Err(format!("duplicate pending activity {aid}"));
+            }
+        }
+
+        self.dlq = DeadLetterQueue::default();
+        for j in st.field("dlq")?.as_arr()? {
+            let kind = match j.field("kind")?.as_str()? {
+                "split" => DlqKind::Split,
+                "range" => DlqKind::Range,
+                other => return Err(format!("unknown dlq kind `{other}`")),
+            };
+            self.dlq.entries.push(DlqEntry {
+                kind,
+                id: j.field("id")?.as_usize()?,
+                bytes: j.field("bytes")?.as_f64_bits()?,
+                attempts: j.field("attempts")?.as_usize()? as u32,
+                at: j.field("at")?.as_f64_bits()?,
+            });
+        }
+
+        let outputs = st.field("outputs")?.as_arr()?;
+        if outputs.len() != r {
+            return Err(format!("outputs: expected {r} entries, got {}", outputs.len()));
+        }
+        self.outputs = outputs.iter().map(&recs).collect::<Result<_, _>>()?;
+        self.metrics = super::snapshot::decode_metrics(st.field("metrics")?)?;
+        Ok(())
+    }
+
     // ----------------------------------------------- driver interface
     //
     // The granular lifecycle [`run_job`] and the tenancy engine both
@@ -1600,8 +2359,92 @@ impl<'a> Executor<'a> {
             self.maps_left,
             self.shuffle_xfers_left
         );
-        JobResult { metrics: self.metrics, outputs: self.outputs }
+        let outcome = if self.dlq.is_empty() {
+            JobOutcome::Complete
+        } else {
+            JobOutcome::PartialWithDlq
+        };
+        JobResult { metrics: self.metrics, outputs: self.outputs, outcome, dlq: self.dlq }
     }
+}
+
+// Snapshot enum codes (stable on-disk values — extend, never renumber).
+
+fn task_state_code(s: TaskState) -> usize {
+    match s {
+        TaskState::WaitingForData => 0,
+        TaskState::Ready => 1,
+        TaskState::Running => 2,
+        TaskState::Done => 3,
+        TaskState::Dead => 4,
+    }
+}
+
+fn task_state_from_code(c: usize) -> Result<TaskState, String> {
+    Ok(match c {
+        0 => TaskState::WaitingForData,
+        1 => TaskState::Ready,
+        2 => TaskState::Running,
+        3 => TaskState::Done,
+        4 => TaskState::Dead,
+        other => return Err(format!("unknown task state code {other}")),
+    })
+}
+
+fn xfer_state_code(s: XferState) -> usize {
+    match s {
+        XferState::Held => 0,
+        XferState::InFlight => 1,
+        XferState::Delivered => 2,
+        XferState::Dead => 3,
+    }
+}
+
+fn xfer_state_from_code(c: usize) -> Result<XferState, String> {
+    Ok(match c {
+        0 => XferState::Held,
+        1 => XferState::InFlight,
+        2 => XferState::Delivered,
+        3 => XferState::Dead,
+        other => return Err(format!("unknown transfer state code {other}")),
+    })
+}
+
+fn event_to_json(ev: &EngineEvent) -> Json {
+    let one = |t: &str, v: usize| Json::Arr(vec![Json::Str(t.into()), Json::uint(v)]);
+    let two = |t: &str, v: usize, s: bool| {
+        Json::Arr(vec![Json::Str(t.into()), Json::uint(v), Json::Bool(s)])
+    };
+    match *ev {
+        EngineEvent::PushArrived { xfer } => one("push", xfer),
+        EngineEvent::FetchArrived { task, speculative } => two("fetch", task, speculative),
+        EngineEvent::MapFinished { task, speculative } => two("map", task, speculative),
+        EngineEvent::ShuffleArrived { xfer } => one("shuffle", xfer),
+        EngineEvent::ReduceFinished { range } => one("reduce", range),
+        EngineEvent::OutputWritten { range } => one("output", range),
+    }
+}
+
+fn event_from_json(j: &Json) -> Result<EngineEvent, String> {
+    let arr = j.as_arr()?;
+    if arr.len() < 2 {
+        return Err("event must be [tag, id, ...]".into());
+    }
+    let id = arr[1].as_usize()?;
+    let spec = |arr: &[Json]| -> Result<bool, String> {
+        arr.get(2)
+            .ok_or_else(|| "event missing speculative flag".to_string())?
+            .as_bool()
+    };
+    Ok(match arr[0].as_str()? {
+        "push" => EngineEvent::PushArrived { xfer: id },
+        "fetch" => EngineEvent::FetchArrived { task: id, speculative: spec(arr)? },
+        "map" => EngineEvent::MapFinished { task: id, speculative: spec(arr)? },
+        "shuffle" => EngineEvent::ShuffleArrived { xfer: id },
+        "reduce" => EngineEvent::ReduceFinished { range: id },
+        "output" => EngineEvent::OutputWritten { range: id },
+        other => return Err(format!("unknown event tag `{other}`")),
+    })
 }
 
 #[cfg(test)]

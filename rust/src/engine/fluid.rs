@@ -554,6 +554,132 @@ impl FluidSim {
         while self.step().is_some() {}
         self.now
     }
+
+    /// Export the full dynamic state for checkpointing. Everything that
+    /// influences future arithmetic is captured *verbatim* — including
+    /// the `active` list order (component numbering follows first
+    /// appearance along it), stored rates, the dirty flag/list and the
+    /// perf counters — so a sim rebuilt via [`FluidSim::from_state`]
+    /// continues bit-identically. Purely transient scratch (`res_stamp`,
+    /// `res_slot`, `stamp`) is rebuilt from zero on every recompute and
+    /// is not part of the state.
+    pub(crate) fn export_state(&self) -> FluidState {
+        FluidState {
+            now: self.now,
+            threads: self.threads,
+            capacities: self.resources.iter().map(|r| r.capacity).collect(),
+            activities: self
+                .activities
+                .iter()
+                .map(|a| FluidActivityState {
+                    remaining: a.remaining,
+                    resources: a.resources.clone(),
+                    done: a.done,
+                    rate: a.rate,
+                    tag: a.tag,
+                })
+                .collect(),
+            active: self.active.clone(),
+            dirty: self.dirty,
+            dirty_res: self.dirty_res.clone(),
+            n_resolves: self.n_resolves,
+            n_resources_touched: self.n_resources_touched,
+        }
+    }
+
+    /// Rebuild a simulator from exported state (see
+    /// [`FluidSim::export_state`] for what exactness requires).
+    pub(crate) fn from_state(st: &FluidState) -> Result<FluidSim, String> {
+        let n = st.capacities.len();
+        for (i, &c) in st.capacities.iter().enumerate() {
+            if !(c > 0.0 && c.is_finite()) {
+                return Err(format!("fluid state: resource {i} capacity {c} invalid"));
+            }
+        }
+        let mut res_dirty = vec![false; n];
+        for &r in &st.dirty_res {
+            if r >= n {
+                return Err(format!("fluid state: dirty resource {r} out of range"));
+            }
+            res_dirty[r] = true;
+        }
+        for (i, a) in st.activities.iter().enumerate() {
+            if a.resources.is_empty() {
+                return Err(format!("fluid state: activity {i} crosses no resources"));
+            }
+            for &r in &a.resources {
+                if r >= n {
+                    return Err(format!("fluid state: activity {i} resource {r} dangling"));
+                }
+            }
+            if !(a.remaining >= 0.0 && a.remaining.is_finite()) {
+                return Err(format!(
+                    "fluid state: activity {i} remaining {} invalid",
+                    a.remaining
+                ));
+            }
+        }
+        for &a in &st.active {
+            if a >= st.activities.len() {
+                return Err(format!("fluid state: active id {a} out of range"));
+            }
+        }
+        Ok(FluidSim {
+            resources: st.capacities.iter().map(|&capacity| Resource { capacity }).collect(),
+            activities: st
+                .activities
+                .iter()
+                .map(|a| Activity {
+                    remaining: a.remaining,
+                    resources: a.resources.clone(),
+                    done: a.done,
+                    rate: a.rate,
+                    tag: a.tag,
+                })
+                .collect(),
+            active: st.active.clone(),
+            now: st.now,
+            dirty: st.dirty,
+            res_stamp: vec![0; n],
+            res_slot: vec![0; n],
+            stamp: 0,
+            res_dirty,
+            dirty_res: st.dirty_res.clone(),
+            threads: st.threads,
+            n_resolves: st.n_resolves,
+            n_resources_touched: st.n_resources_touched,
+        })
+    }
+}
+
+/// One activity's exported state (see [`FluidSim::export_state`]).
+#[derive(Debug, Clone)]
+pub(crate) struct FluidActivityState {
+    pub remaining: f64,
+    pub resources: Vec<ResourceId>,
+    pub done: bool,
+    pub rate: f64,
+    pub tag: u64,
+}
+
+/// Exported dynamic state of a [`FluidSim`], sufficient to continue the
+/// simulation bit-identically. Produced by [`FluidSim::export_state`],
+/// consumed by [`FluidSim::from_state`]; the snapshot codec
+/// ([`super::snapshot`]) serializes it with bit-exact floats.
+#[derive(Debug, Clone)]
+pub(crate) struct FluidState {
+    pub now: f64,
+    pub threads: usize,
+    pub capacities: Vec<f64>,
+    pub activities: Vec<FluidActivityState>,
+    /// Verbatim copy of the not-yet-pruned active list: its *order*
+    /// drives component numbering, and stale (done) entries are pruned
+    /// lazily — both must survive the round trip.
+    pub active: Vec<ActivityId>,
+    pub dirty: bool,
+    pub dirty_res: Vec<ResourceId>,
+    pub n_resolves: u64,
+    pub n_resources_touched: u64,
 }
 
 /// Progressive filling (lazy-heap form) over one connected component.
@@ -980,6 +1106,76 @@ mod tests {
     #[should_panic(expected = "thread count must be >= 1")]
     fn zero_threads_rejected() {
         FluidSim::new().set_threads(0);
+    }
+
+    /// Export/restore mid-run must continue bit-identically: run a mesh
+    /// halfway, snapshot, and compare the restored sim's remaining event
+    /// times bit-for-bit against the uninterrupted one.
+    #[test]
+    fn export_restore_continues_bit_identically() {
+        use crate::util::rng::Pcg64;
+        let build = || -> FluidSim {
+            let mut rng = Pcg64::new(0xC0FFEE);
+            let mut sim = FluidSim::new();
+            let rs: Vec<ResourceId> =
+                (0..10).map(|i| sim.add_resource(1.0 + (i % 4) as f64)).collect();
+            for round in 0..25 {
+                for _ in 0..rng.range(1, 4) {
+                    let k = rng.range(1, 4);
+                    let mut res: Vec<ResourceId> =
+                        (0..k).map(|_| rs[rng.range(0, rs.len())]).collect();
+                    res.sort_unstable();
+                    res.dedup();
+                    sim.add_activity(rng.uniform(1.0, 15.0), res);
+                }
+                if round % 5 == 2 {
+                    sim.set_capacity(rs[rng.range(0, rs.len())], rng.uniform(0.5, 5.0));
+                }
+                if round < 12 {
+                    sim.step().unwrap();
+                }
+            }
+            sim
+        };
+        let drain = |sim: &mut FluidSim| -> Vec<u64> {
+            let mut out = Vec::new();
+            while let Some((t, done)) = sim.step() {
+                out.push(t.to_bits());
+                out.extend(done.iter().map(|&d| d as u64));
+            }
+            out
+        };
+        let mut baseline = build();
+        let mut restored = FluidSim::from_state(&baseline.export_state()).unwrap();
+        assert_eq!(restored.now().to_bits(), baseline.now().to_bits());
+        assert_eq!(restored.resolves(), baseline.resolves());
+        assert_eq!(drain(&mut restored), drain(&mut baseline));
+        assert_eq!(restored.resolves(), baseline.resolves());
+        assert_eq!(restored.resources_touched(), baseline.resources_touched());
+    }
+
+    #[test]
+    fn from_state_rejects_dangling_references() {
+        let mut sim = FluidSim::new();
+        let r = sim.add_resource(1.0);
+        sim.add_activity(5.0, vec![r]);
+        let good = sim.export_state();
+
+        let mut bad = good.clone();
+        bad.activities[0].resources = vec![7];
+        assert!(FluidSim::from_state(&bad).is_err());
+
+        let mut bad = good.clone();
+        bad.active = vec![9];
+        assert!(FluidSim::from_state(&bad).is_err());
+
+        let mut bad = good.clone();
+        bad.capacities[0] = 0.0;
+        assert!(FluidSim::from_state(&bad).is_err());
+
+        let mut bad = good;
+        bad.dirty_res = vec![3];
+        assert!(FluidSim::from_state(&bad).is_err());
     }
 
     /// Many short sequential activities: the maintained active set keeps

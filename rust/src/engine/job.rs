@@ -110,6 +110,13 @@ pub struct JobConfig {
     /// Results are bit-identical for every value ≥ 1; values > 1 only
     /// change wall-clock time. Must be ≥ 1.
     pub threads: usize,
+    /// Retry budget per work item (map split / reduce key range). Each
+    /// node failure that evicts the item counts one attempt; an item
+    /// reaching `max_attempts` failed attempts is routed to the
+    /// dead-letter queue instead of being requeued forever (the pre-DLQ
+    /// engine livelocked under flapping traces). Must be ≥ 1 — an
+    /// unbounded budget is deliberately not expressible.
+    pub max_attempts: u32,
 }
 
 impl Default for JobConfig {
@@ -127,6 +134,7 @@ impl Default for JobConfig {
             replication: 1,
             dynamics: None,
             threads: 1,
+            max_attempts: 4,
         }
     }
 }
@@ -183,6 +191,10 @@ mod tests {
         assert_eq!(c.barriers.label(), "G-P-L");
         assert_eq!(c.replication, 1);
         assert!(c.n_buckets >= 64);
+        // Finite retry budget by default: the failure profiles fail each
+        // node at most a couple of times, so 4 keeps their behavior
+        // identical while bounding flapping traces.
+        assert_eq!(c.max_attempts, 4);
     }
 
     #[test]

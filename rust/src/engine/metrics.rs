@@ -42,7 +42,8 @@ pub struct JobMetrics {
     /// Shuffle bytes currently *credited* as delivered: incremented on
     /// delivery, de-credited when a reducer failure loses data that had
     /// already arrived. At job end every unique shuffle byte is credited
-    /// exactly once, so `shuffle_bytes_delivered == shuffle_bytes` — the
+    /// exactly once — delivered to a reducer or written off to the DLQ —
+    /// so `shuffle_bytes_delivered + dlq_bytes == shuffle_bytes`, the
     /// byte-conservation invariant property-tested in tests/dynamics.rs
     /// (total wire traffic is `shuffle_bytes + reduce_bytes_replayed`).
     pub shuffle_bytes_delivered: f64,
@@ -65,6 +66,26 @@ pub struct JobMetrics {
     pub input_records: usize,
     pub intermediate_records: usize,
     pub output_records: usize,
+    /// Key ranges routed to the dead-letter queue after exhausting the
+    /// retry budget (`JobConfig.max_attempts`). A dead-lettered range
+    /// never runs its reduce; its shuffle bytes move to `dlq_bytes`.
+    pub ranges_dead_lettered: usize,
+    /// Map splits routed to the dead-letter queue after exhausting the
+    /// retry budget. The split's map output is never produced, so no
+    /// shuffle bytes exist for it (its push bytes were delivered and
+    /// stay credited).
+    pub splits_dead_lettered: usize,
+    /// Shuffle bytes written off to the dead-letter queue. Generalizes
+    /// the conservation identity: at job end
+    /// `shuffle_bytes_delivered + dlq_bytes == shuffle_bytes` exactly
+    /// (with an empty DLQ this collapses to today's equality).
+    pub dlq_bytes: f64,
+    /// Simulated coordinator crash/restart cycles survived via
+    /// checkpoint/resume. Provenance, not simulation state: a resumed
+    /// run is bit-identical to the uninterrupted run in every *other*
+    /// field, so this counter is excluded from the `sig()` identity
+    /// used by the determinism tests.
+    pub coordinator_restarts: usize,
     /// Fluid-engine hot-path counters: rate-recompute invocations and the
     /// cumulative number of resources whose component was actually
     /// re-filled (the incremental solver skips clean components, so

@@ -27,7 +27,12 @@
 //!   processes feed a queue, a cross-job [`StreamPolicy`] (FIFO,
 //!   fair-share, deadline-aware admission) admits jobs, and every
 //!   in-flight job runs over ONE shared fluid network, contending for
-//!   the same links under max-min fairness.
+//!   the same links under max-min fairness;
+//! * [`snapshot`] — the versioned checkpoint codec and the
+//!   crash-surviving drivers: resume from a checkpoint finishes
+//!   bit-identical to the uninterrupted run, and work that exhausts its
+//!   retry budget lands in the executor's dead-letter queue instead of
+//!   requeueing forever.
 
 pub mod adversary;
 pub mod dynamics;
@@ -38,12 +43,16 @@ pub mod job;
 pub mod metrics;
 pub mod partitioner;
 pub mod scheduler;
+pub mod snapshot;
 pub mod tenancy;
 
 pub use adversary::{PerturbBudget, SearchConfig, SearchResult};
 pub use dynamics::{DynEvent, DynProfile, ScenarioTrace, TimedEvent, TraceShape};
 pub use events::{EngineEvent, EventQueue};
-pub use executor::{run_job, JobResult};
+// `executor::JobOutcome` (how one job ended) is deliberately NOT
+// re-exported here: the root-level `JobOutcome` name belongs to the
+// tenancy layer's per-job stream outcome. Use the full path.
+pub use executor::{run_job, DeadLetterQueue, DlqEntry, DlqKind, JobResult};
 pub use job::{JobConfig, MapReduceApp, Record};
 pub use metrics::JobMetrics;
 pub use partitioner::Partitioner;
@@ -51,4 +60,7 @@ pub use scheduler::{
     stream_policy, DynamicScheduler, PlanLocalScheduler, Scheduler, StreamDecision,
     StreamPolicy,
 };
-pub use tenancy::{run_stream, ArrivalSpec, JobOutcome, StreamJob, StreamResult};
+pub use snapshot::{run_job_with_recovery, RecoveryOpts};
+pub use tenancy::{
+    run_stream, run_stream_with_recovery, ArrivalSpec, JobOutcome, StreamJob, StreamResult,
+};

@@ -1,0 +1,739 @@
+//! Checkpoint/resume: a versioned, deterministic snapshot codec for the
+//! engine, plus crash-surviving drivers for single jobs
+//! ([`run_job_with_recovery`]) and job streams
+//! ([`super::tenancy::run_stream_with_recovery`]).
+//!
+//! ## Format
+//!
+//! A snapshot is one JSON document (hand-rolled codec in
+//! [`crate::util::json`] — deterministic rendering, ordered object
+//! fields, `f64` carried as 16-hex-digit IEEE-754 bit patterns so the
+//! round trip is bit-exact, NaN and infinities included):
+//!
+//! ```text
+//! { "format": "mrperf-snapshot", "version": 1, "kind": "job"|"stream",
+//!   "compat": { ...shape of the run this snapshot belongs to... },
+//!   "fluid":  { ...FluidSim dynamic state... },
+//!   "exec":   { ...Executor dynamic state... } }       // kind = job
+//! ```
+//!
+//! Three error classes are reported distinctly: **malformed** (not
+//! parseable / not a snapshot), **version mismatch** (`version` ≠ what
+//! this build reads), and **incompatible** (a well-formed snapshot of a
+//! *different run* — topology shape, app, split count, config knobs).
+//!
+//! ## Semantics
+//!
+//! Snapshots are taken only at **event boundaries**: the executor's
+//! event heap drained, so the heap contributes nothing but its clock,
+//! and every in-flight transfer/compute lives in the fluid state
+//! (referenced by activity id). The immutable run inputs — topology,
+//! plan, app, config, input records — are *not* serialized; resume
+//! reconstructs the executor from the same arguments (compat-probed by
+//! the header) and overlays the dynamic state. The invariant, enforced
+//! by tests/dynamics.rs: **resume(checkpoint(t)) finishes bit-identical
+//! to the uninterrupted run** for every dynamics profile — every metric
+//! equal to the bit, except `coordinator_restarts`, which counts the
+//! crash/restart cycles survived (provenance, excluded from `sig()`).
+
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::util::json::Json;
+
+use super::executor::{Executor, JobResult, ResourceSet};
+use super::fluid::{FluidActivityState, FluidSim, FluidState};
+use super::job::{JobConfig, MapReduceApp, Record};
+use super::metrics::JobMetrics;
+
+/// Magic marker of every snapshot file.
+pub const SNAPSHOT_FORMAT: &str = "mrperf-snapshot";
+/// On-disk format version this build writes and reads.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Crash/checkpoint options for [`run_job_with_recovery`] (and the
+/// stream variant). All default to off, in which case the driver is
+/// bit-identical to [`super::executor::run_job`].
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryOpts {
+    /// Snapshot cadence in virtual seconds (checkpoints are taken at
+    /// the first event boundary at or past each multiple). `None` = no
+    /// checkpoints.
+    pub checkpoint_every: Option<f64>,
+    /// Simulated coordinator crash: at the first event boundary at or
+    /// past this virtual time, the in-memory executor and fluid state
+    /// are dropped and the run resumes from the latest checkpoint
+    /// (cold restart if none was taken yet). Requires
+    /// `checkpoint_every`.
+    pub crash_at: Option<f64>,
+    /// Persist each checkpoint to this file (and resume through the
+    /// file, proving the on-disk round trip). `None` keeps snapshots
+    /// in memory.
+    pub checkpoint_path: Option<String>,
+    /// Snapshot text to resume from instead of starting fresh. The
+    /// caller must supply the same topology/plan/app/config/inputs the
+    /// snapshot was taken under (compat-checked).
+    pub resume_from: Option<String>,
+}
+
+impl RecoveryOpts {
+    pub(crate) fn validate(&self) -> Result<(), String> {
+        if let Some(t) = self.checkpoint_every {
+            if !(t.is_finite() && t > 0.0) {
+                return Err(format!("--checkpoint-every must be finite and > 0, got {t}"));
+            }
+        }
+        if let Some(t) = self.crash_at {
+            if !(t.is_finite() && t > 0.0) {
+                return Err(format!("--crash-at must be finite and > 0, got {t}"));
+            }
+            if self.checkpoint_every.is_none() {
+                return Err(
+                    "--crash-at requires --checkpoint-every (without checkpoints the \
+                     coordinator has nothing to resume from)"
+                        .into(),
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------- header
+
+/// Validate the snapshot envelope: format marker, version, kind.
+pub(crate) fn check_header(doc: &Json, kind: &str) -> Result<(), String> {
+    let format = doc
+        .get("format")
+        .ok_or_else(|| "malformed snapshot: missing `format` marker".to_string())?
+        .as_str()
+        .map_err(|e| format!("malformed snapshot: {e}"))?;
+    if format != SNAPSHOT_FORMAT {
+        return Err(format!(
+            "malformed snapshot: format marker `{format}` (expected `{SNAPSHOT_FORMAT}`)"
+        ));
+    }
+    let version = doc.field("version")?.as_u64()?;
+    if version != SNAPSHOT_VERSION {
+        return Err(format!(
+            "snapshot version mismatch: file is v{version}, this build reads v{SNAPSHOT_VERSION}"
+        ));
+    }
+    let k = doc.field("kind")?.as_str()?;
+    if k != kind {
+        return Err(format!("incompatible snapshot: kind `{k}`, expected `{kind}`"));
+    }
+    Ok(())
+}
+
+/// Compare a snapshot's `compat` object against the current run's
+/// expected shape, field by field.
+pub(crate) fn check_compat(expected: &[(String, Json)], got: &Json) -> Result<(), String> {
+    for (key, want) in expected {
+        let have = got
+            .get(key)
+            .ok_or_else(|| format!("incompatible snapshot: compat field `{key}` missing"))?;
+        if have.render() != want.render() {
+            return Err(format!(
+                "incompatible snapshot: `{key}` is {} in the file but {} for this run",
+                have.render(),
+                want.render()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The compatibility shape of a single-job run.
+fn job_compat(
+    topo: &Topology,
+    config: &JobConfig,
+    app: &dyn MapReduceApp,
+    n_tasks: usize,
+) -> Vec<(String, Json)> {
+    vec![
+        ("sources".into(), Json::uint(topo.n_sources())),
+        ("mappers".into(), Json::uint(topo.n_mappers())),
+        ("reducers".into(), Json::uint(topo.n_reducers())),
+        ("tasks".into(), Json::uint(n_tasks)),
+        ("buckets".into(), Json::uint(config.n_buckets)),
+        ("split_size".into(), Json::uint(config.split_size)),
+        ("max_attempts".into(), Json::uint(config.max_attempts as usize)),
+        ("barriers".into(), Json::Str(config.barriers.label())),
+        ("app".into(), Json::Str(app.name().into())),
+    ]
+}
+
+// ----------------------------------------------------------- metrics
+
+/// Serialize every [`JobMetrics`] field (floats bit-exact).
+pub(crate) fn encode_metrics(m: &JobMetrics) -> Json {
+    Json::Obj(vec![
+        ("makespan".into(), Json::f64_bits(m.makespan)),
+        ("push_end".into(), Json::f64_bits(m.push_end)),
+        ("map_end".into(), Json::f64_bits(m.map_end)),
+        ("shuffle_end".into(), Json::f64_bits(m.shuffle_end)),
+        ("push_bytes".into(), Json::f64_bits(m.push_bytes)),
+        ("shuffle_bytes".into(), Json::f64_bits(m.shuffle_bytes)),
+        ("output_bytes".into(), Json::f64_bits(m.output_bytes)),
+        ("n_map_tasks".into(), Json::uint(m.n_map_tasks)),
+        ("n_reduce_tasks".into(), Json::uint(m.n_reduce_tasks)),
+        ("spec_launched".into(), Json::uint(m.spec_launched)),
+        ("spec_won".into(), Json::uint(m.spec_won)),
+        ("stolen".into(), Json::uint(m.stolen)),
+        ("dyn_events".into(), Json::uint(m.dyn_events)),
+        ("failures_injected".into(), Json::uint(m.failures_injected)),
+        ("tasks_requeued".into(), Json::uint(m.tasks_requeued)),
+        ("reducers_failed".into(), Json::uint(m.reducers_failed)),
+        ("reduce_ranges_reassigned".into(), Json::uint(m.reduce_ranges_reassigned)),
+        ("reduce_bytes_replayed".into(), Json::f64_bits(m.reduce_bytes_replayed)),
+        ("shuffle_bytes_delivered".into(), Json::f64_bits(m.shuffle_bytes_delivered)),
+        ("sources_refreshed".into(), Json::uint(m.sources_refreshed)),
+        ("push_bytes_repushed".into(), Json::f64_bits(m.push_bytes_repushed)),
+        ("push_bytes_delivered".into(), Json::f64_bits(m.push_bytes_delivered)),
+        ("input_records".into(), Json::uint(m.input_records)),
+        ("intermediate_records".into(), Json::uint(m.intermediate_records)),
+        ("output_records".into(), Json::uint(m.output_records)),
+        ("ranges_dead_lettered".into(), Json::uint(m.ranges_dead_lettered)),
+        ("splits_dead_lettered".into(), Json::uint(m.splits_dead_lettered)),
+        ("dlq_bytes".into(), Json::f64_bits(m.dlq_bytes)),
+        ("coordinator_restarts".into(), Json::uint(m.coordinator_restarts)),
+        ("fluid_resolves".into(), Json::u64(m.fluid_resolves)),
+        ("fluid_resources_touched".into(), Json::u64(m.fluid_resources_touched)),
+    ])
+}
+
+/// Inverse of [`encode_metrics`]; every field required.
+pub(crate) fn decode_metrics(j: &Json) -> Result<JobMetrics, String> {
+    Ok(JobMetrics {
+        makespan: j.field("makespan")?.as_f64_bits()?,
+        push_end: j.field("push_end")?.as_f64_bits()?,
+        map_end: j.field("map_end")?.as_f64_bits()?,
+        shuffle_end: j.field("shuffle_end")?.as_f64_bits()?,
+        push_bytes: j.field("push_bytes")?.as_f64_bits()?,
+        shuffle_bytes: j.field("shuffle_bytes")?.as_f64_bits()?,
+        output_bytes: j.field("output_bytes")?.as_f64_bits()?,
+        n_map_tasks: j.field("n_map_tasks")?.as_usize()?,
+        n_reduce_tasks: j.field("n_reduce_tasks")?.as_usize()?,
+        spec_launched: j.field("spec_launched")?.as_usize()?,
+        spec_won: j.field("spec_won")?.as_usize()?,
+        stolen: j.field("stolen")?.as_usize()?,
+        dyn_events: j.field("dyn_events")?.as_usize()?,
+        failures_injected: j.field("failures_injected")?.as_usize()?,
+        tasks_requeued: j.field("tasks_requeued")?.as_usize()?,
+        reducers_failed: j.field("reducers_failed")?.as_usize()?,
+        reduce_ranges_reassigned: j.field("reduce_ranges_reassigned")?.as_usize()?,
+        reduce_bytes_replayed: j.field("reduce_bytes_replayed")?.as_f64_bits()?,
+        shuffle_bytes_delivered: j.field("shuffle_bytes_delivered")?.as_f64_bits()?,
+        sources_refreshed: j.field("sources_refreshed")?.as_usize()?,
+        push_bytes_repushed: j.field("push_bytes_repushed")?.as_f64_bits()?,
+        push_bytes_delivered: j.field("push_bytes_delivered")?.as_f64_bits()?,
+        input_records: j.field("input_records")?.as_usize()?,
+        intermediate_records: j.field("intermediate_records")?.as_usize()?,
+        output_records: j.field("output_records")?.as_usize()?,
+        ranges_dead_lettered: j.field("ranges_dead_lettered")?.as_usize()?,
+        splits_dead_lettered: j.field("splits_dead_lettered")?.as_usize()?,
+        dlq_bytes: j.field("dlq_bytes")?.as_f64_bits()?,
+        coordinator_restarts: j.field("coordinator_restarts")?.as_usize()?,
+        fluid_resolves: j.field("fluid_resolves")?.as_u64()?,
+        fluid_resources_touched: j.field("fluid_resources_touched")?.as_u64()?,
+    })
+}
+
+// ------------------------------------------------------------- fluid
+
+/// Serialize an exported [`FluidState`] (floats bit-exact; the `active`
+/// list order and stale entries preserved verbatim — component
+/// numbering depends on them).
+pub(crate) fn encode_fluid(st: &FluidState) -> Json {
+    let uints = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::uint(x)).collect());
+    Json::Obj(vec![
+        ("now".into(), Json::f64_bits(st.now)),
+        ("threads".into(), Json::uint(st.threads)),
+        (
+            "capacities".into(),
+            Json::Arr(st.capacities.iter().map(|&c| Json::f64_bits(c)).collect()),
+        ),
+        (
+            "activities".into(),
+            Json::Arr(
+                st.activities
+                    .iter()
+                    .map(|a| {
+                        Json::Obj(vec![
+                            ("rem".into(), Json::f64_bits(a.remaining)),
+                            ("res".into(), uints(&a.resources)),
+                            ("done".into(), Json::Bool(a.done)),
+                            ("rate".into(), Json::f64_bits(a.rate)),
+                            ("tag".into(), Json::u64(a.tag)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("active".into(), uints(&st.active)),
+        ("dirty".into(), Json::Bool(st.dirty)),
+        ("dirty_res".into(), uints(&st.dirty_res)),
+        ("n_resolves".into(), Json::u64(st.n_resolves)),
+        ("n_resources_touched".into(), Json::u64(st.n_resources_touched)),
+    ])
+}
+
+/// Inverse of [`encode_fluid`]. Structural validation (dangling ids,
+/// negative remaining work) happens in [`FluidSim::from_state`].
+pub(crate) fn decode_fluid(j: &Json) -> Result<FluidState, String> {
+    let uints = |j: &Json| -> Result<Vec<usize>, String> {
+        j.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    };
+    let activities = j
+        .field("activities")?
+        .as_arr()?
+        .iter()
+        .map(|a| -> Result<FluidActivityState, String> {
+            Ok(FluidActivityState {
+                remaining: a.field("rem")?.as_f64_bits()?,
+                resources: uints(a.field("res")?)?,
+                done: a.field("done")?.as_bool()?,
+                rate: a.field("rate")?.as_f64_bits()?,
+                tag: a.field("tag")?.as_u64()?,
+            })
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(FluidState {
+        now: j.field("now")?.as_f64_bits()?,
+        threads: j.field("threads")?.as_usize()?.max(1),
+        capacities: j
+            .field("capacities")?
+            .as_arr()?
+            .iter()
+            .map(|c| c.as_f64_bits())
+            .collect::<Result<_, _>>()?,
+        activities,
+        active: uints(j.field("active")?)?,
+        dirty: j.field("dirty")?.as_bool()?,
+        dirty_res: uints(j.field("dirty_res")?)?,
+        n_resolves: j.field("n_resolves")?.as_u64()?,
+        n_resources_touched: j.field("n_resources_touched")?.as_u64()?,
+    })
+}
+
+// ----------------------------------------------------- job snapshots
+
+/// Serialize one single-job run at an event boundary.
+fn snapshot_job(
+    exec: &Executor,
+    sim: &FluidSim,
+    topo: &Topology,
+    config: &JobConfig,
+    app: &dyn MapReduceApp,
+) -> Json {
+    Json::Obj(vec![
+        ("format".into(), Json::Str(SNAPSHOT_FORMAT.into())),
+        ("version".into(), Json::u64(SNAPSHOT_VERSION)),
+        ("kind".into(), Json::Str("job".into())),
+        ("compat".into(), Json::Obj(job_compat(topo, config, app, exec.n_tasks()))),
+        ("fluid".into(), encode_fluid(&sim.export_state())),
+        ("exec".into(), exec.encode_state()),
+    ])
+}
+
+/// Run one job with optional checkpointing, a simulated coordinator
+/// crash, and/or resume from an existing snapshot. With all
+/// [`RecoveryOpts`] off this follows exactly the same call sequence as
+/// [`super::executor::run_job`] and is bit-identical to it. The final
+/// metrics carry `coordinator_restarts` = crash/restart cycles
+/// survived; every other field is bit-identical to the uninterrupted
+/// run.
+pub fn run_job_with_recovery(
+    topo: &Topology,
+    plan: &Plan,
+    app: &dyn MapReduceApp,
+    config: &JobConfig,
+    inputs: &[Vec<Record>],
+    opts: &RecoveryOpts,
+) -> Result<JobResult, String> {
+    opts.validate()?;
+    let mut snapshot_text: Option<String> = opts.resume_from.clone();
+    let mut crash_pending = opts.crash_at;
+    let mut restarts = 0usize;
+
+    loop {
+        // Materialize the coordinator: fresh, or overlaid from the
+        // latest snapshot (resume reconstructs the executor from the
+        // same immutable arguments, then restores the dynamic state).
+        let mut sim;
+        let mut exec;
+        match &snapshot_text {
+            Some(text) => {
+                let doc = Json::parse(text).map_err(|e| format!("malformed snapshot: {e}"))?;
+                check_header(&doc, "job")?;
+                let fluid = decode_fluid(doc.field("fluid")?)?;
+                sim = FluidSim::from_state(&fluid)?;
+                exec = Executor::new(
+                    topo,
+                    plan,
+                    app,
+                    config,
+                    inputs,
+                    ResourceSet::layout(topo),
+                    config.dynamics.as_ref(),
+                    0,
+                    1.0,
+                );
+                check_compat(
+                    &job_compat(topo, config, app, exec.n_tasks()),
+                    doc.field("compat")?,
+                )?;
+                exec.restore_state(doc.field("exec")?, fluid.activities.len())?;
+            }
+            None => {
+                sim = FluidSim::new();
+                sim.set_threads(config.threads.max(1));
+                let res = ResourceSet::build(&mut sim, topo);
+                exec = Executor::new(
+                    topo,
+                    plan,
+                    app,
+                    config,
+                    inputs,
+                    res,
+                    config.dynamics.as_ref(),
+                    0,
+                    1.0,
+                );
+                exec.start(&mut sim);
+            }
+        }
+        // Checkpoint cadence: the first multiple of the interval
+        // strictly past the current clock (so a resumed run does not
+        // immediately re-checkpoint its own resume point).
+        let mut next_ckpt = opts.checkpoint_every.map(|every| {
+            let mut t = every;
+            while t <= sim.now() {
+                t += every;
+            }
+            t
+        });
+
+        // Main loop — the body of `run_job`, with crash and checkpoint
+        // hooks at the top of each iteration (an event boundary: the
+        // event heap is drained there). Crash is checked first: a
+        // checkpoint due at the crash instant is lost with the
+        // coordinator, exactly like a real crash racing its timer.
+        let mut crashed = false;
+        loop {
+            if let Some(t2) = crash_pending {
+                if sim.now() >= t2 {
+                    crash_pending = None;
+                    restarts += 1;
+                    crashed = true;
+                    break;
+                }
+            }
+            if let (Some(every), Some(next)) = (opts.checkpoint_every, next_ckpt.as_mut()) {
+                while sim.now() >= *next {
+                    let text = snapshot_job(&exec, &sim, topo, config, app).render();
+                    if let Some(path) = &opts.checkpoint_path {
+                        std::fs::write(path, &text)
+                            .map_err(|e| format!("cannot write checkpoint `{path}`: {e}"))?;
+                    }
+                    snapshot_text = Some(text);
+                    *next += every;
+                }
+            }
+
+            let step = match exec.next_dyn_time() {
+                Some(tt) if sim.active_count() > 0 => sim.step_until(tt),
+                Some(tt) => {
+                    if exec.is_complete() {
+                        break;
+                    }
+                    sim.jump_to(tt);
+                    Some((sim.now(), Vec::new()))
+                }
+                None => sim.step(),
+            };
+            let Some((now, completed)) = step else { break };
+            if completed.is_empty() {
+                exec.apply_dynamics(&mut sim);
+                continue;
+            }
+            for aid in completed {
+                exec.enqueue(now, aid);
+            }
+            exec.drain(&mut sim);
+            exec.maybe_speculate(&mut sim);
+        }
+        if crashed {
+            // Drop the in-memory coordinator; the next iteration
+            // resumes from the latest snapshot — through the file when
+            // one is configured — or restarts cold if none was taken.
+            if let Some(path) = &opts.checkpoint_path {
+                if snapshot_text.is_some() {
+                    snapshot_text = Some(
+                        std::fs::read_to_string(path)
+                            .map_err(|e| format!("cannot read checkpoint `{path}`: {e}"))?,
+                    );
+                }
+            }
+            continue;
+        }
+        let mut result = exec.into_result();
+        result.metrics.fluid_resolves = sim.resolves();
+        result.metrics.fluid_resources_touched = sim.resources_touched();
+        result.metrics.coordinator_restarts = restarts;
+        return Ok(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::executor::{run_job, JobOutcome};
+    use crate::engine::job::Record;
+    use crate::platform::topology::example_1_3;
+    use crate::platform::MB;
+
+    struct Identity;
+    impl MapReduceApp for Identity {
+        fn name(&self) -> &'static str {
+            "identity"
+        }
+        fn map(&self, record: &Record, emit: &mut dyn FnMut(Record)) {
+            emit(record.clone());
+        }
+        fn reduce(&self, _group: &str, records: &[Record], emit: &mut dyn FnMut(Record)) {
+            for r in records {
+                emit(r.clone());
+            }
+        }
+    }
+
+    fn inputs(topo: &Topology, per_source: usize) -> Vec<Vec<Record>> {
+        (0..topo.n_sources())
+            .map(|i| {
+                (0..per_source)
+                    .map(|n| Record::new(format!("key-{i}-{n}"), format!("value-{n}")))
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn sig(m: &JobMetrics) -> String {
+        format!(
+            "{:016x} {:016x} {:016x} {:016x} {} {} {} {} {:016x}",
+            m.makespan.to_bits(),
+            m.push_bytes.to_bits(),
+            m.shuffle_bytes.to_bits(),
+            m.shuffle_bytes_delivered.to_bits(),
+            m.output_records,
+            m.tasks_requeued,
+            m.ranges_dead_lettered,
+            m.splits_dead_lettered,
+            m.dlq_bytes.to_bits(),
+        )
+    }
+
+    #[test]
+    fn metrics_round_trip_is_bit_exact() {
+        let m = JobMetrics {
+            makespan: 123.456789,
+            push_end: f64::NAN,
+            shuffle_bytes: 1.0e9 + 3.0,
+            dlq_bytes: 0.1 + 0.2, // deliberately not 0.3
+            fluid_resolves: 987654321,
+            n_map_tasks: 42,
+            coordinator_restarts: 3,
+            ..Default::default()
+        };
+        let back = decode_metrics(&encode_metrics(&m)).unwrap();
+        assert_eq!(back.makespan.to_bits(), m.makespan.to_bits());
+        assert_eq!(back.push_end.to_bits(), m.push_end.to_bits(), "NaN survives");
+        assert_eq!(back.shuffle_bytes.to_bits(), m.shuffle_bytes.to_bits());
+        assert_eq!(back.dlq_bytes.to_bits(), m.dlq_bytes.to_bits());
+        assert_eq!(back.fluid_resolves, m.fluid_resolves);
+        assert_eq!(back.n_map_tasks, 42);
+        assert_eq!(back.coordinator_restarts, 3);
+    }
+
+    #[test]
+    fn decode_metrics_requires_every_field() {
+        let mut obj = match encode_metrics(&JobMetrics::default()) {
+            Json::Obj(fields) => fields,
+            _ => unreachable!(),
+        };
+        obj.retain(|(k, _)| k != "dlq_bytes");
+        let e = decode_metrics(&Json::Obj(obj)).unwrap_err();
+        assert!(e.contains("dlq_bytes"), "{e}");
+    }
+
+    #[test]
+    fn header_rejects_foreign_and_future_files() {
+        let doc = |format: &str, version: u64, kind: &str| {
+            Json::Obj(vec![
+                ("format".into(), Json::Str(format.into())),
+                ("version".into(), Json::u64(version)),
+                ("kind".into(), Json::Str(kind.into())),
+            ])
+        };
+        let e = check_header(&doc("not-a-snapshot", 1, "job"), "job").unwrap_err();
+        assert!(e.contains("malformed"), "{e}");
+        let e = check_header(&doc(SNAPSHOT_FORMAT, 99, "job"), "job").unwrap_err();
+        assert!(e.contains("version mismatch") && e.contains("v99"), "{e}");
+        let e = check_header(&doc(SNAPSHOT_FORMAT, 1, "stream"), "job").unwrap_err();
+        assert!(e.contains("kind"), "{e}");
+        let e = check_header(&Json::Obj(vec![]), "job").unwrap_err();
+        assert!(e.contains("malformed"), "{e}");
+        check_header(&doc(SNAPSHOT_FORMAT, 1, "job"), "job").unwrap();
+    }
+
+    #[test]
+    fn compat_mismatch_names_the_field() {
+        let expected = vec![("mappers".to_string(), Json::uint(4))];
+        let got = Json::Obj(vec![("mappers".into(), Json::uint(8))]);
+        let e = check_compat(&expected, &got).unwrap_err();
+        assert!(e.contains("incompatible") && e.contains("mappers"), "{e}");
+        check_compat(&expected, &Json::Obj(vec![("mappers".into(), Json::uint(4))])).unwrap();
+    }
+
+    #[test]
+    fn recovery_with_no_options_matches_run_job_bitwise() {
+        let topo = example_1_3(60.0 * MB, 8.0 * MB, 60.0 * MB);
+        let plan = Plan::local_push(&topo);
+        let config = JobConfig::default();
+        let ins = inputs(&topo, 120);
+        let a = run_job(&topo, &plan, &Identity, &config, &ins);
+        let b = run_job_with_recovery(
+            &topo,
+            &plan,
+            &Identity,
+            &config,
+            &ins,
+            &RecoveryOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(sig(&a.metrics), sig(&b.metrics));
+        assert_eq!(a.metrics.fluid_resolves, b.metrics.fluid_resolves);
+        assert_eq!(b.metrics.coordinator_restarts, 0);
+        assert_eq!(b.outcome, JobOutcome::Complete);
+    }
+
+    #[test]
+    fn crash_and_resume_is_bit_identical_to_uninterrupted() {
+        let topo = example_1_3(60.0 * MB, 8.0 * MB, 60.0 * MB);
+        let plan = Plan::local_push(&topo);
+        let config = JobConfig::default();
+        let ins = inputs(&topo, 200);
+        let base = run_job(&topo, &plan, &Identity, &config, &ins);
+        let horizon = base.metrics.makespan;
+        assert!(horizon > 0.0);
+        for (ck_frac, crash_frac) in [(0.2, 0.55), (0.1, 0.35), (0.4, 0.5)] {
+            let opts = RecoveryOpts {
+                checkpoint_every: Some(horizon * ck_frac),
+                crash_at: Some(horizon * crash_frac),
+                ..Default::default()
+            };
+            let got =
+                run_job_with_recovery(&topo, &plan, &Identity, &config, &ins, &opts).unwrap();
+            assert_eq!(
+                sig(&got.metrics),
+                sig(&base.metrics),
+                "ck={ck_frac} crash={crash_frac}"
+            );
+            assert_eq!(got.metrics.fluid_resolves, base.metrics.fluid_resolves);
+            assert_eq!(got.metrics.coordinator_restarts, 1);
+            assert_eq!(got.outputs, base.outputs, "outputs identical after resume");
+        }
+    }
+
+    #[test]
+    fn crash_before_first_checkpoint_restarts_cold() {
+        let topo = example_1_3(60.0 * MB, 8.0 * MB, 60.0 * MB);
+        let plan = Plan::local_push(&topo);
+        let config = JobConfig::default();
+        let ins = inputs(&topo, 120);
+        let base = run_job(&topo, &plan, &Identity, &config, &ins);
+        let horizon = base.metrics.makespan;
+        let opts = RecoveryOpts {
+            // First checkpoint would land past the crash: nothing to
+            // resume from, so the coordinator restarts from scratch.
+            checkpoint_every: Some(horizon * 10.0),
+            crash_at: Some(horizon * 0.5),
+            ..Default::default()
+        };
+        let got = run_job_with_recovery(&topo, &plan, &Identity, &config, &ins, &opts).unwrap();
+        assert_eq!(sig(&got.metrics), sig(&base.metrics));
+        assert_eq!(got.metrics.coordinator_restarts, 1);
+    }
+
+    #[test]
+    fn recovery_rejects_bad_options_and_bad_snapshots() {
+        let topo = example_1_3(60.0 * MB, 8.0 * MB, 60.0 * MB);
+        let plan = Plan::local_push(&topo);
+        let config = JobConfig::default();
+        let ins = inputs(&topo, 40);
+        let run = |opts: &RecoveryOpts| {
+            run_job_with_recovery(&topo, &plan, &Identity, &config, &ins, opts)
+        };
+        let e = run(&RecoveryOpts { crash_at: Some(5.0), ..Default::default() }).unwrap_err();
+        assert!(e.contains("--crash-at requires --checkpoint-every"), "{e}");
+        let e = run(&RecoveryOpts { checkpoint_every: Some(0.0), ..Default::default() })
+            .unwrap_err();
+        assert!(e.contains("--checkpoint-every"), "{e}");
+        let e = run(&RecoveryOpts {
+            resume_from: Some("this is not json".into()),
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(e.contains("malformed snapshot"), "{e}");
+        let future = format!(
+            "{{\"format\":\"{SNAPSHOT_FORMAT}\",\"version\":2,\"kind\":\"job\"}}"
+        );
+        let e = run(&RecoveryOpts { resume_from: Some(future), ..Default::default() })
+            .unwrap_err();
+        assert!(e.contains("version mismatch"), "{e}");
+    }
+
+    #[test]
+    fn resume_from_rejects_a_snapshot_of_a_different_run() {
+        let topo = example_1_3(60.0 * MB, 8.0 * MB, 60.0 * MB);
+        let plan = Plan::local_push(&topo);
+        let config = JobConfig::default();
+        let ins = inputs(&topo, 120);
+        let base = run_job(&topo, &plan, &Identity, &config, &ins);
+        let horizon = base.metrics.makespan;
+        let dir = std::env::temp_dir().join("mrperf-snapshot-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        let opts = RecoveryOpts {
+            checkpoint_every: Some(horizon * 0.3),
+            checkpoint_path: Some(path.to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        run_job_with_recovery(&topo, &plan, &Identity, &config, &ins, &opts).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Same snapshot, different config: compat must refuse it.
+        let other = JobConfig { n_buckets: 128, ..JobConfig::default() };
+        let e = run_job_with_recovery(
+            &topo,
+            &plan,
+            &Identity,
+            &other,
+            &ins,
+            &RecoveryOpts { resume_from: Some(text.clone()), ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(e.contains("incompatible") && e.contains("buckets"), "{e}");
+        // Unmodified, it resumes and finishes bit-identically.
+        let got = run_job_with_recovery(
+            &topo,
+            &plan,
+            &Identity,
+            &config,
+            &ins,
+            &RecoveryOpts { resume_from: Some(text), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(sig(&got.metrics), sig(&base.metrics));
+        std::fs::remove_file(&path).ok();
+    }
+}

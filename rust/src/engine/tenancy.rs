@@ -62,8 +62,10 @@ use super::fluid::FluidSim;
 use super::job::{JobConfig, MapReduceApp, Record};
 use super::metrics::JobMetrics;
 use super::scheduler::{QueuedJob, StreamDecision, StreamPolicy, StreamView};
+use super::snapshot::{self, RecoveryOpts};
 use crate::model::plan::Plan;
 use crate::platform::Topology;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 #[allow(unused_imports)] // doc links
@@ -291,7 +293,124 @@ pub fn run_stream<'a>(
     policy: &mut dyn StreamPolicy,
     dynamics: Option<&'a ScenarioTrace>,
 ) -> Result<StreamResult, String> {
+    // Delegates with recovery off — the same code path with the hooks
+    // disabled, so the no-checkpoint behavior is identical by
+    // construction.
+    run_stream_with_recovery(topo, jobs, policy, dynamics, &RecoveryOpts::default())
+}
+
+/// The compatibility shape of a stream run (per-active-job shape is
+/// checked by each executor's own restore).
+fn stream_compat(topo: &Topology, n_jobs: usize) -> Vec<(String, Json)> {
+    vec![
+        ("sources".into(), Json::uint(topo.n_sources())),
+        ("mappers".into(), Json::uint(topo.n_mappers())),
+        ("reducers".into(), Json::uint(topo.n_reducers())),
+        ("jobs".into(), Json::uint(n_jobs)),
+    ]
+}
+
+fn encode_outcome(o: &JobOutcome) -> Json {
+    Json::Obj(vec![
+        ("arrival".into(), Json::f64_bits(o.arrival)),
+        ("started".into(), Json::f64_bits(o.started)),
+        ("finished".into(), Json::f64_bits(o.finished)),
+        ("rejected".into(), Json::Bool(o.rejected)),
+        ("met_deadline".into(), Json::Bool(o.met_deadline)),
+        (
+            "metrics".into(),
+            match &o.metrics {
+                Some(m) => snapshot::encode_metrics(m),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn decode_outcome(j: &Json) -> Result<JobOutcome, String> {
+    let metrics = match j.field("metrics")? {
+        Json::Null => None,
+        m => Some(snapshot::decode_metrics(m)?),
+    };
+    Ok(JobOutcome {
+        arrival: j.field("arrival")?.as_f64_bits()?,
+        started: j.field("started")?.as_f64_bits()?,
+        finished: j.field("finished")?.as_f64_bits()?,
+        rejected: j.field("rejected")?.as_bool()?,
+        met_deadline: j.field("met_deadline")?.as_bool()?,
+        metrics,
+    })
+}
+
+/// Serialize a stream run at an event boundary (every active job's
+/// event heap drained; in-flight work lives in the fluid state).
+#[allow(clippy::too_many_arguments)]
+fn snapshot_stream(
+    sim: &FluidSim,
+    topo: &Topology,
+    n_jobs: usize,
+    next_arrival: usize,
+    queued: &[QueuedJob],
+    active: &[(usize, Executor<'_>)],
+    outcomes: &[JobOutcome],
+    makespan: f64,
+) -> Json {
+    Json::Obj(vec![
+        ("format".into(), Json::Str(snapshot::SNAPSHOT_FORMAT.into())),
+        ("version".into(), Json::u64(snapshot::SNAPSHOT_VERSION)),
+        ("kind".into(), Json::Str("stream".into())),
+        ("compat".into(), Json::Obj(stream_compat(topo, n_jobs))),
+        ("fluid".into(), snapshot::encode_fluid(&sim.export_state())),
+        (
+            "stream".into(),
+            Json::Obj(vec![
+                ("next_arrival".into(), Json::uint(next_arrival)),
+                ("makespan".into(), Json::f64_bits(makespan)),
+                (
+                    "queued".into(),
+                    Json::Arr(queued.iter().map(|q| Json::uint(q.job)).collect()),
+                ),
+                (
+                    "outcomes".into(),
+                    Json::Arr(outcomes.iter().map(encode_outcome).collect()),
+                ),
+                (
+                    "active".into(),
+                    Json::Arr(
+                        active
+                            .iter()
+                            .map(|(job, exec)| {
+                                Json::Obj(vec![
+                                    ("job".into(), Json::uint(*job)),
+                                    ("exec".into(), exec.encode_state()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// [`run_stream`] with checkpoint/crash/resume support — the stream
+/// counterpart of [`snapshot::run_job_with_recovery`]. The coordinator
+/// snapshots the shared fluid network, the arrival cursor, the queue,
+/// every outcome and every active executor; a simulated crash drops all
+/// of it and resumes from the latest checkpoint. Stream policies are
+/// stateless (decisions are pure functions of the [`StreamView`]), so
+/// the policy instance survives the restart unchanged. On completion,
+/// every finished job's metrics carry `coordinator_restarts`; all other
+/// fields are bit-identical to the uninterrupted run.
+pub fn run_stream_with_recovery<'a>(
+    topo: &'a Topology,
+    jobs: &[StreamJob<'a>],
+    policy: &mut dyn StreamPolicy,
+    dynamics: Option<&'a ScenarioTrace>,
+    opts: &RecoveryOpts,
+) -> Result<StreamResult, String> {
     validate(jobs, topo)?;
+    opts.validate()?;
 
     // Submission order: (arrival, input index) — deterministic.
     let mut order: Vec<usize> = (0..jobs.len()).collect();
@@ -299,32 +418,119 @@ pub fn run_stream<'a>(
         jobs[a].arrival.total_cmp(&jobs[b].arrival).then(a.cmp(&b))
     });
 
-    let mut sim = FluidSim::new();
-    // The stream shares one simulator: solve with the widest thread
-    // request among the jobs (bit-identical for every value ≥ 1).
-    sim.set_threads(
-        jobs.iter().map(|j| j.config.threads).max().unwrap_or(1).max(1),
-    );
-    let res = ResourceSet::build(&mut sim, topo);
+    let mut snapshot_text: Option<String> = opts.resume_from.clone();
+    let mut crash_pending = opts.crash_at;
+    let mut restarts = 0usize;
 
-    let mut outcomes: Vec<JobOutcome> = jobs
-        .iter()
-        .map(|j| JobOutcome {
-            arrival: j.arrival,
-            started: f64::NAN,
-            finished: f64::NAN,
-            rejected: false,
-            met_deadline: false,
-            metrics: None,
-        })
-        .collect();
-
-    let mut next_arrival = 0usize; // cursor into `order`
-    let mut queued: Vec<QueuedJob> = Vec::new();
+    'coordinator: loop {
+    let mut sim;
+    let mut next_arrival; // cursor into `order`
+    let mut queued: Vec<QueuedJob>;
     // Admission order; each executor's activities carry its job index
     // as the fluid tag.
-    let mut active: Vec<(usize, Executor<'a>)> = Vec::new();
-    let mut makespan = 0.0f64;
+    let mut active: Vec<(usize, Executor<'a>)>;
+    let mut outcomes: Vec<JobOutcome>;
+    let mut makespan;
+    // Resource-id layout for admissions: identical whether the sim was
+    // freshly built (`build` asserts against it) or restored.
+    let res = ResourceSet::layout(topo);
+
+    match &snapshot_text {
+        Some(text) => {
+            let doc = Json::parse(text).map_err(|e| format!("malformed snapshot: {e}"))?;
+            snapshot::check_header(&doc, "stream")?;
+            snapshot::check_compat(&stream_compat(topo, jobs.len()), doc.field("compat")?)?;
+            let fluid = snapshot::decode_fluid(doc.field("fluid")?)?;
+            let n_activities = fluid.activities.len();
+            sim = FluidSim::from_state(&fluid)?;
+            let st = doc.field("stream")?;
+            next_arrival = st.field("next_arrival")?.as_usize()?;
+            if next_arrival > order.len() {
+                return Err("snapshot arrival cursor past the end of the stream".into());
+            }
+            makespan = st.field("makespan")?.as_f64_bits()?;
+            queued = Vec::new();
+            for q in st.field("queued")?.as_arr()? {
+                let job = q.as_usize()?;
+                if job >= jobs.len() {
+                    return Err(format!("snapshot queues unknown job {job}"));
+                }
+                queued.push(QueuedJob {
+                    job,
+                    arrival: jobs[job].arrival,
+                    weight: jobs[job].weight,
+                    deadline: jobs[job].deadline,
+                    est_service: jobs[job].est_service,
+                });
+            }
+            let outs = st.field("outcomes")?.as_arr()?;
+            if outs.len() != jobs.len() {
+                return Err(format!(
+                    "snapshot has {} outcomes for a {}-job stream",
+                    outs.len(),
+                    jobs.len()
+                ));
+            }
+            outcomes = outs.iter().map(decode_outcome).collect::<Result<_, _>>()?;
+            active = Vec::new();
+            for a in st.field("active")?.as_arr()? {
+                let job = a.field("job")?.as_usize()?;
+                if job >= jobs.len() {
+                    return Err(format!("snapshot activates unknown job {job}"));
+                }
+                let sj = &jobs[job];
+                let mut exec = Executor::new(
+                    topo,
+                    sj.plan,
+                    sj.app,
+                    sj.config,
+                    sj.inputs,
+                    res.clone(),
+                    dynamics,
+                    job as u64,
+                    sj.weight,
+                );
+                exec.restore_state(a.field("exec")?, n_activities)?;
+                active.push((job, exec));
+            }
+        }
+        None => {
+            sim = FluidSim::new();
+            // The stream shares one simulator: solve with the widest
+            // thread request among the jobs (bit-identical for every
+            // value ≥ 1).
+            sim.set_threads(
+                jobs.iter().map(|j| j.config.threads).max().unwrap_or(1).max(1),
+            );
+            ResourceSet::build(&mut sim, topo);
+            outcomes = jobs
+                .iter()
+                .map(|j| JobOutcome {
+                    arrival: j.arrival,
+                    started: f64::NAN,
+                    finished: f64::NAN,
+                    rejected: false,
+                    met_deadline: false,
+                    metrics: None,
+                })
+                .collect();
+            next_arrival = 0;
+            queued = Vec::new();
+            active = Vec::new();
+            makespan = 0.0f64;
+        }
+    }
+
+    // Checkpoint cadence: the first multiple of the interval strictly
+    // past the current clock.
+    let mut next_ckpt = opts.checkpoint_every.map(|every| {
+        let mut t = every;
+        while t <= sim.now() {
+            t += every;
+        }
+        t
+    });
+    let mut crashed = false;
 
     // Apply the policy over the current queue; returns true if any job
     // was admitted (the caller may need to re-check idle exit).
@@ -383,6 +589,39 @@ pub fn run_stream<'a>(
     };
 
     loop {
+        // Crash/checkpoint hooks fire at event boundaries (loop top:
+        // every active job's event heap is drained here). Crash is
+        // checked first — a checkpoint due at the crash instant is
+        // lost with the coordinator.
+        if let Some(t2) = crash_pending {
+            if sim.now() >= t2 {
+                crash_pending = None;
+                restarts += 1;
+                crashed = true;
+                break;
+            }
+        }
+        if let (Some(every), Some(next)) = (opts.checkpoint_every, next_ckpt.as_mut()) {
+            while sim.now() >= *next {
+                let text = snapshot_stream(
+                    &sim,
+                    topo,
+                    jobs.len(),
+                    next_arrival,
+                    &queued,
+                    &active,
+                    &outcomes,
+                    makespan,
+                )
+                .render();
+                if let Some(path) = &opts.checkpoint_path {
+                    std::fs::write(path, &text)
+                        .map_err(|e| format!("cannot write checkpoint `{path}`: {e}"))?;
+                }
+                snapshot_text = Some(text);
+                *next += every;
+            }
+        }
         // Never step past the next arrival or the next scenario event
         // of any active job.
         let mut bound: Option<f64> = order
@@ -479,6 +718,21 @@ pub fn run_stream<'a>(
         }
     }
 
+    if crashed {
+        // Drop the in-memory coordinator; the next iteration resumes
+        // from the latest snapshot — through the file when one is
+        // configured — or restarts cold if none was taken yet.
+        if let Some(path) = &opts.checkpoint_path {
+            if snapshot_text.is_some() {
+                snapshot_text = Some(
+                    std::fs::read_to_string(path)
+                        .map_err(|e| format!("cannot read checkpoint `{path}`: {e}"))?,
+                );
+            }
+        }
+        continue 'coordinator;
+    }
+
     assert!(active.is_empty(), "stream ended with jobs still running");
     // Jobs still queued when the stream drains were never admitted
     // (e.g. FIFO never got an idle slot before arrivals stopped —
@@ -486,7 +740,16 @@ pub fn run_stream<'a>(
     for q in queued {
         outcomes[q.job].rejected = true;
     }
-    Ok(StreamResult { jobs: outcomes, makespan })
+    // Restart provenance (excluded from the determinism signature):
+    // every job that produced metrics records the stream's survived
+    // crash/restart cycles.
+    for o in outcomes.iter_mut() {
+        if let Some(m) = o.metrics.as_mut() {
+            m.coordinator_restarts = restarts;
+        }
+    }
+    return Ok(StreamResult { jobs: outcomes, makespan });
+    } // 'coordinator
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@
 //! | churn  | plan-local vs dynamic schedulers under dynamics | [`churn`] |
 //! | adversary | worst-case trace search, per-scheduler robustness | [`adversary`] |
 //! | tenancy | multi-tenant job streams: load × cross-job policy | [`tenancy`] |
+//! | resilience | crash/resume bit-identity, dead-letter accounting | [`resilience`] |
 //!
 //! See `rust/src/experiments/README.md` for the paper-figure ↔
 //! experiment mapping and docs/CLI.md for the full flag reference.
@@ -26,6 +27,7 @@ pub mod common;
 pub mod fig4;
 pub mod fig5678;
 pub mod fig9to12;
+pub mod resilience;
 pub mod scale;
 pub mod table1;
 pub mod tenancy;
@@ -34,10 +36,10 @@ use crate::util::table::Table;
 use std::path::Path;
 
 /// All experiment ids, in paper order (plus the post-paper scale,
-/// churn, adversary and tenancy sweeps).
-pub const ALL: [&str; 14] = [
+/// churn, adversary, tenancy and resilience sweeps).
+pub const ALL: [&str; 15] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "scale", "churn", "adversary", "tenancy",
+    "scale", "churn", "adversary", "tenancy", "resilience",
 ];
 
 /// Run one experiment by id (`churn`, `adversary` and `tenancy` with
@@ -60,6 +62,7 @@ pub fn run(id: &str) -> Option<Vec<Table>> {
         "churn" => churn::run(),
         "adversary" => adversary::run(),
         "tenancy" => tenancy::run(),
+        "resilience" => resilience::run(),
         _ => return None,
     })
 }

@@ -1,0 +1,175 @@
+//! `mrperf experiment resilience` — checkpoint/resume and dead-letter
+//! accounting under injected dynamics.
+//!
+//! For each dynamics profile the sweep runs one churn-style cell
+//! (identical workload construction to `experiment churn` via
+//! [`super::churn::cell_setup`], so rows here are apples-to-apples with
+//! that table) across retry budget × coordinator-crash time:
+//!
+//! * the **uninterrupted** run (no checkpoints, no crash) is the
+//!   reference;
+//! * the **crashed** run checkpoints every 1/8 of the reference
+//!   makespan and kills the coordinator at the given fraction of it,
+//!   resuming from the latest snapshot;
+//! * the `bit-identical` column asserts the recovery invariant: the
+//!   resumed run's metrics match the reference bit for bit (makespan,
+//!   delivered/dead-lettered bytes, requeue and DLQ counters,
+//!   fluid re-solve count — everything except the restart counter,
+//!   which is provenance, not physics).
+//!
+//! Budget 1 sends every failure-evicted work item straight to the
+//! dead-letter queue (`partial` outcome, non-zero DLQ columns); the
+//! default budget 4 absorbs the seeded profiles' failures (`complete`,
+//! empty DLQ). Byte conservation
+//! (`shuffle_bytes_delivered + dlq_bytes == shuffle_bytes`) is asserted
+//! on every run.
+
+use crate::engine::dynamics::{DynProfile, ScenarioTrace, TraceShape};
+use crate::engine::executor::JobOutcome;
+use crate::engine::job::JobConfig;
+use crate::engine::metrics::JobMetrics;
+use crate::engine::{run_job, run_job_with_recovery, JobResult, RecoveryOpts};
+use crate::platform::scale::parse_spec_config;
+use crate::util::table::Table;
+
+use super::churn::cell_setup;
+
+/// Default platform: one churn-sweep size, kept modest because every
+/// (profile, budget, crash) cell is a full engine run.
+pub const DEFAULT_GEN: &str = "hier-wan:64";
+
+const PROFILES: [DynProfile; 2] = [DynProfile::Failures, DynProfile::Churn];
+const BUDGETS: [u32; 2] = [1, 4];
+const CRASH_FRACS: [f64; 2] = [0.3, 0.7];
+const TRACE_SEED: u64 = 7;
+
+/// The determinism fingerprint compared between the uninterrupted and
+/// the crash/resume run — every physics-bearing field, bit-exact;
+/// `coordinator_restarts` is deliberately excluded (provenance).
+fn fingerprint(m: &JobMetrics) -> (u64, u64, u64, u64, usize, usize, usize, u64) {
+    (
+        m.makespan.to_bits(),
+        m.shuffle_bytes_delivered.to_bits(),
+        m.push_bytes_delivered.to_bits(),
+        m.dlq_bytes.to_bits(),
+        m.tasks_requeued,
+        m.splits_dead_lettered,
+        m.ranges_dead_lettered,
+        m.fluid_resolves,
+    )
+}
+
+fn check_conservation(r: &JobResult, what: &str) {
+    let m = &r.metrics;
+    assert_eq!(
+        (m.shuffle_bytes_delivered + m.dlq_bytes).to_bits(),
+        m.shuffle_bytes.to_bits(),
+        "{what}: delivered + dead-lettered must equal shuffled exactly"
+    );
+    let partial = matches!(r.outcome, JobOutcome::PartialWithDlq);
+    assert_eq!(partial, !r.dlq.is_empty(), "{what}: outcome/DLQ mismatch");
+}
+
+pub fn run() -> Vec<Table> {
+    run_with(DEFAULT_GEN).expect("resilience defaults are valid")
+}
+
+/// Run the sweep on a `--gen KIND:NODES[:SEED]` platform.
+pub fn run_with(gen_spec: &str) -> Result<Vec<Table>, String> {
+    let base = parse_spec_config(gen_spec)?;
+    let setup = cell_setup(&base, base.nodes);
+
+    // Trace horizon: the static (no-dynamics) plan-local makespan, the
+    // churn-experiment idiom — every profile sees the same event shape.
+    let static_m =
+        run_job(&setup.topo, &setup.plan, &setup.sapp, &JobConfig::optimized(), &setup.inputs)
+            .metrics;
+    let horizon = static_m.makespan.max(1e-9);
+    let shape = TraceShape::of(&setup.topo, horizon);
+
+    let mut table = Table::new(
+        "resilience: crash/resume bit-identity + dead-letter accounting \
+         (reference = uninterrupted run of the same cell)",
+        &[
+            "profile",
+            "budget",
+            "crash@",
+            "makespan s",
+            "restarts",
+            "dlq splits",
+            "dlq ranges",
+            "dlq KB",
+            "outcome",
+            "bit-identical",
+        ],
+    );
+
+    for profile in PROFILES {
+        let trace = ScenarioTrace::generate(profile, TRACE_SEED, &shape);
+        for budget in BUDGETS {
+            let config = JobConfig {
+                max_attempts: budget,
+                ..JobConfig::optimized()
+            }
+            .with_dynamics(trace.clone());
+
+            let reference =
+                run_job(&setup.topo, &setup.plan, &setup.sapp, &config, &setup.inputs);
+            check_conservation(&reference, "reference");
+
+            for frac in CRASH_FRACS {
+                let opts = RecoveryOpts {
+                    checkpoint_every: Some(reference.metrics.makespan / 8.0),
+                    crash_at: Some(reference.metrics.makespan * frac),
+                    ..RecoveryOpts::default()
+                };
+                let resumed = run_job_with_recovery(
+                    &setup.topo,
+                    &setup.plan,
+                    &setup.sapp,
+                    &config,
+                    &setup.inputs,
+                    &opts,
+                )?;
+                check_conservation(&resumed, "resumed");
+                let identical =
+                    fingerprint(&reference.metrics) == fingerprint(&resumed.metrics);
+                let m = &resumed.metrics;
+                table.add_row(vec![
+                    profile.label().to_string(),
+                    budget.to_string(),
+                    format!("{:.0}%", frac * 100.0),
+                    format!("{:.3}", m.makespan),
+                    m.coordinator_restarts.to_string(),
+                    m.splits_dead_lettered.to_string(),
+                    m.ranges_dead_lettered.to_string(),
+                    format!("{:.1}", m.dlq_bytes / 1e3),
+                    match resumed.outcome {
+                        JobOutcome::Complete => "complete".to_string(),
+                        JobOutcome::PartialWithDlq => "partial".to_string(),
+                    },
+                    if identical { "yes" } else { "NO" }.to_string(),
+                ]);
+            }
+        }
+    }
+    Ok(vec![table])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One small cell through the full sweep machinery: recovery must be
+    /// bit-identical and conservation must hold (the row asserts it).
+    #[test]
+    fn small_cell_is_bit_identical() {
+        let tables = run_with("hier-wan:16").unwrap();
+        assert_eq!(tables.len(), 1);
+        let t = &tables[0];
+        assert_eq!(t.rows.len(), PROFILES.len() * BUDGETS.len() * CRASH_FRACS.len());
+        for row in &t.rows {
+            assert_eq!(row.last().unwrap(), "yes", "recovery not bit-identical: {row:?}");
+        }
+    }
+}

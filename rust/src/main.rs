@@ -13,7 +13,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use mrperf::engine::job::JobConfig;
-use mrperf::engine::run_job;
+use mrperf::engine::{run_job, run_job_with_recovery, RecoveryOpts};
 use mrperf::experiments;
 use mrperf::model::barrier::{Barrier, BarrierConfig};
 use mrperf::model::makespan::{evaluate, AppModel};
@@ -30,7 +30,7 @@ const USAGE: &str = "\
 mrperf — geo-distributed MapReduce modeling, optimization & execution
 
 USAGE:
-  mrperf experiment <table1|fig4..fig12|scale|churn|adversary|tenancy|all>
+  mrperf experiment <table1|fig4..fig12|scale|churn|adversary|tenancy|resilience|all>
                [--results DIR]
                [--gen KIND:NODES[:SEED]] [--dynamics PROFILE[:SEED]]
                [--profiles all] [--hedge RATE]                        (churn only)
@@ -44,7 +44,9 @@ USAGE:
                [--app APP] [--alpha A] [--optimizer NAME] [--skew S]
                [--bytes-per-source N] [--speculation] [--stealing] [--locality]
                [--replication R] [--dynamics PROFILE[:SEED]] [--hedge RATE]
-               [--threads N]
+               [--threads N] [--max-attempts N]
+               [--checkpoint-every T] [--crash-at T2] [--checkpoint-path FILE]
+               [--resume-from FILE]
   mrperf bench [--json DIR] [--filter SUBSTR]
   mrperf validate
   mrperf list
@@ -86,6 +88,19 @@ TENANCY:    `mrperf experiment tenancy` runs multi-tenant job streams over ONE
             sweep; every job's deadline is arrival + --slack × S, and the
             goodput column counts deadline hits. --dynamics injects a
             platform-wide trace every concurrent job observes
+RECOVERY:   --checkpoint-every T snapshots the run every T virtual seconds
+            (in memory, or to --checkpoint-path FILE); --crash-at T2 kills the
+            simulated coordinator at T2 and auto-resumes from the latest
+            checkpoint (requires --checkpoint-every) — the resumed run is
+            bit-identical to the uninterrupted one; --resume-from FILE starts
+            from a snapshot file (same topology/plan/app/config required);
+            --max-attempts N (≥ 1, default 4) bounds retries per map split /
+            key range before the work is dead-lettered (the run then reports
+            a partial outcome with exact dead-letter byte accounting)
+RESILIENCE: `mrperf experiment resilience` sweeps dynamics profile × retry
+            budget × coordinator-crash time on the churn workload and checks
+            crash/resume bit-identity plus dead-letter byte conservation
+            ([--gen KIND:NODES[:SEED]] picks the platform)
 ADVERSARY:  `mrperf experiment adversary` searches (seeded restarts + greedy
             refinement, deterministic given --seed) for the worst-case trace
             within a perturbation budget: --budget K bounds the node outages
@@ -299,6 +314,18 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
                     return ExitCode::FAILURE;
                 }
             }
+        } else if id == "resilience" {
+            let gen_spec = args.get_or("gen", experiments::resilience::DEFAULT_GEN);
+            match experiments::resilience::run_with(gen_spec) {
+                Ok(tables) => {
+                    experiments::report_tables(id, &tables, &results_dir);
+                    true
+                }
+                Err(e) => {
+                    eprintln!("resilience: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
         } else {
             experiments::run_and_report(id, &results_dir)
         };
@@ -458,6 +485,21 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    let max_attempts = match args.get_usize("max-attempts", 4) {
+        Ok(0) => {
+            eprintln!(
+                "invalid value '0' for --max-attempts (must be >= 1: an unbounded \
+                 retry budget is not expressible — work needs a finite budget to \
+                 ever reach the dead-letter queue)"
+            );
+            return ExitCode::FAILURE;
+        }
+        Ok(n) => n as u32,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
     let stealing = args.flag("stealing") || args.flag("locality");
     let mut jc = JobConfig {
         barriers: cfg,
@@ -467,6 +509,7 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
         local_only: !(args.flag("speculation") || stealing),
         replication: args.get_usize("replication", 1).unwrap_or(1),
         threads,
+        max_attempts,
         ..JobConfig::default()
     };
     if let Some(spec) = args.get("dynamics") {
@@ -505,7 +548,48 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
         topo.name,
         cfg.label()
     );
-    let res = run_job(&topo, &plan, app.as_ref(), &jc, &inputs);
+    let recovery = ["checkpoint-every", "crash-at", "checkpoint-path", "resume-from"]
+        .iter()
+        .any(|k| args.get(k).is_some());
+    let res = if recovery {
+        let opt_f64 = |key: &str| -> Result<Option<f64>, String> {
+            match args.get(key) {
+                None => Ok(None),
+                Some(_) => {
+                    Ok(Some(args.get_f64(key, 0.0).map_err(|e| e.to_string())?))
+                }
+            }
+        };
+        let built = (|| -> Result<RecoveryOpts, String> {
+            let resume_from = match args.get("resume-from") {
+                None => None,
+                Some(path) => Some(
+                    std::fs::read_to_string(path)
+                        .map_err(|e| format!("cannot read snapshot `{path}`: {e}"))?,
+                ),
+            };
+            Ok(RecoveryOpts {
+                checkpoint_every: opt_f64("checkpoint-every")?,
+                crash_at: opt_f64("crash-at")?,
+                checkpoint_path: args.get("checkpoint-path").map(String::from),
+                resume_from,
+            })
+        })();
+        let run = built.and_then(|opts| {
+            run_job_with_recovery(&topo, &plan, app.as_ref(), &jc, &inputs, &opts)
+        });
+        match run {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        // No recovery flag: the plain driver, bit-identical to every
+        // pre-checkpoint release.
+        run_job(&topo, &plan, app.as_ref(), &jc, &inputs)
+    };
     let m = &res.metrics;
     println!("makespan          {:>10} s (virtual time)", fmt_secs(m.makespan));
     println!("  push end        {:>10} s", fmt_secs(m.push_end));
@@ -553,6 +637,28 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
             m.push_bytes_repushed / 1e3,
             m.push_bytes_delivered == m.push_bytes
         );
+    }
+    if m.coordinator_restarts > 0 {
+        println!(
+            "recovery          {:>10} coordinator restart{} survived",
+            m.coordinator_restarts,
+            if m.coordinator_restarts == 1 { "" } else { "s" }
+        );
+    }
+    match res.outcome {
+        mrperf::engine::executor::JobOutcome::Complete => {}
+        mrperf::engine::executor::JobOutcome::PartialWithDlq => {
+            println!(
+                "outcome           {:>10}   {} split(s) + {} range(s) dead-lettered, \
+                 {:.1} KB (delivered + dead-lettered == shuffled: {})",
+                "PARTIAL",
+                m.splits_dead_lettered,
+                m.ranges_dead_lettered,
+                m.dlq_bytes / 1e3,
+                (m.shuffle_bytes_delivered + m.dlq_bytes).to_bits()
+                    == m.shuffle_bytes.to_bits()
+            );
+        }
     }
     ExitCode::SUCCESS
 }

@@ -1,0 +1,522 @@
+//! Minimal deterministic JSON value, writer and parser — the in-crate
+//! snapshot codec's foundation (the build is registry-free, so no
+//! serde). The *writer* follows the hand-rolled style of
+//! [`super::bench`]; the *parser* is the recursive-descent counterpart
+//! that checkpoint/resume needs to read snapshots back.
+//!
+//! Design constraints, both load-bearing for the checkpoint feature:
+//!
+//! * **Determinism** — objects are ordered `Vec<(String, Json)>`, not a
+//!   map, so a value serializes to exactly one byte sequence (and never
+//!   through hash-iteration order, detlint D001).
+//! * **Bit-exact floats** — virtual times, byte counters and rates must
+//!   round-trip *bit for bit* (the resume-equals-uninterrupted
+//!   invariant is on `f64::to_bits`). Decimal formatting cannot
+//!   guarantee that across parse implementations, so snapshot floats
+//!   are written as the 16-hex-digit big-endian form of
+//!   [`f64::to_bits`] via [`Json::f64_bits`] / [`Json::as_f64_bits`]
+//!   (NaN and infinities included, which plain JSON cannot carry).
+//!   Plain [`Json::Num`] is reserved for integers (ids, counts) whose
+//!   values stay below 2^53 and therefore round-trip exactly through
+//!   f64.
+
+/// A JSON value. Objects preserve insertion order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Numbers are carried as f64; integer values below 2^53 round-trip
+    /// exactly. For bit-exact floats use [`Json::f64_bits`].
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// A non-negative integer value (ids, counts).
+    pub fn uint(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// A u64 value; asserts it is exactly representable in f64.
+    pub fn u64(v: u64) -> Json {
+        assert!(v <= (1u64 << 53), "u64 {v} not exactly representable in f64");
+        Json::Num(v as f64)
+    }
+
+    /// Bit-exact f64 encoding: the 16-hex-digit form of `to_bits`.
+    pub fn f64_bits(v: f64) -> Json {
+        Json::Str(format!("{:016x}", v.to_bits()))
+    }
+
+    /// An `Option<usize>` as integer-or-null.
+    pub fn opt_uint(v: Option<usize>) -> Json {
+        match v {
+            Some(x) => Json::uint(x),
+            None => Json::Null,
+        }
+    }
+
+    /// Field lookup on an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required-field lookup with a path-flavored error.
+    pub fn field(&self, key: &str) -> Result<&Json, String> {
+        self.get(key).ok_or_else(|| format!("missing field `{key}`"))
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            other => Err(format!("expected number, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, String> {
+        let v = self.as_f64()?;
+        if v < 0.0 || v.fract() != 0.0 || v > (1u64 << 53) as f64 {
+            return Err(format!("expected non-negative integer, got {v}"));
+        }
+        Ok(v as usize)
+    }
+
+    pub fn as_u64(&self) -> Result<u64, String> {
+        Ok(self.as_usize()? as u64)
+    }
+
+    pub fn as_opt_usize(&self) -> Result<Option<usize>, String> {
+        match self {
+            Json::Null => Ok(None),
+            other => other.as_usize().map(Some),
+        }
+    }
+
+    /// Decode a bit-exact f64 written by [`Json::f64_bits`].
+    pub fn as_f64_bits(&self) -> Result<f64, String> {
+        let s = self.as_str()?;
+        if s.len() != 16 {
+            return Err(format!("expected 16 hex digits for f64 bits, got `{s}`"));
+        }
+        let bits = u64::from_str_radix(s, 16)
+            .map_err(|_| format!("invalid f64 bit pattern `{s}`"))?;
+        Ok(f64::from_bits(bits))
+    }
+
+    pub fn as_str(&self) -> Result<&str, String> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(format!("expected string, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json], String> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            other => Err(format!("expected array, got {}", other.kind())),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    /// Serialize (compact, no whitespace). Deterministic: objects write
+    /// their fields in insertion order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => {
+                if v.fract() == 0.0 && v.abs() <= (1u64 << 53) as f64 {
+                    // Integers render without a fraction or exponent.
+                    let _ = std::fmt::Write::write_fmt(out, format_args!("{}", *v as i64));
+                } else {
+                    // Shortest round-trip decimal (Rust's f64 Debug).
+                    let _ = std::fmt::Write::write_fmt(out, format_args!("{v:?}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON document (trailing whitespace allowed, trailing
+    /// garbage rejected).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { bytes, pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != bytes.len() {
+            return Err(p.err("trailing garbage after document"));
+        }
+        Ok(v)
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = std::fmt::Write::write_fmt(out, format_args!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("json parse error at byte {}: {msg}", self.pos)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", b as char)))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{word}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected byte `{}`", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]` in array")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected `,` or `}` in object")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // Surrogate pair.
+                                if self.peek() != Some(b'\\') {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                                self.pos += 1;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err("invalid low surrogate"));
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(c)
+                                    .ok_or_else(|| self.err("invalid unicode escape"))?,
+                            );
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                // Raw UTF-8 bytes pass through (the input is a &str, so
+                // multi-byte sequences are valid — reassemble them).
+                b if b < 0x80 => out.push(b as char),
+                _ => {
+                    // Back up and take the full UTF-8 char from the str.
+                    self.pos -= 1;
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| self.err("invalid \\u escape"))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| self.err("invalid \\u escape"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9') | Some(b'.') | Some(b'e') | Some(b'E') | Some(b'+') | Some(b'-')
+        ) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?;
+        let v: f64 = s
+            .parse()
+            .map_err(|_| format!("json parse error at byte {start}: invalid number `{s}`"))?;
+        if !v.is_finite() {
+            return Err(format!("json parse error at byte {start}: non-finite number"));
+        }
+        Ok(Json::Num(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_scalars_and_containers() {
+        let v = Json::Obj(vec![
+            ("a".into(), Json::Null),
+            ("b".into(), Json::Bool(true)),
+            ("c".into(), Json::uint(42)),
+            ("d".into(), Json::Str("hi \"there\"\n\ttab".into())),
+            (
+                "e".into(),
+                Json::Arr(vec![Json::uint(1), Json::Bool(false), Json::Str("x".into())]),
+            ),
+            ("f".into(), Json::Obj(vec![("nested".into(), Json::uint(7))])),
+        ]);
+        let text = v.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v);
+        // Deterministic: re-rendering the parse is byte-identical.
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn f64_bits_round_trip_is_bit_exact() {
+        for v in [
+            0.0,
+            -0.0,
+            1.0,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            123456789.123456789,
+        ] {
+            let j = Json::f64_bits(v);
+            let text = j.render();
+            let back = Json::parse(&text).unwrap().as_f64_bits().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "bits drifted for {v}");
+        }
+    }
+
+    #[test]
+    fn unicode_strings_survive() {
+        let v = Json::Str("héllo → 世界 \u{1F600}".into());
+        assert_eq!(Json::parse(&v.render()).unwrap(), v);
+        // Escaped form parses too (incl. a surrogate pair).
+        let parsed = Json::parse(r#""\u4e16\u754c \ud83d\ude00""#).unwrap();
+        assert_eq!(parsed, Json::Str("世界 \u{1F600}".into()));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "tru",
+            "\"unterminated",
+            "[1] garbage",
+            "{\"a\":1,}x",
+            "nan",
+            "1e999",
+            "\"\\q\"",
+            "\"\\ud800\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted malformed `{bad}`");
+        }
+    }
+
+    #[test]
+    fn field_accessors_report_useful_errors() {
+        let v = Json::parse(r#"{"n": 3, "s": "x", "neg": -1, "frac": 1.5}"#).unwrap();
+        assert_eq!(v.field("n").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.field("s").unwrap().as_str().unwrap(), "x");
+        assert!(v.field("missing").unwrap_err().contains("missing"));
+        assert!(v.field("neg").unwrap().as_usize().is_err());
+        assert!(v.field("frac").unwrap().as_usize().is_err());
+        assert!(v.field("s").unwrap().as_f64().is_err());
+        assert_eq!(v.field("neg").unwrap().as_opt_usize().ok(), None);
+        assert_eq!(Json::Null.as_opt_usize().unwrap(), None);
+    }
+
+    #[test]
+    fn integers_render_without_fraction() {
+        assert_eq!(Json::uint(0).render(), "0");
+        assert_eq!(Json::u64(1 << 53).render(), "9007199254740992");
+        assert_eq!(Json::Num(-4.0).render(), "-4");
+    }
+}

@@ -10,6 +10,7 @@
 pub mod bench;
 pub mod cli;
 pub mod errors;
+pub mod json;
 pub mod mat;
 pub mod logger;
 pub mod qcheck;

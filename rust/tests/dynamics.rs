@@ -24,9 +24,12 @@ use mrperf::platform::{build_env, EnvKind};
 use mrperf::util::qcheck::{ensure, qcheck, Config};
 
 /// Bit-exact signature of every metric field (floats by bit pattern).
+/// `coordinator_restarts` is deliberately excluded: it is provenance of
+/// how many crashes a run survived, and the checkpoint/resume invariant
+/// is exactly that everything else matches bit for bit.
 fn sig(m: &JobMetrics) -> String {
     format!(
-        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
         m.makespan.to_bits(),
         m.push_end.to_bits(),
         m.map_end.to_bits(),
@@ -38,6 +41,7 @@ fn sig(m: &JobMetrics) -> String {
         m.shuffle_bytes_delivered.to_bits(),
         m.push_bytes_repushed.to_bits(),
         m.push_bytes_delivered.to_bits(),
+        m.dlq_bytes.to_bits(),
         m.n_map_tasks,
         m.n_reduce_tasks,
         m.spec_launched,
@@ -49,6 +53,8 @@ fn sig(m: &JobMetrics) -> String {
         m.reducers_failed,
         m.reduce_ranges_reassigned,
         m.sources_refreshed,
+        m.splits_dead_lettered,
+        m.ranges_dead_lettered,
         m.input_records,
         m.intermediate_records,
         m.output_records
@@ -141,16 +147,20 @@ fn failed_node_tasks_always_complete() {
                 format!("seed {trace_seed:#x}: trace injected no failure"),
             )?;
             // Shuffle byte conservation (restartable reduce): every
-            // unique byte ends up credited exactly once, whatever was
-            // lost and replayed along the way. Byte counts are integers
-            // < 2^53, so the f64 sums are exact and equality is exact.
+            // unique byte ends up credited exactly once — delivered or
+            // dead-lettered — whatever was lost and replayed along the
+            // way. Byte counts are integers < 2^53, so the f64 sums are
+            // exact and equality is exact. (At the default retry budget
+            // the seeded profiles never exhaust it: dlq_bytes is 0.)
             ensure(
-                m.shuffle_bytes_delivered == m.shuffle_bytes,
+                m.shuffle_bytes_delivered + m.dlq_bytes == m.shuffle_bytes,
                 format!(
-                    "seed {trace_seed:#x}: delivered {} != shuffled {} (replayed {})",
-                    m.shuffle_bytes_delivered, m.shuffle_bytes, m.reduce_bytes_replayed
+                    "seed {trace_seed:#x}: delivered {} + dlq {} != shuffled {} (replayed {})",
+                    m.shuffle_bytes_delivered, m.dlq_bytes, m.shuffle_bytes,
+                    m.reduce_bytes_replayed
                 ),
             )?;
+            ensure(m.dlq_bytes == 0.0, "default budget must absorb seeded failures")?;
             // Push-side conservation holds under every trace (no
             // refresh events here, so no re-push traffic either).
             ensure(
@@ -291,11 +301,12 @@ fn reducer_failures_conserve_bytes_for_both_schedulers() {
                 format!("seed {trace_seed:#x}: no reducer outage landed"),
             )?;
             ensure(
-                m.shuffle_bytes_delivered == m.shuffle_bytes,
+                m.shuffle_bytes_delivered + m.dlq_bytes == m.shuffle_bytes,
                 format!(
-                    "seed {trace_seed:#x} plan_local={plan_local}: delivered {} != \
+                    "seed {trace_seed:#x} plan_local={plan_local}: delivered {} + dlq {} != \
                      shuffled {} (replayed {})",
-                    m.shuffle_bytes_delivered, m.shuffle_bytes, m.reduce_bytes_replayed
+                    m.shuffle_bytes_delivered, m.dlq_bytes, m.shuffle_bytes,
+                    m.reduce_bytes_replayed
                 ),
             )?;
             ensure(

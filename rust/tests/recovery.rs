@@ -1,0 +1,308 @@
+//! Checkpoint/resume + dead-letter-queue properties (ISSUE 9):
+//!
+//! * **resume bit-identity** — `resume(checkpoint(t))` finishes
+//!   bit-identical to the uninterrupted run, for every dynamics profile
+//!   and multiple checkpoint/crash times, via the crash-simulating
+//!   driver (`run_job_with_recovery`);
+//! * **zero-flag neutrality** — the recovery driver with recovery off
+//!   reproduces `run_job` bit for bit;
+//! * **bounded retries** — a flapping trace that evicts the same work
+//!   over and over dead-letters it at the retry budget instead of
+//!   requeueing forever (the pre-DLQ engine livelocked here), for both
+//!   scheduler families;
+//! * **exhausted ranges reach the DLQ** — an all-reducer blackout with
+//!   budget 1 ends `PartialWithDlq` with every undelivered shuffle byte
+//!   accounted in the dead-letter queue
+//!   (`shuffle_bytes_delivered + dlq_bytes == shuffle_bytes`, exact).
+
+use mrperf::apps::SyntheticApp;
+use mrperf::engine::dynamics::{DynEvent, DynProfile, ScenarioTrace, TimedEvent, TraceShape};
+use mrperf::engine::executor::JobOutcome;
+use mrperf::engine::job::JobConfig;
+use mrperf::engine::{run_job, run_job_with_recovery, DlqKind, JobMetrics, RecoveryOpts};
+use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::plan::Plan;
+use mrperf::platform::scale::{generate_kind, ScaleKind};
+
+/// Bit-exact signature of every metric field (floats by bit pattern).
+/// `coordinator_restarts` is deliberately excluded: it is provenance of
+/// how many crashes a run survived, and the checkpoint/resume invariant
+/// is exactly that everything else matches bit for bit.
+fn sig(m: &JobMetrics) -> String {
+    format!(
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        m.makespan.to_bits(),
+        m.push_end.to_bits(),
+        m.map_end.to_bits(),
+        m.shuffle_end.to_bits(),
+        m.push_bytes.to_bits(),
+        m.shuffle_bytes.to_bits(),
+        m.output_bytes.to_bits(),
+        m.reduce_bytes_replayed.to_bits(),
+        m.shuffle_bytes_delivered.to_bits(),
+        m.push_bytes_repushed.to_bits(),
+        m.push_bytes_delivered.to_bits(),
+        m.dlq_bytes.to_bits(),
+        m.n_map_tasks,
+        m.n_reduce_tasks,
+        m.spec_launched,
+        m.spec_won,
+        m.stolen,
+        m.dyn_events,
+        m.failures_injected,
+        m.tasks_requeued,
+        m.reducers_failed,
+        m.reduce_ranges_reassigned,
+        m.sources_refreshed,
+        m.splits_dead_lettered,
+        m.ranges_dead_lettered,
+        m.input_records,
+        m.intermediate_records,
+        m.output_records
+    )
+}
+
+/// With no recovery flag set the driver is `run_job`, bit for bit.
+#[test]
+fn recovery_driver_with_recovery_off_is_bit_identical_to_run_job() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xD11A);
+    let app = SyntheticApp::new(1.0);
+    for cfg in [JobConfig::default(), JobConfig::dynamic_locality()] {
+        let plain = run_job(&topo, &plan, &app, &cfg, &inputs);
+        let recov = run_job_with_recovery(
+            &topo,
+            &plan,
+            &app,
+            &cfg,
+            &inputs,
+            &RecoveryOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(sig(&plain.metrics), sig(&recov.metrics));
+        assert_eq!(recov.metrics.coordinator_restarts, 0);
+        assert_eq!(plain.outputs, recov.outputs);
+    }
+}
+
+/// The tentpole invariant, swept: for EVERY dynamics profile and two
+/// distinct crash times, a run that checkpoints, crashes and resumes
+/// finishes bit-identical to the uninterrupted run — same metrics
+/// (restart counter aside), same outputs.
+#[test]
+fn crashed_run_resumes_bit_identical_for_every_profile() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xD11A);
+    let app = SyntheticApp::new(1.0);
+
+    // One static run fixes the trace horizon for every profile.
+    let stat = run_job(&topo, &plan, &app, &JobConfig::default(), &inputs).metrics;
+
+    // No-dynamics case plus every profile; plan-local everywhere, and
+    // the dynamic scheduler additionally on the richest-state profiles
+    // (speculation/stealing/reassignment state must round-trip too).
+    let mut cases: Vec<(Option<DynProfile>, JobConfig)> =
+        vec![(None, JobConfig::default())];
+    for p in DynProfile::all() {
+        cases.push((Some(p), JobConfig::default()));
+    }
+    for p in [DynProfile::Churn, DynProfile::Staleness] {
+        cases.push((Some(p), JobConfig::dynamic_locality()));
+    }
+
+    for (profile, base) in cases {
+        let cfg = match profile {
+            Some(p) => base.clone().with_dynamics(ScenarioTrace::generate(
+                p,
+                7,
+                &TraceShape::of(&topo, stat.makespan),
+            )),
+            None => base.clone(),
+        };
+        let reference = run_job(&topo, &plan, &app, &cfg, &inputs);
+        for crash_frac in [0.3, 0.7] {
+            let opts = RecoveryOpts {
+                checkpoint_every: Some(reference.metrics.makespan / 10.0),
+                crash_at: Some(reference.metrics.makespan * crash_frac),
+                ..RecoveryOpts::default()
+            };
+            let resumed =
+                run_job_with_recovery(&topo, &plan, &app, &cfg, &inputs, &opts).unwrap();
+            assert_eq!(
+                sig(&reference.metrics),
+                sig(&resumed.metrics),
+                "{profile:?} crash at {crash_frac}: resumed run diverged"
+            );
+            assert_eq!(
+                resumed.metrics.coordinator_restarts, 1,
+                "{profile:?} crash at {crash_frac}: exactly one restart"
+            );
+            assert_eq!(
+                reference.outputs, resumed.outputs,
+                "{profile:?} crash at {crash_frac}: outputs diverged"
+            );
+        }
+    }
+}
+
+/// A synchronized flapping trace — every mapper failing and recovering
+/// on a cycle shorter than one map task's compute time — used to
+/// livelock the engine: each eviction requeued the task unconditionally
+/// and the run never terminated. With the retry budget, every split is
+/// dead-lettered after exactly `max_attempts` evictions: the run ends
+/// `PartialWithDlq`, requeues are bounded by `splits × (budget − 1)`,
+/// and the byte ledger still reconciles exactly. Both scheduler
+/// families (stealing has no live target during the synchronized
+/// outages, so it exhausts the same budget).
+#[test]
+fn flapping_trace_dead_letters_instead_of_livelocking() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xF1A9);
+    // Compute-bound maps: one task needs the whole inter-failure window
+    // many times over, so it can never finish between flaps.
+    let app = SyntheticApp::new(1.0).with_costs(50.0, 1.0);
+    let budget = 2u32;
+
+    let stat = run_job(&topo, &plan, &app, &JobConfig::optimized(), &inputs).metrics;
+    let d = stat.map_end - stat.push_end;
+    assert!(d > 0.0, "map phase must be non-trivial");
+    // 6 fail/recover cycles of period d/8 starting inside the map
+    // phase: each up-window is d/16 — far shorter than a task.
+    let p = d / 8.0;
+    let mut events = Vec::new();
+    for c in 0..6 {
+        let fail = stat.push_end + (c as f64 + 0.5) * p;
+        let recover = stat.push_end + (c as f64 + 1.0) * p;
+        for j in 0..topo.n_mappers() {
+            events.push(TimedEvent { time: fail, event: DynEvent::MapperFail { node: j } });
+            events.push(TimedEvent {
+                time: recover,
+                event: DynEvent::MapperRecover { node: j },
+            });
+        }
+    }
+    let trace = ScenarioTrace::from_events("flapping", events);
+
+    for (plan_local, base) in
+        [(true, JobConfig::optimized()), (false, JobConfig::dynamic_locality())]
+    {
+        let cfg = JobConfig { max_attempts: budget, ..base.clone() }
+            .with_dynamics(trace.clone());
+        // Pre-fix this call never returned (unbounded requeue loop).
+        let res = run_job(&topo, &plan, &app, &cfg, &inputs);
+        let m = &res.metrics;
+        assert!(
+            matches!(res.outcome, JobOutcome::PartialWithDlq),
+            "plan_local={plan_local}: flapped-to-death work must end partial"
+        );
+        assert!(!res.dlq.is_empty(), "plan_local={plan_local}: DLQ must be non-empty");
+        assert!(
+            m.splits_dead_lettered > 0,
+            "plan_local={plan_local}: splits must be dead-lettered"
+        );
+        assert_eq!(
+            res.dlq.of_kind(DlqKind::Split).count(),
+            m.splits_dead_lettered,
+            "plan_local={plan_local}: DLQ entries must match the counter"
+        );
+        // Every attempt is budgeted: a split is requeued at most
+        // budget − 1 times before its next eviction dead-letters it.
+        assert!(
+            m.tasks_requeued <= m.n_map_tasks * (budget as usize - 1),
+            "plan_local={plan_local}: requeues {} exceed the budget bound \
+             ({} splits, budget {budget})",
+            m.tasks_requeued,
+            m.n_map_tasks
+        );
+        // Dead splits never emitted shuffle data, so what WAS emitted
+        // still reconciles exactly.
+        assert_eq!(
+            (m.shuffle_bytes_delivered + m.dlq_bytes).to_bits(),
+            m.shuffle_bytes.to_bits(),
+            "plan_local={plan_local}: byte ledger must reconcile"
+        );
+        if plan_local {
+            // Pinned tasks cannot escape the flapping: every split dies.
+            assert_eq!(m.splits_dead_lettered, m.n_map_tasks);
+            assert_eq!(m.output_records, 0, "no split survived to produce output");
+        }
+    }
+}
+
+/// All-reducer blackout with retry budget 1 and NO recovery: every
+/// range whose reduce had not completed is dead-lettered at failure
+/// time — even though no reassignment target exists — and the job ends
+/// `PartialWithDlq` with every undelivered shuffle byte in the DLQ.
+/// (Pre-fix, a range that counted a failed attempt while no live
+/// adopter existed was simply parked forever; with no recovery event
+/// the run never terminated.)
+#[test]
+fn reducer_blackout_with_budget_one_dead_letters_every_unfinished_range() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0x10AD);
+    // Slow reduce: the failure lands while reduce compute is in flight.
+    let app = SyntheticApp::new(1.0).with_costs(1.0, 50.0);
+
+    let stat = run_job(&topo, &plan, &app, &JobConfig::optimized(), &inputs).metrics;
+    assert!(stat.makespan > stat.shuffle_end, "reduce phase must be non-trivial");
+    let fail_at = 0.5 * (stat.shuffle_end + stat.makespan);
+    let events: Vec<TimedEvent> = (0..topo.n_reducers())
+        .map(|k| TimedEvent { time: fail_at, event: DynEvent::ReducerFail { node: k } })
+        .collect();
+    let trace = ScenarioTrace::from_events("blackout-no-recovery", events);
+
+    for (plan_local, base) in
+        [(true, JobConfig::optimized()), (false, JobConfig::dynamic_locality())]
+    {
+        let cfg =
+            JobConfig { max_attempts: 1, ..base.clone() }.with_dynamics(trace.clone());
+        let res = run_job(&topo, &plan, &app, &cfg, &inputs);
+        let m = &res.metrics;
+        assert_eq!(m.reducers_failed, topo.n_reducers(), "plan_local={plan_local}");
+        assert!(
+            matches!(res.outcome, JobOutcome::PartialWithDlq),
+            "plan_local={plan_local}: a permanent blackout must end partial"
+        );
+        assert!(
+            m.ranges_dead_lettered > 0,
+            "plan_local={plan_local}: unfinished ranges must be dead-lettered"
+        );
+        assert_eq!(
+            res.dlq.of_kind(DlqKind::Range).count(),
+            m.ranges_dead_lettered,
+            "plan_local={plan_local}: DLQ entries must match the counter"
+        );
+        assert!(m.dlq_bytes > 0.0, "plan_local={plan_local}: lost bytes must be accounted");
+        // THE reconciliation identity: every shuffle byte is either
+        // delivered to a completed range or dead-lettered — exactly.
+        assert_eq!(
+            (m.shuffle_bytes_delivered + m.dlq_bytes).to_bits(),
+            m.shuffle_bytes.to_bits(),
+            "plan_local={plan_local}: delivered {} + dlq {} != shuffled {}",
+            m.shuffle_bytes_delivered,
+            m.dlq_bytes,
+            m.shuffle_bytes
+        );
+        // Records from dead ranges never reach the output.
+        assert!(
+            m.output_records < m.input_records,
+            "plan_local={plan_local}: dead ranges cannot produce their records"
+        );
+    }
+}
+
+/// The retry budget's zero value is rejected loudly, not treated as
+/// "unbounded" (the pre-fix behavior the budget exists to remove).
+#[test]
+#[should_panic(expected = "max_attempts must be >= 1")]
+fn zero_retry_budget_is_rejected() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 10, 1);
+    let cfg = JobConfig { max_attempts: 0, ..JobConfig::default() };
+    let _ = run_job(&topo, &plan, &SyntheticApp::new(1.0), &cfg, &inputs);
+}

@@ -17,8 +17,8 @@
 use mrperf::apps::SyntheticApp;
 use mrperf::engine::dynamics::{DynProfile, ScenarioTrace, TraceShape};
 use mrperf::engine::job::JobConfig;
-use mrperf::engine::tenancy::{run_stream, StreamJob};
-use mrperf::engine::{run_job, stream_policy, JobMetrics, Record};
+use mrperf::engine::tenancy::{run_stream, run_stream_with_recovery, StreamJob};
+use mrperf::engine::{run_job, stream_policy, JobMetrics, RecoveryOpts, Record};
 use mrperf::experiments::common::synthetic_inputs;
 use mrperf::model::plan::Plan;
 use mrperf::platform::scale::{generate_kind, ScaleKind};
@@ -26,9 +26,12 @@ use mrperf::platform::Topology;
 use mrperf::util::qcheck::{ensure, qcheck, Config};
 
 /// Bit-exact signature of every metric field (floats by bit pattern).
+/// `coordinator_restarts` is deliberately excluded: it is provenance of
+/// how many crashes a run survived, and the checkpoint/resume invariant
+/// is exactly that everything else matches bit for bit.
 fn sig(m: &JobMetrics) -> String {
     format!(
-        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
         m.makespan.to_bits(),
         m.push_end.to_bits(),
         m.map_end.to_bits(),
@@ -40,6 +43,7 @@ fn sig(m: &JobMetrics) -> String {
         m.shuffle_bytes_delivered.to_bits(),
         m.push_bytes_repushed.to_bits(),
         m.push_bytes_delivered.to_bits(),
+        m.dlq_bytes.to_bits(),
         m.n_map_tasks,
         m.n_reduce_tasks,
         m.spec_launched,
@@ -51,6 +55,8 @@ fn sig(m: &JobMetrics) -> String {
         m.reducers_failed,
         m.reduce_ranges_reassigned,
         m.sources_refreshed,
+        m.splits_dead_lettered,
+        m.ranges_dead_lettered,
         m.input_records,
         m.intermediate_records,
         m.output_records
@@ -264,6 +270,99 @@ fn fifo_serializes_and_fair_share_overlaps() {
         s.jobs[0].finished,
         single.makespan
     );
+}
+
+/// The fair-share `weight` knob is live (ISSUE 9 satellite): two
+/// identical compute-bound jobs submitted together, one at weight 2,
+/// and the heavier job finishes strictly first. The mechanism is slot
+/// scaling at admission — weight 2 doubles the job's map/reduce slots,
+/// so it runs twice as many concurrent map activities on the shared
+/// per-node compute resources and max-min fairness gives it twice the
+/// aggregate rate.
+#[test]
+fn weight_two_job_beats_identical_weight_one_job() {
+    let (topo, plan) = setup(3);
+    // Compute-bound maps + small splits: several tasks per mapper, so
+    // the slot count (not the data) is the binding resource.
+    let app = SyntheticApp::new(1.0).with_costs(25.0, 1.0);
+    let config = JobConfig { split_size: 2 << 10, ..JobConfig::default() };
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 14, 0xD11A);
+    let mut heavy = StreamJob::new(0.0, &plan, &app, &config, &inputs);
+    heavy.weight = 2.0;
+    let jobs = vec![StreamJob::new(0.0, &plan, &app, &config, &inputs), heavy];
+    let mut policy = stream_policy("fair-share").unwrap();
+    let res = run_stream(&topo, &jobs, policy.as_mut(), None).unwrap();
+    let (a, b) = (&res.jobs[0], &res.jobs[1]);
+    assert_eq!(a.started, 0.0);
+    assert_eq!(b.started, 0.0, "fair-share must admit both at t=0");
+    assert!(
+        b.finished < a.finished,
+        "the weight-2 job ({}) must finish strictly before its weight-1 twin ({})",
+        b.finished,
+        a.finished
+    );
+    // Identical work either way: the weight moves time, not bytes.
+    let (ma, mb) = (a.metrics.as_ref().unwrap(), b.metrics.as_ref().unwrap());
+    assert_eq!(ma.input_records, mb.input_records);
+    assert_eq!(ma.output_records, mb.output_records);
+    assert_eq!(ma.push_bytes.to_bits(), mb.push_bytes.to_bits());
+}
+
+/// Checkpoint/resume under tenancy (ISSUE 9 tentpole): a 3-job stream
+/// crashed mid-run resumes from its snapshot and finishes bit-identical
+/// to the uninterrupted stream — per-job metrics, outcome times and the
+/// stream makespan — with per-job byte conservation intact and the
+/// restart recorded in every finished job's provenance counter.
+#[test]
+fn crashed_stream_resumes_bit_identical() {
+    let (topo, plan) = setup(3);
+    let app = SyntheticApp::new(1.0);
+    let config = JobConfig::default();
+    let inputs_a = synthetic_inputs(topo.n_sources(), 1 << 13, 0xA11CE);
+    let inputs_b = synthetic_inputs(topo.n_sources(), 1 << 13, 0xB0B);
+    let arr2 = 0.25 * run_job(&topo, &plan, &app, &config, &inputs_a).metrics.makespan;
+    let jobs = vec![
+        StreamJob::new(0.0, &plan, &app, &config, &inputs_a),
+        StreamJob::new(0.0, &plan, &app, &config, &inputs_b),
+        StreamJob::new(arr2, &plan, &app, &config, &inputs_a),
+    ];
+
+    let mut policy = stream_policy("fair-share").unwrap();
+    let reference = run_stream(&topo, &jobs, policy.as_mut(), None).unwrap();
+
+    for crash_frac in [0.35, 0.8] {
+        let opts = RecoveryOpts {
+            checkpoint_every: Some(reference.makespan / 10.0),
+            crash_at: Some(reference.makespan * crash_frac),
+            ..RecoveryOpts::default()
+        };
+        let resumed =
+            run_stream_with_recovery(&topo, &jobs, policy.as_mut(), None, &opts).unwrap();
+        assert_eq!(
+            resumed.makespan.to_bits(),
+            reference.makespan.to_bits(),
+            "crash at {crash_frac}: stream makespan diverged"
+        );
+        for (i, (r, u)) in resumed.jobs.iter().zip(&reference.jobs).enumerate() {
+            assert!(!r.rejected, "crash at {crash_frac}: job {i} rejected");
+            assert_eq!(r.started.to_bits(), u.started.to_bits(), "job {i}");
+            assert_eq!(r.finished.to_bits(), u.finished.to_bits(), "job {i}");
+            let (rm, um) = (r.metrics.as_ref().unwrap(), u.metrics.as_ref().unwrap());
+            assert_eq!(
+                sig(rm),
+                sig(um),
+                "crash at {crash_frac}: job {i} diverged after resume"
+            );
+            assert_eq!(rm.coordinator_restarts, 1, "job {i} must record the restart");
+            assert_eq!(um.coordinator_restarts, 0, "reference saw no crash");
+            // Per-job conservation survives the crash/restore cycle.
+            assert_eq!(rm.push_bytes_delivered.to_bits(), rm.push_bytes.to_bits());
+            assert_eq!(
+                (rm.shuffle_bytes_delivered + rm.dlq_bytes).to_bits(),
+                rm.shuffle_bytes.to_bits()
+            );
+        }
+    }
 }
 
 /// Malformed streams are rejected with CLI-grade messages before any

@@ -55,6 +55,16 @@ if [[ "$QUICK" == "0" ]]; then
   "$BIN" run --gen hier-wan:16 --optimizer e2e-multi --hedge 0.1 --dynamics failures:3 >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer uniform --dynamics staleness:3 >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer uniform --threads 4 >/dev/null
+  # Checkpoint/crash/resume: crash mid-run, resume from the in-memory
+  # snapshot, finish in one invocation; then the same through a file,
+  # and a file-based resume of a fresh run.
+  "$BIN" run --gen hier-wan:16 --optimizer uniform --checkpoint-every 2 --crash-at 5 >/dev/null
+  CKPT="$(mktemp -t mrperf-ckpt.XXXXXX)"
+  "$BIN" run --gen hier-wan:16 --optimizer uniform --checkpoint-every 2 --crash-at 5 \
+    --checkpoint-path "$CKPT" >/dev/null
+  "$BIN" run --gen hier-wan:16 --optimizer uniform --resume-from "$CKPT" >/dev/null
+  "$BIN" run --gen hier-wan:16 --optimizer uniform --max-attempts 1 --dynamics failures:3 >/dev/null
+  "$BIN" experiment resilience --gen hier-wan:16 >/dev/null
   "$BIN" experiment churn --gen hier-wan:16 --dynamics burst:7 >/dev/null
   "$BIN" experiment churn --profiles all --gen hier-wan:16 --dynamics failures:7 --hedge 0.05 >/dev/null
   "$BIN" experiment adversary --gen hier-wan:16 --seed 7 --budget 2 --restarts 2 >/dev/null
@@ -127,6 +137,28 @@ if [[ "$QUICK" == "0" ]]; then
     echo "FAIL: tenancy --threads 0 should be rejected" >&2
     exit 1
   fi
+  if "$BIN" run --gen hier-wan:16 --max-attempts 0 >/dev/null 2>&1; then
+    echo "FAIL: run --max-attempts 0 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" run --gen hier-wan:16 --crash-at 5 >/dev/null 2>&1; then
+    echo "FAIL: --crash-at without --checkpoint-every should be rejected" >&2
+    exit 1
+  fi
+  # Snapshot reader rejections: malformed JSON, and a version from the
+  # future (valid doc, unreadable by this build).
+  BADSNAP="$(mktemp -t mrperf-badsnap.XXXXXX)"
+  echo 'not json' > "$BADSNAP"
+  if "$BIN" run --gen hier-wan:16 --resume-from "$BADSNAP" >/dev/null 2>&1; then
+    echo "FAIL: malformed snapshot should be rejected" >&2
+    exit 1
+  fi
+  sed 's/"version":1/"version":999/' "$CKPT" > "$BADSNAP"
+  if "$BIN" run --gen hier-wan:16 --optimizer uniform --resume-from "$BADSNAP" >/dev/null 2>&1; then
+    echo "FAIL: version-mismatched snapshot should be rejected" >&2
+    exit 1
+  fi
+  rm -f "$CKPT" "$BADSNAP"
   echo "smoke OK"
 fi
 
