@@ -76,6 +76,16 @@
 //! continuing bit-identically. The file codec and crash/resume drivers
 //! live in [`super::snapshot`].
 //!
+//! **Online re-optimization** ([`super::replan`]): with `--replan` the
+//! executor re-solves the plan at dynamics-event boundaries (or on an
+//! `every:T` cadence, and once on resume-from-snapshot) against the
+//! *effective* platform — capacities read live from the fluid sim,
+//! failed nodes discounted, refreshed sources re-priced — via a
+//! warm-started short LP descent ([`crate::optimizer::Replanner`]),
+//! then migrates only unstarted work (ranges with empty shuffle
+//! ledgers, splits still waiting for data) to the accepted plan. The
+//! byte ledgers above are untouched by construction.
+//!
 //! The engine executes the *real* map/reduce functions on real records —
 //! byte counts, skew and record conservation are genuine — while time is
 //! virtual (charged from the topology's bandwidths/compute rates).
@@ -90,8 +100,10 @@ use super::fluid::{ActivityId, FluidSim, ResourceId};
 use super::job::{batch_size, JobConfig, MapReduceApp, Record};
 use super::metrics::JobMetrics;
 use super::partitioner::Partitioner;
+use super::replan::{self, ReplanPolicy, ReplanState};
 use super::scheduler::{self, NodeId, ReduceView, RunningTask, SchedView, Scheduler};
 use crate::model::barrier::Barrier;
+use crate::model::makespan::AppModel;
 use crate::model::plan::Plan;
 use crate::platform::Topology;
 
@@ -450,8 +462,11 @@ pub(crate) struct Executor<'a> {
     red_compute: Vec<ResourceId>,
     // tasks
     tasks: Vec<MapTask>,
-    /// Plan node of every task (immutable after `build_splits`; cached so
-    /// per-event scheduling snapshots don't rebuild it).
+    /// Preferred node of every task: the plan node from `build_splits`,
+    /// possibly re-homed by an accepted replan while the task was still
+    /// `WaitingForData` (cached so per-event scheduling snapshots don't
+    /// rebuild it). The *push destination* is `tasks[t].mapper`, which
+    /// never changes.
     task_home: Vec<NodeId>,
     partitioner: Partitioner,
     // push state (restartable under source refreshes)
@@ -514,6 +529,11 @@ pub(crate) struct Executor<'a> {
     dyn_cursor: usize,
     /// Liveness of each mapper node (failures set false, recoveries true).
     node_up: Vec<bool>,
+    /// Online re-optimization state ([`super::replan`]): current plan's
+    /// shuffle split, hysteresis baseline, `every:T` tick, staleness
+    /// pricing, and the warm-started LP bases. Inert under
+    /// [`ReplanPolicy::Off`].
+    replan: ReplanState,
     // metrics
     metrics: JobMetrics,
     durations: Vec<f64>,
@@ -611,6 +631,7 @@ impl<'a> Executor<'a> {
             dynamics,
             dyn_cursor: 0,
             node_up: vec![true; m],
+            replan: ReplanState::new(config, plan, topo),
             metrics: JobMetrics::default(),
             durations: Vec::new(),
             outputs: vec![Vec::new(); r],
@@ -1265,11 +1286,19 @@ impl<'a> Executor<'a> {
 
     // ------------------------------------------------------- dynamics
 
-    /// Virtual time of the next un-applied trace event, if any.
+    /// Virtual time of the next un-applied trace event or `every:T`
+    /// replan tick, whichever comes first. The driver advances the fluid
+    /// simulation to this boundary so both kinds of event apply at their
+    /// exact virtual time.
     pub(crate) fn next_dyn_time(&self) -> Option<f64> {
-        self.dynamics
+        let trace_t = self
+            .dynamics
             .and_then(|tr| tr.events().get(self.dyn_cursor))
-            .map(|te| te.time)
+            .map(|te| te.time);
+        match (trace_t, self.replan.next_at) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (t, tick) => t.or(tick),
+        }
     }
 
     /// Apply every trace event due at (or before) the current clock,
@@ -1277,10 +1306,9 @@ impl<'a> Executor<'a> {
     /// tasks to (re)place, recoveries free slots, slowdowns may trip the
     /// straggler detector.
     pub(crate) fn apply_dynamics(&mut self, sim: &mut FluidSim) {
-        let Some(trace) = self.dynamics else { return };
         let now = sim.now();
         let mut applied = false;
-        while let Some(te) = trace.events().get(self.dyn_cursor) {
+        while let Some(te) = self.dynamics.and_then(|tr| tr.events().get(self.dyn_cursor)) {
             if te.time > now {
                 break;
             }
@@ -1340,7 +1368,199 @@ impl<'a> Executor<'a> {
                 applied = true;
             }
         }
-        if applied {
+        let replanned = self.maybe_replan(sim, applied);
+        if applied || replanned {
+            self.schedule_maps(sim);
+            self.maybe_speculate(sim);
+        }
+    }
+
+    // ---------------------------------------- online re-optimization
+
+    /// Evaluate the replan policy at this event boundary; returns true
+    /// when a re-solve was accepted (the caller re-runs the scheduler so
+    /// migrated work can place). `events_applied` is the `on-event`
+    /// trigger; `every:T` ticks trigger on their own clock.
+    fn maybe_replan(&mut self, sim: &FluidSim, events_applied: bool) -> bool {
+        let due = match self.config.replan {
+            ReplanPolicy::Off => false,
+            ReplanPolicy::OnEvent => events_applied,
+            ReplanPolicy::Every(period) => match self.replan.next_at {
+                Some(t) if t <= sim.now() => {
+                    let trace_left = self
+                        .dynamics
+                        .map_or(false, |tr| self.dyn_cursor < tr.events().len());
+                    if sim.active_count() == 0 && !trace_left {
+                        // Idle with nothing left in the trace: either the
+                        // job is complete (the driver is about to break)
+                        // or it is permanently stuck (dead-lettered /
+                        // waiting on a recovery that will never come).
+                        // Stop ticking — a cadence must not keep an idle
+                        // job's clock spinning forever.
+                        self.replan.next_at = None;
+                        false
+                    } else {
+                        let mut next = t;
+                        while next <= sim.now() {
+                            next += period;
+                        }
+                        self.replan.next_at = Some(next);
+                        true
+                    }
+                }
+                _ => false,
+            },
+        };
+        if !due {
+            return false;
+        }
+        self.replan_now(sim)
+    }
+
+    /// Hysteresis check + warm re-solve + migration — shared by the
+    /// event-boundary path and resume-from-snapshot. Returns true only
+    /// when a re-solve was accepted.
+    fn replan_now(&mut self, sim: &FluidSim) -> bool {
+        let eff = self.effective_topology(sim);
+        let fp = replan::fingerprint(&eff);
+        if replan::deviation(&fp, &self.replan.baseline) < self.replan.hysteresis {
+            self.metrics.replans_skipped += 1;
+            return false;
+        }
+        let app = AppModel::new(self.config.replan_alpha);
+        let cur_y = self.replan.cur_y.clone();
+        let new_plan =
+            match self.replan.replanner.replan(&eff, app, self.config.barriers, &cur_y) {
+                Some(p) => p,
+                None => {
+                    // Unsolvable effective LP (degenerate platform): keep
+                    // the incumbent plan — a failed re-solve must never
+                    // tear down a running job.
+                    self.metrics.replans_skipped += 1;
+                    return false;
+                }
+            };
+        self.replan.baseline = fp;
+        self.metrics.replans += 1;
+        self.migrate_to_plan(&eff, &new_plan);
+        self.replan.cur_y = new_plan.y;
+        true
+    }
+
+    /// The platform as it stands *now*: link and compute capacities read
+    /// live from the fluid simulation (bandwidth scalings and slowdowns
+    /// land there), failed nodes discounted to
+    /// [`replan::DOWN_DISCOUNT`]× so the LP sees a valid
+    /// strictly-positive topology but routes nothing through them, and
+    /// refreshed sources re-priced by their cumulative churn (staleness
+    /// pricing: a high-refresh source should push to cheap-to-re-push
+    /// mappers).
+    fn effective_topology(&self, sim: &FluidSim) -> Topology {
+        let (s, m, r) = (self.topo.n_sources(), self.topo.n_mappers(), self.topo.n_reducers());
+        let mut eff = self.topo.clone();
+        for i in 0..s {
+            for j in 0..m {
+                eff.b_sm.set(i, j, sim.capacity(self.sm_link[i][j]));
+            }
+        }
+        for j in 0..m {
+            for k in 0..r {
+                eff.b_mr.set(j, k, sim.capacity(self.mr_link[j][k]));
+            }
+        }
+        for j in 0..m {
+            let c = sim.capacity(self.map_compute[j]);
+            eff.c_map[j] = if self.node_up[j] { c } else { c * replan::DOWN_DISCOUNT };
+        }
+        for k in 0..r {
+            let c = sim.capacity(self.red_compute[k]);
+            eff.c_red[k] = if self.reducer_up[k] { c } else { c * replan::DOWN_DISCOUNT };
+        }
+        for i in 0..s {
+            eff.d[i] = self.topo.d[i] * (1.0 + self.replan.refreshed_frac[i]);
+        }
+        eff
+    }
+
+    /// Move only *unstarted* work to the re-solved plan.
+    ///
+    /// Ranges: only those with an empty shuffle ledger, an unstarted
+    /// reduce and no dead-letter verdict change owner — in-flight and
+    /// delivered transfers keep their exact byte ledgers untouched
+    /// (migration happens strictly before any byte exists for the
+    /// range, so conservation is trivially preserved).
+    ///
+    /// Splits: only tasks still [`TaskState::WaitingForData`] re-home,
+    /// and only when the new plan loads the target markedly more than
+    /// the current home ([`replan::REPLAN_MOVE_FACTOR`]) or the home is
+    /// down. `tasks[t].mapper` — the plan node and push destination —
+    /// never changes: a re-homed split executes via the same
+    /// stolen-fetch machinery as work stealing, which prices the extra
+    /// hop.
+    fn migrate_to_plan(&mut self, eff: &Topology, new_plan: &Plan) {
+        let r = self.topo.n_reducers();
+        let movable: Vec<bool> = (0..r)
+            .map(|k| {
+                self.range_xfers[k].is_empty()
+                    && !self.reduce_started[k]
+                    && !self.range_dead[k]
+            })
+            .collect();
+        let new_owner = replan::assign_ranges(
+            &new_plan.y,
+            &self.plan.y,
+            &self.range_owner,
+            &movable,
+            &self.reducer_up,
+        );
+        for k in 0..r {
+            if movable[k] && new_owner[k] != self.range_owner[k] {
+                self.range_owner[k] = new_owner[k];
+                self.metrics.replan_migrated_ranges += 1;
+            }
+        }
+
+        let scores = replan::mapper_scores(eff, &new_plan.x);
+        for tid in 0..self.tasks.len() {
+            if self.tasks[tid].state != TaskState::WaitingForData {
+                continue;
+            }
+            let home = self.task_home[tid];
+            let mut best: Option<NodeId> = None;
+            for j in 0..self.topo.n_mappers() {
+                if !self.node_up[j] {
+                    continue;
+                }
+                if best.map_or(true, |b| scores[j] > scores[b]) {
+                    best = Some(j);
+                }
+            }
+            let Some(bj) = best else { continue };
+            if bj == home || scores[bj] <= 0.0 {
+                continue;
+            }
+            let move_it = !self.node_up[home]
+                || scores[bj]
+                    > replan::REPLAN_MOVE_FACTOR * scores[home].max(f64::MIN_POSITIVE);
+            if move_it {
+                self.task_home[tid] = bj;
+                self.metrics.replan_migrated_splits += 1;
+            }
+        }
+    }
+
+    /// Re-evaluate the plan right after a resume-from-snapshot: the run
+    /// may be coming back onto a world that changed while it was down.
+    /// On an unchanged world this evaluates exactly the (fingerprint,
+    /// baseline) pair of the last pre-crash boundary — capacities only
+    /// change at trace events, all replayed before the crash — so the
+    /// hysteresis skips and the resumed run stays bit-identical (only
+    /// the sig-excluded `replans_skipped` records the extra evaluation).
+    pub(crate) fn replan_on_resume(&mut self, sim: &mut FluidSim) {
+        if !self.config.replan.enabled() {
+            return;
+        }
+        if self.replan_now(sim) {
             self.schedule_maps(sim);
             self.maybe_speculate(sim);
         }
@@ -1622,6 +1842,9 @@ impl<'a> Executor<'a> {
             return;
         }
         self.metrics.sources_refreshed += 1;
+        // Staleness pricing for the replanner: an effective refresh
+        // inflates the source's effective volume in later re-solves.
+        self.replan.note_refresh(source, fraction);
         for id in dirtied {
             match self.push_xfers[id].state {
                 XferState::InFlight => {
@@ -2075,6 +2298,7 @@ impl<'a> Executor<'a> {
                 Json::Arr(self.outputs.iter().map(|o| recs(o)).collect()),
             ),
             ("metrics".into(), super::snapshot::encode_metrics(&self.metrics)),
+            ("replan".into(), self.replan.encode()),
         ])
     }
 
@@ -2307,6 +2531,7 @@ impl<'a> Executor<'a> {
         }
         self.outputs = outputs.iter().map(&recs).collect::<Result<_, _>>()?;
         self.metrics = super::snapshot::decode_metrics(st.field("metrics")?)?;
+        self.replan.restore(st.field("replan")?)?;
         Ok(())
     }
 

@@ -2,6 +2,7 @@
 //! execution knobs our modified-Hadoop engine exposes (§3.1, §4.6).
 
 use super::dynamics::ScenarioTrace;
+use super::replan::ReplanPolicy;
 use crate::model::barrier::BarrierConfig;
 
 /// A key/value record. Keys and values are strings (like Hadoop `Text`);
@@ -117,6 +118,21 @@ pub struct JobConfig {
     /// engine livelocked under flapping traces). Must be ≥ 1 — an
     /// unbounded budget is deliberately not expressible.
     pub max_attempts: u32,
+    /// Online re-optimization policy ([`super::replan`]): re-solve the
+    /// plan at dynamics-event boundaries (`on-event`) or on a fixed
+    /// virtual-time cadence (`every:T`), migrating only unstarted work
+    /// to the new plan. `Off` (the default) is bit-identical to the
+    /// static path. Enabling it selects the `ReplanScheduler` family;
+    /// it cannot be combined with stealing or speculation (the CLI
+    /// rejects the combination so the experiment comparison stays
+    /// clean).
+    pub replan: ReplanPolicy,
+    /// Model α the replanner prices its re-solves with. The engine-side
+    /// [`MapReduceApp`] deliberately exposes no model-level α (it is a
+    /// property of the *plan model*, not the record-level app), so the
+    /// caller that built the original plan passes it along. Only read
+    /// when `replan` is enabled.
+    pub replan_alpha: f64,
 }
 
 impl Default for JobConfig {
@@ -135,6 +151,8 @@ impl Default for JobConfig {
             dynamics: None,
             threads: 1,
             max_attempts: 4,
+            replan: ReplanPolicy::Off,
+            replan_alpha: 1.0,
         }
     }
 }
@@ -170,6 +188,14 @@ impl JobConfig {
         self.dynamics = Some(trace);
         self
     }
+
+    /// Enable online re-optimization (builder style). `alpha` is the
+    /// plan-model α the original plan was solved with.
+    pub fn with_replan(mut self, policy: ReplanPolicy, alpha: f64) -> JobConfig {
+        self.replan = policy;
+        self.replan_alpha = alpha;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -195,6 +221,9 @@ mod tests {
         // node at most a couple of times, so 4 keeps their behavior
         // identical while bounding flapping traces.
         assert_eq!(c.max_attempts, 4);
+        // Replanning is strictly opt-in: the default engine is static.
+        assert_eq!(c.replan, ReplanPolicy::Off);
+        assert_eq!(c.replan_alpha, 1.0);
     }
 
     #[test]
@@ -208,5 +237,7 @@ mod tests {
         assert!(!d.local_only && d.stealing && d.locality_stealing && d.speculation);
         let with = JobConfig::default().with_dynamics(ScenarioTrace::empty("none"));
         assert!(with.dynamics.is_some());
+        let rp = JobConfig::optimized().with_replan(ReplanPolicy::OnEvent, 4.0);
+        assert!(rp.replan.enabled() && rp.replan_alpha == 4.0);
     }
 }

@@ -86,6 +86,26 @@ pub struct JobMetrics {
     /// field, so this counter is excluded from the `sig()` identity
     /// used by the determinism tests.
     pub coordinator_restarts: usize,
+    /// Accepted mid-run re-solves (online re-optimization,
+    /// `engine::replan`). Part of the `sig()` identity: a resumed
+    /// replanning run must replay exactly the re-solves of the
+    /// uninterrupted run.
+    pub replans: usize,
+    /// Due re-solve evaluations that declined: hysteresis (effective
+    /// platform within threshold of the one the current plan was solved
+    /// against), an unsolvable effective LP, and the resume-time
+    /// evaluation (which re-checks an already-evaluated boundary).
+    /// Provenance like `coordinator_restarts` — a resumed run records
+    /// one extra skip per resume — so this counter is excluded from the
+    /// `sig()` identity used by the determinism tests.
+    pub replans_skipped: usize,
+    /// `WaitingForData` map splits re-homed to a better mapper by an
+    /// accepted re-solve.
+    pub replan_migrated_splits: usize,
+    /// Key ranges moved to a new owning reducer by an accepted re-solve
+    /// (only ranges with an empty shuffle ledger and an unstarted
+    /// reduce ever move).
+    pub replan_migrated_ranges: usize,
     /// Fluid-engine hot-path counters: rate-recompute invocations and the
     /// cumulative number of resources whose component was actually
     /// re-filled (the incremental solver skips clean components, so

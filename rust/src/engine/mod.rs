@@ -8,9 +8,9 @@
 //! * [`fluid`] — max-min-fair fluid simulation of links/NICs/CPUs;
 //! * [`events`] — the virtual-clock event heap ([`EventQueue`]) and the
 //!   phase-transition vocabulary ([`EngineEvent`]);
-//! * [`scheduler`] — the [`Scheduler`] trait with plan-local and
-//!   dynamic (stealing + speculation, §4.6.4) policies, including
-//!   locality-aware stealing;
+//! * [`scheduler`] — the [`Scheduler`] trait with plan-local, dynamic
+//!   (stealing + speculation, §4.6.4, including locality-aware
+//!   stealing) and replan (home-following) policy families;
 //! * [`dynamics`] — seeded scenario traces injecting time-varying
 //!   bandwidth, mapper *and reducer* failures/recoveries, compute
 //!   stragglers and correlated data staleness (see the reducer-failure
@@ -28,6 +28,12 @@
 //!   fair-share, deadline-aware admission) admits jobs, and every
 //!   in-flight job runs over ONE shared fluid network, contending for
 //!   the same links under max-min fairness;
+//! * [`replan`] — online re-optimization: at dynamics-event boundaries
+//!   (or on a fixed virtual-time cadence) the executor re-solves the
+//!   plan against the *current* effective platform — live fluid
+//!   capacities, failed nodes discounted, refreshed sources re-priced —
+//!   warm-starting each LP from the previous basis, and migrates only
+//!   *unstarted* work to the new plan;
 //! * [`snapshot`] — the versioned checkpoint codec and the
 //!   crash-surviving drivers: resume from a checkpoint finishes
 //!   bit-identical to the uninterrupted run, and work that exhausts its
@@ -42,6 +48,7 @@ pub mod fluid;
 pub mod job;
 pub mod metrics;
 pub mod partitioner;
+pub mod replan;
 pub mod scheduler;
 pub mod snapshot;
 pub mod tenancy;
@@ -56,9 +63,10 @@ pub use executor::{run_job, DeadLetterQueue, DlqEntry, DlqKind, JobResult};
 pub use job::{JobConfig, MapReduceApp, Record};
 pub use metrics::JobMetrics;
 pub use partitioner::Partitioner;
+pub use replan::ReplanPolicy;
 pub use scheduler::{
-    stream_policy, DynamicScheduler, PlanLocalScheduler, Scheduler, StreamDecision,
-    StreamPolicy,
+    stream_policy, DynamicScheduler, PlanLocalScheduler, ReplanScheduler, Scheduler,
+    StreamDecision, StreamPolicy,
 };
 pub use snapshot::{run_job_with_recovery, RecoveryOpts};
 pub use tenancy::{

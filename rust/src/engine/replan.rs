@@ -1,0 +1,526 @@
+//! Online re-optimization: the dynamics→planner loop (ROADMAP
+//! direction 4, ISSUE 10).
+//!
+//! Plans used to be computed once and held static while the dynamics
+//! subsystem churned bandwidth, failed nodes and re-dirtied sources.
+//! This module closes the loop: at dynamics-event boundaries (policy
+//! `on-event`), on a fixed virtual-time cadence (`every:T`), and on
+//! resume-from-snapshot, the executor re-solves the end-to-end plan
+//! against the *current effective platform* — capacities read live from
+//! the fluid simulation, failed nodes discounted to near-zero, refreshed
+//! sources re-priced — warm-starting each LP from the previous basis
+//! ([`crate::optimizer::Replanner`]). The accepted plan then migrates
+//! only **unstarted** work: map splits still `WaitingForData` re-home,
+//! and key ranges with an empty shuffle ledger change owner. In-flight
+//! transfers are never touched, so the exact byte-conservation ledgers
+//! carry through replans unchanged.
+//!
+//! ## Invariants (pinned by tests/replan.rs)
+//!
+//! * **Neutrality** — `ReplanPolicy::Off` (the default, and the absent
+//!   CLI flag) is bit-identical to the static path; a zero-event trace
+//!   with replanning *on* never triggers a re-solve.
+//! * **Hysteresis** — a re-solve only fires when the effective platform
+//!   fingerprint deviates from the one the current plan was solved
+//!   against by more than [`DEFAULT_HYSTERESIS`] (relative, per entry),
+//!   so tiny perturbations don't thrash the LP.
+//! * **Migration-only-of-unstarted-work** — a range moves only while
+//!   its shuffle ledger is empty, its reduce unstarted and itself not
+//!   dead-lettered; a split re-homes only while `WaitingForData`.
+//! * **Resume composes** — capacities only change at trace events and
+//!   the baseline fingerprint is not updated on a hysteresis skip, so
+//!   the resume-time evaluation sees exactly the (fingerprint, baseline)
+//!   pair of the last pre-crash evaluation and reaches the same
+//!   decision: resumed runs finish bit-identical (only the sig-excluded
+//!   `replans_skipped` provenance counter can differ).
+
+use crate::model::plan::Plan;
+use crate::optimizer::replanner::Replanner;
+use crate::platform::Topology;
+use crate::util::json::Json;
+use crate::util::mat::Mat;
+
+use super::dynamics::{DynEvent, ScenarioTrace};
+use super::job::JobConfig;
+
+/// Capacity multiplier for failed nodes in the effective platform. The
+/// LP needs strictly positive capacities ([`Topology::validate`]); this
+/// keeps a dead node representable while making it useless to the plan.
+pub const DOWN_DISCOUNT: f64 = 1e-6;
+
+/// Default hysteresis threshold: the maximum relative per-entry
+/// deviation of the effective-platform fingerprint below which a due
+/// re-solve is skipped (counted in `replans_skipped`).
+pub const DEFAULT_HYSTERESIS: f64 = 0.05;
+
+/// A `WaitingForData` split only re-homes when the best live mapper's
+/// planned-load score exceeds this multiple of its current home's score
+/// (or the home is down). The factor prices the extra fetch hop a
+/// migrated split pays over `mr_link` — moving for marginal gains loses.
+pub const REPLAN_MOVE_FACTOR: f64 = 2.0;
+
+/// When to re-solve the plan mid-run. `Off` is bit-identical to the
+/// static path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReplanPolicy {
+    /// Never re-solve (the static engine, unchanged).
+    Off,
+    /// Evaluate a re-solve at every dynamics-event boundary that
+    /// actually applied an event.
+    OnEvent,
+    /// Evaluate a re-solve every `T` virtual seconds (independent of
+    /// the trace; ticks stop once the job is idle with no trace events
+    /// left, so an unfinished job cannot livelock on its own cadence).
+    Every(f64),
+}
+
+impl Default for ReplanPolicy {
+    fn default() -> Self {
+        ReplanPolicy::Off
+    }
+}
+
+impl ReplanPolicy {
+    /// Parse the `--replan {off,on-event,every:T}` CLI spec.
+    pub fn parse(spec: &str) -> Result<ReplanPolicy, String> {
+        match spec {
+            "off" => Ok(ReplanPolicy::Off),
+            "on-event" => Ok(ReplanPolicy::OnEvent),
+            _ => {
+                if let Some(t) = spec.strip_prefix("every:") {
+                    let v: f64 = t.parse().map_err(|_| {
+                        format!(
+                            "invalid value '{spec}' for --replan (every:T needs a \
+                             numeric period T, e.g. every:2.5)"
+                        )
+                    })?;
+                    if !(v.is_finite() && v > 0.0) {
+                        return Err(format!(
+                            "invalid value '{spec}' for --replan (every:T needs a \
+                             finite period T > 0 in virtual seconds)"
+                        ));
+                    }
+                    Ok(ReplanPolicy::Every(v))
+                } else {
+                    Err(format!(
+                        "invalid value '{spec}' for --replan (expected off, on-event, \
+                         or every:T)"
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Canonical label — also the snapshot `compat` entry, so a snapshot
+    /// taken under one policy refuses to resume under another.
+    pub fn label(&self) -> String {
+        match self {
+            ReplanPolicy::Off => "off".into(),
+            ReplanPolicy::OnEvent => "on-event".into(),
+            ReplanPolicy::Every(t) => format!("every:{t}"),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !matches!(self, ReplanPolicy::Off)
+    }
+}
+
+/// The executor's replanning state: the current shuffle split (seed for
+/// the next warm descent), the platform fingerprint the current plan
+/// was solved against, the `every:T` tick, per-source refresh pricing,
+/// and the warm-start bases (inside [`Replanner`]). Serialized into
+/// snapshots by [`ReplanState::encode`] / [`ReplanState::restore`] so
+/// post-resume re-solves warm-start from the same bases and stay
+/// bit-identical to the uninterrupted run.
+#[derive(Debug, Clone)]
+pub struct ReplanState {
+    pub policy: ReplanPolicy,
+    /// Relative fingerprint deviation below which a due re-solve skips.
+    pub hysteresis: f64,
+    /// The shuffle split of the currently executing plan (the original
+    /// plan's `y` until the first accepted re-solve).
+    pub cur_y: Vec<f64>,
+    /// Effective-platform fingerprint the current plan was solved
+    /// against; replaced only on an *accepted* re-solve.
+    pub baseline: Vec<f64>,
+    /// Next `every:T` tick in virtual time (`None` for the other
+    /// policies, or once ticks are exhausted — see `ReplanPolicy`).
+    pub next_at: Option<f64>,
+    /// Cumulative refreshed fraction per source (staleness pricing: a
+    /// high-churn source inflates its effective data volume, steering
+    /// the re-solved push toward cheap-to-re-push mappers).
+    pub refreshed_frac: Vec<f64>,
+    /// Warm-started LP replanner (persistent x/y bases).
+    pub replanner: Replanner,
+}
+
+impl ReplanState {
+    pub fn new(config: &JobConfig, plan: &Plan, topo: &Topology) -> ReplanState {
+        ReplanState {
+            policy: config.replan,
+            hysteresis: DEFAULT_HYSTERESIS,
+            cur_y: plan.y.clone(),
+            baseline: fingerprint(topo),
+            next_at: match config.replan {
+                ReplanPolicy::Every(t) => Some(t),
+                _ => None,
+            },
+            refreshed_frac: vec![0.0; topo.n_sources()],
+            replanner: Replanner::default(),
+        }
+    }
+
+    /// Record a landed source refresh (staleness pricing input).
+    pub fn note_refresh(&mut self, source: usize, fraction: f64) {
+        if source < self.refreshed_frac.len() && fraction.is_finite() && fraction > 0.0 {
+            self.refreshed_frac[source] += fraction;
+        }
+    }
+
+    /// Serialize the dynamic parts (policy and hysteresis are immutable
+    /// run configuration, reconstructed from `JobConfig` on resume).
+    pub fn encode(&self) -> Json {
+        let f64s =
+            |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::f64_bits(x)).collect());
+        let basis = |b: &Option<Vec<usize>>| match b {
+            Some(v) => Json::Arr(v.iter().map(|&x| Json::uint(x)).collect()),
+            None => Json::Bool(false),
+        };
+        Json::Obj(vec![
+            ("cur_y".into(), f64s(&self.cur_y)),
+            ("baseline".into(), f64s(&self.baseline)),
+            ("refreshed_frac".into(), f64s(&self.refreshed_frac)),
+            ("next_at_set".into(), Json::Bool(self.next_at.is_some())),
+            ("next_at".into(), Json::f64_bits(self.next_at.unwrap_or(0.0))),
+            ("x_basis".into(), basis(&self.replanner.x_basis)),
+            ("y_basis".into(), basis(&self.replanner.y_basis)),
+        ])
+    }
+
+    /// Inverse of [`ReplanState::encode`], overlaying a freshly
+    /// constructed state.
+    pub fn restore(&mut self, j: &Json) -> Result<(), String> {
+        let f64s = |j: &Json| -> Result<Vec<f64>, String> {
+            j.as_arr()?.iter().map(|v| v.as_f64_bits()).collect()
+        };
+        let basis = |j: &Json| -> Result<Option<Vec<usize>>, String> {
+            match j {
+                Json::Bool(_) => Ok(None),
+                _ => Ok(Some(
+                    j.as_arr()?.iter().map(|v| v.as_usize()).collect::<Result<_, _>>()?,
+                )),
+            }
+        };
+        self.cur_y = f64s(j.field("cur_y")?)?;
+        self.baseline = f64s(j.field("baseline")?)?;
+        self.refreshed_frac = f64s(j.field("refreshed_frac")?)?;
+        self.next_at = if j.field("next_at_set")?.as_bool()? {
+            Some(j.field("next_at")?.as_f64_bits()?)
+        } else {
+            None
+        };
+        self.replanner.x_basis = basis(j.field("x_basis")?)?;
+        self.replanner.y_basis = basis(j.field("y_basis")?)?;
+        Ok(())
+    }
+}
+
+/// Flatten the platform quantities the plan depends on, in a fixed
+/// order, for hysteresis comparison. Pure function of the (effective)
+/// topology.
+pub fn fingerprint(topo: &Topology) -> Vec<f64> {
+    let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+    let mut fp = Vec::with_capacity(m + r + s + s * m + m * r);
+    fp.extend_from_slice(&topo.c_map);
+    fp.extend_from_slice(&topo.c_red);
+    fp.extend_from_slice(&topo.d);
+    for i in 0..s {
+        for j in 0..m {
+            fp.push(topo.b_sm.get(i, j));
+        }
+    }
+    for j in 0..m {
+        for k in 0..r {
+            fp.push(topo.b_mr.get(j, k));
+        }
+    }
+    fp
+}
+
+/// Maximum relative per-entry deviation between two fingerprints.
+pub fn deviation(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut worst = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (x - y).abs() / y.abs().max(1e-12);
+        if d > worst {
+            worst = d;
+        }
+    }
+    worst
+}
+
+/// Planned inbound data volume per mapper under a push plan `x` — the
+/// split-migration score: the re-solved plan loads the mappers it
+/// considers well-placed on the current platform.
+pub fn mapper_scores(topo: &Topology, x: &Mat) -> Vec<f64> {
+    (0..topo.n_mappers())
+        .map(|j| (0..topo.n_sources()).map(|i| topo.d[i] * x.get(i, j)).sum())
+        .collect()
+}
+
+/// Re-assign the *movable* key ranges to live reducers so owned data
+/// mass tracks the new shuffle split `y_new`. `weights[k]` is range
+/// `k`'s share of the shuffle volume (the original plan's `y` — the
+/// partitioner is never rebuilt, so range mass is fixed at job start);
+/// immovable ranges keep charging their current owner's quota. Greedy:
+/// heaviest movable range first, into the live reducer with the largest
+/// remaining deficit (exact ties prefer the current owner, then the
+/// lowest index — fully deterministic).
+pub fn assign_ranges(
+    y_new: &[f64],
+    weights: &[f64],
+    owner: &[usize],
+    movable: &[bool],
+    up: &[bool],
+) -> Vec<usize> {
+    let r = y_new.len();
+    debug_assert!(weights.len() == r && owner.len() == r && movable.len() == r);
+    let mut deficit: Vec<f64> =
+        (0..r).map(|k| if up[k] { y_new[k].max(0.0) } else { 0.0 }).collect();
+    for k in 0..r {
+        if !movable[k] {
+            deficit[owner[k]] -= weights[k];
+        }
+    }
+    let mut order: Vec<usize> = (0..r).filter(|&k| movable[k]).collect();
+    // total_cmp + index tiebreak: deterministic even if a weight is NaN.
+    order.sort_by(|&a, &b| weights[b].total_cmp(&weights[a]).then(a.cmp(&b)));
+    let mut out = owner.to_vec();
+    for k in order {
+        let mut best: Option<usize> = None;
+        for cand in 0..r {
+            if !up[cand] {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(cur) => {
+                    deficit[cand] > deficit[cur]
+                        || (deficit[cand] == deficit[cur]
+                            && cand == owner[k]
+                            && cur != owner[k])
+                }
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        // No live reducer at all: leave the range where it is (the
+        // executor holds it for recovery, exactly like the static path).
+        let Some(o) = best else { continue };
+        out[k] = o;
+        deficit[o] -= weights[k];
+    }
+    out
+}
+
+/// Derive a hedge rate from a set of (typically adversary-found)
+/// traces: the mean per-reducer downtime fraction over the horizon,
+/// clamped to `[0, 0.9]` (the [`crate::optimizer::FailureAwareOptimizer`]
+/// domain is `[0, 1)`). An outage with no recovery extends to the
+/// horizon. This is the "adversarial training" feed: search for the
+/// worst trace against the static plan, then hedge the plan against
+/// exactly the unavailability that trace implies.
+pub fn hedge_rate_from_traces(
+    traces: &[ScenarioTrace],
+    horizon: f64,
+    n_reducers: usize,
+) -> f64 {
+    if traces.is_empty() || n_reducers == 0 || !(horizon.is_finite() && horizon > 0.0) {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    for tr in traces {
+        let mut down_since: Vec<Option<f64>> = vec![None; n_reducers];
+        let mut downtime = vec![0.0f64; n_reducers];
+        for te in tr.events() {
+            match te.event {
+                DynEvent::ReducerFail { node } if node < n_reducers => {
+                    if down_since[node].is_none() {
+                        down_since[node] = Some(te.time);
+                    }
+                }
+                DynEvent::ReducerRecover { node } if node < n_reducers => {
+                    if let Some(t0) = down_since[node].take() {
+                        downtime[node] += (te.time.min(horizon) - t0.min(horizon)).max(0.0);
+                    }
+                }
+                _ => {}
+            }
+        }
+        for k in 0..n_reducers {
+            if let Some(t0) = down_since[k] {
+                downtime[k] += (horizon - t0.min(horizon)).max(0.0);
+            }
+            total += (downtime[k] / horizon).min(1.0);
+        }
+    }
+    (total / (traces.len() * n_reducers) as f64).clamp(0.0, 0.9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dynamics::TimedEvent;
+    use crate::platform::scale::{generate_kind, ScaleKind};
+
+    #[test]
+    fn policy_parse_accepts_the_three_forms() {
+        assert_eq!(ReplanPolicy::parse("off").unwrap(), ReplanPolicy::Off);
+        assert_eq!(ReplanPolicy::parse("on-event").unwrap(), ReplanPolicy::OnEvent);
+        assert_eq!(
+            ReplanPolicy::parse("every:2.5").unwrap(),
+            ReplanPolicy::Every(2.5)
+        );
+        assert!(!ReplanPolicy::Off.enabled());
+        assert!(ReplanPolicy::OnEvent.enabled());
+        assert!(ReplanPolicy::Every(1.0).enabled());
+        assert_eq!(ReplanPolicy::default(), ReplanPolicy::Off);
+    }
+
+    #[test]
+    fn policy_parse_rejects_garbage() {
+        for bad in ["bogus", "every:0", "every:-1", "every:nan", "every:x", "every:", "on"] {
+            let e = ReplanPolicy::parse(bad).unwrap_err();
+            assert!(e.contains("--replan"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn policy_label_round_trips() {
+        for p in [ReplanPolicy::Off, ReplanPolicy::OnEvent, ReplanPolicy::Every(2.5)] {
+            assert_eq!(ReplanPolicy::parse(&p.label()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn deviation_is_max_relative_entry_delta() {
+        let base = vec![10.0, 20.0, 30.0];
+        assert_eq!(deviation(&base, &base), 0.0);
+        let moved = vec![10.0, 18.0, 30.0]; // 10% off on entry 1
+        assert!((deviation(&moved, &base) - 0.1).abs() < 1e-12);
+        // A discounted-then-recovered entry dominates.
+        let huge = vec![10.0, 20.0, 30.0 / DOWN_DISCOUNT];
+        assert!(deviation(&huge, &base) > 1e3);
+    }
+
+    #[test]
+    fn fingerprint_covers_every_planned_quantity() {
+        let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+        let (s, m, r) = (topo.n_sources(), topo.n_mappers(), topo.n_reducers());
+        let fp = fingerprint(&topo);
+        assert_eq!(fp.len(), m + r + s + s * m + m * r);
+        // Scaling one WAN entry moves exactly that fingerprint slot.
+        let mut t2 = topo.clone();
+        t2.b_mr.set(0, r - 1, topo.b_mr.get(0, r - 1) * 0.5);
+        let fp2 = fingerprint(&t2);
+        assert_eq!(fp.iter().zip(&fp2).filter(|(a, b)| a != b).count(), 1);
+        assert!((deviation(&fp2, &fp) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assign_ranges_tracks_the_new_split() {
+        // 4 ranges of equal weight, all movable, all reducers live; the
+        // new split wants everything on reducers 2 and 3.
+        let y_new = vec![0.0, 0.0, 0.5, 0.5];
+        let w = vec![0.25; 4];
+        let owner = vec![0, 1, 2, 3];
+        let got = assign_ranges(&y_new, &w, &owner, &[true; 4], &[true; 4]);
+        assert!(got.iter().all(|&o| o == 2 || o == 3), "{got:?}");
+        // Deficit-greedy balances: two ranges each.
+        assert_eq!(got.iter().filter(|&&o| o == 2).count(), 2);
+    }
+
+    #[test]
+    fn assign_ranges_respects_pins_and_dead_reducers() {
+        let y_new = vec![1.0, 0.0, 0.0, 0.0];
+        let w = vec![0.25; 4];
+        let owner = vec![0, 1, 2, 3];
+        // Range 1 immovable; reducer 0 (the split's favorite) is dead.
+        let movable = [true, false, true, true];
+        let up = [false, true, true, true];
+        let got = assign_ranges(&y_new, &w, &owner, &movable, &up);
+        assert_eq!(got[1], 1, "immovable range must keep its owner");
+        assert!(got.iter().enumerate().all(|(k, &o)| !movable[k] || o != 0));
+        // Exact tie on zero deficit: the current owner is preferred.
+        let stay = assign_ranges(&[0.25; 4], &[0.25; 4], &owner, &[true; 4], &[true; 4]);
+        assert_eq!(stay, owner, "a no-op split must not shuffle owners");
+    }
+
+    #[test]
+    fn hedge_rate_measures_downtime_fraction() {
+        let horizon = 100.0;
+        let tr = ScenarioTrace::from_events(
+            "one-down",
+            vec![
+                TimedEvent { time: 0.0, event: DynEvent::ReducerFail { node: 0 } },
+                TimedEvent { time: 50.0, event: DynEvent::ReducerRecover { node: 0 } },
+            ],
+        );
+        // One of four reducers down half the horizon: 0.5 / 4 = 0.125.
+        let rate = hedge_rate_from_traces(std::slice::from_ref(&tr), horizon, 4);
+        assert!((rate - 0.125).abs() < 1e-12, "{rate}");
+        // No recovery: the outage extends to the horizon.
+        let tr2 = ScenarioTrace::from_events(
+            "forever",
+            vec![TimedEvent { time: 25.0, event: DynEvent::ReducerFail { node: 0 } }],
+        );
+        let rate2 = hedge_rate_from_traces(std::slice::from_ref(&tr2), horizon, 1);
+        assert!((rate2 - 0.75).abs() < 1e-12, "{rate2}");
+        // Clamped into the FailureAwareOptimizer domain.
+        let tr3 = ScenarioTrace::from_events(
+            "dead-from-start",
+            vec![TimedEvent { time: 0.0, event: DynEvent::ReducerFail { node: 0 } }],
+        );
+        assert_eq!(hedge_rate_from_traces(std::slice::from_ref(&tr3), horizon, 1), 0.9);
+        assert_eq!(hedge_rate_from_traces(&[], horizon, 4), 0.0);
+        assert_eq!(hedge_rate_from_traces(std::slice::from_ref(&tr), 0.0, 4), 0.0);
+    }
+
+    #[test]
+    fn mapper_scores_weight_volume_by_plan() {
+        let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+        let plan = Plan::local_push(&topo);
+        let scores = mapper_scores(&topo, &plan.x);
+        assert_eq!(scores.len(), topo.n_mappers());
+        let total: f64 = scores.iter().sum();
+        let volume: f64 = topo.d.iter().sum();
+        assert!((total - volume).abs() <= 1e-9 * volume, "{total} vs {volume}");
+    }
+
+    #[test]
+    fn state_encode_restore_round_trips() {
+        let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+        let plan = Plan::local_push(&topo);
+        let cfg = JobConfig { replan: ReplanPolicy::Every(3.5), ..JobConfig::default() };
+        let mut st = ReplanState::new(&cfg, &plan, &topo);
+        st.note_refresh(2, 0.4);
+        st.note_refresh(2, 0.4);
+        st.note_refresh(usize::MAX, 0.4); // out of range: ignored
+        st.cur_y[0] += 0.125;
+        st.next_at = Some(7.0);
+        st.replanner.x_basis = Some(vec![3, 1, 4, 1, 5]);
+        let j = st.encode();
+        let mut back = ReplanState::new(&cfg, &plan, &topo);
+        back.restore(&j).unwrap();
+        assert_eq!(back.cur_y, st.cur_y);
+        assert_eq!(back.baseline, st.baseline);
+        assert_eq!(back.refreshed_frac, st.refreshed_frac);
+        assert!((back.refreshed_frac[2] - 0.8).abs() < 1e-12);
+        assert_eq!(back.next_at, Some(7.0));
+        assert_eq!(back.replanner.x_basis, Some(vec![3, 1, 4, 1, 5]));
+        assert_eq!(back.replanner.y_basis, None);
+    }
+}

@@ -3,8 +3,8 @@
 //! The executor delegates every placement decision to a [`Scheduler`]:
 //! given a read-only [`SchedView`] of the cluster (ready tasks, free
 //! slots, queue depths, straggler timings), a policy returns
-//! [`Assignment`]s. Two policies cover the paper's execution modes
-//! (§4.6.1, §4.6.4):
+//! [`Assignment`]s. Three policy families cover the execution modes
+//! (§4.6.1, §4.6.4, and online re-optimization):
 //!
 //! * [`PlanLocalScheduler`] — the statically enforced plan: each map task
 //!   runs on the node its split was pushed to ("our optimization" rows of
@@ -14,6 +14,12 @@
 //!   wide-area fetch) and speculative execution (a running task slower
 //!   than `straggler_factor ×` the median completed duration gets a
 //!   backup copy on the fastest free node).
+//! * [`ReplanScheduler`] — plan enforcement against a *moving* plan
+//!   (`--replan`, [`super::replan`]): follows each task's current home,
+//!   which an accepted mid-run re-solve may have migrated. No stealing,
+//!   no speculation — placement changes only when the re-solved plan
+//!   says so, which is what makes the replan experiment's comparison
+//!   against the dynamic family meaningful.
 //!
 //! Contract: a scheduler must never assign more tasks to a node than it
 //! has free slots. The executor additionally enforces this, and
@@ -171,6 +177,37 @@ pub struct PlanLocalScheduler;
 impl Scheduler for PlanLocalScheduler {
     fn name(&self) -> &'static str {
         "plan-local"
+    }
+
+    fn assign(&mut self, view: &SchedView) -> Vec<Assignment> {
+        let mut free = view.free_slots.to_vec();
+        let mut out = Vec::new();
+        for &task in view.ready {
+            let node = view.home[task];
+            if free[node] > 0 {
+                free[node] -= 1;
+                out.push(Assignment { task, node, speculative: false });
+            }
+        }
+        out
+    }
+}
+
+/// Plan enforcement against a *moving* plan (online re-optimization,
+/// [`super::replan`]): place every ready task on its **current** home —
+/// the plan node from the original solve, or wherever the latest
+/// accepted re-solve migrated it while the task was still waiting for
+/// data. Like [`PlanLocalScheduler`] it never steals, never speculates,
+/// and declines reduce adoptions (an orphaned range waits for recovery
+/// unless a re-solve migrates it before any of its bytes exist); unlike
+/// it, the home it follows is not a constant. With `--replan off` the
+/// executor never constructs this policy, so the static path is
+/// untouched.
+pub struct ReplanScheduler;
+
+impl Scheduler for ReplanScheduler {
+    fn name(&self) -> &'static str {
+        "replan"
     }
 
     fn assign(&mut self, view: &SchedView) -> Vec<Assignment> {
@@ -423,8 +460,13 @@ impl Scheduler for DynamicScheduler {
 
 /// The scheduler implied by a [`JobConfig`] (§4.6.1 presets): strict plan
 /// enforcement unless dynamic mechanisms are enabled; locality-aware
-/// stealing when the config asks for it.
+/// stealing when the config asks for it; the replan family whenever
+/// online re-optimization is on (the CLI rejects combining `--replan`
+/// with stealing/speculation, so the branches are disjoint there).
 pub fn for_config(config: &JobConfig) -> Box<dyn Scheduler> {
+    if config.replan.enabled() {
+        return Box::new(ReplanScheduler);
+    }
     let stealing = (config.stealing || config.locality_stealing) && !config.local_only;
     if stealing || config.speculation {
         let mut s = DynamicScheduler::new(stealing, config.speculation);
@@ -697,6 +739,42 @@ mod tests {
             ..JobConfig::default()
         };
         assert_eq!(for_config(&cfg).name(), "dynamic-locality");
+        // Online re-optimization selects the third family.
+        use crate::engine::replan::ReplanPolicy;
+        let cfg = JobConfig { replan: ReplanPolicy::OnEvent, ..JobConfig::optimized() };
+        assert_eq!(for_config(&cfg).name(), "replan");
+        let cfg = JobConfig { replan: ReplanPolicy::Every(2.0), ..JobConfig::optimized() };
+        assert_eq!(for_config(&cfg).name(), "replan");
+    }
+
+    #[test]
+    fn replan_scheduler_follows_the_current_home() {
+        // Task 1's home was migrated to node 1 by a re-solve; the policy
+        // follows the view's home slice, wherever it points today.
+        let home = [0, 1];
+        let ready = [0, 1];
+        let free = [1, 1];
+        let queued = [1, 1];
+        let cap = [1.0, 1.0];
+        let v = view(&home, &ready, &[], &free, &queued, &cap, &[], 0.0);
+        let a = ReplanScheduler.assign(&v);
+        assert_eq!(
+            a,
+            vec![
+                Assignment { task: 0, node: 0, speculative: false },
+                Assignment { task: 1, node: 1, speculative: false },
+            ]
+        );
+        // No speculation, no reduce adoption — plan enforcement.
+        assert!(ReplanScheduler.speculate(&v).is_empty());
+        let rv = ReduceView {
+            dead: 0,
+            up: &[false, true],
+            cluster: &[0, 0],
+            capacity: &[1.0, 1.0],
+            assigned_bytes: &[0.0, 0.0],
+        };
+        assert_eq!(ReplanScheduler.reassign_reduce(&rv), None);
     }
 
     #[test]

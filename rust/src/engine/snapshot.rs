@@ -160,6 +160,7 @@ fn job_compat(
         ("max_attempts".into(), Json::uint(config.max_attempts as usize)),
         ("barriers".into(), Json::Str(config.barriers.label())),
         ("app".into(), Json::Str(app.name().into())),
+        ("replan".into(), Json::Str(config.replan.label())),
     ]
 }
 
@@ -197,6 +198,10 @@ pub(crate) fn encode_metrics(m: &JobMetrics) -> Json {
         ("splits_dead_lettered".into(), Json::uint(m.splits_dead_lettered)),
         ("dlq_bytes".into(), Json::f64_bits(m.dlq_bytes)),
         ("coordinator_restarts".into(), Json::uint(m.coordinator_restarts)),
+        ("replans".into(), Json::uint(m.replans)),
+        ("replans_skipped".into(), Json::uint(m.replans_skipped)),
+        ("replan_migrated_splits".into(), Json::uint(m.replan_migrated_splits)),
+        ("replan_migrated_ranges".into(), Json::uint(m.replan_migrated_ranges)),
         ("fluid_resolves".into(), Json::u64(m.fluid_resolves)),
         ("fluid_resources_touched".into(), Json::u64(m.fluid_resources_touched)),
     ])
@@ -234,6 +239,10 @@ pub(crate) fn decode_metrics(j: &Json) -> Result<JobMetrics, String> {
         splits_dead_lettered: j.field("splits_dead_lettered")?.as_usize()?,
         dlq_bytes: j.field("dlq_bytes")?.as_f64_bits()?,
         coordinator_restarts: j.field("coordinator_restarts")?.as_usize()?,
+        replans: j.field("replans")?.as_usize()?,
+        replans_skipped: j.field("replans_skipped")?.as_usize()?,
+        replan_migrated_splits: j.field("replan_migrated_splits")?.as_usize()?,
+        replan_migrated_ranges: j.field("replan_migrated_ranges")?.as_usize()?,
         fluid_resolves: j.field("fluid_resolves")?.as_u64()?,
         fluid_resources_touched: j.field("fluid_resources_touched")?.as_u64()?,
     })
@@ -384,6 +393,14 @@ pub fn run_job_with_recovery(
                     doc.field("compat")?,
                 )?;
                 exec.restore_state(doc.field("exec")?, fluid.activities.len())?;
+                // Re-evaluate the replan policy against the restored
+                // effective platform. The restored baseline matches it
+                // (accepting a replan updates the baseline before the
+                // next checkpoint), so hysteresis declines and the
+                // evaluation lands in `replans_skipped` — provenance,
+                // like `coordinator_restarts` — keeping resumed runs
+                // bit-identical in every sig() field.
+                exec.replan_on_resume(&mut sim);
             }
             None => {
                 sim = FluidSim::new();

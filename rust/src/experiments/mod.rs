@@ -17,6 +17,7 @@
 //! | adversary | worst-case trace search, per-scheduler robustness | [`adversary`] |
 //! | tenancy | multi-tenant job streams: load × cross-job policy | [`tenancy`] |
 //! | resilience | crash/resume bit-identity, dead-letter accounting | [`resilience`] |
+//! | replan | static vs adversary-hedged vs online re-planning vs dynamic | [`replan`] |
 //!
 //! See `rust/src/experiments/README.md` for the paper-figure ↔
 //! experiment mapping and docs/CLI.md for the full flag reference.
@@ -27,6 +28,7 @@ pub mod common;
 pub mod fig4;
 pub mod fig5678;
 pub mod fig9to12;
+pub mod replan;
 pub mod resilience;
 pub mod scale;
 pub mod table1;
@@ -36,10 +38,10 @@ use crate::util::table::Table;
 use std::path::Path;
 
 /// All experiment ids, in paper order (plus the post-paper scale,
-/// churn, adversary, tenancy and resilience sweeps).
-pub const ALL: [&str; 15] = [
+/// churn, adversary, tenancy, resilience and replan sweeps).
+pub const ALL: [&str; 16] = [
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "scale", "churn", "adversary", "tenancy", "resilience",
+    "scale", "churn", "adversary", "tenancy", "resilience", "replan",
 ];
 
 /// Run one experiment by id (`churn`, `adversary` and `tenancy` with
@@ -63,6 +65,7 @@ pub fn run(id: &str) -> Option<Vec<Table>> {
         "adversary" => adversary::run(),
         "tenancy" => tenancy::run(),
         "resilience" => resilience::run(),
+        "replan" => replan::run(),
         _ => return None,
     })
 }

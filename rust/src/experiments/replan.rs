@@ -1,0 +1,282 @@
+//! Replan experiment: does closing the dynamics→planner loop beat both
+//! static planning and runtime adaptivity?
+//!
+//! Four execution modes run the churn workload under every dynamics
+//! profile, all over the *same* seeded trace per profile (horizon
+//! anchored on the static plan-local makespan, the churn-matrix idiom):
+//!
+//! * `static` — the unhedged e2e plan under strict plan-local
+//!   enforcement (the paper's "our optimization" mode);
+//! * `hedged-adv` — a [`FailureAwareOptimizer`] plan whose hedge rate is
+//!   *derived from adversary-found traces*: the budgeted worst-case
+//!   search ([`adversary::search`]) attacks the static plan, and the
+//!   resulting trace's per-reducer downtime fraction
+//!   ([`replan::hedge_rate_from_traces`]) becomes the robust scenario
+//!   set the hedged optimizer plans against — still zero runtime
+//!   adaptivity;
+//! * `replan` — the same unhedged plan, re-solved online at every
+//!   dynamics-event boundary ([`crate::engine::replan`],
+//!   `--replan on-event`): warm-started LPs against the live effective
+//!   platform, migration of unstarted work only;
+//! * `dynamic` — locality-aware stealing + speculation (runtime
+//!   adaptivity with no re-planning).
+//!
+//! The table reports per-cell makespan degradation plus the replan
+//! counters (re-solves accepted/declined, splits/ranges migrated), and
+//! every cell asserts the exact conservation identities
+//! (`output == input` records, `push delivered == pushed`,
+//! `shuffle delivered + DLQ == shuffled`).
+
+use crate::engine::adversary::{self, PerturbBudget, SearchConfig};
+use crate::engine::dynamics::{self, DynProfile, ScenarioTrace, TraceShape};
+use crate::engine::job::JobConfig;
+use crate::engine::replan::{self, ReplanPolicy};
+use crate::engine::run_job;
+use crate::experiments::churn::{cell_setup, CellSetup};
+use crate::optimizer::{FailureAwareOptimizer, PlanOptimizer};
+use crate::platform::scale::{parse_spec_config, ScaleConfig};
+use crate::util::table::Table;
+
+/// Defaults for `mrperf experiment replan` (and `experiment all`).
+/// 32 nodes keeps the x-LPs on the dense solver path while still giving
+/// the replanner enough topology to re-route around.
+pub const DEFAULT_GEN: &str = "hier-wan:32";
+/// Profile part is ignored (all profiles run); the seed is honored.
+pub const DEFAULT_DYNAMICS: &str = "failures:7";
+
+/// Adversary budget feeding the `hedged-adv` row: a couple of node
+/// outages, a couple of restarts — enough to find a damaging trace,
+/// cheap enough for `experiment all`.
+pub const ADVERSARY_OUTAGES: usize = 2;
+pub const ADVERSARY_RESTARTS: usize = 2;
+
+/// One profile × mode cell.
+#[derive(Debug, Clone)]
+pub struct ReplanCell {
+    pub profile: DynProfile,
+    /// `static` | `hedged-adv` | `replan` | `dynamic`.
+    pub mode: &'static str,
+    pub static_makespan: f64,
+    pub dyn_makespan: f64,
+    pub dyn_events: usize,
+    pub replans: usize,
+    pub replans_skipped: usize,
+    pub migrated_splits: usize,
+    pub migrated_ranges: usize,
+    pub stolen: usize,
+    pub requeued: usize,
+    pub replay_bytes: f64,
+}
+
+impl ReplanCell {
+    pub fn degradation(&self) -> f64 {
+        self.dyn_makespan / self.static_makespan - 1.0
+    }
+}
+
+/// The four execution modes. The bool selects the hedged plan; every
+/// other mode runs the unhedged e2e plan. `replan_alpha` is 1.0 — the
+/// α the churn workload's plan was solved with (`cell_setup`).
+fn modes() -> [(&'static str, bool, JobConfig); 4] {
+    [
+        ("static", false, JobConfig::optimized()),
+        ("hedged-adv", true, JobConfig::optimized()),
+        ("replan", false, JobConfig::optimized().with_replan(ReplanPolicy::OnEvent, 1.0)),
+        ("dynamic", false, JobConfig::dynamic_locality()),
+    ]
+}
+
+/// Run the full profile × mode matrix at the spec's topology size.
+/// Deterministic given `(generator seed, trace seed)` — the adversary
+/// search seeds from the trace seed too.
+pub fn run_matrix_at(base: &ScaleConfig, trace_seed: u64) -> Result<Vec<ReplanCell>, String> {
+    let CellSetup { topo, inputs, plan, sapp, app, bc } = cell_setup(base, base.nodes);
+
+    // Static plan-local run anchors the trace horizon for every row.
+    let static_cfg = JobConfig::optimized();
+    let static_pl = run_job(&topo, &plan, &sapp, &static_cfg, &inputs).metrics;
+    let horizon = static_pl.makespan.max(1e-9);
+
+    // Adversary-found robust scenario set → hedge rate → hedged plan.
+    // Seeded with the failures profile so the search starts from a
+    // trace that already hurts; the search itself is deterministic.
+    let seed_trace = ScenarioTrace::generate(
+        DynProfile::Failures,
+        trace_seed,
+        &TraceShape::of(&topo, horizon),
+    );
+    let found = adversary::search(
+        &topo,
+        &plan,
+        &sapp,
+        &static_cfg,
+        &inputs,
+        std::slice::from_ref(&seed_trace),
+        &SearchConfig {
+            restarts: ADVERSARY_RESTARTS,
+            known_static_makespan: Some(static_pl.makespan),
+            ..SearchConfig::new(PerturbBudget::outages(ADVERSARY_OUTAGES), trace_seed)
+        },
+    )?;
+    let hedge_rate = replan::hedge_rate_from_traces(
+        std::slice::from_ref(&found.trace),
+        horizon,
+        topo.n_reducers(),
+    );
+    let hedged_plan = if hedge_rate > 0.0 {
+        FailureAwareOptimizer::new(hedge_rate).optimize(&topo, app, bc)
+    } else {
+        plan.clone()
+    };
+
+    // Static baselines per mode (replan without dynamics is plan-local
+    // by the neutrality invariant, but measure it — degradation should
+    // be relative to what the mode itself does on the quiet platform).
+    let statics: Vec<f64> = modes()
+        .iter()
+        .map(|(_, hedged, cfg)| {
+            let p = if *hedged { &hedged_plan } else { &plan };
+            run_job(&topo, p, &sapp, cfg, &inputs).metrics.makespan
+        })
+        .collect();
+
+    let mut cells = Vec::new();
+    for profile in DynProfile::all() {
+        let trace =
+            ScenarioTrace::generate(profile, trace_seed, &TraceShape::of(&topo, horizon));
+        for (idx, (mode, hedged, cfg)) in modes().into_iter().enumerate() {
+            let p = if hedged { &hedged_plan } else { &plan };
+            let m = run_job(&topo, p, &sapp, &cfg.with_dynamics(trace.clone()), &inputs)
+                .metrics;
+            assert_eq!(
+                m.output_records, m.input_records,
+                "{mode} lost records under {profile:?}"
+            );
+            assert_eq!(
+                m.push_bytes_delivered.to_bits(),
+                m.push_bytes.to_bits(),
+                "{mode} lost push bytes under {profile:?}"
+            );
+            assert_eq!(
+                (m.shuffle_bytes_delivered + m.dlq_bytes).to_bits(),
+                m.shuffle_bytes.to_bits(),
+                "{mode} lost shuffle bytes under {profile:?}"
+            );
+            cells.push(ReplanCell {
+                profile,
+                mode,
+                static_makespan: statics[idx],
+                dyn_makespan: m.makespan,
+                dyn_events: m.dyn_events,
+                replans: m.replans,
+                replans_skipped: m.replans_skipped,
+                migrated_splits: m.replan_migrated_splits,
+                migrated_ranges: m.replan_migrated_ranges,
+                stolen: m.stolen,
+                requeued: m.tasks_requeued,
+                replay_bytes: m.reduce_bytes_replayed,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the matrix for explicit specs.
+pub fn run_with(gen_spec: &str, dyn_spec: &str) -> Result<Vec<Table>, String> {
+    let base = parse_spec_config(gen_spec)?;
+    let (_, trace_seed) = dynamics::parse_spec(dyn_spec)?;
+    let cells = run_matrix_at(&base, trace_seed)?;
+    let mut t = Table::new(
+        format!(
+            "replan: static vs adversary-hedged vs online re-planning vs dynamic stealing \
+             (--gen {gen_spec} --dynamics seed {trace_seed}) — every profile row shares \
+             one seeded trace"
+        ),
+        &[
+            "profile",
+            "mode",
+            "static (s)",
+            "dyn (s)",
+            "degradation",
+            "events",
+            "replans",
+            "skipped",
+            "mig-splits",
+            "mig-ranges",
+            "stolen",
+            "requeued",
+            "replay (KB)",
+        ],
+    );
+    for c in &cells {
+        t.add_row(vec![
+            c.profile.label().to_string(),
+            c.mode.to_string(),
+            format!("{:.4}", c.static_makespan),
+            format!("{:.4}", c.dyn_makespan),
+            format!("{:+.1}%", c.degradation() * 100.0),
+            c.dyn_events.to_string(),
+            c.replans.to_string(),
+            c.replans_skipped.to_string(),
+            c.migrated_splits.to_string(),
+            c.migrated_ranges.to_string(),
+            c.stolen.to_string(),
+            c.requeued.to_string(),
+            format!("{:.1}", c.replay_bytes / 1e3),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// The `replan` experiment with its default specs (used by
+/// `mrperf experiment all`).
+pub fn run() -> Vec<Table> {
+    run_with(DEFAULT_GEN, DEFAULT_DYNAMICS).expect("default replan specs are valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same specs → bit-identical cells, full profile × mode coverage,
+    /// and the replan mode must actually re-solve somewhere (sized down
+    /// so the debug-build test stays quick).
+    #[test]
+    fn matrix_is_deterministic_and_replans_fire() {
+        let base = parse_spec_config("hier-wan:16").unwrap();
+        let a = run_matrix_at(&base, 7).unwrap();
+        let b = run_matrix_at(&base, 7).unwrap();
+        assert_eq!(a.len(), DynProfile::all().len() * 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.profile, x.mode), (y.profile, y.mode));
+            assert_eq!(x.static_makespan.to_bits(), y.static_makespan.to_bits());
+            assert_eq!(x.dyn_makespan.to_bits(), y.dyn_makespan.to_bits());
+            assert_eq!(
+                (x.replans, x.replans_skipped, x.migrated_splits, x.migrated_ranges),
+                (y.replans, y.replans_skipped, y.migrated_splits, y.migrated_ranges)
+            );
+            assert_eq!(x.replay_bytes.to_bits(), y.replay_bytes.to_bits());
+        }
+        // Only the replan mode ever re-solves …
+        assert!(
+            a.iter().filter(|c| c.mode != "replan").all(|c| c.replans == 0
+                && c.replans_skipped == 0
+                && c.migrated_splits == 0
+                && c.migrated_ranges == 0),
+            "{a:?}"
+        );
+        // … and under at least one profile it actually does (the
+        // failure profiles swing the effective platform far past the
+        // hysteresis threshold).
+        assert!(
+            a.iter().any(|c| c.mode == "replan" && c.replans > 0),
+            "no profile triggered a replan: {a:?}"
+        );
+    }
+
+    #[test]
+    fn bad_specs_error_cleanly() {
+        assert!(run_with("nope:16", "failures:7").is_err());
+        assert!(run_with("hier-wan:16", "nope:7").is_err());
+    }
+}

@@ -30,7 +30,7 @@ const USAGE: &str = "\
 mrperf — geo-distributed MapReduce modeling, optimization & execution
 
 USAGE:
-  mrperf experiment <table1|fig4..fig12|scale|churn|adversary|tenancy|resilience|all>
+  mrperf experiment <table1|fig4..fig12|scale|churn|adversary|tenancy|resilience|replan|all>
                [--results DIR]
                [--gen KIND:NODES[:SEED]] [--dynamics PROFILE[:SEED]]
                [--profiles all] [--hedge RATE]                        (churn only)
@@ -44,6 +44,7 @@ USAGE:
                [--app APP] [--alpha A] [--optimizer NAME] [--skew S]
                [--bytes-per-source N] [--speculation] [--stealing] [--locality]
                [--replication R] [--dynamics PROFILE[:SEED]] [--hedge RATE]
+               [--replan off|on-event|every:T]
                [--threads N] [--max-attempts N]
                [--checkpoint-every T] [--crash-at T2] [--checkpoint-path FILE]
                [--resume-from FILE]
@@ -101,6 +102,15 @@ RESILIENCE: `mrperf experiment resilience` sweeps dynamics profile × retry
             budget × coordinator-crash time on the churn workload and checks
             crash/resume bit-identity plus dead-letter byte conservation
             ([--gen KIND:NODES[:SEED]] picks the platform)
+REPLAN:     --replan on-event re-solves the plan at every dynamics-event
+            boundary against the live effective platform (warm-started LPs,
+            failed nodes discounted, refreshed sources re-priced) and migrates
+            only unstarted work; --replan every:T re-solves on a fixed
+            virtual-time cadence instead. off (default) is bit-identical to
+            the static engine. Selects the replan scheduler family — cannot
+            be combined with --speculation/--stealing/--locality.
+            `mrperf experiment replan` compares static | adversary-hedged |
+            replan | dynamic across every dynamics profile
 ADVERSARY:  `mrperf experiment adversary` searches (seeded restarts + greedy
             refinement, deterministic given --seed) for the worst-case trace
             within a perturbation budget: --budget K bounds the node outages
@@ -214,8 +224,8 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
     };
     for id in ids {
         println!("\n### experiment {id}\n");
-        // `churn`, `adversary` and `tenancy` take CLI-configurable
-        // knobs; everything else is fixed.
+        // `churn`, `adversary`, `tenancy`, `resilience` and `replan`
+        // take CLI-configurable knobs; everything else is fixed.
         let ok = if id == "adversary" {
             let gen_spec = args.get_or("gen", experiments::adversary::DEFAULT_GEN);
             let knobs = (|| -> Result<(u64, Option<usize>, usize, f64), String> {
@@ -311,6 +321,19 @@ fn cmd_experiment(args: &cli::Args) -> ExitCode {
                 }
                 Err(e) => {
                     eprintln!("tenancy: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else if id == "replan" {
+            let gen_spec = args.get_or("gen", experiments::replan::DEFAULT_GEN);
+            let dyn_spec = args.get_or("dynamics", experiments::replan::DEFAULT_DYNAMICS);
+            match experiments::replan::run_with(gen_spec, dyn_spec) {
+                Ok(tables) => {
+                    experiments::report_tables(id, &tables, &results_dir);
+                    true
+                }
+                Err(e) => {
+                    eprintln!("replan: {e}");
                     return ExitCode::FAILURE;
                 }
             }
@@ -501,6 +524,25 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
         }
     };
     let stealing = args.flag("stealing") || args.flag("locality");
+    let replan = match args.get("replan") {
+        None => mrperf::engine::ReplanPolicy::Off,
+        Some(spec) => match mrperf::engine::ReplanPolicy::parse(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{e}");
+                return ExitCode::FAILURE;
+            }
+        },
+    };
+    if replan.enabled() && (args.flag("speculation") || stealing) {
+        eprintln!(
+            "--replan cannot be combined with --speculation/--stealing/--locality: \
+             the replan family re-homes work by re-solving the plan, and mixing it \
+             with runtime adaptivity would blur what each mechanism contributes \
+             (run `mrperf experiment replan` to compare them side by side)"
+        );
+        return ExitCode::FAILURE;
+    }
     let mut jc = JobConfig {
         barriers: cfg,
         speculation: args.flag("speculation"),
@@ -510,6 +552,8 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
         replication: args.get_usize("replication", 1).unwrap_or(1),
         threads,
         max_attempts,
+        replan,
+        replan_alpha: alpha,
         ..JobConfig::default()
     };
     if let Some(spec) = args.get("dynamics") {
@@ -636,6 +680,13 @@ fn cmd_run(args: &cli::Args) -> ExitCode {
             m.sources_refreshed,
             m.push_bytes_repushed / 1e3,
             m.push_bytes_delivered == m.push_bytes
+        );
+    }
+    if m.replans > 0 || m.replans_skipped > 0 {
+        println!(
+            "replanning        {:>10} re-solves accepted ({} declined), \
+             {} splits + {} ranges migrated",
+            m.replans, m.replans_skipped, m.replan_migrated_splits, m.replan_migrated_ranges
         );
     }
     if m.coordinator_restarts > 0 {

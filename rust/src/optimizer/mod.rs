@@ -8,6 +8,7 @@
 //! | e2e single-phase shuf | makespan       | shuffle only  | [`single_phase`] |
 //! | e2e multi-phase       | makespan       | push + shuffle| [`alternating`] (LP), [`mip_opt`] (PWL-MIP), [`gradient`] (analytic / finite-diff / JAX-PJRT) |
 //! | e2e hedged            | expected makespan under failures | push + shuffle | [`hedged`] (failure-discounted alternating LP) |
+//! | mid-run replanner     | makespan on the *effective* platform | push + shuffle | [`replanner`] (short warm-started descent; see `engine::replan`) |
 //!
 //! ## Scale paths (256-node plans in seconds)
 //!
@@ -51,6 +52,7 @@ pub mod lp_build;
 pub mod mip_opt;
 pub mod myopic;
 pub mod perf;
+pub mod replanner;
 pub mod single_phase;
 pub mod uniform;
 
@@ -81,5 +83,6 @@ pub use hedged::FailureAwareOptimizer;
 pub use lp_build::Objective;
 pub use mip_opt::PwlMipOptimizer;
 pub use myopic::Myopic;
+pub use replanner::Replanner;
 pub use single_phase::{E2ePush, E2eShuffle};
 pub use uniform::Uniform;

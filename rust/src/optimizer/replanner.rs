@@ -1,0 +1,194 @@
+//! Warm-started mid-run re-optimization (the solver side of
+//! [`crate::engine::replan`]).
+//!
+//! A replan is not a fresh planning problem: the platform moved a
+//! little, the plan should move a little. So instead of the full
+//! multi-start [`super::AlternatingLp`] search (pre-screen + one-hot
+//! consolidation starts), [`Replanner`] runs a *short* alternating
+//! descent seeded from the **currently executing** shuffle split, and —
+//! crucially — carries the revised-simplex bases **across replans**:
+//! consecutive effective platforms differ in a handful of coefficients,
+//! so the second-and-later re-solves are a few warm pivots instead of a
+//! cold solve (pinned by tests/replan.rs against
+//! [`crate::solver::hot_path_counters`]). The bases round-trip through
+//! snapshots (see [`crate::engine::replan::ReplanState`]) so a resumed
+//! run re-solves from the same vertex and stays bit-identical.
+
+use super::lp_build::{build_lp_x, build_lp_y, extract_x, extract_y, Objective};
+use crate::model::barrier::BarrierConfig;
+use crate::model::makespan::{makespan, AppModel};
+use crate::model::plan::Plan;
+use crate::platform::Topology;
+use crate::solver::{solve_smart, Lp, LpOutcome};
+
+/// Short warm-started alternating descent for mid-run re-solves. The
+/// x/y bases persist across [`Replanner::replan`] calls — that is the
+/// whole point of the type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Replanner {
+    /// Maximum x/y alternations per replan (short on purpose: the seed
+    /// split is the incumbent plan, already near-optimal for a platform
+    /// one event ago).
+    pub rounds: usize,
+    /// Relative improvement below which the descent is converged.
+    pub tol: f64,
+    /// Warm-start basis for the x-step LP, carried across replans.
+    /// `None` until the first sparse solve (small instances stay on the
+    /// dense path, which neither uses nor produces bases).
+    pub x_basis: Option<Vec<usize>>,
+    /// Warm-start basis for the y-step LP, carried across replans.
+    pub y_basis: Option<Vec<usize>>,
+}
+
+impl Default for Replanner {
+    fn default() -> Self {
+        Replanner { rounds: 3, tol: 1e-6, x_basis: None, y_basis: None }
+    }
+}
+
+impl Replanner {
+    /// One warm LP solve; the basis slot is refreshed with whatever the
+    /// solver hands back (the dense path hands back `None`).
+    fn solve_step(lp: &Lp, basis: &mut Option<Vec<usize>>) -> LpOutcome {
+        let (out, next) = solve_smart(lp, basis.as_deref());
+        *basis = next;
+        out
+    }
+
+    /// Re-solve the plan for the (effective) platform `topo`, descending
+    /// from the currently executing shuffle split `y0`. Returns `None`
+    /// when no LP of the descent produces a usable solution — the caller
+    /// keeps the incumbent plan and counts a skip; a degenerate
+    /// effective platform must never tear down a running job.
+    pub fn replan(
+        &mut self,
+        topo: &Topology,
+        app: AppModel,
+        cfg: BarrierConfig,
+        y0: &[f64],
+    ) -> Option<Plan> {
+        // Guard the seed: the executing split is a probability vector by
+        // construction, but a failed-reducer discount upstream may have
+        // zeroed mass. Renormalize; fall back to uniform if empty.
+        let r = topo.n_reducers();
+        debug_assert_eq!(y0.len(), r);
+        let s: f64 = y0.iter().filter(|v| v.is_finite() && **v > 0.0).sum();
+        let mut y: Vec<f64> = if s > 0.0 {
+            y0.iter().map(|v| if v.is_finite() && *v > 0.0 { v / s } else { 0.0 }).collect()
+        } else {
+            vec![1.0 / r as f64; r]
+        };
+
+        let mut best: Option<(Plan, f64)> = None;
+        for _round in 0..self.rounds {
+            // x-step: optimal push for the current split.
+            let (lp, vars) = build_lp_x(topo, app, cfg, &y, Objective::Makespan);
+            let sol = match Self::solve_step(&lp, &mut self.x_basis).optimal() {
+                Some((sol, _)) => sol,
+                None => break,
+            };
+            let x = {
+                let mut p = Plan { x: extract_x(&sol, &vars), y: y.clone() };
+                p.renormalize();
+                p.x
+            };
+
+            // y-step: optimal shuffle split for that push.
+            let (lp, vars) = build_lp_y(topo, app, cfg, &x, Objective::Makespan);
+            let sol = match Self::solve_step(&lp, &mut self.y_basis).optimal() {
+                Some((sol, _)) => sol,
+                None => break,
+            };
+            let mut candidate = Plan { x, y: extract_y(&sol, &vars) };
+            candidate.renormalize();
+            y = candidate.y.clone();
+            let ms = makespan(topo, app, cfg, &candidate);
+            let done = match &best {
+                Some((_, b)) => ms >= b * (1.0 - self.tol),
+                None => false,
+            };
+            if best.as_ref().map_or(true, |(_, b)| ms < *b) {
+                best = Some((candidate, ms));
+            }
+            if done {
+                break;
+            }
+        }
+        best.map(|(plan, _)| plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::scale::{generate_kind, ScaleKind};
+    use crate::platform::{build_env, EnvKind};
+
+    #[test]
+    fn replan_returns_a_valid_plan_from_any_seed() {
+        let topo = build_env(EnvKind::Global8);
+        let app = AppModel::new(2.0);
+        let cfg = BarrierConfig::HADOOP;
+        for y0 in [
+            vec![1.0 / 8.0; 8],
+            {
+                let mut y = vec![0.0; 8];
+                y[3] = 1.0;
+                y
+            },
+            vec![0.0; 8], // degenerate: all mass discounted away
+        ] {
+            let mut rp = Replanner::default();
+            let plan = rp.replan(&topo, app, cfg, &y0).expect("solvable");
+            plan.check(&topo).unwrap();
+        }
+    }
+
+    #[test]
+    fn replan_improves_on_a_bad_seed() {
+        // Seed the descent with the worst one-hot split; the re-solved
+        // plan must not be worse than the plain seed plan.
+        let topo = build_env(EnvKind::Global8);
+        let app = AppModel::new(2.0);
+        let cfg = BarrierConfig::HADOOP;
+        let mut y0 = vec![0.0; 8];
+        y0[0] = 1.0;
+        let seeded = {
+            let mut p = Plan::uniform(topo.n_sources(), topo.n_mappers(), 8);
+            p.y = y0.clone();
+            p.renormalize();
+            p
+        };
+        let seed_ms = makespan(&topo, app, cfg, &seeded);
+        let mut rp = Replanner::default();
+        let plan = rp.replan(&topo, app, cfg, &y0).expect("solvable");
+        let ms = makespan(&topo, app, cfg, &plan);
+        assert!(ms <= seed_ms + 1e-6, "replan {ms} vs seed {seed_ms}");
+    }
+
+    #[test]
+    fn replan_is_deterministic_and_populates_bases_at_scale() {
+        // 64-node hier-wan LPs are above DENSE_ROW_CUTOVER: the sparse
+        // path runs and hands back bases for the next replan.
+        let topo = generate_kind(ScaleKind::HierarchicalWan, 64, 7);
+        let app = AppModel::new(1.0);
+        let cfg = BarrierConfig::HADOOP;
+        let y0 = vec![1.0 / topo.n_reducers() as f64; topo.n_reducers()];
+        let mut a = Replanner::default();
+        let mut b = Replanner::default();
+        let pa = a.replan(&topo, app, cfg, &y0).expect("solvable");
+        let pb = b.replan(&topo, app, cfg, &y0).expect("solvable");
+        assert_eq!(pa, pb);
+        assert_eq!(a, b, "bases must evolve deterministically");
+        assert!(a.x_basis.is_some() && a.y_basis.is_some(), "sparse path must run at 64 nodes");
+        // Second replan on a perturbed platform reuses them.
+        let mut t2 = topo.clone();
+        for j in 0..t2.n_mappers() {
+            for k in 0..t2.n_reducers() {
+                t2.b_mr.set(j, k, t2.b_mr.get(j, k) * 0.9);
+            }
+        }
+        let p2 = a.replan(&t2, app, cfg, &pa.y).expect("solvable");
+        p2.check(&t2).unwrap();
+    }
+}

@@ -18,19 +18,27 @@
 use mrperf::apps::SyntheticApp;
 use mrperf::engine::dynamics::{DynEvent, DynProfile, ScenarioTrace, TimedEvent, TraceShape};
 use mrperf::engine::executor::JobOutcome;
-use mrperf::engine::job::JobConfig;
-use mrperf::engine::{run_job, run_job_with_recovery, DlqKind, JobMetrics, RecoveryOpts};
+use mrperf::engine::job::{batch_size, JobConfig};
+use mrperf::engine::{
+    run_job, run_job_with_recovery, DlqKind, JobMetrics, RecoveryOpts, ReplanPolicy,
+};
 use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::barrier::BarrierConfig;
+use mrperf::model::makespan::AppModel;
 use mrperf::model::plan::Plan;
+use mrperf::optimizer::{AlternatingLp, PlanOptimizer};
 use mrperf::platform::scale::{generate_kind, ScaleKind};
 
 /// Bit-exact signature of every metric field (floats by bit pattern).
-/// `coordinator_restarts` is deliberately excluded: it is provenance of
-/// how many crashes a run survived, and the checkpoint/resume invariant
-/// is exactly that everything else matches bit for bit.
+/// `coordinator_restarts` and `replans_skipped` are deliberately
+/// excluded: both are provenance (crashes survived, re-solve
+/// evaluations declined — a resume re-evaluates one boundary), and the
+/// checkpoint/resume invariant is exactly that everything else matches
+/// bit for bit. Accepted replans and the migration counters ARE part of
+/// the identity: a resumed replanning run must replay them exactly.
 fn sig(m: &JobMetrics) -> String {
     format!(
-        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
         m.makespan.to_bits(),
         m.push_end.to_bits(),
         m.map_end.to_bits(),
@@ -58,7 +66,10 @@ fn sig(m: &JobMetrics) -> String {
         m.ranges_dead_lettered,
         m.input_records,
         m.intermediate_records,
-        m.output_records
+        m.output_records,
+        m.replans,
+        m.replan_migrated_splits,
+        m.replan_migrated_ranges
     )
 }
 
@@ -305,4 +316,137 @@ fn zero_retry_budget_is_rejected() {
     let inputs = synthetic_inputs(topo.n_sources(), 1 << 10, 1);
     let cfg = JobConfig { max_attempts: 0, ..JobConfig::default() };
     let _ = run_job(&topo, &plan, &SyntheticApp::new(1.0), &cfg, &inputs);
+}
+
+/// Replanning composes with checkpoint/resume (the ISSUE 10
+/// composition invariant): a coordinator crash *between two accepted
+/// replan events* resumes bit-identical — same accepted re-solves, same
+/// migrations, same outputs — because the warm-start bases, the
+/// baseline platform fingerprint and the current shuffle split all
+/// round-trip through the snapshot.
+#[test]
+fn crash_between_two_replan_events_resumes_bit_identical() {
+    let gen = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let inputs = synthetic_inputs(gen.n_sources(), 1 << 13, 0xD11A);
+    let app = SyntheticApp::new(1.0);
+    // Price the model on the simulated volume (the fig4 idiom) so the
+    // initial plan is near-optimal: replanning then cannot outrun the
+    // static horizon and both trace events land mid-run.
+    let mean =
+        inputs.iter().map(|v| batch_size(v) as f64).sum::<f64>() / gen.n_sources() as f64;
+    let topo = gen.with_uniform_data(mean);
+    let plan = AlternatingLp::default().optimize(&topo, AppModel::new(1.0), BarrierConfig::HADOOP);
+    let h = run_job(&topo, &plan, &app, &JobConfig::optimized(), &inputs).metrics.makespan;
+
+    // A 10x WAN cut on the busiest reducer's cluster, then a full
+    // restore (`ClusterLinkScale` factors are absolute, so 1.0
+    // restores): each swings the effective-platform fingerprint far
+    // past the hysteresis band, so an on-event replanner re-solves at
+    // both boundaries.
+    let best = (0..topo.n_reducers()).max_by(|&a, &b| plan.y[a].total_cmp(&plan.y[b])).unwrap();
+    let cluster = topo.reducer_cluster[best];
+    let trace = ScenarioTrace::from_events(
+        "cut-then-restore",
+        vec![
+            TimedEvent {
+                time: h * 0.2,
+                event: DynEvent::ClusterLinkScale { cluster, factor: 0.1 },
+            },
+            TimedEvent {
+                time: h * 0.55,
+                event: DynEvent::ClusterLinkScale { cluster, factor: 1.0 },
+            },
+        ],
+    );
+    let cfg = JobConfig::optimized()
+        .with_dynamics(trace)
+        .with_replan(ReplanPolicy::OnEvent, 1.0);
+    let reference = run_job(&topo, &plan, &app, &cfg, &inputs);
+    assert_eq!(
+        reference.metrics.replans, 2,
+        "both trace boundaries must accept a re-solve: {:?}",
+        reference.metrics
+    );
+
+    // Crash strictly between the two replan events; the resumed run
+    // must replay the second re-solve from the snapshot's warm bases.
+    let opts = RecoveryOpts {
+        checkpoint_every: Some(h * 0.08),
+        crash_at: Some(h * 0.35),
+        ..RecoveryOpts::default()
+    };
+    let resumed = run_job_with_recovery(&topo, &plan, &app, &cfg, &inputs, &opts).unwrap();
+    assert_eq!(
+        sig(&reference.metrics),
+        sig(&resumed.metrics),
+        "resumed replanning run diverged from the uninterrupted one"
+    );
+    assert_eq!(resumed.metrics.replans, 2);
+    assert_eq!(resumed.metrics.coordinator_restarts, 1);
+    assert_eq!(reference.outputs, resumed.outputs, "outputs diverged across the crash");
+}
+
+/// A snapshot records the replan policy in its compat header: resuming
+/// under any *different* policy is refused loudly (the resumed run
+/// would otherwise silently re-solve on a different cadence), while the
+/// same policy resumes bit-identically — the resume-time boundary
+/// re-evaluation lands only in the sig-excluded `replans_skipped`
+/// provenance counter.
+#[test]
+fn snapshot_refuses_resume_under_a_different_replan_policy() {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xD11A);
+    let app = SyntheticApp::new(1.0);
+    let cfg_on = JobConfig::optimized().with_replan(ReplanPolicy::OnEvent, 1.0);
+    let base = run_job(&topo, &plan, &app, &cfg_on, &inputs);
+
+    let dir = std::env::temp_dir().join("mrperf-replan-compat-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt.json");
+    let opts = RecoveryOpts {
+        checkpoint_every: Some(base.metrics.makespan * 0.4),
+        checkpoint_path: Some(path.to_string_lossy().into_owned()),
+        ..RecoveryOpts::default()
+    };
+    run_job_with_recovery(&topo, &plan, &app, &cfg_on, &inputs, &opts).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    for other in [
+        JobConfig::optimized(),
+        JobConfig::optimized().with_replan(ReplanPolicy::Every(2.0), 1.0),
+    ] {
+        let err = run_job_with_recovery(
+            &topo,
+            &plan,
+            &app,
+            &other,
+            &inputs,
+            &RecoveryOpts { resume_from: Some(text.clone()), ..RecoveryOpts::default() },
+        )
+        .unwrap_err();
+        assert!(
+            err.contains("incompatible") && err.contains("replan"),
+            "wrong rejection message: {err}"
+        );
+    }
+
+    // The matching policy resumes and finishes bit-identically; the
+    // resume re-evaluates one boundary, which must decline (nothing
+    // about the platform changed).
+    let resumed = run_job_with_recovery(
+        &topo,
+        &plan,
+        &app,
+        &cfg_on,
+        &inputs,
+        &RecoveryOpts { resume_from: Some(text), ..RecoveryOpts::default() },
+    )
+    .unwrap();
+    assert_eq!(sig(&base.metrics), sig(&resumed.metrics));
+    assert!(
+        resumed.metrics.replans_skipped >= 1,
+        "the resume must have re-evaluated (and declined) the boundary"
+    );
 }

@@ -1,0 +1,353 @@
+//! Online re-optimization properties (ISSUE 10) — the replan test tier
+//! pinning the `engine::replan` invariants:
+//!
+//! * **neutrality** — `--replan off` (and the absent flag) is
+//!   bit-identical to the static engine across every dynamics profile
+//!   and both pre-existing scheduler families, and a zero-event trace
+//!   with replanning *on* never re-solves;
+//! * **replanning pays** — under a targeted mid-push WAN cut 10× on the
+//!   planned-best reducer cluster, the on-event replanner strictly
+//!   beats the static plan-local run, with the exact push/shuffle
+//!   byte-conservation ledgers intact post-migration;
+//! * **determinism** — same seeds → bit-identical metrics, for
+//!   `on-event` and `every:T` alike, and invariant under the fluid
+//!   thread count;
+//! * **warm starts pay** — a second replan re-solve spends strictly
+//!   fewer simplex iterations than a cold solve of the same LP
+//!   sequence, and the replanned x-LP agrees with the dense-tableau
+//!   oracle to ≤ 1e-7.
+//!
+//! The checkpoint/resume composition tests live in tests/recovery.rs.
+
+use std::sync::Mutex;
+
+use mrperf::apps::SyntheticApp;
+use mrperf::engine::dynamics::{DynEvent, DynProfile, ScenarioTrace, TimedEvent, TraceShape};
+use mrperf::engine::job::{batch_size, JobConfig};
+use mrperf::engine::{run_job, JobMetrics, ReplanPolicy};
+use mrperf::experiments::common::synthetic_inputs;
+use mrperf::model::barrier::BarrierConfig;
+use mrperf::model::makespan::AppModel;
+use mrperf::model::plan::Plan;
+use mrperf::optimizer::lp_build::{build_lp_x, Objective};
+use mrperf::optimizer::{AlternatingLp, PlanOptimizer, Replanner};
+use mrperf::platform::scale::{generate_kind, ScaleKind};
+use mrperf::platform::Topology;
+use mrperf::util::qcheck::{ensure, qcheck, Config};
+
+/// Serializes the tests that read the process-wide solver hot-path
+/// counters (`solver::hot_path_counters`), so a concurrently running
+/// sparse solve elsewhere in this binary cannot pollute the deltas.
+/// Poison-tolerant: a panicked holder must not cascade.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Bit-exact signature of every metric field (floats by bit pattern).
+/// `coordinator_restarts` and `replans_skipped` are deliberately
+/// excluded: both are provenance (crashes survived, re-solve
+/// evaluations declined — a resume re-evaluates one boundary), and the
+/// checkpoint/resume invariant is exactly that everything else matches
+/// bit for bit. Accepted replans and the migration counters ARE part of
+/// the identity: a resumed replanning run must replay them exactly.
+fn sig(m: &JobMetrics) -> String {
+    format!(
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        m.makespan.to_bits(),
+        m.push_end.to_bits(),
+        m.map_end.to_bits(),
+        m.shuffle_end.to_bits(),
+        m.push_bytes.to_bits(),
+        m.shuffle_bytes.to_bits(),
+        m.output_bytes.to_bits(),
+        m.reduce_bytes_replayed.to_bits(),
+        m.shuffle_bytes_delivered.to_bits(),
+        m.push_bytes_repushed.to_bits(),
+        m.push_bytes_delivered.to_bits(),
+        m.dlq_bytes.to_bits(),
+        m.n_map_tasks,
+        m.n_reduce_tasks,
+        m.spec_launched,
+        m.spec_won,
+        m.stolen,
+        m.dyn_events,
+        m.failures_injected,
+        m.tasks_requeued,
+        m.reducers_failed,
+        m.reduce_ranges_reassigned,
+        m.sources_refreshed,
+        m.splits_dead_lettered,
+        m.ranges_dead_lettered,
+        m.input_records,
+        m.intermediate_records,
+        m.output_records,
+        m.replans,
+        m.replan_migrated_splits,
+        m.replan_migrated_ranges
+    )
+}
+
+/// No re-solve ever happened and no work was re-homed by one.
+fn assert_no_replan_activity(m: &JobMetrics, what: &str) {
+    assert_eq!(
+        (m.replans, m.replans_skipped, m.replan_migrated_splits, m.replan_migrated_ranges),
+        (0, 0, 0, 0),
+        "{what}: replan machinery touched a run it must not touch"
+    );
+}
+
+/// The exact byte-conservation ledgers (integer byte counts in f64, so
+/// the sums are exact and equality is exact).
+fn assert_conservation(m: &JobMetrics, what: &str) {
+    assert_eq!(
+        m.push_bytes_delivered.to_bits(),
+        m.push_bytes.to_bits(),
+        "{what}: push ledger broken (delivered {} != pushed {})",
+        m.push_bytes_delivered,
+        m.push_bytes
+    );
+    assert_eq!(
+        (m.shuffle_bytes_delivered + m.dlq_bytes).to_bits(),
+        m.shuffle_bytes.to_bits(),
+        "{what}: shuffle ledger broken (delivered {} + dlq {} != shuffled {})",
+        m.shuffle_bytes_delivered,
+        m.dlq_bytes,
+        m.shuffle_bytes
+    );
+    assert_eq!(m.output_records, m.input_records, "{what}: records lost");
+}
+
+fn small_platform() -> (Topology, Plan, Vec<Vec<mrperf::engine::Record>>) {
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let plan = Plan::local_push(&topo);
+    let inputs = synthetic_inputs(topo.n_sources(), 1 << 13, 0xD11A);
+    (topo, plan, inputs)
+}
+
+/// (a) Neutrality: `ReplanPolicy::Off` — the default and the absent CLI
+/// flag — is bit-identical to the pre-replan engine under EVERY
+/// dynamics profile, for both the plan-local and the dynamic scheduler
+/// family.
+#[test]
+fn replan_off_is_bit_identical_for_every_profile_and_family() {
+    let (topo, plan, inputs) = small_platform();
+    let app = SyntheticApp::new(1.0);
+    let stat = run_job(&topo, &plan, &app, &JobConfig::default(), &inputs).metrics;
+    for profile in DynProfile::all() {
+        let trace =
+            ScenarioTrace::generate(profile, 7, &TraceShape::of(&topo, stat.makespan));
+        for base in [JobConfig::optimized(), JobConfig::dynamic_locality()] {
+            let plain = base.clone().with_dynamics(trace.clone());
+            let explicit_off =
+                base.clone().with_dynamics(trace.clone()).with_replan(ReplanPolicy::Off, 1.0);
+            let a = run_job(&topo, &plan, &app, &plain, &inputs).metrics;
+            let b = run_job(&topo, &plan, &app, &explicit_off, &inputs).metrics;
+            assert_eq!(sig(&a), sig(&b), "{profile:?}: --replan off diverged");
+            assert_no_replan_activity(&a, "flag-absent");
+            assert_no_replan_activity(&b, "explicit off");
+        }
+    }
+}
+
+/// (b) A zero-event trace with replanning ON never re-solves. Under
+/// `on-event` no boundary ever fires, so the run is bit-identical to
+/// the static engine; under `every:T` the cadence boundaries do fire,
+/// but the unchanged platform is inside the hysteresis band — every
+/// evaluation declines (the extra fluid-advance split points can move
+/// float results by ulps, so the cadence run asserts counters and a
+/// tight relative makespan bound rather than bit identity).
+#[test]
+fn zero_event_trace_with_replanning_on_never_resolves() {
+    let (topo, plan, inputs) = small_platform();
+    let app = SyntheticApp::new(1.0);
+    let stat = run_job(&topo, &plan, &app, &JobConfig::optimized(), &inputs).metrics;
+
+    let on_event = JobConfig::optimized()
+        .with_dynamics(ScenarioTrace::empty("none"))
+        .with_replan(ReplanPolicy::OnEvent, 1.0);
+    let m = run_job(&topo, &plan, &app, &on_event, &inputs).metrics;
+    assert_eq!(sig(&stat), sig(&m), "on-event with no events must be the static engine");
+    assert_no_replan_activity(&m, "on-event, zero-event trace");
+
+    let every = JobConfig::optimized()
+        .with_dynamics(ScenarioTrace::empty("none"))
+        .with_replan(ReplanPolicy::Every(stat.makespan / 7.0), 1.0);
+    let m = run_job(&topo, &plan, &app, &every, &inputs).metrics;
+    assert_eq!(m.replans, 0, "an unchanged platform must never be re-solved");
+    assert_eq!((m.replan_migrated_splits, m.replan_migrated_ranges), (0, 0));
+    assert!(m.replans_skipped > 0, "the cadence must actually have evaluated");
+    assert!(
+        (m.makespan - stat.makespan).abs() <= 1e-9 * stat.makespan,
+        "cadence ticks perturbed the makespan: {} vs {}",
+        m.makespan,
+        stat.makespan
+    );
+    assert_conservation(&m, "every:T, zero-event trace");
+}
+
+/// (c) The deterministic pin where replanning PAYS: a shuffle-dominant
+/// job (α = 4), planned end-to-end, then hit mid-push by a 10× WAN cut
+/// targeted at exactly the cluster the plan sends the most shuffle mass
+/// to. Under G-P-L barriers nothing has shuffled yet, so the accepted
+/// re-solve migrates key ranges off the cut cluster and the replanning
+/// run strictly beats the static plan-local run — with every byte
+/// ledger exact after the migration.
+#[test]
+fn targeted_wan_cut_replan_strictly_beats_static() {
+    let alpha = 4.0;
+    let gen = generate_kind(ScaleKind::HierarchicalWan, 16, 3);
+    let inputs = synthetic_inputs(gen.n_sources(), 1 << 13, 0xD11A);
+    // Price the model on the simulated volume (the fig4 idiom) so the
+    // optimizer's plan is meaningful for the engine run.
+    let mean =
+        inputs.iter().map(|v| batch_size(v) as f64).sum::<f64>() / gen.n_sources() as f64;
+    let topo = gen.with_uniform_data(mean);
+    let am = AppModel::new(alpha);
+    let bc = BarrierConfig::HADOOP;
+    let plan = AlternatingLp::default().optimize(&topo, am, bc);
+    let app = SyntheticApp::new(alpha);
+
+    let static_cfg = JobConfig::optimized();
+    let quiet = run_job(&topo, &plan, &app, &static_cfg, &inputs).metrics;
+    assert!(quiet.push_end > 0.0);
+
+    // The cluster receiving the largest planned shuffle mass.
+    let best = (0..topo.n_reducers())
+        .max_by(|&a, &b| plan.y[a].total_cmp(&plan.y[b]))
+        .unwrap();
+    let cluster = topo.reducer_cluster[best];
+    let trace = ScenarioTrace::from_events(
+        "targeted-cut",
+        vec![TimedEvent {
+            time: quiet.push_end * 0.5,
+            event: DynEvent::ClusterLinkScale { cluster, factor: 0.1 },
+        }],
+    );
+
+    let static_m =
+        run_job(&topo, &plan, &app, &static_cfg.clone().with_dynamics(trace.clone()), &inputs)
+            .metrics;
+    let replan_cfg = static_cfg
+        .clone()
+        .with_dynamics(trace)
+        .with_replan(ReplanPolicy::OnEvent, alpha);
+    let replan_m = run_job(&topo, &plan, &app, &replan_cfg, &inputs).metrics;
+
+    assert!(replan_m.replans >= 1, "the cut must trigger a re-solve: {replan_m:?}");
+    assert!(
+        replan_m.replan_migrated_ranges > 0,
+        "the re-solve must move shuffle mass off the cut cluster: {replan_m:?}"
+    );
+    assert!(
+        replan_m.makespan < static_m.makespan,
+        "replanning must strictly beat the static plan under the targeted cut: \
+         replan {} vs static {}",
+        replan_m.makespan,
+        static_m.makespan
+    );
+    assert_conservation(&static_m, "static under cut");
+    assert_conservation(&replan_m, "replanning under cut");
+}
+
+/// (d) Determinism: same `(platform seed, trace seed)` → bit-identical
+/// metrics for both replan policies, and invariant under the fluid
+/// solver's thread count (`--threads 1` vs `--threads 4`).
+#[test]
+fn replanning_is_deterministic_and_thread_invariant() {
+    let (topo, plan, inputs) = small_platform();
+    let app = SyntheticApp::new(1.0);
+    let stat = run_job(&topo, &plan, &app, &JobConfig::optimized(), &inputs).metrics;
+    qcheck(Config::default().cases(6), "replan determinism", |rng| {
+        let trace_seed = rng.next_u64();
+        let trace = ScenarioTrace::generate(
+            DynProfile::Failures,
+            trace_seed,
+            &TraceShape::of(&topo, stat.makespan),
+        );
+        for policy in [ReplanPolicy::OnEvent, ReplanPolicy::Every(stat.makespan / 5.0)] {
+            let mk = |threads: usize| {
+                let cfg = JobConfig { threads, ..JobConfig::optimized() }
+                    .with_dynamics(trace.clone())
+                    .with_replan(policy, 1.0);
+                run_job(&topo, &plan, &app, &cfg, &inputs).metrics
+            };
+            let (a, b, c) = (mk(1), mk(1), mk(4));
+            ensure(
+                sig(&a) == sig(&b),
+                format!("seed {trace_seed:#x} {policy:?}: replanning run is nondeterministic"),
+            )?;
+            ensure(
+                sig(&a) == sig(&c),
+                format!("seed {trace_seed:#x} {policy:?}: thread count changed the results"),
+            )?;
+            ensure(
+                a.replans_skipped == b.replans_skipped && a.replans_skipped == c.replans_skipped,
+                format!("seed {trace_seed:#x} {policy:?}: skip provenance diverged"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// (e) Warm starts pay: on the sparse-solver-sized platform (64 nodes —
+/// the x-LP is above `DENSE_ROW_CUTOVER`), a second replan against a
+/// perturbed platform spends strictly fewer simplex iterations than a
+/// cold replanner solving exactly the same LP sequence, because the
+/// previous optimal basis is nearly feasible for the perturbed LP. The
+/// replanned x-LP also agrees with the dense-tableau oracle to ≤ 1e-7.
+#[test]
+fn warm_started_replans_solve_fewer_iterations_than_cold() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let topo = generate_kind(ScaleKind::HierarchicalWan, 64, 7);
+    let am = AppModel::new(1.0);
+    let bc = BarrierConfig::HADOOP;
+    let r = topo.n_reducers();
+    let y0 = vec![1.0 / r as f64; r];
+
+    // First (cold) descent populates the warm-start bases.
+    let mut warm = Replanner::default();
+    let p1 = warm.replan(&topo, am, bc, &y0).expect("64-node replan must solve");
+    assert!(
+        warm.x_basis.is_some(),
+        "the 64-node x-LP must take the sparse revised path and return a basis"
+    );
+
+    // An asymmetrically perturbed platform (one half of the WAN shuffle
+    // links 10% slower) — the kind of effective topology a mid-run
+    // event produces.
+    let mut topo2 = topo.clone();
+    for j in 0..topo2.n_mappers() {
+        for k in 0..r / 2 {
+            topo2.b_mr.set(j, k, topo2.b_mr.get(j, k) * 0.9);
+        }
+    }
+
+    mrperf::solver::reset_hot_path_counters();
+    let p2 = warm.replan(&topo2, am, bc, &p1.y).expect("perturbed replan must solve");
+    let (warm_iters, _) = mrperf::solver::hot_path_counters();
+
+    mrperf::solver::reset_hot_path_counters();
+    let mut cold = Replanner::default();
+    let p3 = cold.replan(&topo2, am, bc, &p1.y).expect("cold replan must solve");
+    let (cold_iters, _) = mrperf::solver::hot_path_counters();
+
+    assert!(warm_iters > 0 && cold_iters > 0, "{warm_iters} / {cold_iters}");
+    assert!(
+        warm_iters < cold_iters,
+        "warm-started re-solve must spend strictly fewer simplex iterations: \
+         warm {warm_iters} vs cold {cold_iters}"
+    );
+    p2.check(&topo2).expect("warm plan valid");
+    p3.check(&topo2).expect("cold plan valid");
+
+    // Oracle: the replanned x-LP solved sparse agrees with the dense
+    // tableau on the objective to ≤ 1e-7 (relative).
+    let (lp, _) = build_lp_x(&topo2, am, bc, &p2.y, Objective::Makespan);
+    let (_, dense_obj) =
+        mrperf::solver::simplex::solve(&lp).optimal().expect("dense oracle solves");
+    let (_, sparse_obj) =
+        mrperf::solver::revised::solve(&lp).optimal().expect("sparse path solves");
+    let denom = dense_obj.abs().max(1.0);
+    assert!(
+        (dense_obj - sparse_obj).abs() <= 1e-7 * denom,
+        "revised-vs-dense oracle drift: {sparse_obj} vs {dense_obj}"
+    );
+}

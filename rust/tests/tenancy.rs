@@ -26,12 +26,15 @@ use mrperf::platform::Topology;
 use mrperf::util::qcheck::{ensure, qcheck, Config};
 
 /// Bit-exact signature of every metric field (floats by bit pattern).
-/// `coordinator_restarts` is deliberately excluded: it is provenance of
-/// how many crashes a run survived, and the checkpoint/resume invariant
-/// is exactly that everything else matches bit for bit.
+/// `coordinator_restarts` and `replans_skipped` are deliberately
+/// excluded: both are provenance (crashes survived, re-solve
+/// evaluations declined — a resume re-evaluates one boundary), and the
+/// checkpoint/resume invariant is exactly that everything else matches
+/// bit for bit. Accepted replans and the migration counters ARE part of
+/// the identity: a resumed replanning run must replay them exactly.
 fn sig(m: &JobMetrics) -> String {
     format!(
-        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
+        "{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{:x}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}/{}",
         m.makespan.to_bits(),
         m.push_end.to_bits(),
         m.map_end.to_bits(),
@@ -59,7 +62,10 @@ fn sig(m: &JobMetrics) -> String {
         m.ranges_dead_lettered,
         m.input_records,
         m.intermediate_records,
-        m.output_records
+        m.output_records,
+        m.replans,
+        m.replan_migrated_splits,
+        m.replan_migrated_ranges
     )
 }
 

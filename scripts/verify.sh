@@ -64,6 +64,13 @@ if [[ "$QUICK" == "0" ]]; then
     --checkpoint-path "$CKPT" >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer uniform --resume-from "$CKPT" >/dev/null
   "$BIN" run --gen hier-wan:16 --optimizer uniform --max-attempts 1 --dynamics failures:3 >/dev/null
+  # Online re-optimization: event-driven and cadence policies, plus a
+  # replanning run that crashes and resumes through a checkpoint.
+  "$BIN" run --gen hier-wan:16 --optimizer e2e-multi --replan on-event --dynamics failures:3 >/dev/null
+  "$BIN" run --gen hier-wan:16 --optimizer e2e-multi --replan every:5 --dynamics burst:3 >/dev/null
+  "$BIN" run --gen hier-wan:16 --optimizer e2e-multi --replan on-event --dynamics failures:3 \
+    --checkpoint-every 2 --crash-at 5 >/dev/null
+  "$BIN" experiment replan --gen hier-wan:16 >/dev/null
   "$BIN" experiment resilience --gen hier-wan:16 >/dev/null
   "$BIN" experiment churn --gen hier-wan:16 --dynamics burst:7 >/dev/null
   "$BIN" experiment churn --profiles all --gen hier-wan:16 --dynamics failures:7 --hedge 0.05 >/dev/null
@@ -143,6 +150,18 @@ if [[ "$QUICK" == "0" ]]; then
   fi
   if "$BIN" run --gen hier-wan:16 --crash-at 5 >/dev/null 2>&1; then
     echo "FAIL: --crash-at without --checkpoint-every should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" run --gen hier-wan:16 --replan bogus >/dev/null 2>&1; then
+    echo "FAIL: --replan bogus should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" run --gen hier-wan:16 --replan every:0 >/dev/null 2>&1; then
+    echo "FAIL: --replan every:0 should be rejected" >&2
+    exit 1
+  fi
+  if "$BIN" run --gen hier-wan:16 --replan on-event --stealing >/dev/null 2>&1; then
+    echo "FAIL: --replan with --stealing should be rejected" >&2
     exit 1
   fi
   # Snapshot reader rejections: malformed JSON, and a version from the
